@@ -1,0 +1,131 @@
+//! Fig. 1 / Fig. 6 / Fig. 11 reproduction driver: convergence of
+//! Dense-SGD vs TopK-SGD vs RandK-SGD vs GaussianK-SGD at P = 16 workers,
+//! and the k-sensitivity sweep.
+//!
+//! Usage:
+//!   cargo run --release --example convergence_compare -- \
+//!       [--ops dense,topk,randk,gaussiank] [--steps 400] [--workers 16] \
+//!       [--k-ratio 0.001] [--k-sweep] [--model mlp|fnn3|lm_small] \
+//!       [--backend native|pjrt] [--out results/fig1.json]
+//!
+//! Defaults reproduce the Fig. 1 protocol at miniature scale: 16 workers,
+//! k = 0.001·d, loss + accuracy series per operator.
+
+use sparkv::compress::OpKind;
+use sparkv::config::TrainConfig;
+use sparkv::coordinator::train;
+use sparkv::data::{DataSource, GaussianMixture, LmDataSource, SyntheticDigits};
+use sparkv::models::{Model, NativeMlp};
+use sparkv::runtime::PjrtModel;
+use sparkv::util::cli::Args;
+use sparkv::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(false);
+    args.exit_on_help("Fig. 1/6/11 convergence comparison");
+    let ops = args.get_list("ops", &["dense", "topk", "randk", "gaussiank"]);
+    let steps: usize = args.get_parsed_or("steps", 400);
+    let workers: usize = args.get_parsed_or("workers", 16);
+    let base_k: f64 = args.get_parsed_or("k-ratio", 0.001);
+    let model_name = args.get_or("model", "fnn3");
+    let backend = args.get_or("backend", "native");
+    let k_sweep = args.flag("k-sweep");
+
+    let k_ratios: Vec<f64> = if k_sweep {
+        vec![0.001, 0.005, 0.01] // Fig. 11's three settings
+    } else {
+        vec![base_k]
+    };
+
+    let mut results = Vec::new();
+    for &k_ratio in &k_ratios {
+        for op_name in &ops {
+            let op = OpKind::parse(op_name)?;
+            let cfg = TrainConfig {
+                workers,
+                op,
+                k_ratio,
+                batch_size: 32,
+                steps,
+                lr: args.get_parsed_or("lr", 0.1),
+                momentum: 0.9,
+                lr_final_frac: 0.1,
+                seed: args.get_parsed_or("seed", 42),
+                eval_every: (steps / 10).max(1),
+                hist_every: 0,
+                momentum_correction: false,
+                global_topk: false,
+            };
+            let out = run_one(&cfg, &model_name, &backend)?;
+            let acc = out
+                .metrics
+                .evals
+                .last()
+                .map(|e| e.accuracy)
+                .unwrap_or(f64::NAN);
+            println!(
+                "k={k_ratio:<6} {:<10} final-loss {:>8.4}  best-acc {:>6.3}  final-acc {:>6.3}",
+                op.name(),
+                out.metrics.final_loss().unwrap_or(f64::NAN),
+                out.metrics.best_accuracy().unwrap_or(f64::NAN),
+                acc
+            );
+            let mut j = out.metrics.to_json();
+            j.set("op", Json::from(op.name()))
+                .set("k_ratio", Json::from(k_ratio))
+                .set("workers", Json::from(workers));
+            results.push(j);
+        }
+        println!();
+    }
+
+    let out_path = args.get_or("out", "results/convergence_compare.json");
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out_path, Json::Arr(results).to_string())?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn run_one(
+    cfg: &TrainConfig,
+    model_name: &str,
+    backend: &str,
+) -> anyhow::Result<sparkv::coordinator::TrainOutput> {
+    match (backend, model_name) {
+        ("pjrt", name) => {
+            let mut model = PjrtModel::load("artifacts", name)?;
+            let mut cfg = cfg.clone();
+            cfg.batch_size = model.entry.batch;
+            if model.is_lm() {
+                let data = LmDataSource::builtin(model.entry.features);
+                anyhow::ensure!(data.classes() == model.entry.classes);
+                train(cfg, &mut model, &data)
+            } else {
+                let data = GaussianMixture::new(
+                    model.entry.features,
+                    model.entry.classes,
+                    2.0,
+                    1.0,
+                    cfg.seed,
+                );
+                train(cfg, &mut model, &data)
+            }
+        }
+        (_, "fnn3") => {
+            // The paper's FNN-3 protocol: 3 hidden FC layers on digit
+            // images (MNIST stand-in: 16×16 synthetic digits).
+            let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);
+            let mut model = NativeMlp::fnn3(256, 10);
+            eprintln!("fnn3: d = {}", model.layout().total());
+            train(cfg.clone(), &mut model, &data)
+        }
+        (_, "mlp") => {
+            let data = GaussianMixture::new(32, 10, 1.8, 1.0, cfg.seed);
+            let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+            train(cfg.clone(), &mut model, &data)
+        }
+        (b, m) => anyhow::bail!("unknown backend/model combo: {b}/{m}"),
+    }
+}

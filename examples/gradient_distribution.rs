@@ -1,0 +1,91 @@
+//! Fig. 2 / 7 / 8 / 9 reproduction driver: histograms (and CDFs) of the
+//! error-compensated gradient u_t = g_t + ε_t during training, captured on
+//! worker 0 every `--hist-every` steps.
+//!
+//! Usage:
+//!   cargo run --release --example gradient_distribution -- \
+//!       [--op topk|dense|gaussiank] [--steps 1600] [--hist-every 200] \
+//!       [--cdf] [--ascii] [--out results/fig2_topk.json]
+//!
+//! Defaults match the paper's protocol: TopK-SGD, snapshots every 200
+//! iterations from 200 to 1600. `--op dense` gives Fig. 8, `--op
+//! gaussiank` gives Fig. 9, `--cdf` adds Fig. 7's cumulative series.
+
+use sparkv::compress::OpKind;
+use sparkv::config::TrainConfig;
+use sparkv::coordinator::Trainer;
+use sparkv::data::SyntheticDigits;
+use sparkv::models::NativeMlp;
+use sparkv::stats::histogram::is_bell_shaped;
+use sparkv::util::cli::Args;
+use sparkv::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(false);
+    args.exit_on_help("Fig. 2/7/8/9 gradient distribution study");
+    let op = OpKind::parse(&args.get_or("op", "topk"))?;
+    let steps: usize = args.get_parsed_or("steps", 1600);
+    let hist_every: usize = args.get_parsed_or("hist-every", 200);
+
+    let cfg = TrainConfig {
+        workers: args.get_parsed_or("workers", 4),
+        op,
+        k_ratio: args.get_parsed_or("k-ratio", 0.001),
+        batch_size: 32,
+        steps: steps + 1,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: args.get_parsed_or("seed", 42),
+        eval_every: 0,
+        hist_every,
+        momentum_correction: false,
+        global_topk: false,
+    };
+
+    let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);
+    let mut model = NativeMlp::fnn3(256, 10);
+    let mut trainer = Trainer::new(cfg, &mut model, &data);
+    trainer.hist_bins = args.get_parsed_or("bins", 64);
+    let out = trainer.run()?;
+
+    println!(
+        "captured {} snapshots of u_t (worker 0), op = {}\n",
+        out.snapshots.len(),
+        op.name()
+    );
+    let mut series = Vec::new();
+    for s in &out.snapshots {
+        let h = &s.histogram;
+        let bell = is_bell_shaped(h, 0.2);
+        let mass1 = h.mass_within((h.hi - h.lo) / 20.0); // central 10% band
+        println!(
+            "step {:>5}: range ±{:.4}, {:>5.1}% of mass in central 10% band, bell-shaped: {}",
+            s.step,
+            h.hi,
+            100.0 * mass1,
+            bell
+        );
+        if args.flag("ascii") {
+            println!("{}", h.ascii(40));
+        }
+        let mut j = h.to_json();
+        j.set("step", Json::from(s.step)).set("bell", Json::from(bell));
+        if args.flag("cdf") {
+            j.set(
+                "cdf",
+                Json::Arr(h.cdf().into_iter().map(Json::from).collect()),
+            );
+        }
+        series.push(j);
+    }
+
+    let default_out = format!("results/grad_dist_{}.json", op.name());
+    let out_path = args.get_or("out", &default_out);
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out_path, Json::Arr(series).to_string())?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}

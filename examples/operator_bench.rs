@@ -1,0 +1,72 @@
+//! Fig. 4 reproduction driver: wall-clock selection time of Top_k vs
+//! DGC_k vs Gaussian_k (plus Rand_k/Trimmed_k) over a dimension sweep at
+//! k = 0.001·d — the paper's V100 study replayed on this CPU. Absolute
+//! numbers differ from the paper's GPU; the *shape* (exact selection slow
+//! and superlinear, Gaussian_k cheap and linear, DGC in between) is the
+//! reproduction target.
+//!
+//! Usage:
+//!   cargo run --release --example operator_bench -- \
+//!       [--dims 1000000,4000000,16000000,64000000] [--k-ratio 0.001] \
+//!       [--ops topk,dgc,gaussiank] [--ablation] [--out results/fig4.json]
+//!
+//! `--ablation` additionally benches the two-sided-init Gaussian_k
+//! variant (DESIGN.md ablation).
+
+use sparkv::compress::{Compressor, GaussianK, GaussianKConfig, OpKind};
+use sparkv::stats::rng::Pcg64;
+use sparkv::util::benchkit::Bench;
+use sparkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(false);
+    args.exit_on_help("Fig. 4 operator GPU-computation-time study (CPU analogue)");
+    let dims = args.get_list("dims", &["1000000", "4000000", "16000000", "64000000"]);
+    let k_ratio: f64 = args.get_parsed_or("k-ratio", 0.001);
+    let ops = args.get_list("ops", &["topk", "dgc", "gaussiank"]);
+    let mut bench = Bench::from_env(0.7);
+
+    for dim_s in &dims {
+        let d: usize = dim_s.parse().map_err(|_| anyhow::anyhow!("bad dim {dim_s}"))?;
+        let k = ((d as f64 * k_ratio) as usize).max(1);
+        let mut rng = Pcg64::seed(7);
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        for op_name in &ops {
+            let op = OpKind::parse(op_name)?;
+            let mut c = op.build(k, 3);
+            let med = bench.run(&format!("{}/d={d}", op.name()), || {
+                std::hint::black_box(c.compress(&u));
+            });
+            println!(
+                "{:<10} d={d:>10}  {:>12}  ({:.2} ns/elem)",
+                op.name(),
+                sparkv::util::human_secs(med),
+                med * 1e9 / d as f64
+            );
+        }
+        if args.flag("ablation") {
+            let mut c = GaussianK::with_config(
+                k,
+                GaussianKConfig {
+                    two_sided_init: true,
+                    ..Default::default()
+                },
+            );
+            let med = bench.run(&format!("gaussiank2s/d={d}"), || {
+                std::hint::black_box(c.compress(&u));
+            });
+            println!(
+                "{:<10} d={d:>10}  {:>12}  ({:.2} ns/elem)",
+                "gauss-2s",
+                sparkv::util::human_secs(med),
+                med * 1e9 / d as f64
+            );
+        }
+    }
+
+    println!("\n{}", bench.report());
+    let out_path = args.get_or("out", "results/fig4_operator_speed.json");
+    bench.write_json(&out_path)?;
+    println!("wrote {out_path}");
+    Ok(())
+}

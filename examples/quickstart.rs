@@ -1,0 +1,101 @@
+//! Quickstart: the whole sparkv stack in one binary.
+//!
+//! 1. Sparsify a Gaussian gradient vector with every operator and compare
+//!    selected counts, captured energy and the Theorem 1 bound.
+//! 2. Train a small model with 8 simulated workers under TopK-SGD and
+//!    GaussianK-SGD and report loss/accuracy.
+//! 3. If artifacts are built, run one fwd/bwd step through the AOT PJRT
+//!    path (Python-free) to show the production backend.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sparkv::analysis::exact_topk_ratio;
+use sparkv::compress::OpKind;
+use sparkv::config::TrainConfig;
+use sparkv::coordinator::train;
+use sparkv::data::{DataSource, GaussianMixture};
+use sparkv::models::NativeMlp;
+use sparkv::runtime::PjrtModel;
+use sparkv::stats::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. Operator zoo on a N(0,1) gradient vector (d = 1M, k = 0.001d)\n");
+    let d = 1_000_000;
+    let k = 1000;
+    let mut rng = Pcg64::seed(42);
+    let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+    let total_energy = sparkv::stats::norm2_sq(&u);
+    println!(
+        "{:<12} {:>8} {:>16} {:>14}",
+        "operator", "nnz", "energy captured", "resid/‖u‖²"
+    );
+    for op in [
+        OpKind::TopK,
+        OpKind::RandK,
+        OpKind::Dgc,
+        OpKind::Trimmed,
+        OpKind::GaussianK,
+    ] {
+        let mut c = op.build(k, 7);
+        let s = c.compress(&u);
+        let captured = s.norm2_sq();
+        println!(
+            "{:<12} {:>8} {:>15.1}% {:>14.6}",
+            op.name(),
+            s.nnz(),
+            100.0 * captured / total_energy,
+            (total_energy - captured) / total_energy
+        );
+    }
+    println!(
+        "\nTheorem 1: exact Top_k residual ratio {:.6} ≤ (1-k/d)² {:.6} ≤ 1-k/d {:.6}",
+        exact_topk_ratio(&u, k),
+        (1.0 - k as f64 / d as f64).powi(2),
+        1.0 - k as f64 / d as f64
+    );
+
+    println!("\n== 2. Distributed training (8 workers, native backend)\n");
+    let data = GaussianMixture::new(32, 10, 2.2, 1.0, 1);
+    for op in [OpKind::Dense, OpKind::TopK, OpKind::GaussianK, OpKind::RandK] {
+        let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+        let cfg = TrainConfig {
+            workers: 8,
+            op,
+            k_ratio: 0.005,
+            steps: 100,
+            eval_every: 100,
+            ..TrainConfig::default()
+        };
+        let out = train(cfg, &mut model, &data)?;
+        println!(
+            "{:<12} final loss {:.4}  accuracy {:.3}  sent/step {:>8}",
+            op.name(),
+            out.metrics.final_loss().unwrap(),
+            out.metrics.evals.last().unwrap().accuracy,
+            out.metrics.steps.last().unwrap().sent_elements,
+        );
+    }
+
+    println!("\n== 3. AOT PJRT backend (Python-free hot path)\n");
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let model = PjrtModel::load("artifacts", "mlp_small")?;
+        println!(
+            "loaded mlp_small: platform={} d={} batch={}",
+            model.platform(),
+            model.entry.d,
+            model.entry.batch
+        );
+        let params = model.init_params(1)?;
+        let data = GaussianMixture::new(model.entry.features, model.entry.classes, 2.0, 1.0, 2);
+        let mut rng = Pcg64::seed(3);
+        let batch = data.sample(model.entry.batch, &mut rng);
+        let (loss, grads) = model.train_step_pjrt(&params, &batch.x, &batch.y, batch.n)?;
+        println!(
+            "one fwd/bwd through XLA: loss={loss:.4}, ‖g‖²={:.4}",
+            sparkv::stats::norm2_sq(&grads)
+        );
+    } else {
+        println!("artifacts/ not built — run `make artifacts` to enable the PJRT demo");
+    }
+    Ok(())
+}

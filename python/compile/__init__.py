@@ -1,0 +1,5 @@
+"""Build-time Python: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — `make artifacts` runs once and the Rust binary
+is self-contained afterwards.
+"""

@@ -1,0 +1,136 @@
+"""AOT lowering: JAX (L2, with L1 Pallas kernels inside) → HLO text →
+`artifacts/` for the Rust PJRT runtime.
+
+Interchange is **HLO text**, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts          # standard catalog
+    python -m compile.aot --out ../artifacts --large  # + lm_large (~100M)
+
+`make artifacts` is a no-op when artifacts are newer than the sources.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name, model, out_dir: pathlib.Path, k_ratio: float) -> dict:
+    d = model.layout.total
+    x_spec, y_spec = model.example_inputs()
+    p_spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    eps_spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+
+    entries = {
+        "init": (lambda seed: model.init(seed), (seed_spec,)),
+        "train_step": (
+            lambda p, x, y: model.train_step(p, x, y),
+            (p_spec, x_spec, y_spec),
+        ),
+        "eval_step": (
+            lambda p, x, y: model.eval_step(p, x, y),
+            (p_spec, x_spec, y_spec),
+        ),
+        "train_step_compressed": (
+            lambda p, x, y, e: model.train_step_compressed(p, x, y, e, k_ratio),
+            (p_spec, x_spec, y_spec, eps_spec),
+        ),
+    }
+    files = {}
+    for entry, (fn, specs) in entries.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{entry}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        files[entry] = fname
+        print(f"  {fname}: {len(text) / 1024:.0f} KiB")
+    return {
+        "d": d,
+        "batch": model.batch,
+        "features": model.features,
+        "classes": model.classes,
+        "kind": model.kind,
+        "k_ratio": k_ratio,
+        "files": files,
+        "layout": model.layout.to_json_dict(),
+    }
+
+
+def lower_standalone_kernels(out_dir: pathlib.Path, dims, k_ratio: float) -> dict:
+    """The L1 Gaussian_k compressor as standalone artifacts (one per d) —
+    the kernel-parity cross-check target for rust compress::gaussian."""
+    from .kernels.gaussian_k import gaussian_k_compress
+
+    out = {}
+    for d in dims:
+        k = max(int(d * k_ratio), 1)
+        spec = jax.ShapeDtypeStruct((d,), jnp.float32)
+        lowered = jax.jit(
+            lambda u, k=k: gaussian_k_compress(u, k)
+        ).lower(spec)
+        fname = f"gaussian_k_d{d}.hlo.txt"
+        (out_dir / fname).write_text(to_hlo_text(lowered))
+        print(f"  {fname} (k={k})")
+        out[str(d)] = {"file": fname, "k": k}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--k-ratio", type=float, default=0.001)
+    ap.add_argument("--large", action="store_true",
+                    help="also lower lm_large (~100M params; slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model names to lower")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cat = dict(models.catalog())
+    if args.large:
+        cat.update(models.large_catalog())
+    if args.only:
+        keep = set(args.only.split(","))
+        cat = {k: v for k, v in cat.items() if k in keep}
+
+    # Merge with an existing manifest so --large / --only runs extend it.
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"version": 1, "models": {}, "kernels": {}}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+
+    for name, model in cat.items():
+        print(f"lowering {name} (d={model.layout.total:,})")
+        manifest["models"][name] = lower_model(name, model, out_dir, args.k_ratio)
+
+    print("lowering standalone gaussian_k kernels")
+    manifest["kernels"]["gaussian_k"] = lower_standalone_kernels(
+        out_dir, dims=[65_536, 1_048_576], k_ratio=args.k_ratio
+    )
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: fused error-feedback accumulate + sparsify.
+
+`ef_sparsify(g, eps, thres)` computes, in a single tiled pass,
+
+    u   = g + ε          (error-feedback accumulate, Eq. 2)
+    û   = u · 1[|u| > t] (threshold mask)
+    ε'  = u − û          (new residual)
+
+i.e. the entire per-worker compression step after the threshold is known —
+three logical passes fused into one HBM round-trip (the optimization the
+DESIGN.md §Hardware-Adaptation section calls out). The threshold itself
+comes from `gaussian_k.moments` + the refinement loop, which reads u; the
+fused `ef_gaussian_k` wrapper below materializes u once via the accumulate
+kernel, runs the threshold search, then applies this fused kernel to g/ε
+again (numerically identical, tested against ref.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gaussian_k import BLOCK, _pad_to_block, count_above, moments
+
+
+def _ef_sparsify_kernel(g_ref, e_ref, t_ref, hat_ref, res_ref):
+    u = g_ref[...] + e_ref[...]
+    t = t_ref[0]
+    mask = jnp.abs(u) > t
+    hat = jnp.where(mask, u, 0.0)
+    hat_ref[...] = hat
+    res_ref[...] = u - hat
+
+
+def ef_sparsify(g, eps, thres):
+    """Fused u = g + ε; û = mask(u); ε' = u − û. Returns (û, ε')."""
+    d = g.shape[0]
+    thres = jnp.asarray(thres, jnp.float32)
+    gp, nblocks = _pad_to_block(g)
+    ep, _ = _pad_to_block(eps)
+    hat, res = pl.pallas_call(
+        _ef_sparsify_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+            jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        ],
+        interpret=True,
+    )(gp, ep, thres.reshape(1))
+    return hat[:d], res[:d]
+
+
+def _accumulate_kernel(g_ref, e_ref, u_ref):
+    u_ref[...] = g_ref[...] + e_ref[...]
+
+
+def ef_accumulate(g, eps):
+    """u = g + ε as a standalone tiled kernel (used by the threshold
+    search, which needs u before the mask threshold exists)."""
+    d = g.shape[0]
+    gp, nblocks = _pad_to_block(g)
+    ep, _ = _pad_to_block(eps)
+    u = pl.pallas_call(
+        _accumulate_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+        interpret=True,
+    )(gp, ep)
+    return u[:d]
+
+
+def ef_gaussian_k(g, eps, k, max_iters=4):
+    """End-to-end error-feedback Gaussian_k step, all-Pallas:
+
+        u = g + ε → (μ, σ) → ppf threshold → refine ≤4× → (û, ε')
+
+    Returns (û, ε', thres, count). This is the kernel stack the
+    `train_step_compressed` AOT artifact lowers into the model HLO.
+    """
+    from jax.scipy.special import ndtri
+    from jax import lax
+
+    d = g.shape[0]
+    u = ef_accumulate(g, eps)
+    s, s2 = moments(u)
+    mu = s / d
+    sigma = jnp.sqrt(jnp.maximum(s2 / d - mu * mu, 0.0))
+    thres0 = mu + sigma * ndtri(1.0 - k / d).astype(jnp.float32)
+    thres0 = jnp.where(jnp.isfinite(thres0) & (thres0 > 0), thres0, 0.0)
+    lo = max(int(2.0 * k / 3.0), 1)
+    hi = int(-(-4 * k // 3))
+
+    def body(_, st):
+        thres, eval_thres, count, done = st
+        new_eval = jnp.where(done, eval_thres, thres)
+        new_count = jnp.where(done, count, count_above(u, new_eval))
+        in_band = (new_count >= lo) & (new_count <= hi)
+        adj = jnp.where(
+            new_count < lo,
+            new_eval * 0.5,
+            jnp.where(new_count > hi, new_eval * 1.5, new_eval),
+        )
+        new_thres = jnp.where(done | in_band, thres, adj)
+        return (new_thres, new_eval, new_count, done | in_band)
+
+    init = (thres0, thres0, jnp.int32(0), jnp.bool_(False))
+    _, eval_thres, count, _ = lax.fori_loop(0, max_iters, body, init)
+    u_hat, resid = ef_sparsify(g, eps, eval_thres)
+    return u_hat, resid, eval_thres, count

@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/test_kernels.py) asserts allclose between the two
+across shapes/dtypes/regimes (hypothesis sweeps). The Rust operator zoo is
+additionally cross-checked against the same semantics through the
+`gaussian_k_compress` AOT artifact (rust/tests/pjrt_integration.rs).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+from jax.scipy.special import ndtri
+
+
+def moments_ref(x):
+    """(Σx, Σx²) of a flat vector — pass 1 of Gaussian_k."""
+    x = x.astype(jnp.float32)
+    return jnp.sum(x), jnp.sum(x * x)
+
+
+def count_above_ref(x, thres):
+    """#{i : |x_i| > thres} — the refinement-loop reduction."""
+    return jnp.sum((jnp.abs(x) > thres).astype(jnp.int32))
+
+
+def mask_residual_ref(u, thres):
+    """(û, ε') = (u·1[|u|>t], u − û) — pass 2 of Gaussian_k."""
+    mask = jnp.abs(u) > thres
+    u_hat = jnp.where(mask, u, 0.0)
+    return u_hat, u - u_hat
+
+
+def ef_accumulate_ref(g, eps):
+    """u = g + ε (error-feedback accumulate)."""
+    return g + eps
+
+
+def gaussian_k_threshold_ref(u, k, max_iters=4, two_sided=False):
+    """Algorithm 1's threshold estimation with the paper's exact
+    last-evaluated-mask semantics (mirrors rust compress::gaussian).
+
+    Returns (eval_thres, count).
+    """
+    d = u.shape[0]
+    s, s2 = moments_ref(u)
+    mu = s / d
+    sigma = jnp.sqrt(jnp.maximum(s2 / d - mu * mu, 0.0))
+    if two_sided:
+        p = 1.0 - k / (2.0 * d)
+    else:
+        p = 1.0 - k / d
+    thres0 = mu + sigma * ndtri(p).astype(jnp.float32)
+    thres0 = jnp.where(jnp.isfinite(thres0) & (thres0 > 0), thres0, 0.0)
+    lo = jnp.floor(2.0 * k / 3.0).astype(jnp.int32)
+    hi = jnp.ceil(4.0 * k / 3.0).astype(jnp.int32)
+
+    def body(_, st):
+        thres, eval_thres, count, done = st
+        new_eval = jnp.where(done, eval_thres, thres)
+        new_count = jnp.where(done, count, count_above_ref(u, new_eval))
+        in_band = (new_count >= jnp.maximum(lo, 1)) & (new_count <= hi)
+        adj = jnp.where(
+            new_count < jnp.maximum(lo, 1),
+            new_eval * 0.5,
+            jnp.where(new_count > hi, new_eval * 1.5, new_eval),
+        )
+        new_thres = jnp.where(done | in_band, thres, adj)
+        return (new_thres, new_eval, new_count, done | in_band)
+
+    init = (thres0, thres0, jnp.int32(0), jnp.bool_(False))
+    _, eval_thres, count, _ = lax.fori_loop(0, max_iters, body, init)
+    return eval_thres, count
+
+
+def gaussian_k_compress_ref(u, k, max_iters=4):
+    """Full Gaussian_k (Algorithm 1): (û, ε', thres, count)."""
+    thres, count = gaussian_k_threshold_ref(u, k, max_iters)
+    u_hat, resid = mask_residual_ref(u, thres)
+    return u_hat, resid, thres, count

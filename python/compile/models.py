@@ -1,0 +1,318 @@
+"""L2 JAX models: MLP classifier + decoder-only transformer LM.
+
+Pure-functional models over a **flat f32 parameter vector** whose slice
+layout is exported in the manifest — the Rust coordinator compresses the
+same flat vector the AOT gradients come back in, so L3 slicing matches L2
+flattening by construction.
+
+Entry points lowered per model (aot.py):
+  init(seed)                         -> (params,)
+  train_step(params, x, y)           -> (loss, grads)
+  eval_step(params, x, y)            -> (loss, accuracy)
+  train_step_compressed(params, x, y, eps)
+                                     -> (loss, u_hat, new_eps, thres)
+        — fwd+bwd *fused with the L1 Pallas Gaussian_k kernels*: the
+        error-feedback compression happens inside the same HLO module, so
+        a deployment can ship one executable per worker step.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ef_update import ef_gaussian_k
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Layout:
+    """Named slices of the flat parameter vector (mirrors rust tensor::Layout)."""
+
+    names: List[str] = dataclasses.field(default_factory=list)
+    shapes: List[Tuple[int, ...]] = dataclasses.field(default_factory=list)
+    offsets: List[int] = dataclasses.field(default_factory=list)
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        self.offsets.append(self.total)
+        self.names.append(name)
+        self.shapes.append(tuple(shape))
+
+    @property
+    def total(self) -> int:
+        if not self.names:
+            return 0
+        return self.offsets[-1] + int(np.prod(self.shapes[-1]))
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for name, shape, off in zip(self.names, self.shapes, self.offsets):
+            size = int(np.prod(shape))
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        return out
+
+    def to_json_dict(self) -> dict:
+        return {
+            "layers": [
+                {"name": n, "size": int(np.prod(s))}
+                for n, s in zip(self.names, self.shapes)
+            ],
+            "total": self.total,
+        }
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (paper's FNN family / Table 1)
+# --------------------------------------------------------------------------
+
+
+class Mlp:
+    """ReLU MLP + softmax cross-entropy, dims = [in, h..., classes].
+
+    Architecture, init (Xavier-uniform weights, zero biases) and loss match
+    rust models::NativeMlp so the two backends are directly comparable.
+    """
+
+    kind = "classifier"
+
+    def __init__(self, dims: List[int], batch: int):
+        assert len(dims) >= 2
+        self.dims = dims
+        self.batch = batch
+        self.layout = Layout()
+        for l in range(len(dims) - 1):
+            self.layout.add(f"w{l}", (dims[l], dims[l + 1]))
+            self.layout.add(f"b{l}", (dims[l + 1],))
+
+    @property
+    def features(self) -> int:
+        return self.dims[0]
+
+    @property
+    def classes(self) -> int:
+        return self.dims[-1]
+
+    def example_inputs(self):
+        x = jax.ShapeDtypeStruct((self.batch, self.features), jnp.float32)
+        y = jax.ShapeDtypeStruct((self.batch,), jnp.int32)
+        return x, y
+
+    def init(self, seed):
+        key = jax.random.PRNGKey(seed)
+        chunks = []
+        for l in range(len(self.dims) - 1):
+            key, sub = jax.random.split(key)
+            fan_in, fan_out = self.dims[l], self.dims[l + 1]
+            bound = jnp.sqrt(6.0 / (fan_in + fan_out))
+            w = jax.random.uniform(
+                sub, (fan_in * fan_out,), jnp.float32, -bound, bound
+            )
+            chunks.append(w)
+            chunks.append(jnp.zeros((fan_out,), jnp.float32))
+        return (jnp.concatenate(chunks),)
+
+    def _logits(self, params, x):
+        p = self.layout.unflatten(params)
+        h = x
+        n_layers = len(self.dims) - 1
+        for l in range(n_layers):
+            h = h @ p[f"w{l}"] + p[f"b{l}"]
+            if l + 1 < n_layers:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss(self, params, x, y):
+        logits = self._logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    def train_step(self, params, x, y):
+        loss, grads = jax.value_and_grad(self.loss)(params, x, y)
+        return loss, grads
+
+    def eval_step(self, params, x, y):
+        logits = self._logits(params, x)
+        loss = self.loss(params, x, y)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def train_step_compressed(self, params, x, y, eps, k_ratio=0.001):
+        loss, grads = self.train_step(params, x, y)
+        k = max(int(self.layout.total * k_ratio), 1)
+        u_hat, new_eps, thres, _count = ef_gaussian_k(grads, eps, k)
+        return loss, u_hat, new_eps, thres
+
+
+# --------------------------------------------------------------------------
+# Decoder-only transformer LM (char-level)
+# --------------------------------------------------------------------------
+
+
+class TransformerLm:
+    """Pre-LN decoder-only transformer with `lax.scan` over layers.
+
+    Layer parameters are stacked along a leading L axis so the HLO stays
+    compact at any depth (DESIGN.md §Perf / L2). Next-token prediction:
+    x i32[batch, ctx] → logits over the last position.
+    """
+
+    kind = "lm"
+
+    def __init__(self, vocab: int, d_model: int, n_layers: int, n_heads: int,
+                 ctx: int, batch: int):
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.ctx = ctx
+        self.batch = batch
+        d, L = d_model, n_layers
+        self.layout = Layout()
+        self.layout.add("tok_embed", (vocab, d))
+        self.layout.add("pos_embed", (ctx, d))
+        # Stacked per-layer blocks.
+        self.layout.add("ln1_scale", (L, d))
+        self.layout.add("ln1_bias", (L, d))
+        self.layout.add("w_qkv", (L, d, 3 * d))
+        self.layout.add("w_o", (L, d, d))
+        self.layout.add("ln2_scale", (L, d))
+        self.layout.add("ln2_bias", (L, d))
+        self.layout.add("w_up", (L, d, 4 * d))
+        self.layout.add("b_up", (L, 4 * d))
+        self.layout.add("w_down", (L, 4 * d, d))
+        self.layout.add("b_down", (L, d))
+        self.layout.add("lnf_scale", (d,))
+        self.layout.add("lnf_bias", (d,))
+        self.layout.add("w_head", (d, vocab))
+
+    @property
+    def features(self) -> int:
+        return self.ctx
+
+    @property
+    def classes(self) -> int:
+        return self.vocab
+
+    def example_inputs(self):
+        x = jax.ShapeDtypeStruct((self.batch, self.ctx), jnp.int32)
+        y = jax.ShapeDtypeStruct((self.batch,), jnp.int32)
+        return x, y
+
+    def init(self, seed):
+        key = jax.random.PRNGKey(seed)
+        chunks = []
+        for name, shape in zip(self.layout.names, self.layout.shapes):
+            key, sub = jax.random.split(key)
+            size = int(np.prod(shape))
+            if name.startswith(("ln", "b_")):
+                fill = 1.0 if name.endswith("scale") else 0.0
+                chunks.append(jnp.full((size,), fill, jnp.float32))
+            else:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                std = 0.02 if "embed" in name else 1.0 / jnp.sqrt(fan_in)
+                chunks.append(std * jax.random.normal(sub, (size,), jnp.float32))
+        return (jnp.concatenate(chunks),)
+
+    @staticmethod
+    def _ln(x, scale, bias):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+    def _logits(self, params, x):
+        p = self.layout.unflatten(params)
+        B, T = x.shape
+        H, d = self.n_heads, self.d_model
+        hd = d // H
+        h = p["tok_embed"][x] + p["pos_embed"][None, :T, :]
+        causal = jnp.tril(jnp.ones((T, T), jnp.bool_))
+
+        def block(h, layer):
+            (ln1s, ln1b, wqkv, wo, ln2s, ln2b, wup, bup, wdown, bdown) = layer
+            a = self._ln(h, ln1s, ln1b)
+            qkv = a @ wqkv  # [B,T,3d]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd)
+            att = jnp.where(causal[None, None], att, -1e30)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            o = o.transpose(0, 2, 1, 3).reshape(B, T, d)
+            h = h + o @ wo
+            m = self._ln(h, ln2s, ln2b)
+            m = jax.nn.gelu(m @ wup + bup) @ wdown + bdown
+            return h + m, None
+
+        layers = (
+            p["ln1_scale"], p["ln1_bias"], p["w_qkv"], p["w_o"],
+            p["ln2_scale"], p["ln2_bias"], p["w_up"], p["b_up"],
+            p["w_down"], p["b_down"],
+        )
+        h, _ = jax.lax.scan(block, h, layers)
+        h = self._ln(h[:, -1, :], p["lnf_scale"], p["lnf_bias"])
+        return h @ p["w_head"]
+
+    def loss(self, params, x, y):
+        logits = self._logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+    def train_step(self, params, x, y):
+        loss, grads = jax.value_and_grad(self.loss)(params, x, y)
+        return loss, grads
+
+    def eval_step(self, params, x, y):
+        logits = self._logits(params, x)
+        loss = self.loss(params, x, y)
+        acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def train_step_compressed(self, params, x, y, eps, k_ratio=0.001):
+        loss, grads = self.train_step(params, x, y)
+        k = max(int(self.layout.total * k_ratio), 1)
+        u_hat, new_eps, thres, _count = ef_gaussian_k(grads, eps, k)
+        return loss, u_hat, new_eps, thres
+
+
+# --------------------------------------------------------------------------
+# Model catalog (what aot.py lowers)
+# --------------------------------------------------------------------------
+
+
+def corpus_vocab_size() -> int:
+    """Vocabulary of the embedded tiny corpus — must match rust
+    data::CharCorpus (same file, same dense-byte remap)."""
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parents[2] / "rust/src/data/tiny_corpus.txt"
+    data = path.read_bytes()
+    return len(set(data))
+
+
+def catalog() -> Dict[str, object]:
+    """Every model the build lowers. Sizes are chosen so `make artifacts`
+    stays fast while the e2e example still exercises a multi-M-parameter
+    transformer; lm_large (~100M) is lowered on demand (aot.py --large)."""
+    v = corpus_vocab_size()
+    return {
+        "mlp": Mlp([256, 128, 128, 64, 10], batch=32),
+        "mlp_small": Mlp([64, 64, 32, 10], batch=32),
+        "lm_small": TransformerLm(v, d_model=128, n_layers=2, n_heads=4, ctx=32, batch=8),
+        "lm_base": TransformerLm(v, d_model=512, n_layers=8, n_heads=8, ctx=64, batch=4),
+    }
+
+
+def large_catalog() -> Dict[str, object]:
+    v = corpus_vocab_size()
+    return {
+        "lm_large": TransformerLm(v, d_model=768, n_layers=14, n_heads=12, ctx=128, batch=2),
+    }

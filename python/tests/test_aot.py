@@ -1,0 +1,72 @@
+"""AOT pipeline tests: HLO-text lowering sanity and manifest shape.
+
+The full rust round-trip is covered by rust/tests/pjrt_integration.rs;
+here we check the Python side in isolation (fast)."""
+
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, models
+
+
+def test_to_hlo_text_basic():
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2, 2), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_to_hlo_text_with_pallas_kernel():
+    from compile.kernels.gaussian_k import gaussian_k_compress
+
+    lowered = jax.jit(lambda u: gaussian_k_compress(u, 16)).lower(
+        jax.ShapeDtypeStruct((4096,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # interpret=True must lower to plain HLO — no Mosaic custom-calls.
+    assert "tpu_custom_call" not in text.lower()
+
+
+def test_lower_model_writes_all_entries(tmp_path):
+    m = models.Mlp([8, 16, 4], batch=4)
+    entry = aot.lower_model("tiny", m, tmp_path, 0.01)
+    for e in ("init", "train_step", "eval_step", "train_step_compressed"):
+        assert e in entry["files"]
+        f = tmp_path / entry["files"][e]
+        assert f.exists()
+        assert "HloModule" in f.read_text()[:2000]
+    assert entry["d"] == m.layout.total
+    assert entry["layout"]["total"] == m.layout.total
+
+
+def test_manifest_is_json_parseable(tmp_path):
+    m = models.Mlp([8, 16, 4], batch=4)
+    entry = aot.lower_model("tiny", m, tmp_path, 0.01)
+    manifest = {"version": 1, "models": {"tiny": entry}, "kernels": {}}
+    p = tmp_path / "manifest.json"
+    p.write_text(json.dumps(manifest, indent=1))
+    back = json.loads(p.read_text())
+    assert back["models"]["tiny"]["batch"] == 4
+
+
+def test_repo_artifacts_manifest_consistent():
+    """If artifacts/ already exists, its manifest must match the current
+    model catalog layouts (guards against stale artifacts)."""
+    root = pathlib.Path(__file__).resolve().parents[2]
+    mpath = root / "artifacts/manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads(mpath.read_text())
+    cat = models.catalog()
+    for name, entry in manifest["models"].items():
+        if name in cat:
+            assert entry["d"] == cat[name].layout.total, f"stale artifact {name}"

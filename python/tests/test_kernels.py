@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp ref.py.
+
+Hypothesis sweeps shapes, scales and sparsity regimes; this is the core
+correctness signal for the compression kernels that end up inside every
+`train_step_compressed` artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ef_update as ef
+from compile.kernels import gaussian_k as gk
+from compile.kernels import ref
+
+
+def gaussian_vec(d, mu=0.0, sigma=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((mu + sigma * rng.normal(size=d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# moments
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=200_000),
+    mu=st.floats(-5, 5),
+    sigma=st.floats(1e-3, 10),
+    seed=st.integers(0, 2**31),
+)
+def test_moments_matches_ref(d, mu, sigma, seed):
+    x = gaussian_vec(d, mu, sigma, seed)
+    s, s2 = gk.moments(x)
+    rs, rs2 = ref.moments_ref(x)
+    np.testing.assert_allclose(s, rs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(s2, rs2, rtol=1e-4, atol=1e-3)
+
+
+def test_moments_exact_small():
+    x = jnp.asarray([1.0, -2.0, 3.0], jnp.float32)
+    s, s2 = gk.moments(x)
+    assert float(s) == 2.0
+    assert float(s2) == 14.0
+
+
+def test_moments_non_block_multiple():
+    # d not a multiple of BLOCK exercises the padding path.
+    d = gk.BLOCK + 17
+    x = gaussian_vec(d, seed=1)
+    s, s2 = gk.moments(x)
+    rs, rs2 = ref.moments_ref(x)
+    np.testing.assert_allclose(s, rs, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(s2, rs2, rtol=1e-5, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# count_above
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=150_000),
+    thres=st.floats(0, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_count_matches_ref(d, thres, seed):
+    x = gaussian_vec(d, seed=seed)
+    assert int(gk.count_above(x, thres)) == int(ref.count_above_ref(x, thres))
+
+
+def test_count_zero_threshold_ignores_padding():
+    x = jnp.asarray([0.5, -0.5, 0.0], jnp.float32)
+    # Padding adds zeros; |0| > 0 is False so they never count.
+    assert int(gk.count_above(x, 0.0)) == 2
+
+
+# ---------------------------------------------------------------------------
+# mask_residual / ef kernels
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=150_000),
+    thres=st.floats(0, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_mask_residual_matches_ref(d, thres, seed):
+    u = gaussian_vec(d, seed=seed)
+    hat, res = gk.mask_residual(u, thres)
+    rhat, rres = ref.mask_residual_ref(u, thres)
+    np.testing.assert_array_equal(hat, rhat)
+    np.testing.assert_array_equal(res, rres)
+    # Exact decomposition (bitwise in f32).
+    np.testing.assert_array_equal(hat + res, u)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(min_value=2, max_value=100_000),
+    seed=st.integers(0, 2**31),
+)
+def test_ef_sparsify_fuses_accumulate(d, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    eps = jnp.asarray((0.1 * rng.normal(size=d)).astype(np.float32))
+    hat, res = ef.ef_sparsify(g, eps, 1.0)
+    u = ref.ef_accumulate_ref(g, eps)
+    rhat, rres = ref.mask_residual_ref(u, 1.0)
+    np.testing.assert_array_equal(hat, rhat)
+    np.testing.assert_array_equal(res, rres)
+
+
+def test_ef_accumulate():
+    g = jnp.asarray([1.0, 2.0], jnp.float32)
+    e = jnp.asarray([0.5, -2.0], jnp.float32)
+    np.testing.assert_array_equal(ef.ef_accumulate(g, e), jnp.asarray([1.5, 0.0]))
+
+
+# ---------------------------------------------------------------------------
+# full gaussian_k
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.integers(min_value=1000, max_value=120_000),
+    kfrac=st.sampled_from([0.001, 0.005, 0.01, 0.05]),
+    sigma=st.floats(1e-2, 5.0),
+    seed=st.integers(0, 2**31),
+)
+def test_gaussian_k_matches_ref(d, kfrac, sigma, seed):
+    u = gaussian_vec(d, 0.0, sigma, seed)
+    k = max(int(d * kfrac), 1)
+    hat, res, t, c = gk.gaussian_k_compress(u, k)
+    rhat, rres, rt, rc = ref.gaussian_k_compress_ref(u, k)
+    np.testing.assert_allclose(t, rt, rtol=1e-6)
+    assert int(c) == int(rc)
+    np.testing.assert_array_equal(hat, rhat)
+    np.testing.assert_array_equal(res, rres)
+
+
+def test_gaussian_k_selects_reasonable_count():
+    u = gaussian_vec(500_000, seed=3)
+    k = 500
+    hat, res, t, c = gk.gaussian_k_compress(u, k)
+    nnz = int(jnp.sum(hat != 0))
+    assert nnz == int(c)
+    assert k // 6 <= nnz <= 6 * k
+    # Selected values are untouched coordinates of u above the threshold.
+    sel = np.nonzero(np.asarray(hat))[0]
+    np.testing.assert_array_equal(np.asarray(hat)[sel], np.asarray(u)[sel])
+    assert np.all(np.abs(np.asarray(u)[sel]) > float(t))
+
+
+def test_gaussian_k_energy_near_exact_topk():
+    u = gaussian_vec(200_000, seed=4)
+    k = 200
+    hat, *_ = gk.gaussian_k_compress(u, k)
+    exact = np.sort(np.abs(np.asarray(u)))[::-1][:k]
+    exact_energy = float(np.sum(exact**2))
+    got = float(jnp.sum(hat * hat))
+    assert got > 0.4 * exact_energy
+
+
+def test_gaussian_k_degenerate_constant():
+    u = jnp.zeros((1024,), jnp.float32)
+    hat, res, t, c = gk.gaussian_k_compress(u, 16)
+    assert int(c) == 0
+    assert float(jnp.sum(jnp.abs(hat))) == 0.0

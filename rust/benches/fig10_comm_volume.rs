@@ -1,0 +1,86 @@
+//! Fig. 10 bench: accumulated number of communicated gradients during
+//! GaussianK-SGD training vs the exact-k reference line — the paper's
+//! under/over-sparsification study (Appendix A.5).
+//!
+//! Reproduction target (shape): GaussianK under-sparsifies (communicates
+//! more than k) in the early epochs and over-sparsifies later, while the
+//! *cumulative* volume stays within a small factor of exact k·t.
+
+use sparkv::compress::OpKind;
+use sparkv::config::TrainConfig;
+use sparkv::coordinator::train;
+use sparkv::data::SyntheticDigits;
+use sparkv::models::NativeMlp;
+use sparkv::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("SPARKV_BENCH_FAST").is_ok();
+    let steps = if fast { 80 } else { 300 };
+    println!("Fig. 10 — communicated gradients vs exact-k line, {steps} steps\n");
+
+    let data = SyntheticDigits::new(16, 10, 0.6, 42);
+    let mut doc = Json::obj();
+    for op in [OpKind::GaussianK, OpKind::TopK] {
+        let mut model = NativeMlp::fnn3(256, 10);
+        let cfg = TrainConfig {
+            workers: 4,
+            op,
+            k_ratio: 0.001,
+            batch_size: 32,
+            steps,
+            lr: 0.1,
+            momentum: 0.9,
+            lr_final_frac: 0.1,
+            seed: 42,
+            eval_every: 0,
+            hist_every: 0,
+            momentum_correction: false,
+            global_topk: false,
+        };
+        let out = train(cfg, &mut model, &data)?;
+        let sent = out.metrics.cumulative_sent();
+        let target = out.metrics.cumulative_target();
+        println!("{} (k = {}):", op.name(), out.k);
+        println!("{:>8} {:>14} {:>14} {:>8}", "step", "cum sent", "cum exact-k", "ratio");
+        for i in (0..steps).step_by((steps / 10).max(1)) {
+            println!(
+                "{:>8} {:>14} {:>14} {:>8.3}",
+                i,
+                sent[i],
+                target[i],
+                sent[i] as f64 / target[i] as f64
+            );
+        }
+        let final_ratio = *sent.last().unwrap() as f64 / *target.last().unwrap() as f64;
+        println!("  final cumulative ratio: {final_ratio:.3}\n");
+
+        // Early vs late per-step ratio (the under→over transition).
+        let early: u64 = out.metrics.steps[..steps / 5].iter().map(|s| s.sent_elements).sum();
+        let early_t: u64 = out.metrics.steps[..steps / 5].iter().map(|s| s.target_elements).sum();
+        let late: u64 = out.metrics.steps[4 * steps / 5..].iter().map(|s| s.sent_elements).sum();
+        let late_t: u64 = out.metrics.steps[4 * steps / 5..].iter().map(|s| s.target_elements).sum();
+        if op == OpKind::GaussianK {
+            println!(
+                "  early-phase ratio {:.3} vs late-phase ratio {:.3} — paper shape: early > late: {}\n",
+                early as f64 / early_t as f64,
+                late as f64 / late_t as f64,
+                if early * late_t > late * early_t { "OK" } else { "differs (distribution-dependent)" }
+            );
+        }
+        let mut j = Json::obj();
+        j.set(
+            "cumulative_sent",
+            Json::Arr(sent.iter().map(|&v| Json::from(v as f64)).collect()),
+        )
+        .set(
+            "cumulative_target",
+            Json::Arr(target.iter().map(|&v| Json::from(v as f64)).collect()),
+        );
+        doc.set(op.name(), j);
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig10_comm_volume.json", doc.to_string())?;
+    println!("wrote results/fig10_comm_volume.json");
+    Ok(())
+}

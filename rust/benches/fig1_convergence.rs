@@ -1,0 +1,73 @@
+//! Fig. 1 bench: convergence of Dense vs TopK vs RandK SGD at 16 workers,
+//! k = 0.001·d, on the FNN-3/digits protocol (miniature CIFAR stand-in).
+//!
+//! Reproduction target (shape): TopK-SGD tracks Dense-SGD closely; RandK-
+//! SGD converges clearly slower at the same budget. Prints the loss series
+//! and writes results/fig1_convergence.json.
+
+use sparkv::compress::OpKind;
+use sparkv::config::TrainConfig;
+use sparkv::coordinator::train;
+use sparkv::data::SyntheticDigits;
+use sparkv::models::NativeMlp;
+use sparkv::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("SPARKV_BENCH_FAST").is_ok();
+    let steps = if fast { 60 } else { 200 };
+    let data = SyntheticDigits::new(16, 10, 0.6, 42);
+    let mut results = Vec::new();
+    let mut finals = Vec::new();
+
+    println!("Fig. 1 — convergence at P=16, k=0.001d, {steps} steps (FNN-3 / digits)\n");
+    for op in [OpKind::Dense, OpKind::TopK, OpKind::RandK, OpKind::GaussianK] {
+        let mut model = NativeMlp::fnn3(256, 10);
+        let cfg = TrainConfig {
+            workers: 16,
+            op,
+            k_ratio: 0.001,
+            batch_size: 32,
+            steps,
+            lr: 0.1,
+            momentum: 0.9,
+            lr_final_frac: 0.1,
+            seed: 42,
+            eval_every: (steps / 5).max(1),
+            hist_every: 0,
+            momentum_correction: false,
+            global_topk: false,
+        };
+        let out = train(cfg, &mut model, &data)?;
+        let series = out.metrics.smoothed_loss((steps / 10).max(1));
+        print!("{:<10}", op.name());
+        for (_, l) in &series {
+            print!(" {l:>7.3}");
+        }
+        let acc = out.metrics.evals.last().unwrap().accuracy;
+        println!("   final-acc {acc:.3}");
+        finals.push((op, out.metrics.final_loss().unwrap(), acc));
+        let mut j = out.metrics.to_json();
+        j.set("op", Json::from(op.name()));
+        results.push(j);
+    }
+
+    // Shape assertions (the paper's qualitative claims).
+    let get = |op: OpKind| finals.iter().find(|f| f.0 == op).unwrap();
+    let &(_, l_dense, a_dense) = get(OpKind::Dense);
+    let &(_, l_topk, a_topk) = get(OpKind::TopK);
+    let &(_, l_randk, _a_randk) = get(OpKind::RandK);
+    println!("\nshape checks:");
+    println!(
+        "  topk ≈ dense: loss {l_topk:.4} vs {l_dense:.4}, acc {a_topk:.3} vs {a_dense:.3} — {}",
+        if a_topk >= a_dense - 0.1 { "OK" } else { "VIOLATED" }
+    );
+    println!(
+        "  randk lags:   loss {l_randk:.4} > topk {l_topk:.4} — {}",
+        if l_randk > l_topk { "OK" } else { "VIOLATED" }
+    );
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig1_convergence.json", Json::Arr(results).to_string())?;
+    println!("\nwrote results/fig1_convergence.json");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Fig. 3 bench: the shape of π²(i) for a Gaussian vector with the
+//! paper's exact parameters (d = 100,000, σ = 1), plus the Theorem 1
+//! premise diagnostics (convexity, below the reference line y = 1 − i/d).
+
+use sparkv::analysis::pi_curve::{fig3_series, pi_squared, PiCurveCheck};
+use sparkv::stats::rng::Pcg64;
+use sparkv::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let d = 100_000;
+    let sigma = 1.0;
+    println!("Fig. 3 — π²(i) for N(0, {sigma}²), d = {d}\n");
+
+    let series = fig3_series(d, sigma, 1, 50);
+    println!("{:>8} {:>12} {:>12}", "i/d", "π²(i)", "1 − i/d");
+    for &(x, y, line) in series.iter().step_by(5) {
+        println!("{x:>8.3} {y:>12.6} {line:>12.6}");
+    }
+
+    let mut rng = Pcg64::seed(1);
+    let u: Vec<f32> = (0..d).map(|_| (sigma * rng.next_gaussian()) as f32).collect();
+    let pi2 = pi_squared(&u);
+    let check = PiCurveCheck::evaluate(&pi2, 100);
+    println!(
+        "\npremise: convexity violations {:.2}%, above-line {:.2}%, max excess {:.2e} → {}",
+        check.convexity_violation_frac * 100.0,
+        check.above_line_frac * 100.0,
+        check.max_excess,
+        if check.premise_holds() { "HOLDS" } else { "FAILS" }
+    );
+
+    // Contrast: the premise must FAIL for uniform-magnitude vectors (the
+    // counterexample that motivates the bell-shape assumption).
+    let flat = vec![1.0f32; d];
+    let flat_check = PiCurveCheck::evaluate(&pi_squared(&flat), 100);
+    println!(
+        "counterexample (|u| ≡ 1): above-line {:.1}% → premise {}",
+        flat_check.above_line_frac * 100.0,
+        if flat_check.premise_holds() { "HOLDS (!)" } else { "fails, as it must" }
+    );
+
+    let json = Json::Arr(
+        series
+            .iter()
+            .map(|&(x, y, line)| {
+                let mut o = Json::obj();
+                o.set("x", Json::from(x))
+                    .set("pi2", Json::from(y))
+                    .set("line", Json::from(line));
+                o
+            })
+            .collect(),
+    );
+    std::fs::create_dir_all("results")?;
+    let mut doc = Json::obj();
+    doc.set("series", json).set("premise", check.to_json());
+    std::fs::write("results/fig3_pi_curve.json", doc.to_string())?;
+    println!("\nwrote results/fig3_pi_curve.json");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Fig. 4 bench: selection wall-time of Top_k vs DGC_k vs Gaussian_k over
+//! a dimension sweep at k = 0.001·d (the paper's V100 sweep replayed on
+//! CPU; the *shape* — exact selection expensive, Gaussian_k a small
+//! multiple of a memcpy — is the target, not the absolute values).
+
+use sparkv::compress::OpKind;
+use sparkv::stats::rng::Pcg64;
+use sparkv::util::benchkit::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("SPARKV_BENCH_FAST").is_ok();
+    let dims: Vec<usize> = if fast {
+        vec![1_000_000, 4_000_000]
+    } else {
+        vec![1_000_000, 4_000_000, 16_000_000, 64_000_000]
+    };
+    let mut bench = Bench::from_env(0.6);
+    println!("Fig. 4 — operator selection time, k = 0.001·d\n");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>14}",
+        "d", "topk", "dgc", "gaussiank", "gauss speedup"
+    );
+
+    let mut rows = Vec::new();
+    for &d in &dims {
+        let k = (d / 1000).max(1);
+        let mut rng = Pcg64::seed(7);
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let mut times = Vec::new();
+        for op in [OpKind::TopK, OpKind::Dgc, OpKind::GaussianK] {
+            let mut c = op.build(k, 3);
+            let med = bench.run(&format!("{}/d={d}", op.name()), || {
+                std::hint::black_box(c.compress(&u));
+            });
+            times.push(med);
+        }
+        println!(
+            "{:>12} {:>12} {:>12} {:>12} {:>13.1}×",
+            d,
+            sparkv::util::human_secs(times[0]),
+            sparkv::util::human_secs(times[1]),
+            sparkv::util::human_secs(times[2]),
+            times[0] / times[2]
+        );
+        rows.push((d, times));
+    }
+
+    // Shape checks: Gaussian_k beats exact top-k increasingly with d, and
+    // stays within a small factor of DGC or better at the largest d.
+    let last = rows.last().unwrap();
+    let speedup_large = last.1[0] / last.1[2];
+    println!(
+        "\nshape checks:\n  gaussian_k vs exact top-k at d={}: {speedup_large:.1}× — {}",
+        last.0,
+        if speedup_large > 1.5 { "OK" } else { "VIOLATED" }
+    );
+    // On GPU the paper shows Gaussian_k beating DGC_k ~3×; on CPU the
+    // hierarchical sample's quickselect is cheap, so parity (within 2×)
+    // is the expected shape here (EXPERIMENTS.md, Fig. 4 discussion).
+    println!(
+        "  gaussian_k vs dgc at d={}: {:.2}× — {}",
+        last.0,
+        last.1[1] / last.1[2],
+        if last.1[2] <= last.1[1] * 2.0 { "OK (CPU parity)" } else { "VIOLATED" }
+    );
+
+    bench.write_json("results/fig4_operator_speed.json")?;
+    println!("\nwrote results/fig4_operator_speed.json");
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Theorem 1 numerics (Fig. 5): compare, over a k-sweep,
+//!
+//! * the exact ratio `‖u − Top_k(u)‖² / ‖u‖²`,
+//! * the classical bound `1 − k/d` (tight only for Rand_k),
+//! * the paper's bound `(1 − k/d)²` (Theorem 1, for bell-shaped u).
+
+use crate::util::json::Json;
+
+/// One point of the Fig. 5 sweep.
+#[derive(Debug, Clone)]
+pub struct BoundPoint {
+    pub k: usize,
+    pub d: usize,
+    pub exact: f64,
+    pub classical: f64, // 1 - k/d
+    pub ours: f64,      // (1 - k/d)^2
+}
+
+impl BoundPoint {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("k", Json::from(self.k))
+            .set("d", Json::from(self.d))
+            .set("exact", Json::from(self.exact))
+            .set("classical", Json::from(self.classical))
+            .set("ours", Json::from(self.ours));
+        o
+    }
+}
+
+/// Exact residual-energy ratio of Top_k on `u`: Σ_{i>k} π(i)² / Σ π(i)²
+/// computed by sorting magnitudes (the definitional form, Eq. 5).
+pub fn exact_topk_ratio(u: &[f32], k: usize) -> f64 {
+    let d = u.len();
+    if k >= d {
+        return 0.0;
+    }
+    let mut mags: Vec<f64> = u.iter().map(|&v| (v as f64) * (v as f64)).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = mags.iter().sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let tail: f64 = mags[k..].iter().sum();
+    tail / total
+}
+
+/// Sweep k over `ks` for a fixed vector, producing Fig. 5's three series.
+pub fn bound_sweep(u: &[f32], ks: &[usize]) -> Vec<BoundPoint> {
+    let d = u.len();
+    // Sort once, reuse the prefix sums for every k.
+    let mut mags: Vec<f64> = u.iter().map(|&v| (v as f64) * (v as f64)).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = mags.iter().sum();
+    let mut prefix = Vec::with_capacity(d + 1);
+    let mut acc = 0.0;
+    prefix.push(0.0);
+    for &m in &mags {
+        acc += m;
+        prefix.push(acc);
+    }
+    ks.iter()
+        .map(|&k| {
+            let kk = k.min(d);
+            let exact = if total == 0.0 {
+                0.0
+            } else {
+                (total - prefix[kk]) / total
+            };
+            let f = 1.0 - kk as f64 / d as f64;
+            BoundPoint {
+                k,
+                d,
+                exact,
+                classical: f,
+                ours: f * f,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    fn gaussian_vec(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        (0..d).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn fig5_ordering_holds_on_gaussian() {
+        // exact ≤ (1−k/d)² ≤ (1−k/d), strictly for 0 < k < d on Gaussians.
+        let u = gaussian_vec(100_000, 50);
+        let ks: Vec<usize> = (1..=20).map(|i| i * 2500).collect();
+        for p in bound_sweep(&u, &ks) {
+            assert!(
+                p.exact <= p.ours + 1e-12,
+                "k={}: exact {} > ours {}",
+                p.k,
+                p.exact,
+                p.ours
+            );
+            assert!(p.ours <= p.classical + 1e-12);
+            if p.k > 0 && p.k < p.d {
+                assert!(p.exact < p.ours, "bound should be strict at k={}", p.k);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_matches_direct_computation() {
+        let u = gaussian_vec(5000, 51);
+        let ks = [1usize, 10, 100, 1000, 4999, 5000];
+        let sweep = bound_sweep(&u, &ks);
+        for (p, &k) in sweep.iter().zip(&ks) {
+            let direct = exact_topk_ratio(&u, k);
+            assert!((p.exact - direct).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn boundary_values() {
+        let u = gaussian_vec(100, 52);
+        assert_eq!(exact_topk_ratio(&u, 100), 0.0);
+        assert!(exact_topk_ratio(&u, 0) > 0.999);
+        let zero = vec![0.0f32; 10];
+        assert_eq!(exact_topk_ratio(&zero, 5), 0.0);
+    }
+
+    /// Theorem 1 across the bell-shaped distribution zoo (Gaussian,
+    /// Laplace, logistic): exact ≤ (1 − k/d)².
+    #[test]
+    fn prop_theorem1_bell_shapes() {
+        testkit::forall("theorem1-bell", |g: &mut Gen| {
+            let d = g.usize_in(1000, 50_000);
+            let k = g.usize_in(1, d / 2);
+            let u = match g.usize_in(0, 2) {
+                0 => {
+                    let sigma = g.f32_in(0.01, 5.0);
+                    g.gaussian_vec(d, 0.0, sigma)
+                }
+                1 => {
+                    let b = g.f64_in(0.01, 3.0);
+                    let mut rng = Pcg64::seed(g.rng.next_u64());
+                    (0..d).map(|_| rng.next_laplace(0.0, b) as f32).collect()
+                }
+                _ => {
+                    let s = g.f64_in(0.01, 3.0);
+                    let mut rng = Pcg64::seed(g.rng.next_u64());
+                    (0..d).map(|_| rng.next_logistic(0.0, s) as f32).collect()
+                }
+            };
+            let exact = exact_topk_ratio(&u, k);
+            let ours = (1.0 - k as f64 / d as f64).powi(2);
+            if exact > ours + 1e-9 {
+                return Err(format!("d={d} k={k}: exact {exact} > (1-k/d)² {ours}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The premise matters: a *uniform-magnitude* vector (all |u_i| equal)
+    /// violates (1−k/d)² — its exact ratio is exactly 1 − k/d. This is why
+    /// the theorem needs the bell-shape assumption.
+    #[test]
+    fn uniform_magnitude_saturates_classical_bound() {
+        let d = 10_000;
+        let u = vec![1.0f32; d];
+        let k = 1000;
+        let exact = exact_topk_ratio(&u, k);
+        let classical = 1.0 - k as f64 / d as f64;
+        let ours = classical * classical;
+        assert!((exact - classical).abs() < 1e-9);
+        assert!(exact > ours, "premise violation must break the tight bound");
+    }
+}

@@ -1,0 +1,15 @@
+//! Analysis toolkit for the paper's theory experiments:
+//!
+//! * [`bounds`] — exact `‖u − Top_k(u)‖²/‖u‖²` vs the classical (1 − k/d)
+//!   bound vs the paper's (1 − k/d)² bound (Theorem 1, Fig. 5).
+//! * [`pi_curve`] — the sorted-normalized-magnitude curve π²(i) and its
+//!   convexity/below-reference-line diagnostics (Fig. 3).
+//! * [`rates`] — convergence-rate harness on analytically tractable
+//!   problems (Theorem 2's O(1/δ²) iteration-threshold ordering).
+
+pub mod bounds;
+pub mod pi_curve;
+pub mod rates;
+
+pub use bounds::{bound_sweep, exact_topk_ratio, BoundPoint};
+pub use pi_curve::{pi_squared, PiCurveCheck};

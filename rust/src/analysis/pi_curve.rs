@@ -1,0 +1,163 @@
+//! Fig. 3: the shape of π²(i), where π is the descending sort of
+//! |u|/‖u‖∞. Theorem 1's geometric argument needs two empirical facts for
+//! bell-shaped u:
+//!
+//! 1. π²(i) is (approximately) convex in i, and
+//! 2. π²(i) lies below the reference line y = 1 − i/d.
+//!
+//! This module computes the curve and both diagnostics so the premise can
+//! be *checked*, not assumed, on every gradient the trainer captures.
+
+use crate::util::json::Json;
+
+/// Compute π²: descending-sorted squared magnitudes normalized by the max.
+pub fn pi_squared(u: &[f32]) -> Vec<f64> {
+    let mut v: Vec<f64> = u.iter().map(|&x| (x as f64) * (x as f64)).collect();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let max = v.first().copied().unwrap_or(0.0);
+    if max > 0.0 {
+        let inv = 1.0 / max;
+        v.iter_mut().for_each(|x| *x *= inv);
+    }
+    v
+}
+
+/// Diagnostics of the Theorem 1 premise on one vector.
+#[derive(Debug, Clone)]
+pub struct PiCurveCheck {
+    /// Fraction of interior points violating discrete convexity
+    /// (π²(i−1) + π²(i+1) ≥ 2π²(i), with tolerance).
+    pub convexity_violation_frac: f64,
+    /// Fraction of points above the reference line y = 1 − i/d.
+    pub above_line_frac: f64,
+    /// Max amount by which the curve exceeds the line (0 if never).
+    pub max_excess: f64,
+}
+
+impl PiCurveCheck {
+    /// Evaluate the premise on a (sub-sampled) π² curve. `stride` > 1
+    /// subsamples for large d; convexity is then checked on the coarse
+    /// grid, which is what Fig. 3 plots anyway.
+    pub fn evaluate(pi2: &[f64], stride: usize) -> PiCurveCheck {
+        let d = pi2.len();
+        let stride = stride.max(1);
+        let pts: Vec<(usize, f64)> = (0..d).step_by(stride).map(|i| (i, pi2[i])).collect();
+        let n = pts.len();
+        let mut conv_bad = 0usize;
+        for w in pts.windows(3) {
+            let (_, a) = w[0];
+            let (_, b) = w[1];
+            let (_, c) = w[2];
+            // Relative tolerance: in the near-flat tail, sampling noise
+            // makes a+c ≈ 2b up to a small relative wobble; Fig. 3 plots
+            // the same sub-sampled curve, which looks smooth at this
+            // granularity.
+            if a + c < 2.0 * b * (1.0 - 0.02) - 1e-12 {
+                conv_bad += 1;
+            }
+        }
+        let mut above = 0usize;
+        let mut max_excess = 0.0f64;
+        for &(i, y) in &pts {
+            let line = 1.0 - i as f64 / d as f64;
+            if y > line + 1e-12 {
+                above += 1;
+                max_excess = max_excess.max(y - line);
+            }
+        }
+        PiCurveCheck {
+            convexity_violation_frac: conv_bad as f64 / (n.saturating_sub(2)).max(1) as f64,
+            above_line_frac: above as f64 / n.max(1) as f64,
+            max_excess,
+        }
+    }
+
+    /// The paper's premise "π² is convex and less than the line" with
+    /// sampling-noise tolerance.
+    pub fn premise_holds(&self) -> bool {
+        self.convexity_violation_frac < 0.05 && self.above_line_frac < 0.01
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set(
+            "convexity_violation_frac",
+            Json::from(self.convexity_violation_frac),
+        )
+        .set("above_line_frac", Json::from(self.above_line_frac))
+        .set("max_excess", Json::from(self.max_excess));
+        o
+    }
+}
+
+/// Fig. 3 series generator: π² of a Gaussian(0, σ²) vector of dimension d
+/// plus the reference line, sub-sampled to `points` x-positions.
+pub fn fig3_series(d: usize, sigma: f64, seed: u64, points: usize) -> Vec<(f64, f64, f64)> {
+    let mut rng = crate::stats::rng::Pcg64::seed(seed);
+    let u: Vec<f32> = (0..d).map(|_| (sigma * rng.next_gaussian()) as f32).collect();
+    let pi2 = pi_squared(&u);
+    let stride = (d / points.max(1)).max(1);
+    (0..d)
+        .step_by(stride)
+        .map(|i| {
+            let x = i as f64 / d as f64;
+            (x, pi2[i], 1.0 - x)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn pi_squared_sorted_and_normalized() {
+        let u = vec![3.0f32, -1.0, 2.0, 0.0];
+        let p = pi_squared(&u);
+        assert_eq!(p[0], 1.0); // 9/9
+        assert!((p[1] - 4.0 / 9.0).abs() < 1e-12);
+        assert!(p.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn premise_holds_for_gaussian_100k() {
+        // The paper's exact Fig. 3 setting: d = 100,000, σ = 1.
+        let mut rng = Pcg64::seed(60);
+        let u: Vec<f32> = (0..100_000).map(|_| rng.next_gaussian() as f32).collect();
+        let pi2 = pi_squared(&u);
+        let check = PiCurveCheck::evaluate(&pi2, 100);
+        assert!(
+            check.premise_holds(),
+            "premise should hold for N(0,1): {check:?}"
+        );
+        assert_eq!(check.above_line_frac, 0.0, "π² must stay below 1 − i/d");
+    }
+
+    #[test]
+    fn premise_fails_for_uniform_magnitudes() {
+        // All-equal magnitudes: π² ≡ 1, far above the line — the
+        // counterexample that motivates the bell-shape assumption.
+        let u = vec![1.0f32; 1000];
+        let pi2 = pi_squared(&u);
+        let check = PiCurveCheck::evaluate(&pi2, 1);
+        assert!(!check.premise_holds());
+        assert!(check.above_line_frac > 0.9);
+    }
+
+    #[test]
+    fn fig3_series_shape() {
+        let s = fig3_series(10_000, 1.0, 61, 100);
+        assert!(s.len() >= 100);
+        // Curve below line everywhere except i=0 (both = 1).
+        for &(x, y, line) in &s[1..] {
+            assert!(y <= line + 1e-12, "x={x}: π²={y} line={line}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_is_flat() {
+        let p = pi_squared(&[0.0f32; 10]);
+        assert!(p.iter().all(|&x| x == 0.0));
+    }
+}

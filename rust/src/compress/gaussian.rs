@@ -1,0 +1,396 @@
+//! `Gaussian_k` — the paper's contribution (Algorithm 1).
+//!
+//! Exploits the empirical bell shape of the error-compensated gradient
+//! `u = g + ε` (paper §3.1, Fig. 2): estimate the top-k threshold as the
+//! Gaussian percent-point function at p = 1 − k/d with the vector's own
+//! (μ, σ), then refine at most 4 times by ±50% until the selected count
+//! lands in [2k/3, 4k/3]. Total cost: one fused mean/std pass + at most
+//! five count/mask passes — all O(d), branch-predictable, and vector-
+//! friendly, vs. exact selection's data-dependent partitioning.
+//!
+//! Faithfulness notes:
+//! * Line 4 of Algorithm 1 thresholds the *signed* ppf but masks on
+//!   |u| > thres; for a symmetric distribution that initially selects
+//!   ≈ 2k elements, which the ×1.5 refinement then corrects. We keep the
+//!   paper's exact behaviour by default; [`GaussianKConfig::two_sided_init`]
+//!   enables the analytically-correct |·| quantile (p = 1 − k/(2d)) as an
+//!   ablation (bench `fig4_operator_speed --ablation`).
+//! * The paper's operator can return 0 elements on pathological (σ≈0 or
+//!   extremely spiky) inputs. For training robustness we add an explicit
+//!   exact-top-k fallback when the refinement ends empty; fallbacks are
+//!   counted and reported ([`GaussianK::fallbacks`]), and the numerical
+//!   studies show it never triggers on real bell-shaped gradients.
+
+use super::{count_above, count_above_strided, select_above_hint, Compressor};
+use crate::stats::{mean_std, normal::ppf};
+use crate::tensor::SparseVec;
+
+/// Tuning knobs for [`GaussianK`]. Defaults = Algorithm 1 as published.
+#[derive(Debug, Clone)]
+pub struct GaussianKConfig {
+    /// Max refinement iterations (paper: 4).
+    pub max_iters: usize,
+    /// Accept when count ∈ [lo_frac·k, hi_frac·k] (paper: 2/3, 4/3).
+    pub lo_frac: f64,
+    pub hi_frac: f64,
+    /// Multiplier when over-selecting (paper: 1.5).
+    pub up: f32,
+    /// Multiplier when under-selecting (paper: 0.5).
+    pub down: f32,
+    /// Use the two-sided |·| quantile p = 1 − k/(2d) for the initial
+    /// threshold instead of the paper's one-sided p = 1 − k/d.
+    pub two_sided_init: bool,
+    /// Fall back to exact top-k if refinement ends with zero selected.
+    pub exact_fallback: bool,
+    /// Refinement-count sampling stride: 0 = auto (exact below 4M
+    /// elements, strided above — the counts only steer the ±50% loop, so
+    /// a 1/stride sample changes nothing at k ≫ stride while cutting the
+    /// loop's memory traffic by ~stride; EXPERIMENTS.md §Perf). 1 = always
+    /// exact (the published algorithm's literal cost model).
+    pub count_stride: usize,
+}
+
+impl Default for GaussianKConfig {
+    fn default() -> Self {
+        GaussianKConfig {
+            max_iters: 4,
+            lo_frac: 2.0 / 3.0,
+            hi_frac: 4.0 / 3.0,
+            up: 1.5,
+            down: 0.5,
+            two_sided_init: false,
+            exact_fallback: true,
+            count_stride: 0,
+        }
+    }
+}
+
+/// The Gaussian_k approximate top-k operator (Algorithm 1).
+pub struct GaussianK {
+    k: usize,
+    pub cfg: GaussianKConfig,
+    /// Number of times the exact-top-k fallback fired (diagnostics).
+    pub fallbacks: u64,
+    /// Number of threshold-refinement iterations used, cumulative
+    /// (diagnostics; Fig. 10's under/over-sparsification study reads the
+    /// per-call selected counts from the trainer's metrics instead).
+    pub refine_iters: u64,
+    /// Reusable strided-sample scratch (large-d fast path; no per-call
+    /// allocation).
+    sample: Vec<f32>,
+}
+
+impl GaussianK {
+    pub fn new(k: usize) -> GaussianK {
+        Self::with_config(k, GaussianKConfig::default())
+    }
+
+    pub fn with_config(k: usize, cfg: GaussianKConfig) -> GaussianK {
+        assert!(k > 0, "GaussianK requires k >= 1");
+        GaussianK {
+            k,
+            cfg,
+            fallbacks: 0,
+            refine_iters: 0,
+            sample: Vec::new(),
+        }
+    }
+
+    /// The estimated threshold after refinement, plus the selected count —
+    /// exposed for the analysis harnesses and the PJRT cross-check test
+    /// (kernel parity with the Pallas implementation).
+    pub fn refined_threshold(&mut self, u: &[f32]) -> (f32, usize) {
+        let d = u.len();
+        let k = self.k.min(d).max(1);
+        let (mu, sigma) = mean_std(u);
+        let p = if self.cfg.two_sided_init {
+            1.0 - (k as f64) / (2.0 * d as f64)
+        } else {
+            1.0 - (k as f64) / (d as f64)
+        };
+        // Algorithm 1 line 4: thres = ppf(p; μ, σ). For the two-sided
+        // variant we center on |u − μ| ≈ ppf offset; the paper's version
+        // uses the signed quantile directly.
+        let mut thres = ppf(p, mu as f64, sigma as f64) as f32;
+        if !thres.is_finite() || thres <= 0.0 {
+            // σ = 0 or k ≈ d: degenerate — every |u| > 0 qualifies.
+            thres = 0.0;
+        }
+        let lo = (self.cfg.lo_frac * k as f64) as usize;
+        let hi = (self.cfg.hi_frac * k as f64).ceil() as usize;
+        // Auto stride: exact counting when the sample would be too small
+        // for the ±33% band decision (need ≳ 1000 expected hits), strided
+        // otherwise. k/stride ≥ 1024 ⇒ sampling noise ≈ 3% ≪ band width.
+        let stride = match self.cfg.count_stride {
+            0 => {
+                if d >= 4_000_000 && k >= 64 * 1024 / 16 {
+                    (k / 1024).clamp(1, 64)
+                } else {
+                    1
+                }
+            }
+            s => s,
+        };
+        // With stride > 1, materialize the strided sample ONCE into a
+        // contiguous scratch: the ≤4 refinement counts then run over a
+        // d/stride-element buffer at cache speed instead of issuing
+        // cache-missing strided loads per iteration (EXPERIMENTS.md §Perf).
+        if stride > 1 {
+            self.sample.clear();
+            self.sample.reserve(d / stride + 1);
+            let mut i = 0;
+            while i < d {
+                self.sample.push(u[i]);
+                i += stride;
+            }
+        }
+        let count_at = |s: &Self, t: f32| -> usize {
+            if stride > 1 {
+                count_above(&s.sample, t) * stride
+            } else {
+                count_above_strided(u, t, 1)
+            }
+        };
+        // Algorithm 1 lines 5–13: evaluate the mask *first*, then adjust.
+        // The mask used for the output is the last *evaluated* one — if the
+        // loop exhausts right after an adjustment, the adjusted threshold
+        // is never applied (faithful to the published pseudocode, and the
+        // source of Fig. 10's under/over-sparsification).
+        let mut eval_thres = thres;
+        let mut count = 0usize;
+        for _ in 0..self.cfg.max_iters {
+            self.refine_iters += 1;
+            eval_thres = thres;
+            count = count_at(self, eval_thres);
+            if count < lo.max(1) {
+                thres = eval_thres * self.cfg.down;
+            } else if count > hi {
+                thres = eval_thres * self.cfg.up;
+            } else {
+                break;
+            }
+        }
+        // With stride > 1 the returned count is the (scaled) estimate —
+        // callers only use it as a capacity hint and an emptiness check;
+        // the actual selection pass is exact regardless. (An exact
+        // reconciliation pass here would cost a full d-sweep and buy
+        // nothing: compress() materializes the exact set anyway.)
+        (eval_thres, count)
+    }
+}
+
+impl Compressor for GaussianK {
+    fn compress(&mut self, u: &[f32]) -> SparseVec {
+        let d = u.len();
+        let k = self.k.min(d);
+        if k == d {
+            return super::Dense.compress(u);
+        }
+        let (thres, count) = self.refined_threshold(u);
+        if count == 0 {
+            if self.cfg.exact_fallback && u.iter().any(|&v| v != 0.0) {
+                self.fallbacks += 1;
+                return super::TopK::new(k).compress(u);
+            }
+            return SparseVec::new(d);
+        }
+        select_above_hint(u, thres, count)
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussiank"
+    }
+
+    fn target_k(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    #[test]
+    fn selects_near_k_on_gaussian() {
+        // The paper's one-sided ppf init + ×0.5/×1.5 refinement genuinely
+        // oscillates on exact Gaussians (the under/over-sparsification the
+        // paper itself documents in Fig. 10), so the faithful operator
+        // lands within a ~3× band of k, not the acceptance band itself.
+        let mut rng = Pcg64::seed(40);
+        let d = 1_000_000;
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let k = d / 1000; // the paper's k = 0.001 d
+        let mut op = GaussianK::new(k);
+        let s = op.compress(&u);
+        assert!(
+            s.nnz() >= k / 3 && s.nnz() <= 3 * k,
+            "nnz {} vs k {k}",
+            s.nnz()
+        );
+        assert_eq!(op.fallbacks, 0);
+    }
+
+    #[test]
+    fn two_sided_init_hits_acceptance_band() {
+        // The analytically-correct |·| quantile lands inside the paper's
+        // acceptance band [2k/3, 4k/3] immediately on true Gaussians.
+        let mut rng = Pcg64::seed(45);
+        let d = 1_000_000;
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let k = d / 1000;
+        let mut op = GaussianK::with_config(
+            k,
+            GaussianKConfig {
+                two_sided_init: true,
+                ..Default::default()
+            },
+        );
+        let s = op.compress(&u);
+        assert!(
+            s.nnz() >= 2 * k / 3 && s.nnz() <= 4 * k / 3 + 1,
+            "nnz {} vs k {k}",
+            s.nnz()
+        );
+    }
+
+    #[test]
+    fn captures_topk_energy() {
+        // The selected set must capture nearly the exact top-k energy: this
+        // is the convergence-preservation claim (Fig. 6).
+        let mut rng = Pcg64::seed(41);
+        let d = 200_000;
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let k = 200;
+        let exact = super::super::TopK::new(k).compress(&u);
+        let approx = GaussianK::new(k).compress(&u);
+        let ratio = approx.norm2_sq() / exact.norm2_sq();
+        // A single Gaussian_k call can land on the under-selecting side of
+        // the oscillating refinement (≈ half the exact energy); error
+        // feedback recovers the remainder across steps (Fig. 6 parity is
+        // tested end-to-end in coordinator::trainer).
+        assert!(ratio > 0.4, "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn nonzero_mean_and_scale_invariance() {
+        let mut rng = Pcg64::seed(42);
+        let d = 100_000;
+        let k = 100;
+        for &(mu, sigma) in &[(5.0f64, 0.1f64), (-3.0, 2.0), (0.0, 1e-4)] {
+            let u: Vec<f32> = (0..d)
+                .map(|_| (mu + sigma * rng.next_gaussian()) as f32)
+                .collect();
+            let mut op = GaussianK::new(k);
+            let s = op.compress(&u);
+            assert!(s.nnz() > 0, "mu={mu} sigma={sigma}: empty selection");
+        }
+    }
+
+    #[test]
+    fn laplace_still_works() {
+        // Bell-shaped but heavier-tailed than Gaussian (LSTM-like, Fig. 2):
+        // the refinement loop must still land near k.
+        let mut rng = Pcg64::seed(43);
+        let d = 500_000;
+        let u: Vec<f32> = (0..d).map(|_| rng.next_laplace(0.0, 0.5) as f32).collect();
+        let k = 500;
+        let mut op = GaussianK::new(k);
+        let s = op.compress(&u);
+        // Heavy tails stretch the ±50% refinement further than on true
+        // Gaussians: the operator over-communicates by up to ~8× here,
+        // exactly the Fig. 10 over/under-sparsification behaviour.
+        assert!(
+            s.nnz() >= k / 6 && s.nnz() <= 8 * k,
+            "nnz {} vs k {k}",
+            s.nnz()
+        );
+    }
+
+    #[test]
+    fn fallback_on_degenerate_input() {
+        let mut u = vec![0.0f32; 10_000];
+        u[5] = 1.0; // single spike, σ≈0.01, ppf threshold lands above |1.0|? Actually exercise it.
+        let mut op = GaussianK::new(10);
+        let s = op.compress(&u);
+        assert!(s.nnz() >= 1, "must select the spike (possibly via fallback)");
+        let zero = vec![0.0f32; 100];
+        let mut op2 = GaussianK::new(5);
+        assert_eq!(op2.compress(&zero).nnz(), 0);
+    }
+
+    #[test]
+    fn two_sided_ablation_starts_closer() {
+        // The two-sided init should need fewer refinement iterations on a
+        // symmetric Gaussian (it corrects the 2× over-selection analytically).
+        let mut rng = Pcg64::seed(44);
+        let d = 500_000;
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let k = 500;
+        let mut paper = GaussianK::new(k);
+        let mut two_sided = GaussianK::with_config(
+            k,
+            GaussianKConfig {
+                two_sided_init: true,
+                ..Default::default()
+            },
+        );
+        paper.compress(&u);
+        two_sided.compress(&u);
+        assert!(
+            two_sided.refine_iters <= paper.refine_iters,
+            "two-sided {} vs paper {}",
+            two_sided.refine_iters,
+            paper.refine_iters
+        );
+    }
+
+    #[test]
+    fn prop_selection_band_on_bell_shapes() {
+        testkit::forall("gaussiank-band", |g: &mut Gen| {
+            let d = g.usize_in(10_000, 80_000);
+            let k = (d / g.usize_in(100, 1000)).max(8);
+            let sigma = g.f32_in(1e-3, 5.0);
+            // Real gradient accumulations are near-zero-mean relative to
+            // their spread (Fig. 2); the one-sided ppf init degrades
+            // gracefully but unboundedly as |mu|/sigma grows.
+            let mu = g.f32_in(-0.3, 0.3) * sigma;
+            let u = g.gaussian_vec(d, mu, sigma);
+            let mut op = GaussianK::new(k);
+            let s = op.compress(&u);
+            // Generous band after ≤4 coarse ±50% refinements: within ~6×.
+            if s.nnz() < k / 6 || s.nnz() > 6 * k {
+                return Err(format!("d={d} k={k} mu={mu} sigma={sigma}: nnz {}", s.nnz()));
+            }
+            Ok(())
+        });
+    }
+
+    /// Theorem-1 premise check: on bell-shaped u the Gaussian_k residual
+    /// satisfies the paper's (1−k/d)² bound (it keeps ≈ the same mass as
+    /// exact top-k).
+    #[test]
+    fn prop_respects_tight_bound_on_gaussians() {
+        testkit::forall("gaussiank-tight-bound", |g: &mut Gen| {
+            let d = g.usize_in(20_000, 60_000);
+            let k = d / g.usize_in(50, 500);
+            let sigma = g.f32_in(0.1, 3.0);
+            let u = g.gaussian_vec(d, 0.0, sigma);
+            let mut op = GaussianK::new(k.max(1));
+            let s = op.compress(&u);
+            let u_sq = crate::stats::norm2_sq(&u);
+            let resid = u_sq - s.norm2_sq();
+            // use the *selected* count as the effective k for the bound
+            let keff = s.nnz().min(d);
+            let gamma = (1.0 - keff as f64 / d as f64).powi(2);
+            if resid > gamma * u_sq * 1.05 {
+                return Err(format!(
+                    "residual {resid:.4} > (1-k/d)²‖u‖² {:.4} (keff={keff}, d={d})",
+                    gamma * u_sq
+                ));
+            }
+            Ok(())
+        });
+    }
+}

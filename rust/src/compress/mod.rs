@@ -1,0 +1,332 @@
+//! The sparsification operator zoo (the paper's §3.3 and §4.3):
+//!
+//! * [`TopK`] — exact top-k selection by |value| (the `Top_k` operator).
+//! * [`RandK`] — uniform random-k (`Rand_k`).
+//! * [`DgcK`] — DGC's hierarchical-sampling approximate top-k (Lin et al.
+//!   2018), the paper's main approximate baseline.
+//! * [`TrimmedK`] — RedSync's max/mean-ratio threshold search (Fang et al.
+//!   2019), which may select far more than k elements.
+//! * [`GaussianK`] — the paper's contribution (Algorithm 1): Gaussian
+//!   percent-point-function threshold estimation with a bounded ±50%
+//!   refinement loop.
+//!
+//! All operators implement [`Compressor`]: they take the error-compensated
+//! accumulation `u = g + ε` and return a [`SparseVec`] whose kept values
+//! are *unchanged* coordinates of `u` (a defining invariant, tested by the
+//! property suite).
+
+mod dgc;
+mod gaussian;
+mod randk;
+mod topk;
+mod trimmed;
+
+pub use dgc::DgcK;
+pub use gaussian::{GaussianK, GaussianKConfig};
+pub use randk::RandK;
+pub use topk::TopK;
+pub use trimmed::TrimmedK;
+
+use crate::tensor::SparseVec;
+
+/// A gradient sparsifier. `compress` must return coordinates of `u`
+/// unchanged; implementations aim for ~`target_k` non-zeros (exact for
+/// [`TopK`]/[`RandK`], approximate for the threshold-based operators).
+pub trait Compressor: Send {
+    /// Sparsify `u` (the error-compensated gradient accumulation).
+    fn compress(&mut self, u: &[f32]) -> SparseVec;
+
+    /// Operator name for reports (matches the paper's terminology).
+    fn name(&self) -> &'static str;
+
+    /// The configured k.
+    fn target_k(&self) -> usize;
+}
+
+/// Identity "compressor" for Dense-SGD: keeps everything. Exists so the
+/// trainer can treat Dense/TopK/... uniformly; the collectives layer
+/// routes Dense through ring-allreduce rather than allgather.
+pub struct Dense;
+
+impl Compressor for Dense {
+    fn compress(&mut self, u: &[f32]) -> SparseVec {
+        SparseVec {
+            d: u.len(),
+            indices: (0..u.len() as u32).collect(),
+            values: u.to_vec(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn target_k(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Operator selector used by configs / CLIs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Dense,
+    TopK,
+    RandK,
+    Dgc,
+    Trimmed,
+    GaussianK,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> anyhow::Result<OpKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => OpKind::Dense,
+            "topk" | "top-k" | "top_k" => OpKind::TopK,
+            "randk" | "rand-k" | "rand_k" => OpKind::RandK,
+            "dgc" | "dgck" | "dgc_k" => OpKind::Dgc,
+            "trimmed" | "trimmedk" | "redsync" => OpKind::Trimmed,
+            "gaussiank" | "gaussian-k" | "gaussian_k" | "gaussian" => OpKind::GaussianK,
+            other => anyhow::bail!("unknown operator '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Dense => "dense",
+            OpKind::TopK => "topk",
+            OpKind::RandK => "randk",
+            OpKind::Dgc => "dgc",
+            OpKind::Trimmed => "trimmed",
+            OpKind::GaussianK => "gaussiank",
+        }
+    }
+
+    /// Instantiate an operator for dimension `d` with `k` targets and a
+    /// deterministic seed (used by the stochastic operators).
+    pub fn build(&self, k: usize, seed: u64) -> Box<dyn Compressor> {
+        match self {
+            OpKind::Dense => Box::new(Dense),
+            OpKind::TopK => Box::new(TopK::new(k)),
+            OpKind::RandK => Box::new(RandK::new(k, seed)),
+            OpKind::Dgc => Box::new(DgcK::new(k, 0.01, seed)),
+            OpKind::Trimmed => Box::new(TrimmedK::new(k)),
+            OpKind::GaussianK => Box::new(GaussianK::new(k)),
+        }
+    }
+
+    pub fn all() -> &'static [OpKind] {
+        &[
+            OpKind::Dense,
+            OpKind::TopK,
+            OpKind::RandK,
+            OpKind::Dgc,
+            OpKind::Trimmed,
+            OpKind::GaussianK,
+        ]
+    }
+}
+
+/// Shared helper: gather all elements with |u[i]| > thres into a sparse
+/// vector (single pass; the L3 twin of the Pallas mask kernel's pass 2).
+/// `size_hint` pre-sizes the output (the Gaussian_k refinement loop knows
+/// the count before selecting — EXPERIMENTS.md §Perf).
+pub(crate) fn select_above_hint(u: &[f32], thres: f32, size_hint: usize) -> SparseVec {
+    let cap = size_hint.min(u.len());
+    let mut indices = Vec::with_capacity(cap);
+    let mut values = Vec::with_capacity(cap);
+    // Skip-fast: scan 32-wide blocks with two independent vectorizable
+    // max-|v| chains and only fall into the scalar gather when the block
+    // contains a hit. At k/d ≈ 0.1% the scalar path touches ~3% of blocks,
+    // so the sweep approaches pure-load bandwidth (EXPERIMENTS.md §Perf).
+    let blocks = u.chunks_exact(32);
+    let rem_start = u.len() - blocks.remainder().len();
+    for (b, block) in blocks.enumerate() {
+        let (mut m0, mut m1) = (0.0f32, 0.0f32);
+        for j in 0..16 {
+            m0 = m0.max(block[j].abs());
+            m1 = m1.max(block[16 + j].abs());
+        }
+        if m0.max(m1) > thres {
+            let base = b * 32;
+            for (j, &v) in block.iter().enumerate() {
+                if v.abs() > thres {
+                    indices.push((base + j) as u32);
+                    values.push(v);
+                }
+            }
+        }
+    }
+    for (j, &v) in u[rem_start..].iter().enumerate() {
+        if v.abs() > thres {
+            indices.push((rem_start + j) as u32);
+            values.push(v);
+        }
+    }
+    SparseVec {
+        d: u.len(),
+        indices,
+        values,
+    }
+}
+
+pub(crate) fn select_above(u: &[f32], thres: f32) -> SparseVec {
+    select_above_hint(u, thres, 16)
+}
+
+/// Shared helper: count elements with |u[i]| > thres (pass-only, no
+/// allocation — the refinement loop of Gaussian_k uses this). Chunked
+/// u32 accumulation so the compare+add vectorizes (≈4× over the naive
+/// usize-sum version; EXPERIMENTS.md §Perf).
+pub(crate) fn count_above(u: &[f32], thres: f32) -> usize {
+    let mut total = 0usize;
+    // u32 lanes can't overflow within a 1M-element chunk.
+    for chunk in u.chunks(1 << 20) {
+        let mut acc = [0u32; 8];
+        let lanes = chunk.chunks_exact(8);
+        let rem = lanes.remainder();
+        for l in lanes {
+            for j in 0..8 {
+                acc[j] += (l[j].abs() > thres) as u32;
+            }
+        }
+        total += acc.iter().sum::<u32>() as usize
+            + rem.iter().filter(|v| v.abs() > thres).count();
+    }
+    total
+}
+
+/// Strided count estimate: counts every `stride`-th element and scales.
+/// The Gaussian_k refinement only needs the count to ~±15% (its acceptance
+/// band is [2k/3, 4k/3]), so at large d a 1/stride sample gives the same
+/// refinement decisions at 1/stride of the memory traffic.
+pub(crate) fn count_above_strided(u: &[f32], thres: f32, stride: usize) -> usize {
+    if stride <= 1 {
+        return count_above(u, thres);
+    }
+    let mut c = 0usize;
+    let mut i = 0;
+    while i < u.len() {
+        c += (u[i].abs() > thres) as usize;
+        i += stride;
+    }
+    c * stride
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    fn ops_under_test(k: usize) -> Vec<Box<dyn Compressor>> {
+        vec![
+            Box::new(TopK::new(k)),
+            Box::new(RandK::new(k, 7)),
+            Box::new(DgcK::new(k, 0.01, 7)),
+            Box::new(TrimmedK::new(k)),
+            Box::new(GaussianK::new(k)),
+        ]
+    }
+
+    #[test]
+    fn opkind_parse_roundtrip() {
+        for op in OpKind::all() {
+            assert_eq!(OpKind::parse(op.name()).unwrap(), *op);
+        }
+        assert!(OpKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn dense_keeps_everything() {
+        let u = vec![1.0f32, -2.0, 0.0, 3.0];
+        let s = Dense.compress(&u);
+        assert_eq!(s.to_dense(), u);
+    }
+
+    #[test]
+    fn select_and_count_agree() {
+        let mut rng = Pcg64::seed(1);
+        let u: Vec<f32> = (0..10_000).map(|_| rng.next_gaussian() as f32).collect();
+        for &t in &[0.0f32, 0.5, 1.0, 2.5, 10.0] {
+            let s = select_above(&u, t);
+            assert_eq!(s.nnz(), count_above(&u, t));
+            assert!(s.values.iter().all(|v| v.abs() > t));
+        }
+    }
+
+    /// Invariant: kept values are unchanged coordinates of u, at their
+    /// original indices, with no duplicates (all operators).
+    #[test]
+    fn prop_values_unchanged() {
+        testkit::forall("values-unchanged", |g: &mut Gen| {
+            let d = g.usize_in(16, 4096);
+            let k = g.usize_in(1, d);
+            let u = g.mixed_vec(d);
+            for op in ops_under_test(k).iter_mut() {
+                let s = op.compress(&u);
+                let mut seen = std::collections::HashSet::new();
+                for (&i, &v) in s.indices.iter().zip(&s.values) {
+                    if i as usize >= d {
+                        return Err(format!("{}: index {i} out of range", op.name()));
+                    }
+                    if !seen.insert(i) {
+                        return Err(format!("{}: duplicate index {i}", op.name()));
+                    }
+                    if u[i as usize].to_bits() != v.to_bits() {
+                        return Err(format!(
+                            "{}: value changed at {i}: {} -> {v}",
+                            op.name(),
+                            u[i as usize]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Invariant: residual + compressed == u exactly (error-feedback
+    /// decomposition, Eq. 2 of the paper).
+    #[test]
+    fn prop_exact_decomposition() {
+        testkit::forall("exact-decomposition", |g: &mut Gen| {
+            let d = g.usize_in(16, 2048);
+            let k = g.usize_in(1, d / 2 + 1);
+            let mu = g.f32_in(-1.0, 1.0);
+            let sigma = g.f32_in(0.01, 2.0);
+            let u = g.gaussian_vec(d, mu, sigma);
+            for op in ops_under_test(k).iter_mut() {
+                let s = op.compress(&u);
+                let dense = s.to_dense();
+                let resid: Vec<f32> = u.iter().zip(&dense).map(|(a, b)| a - b).collect();
+                let recon: Vec<f32> = resid.iter().zip(&dense).map(|(a, b)| a + b).collect();
+                testkit::assert_allclose(&recon, &u, 0.0, 0.0)
+                    .map_err(|e| format!("{}: {e}", op.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Contraction property (3): ‖u − C(u)‖² ≤ ‖u‖² for every operator
+    /// (trivially true since values are kept unchanged, but guards against
+    /// sign/scale bugs).
+    #[test]
+    fn prop_contraction() {
+        testkit::forall("contraction", |g: &mut Gen| {
+            let d = g.usize_in(16, 2048);
+            let k = g.usize_in(1, d);
+            let u = g.mixed_vec(d);
+            let u_norm = crate::stats::norm2_sq(&u);
+            for op in ops_under_test(k).iter_mut() {
+                let s = op.compress(&u);
+                let dense = s.to_dense();
+                let resid: Vec<f32> = u.iter().zip(&dense).map(|(a, b)| a - b).collect();
+                let r = crate::stats::norm2_sq(&resid);
+                if r > u_norm * (1.0 + 1e-5) + 1e-12 {
+                    return Err(format!("{}: residual {r} > ‖u‖² {u_norm}", op.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

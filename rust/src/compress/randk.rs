@@ -1,0 +1,130 @@
+//! `Rand_k`: uniformly random k-subset selection (the baseline whose
+//! contraction bound E‖u − Rand_k(u)‖² = (1 − k/d)‖u‖² is *exact* — Eq. 4
+//! of the paper — and which converges far slower than Top_k in practice,
+//! Fig. 1).
+
+use super::Compressor;
+use crate::stats::rng::Pcg64;
+use crate::tensor::SparseVec;
+
+/// Uniform random-k selection with a deterministic per-instance stream.
+pub struct RandK {
+    k: usize,
+    rng: Pcg64,
+}
+
+impl RandK {
+    pub fn new(k: usize, seed: u64) -> RandK {
+        assert!(k > 0, "RandK requires k >= 1");
+        RandK {
+            k,
+            rng: Pcg64::seed(seed ^ 0x52414e44), // "RAND"
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&mut self, u: &[f32]) -> SparseVec {
+        let d = u.len();
+        let k = self.k.min(d);
+        let mut idx = self.rng.sample_indices(d, k);
+        idx.sort_unstable();
+        SparseVec {
+            d,
+            values: idx.iter().map(|&i| u[i]).collect(),
+            indices: idx.into_iter().map(|i| i as u32).collect(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+
+    fn target_k(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    #[test]
+    fn exact_k_distinct() {
+        let u: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut op = RandK::new(10, 1);
+        let s = op.compress(&u);
+        assert_eq!(s.nnz(), 10);
+        assert!(s.indices.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let u: Vec<f32> = (0..50).map(|i| (i as f32).sin()).collect();
+        let a = RandK::new(5, 42).compress(&u);
+        let b = RandK::new(5, 42).compress(&u);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_calls_differ() {
+        let u: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut op = RandK::new(10, 3);
+        let a = op.compress(&u);
+        let b = op.compress(&u);
+        assert_ne!(a.indices, b.indices, "consecutive draws should differ");
+    }
+
+    /// Eq. 4: E‖u − Rand_k(u)‖² = (1 − k/d)‖u‖² — check the empirical mean
+    /// over many draws is close to the exact expectation.
+    #[test]
+    fn expectation_matches_exact_bound() {
+        let mut rng = Pcg64::seed(9);
+        let d = 2000;
+        let k = 200;
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let u_norm = crate::stats::norm2_sq(&u);
+        let mut op = RandK::new(k, 5);
+        let trials = 300;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let s = op.compress(&u);
+            acc += u_norm - s.norm2_sq(); // residual energy
+        }
+        let mean_ratio = acc / trials as f64 / u_norm;
+        let expect = 1.0 - k as f64 / d as f64;
+        assert!(
+            (mean_ratio - expect).abs() < 0.02,
+            "mean ratio {mean_ratio} vs exact {expect}"
+        );
+    }
+
+    /// Uniformity: every coordinate is selected with probability ≈ k/d.
+    #[test]
+    fn prop_uniform_coverage() {
+        testkit::forall("randk-uniform", |g: &mut Gen| {
+            let d = g.usize_in(50, 200);
+            let k = g.usize_in(1, d / 2);
+            let u = vec![1.0f32; d];
+            let mut op = RandK::new(k, g.rng.next_u64());
+            let trials = 400;
+            let mut hits = vec![0usize; d];
+            for _ in 0..trials {
+                for &i in &op.compress(&u).indices {
+                    hits[i as usize] += 1;
+                }
+            }
+            let expect = trials as f64 * k as f64 / d as f64;
+            // 6-sigma binomial bound.
+            let sigma = (expect * (1.0 - k as f64 / d as f64)).sqrt();
+            for (i, &h) in hits.iter().enumerate() {
+                if (h as f64 - expect).abs() > 6.0 * sigma + 1.0 {
+                    return Err(format!("coord {i}: {h} hits, expect {expect:.1}±{sigma:.1}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,176 @@
+//! `Trimmed_k`: RedSync's trimmed top-k selection (Fang et al. 2019).
+//!
+//! Heuristic threshold search "moving the ratio between the maximum value
+//! and the average value" (paper §3.3): the threshold is
+//! `mean + ratio·(max − mean)` and the ratio is walked *down* from 1 in
+//! coarse halving steps until at least k elements pass. Because the steps
+//! are coarse and gradient tails are heavy, the accepted threshold often
+//! admits far more than k elements — the paper's stated failure mode
+//! ("the number of selected gradients is much higher than k"), which the
+//! Table 2 simulation models as ~10× communication inflation and which
+//! the `over_selection_on_heavy_tails` test reproduces on Laplace
+//! gradients.
+
+use super::{count_above, select_above, Compressor};
+use crate::tensor::SparseVec;
+
+/// RedSync-style trimmed threshold search.
+pub struct TrimmedK {
+    k: usize,
+    /// Max number of ratio-halving iterations.
+    pub max_iters: usize,
+}
+
+impl TrimmedK {
+    pub fn new(k: usize) -> TrimmedK {
+        assert!(k > 0, "TrimmedK requires k >= 1");
+        TrimmedK { k, max_iters: 24 }
+    }
+
+    /// The accepted threshold (exposed for diagnostics/benches).
+    pub fn search_threshold(&self, u: &[f32]) -> f32 {
+        let d = u.len();
+        // mean and max of |u| in one pass.
+        let (mut sum, mut maxv) = (0.0f64, 0.0f32);
+        for &v in u {
+            let a = v.abs();
+            sum += a as f64;
+            if a > maxv {
+                maxv = a;
+            }
+        }
+        let mean = (sum / d.max(1) as f64) as f32;
+        if maxv <= 0.0 {
+            return f32::INFINITY; // all-zero input: nothing to select
+        }
+        // Walk ratio down from 1 by halving until ≥ k elements pass.
+        let mut ratio = 1.0f32;
+        let mut thres = maxv;
+        for _ in 0..self.max_iters {
+            ratio *= 0.5;
+            let cand = mean + ratio * (maxv - mean);
+            let c = count_above(u, cand);
+            thres = cand;
+            if c >= self.k {
+                break; // coarse accept — this is where over-selection is born
+            }
+        }
+        thres
+    }
+}
+
+impl Compressor for TrimmedK {
+    fn compress(&mut self, u: &[f32]) -> SparseVec {
+        let d = u.len();
+        let k = self.k.min(d);
+        if k == d {
+            return super::Dense.compress(u);
+        }
+        let thres = self.search_threshold(u);
+        if !thres.is_finite() {
+            return SparseVec::new(d);
+        }
+        let out = select_above(u, thres);
+        if out.nnz() == 0 {
+            // Degenerate tie at max (e.g. constant vector): keep the max
+            // element(s).
+            let maxv = u.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let mut s = SparseVec::new(d);
+            for (i, &v) in u.iter().enumerate() {
+                if v.abs() >= maxv {
+                    s.indices.push(i as u32);
+                    s.values.push(v);
+                }
+            }
+            return s;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "trimmed"
+    }
+
+    fn target_k(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    #[test]
+    fn selects_some_top_mass() {
+        let mut rng = Pcg64::seed(30);
+        let u: Vec<f32> = (0..100_000).map(|_| rng.next_gaussian() as f32).collect();
+        let k = 100;
+        let mut op = TrimmedK::new(k);
+        let s = op.compress(&u);
+        assert!(s.nnz() >= k, "must select at least k on a smooth vector");
+        // Captured energy per element must beat random selection.
+        let frac = s.norm2_sq() / crate::stats::norm2_sq(&u);
+        assert!(frac > s.nnz() as f64 / u.len() as f64, "no better than random");
+    }
+
+    #[test]
+    fn over_selection_on_heavy_tails() {
+        // Laplace gradients (LSTM-like, paper Fig. 2 bottom rows): the
+        // coarse ratio-halving overshoots and selects ≫ k — the paper's
+        // stated failure mode for RedSync.
+        let mut rng = Pcg64::seed(31);
+        let u: Vec<f32> = (0..200_000).map(|_| rng.next_laplace(0.0, 1.0) as f32).collect();
+        let k = 500;
+        let s = TrimmedK::new(k).compress(&u);
+        assert!(
+            s.nnz() > 2 * k,
+            "expected over-selection, got nnz={} (k={k})",
+            s.nnz()
+        );
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let u = vec![0.0f32; 1000];
+        let s = TrimmedK::new(10).compress(&u);
+        assert_eq!(s.nnz(), 0);
+    }
+
+    #[test]
+    fn constant_input_degenerate() {
+        let u = vec![2.0f32; 100];
+        let s = TrimmedK::new(5).compress(&u);
+        // mean == max: the fallback keeps the ties.
+        assert!(s.nnz() > 0);
+        assert!(s.values.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn prop_valid_selection() {
+        testkit::forall("trimmed-valid", |g: &mut Gen| {
+            let d = g.usize_in(64, 8192);
+            let k = g.usize_in(1, d / 8 + 1);
+            let u = g.mixed_vec(d);
+            let s = TrimmedK::new(k).compress(&u);
+            if s.indices.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("indices not sorted-unique".into());
+            }
+            // Never loses the single biggest element when something was
+            // selected and the vector is non-zero.
+            if s.nnz() > 0 {
+                let amax = u
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap()
+                    .0 as u32;
+                if u[amax as usize].abs() > 0.0 && !s.indices.contains(&amax) {
+                    return Err("dropped the max-magnitude element".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: the distributed synchronous TopK-SGD training engine —
+//! Eq. (1)/(2) of the paper with pluggable sparsification operators.
+//!
+//! * [`optimizer`] — SGD + momentum + LR schedules.
+//! * [`worker`] — per-worker state (data shard RNG, residual store,
+//!   compressor instance).
+//! * [`trainer`] — the synchronous step loop: every worker computes its
+//!   stochastic gradient, error-feedback-compresses it, the cluster
+//!   aggregates (sparse all-gather or dense ring all-reduce), and the
+//!   shared optimizer applies the averaged update.
+//!
+//! Workers are simulated in-process with fully independent state and
+//! *real* numerics: the aggregated update is bit-identical to what P
+//! processes exchanging the same messages would compute (collectives are
+//! tested against sequential sums). Virtual timing for throughput studies
+//! comes from [`crate::netsim`]; wall-clock timing of the L3 hot path is
+//! recorded per step.
+
+pub mod optimizer;
+pub mod trainer;
+pub mod worker;
+
+pub use optimizer::{LrSchedule, SgdMomentum};
+pub use trainer::{train, TrainOutput, Trainer};
+pub use worker::WorkerState;

@@ -1,0 +1,126 @@
+//! SGD with momentum + learning-rate schedules — the optimizer of every
+//! experiment in the paper (Table 1: "all models are trained by SGD with
+//! a 0.9 momentum", initial LR decayed during training).
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    Constant,
+    /// Cosine decay from lr to lr·final_frac over total_steps.
+    Cosine { final_frac: f32 },
+    /// Step decay: multiply by `gamma` every `every` steps (the paper's
+    /// CIFAR schedule style).
+    Step { every: usize, gamma: f32 },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, base: f32, step: usize, total_steps: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant => base,
+            LrSchedule::Cosine { final_frac } => {
+                let t = step as f32 / total_steps.max(1) as f32;
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+                base * (final_frac + (1.0 - final_frac) * cos)
+            }
+            LrSchedule::Step { every, gamma } => {
+                base * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+/// Heavy-ball SGD over a flat parameter vector:
+/// `v ← m·v + g; x ← x − lr·v`.
+#[derive(Debug, Clone)]
+pub struct SgdMomentum {
+    pub base_lr: f32,
+    pub momentum: f32,
+    pub schedule: LrSchedule,
+    velocity: Vec<f32>,
+}
+
+impl SgdMomentum {
+    pub fn new(d: usize, base_lr: f32, momentum: f32, schedule: LrSchedule) -> SgdMomentum {
+        SgdMomentum {
+            base_lr,
+            momentum,
+            schedule,
+            velocity: vec![0.0; d],
+        }
+    }
+
+    pub fn lr_at(&self, step: usize, total: usize) -> f32 {
+        self.schedule.lr_at(self.base_lr, step, total)
+    }
+
+    /// Apply one update with the aggregated gradient.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32], step: usize, total: usize) {
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(params.len(), self.velocity.len());
+        let lr = self.lr_at(step, total);
+        if self.momentum == 0.0 {
+            for (p, &g) in params.iter_mut().zip(grad) {
+                *p -= lr * g;
+            }
+            return;
+        }
+        for ((p, v), &g) in params.iter_mut().zip(&mut self.velocity).zip(grad) {
+            *v = self.momentum * *v + g;
+            *p -= lr * *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_update() {
+        let mut opt = SgdMomentum::new(2, 0.1, 0.0, LrSchedule::Constant);
+        let mut p = vec![1.0f32, -1.0];
+        opt.step(&mut p, &[1.0, 2.0], 0, 10);
+        assert_eq!(p, vec![0.9, -1.2]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdMomentum::new(1, 0.1, 0.9, LrSchedule::Constant);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 0, 10); // v=1, p=-0.1
+        opt.step(&mut p, &[1.0], 1, 10); // v=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let s = LrSchedule::Cosine { final_frac: 0.1 };
+        assert!((s.lr_at(1.0, 0, 100) - 1.0).abs() < 1e-6);
+        assert!((s.lr_at(1.0, 100, 100) - 0.1).abs() < 1e-6);
+        let mid = s.lr_at(1.0, 50, 100);
+        assert!(mid > 0.1 && mid < 1.0);
+    }
+
+    #[test]
+    fn step_schedule_decays() {
+        let s = LrSchedule::Step {
+            every: 10,
+            gamma: 0.5,
+        };
+        assert_eq!(s.lr_at(1.0, 0, 100), 1.0);
+        assert_eq!(s.lr_at(1.0, 10, 100), 0.5);
+        assert_eq!(s.lr_at(1.0, 25, 100), 0.25);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        // min ½x²: gradient = x. Heavy ball should converge.
+        let mut opt = SgdMomentum::new(1, 0.1, 0.9, LrSchedule::Constant);
+        let mut p = vec![10.0f32];
+        for s in 0..200 {
+            let g = vec![p[0]];
+            opt.step(&mut p, &g, s, 200);
+        }
+        assert!(p[0].abs() < 0.1, "{}", p[0]);
+    }
+}

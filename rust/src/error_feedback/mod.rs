@@ -1,0 +1,177 @@
+//! Error feedback (residual accumulation) — Eq. (2) of the paper:
+//!
+//! ```text
+//! u_t   = g_t + ε_t                      (accumulate)
+//! out   = Comp_k(u_t)                    (sparsify)
+//! ε_t+1 = u_t − Comp_k(u_t)              (store the un-sent mass)
+//! ```
+//!
+//! The store owns one residual vector per worker; the accumulate+update is
+//! fused so the hot path makes exactly one pass to build `u` and one
+//! scatter pass to zero the sent coordinates (the L3 twin of the fused
+//! Pallas `ef_update` kernel).
+
+use crate::tensor::SparseVec;
+
+/// Per-worker residual state for error-compensated compression.
+#[derive(Debug, Clone)]
+pub struct ResidualStore {
+    /// ε for this worker, full model dimension.
+    residual: Vec<f32>,
+    /// Scratch for u = g + ε (reused across steps — no per-step alloc).
+    u: Vec<f32>,
+    /// Total compensated mass ‖ε‖² history length cap.
+    pub track_norm: bool,
+    /// ‖ε_t‖² per step if `track_norm` (staleness diagnostics, §4.4).
+    pub norm_history: Vec<f64>,
+}
+
+impl ResidualStore {
+    pub fn new(d: usize) -> ResidualStore {
+        ResidualStore {
+            residual: vec![0.0; d],
+            u: vec![0.0; d],
+            track_norm: false,
+            norm_history: Vec::new(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.residual.len()
+    }
+
+    /// Current residual (ε_t).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Step 1: u = g + ε (returns a borrow of the internal scratch).
+    pub fn accumulate(&mut self, g: &[f32]) -> &[f32] {
+        assert_eq!(g.len(), self.residual.len(), "gradient dim mismatch");
+        for ((u, &g), &e) in self.u.iter_mut().zip(g).zip(&self.residual) {
+            *u = g + e;
+        }
+        &self.u
+    }
+
+    /// Step 2 after compressing `u`: ε ← u with the sent coordinates
+    /// zeroed. `sent` must be the output of `Comp_k` on the *same* `u`.
+    pub fn update(&mut self, sent: &SparseVec) {
+        debug_assert_eq!(sent.d, self.residual.len());
+        // ε ← u, then zero the sent coordinates: O(d) copy + O(k) scatter.
+        self.residual.copy_from_slice(&self.u);
+        for &i in &sent.indices {
+            self.residual[i as usize] = 0.0;
+        }
+        if self.track_norm {
+            self.norm_history.push(crate::stats::norm2_sq(&self.residual));
+        }
+    }
+
+    /// Convenience: run a full accumulate → compress → update cycle.
+    pub fn step(
+        &mut self,
+        g: &[f32],
+        comp: &mut dyn crate::compress::Compressor,
+    ) -> SparseVec {
+        self.accumulate(g);
+        let sent = comp.compress(&self.u);
+        self.update(&sent);
+        sent
+    }
+
+    /// Add back a value that was sent but globally dropped (gTop-k's
+    /// residual-restore path — keeps Σ sent + ε == Σ g exact).
+    pub fn restore(&mut self, index: usize, value: f32) {
+        self.residual[index] += value;
+    }
+
+    /// Reset ε to zero (e.g. between epochs in ablations).
+    pub fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|e| *e = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::TopK;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    #[test]
+    fn first_step_residual_is_unsent_mass() {
+        let g = vec![3.0f32, -1.0, 0.5, -4.0];
+        let mut store = ResidualStore::new(4);
+        let sent = store.step(&g, &mut TopK::new(2));
+        assert_eq!(sent.indices, vec![0, 3]);
+        assert_eq!(store.residual(), &[0.0, -1.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn residual_carries_to_next_step() {
+        // A small coordinate must eventually be sent once ε accumulates.
+        let mut store = ResidualStore::new(3);
+        let mut comp = TopK::new(1);
+        let g = vec![1.0f32, 0.6, 0.0];
+        let s1 = store.step(&g, &mut comp);
+        assert_eq!(s1.indices, vec![0]); // 1.0 wins
+        let s2 = store.step(&g, &mut comp);
+        // u = [1.0, 1.2, 0.0] now: accumulated 0.6+0.6 beats fresh 1.0.
+        assert_eq!(s2.indices, vec![1]);
+        assert!((s2.values[0] - 1.2).abs() < 1e-6);
+    }
+
+    /// Mass conservation: across T steps, Σ sent + ε_T == Σ g (exactly,
+    /// coordinate-wise) — Eq. 2 telescoped.
+    #[test]
+    fn prop_mass_conservation() {
+        testkit::forall("ef-mass-conservation", |g: &mut Gen| {
+            let d = g.usize_in(8, 512);
+            let k = g.usize_in(1, d);
+            let steps = g.usize_in(1, 12);
+            let mut store = ResidualStore::new(d);
+            let mut comp = TopK::new(k);
+            let mut total_g = vec![0.0f64; d];
+            let mut total_sent = vec![0.0f64; d];
+            let mut rng = Pcg64::seed(g.rng.next_u64());
+            for _ in 0..steps {
+                let grad: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                for (t, &x) in total_g.iter_mut().zip(&grad) {
+                    *t += x as f64;
+                }
+                let sent = store.step(&grad, &mut comp);
+                for (&i, &v) in sent.indices.iter().zip(&sent.values) {
+                    total_sent[i as usize] += v as f64;
+                }
+            }
+            for i in 0..d {
+                let lhs = total_sent[i] + store.residual()[i] as f64;
+                // f32 accumulation error bound across ≤12 steps
+                if (lhs - total_g[i]).abs() > 1e-3 {
+                    return Err(format!(
+                        "coord {i}: sent+resid {lhs} != Σg {}",
+                        total_g[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn norm_tracking() {
+        let mut store = ResidualStore::new(4);
+        store.track_norm = true;
+        store.step(&[1.0, 2.0, 3.0, 4.0], &mut TopK::new(2));
+        assert_eq!(store.norm_history.len(), 1);
+        assert!((store.norm_history[0] - 5.0).abs() < 1e-6); // 1² + 2²
+    }
+
+    #[test]
+    #[should_panic(expected = "dim mismatch")]
+    fn dim_mismatch_panics() {
+        let mut store = ResidualStore::new(4);
+        store.accumulate(&[1.0; 3]);
+    }
+}

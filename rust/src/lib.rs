@@ -1,0 +1,57 @@
+//! # sparkv — Top-K Sparsification for Distributed Deep Learning
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *"Understanding
+//! Top-K Sparsification in Distributed Deep Learning"* (Shi, Chu, Cheung,
+//! See — 2019): the GaussianK-SGD system.
+//!
+//! Layers:
+//! * **L3 (this crate)** — the distributed synchronous-SGD coordinator:
+//!   sparsification operators ([`compress`]), error-feedback state
+//!   ([`error_feedback`]), in-process collectives ([`collectives`]), a
+//!   discrete-event cluster/network simulator ([`netsim`], [`cluster`]),
+//!   the training engine ([`coordinator`]), and the analysis toolkit that
+//!   regenerates every figure/table of the paper ([`analysis`]).
+//! * **L2 (JAX, build-time)** — model fwd/bwd graphs lowered to HLO text in
+//!   `artifacts/`, loaded at runtime through [`runtime`] (PJRT CPU client).
+//! * **L1 (Pallas, build-time)** — the Gaussian-k compression hot-spot as a
+//!   Pallas kernel, lowered inside the L2 graphs.
+//!
+//! Python never runs on the training path: `make artifacts` runs once, and
+//! the `sparkv` binary is self-contained afterwards.
+//!
+//! ## Quick tour
+//!
+//! (`no_run`: rustdoc test binaries don't inherit the xla rpath; the same
+//! flow executes in `examples/quickstart.rs` and the unit tests.)
+//!
+//! ```no_run
+//! use sparkv::compress::{Compressor, GaussianK, TopK};
+//! use sparkv::stats::rng::Pcg64;
+//!
+//! let mut rng = Pcg64::seed(42);
+//! let u: Vec<f32> = (0..10_000).map(|_| rng.next_gaussian() as f32).collect();
+//! let k = 10; // 0.001 * d
+//! let exact = TopK::new(k).compress(&u);
+//! let approx = GaussianK::new(k).compress(&u);
+//! assert_eq!(exact.values.len(), k);
+//! assert!(!approx.values.is_empty());
+//! ```
+
+pub mod analysis;
+pub mod cluster;
+pub mod collectives;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error_feedback;
+pub mod metrics;
+pub mod models;
+pub mod netsim;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,194 @@
+//! `sparkv` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `train`     — run a distributed (simulated-P-worker) training job with
+//!   any operator; native or PJRT backend.
+//! * `simulate`  — Table 2 cluster simulation (iteration time + scaling
+//!   efficiency for every model × operator).
+//! * `bench-op`  — operator selection-speed sweep (Fig. 4 shape on CPU).
+//! * `analyze`   — Theorem 1 bound sweep (Fig. 5) and π² premise check
+//!   (Fig. 3) on Gaussian vectors.
+//!
+//! See `examples/` for the figure-for-figure reproduction drivers.
+
+use sparkv::analysis::{bound_sweep, pi_curve};
+use sparkv::cluster::scaling_table;
+use sparkv::compress::{Compressor, OpKind};
+use sparkv::config::{RawConfig, TrainConfig};
+use sparkv::coordinator::train;
+use sparkv::data::GaussianMixture;
+use sparkv::models::NativeMlp;
+use sparkv::netsim::{ComputeProfile, Topology};
+use sparkv::runtime::PjrtModel;
+use sparkv::stats::rng::Pcg64;
+use sparkv::util::benchkit::Bench;
+use sparkv::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(true);
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("bench-op") => cmd_bench_op(&args),
+        Some("analyze") => cmd_analyze(&args),
+        _ => {
+            println!(
+                "sparkv — Top-K sparsification for distributed deep learning\n\n\
+                 USAGE: sparkv <train|simulate|bench-op|analyze> [OPTIONS]\n\n\
+                 train     --op <dense|topk|randk|dgc|trimmed|gaussiank> --workers N --steps N\n\
+                 \x20         [--config file.toml] [--set train.key=value] [--backend native|pjrt --model <name>]\n\
+                 simulate  [--k-ratio 0.001] [--nodes 4 --gpus 4]\n\
+                 bench-op  [--dims 1000000,4000000,16000000] [--k-ratio 0.001]\n\
+                 analyze   [--d 100000] [--ks 100,1000,10000]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut raw = match args.get("config") {
+        Some(path) => RawConfig::load(path)?,
+        None => RawConfig::default(),
+    };
+    // CLI conveniences map onto [train] keys.
+    for key in ["workers", "steps", "k_ratio", "lr", "op", "batch_size", "seed"] {
+        if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
+            raw.set(&format!("train.{key}={v}"))?;
+        }
+    }
+    if let Some(setting) = args.get("set") {
+        raw.set(setting)?;
+    }
+    let cfg = TrainConfig::from_raw(&raw)?;
+    println!(
+        "train: op={} workers={} steps={} k_ratio={} lr={}",
+        cfg.op.name(),
+        cfg.workers,
+        cfg.steps,
+        cfg.k_ratio,
+        cfg.lr
+    );
+
+    let backend = args.get_or("backend", "native");
+    let out = match backend.as_str() {
+        "pjrt" => {
+            let model_name = args.get_or("model", "mlp");
+            let dir = args.get_or("artifacts", "artifacts");
+            let mut model = PjrtModel::load(&dir, &model_name)?;
+            println!("backend: pjrt ({}), model {model_name} d={}", model.platform(), model.entry.d);
+            let batch = model.entry.batch;
+            let mut cfg = cfg;
+            cfg.batch_size = batch;
+            let data = GaussianMixture::new(model.entry.features, model.entry.classes, 2.5, 1.0, cfg.seed);
+            train(cfg, &mut model, &data)?
+        }
+        _ => {
+            let features = args.get_parsed_or("features", 64usize);
+            let classes = args.get_parsed_or("classes", 10usize);
+            let hidden = args.get_parsed_or("hidden", 128usize);
+            let mut model = NativeMlp::new(&[features, hidden, hidden, classes]);
+            let data = GaussianMixture::new(features, classes, 2.5, 1.0, cfg.seed);
+            println!("backend: native mlp d={}", sparkv::models::Model::layout(&model).total());
+            train(cfg, &mut model, &data)?
+        }
+    };
+
+    for (step, loss) in out.metrics.smoothed_loss(out.metrics.steps.len() / 10 + 1) {
+        println!("  step {step:>6}  loss {loss:.4}");
+    }
+    for e in &out.metrics.evals {
+        println!("  eval step {:>6}  acc {:.4}  loss {:.4}", e.step, e.accuracy, e.loss);
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, out.metrics.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let k_ratio = args.get_parsed_or("k-ratio", 0.001f64);
+    let nodes = args.get_parsed_or("nodes", 4usize);
+    let gpus = args.get_parsed_or("gpus", 4usize);
+    let topo = Topology::new(
+        nodes,
+        gpus,
+        sparkv::netsim::LinkSpec::pcie3_x16(),
+        sparkv::netsim::LinkSpec::ethernet_10g(),
+    );
+    let ops = [
+        OpKind::Dense,
+        OpKind::TopK,
+        OpKind::Dgc,
+        OpKind::Trimmed,
+        OpKind::GaussianK,
+    ];
+    let table = scaling_table(&ComputeProfile::paper_models(), &ops, &topo, k_ratio);
+    println!(
+        "Table 2 reproduction — {} GPUs ({} nodes × {}), k = {k_ratio}·d\n",
+        topo.world_size(),
+        nodes,
+        gpus
+    );
+    println!("{}", table.render());
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, table.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_op(args: &Args) -> anyhow::Result<()> {
+    let dims = args.get_list("dims", &["1000000", "4000000", "16000000"]);
+    let k_ratio = args.get_parsed_or("k-ratio", 0.001f64);
+    let mut bench = Bench::from_env(0.5);
+    for dim_s in &dims {
+        let d: usize = dim_s.parse().map_err(|_| anyhow::anyhow!("bad dim {dim_s}"))?;
+        let k = ((d as f64 * k_ratio) as usize).max(1);
+        let mut rng = Pcg64::seed(7);
+        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        for op in [OpKind::TopK, OpKind::Dgc, OpKind::GaussianK] {
+            let mut c = op.build(k, 3);
+            bench.run(&format!("{}/d={d}", op.name()), || {
+                std::hint::black_box(c.compress(&u));
+            });
+        }
+    }
+    println!("{}", bench.report());
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let d = args.get_parsed_or("d", 100_000usize);
+    let ks = args.get_list("ks", &["100", "1000", "5000", "10000", "25000", "50000"]);
+    let mut rng = Pcg64::seed(1);
+    let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+    let ks: Vec<usize> = ks.iter().map(|s| s.parse().unwrap_or(0)).collect();
+    println!("Theorem 1 bound sweep on N(0,1) vector, d = {d}:");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12}",
+        "k", "exact", "(1-k/d)^2", "1-k/d"
+    );
+    for p in bound_sweep(&u, &ks) {
+        println!(
+            "{:>8} {:>12.6} {:>12.6} {:>12.6}",
+            p.k, p.exact, p.ours, p.classical
+        );
+    }
+    let pi2 = pi_curve::pi_squared(&u);
+    let check = pi_curve::PiCurveCheck::evaluate(&pi2, (d / 1000).max(1));
+    println!(
+        "\nπ² premise (Fig. 3): convexity violations {:.2}%, above-line {:.2}%, premise {}",
+        check.convexity_violation_frac * 100.0,
+        check.above_line_frac * 100.0,
+        if check.premise_holds() { "HOLDS" } else { "FAILS" }
+    );
+
+    // Sanity: GaussianK on this vector lands near k.
+    let k = ks.first().copied().unwrap_or(d / 1000).max(1);
+    let mut gk = sparkv::compress::GaussianK::new(k);
+    let s = gk.compress(&u);
+    println!("Gaussian_k(k={k}) selected {} elements", s.nnz());
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Metrics pipeline: per-step training records, communicated-element
+//! counters (Fig. 10's under/over-sparsification study), and CSV/JSON
+//! emitters for the experiment harnesses.
+
+use std::io::Write;
+
+use crate::stats::Welford;
+use crate::util::json::Json;
+
+/// One training-step record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    /// Elements actually communicated this step (summed over workers).
+    pub sent_elements: u64,
+    /// Configured k summed over workers (target volume).
+    pub target_elements: u64,
+    /// Wall-clock seconds for the step (L3 hot path).
+    pub wall_s: f64,
+}
+
+/// Periodic evaluation record.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub accuracy: f64,
+    pub loss: f64,
+}
+
+/// Collected metrics for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub name: String,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub step_time: Welford,
+}
+
+impl RunMetrics {
+    pub fn new(name: &str) -> RunMetrics {
+        RunMetrics {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_step(&mut self, rec: StepRecord) {
+        self.step_time.push(rec.wall_s);
+        self.steps.push(rec);
+    }
+
+    pub fn record_eval(&mut self, rec: EvalRecord) {
+        self.evals.push(rec);
+    }
+
+    /// Cumulative communicated elements after each step (Fig. 10 series).
+    pub fn cumulative_sent(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.steps
+            .iter()
+            .map(|s| {
+                acc += s.sent_elements;
+                acc
+            })
+            .collect()
+    }
+
+    /// Cumulative target (exact-k) volume — Fig. 10's reference line.
+    pub fn cumulative_target(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.steps
+            .iter()
+            .map(|s| {
+                acc += s.target_elements;
+                acc
+            })
+            .collect()
+    }
+
+    /// Final (or best) eval accuracy.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.evals.iter().map(|e| e.accuracy).fold(None, |m, a| {
+            Some(m.map_or(a, |m: f64| m.max(a)))
+        })
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.steps.last().map(|s| s.loss)
+    }
+
+    /// Smoothed loss series (window mean) for plotting.
+    pub fn smoothed_loss(&self, window: usize) -> Vec<(usize, f64)> {
+        let w = window.max(1);
+        self.steps
+            .chunks(w)
+            .map(|c| {
+                let step = c.last().unwrap().step;
+                let mean = c.iter().map(|s| s.loss).sum::<f64>() / c.len() as f64;
+                (step, mean)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::from(self.name.as_str()))
+            .set(
+                "loss",
+                Json::Arr(self.steps.iter().map(|s| Json::from(s.loss)).collect()),
+            )
+            .set(
+                "sent_elements",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| Json::from(s.sent_elements as f64))
+                        .collect(),
+                ),
+            )
+            .set(
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            let mut eo = Json::obj();
+                            eo.set("step", Json::from(e.step))
+                                .set("accuracy", Json::from(e.accuracy))
+                                .set("loss", Json::from(e.loss));
+                            eo
+                        })
+                        .collect(),
+                ),
+            )
+            .set("mean_step_s", Json::from(self.step_time.mean()));
+        o
+    }
+
+    /// Write step records as CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,sent_elements,target_elements,wall_s")?;
+        for s in &self.steps {
+            writeln!(
+                f,
+                "{},{},{},{},{}",
+                s.step, s.loss, s.sent_elements, s.target_elements, s.wall_s
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64, sent: u64) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            sent_elements: sent,
+            target_elements: 10,
+            wall_s: 0.01,
+        }
+    }
+
+    #[test]
+    fn cumulative_series() {
+        let mut m = RunMetrics::new("t");
+        m.record_step(rec(0, 1.0, 12));
+        m.record_step(rec(1, 0.9, 8));
+        m.record_step(rec(2, 0.8, 10));
+        assert_eq!(m.cumulative_sent(), vec![12, 20, 30]);
+        assert_eq!(m.cumulative_target(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn best_accuracy_and_smoothing() {
+        let mut m = RunMetrics::new("t");
+        for i in 0..10 {
+            m.record_step(rec(i, 1.0 - i as f64 * 0.05, 10));
+        }
+        m.record_eval(EvalRecord {
+            step: 5,
+            accuracy: 0.7,
+            loss: 0.8,
+        });
+        m.record_eval(EvalRecord {
+            step: 9,
+            accuracy: 0.9,
+            loss: 0.6,
+        });
+        assert_eq!(m.best_accuracy(), Some(0.9));
+        let sm = m.smoothed_loss(5);
+        assert_eq!(sm.len(), 2);
+        assert!(sm[0].1 > sm[1].1);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut m = RunMetrics::new("t");
+        m.record_step(rec(0, 0.5, 3));
+        let dir = std::env::temp_dir().join("sparkv_metrics_test");
+        let path = dir.join("run.csv");
+        m.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss"));
+        assert!(text.contains("0,0.5,3,10,0.01"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn json_has_series() {
+        let mut m = RunMetrics::new("run");
+        m.record_step(rec(0, 1.0, 5));
+        let j = m.to_json();
+        assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("name").unwrap().as_str(), Some("run"));
+    }
+}

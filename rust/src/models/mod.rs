@@ -1,0 +1,50 @@
+//! Model abstraction for the trainer plus a pure-Rust reference MLP.
+//!
+//! The production path is [`crate::runtime::PjrtModel`] (AOT-compiled JAX
+//! graphs, Python never at runtime). The native MLP here serves three
+//! roles: (1) trainer/collective tests that must run without artifacts,
+//! (2) a numerics cross-check against the JAX model (same architecture,
+//! same init), and (3) the fast path for the 16-worker convergence
+//! studies where a tiny model per step makes hundreds of runs cheap.
+
+pub mod mlp;
+
+pub use mlp::NativeMlp;
+
+use crate::tensor::Layout;
+
+/// A trainable model: owns nothing; parameters are a flat f32 vector the
+/// coordinator manages (so compression operates on the same flat layout
+/// the AOT artifacts use). Not `Send`: the PJRT backend wraps raw client
+/// handles; the coordinator is single-threaded by design (DESIGN.md §4).
+pub trait Model {
+    /// Parameter layout (names + sizes). `layout().total()` == d.
+    fn layout(&self) -> &Layout;
+
+    /// Deterministic parameter init into a fresh vector.
+    fn init(&self, seed: u64) -> Vec<f32>;
+
+    /// Forward + backward on one batch: returns the mean loss and writes
+    /// the flat gradient into `grad_out` (len d).
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+        n: usize,
+        grad_out: &mut [f32],
+    ) -> f64;
+
+    /// Classification accuracy on a batch.
+    fn accuracy(&mut self, params: &[f32], x: &[f32], y: &[u32], n: usize) -> f64;
+
+    /// Evaluation (loss, accuracy) on a batch. Default: a gradient-free
+    /// loss via `train_step` into scratch + `accuracy`. Backends with
+    /// static batch shapes (PJRT) override with a chunked eval executable.
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[u32], n: usize) -> (f64, f64) {
+        let mut scratch = vec![0.0f32; self.layout().total()];
+        let loss = self.train_step(params, x, y, n, &mut scratch);
+        let acc = self.accuracy(params, x, y, n);
+        (loss, acc)
+    }
+}

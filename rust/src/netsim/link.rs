@@ -1,0 +1,83 @@
+//! α–β link models: a point-to-point link is (latency α seconds,
+//! bandwidth B bytes/second, efficiency η). Transferring m bytes costs
+//! α + m / (η·B). Constants below match common measured values for the
+//! paper's hardware generation (2019: 10 GbE with TCP, PCIe 3.0 x16).
+
+/// A point-to-point link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// One-way message latency in seconds (the α term).
+    pub latency_s: f64,
+    /// Peak bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// Achievable fraction of peak (protocol + framing overheads).
+    pub efficiency: f64,
+}
+
+impl LinkSpec {
+    pub const fn new(latency_s: f64, bandwidth_bps: f64, efficiency: f64) -> LinkSpec {
+        LinkSpec {
+            latency_s,
+            bandwidth_bps,
+            efficiency,
+        }
+    }
+
+    /// 10 Gbps Ethernet with TCP: ~50 µs latency, ~80% achievable.
+    pub const fn ethernet_10g() -> LinkSpec {
+        LinkSpec::new(50e-6, 1.25e9, 0.80)
+    }
+
+    /// 25 Gbps Ethernet (for scaling ablations).
+    pub const fn ethernet_25g() -> LinkSpec {
+        LinkSpec::new(30e-6, 3.125e9, 0.80)
+    }
+
+    /// 100 Gbps InfiniBand EDR (for the "fast network" ablation where
+    /// sparsification should stop paying off).
+    pub const fn infiniband_100g() -> LinkSpec {
+        LinkSpec::new(2e-6, 12.5e9, 0.90)
+    }
+
+    /// Intra-node PCIe 3.0 x16 peer transfer: ~5 µs, ~12 GB/s effective.
+    pub const fn pcie3_x16() -> LinkSpec {
+        LinkSpec::new(5e-6, 15.75e9, 0.76)
+    }
+
+    /// Effective bytes/second after efficiency derating.
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.bandwidth_bps * self.efficiency
+    }
+
+    /// Time to move `bytes` across this link once.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.effective_bandwidth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_composition() {
+        let l = LinkSpec::new(1e-3, 1e6, 1.0);
+        assert!((l.transfer_time(500_000) - 0.501).abs() < 1e-9);
+        assert!((l.transfer_time(0) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ethernet_sanity() {
+        let e = LinkSpec::ethernet_10g();
+        // 1 GiB at 10 GbE ≈ 1.07 s raw; with 80% efficiency ≈ 1.07/0.8.
+        let t = e.transfer_time(1 << 30);
+        assert!(t > 1.0 && t < 1.2, "t = {t}");
+    }
+
+    #[test]
+    fn faster_links_are_faster() {
+        let m = 100 << 20;
+        assert!(LinkSpec::infiniband_100g().transfer_time(m) < LinkSpec::ethernet_25g().transfer_time(m));
+        assert!(LinkSpec::ethernet_25g().transfer_time(m) < LinkSpec::ethernet_10g().transfer_time(m));
+    }
+}

@@ -1,0 +1,32 @@
+//! Cluster / network simulator — the substrate substituting for the
+//! paper's 16× V100, 4-node × 4-GPU, 10 GbE testbed (DESIGN.md §2).
+//!
+//! Three pieces:
+//! * [`link`] / [`topology`] — α–β link models and the hierarchical
+//!   (intra-node PCIe / inter-node Ethernet) cluster shape.
+//! * [`cost`] — analytic collective cost models (ring all-reduce, ring
+//!   all-gather) over a topology, validated against the paper's measured
+//!   communication times.
+//! * [`ops_cost`] — per-operator GPU selection-time models calibrated to
+//!   the paper's V100 measurements, and the per-model compute-time table.
+//! * [`sim`] — a discrete-event engine that replays a synchronous training
+//!   iteration (compute → select → communicate → update) per worker and
+//!   reports the timing breakdown; supports straggler jitter ablations.
+//!
+//! Table 2 is a systems-balance result — it depends on the *ratios*
+//! compute : selection : communication. Those three inputs are calibrated
+//! from the paper's own reported numbers (see [`ops_cost`] for the
+//! anchors), so the orderings and crossovers are preserved even though the
+//! substrate is a simulator.
+
+pub mod cost;
+pub mod link;
+pub mod ops_cost;
+pub mod sim;
+pub mod topology;
+
+pub use cost::{allgather_time, allreduce_time};
+pub use link::LinkSpec;
+pub use ops_cost::{ComputeProfile, OpCostModel};
+pub use sim::{IterationBreakdown, SimConfig, Simulator};
+pub use topology::Topology;

@@ -1,0 +1,164 @@
+//! Per-operator GPU selection-cost models and per-model compute profiles —
+//! the calibrated inputs of the Table 2 simulation.
+//!
+//! ## Calibration anchors (all from the paper itself)
+//!
+//! Every operator's per-iteration selection time is modelled as
+//! `t(d) = F + c·d` where `F` is the fixed sparsification-framework
+//! overhead (GPU→host sync, packing — identical across sparse operators)
+//! and `c` is the per-element cost. Solving the paper's own Table 2 rows
+//! (T16 = T1_compute + t_select(d) + T_comm) for the four models gives a
+//! strikingly consistent system:
+//!
+//! * `F ≈ 0.104 s` (from the GaussianK rows of ResNet-50 & AlexNet)
+//! * `c_topk ≈ 12 ns/elem` — cross-checked by the paper's standalone claim
+//!   (§3.3): Top_k on d = 25.5 M costs ≈ 0.4 s on a V100;
+//!   0.104 + 12e-9 · 25.5e6 = 0.41 s. ✓
+//! * `c_dgc ≈ 2.9 ns/elem` (consistent across AlexNet/VGG/ResNet rows)
+//! * `c_gaussiank ≈ 0.9 ns/elem`
+//! * `c_redsync ≈ 90 ns/elem`, plus over-selection: Trimmed_k sends ≈10×k
+//!   elements (its documented failure mode; our own Laplace-gradient
+//!   measurements in `compress::trimmed` reproduce the factor).
+//!
+//! Compute times T1 are back-derived from the table's own scaling
+//! efficiencies (eff = T1/T16 under weak scaling): AlexNet 0.080 s,
+//! VGG-16 1.121 s, ResNet-50 0.460 s (stated directly in §3.3),
+//! Inception-V4 0.690 s.
+
+use crate::compress::OpKind;
+
+/// Per-model compute profile (ImageNet, batch 128/GPU, fp32 V100).
+#[derive(Debug, Clone)]
+pub struct ComputeProfile {
+    pub name: &'static str,
+    /// Parameter count d (gradient elements to reduce).
+    pub params: u64,
+    /// Single-GPU fwd+bwd+update time per iteration (seconds).
+    pub t1_compute: f64,
+}
+
+impl ComputeProfile {
+    pub const fn new(name: &'static str, params: u64, t1_compute: f64) -> ComputeProfile {
+        ComputeProfile {
+            name,
+            params,
+            t1_compute,
+        }
+    }
+
+    /// The paper's four evaluation models (Table 2).
+    pub fn paper_models() -> Vec<ComputeProfile> {
+        vec![
+            ComputeProfile::new("alexnet", 61_100_840, 0.080),
+            ComputeProfile::new("vgg16", 138_357_544, 1.121),
+            ComputeProfile::new("resnet50", 25_557_032, 0.460),
+            ComputeProfile::new("inceptionv4", 42_679_816, 0.690),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ComputeProfile> {
+        Self::paper_models().into_iter().find(|m| m.name == name)
+    }
+}
+
+/// Selection-cost model for one operator.
+#[derive(Debug, Clone, Copy)]
+pub struct OpCostModel {
+    /// Fixed per-iteration sparsification overhead (seconds). Zero for
+    /// Dense (no sparsification path at all).
+    pub fixed_s: f64,
+    /// Per-element selection cost (seconds/element).
+    pub per_elem_s: f64,
+    /// Ratio of actually-communicated elements to the configured k
+    /// (RedSync's over-selection ⇒ > 1).
+    pub comm_inflation: f64,
+}
+
+impl OpCostModel {
+    /// Calibrated model for `op` (see module docs for the anchors).
+    pub fn for_op(op: OpKind) -> OpCostModel {
+        match op {
+            OpKind::Dense => OpCostModel {
+                fixed_s: 0.0,
+                per_elem_s: 0.0,
+                comm_inflation: 1.0,
+            },
+            OpKind::TopK => OpCostModel {
+                fixed_s: 0.104,
+                per_elem_s: 12e-9,
+                comm_inflation: 1.0,
+            },
+            OpKind::RandK => OpCostModel {
+                // Random index generation is one cheap pass.
+                fixed_s: 0.104,
+                per_elem_s: 0.3e-9,
+                comm_inflation: 1.0,
+            },
+            OpKind::Dgc => OpCostModel {
+                fixed_s: 0.104,
+                per_elem_s: 2.9e-9,
+                comm_inflation: 1.0,
+            },
+            OpKind::Trimmed => OpCostModel {
+                fixed_s: 0.104,
+                per_elem_s: 90e-9,
+                comm_inflation: 10.0,
+            },
+            OpKind::GaussianK => OpCostModel {
+                fixed_s: 0.104,
+                per_elem_s: 0.9e-9,
+                comm_inflation: 1.0,
+            },
+        }
+    }
+
+    /// Selection time for a d-element gradient.
+    pub fn selection_time(&self, d: u64) -> f64 {
+        self.fixed_s + self.per_elem_s * d as f64
+    }
+
+    /// Elements actually transmitted for a configured k.
+    pub fn effective_k(&self, k: u64) -> u64 {
+        (k as f64 * self.comm_inflation).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topk_anchor() {
+        // §3.3: Top_k on ResNet-50 (d = 25.5 M) ≈ 0.4 s on V100.
+        let m = OpCostModel::for_op(OpKind::TopK);
+        let t = m.selection_time(25_557_032);
+        assert!((t - 0.4).abs() < 0.05, "topk anchor {t}");
+    }
+
+    #[test]
+    fn operator_ordering_at_resnet_scale() {
+        let d = 25_557_032;
+        let t = |op| OpCostModel::for_op(op).selection_time(d);
+        assert!(t(OpKind::GaussianK) < t(OpKind::Dgc));
+        assert!(t(OpKind::Dgc) < t(OpKind::TopK));
+        assert!(t(OpKind::TopK) < t(OpKind::Trimmed));
+        assert_eq!(t(OpKind::Dense), 0.0);
+    }
+
+    #[test]
+    fn redsync_inflates_comm() {
+        let m = OpCostModel::for_op(OpKind::Trimmed);
+        assert_eq!(m.effective_k(25_557), 255_570);
+        assert_eq!(OpCostModel::for_op(OpKind::TopK).effective_k(100), 100);
+    }
+
+    #[test]
+    fn model_catalog() {
+        let models = ComputeProfile::paper_models();
+        assert_eq!(models.len(), 4);
+        let r50 = ComputeProfile::by_name("resnet50").unwrap();
+        assert_eq!(r50.params, 25_557_032);
+        assert!((r50.t1_compute - 0.46).abs() < 1e-9);
+        assert!(ComputeProfile::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,256 @@
+//! Discrete-event simulation of a synchronous data-parallel training
+//! iteration: every worker computes (fwd+bwd), sparsifies, then the
+//! cluster synchronizes (dense ring all-reduce or sparse ring all-gather).
+//!
+//! The engine is a classic event-calendar DES: worker events (compute
+//! done, select done) are posted on a virtual clock; the collective
+//! starts when the *last* worker arrives (synchronous SGD's barrier) and
+//! its duration comes from the [`cost`](super::cost) models. Straggler
+//! jitter (multiplicative compute noise) is supported for ablations of
+//! the paper's synchronous design.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::cost::{allgather_time, allreduce_time};
+use super::ops_cost::{ComputeProfile, OpCostModel};
+use super::topology::Topology;
+use crate::compress::OpKind;
+use crate::stats::rng::Pcg64;
+
+/// Simulation configuration for one (model, operator, cluster) triple.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub topo: Topology,
+    pub model: ComputeProfile,
+    pub op: OpKind,
+    /// Sparsity ratio k/d (the paper uses 0.001).
+    pub k_ratio: f64,
+    /// Multiplicative log-normal-ish straggler jitter σ on compute time
+    /// (0 ⇒ deterministic, the Table 2 setting).
+    pub straggler_sigma: f64,
+    /// RNG seed for jitter.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn table2(model: ComputeProfile, op: OpKind) -> SimConfig {
+        SimConfig {
+            topo: Topology::paper_16gpu(),
+            model,
+            op,
+            k_ratio: 0.001,
+            straggler_sigma: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Per-iteration timing breakdown (virtual seconds).
+#[derive(Debug, Clone, Default)]
+pub struct IterationBreakdown {
+    pub compute: f64,
+    pub select: f64,
+    pub comm: f64,
+    /// Barrier wait of the *fastest* worker (0 without stragglers).
+    pub max_skew: f64,
+    pub total: f64,
+}
+
+/// Event types in the per-iteration calendar.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    ComputeDone(usize),
+    SelectDone(usize),
+}
+
+/// The discrete-event simulator.
+pub struct Simulator {
+    pub cfg: SimConfig,
+    rng: Pcg64,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Simulator {
+        let seed = cfg.seed;
+        Simulator {
+            cfg,
+            rng: Pcg64::seed(seed),
+        }
+    }
+
+    /// Simulate one synchronous iteration; returns the breakdown.
+    pub fn iteration(&mut self) -> IterationBreakdown {
+        let p = self.cfg.topo.world_size();
+        let d = self.cfg.model.params;
+        let op_cost = OpCostModel::for_op(self.cfg.op);
+        let k = ((d as f64 * self.cfg.k_ratio).round() as u64).max(1);
+        let t_select = if self.cfg.op == OpKind::Dense {
+            0.0
+        } else {
+            op_cost.selection_time(d)
+        };
+
+        // Event calendar ordered by virtual time. f64 keys via ordered bits.
+        let mut calendar: BinaryHeap<Reverse<(u64, usize, u8)>> = BinaryHeap::new();
+        let post = |cal: &mut BinaryHeap<Reverse<(u64, usize, u8)>>, t: f64, ev: Event| {
+            let (w, tag) = match ev {
+                Event::ComputeDone(w) => (w, 0u8),
+                Event::SelectDone(w) => (w, 1u8),
+            };
+            cal.push(Reverse((t.to_bits(), w, tag)));
+        };
+
+        // Post compute-done for every worker (with optional jitter).
+        let mut compute_times = vec![0.0f64; p];
+        for (w, ct) in compute_times.iter_mut().enumerate() {
+            let jitter = if self.cfg.straggler_sigma > 0.0 {
+                (self.cfg.straggler_sigma * self.rng.next_gaussian()).exp()
+            } else {
+                1.0
+            };
+            *ct = self.cfg.model.t1_compute * jitter;
+            post(&mut calendar, *ct, Event::ComputeDone(w));
+        }
+
+        // Drain: compute-done ⇒ post select-done; the collective fires when
+        // the last select-done (or compute-done for Dense) arrives.
+        let mut ready_at = vec![0.0f64; p];
+        let mut last_ready = 0.0f64;
+        let mut first_ready = f64::INFINITY;
+        while let Some(Reverse((tb, w, tag))) = calendar.pop() {
+            let t = f64::from_bits(tb);
+            match tag {
+                0 => {
+                    // ComputeDone: start selection (Dense: immediately ready).
+                    if self.cfg.op == OpKind::Dense {
+                        ready_at[w] = t;
+                        last_ready = last_ready.max(t);
+                        first_ready = first_ready.min(t);
+                    } else {
+                        post(&mut calendar, t + t_select, Event::SelectDone(w));
+                    }
+                }
+                _ => {
+                    ready_at[w] = t;
+                    last_ready = last_ready.max(t);
+                    first_ready = first_ready.min(t);
+                }
+            }
+        }
+
+        // Synchronous barrier, then the collective.
+        let comm = if self.cfg.op == OpKind::Dense {
+            allreduce_time(&self.cfg.topo, d * 4)
+        } else {
+            let k_eff = op_cost.effective_k(k);
+            // Every worker sends (index u32 + value f32) per kept element.
+            allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
+        };
+
+        let compute = compute_times.iter().cloned().fold(0.0, f64::max);
+        IterationBreakdown {
+            compute,
+            select: t_select,
+            comm,
+            max_skew: if p > 1 { last_ready - first_ready } else { 0.0 },
+            total: last_ready + comm,
+        }
+    }
+
+    /// Average iteration time over `n` simulated iterations.
+    pub fn mean_iteration(&mut self, n: usize) -> IterationBreakdown {
+        let mut acc = IterationBreakdown::default();
+        for _ in 0..n {
+            let b = self.iteration();
+            acc.compute += b.compute;
+            acc.select += b.select;
+            acc.comm += b.comm;
+            acc.max_skew += b.max_skew;
+            acc.total += b.total;
+        }
+        let inv = 1.0 / n.max(1) as f64;
+        IterationBreakdown {
+            compute: acc.compute * inv,
+            select: acc.select * inv,
+            comm: acc.comm * inv,
+            max_skew: acc.max_skew * inv,
+            total: acc.total * inv,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet() -> ComputeProfile {
+        ComputeProfile::by_name("resnet50").unwrap()
+    }
+
+    #[test]
+    fn deterministic_without_stragglers() {
+        let mut s = Simulator::new(SimConfig::table2(resnet(), OpKind::TopK));
+        let a = s.iteration();
+        let b = s.iteration();
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.max_skew, 0.0);
+    }
+
+    #[test]
+    fn breakdown_composition() {
+        let mut s = Simulator::new(SimConfig::table2(resnet(), OpKind::GaussianK));
+        let b = s.iteration();
+        assert!((b.total - (b.compute + b.select + b.comm)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_skips_selection() {
+        let mut s = Simulator::new(SimConfig::table2(resnet(), OpKind::Dense));
+        let b = s.iteration();
+        assert_eq!(b.select, 0.0);
+        assert!(b.comm > 0.1, "dense ResNet-50 comm should be ~0.2 s");
+    }
+
+    #[test]
+    fn paper_table2_resnet_row() {
+        // Paper: Dense 0.699, TopK 0.810, DGC 0.655, GaussianK 0.586,
+        // RedSync 2.588. Require each simulated time within 20% and the
+        // ordering exact.
+        let want = [
+            (OpKind::Dense, 0.699),
+            (OpKind::TopK, 0.810),
+            (OpKind::Dgc, 0.655),
+            (OpKind::Trimmed, 2.588),
+            (OpKind::GaussianK, 0.586),
+        ];
+        let mut got = Vec::new();
+        for (op, paper) in want {
+            let mut s = Simulator::new(SimConfig::table2(resnet(), op));
+            let t = s.iteration().total;
+            assert!(
+                (t - paper).abs() / paper < 0.20,
+                "{:?}: sim {t:.3} vs paper {paper:.3}",
+                op
+            );
+            got.push((op, t));
+        }
+        let t = |op: OpKind| got.iter().find(|g| g.0 == op).unwrap().1;
+        assert!(t(OpKind::GaussianK) < t(OpKind::Dgc));
+        assert!(t(OpKind::Dgc) < t(OpKind::Dense));
+        assert!(t(OpKind::Dense) < t(OpKind::TopK));
+        assert!(t(OpKind::TopK) < t(OpKind::Trimmed));
+    }
+
+    #[test]
+    fn stragglers_increase_total() {
+        let mut base = Simulator::new(SimConfig::table2(resnet(), OpKind::GaussianK));
+        let mut cfg = SimConfig::table2(resnet(), OpKind::GaussianK);
+        cfg.straggler_sigma = 0.3;
+        let mut jit = Simulator::new(cfg);
+        let t0 = base.mean_iteration(50).total;
+        let t1 = jit.mean_iteration(50).total;
+        assert!(t1 > t0, "straggler jitter must slow the barrier: {t1} vs {t0}");
+        assert!(jit.iteration().max_skew > 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Cluster topology: N nodes × G GPUs with an intra-node link (PCIe) and
+//! an inter-node link (Ethernet). Worker w lives on node w / G. This is
+//! the paper's testbed shape (4 nodes × 4 V100s, 10 GbE).
+
+use super::link::LinkSpec;
+
+/// Hierarchical cluster topology.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub intra: LinkSpec,
+    pub inter: LinkSpec,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, gpus_per_node: usize, intra: LinkSpec, inter: LinkSpec) -> Topology {
+        assert!(nodes > 0 && gpus_per_node > 0);
+        Topology {
+            nodes,
+            gpus_per_node,
+            intra,
+            inter,
+        }
+    }
+
+    /// The paper's testbed: 4 nodes × 4 GPUs over 10 GbE.
+    pub fn paper_16gpu() -> Topology {
+        Topology::new(4, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g())
+    }
+
+    /// Single-node baseline (T1 measurements).
+    pub fn single_gpu() -> Topology {
+        Topology::new(1, 1, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g())
+    }
+
+    /// Total worker count P.
+    pub fn world_size(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node index of worker `w`.
+    pub fn node_of(&self, w: usize) -> usize {
+        w / self.gpus_per_node
+    }
+
+    /// The slowest link a flat ring over all P workers must traverse.
+    /// With multiple nodes, consecutive ring neighbours cross the
+    /// inter-node link once per node boundary, so the per-step bottleneck
+    /// is the inter-node link; single-node rings bottleneck on PCIe.
+    pub fn ring_bottleneck(&self) -> LinkSpec {
+        if self.nodes > 1 {
+            self.inter
+        } else {
+            self.intra
+        }
+    }
+
+    /// Number of workers sharing one NIC (bandwidth contention multiplier
+    /// for node-crossing traffic in hierarchical collectives).
+    pub fn nic_sharing(&self) -> usize {
+        self.gpus_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_and_placement() {
+        let t = Topology::paper_16gpu();
+        assert_eq!(t.world_size(), 16);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.node_of(15), 3);
+    }
+
+    #[test]
+    fn bottleneck_selection() {
+        let multi = Topology::paper_16gpu();
+        assert_eq!(multi.ring_bottleneck(), LinkSpec::ethernet_10g());
+        let single = Topology::new(1, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        assert_eq!(single.ring_bottleneck(), LinkSpec::pcie3_x16());
+    }
+}

@@ -1,0 +1,171 @@
+//! The AOT artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, read here at startup. It describes every
+//! lowered model: entry-point files, static shapes, and the flat parameter
+//! layout (so L3 compression slices match the JAX pytree flattening).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Layout;
+use crate::util::json::Json;
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Total flat parameter dimension d.
+    pub d: usize,
+    /// Static batch size baked into train/eval steps.
+    pub batch: usize,
+    /// Input feature count (classifier) or context length (LM).
+    pub features: usize,
+    /// Output classes (classifier) or vocab size (LM).
+    pub classes: usize,
+    /// Model kind: "classifier" | "lm".
+    pub kind: String,
+    /// HLO files keyed by entry point ("init", "train_step", "eval_step").
+    pub files: BTreeMap<String, String>,
+    /// Flat parameter layout.
+    pub layout: Layout,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub version: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// Directory the manifest was loaded from (file paths are relative).
+    pub dir: String,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &str) -> Result<ArtifactManifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &str) -> Result<ArtifactManifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(1);
+        let mut models = BTreeMap::new();
+        let mobj = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing 'models'"))?;
+        for (name, entry) in mobj {
+            let get_usize = |k: &str| -> Result<usize> {
+                entry
+                    .get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("manifest model {name}: missing '{k}'"))
+            };
+            let mut files = BTreeMap::new();
+            if let Some(fobj) = entry.get("files").and_then(|f| f.as_obj()) {
+                for (k, v) in fobj {
+                    if let Some(s) = v.as_str() {
+                        files.insert(k.clone(), s.to_string());
+                    }
+                }
+            }
+            let layout = entry
+                .get("layout")
+                .map(Layout::from_json)
+                .transpose()?
+                .unwrap_or_default();
+            let d = get_usize("d")?;
+            anyhow::ensure!(
+                layout.is_empty() || layout.total() == d,
+                "manifest model {name}: layout total {} != d {}",
+                layout.total(),
+                d
+            );
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    d,
+                    batch: get_usize("batch")?,
+                    features: get_usize("features")?,
+                    classes: get_usize("classes")?,
+                    kind: entry
+                        .get("kind")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("classifier")
+                        .to_string(),
+                    files,
+                    layout,
+                },
+            );
+        }
+        Ok(ArtifactManifest {
+            version,
+            models,
+            dir: dir.to_string(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an entry-point file for a model.
+    pub fn file_path(&self, model: &str, entry: &str) -> Result<String> {
+        let m = self.model(model)?;
+        let f = m
+            .files
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' has no entry '{entry}'"))?;
+        Ok(format!("{}/{}", self.dir, f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "mlp": {
+          "d": 100, "batch": 32, "features": 8, "classes": 4,
+          "kind": "classifier",
+          "files": {"train_step": "mlp_train.hlo.txt", "init": "mlp_init.hlo.txt"},
+          "layout": {"layers": [{"name": "w0", "size": 96}, {"name": "b0", "size": 4}], "total": 100}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, "/tmp/arts").unwrap();
+        let e = m.model("mlp").unwrap();
+        assert_eq!(e.d, 100);
+        assert_eq!(e.batch, 32);
+        assert_eq!(e.layout.total(), 100);
+        assert_eq!(
+            m.file_path("mlp", "train_step").unwrap(),
+            "/tmp/arts/mlp_train.hlo.txt"
+        );
+        assert!(m.file_path("mlp", "nope").is_err());
+        assert!(m.model("other").is_err());
+    }
+
+    #[test]
+    fn layout_mismatch_rejected() {
+        let bad = SAMPLE.replace("\"d\": 100", "\"d\": 99");
+        assert!(ArtifactManifest::parse(&bad, ".").is_err());
+    }
+
+    #[test]
+    fn missing_models_rejected() {
+        assert!(ArtifactManifest::parse("{}", ".").is_err());
+    }
+}

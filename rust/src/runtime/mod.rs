@@ -1,0 +1,111 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` → `python/compile/aot.py`) and executes them
+//! on the XLA CPU client from the L3 hot path. Python never runs here.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod manifest;
+pub mod pjrt_model;
+
+pub use manifest::{ArtifactManifest, ModelEntry};
+pub use pjrt_model::PjrtModel;
+
+use anyhow::{Context, Result};
+
+/// A compiled XLA executable with convenience I/O.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT runtime: one CPU client + a registry of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &str, name: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; the artifact was lowered with
+    /// `return_tuple=True`, so the single output is a tuple which we
+    /// decompose into its elements.
+    ///
+    /// Inputs go through explicit `PjRtBuffer`s + `execute_b` rather than
+    /// the crate's `execute::<Literal>` convenience: the latter's C++ shim
+    /// (`xla_rs.cc execute()`) `release()`s the device input buffers and
+    /// never frees them — a leak of ~(Σ input bytes) per call, which at
+    /// d = 25M params is ~200 MB/step and OOMs long trainings. Buffers we
+    /// create ourselves are freed by their Rust `Drop` (leak regression
+    /// test: `rust/tests/pjrt_integration.rs::execute_does_not_leak`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let client = self.exe.client();
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for lit in inputs {
+            buffers.push(
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .context("staging input buffer")?,
+            );
+        }
+        let result = self
+            .exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build a `f32` tensor literal with the given dims from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal_f32: {} elems vs dims {dims:?}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an `i32` tensor literal with the given dims.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal_i32: {} elems vs dims {dims:?}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,183 @@
+//! [`PjrtModel`]: the production model backend — AOT-compiled JAX graphs
+//! (L2, with the L1 Pallas kernels lowered inside) executed via PJRT.
+//! Implements the same [`Model`](crate::models::Model) trait as the native
+//! reference MLP, so the whole coordinator stack is backend-agnostic.
+//!
+//! Entry points per model (see `python/compile/aot.py`):
+//! * `init(seed i32[]) → (params f32[d],)`
+//! * `train_step(params f32[d], x, y) → (loss f32[], grads f32[d])`
+//! * `eval_step(params f32[d], x, y) → (loss f32[], correct f32[])`
+//!
+//! Classifier models take `x: f32[batch, features]`, `y: i32[batch]`;
+//! LM models take `x: i32[batch, context]`, `y: i32[batch]` (next token).
+//! The [`Model`] adapter carries token ids through the f32 batch container
+//! (exact for vocab < 2²⁴).
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactManifest, ModelEntry};
+use super::{literal_f32, literal_i32, to_scalar_f32, to_vec_f32, Executable, Runtime};
+use crate::models::Model;
+use crate::tensor::Layout;
+
+/// An AOT model loaded from artifacts.
+pub struct PjrtModel {
+    pub entry: ModelEntry,
+    rt: Runtime,
+    init_exe: Executable,
+    train_exe: Executable,
+    eval_exe: Option<Executable>,
+}
+
+impl PjrtModel {
+    /// Load and compile a model's entry points from the artifact dir.
+    pub fn load(dir: &str, name: &str) -> Result<PjrtModel> {
+        let manifest = ArtifactManifest::load(dir)?;
+        Self::from_manifest(&manifest, name)
+    }
+
+    pub fn from_manifest(manifest: &ArtifactManifest, name: &str) -> Result<PjrtModel> {
+        let entry = manifest.model(name)?.clone();
+        let rt = Runtime::cpu()?;
+        let init_exe = rt.load_hlo_text(&manifest.file_path(name, "init")?, "init")?;
+        let train_exe = rt.load_hlo_text(&manifest.file_path(name, "train_step")?, "train_step")?;
+        let eval_exe = match manifest.file_path(name, "eval_step") {
+            Ok(p) => Some(rt.load_hlo_text(&p, "eval_step")?),
+            Err(_) => None,
+        };
+        Ok(PjrtModel {
+            entry,
+            rt,
+            init_exe,
+            train_exe,
+            eval_exe,
+        })
+    }
+
+    pub fn is_lm(&self) -> bool {
+        self.entry.kind == "lm"
+    }
+
+    /// Run `init(seed)` → params.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let out = self.init_exe.run(&[seed_lit])?;
+        let params = to_vec_f32(&out[0]).context("init output")?;
+        anyhow::ensure!(
+            params.len() == self.entry.d,
+            "init returned {} params, manifest says {}",
+            params.len(),
+            self.entry.d
+        );
+        Ok(params)
+    }
+
+    fn input_literals(&self, x: &[f32], y: &[u32], n: usize) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            n == self.entry.batch,
+            "batch {n} != artifact static batch {} (model {})",
+            self.entry.batch,
+            self.entry.name
+        );
+        let f = self.entry.features;
+        let x_lit = if self.is_lm() {
+            let ids: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+            literal_i32(&ids, &[n as i64, f as i64])?
+        } else {
+            literal_f32(x, &[n as i64, f as i64])?
+        };
+        let y_i32: Vec<i32> = y.iter().map(|&v| v as i32).collect();
+        let y_lit = literal_i32(&y_i32, &[n as i64])?;
+        Ok(vec![x_lit, y_lit])
+    }
+
+    /// Run `train_step`: returns (loss, grads).
+    pub fn train_step_pjrt(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+        n: usize,
+    ) -> Result<(f64, Vec<f32>)> {
+        let p_lit = literal_f32(params, &[self.entry.d as i64])?;
+        let mut inputs = vec![p_lit];
+        inputs.extend(self.input_literals(x, y, n)?);
+        let out = self.train_exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "train_step must return (loss, grads)");
+        let loss = to_scalar_f32(&out[0])? as f64;
+        let grads = to_vec_f32(&out[1])?;
+        Ok((loss, grads))
+    }
+
+    /// Run `eval_step`: returns (loss, accuracy).
+    pub fn eval_step_pjrt(&self, params: &[f32], x: &[f32], y: &[u32], n: usize) -> Result<(f64, f64)> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model {} has no eval_step", self.entry.name))?;
+        let p_lit = literal_f32(params, &[self.entry.d as i64])?;
+        let mut inputs = vec![p_lit];
+        inputs.extend(self.input_literals(x, y, n)?);
+        let out = exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "eval_step must return (loss, accuracy)");
+        Ok((to_scalar_f32(&out[0])? as f64, to_scalar_f32(&out[1])? as f64))
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+impl Model for PjrtModel {
+    fn layout(&self) -> &Layout {
+        &self.entry.layout
+    }
+
+    fn init(&self, seed: u64) -> Vec<f32> {
+        self.init_params(seed as i32)
+            .expect("PJRT init failed (artifacts stale? run `make artifacts`)")
+    }
+
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: &[u32],
+        n: usize,
+        grad_out: &mut [f32],
+    ) -> f64 {
+        let (loss, grads) = self
+            .train_step_pjrt(params, x, y, n)
+            .expect("PJRT train_step failed");
+        grad_out.copy_from_slice(&grads);
+        loss
+    }
+
+    fn accuracy(&mut self, params: &[f32], x: &[f32], y: &[u32], n: usize) -> f64 {
+        Model::eval_step(self, params, x, y, n).1
+    }
+
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[u32], n: usize) -> (f64, f64) {
+        // Eval batch may differ from the train batch; chunk to the static
+        // batch size and average (a trailing partial chunk is dropped).
+        let b = self.entry.batch;
+        let f = self.entry.features;
+        let (mut loss, mut acc) = (0.0, 0.0);
+        let mut chunks = 0usize;
+        let mut i = 0;
+        while i + b <= n {
+            let (l, a) = self
+                .eval_step_pjrt(params, &x[i * f..(i + b) * f], &y[i..i + b], b)
+                .expect("PJRT eval_step failed");
+            loss += l;
+            acc += a;
+            chunks += 1;
+            i += b;
+        }
+        if chunks == 0 {
+            (f64::NAN, 0.0)
+        } else {
+            (loss / chunks as f64, acc / chunks as f64)
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Fixed-bin histograms and empirical CDFs — the instrument behind the
+//! paper's gradient-distribution study (Fig. 2 histograms of `u_t`,
+//! Fig. 7 cumulative distributions, Fig. 8/9 Dense/GaussianK variants).
+
+use crate::util::json::Json;
+
+/// A fixed-range, uniform-bin histogram over f32 samples. Out-of-range
+/// samples are clamped into the edge bins (matching numpy/matplotlib's
+/// `range=` + clip behaviour used for the paper's plots).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo, "bad histogram spec");
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    /// Histogram spanning ±`span` like the paper's symmetric gradient plots.
+    pub fn symmetric(span: f64, bins: usize) -> Histogram {
+        Self::new(-span, span, bins)
+    }
+
+    /// Build from data with automatic symmetric range (max |x|).
+    pub fn auto(xs: &[f32], bins: usize) -> Histogram {
+        let span = xs.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs())).max(1e-12);
+        let mut h = Self::symmetric(span, bins);
+        h.extend(xs);
+        h
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn bin_of(&self, x: f64) -> usize {
+        let b = ((x - self.lo) / (self.hi - self.lo) * self.bins() as f64).floor();
+        (b.max(0.0) as usize).min(self.bins() - 1)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let b = self.bin_of(x);
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn extend(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins() as f64;
+        (0..self.bins()).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Normalized density (sums to 1 over bins).
+    pub fn density(&self) -> Vec<f64> {
+        let t = self.total.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Empirical CDF evaluated at bin right-edges (Fig. 7).
+    pub fn cdf(&self) -> Vec<f64> {
+        let t = self.total.max(1) as f64;
+        let mut acc = 0u64;
+        self.counts
+            .iter()
+            .map(|&c| {
+                acc += c;
+                acc as f64 / t
+            })
+            .collect()
+    }
+
+    /// Fraction of samples with |x| below `t` (paper's "most coordinates
+    /// are close to zero" measurement).
+    pub fn mass_within(&self, t: f64) -> f64 {
+        let total = self.total.max(1) as f64;
+        let mut acc = 0u64;
+        for (c, x) in self.counts.iter().zip(self.centers()) {
+            if x.abs() <= t {
+                acc += c;
+            }
+        }
+        acc as f64 / total
+    }
+
+    /// Compact ASCII rendering (for terminal inspection of Fig. 2-style
+    /// shapes).
+    pub fn ascii(&self, rows: usize) -> String {
+        let maxc = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = (c as f64 / maxc as f64 * rows as f64).round() as usize;
+            let center = self.lo + (i as f64 + 0.5) * (self.hi - self.lo) / self.bins() as f64;
+            out.push_str(&format!("{center:>+10.4} | {}\n", "#".repeat(bar)));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("lo", Json::from(self.lo))
+            .set("hi", Json::from(self.hi))
+            .set("total", Json::from(self.total as f64))
+            .set(
+                "counts",
+                Json::Arr(self.counts.iter().map(|&c| Json::from(c as f64)).collect()),
+            );
+        o
+    }
+}
+
+/// Bell-shape diagnostic used to validate Theorem 1's premise on real
+/// gradients: a distribution is "bell shaped" here if (a) the mode bin is
+/// near zero and (b) density decays monotonically-ish away from the mode
+/// (allowing `tolerance` fraction of inversions from sampling noise).
+pub fn is_bell_shaped(h: &Histogram, tolerance: f64) -> bool {
+    let d = h.density();
+    if d.is_empty() || h.total < 100 {
+        return false;
+    }
+    let mode = d
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let center = h.bins() / 2;
+    // Mode within the middle 20% of bins.
+    if (mode as i64 - center as i64).unsigned_abs() as usize > h.bins() / 10 {
+        return false;
+    }
+    // Count monotonicity violations left/right of the mode.
+    let mut bad = 0usize;
+    let mut checks = 0usize;
+    for i in (1..=mode).rev() {
+        checks += 1;
+        if d[i - 1] > d[i] + 1e-9 {
+            bad += 1;
+        }
+    }
+    for i in mode..d.len() - 1 {
+        checks += 1;
+        if d[i + 1] > d[i] + 1e-9 {
+            bad += 1;
+        }
+    }
+    (bad as f64) <= tolerance * checks.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn counts_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(0.5);
+        h.push(9.5);
+        h.push(-100.0); // clamps into bin 0
+        h.push(100.0); // clamps into bin 9
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total, 4);
+    }
+
+    #[test]
+    fn cdf_monotone_ends_at_one() {
+        let mut rng = Pcg64::seed(5);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.next_gaussian() as f32).collect();
+        let h = Histogram::auto(&xs, 64);
+        let cdf = h.cdf();
+        assert!(cdf.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+        assert!((cdf.last().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_is_bell_shaped() {
+        let mut rng = Pcg64::seed(6);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.next_gaussian() as f32).collect();
+        let mut h = Histogram::symmetric(4.0, 41);
+        h.extend(&xs);
+        assert!(is_bell_shaped(&h, 0.15));
+    }
+
+    #[test]
+    fn uniform_tail_is_not_bell_shaped() {
+        // Bimodal far-from-zero distribution must fail the diagnostic.
+        let mut rng = Pcg64::seed(7);
+        let xs: Vec<f32> = (0..50_000)
+            .map(|_| {
+                let s = if rng.next_f64() < 0.5 { -3.0 } else { 3.0 };
+                (s + 0.1 * rng.next_gaussian()) as f32
+            })
+            .collect();
+        let mut h = Histogram::symmetric(4.0, 41);
+        h.extend(&xs);
+        assert!(!is_bell_shaped(&h, 0.15));
+    }
+
+    #[test]
+    fn mass_within_gaussian() {
+        let mut rng = Pcg64::seed(8);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.next_gaussian() as f32).collect();
+        let mut h = Histogram::symmetric(6.0, 601);
+        h.extend(&xs);
+        // P(|X| < 1) ≈ 0.6827
+        assert!((h.mass_within(1.0) - 0.6827).abs() < 0.02);
+    }
+
+    #[test]
+    fn json_shape() {
+        let h = Histogram::new(-1.0, 1.0, 4);
+        let j = h.to_json();
+        assert_eq!(j.get("counts").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! Deterministic PCG-family RNG and the distribution samplers used across
+//! the framework (data generation, Rand_k selection, DGC sampling,
+//! synthetic gradient vectors).
+//!
+//! All randomness in sparkv flows through [`Pcg64`] with explicit seeds so
+//! every experiment is bit-reproducible (DESIGN.md §4).
+
+/// PCG-XSH-RR 64/32 with 128-bit state emulated by two 64-bit lanes
+/// (PCG64-lite): two independent 64-bit PCG32 streams combined into a
+/// 64-bit output. Deterministic, splittable via [`Pcg64::split`].
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: [u64; 2],
+    inc: [u64; 2],
+    /// Cached second Box–Muller output.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Seed deterministically. Different seeds give independent streams.
+    pub fn seed(seed: u64) -> Pcg64 {
+        let mut rng = Pcg64 {
+            state: [0, 0],
+            inc: [(seed << 1) | 1, ((seed ^ 0x9E3779B97F4A7C15) << 1) | 1],
+            gauss_spare: None,
+        };
+        // Standard PCG init dance.
+        rng.step(0);
+        rng.step(1);
+        rng.state[0] = rng.state[0].wrapping_add(seed);
+        rng.state[1] = rng.state[1].wrapping_add(seed.rotate_left(32));
+        rng.step(0);
+        rng.step(1);
+        rng
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn split(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::seed(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    fn step(&mut self, lane: usize) -> u32 {
+        let old = self.state[lane];
+        self.state[lane] = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc[lane]);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next uniform u64.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.step(0) as u64) << 32) | self.step(1) as u64
+    }
+
+    /// Next uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Next uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as u64;
+            }
+            // Rejection zone.
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid u == 0 for the log.
+        let u = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.gauss_spare = Some(r * s);
+        r * c
+    }
+
+    /// Laplace(mu, b) sample.
+    pub fn next_laplace(&mut self, mu: f64, b: f64) -> f64 {
+        let u = self.next_f64() - 0.5;
+        mu - b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Logistic(mu, s) sample.
+    pub fn next_logistic(&mut self, mu: f64, s: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 1e-12 && u < 1.0 - 1e-12 {
+                break u;
+            }
+        };
+        mu + s * (u / (1.0 - u)).ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (Floyd's algorithm for
+    /// k ≪ n, shuffle for dense k). Output order is unspecified.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k ({k}) > n ({n})");
+        if k == 0 {
+            return vec![];
+        }
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        // Floyd's: guarantees distinctness in O(k) expected time.
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.next_below(j as u64 + 1) as usize;
+            let pick = if chosen.insert(t) { t } else { j };
+            if pick != t {
+                chosen.insert(pick);
+            }
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seed(123);
+        let mut b = Pcg64::seed(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut rng = Pcg64::seed(9);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_support() {
+        let mut rng = Pcg64::seed(10);
+        let mut seen = [0usize; 7];
+        for _ in 0..70_000 {
+            seen[rng.next_below(7) as usize] += 1;
+        }
+        for (i, &c) in seen.iter().enumerate() {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "bucket {i}: {c}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seed(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut rng = Pcg64::seed(12);
+        let b = 2.0;
+        let n = 200_000;
+        let var = (0..n)
+            .map(|_| rng.next_laplace(0.0, b).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((var - 2.0 * b * b).abs() < 0.2, "var {var}"); // Var = 2b²
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg64::seed(13);
+        for &(n, k) in &[(100usize, 5usize), (100, 90), (1, 1), (1000, 0), (50, 50)] {
+            let idx = rng.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k, "duplicates for n={n} k={k}");
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg64::seed(42);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed(14);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

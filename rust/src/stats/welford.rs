@@ -1,0 +1,150 @@
+//! Welford's online mean/variance — used by the metrics pipeline for
+//! streaming step-time statistics, and as the numerically-stable reference
+//! for the fused [`crate::stats::mean_std`] hot path.
+
+/// Streaming mean/variance accumulator (Welford 1962). Mergeable (parallel
+/// variant of Chan et al.) so per-worker accumulators combine exactly.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Welford {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Add every element of a slice.
+    pub fn extend(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    /// Merge another accumulator (exact, order-independent up to fp).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn matches_closed_form() {
+        let mut w = Welford::new();
+        for i in 1..=100 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.count(), 100);
+        assert!((w.mean() - 50.5).abs() < 1e-12);
+        // Population variance of 1..=100 is (100²−1)/12 = 833.25.
+        assert!((w.variance() - 833.25).abs() < 1e-9);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 100.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Pcg64::seed(3);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.next_gaussian()).collect();
+        let mut whole = Welford::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        xs[..300].iter().for_each(|&x| a.push(x));
+        xs[300..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = Welford::new();
+        a.push(5.0);
+        let b = Welford::new();
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        let mut c = Welford::new();
+        c.merge(&a);
+        assert_eq!(c.count(), 1);
+        assert_eq!(c.mean(), 5.0);
+    }
+
+    #[test]
+    fn agrees_with_fused_mean_std() {
+        let mut rng = Pcg64::seed(4);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.next_gaussian() as f32).collect();
+        let mut w = Welford::new();
+        w.extend(&xs);
+        let (m, s) = crate::stats::mean_std(&xs);
+        assert!((w.mean() - m as f64).abs() < 1e-5);
+        assert!((w.std() - s as f64).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,240 @@
+//! Flat tensor substrate: dense f32 vectors with a layer-layout manifest
+//! (mirroring the AOT artifacts' flattened parameter/gradient vectors) and
+//! the sparse (index, value) representation exchanged by the sparsified
+//! collectives.
+
+use crate::util::json::Json;
+
+/// A sparse gradient: sorted-unique `indices` into a `d`-dimensional dense
+/// vector plus their `values`. This is exactly the wire format of sparse
+//  allgather: 2k numbers per worker (paper §1).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SparseVec {
+    pub d: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new(d: usize) -> SparseVec {
+        SparseVec {
+            d,
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Number of non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Bytes on the wire: 4 (index) + 4 (value) per nnz.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.nnz() as u64) * 8
+    }
+
+    /// Materialize as a dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Scatter-add into an existing dense buffer.
+    pub fn add_into(&self, dense: &mut [f32]) {
+        debug_assert_eq!(dense.len(), self.d);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            dense[i as usize] += v;
+        }
+    }
+
+    /// Build from parallel (index, value) pairs; sorts by index and debug-
+    /// asserts uniqueness.
+    pub fn from_pairs(d: usize, mut pairs: Vec<(u32, f32)>) -> SparseVec {
+        pairs.sort_unstable_by_key(|p| p.0);
+        debug_assert!(pairs.windows(2).all(|w| w[0].0 < w[1].0), "duplicate indices");
+        SparseVec {
+            d,
+            indices: pairs.iter().map(|p| p.0).collect(),
+            values: pairs.iter().map(|p| p.1).collect(),
+        }
+    }
+
+    /// ℓ2-norm squared of the non-zeros.
+    pub fn norm2_sq(&self) -> f64 {
+        crate::stats::norm2_sq(&self.values)
+    }
+}
+
+/// Layout of a flattened parameter/gradient vector: named layer slices.
+/// Parsed from the AOT `manifest.json` (`runtime::manifest`) or built
+/// natively. Compression in the paper is applied to the whole flattened
+/// gradient (single-layer merged sparsification, as Horovod/DGC do when
+/// fusing tensors); per-layer application is also supported for ablations.
+#[derive(Debug, Clone, Default)]
+pub struct Layout {
+    pub names: Vec<String>,
+    /// Start offset of each slice; `offsets[i]..offsets[i]+sizes[i]`.
+    pub offsets: Vec<usize>,
+    pub sizes: Vec<usize>,
+}
+
+impl Layout {
+    pub fn new() -> Layout {
+        Layout::default()
+    }
+
+    pub fn push(&mut self, name: &str, size: usize) {
+        let off = self.total();
+        self.names.push(name.to_string());
+        self.offsets.push(off);
+        self.sizes.push(size);
+    }
+
+    /// Total flattened dimension d.
+    pub fn total(&self) -> usize {
+        match (self.offsets.last(), self.sizes.last()) {
+            (Some(o), Some(s)) => o + s,
+            _ => 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Slice view of layer `i` within a flat buffer.
+    pub fn slice<'a>(&self, i: usize, flat: &'a [f32]) -> &'a [f32] {
+        &flat[self.offsets[i]..self.offsets[i] + self.sizes[i]]
+    }
+
+    /// Mutable slice view of layer `i`.
+    pub fn slice_mut<'a>(&self, i: usize, flat: &'a mut [f32]) -> &'a mut [f32] {
+        &mut flat[self.offsets[i]..self.offsets[i] + self.sizes[i]]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let layers: Vec<Json> = self
+            .names
+            .iter()
+            .zip(&self.sizes)
+            .map(|(n, &s)| {
+                let mut l = Json::obj();
+                l.set("name", Json::from(n.as_str())).set("size", Json::from(s));
+                l
+            })
+            .collect();
+        o.set("layers", Json::Arr(layers)).set("total", Json::from(self.total()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Layout> {
+        let mut layout = Layout::new();
+        let layers = j
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("layout: missing 'layers'"))?;
+        for l in layers {
+            let name = l
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("layout: layer missing 'name'"))?;
+            let size = l
+                .get("size")
+                .and_then(|s| s.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("layout: layer missing 'size'"))?;
+            layout.push(name, size);
+        }
+        Ok(layout)
+    }
+}
+
+/// AXPY: y ← y + a·x (fused scale-add used by the optimizer hot loop).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Element-wise add: out ← a + b.
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+/// Scale in place: x ← a·x.
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_roundtrip() {
+        let s = SparseVec::from_pairs(6, vec![(4, 4.0), (1, -1.0)]);
+        assert_eq!(s.indices, vec![1, 4]);
+        assert_eq!(s.to_dense(), vec![0.0, -1.0, 0.0, 0.0, 4.0, 0.0]);
+        assert_eq!(s.wire_bytes(), 16);
+        assert!((s.norm2_sq() - 17.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_add_into() {
+        let s = SparseVec::from_pairs(4, vec![(0, 1.0), (3, 2.0)]);
+        let mut dense = vec![10.0f32; 4];
+        s.add_into(&mut dense);
+        assert_eq!(dense, vec![11.0, 10.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn layout_slices() {
+        let mut l = Layout::new();
+        l.push("w1", 3);
+        l.push("b1", 2);
+        l.push("w2", 4);
+        assert_eq!(l.total(), 9);
+        let flat: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        assert_eq!(l.slice(1, &flat), &[3.0, 4.0]);
+        assert_eq!(l.slice(2, &flat), &[5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn layout_json_roundtrip() {
+        let mut l = Layout::new();
+        l.push("embed", 128);
+        l.push("head", 64);
+        let j = l.to_json();
+        let back = Layout::from_json(&j).unwrap();
+        assert_eq!(back.names, l.names);
+        assert_eq!(back.sizes, l.sizes);
+        assert_eq!(back.total(), 192);
+    }
+
+    #[test]
+    fn blas_like_ops() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        let mut out = vec![0.0f32; 3];
+        add(&x, &y, &mut out);
+        assert_eq!(out, vec![13.0, 26.0, 39.0]);
+        scale(0.5, &mut out);
+        assert_eq!(out, vec![6.5, 13.0, 19.5]);
+    }
+}

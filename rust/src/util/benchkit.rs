@@ -1,0 +1,194 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Provides warm-up, adaptive iteration counts, robust statistics (median +
+//! MAD), and a simple text/JSON report. All `rust/benches/*` harnesses use
+//! this to regenerate the paper's tables/figures.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration wall time in seconds (one entry per measured batch).
+    pub times: Vec<f64>,
+    pub iters_per_batch: u64,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        percentile(&self.times, 50.0)
+    }
+
+    pub fn p10(&self) -> f64 {
+        percentile(&self.times, 10.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        percentile(&self.times, 90.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.times.iter().sum::<f64>() / self.times.len().max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::from(self.name.clone()))
+            .set("median_s", Json::from(self.median()))
+            .set("mean_s", Json::from(self.mean()))
+            .set("p10_s", Json::from(self.p10()))
+            .set("p90_s", Json::from(self.p90()))
+            .set("batches", Json::from(self.times.len()));
+        o
+    }
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    /// Target wall-time spent measuring each case (seconds).
+    pub measure_secs: f64,
+    /// Target wall-time spent warming up each case (seconds).
+    pub warmup_secs: f64,
+    /// Minimum number of measured batches.
+    pub min_batches: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            measure_secs: 1.0,
+            warmup_secs: 0.2,
+            min_batches: 5,
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(measure_secs: f64) -> Bench {
+        Bench {
+            measure_secs,
+            ..Bench::default()
+        }
+    }
+
+    /// Quick-mode constructor honoring the SPARKV_BENCH_FAST env toggle.
+    pub fn from_env(default_measure: f64) -> Bench {
+        let fast = std::env::var("SPARKV_BENCH_FAST").is_ok();
+        Bench::new(if fast { default_measure / 10.0 } else { default_measure })
+    }
+
+    /// Time `f`, which performs exactly one logical iteration per call.
+    /// Returns per-iteration seconds (median).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // Warm-up + calibration: find how many iters fit in ~10ms batches.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        let batch_iters = ((0.01 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.measure_secs || times.len() < self.min_batches {
+            let bt = Instant::now();
+            for _ in 0..batch_iters {
+                f();
+            }
+            times.push(bt.elapsed().as_secs_f64() / batch_iters as f64);
+            if times.len() >= 10_000 {
+                break;
+            }
+        }
+        let sample = Sample {
+            name: name.to_string(),
+            times,
+            iters_per_batch: batch_iters,
+        };
+        let med = sample.median();
+        self.samples.push(sample);
+        med
+    }
+
+    /// Render an aligned text table of all recorded samples.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12}\n",
+            "case", "median", "p10", "p90"
+        ));
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12}\n",
+                s.name,
+                crate::util::human_secs(s.median()),
+                crate::util::human_secs(s.p10()),
+                crate::util::human_secs(s.p90()),
+            ));
+        }
+        out
+    }
+
+    /// Dump all samples as a JSON array (for EXPERIMENTS.md automation).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.samples.iter().map(|s| s.to_json()).collect())
+    }
+
+    /// Write the JSON report under `results/` (creating the directory).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            measure_secs: 0.05,
+            warmup_secs: 0.01,
+            min_batches: 3,
+            samples: vec![],
+        };
+        let mut acc = 0u64;
+        let med = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(med > 0.0 && med < 1e-3);
+        assert_eq!(b.samples.len(), 1);
+        assert!(b.report().contains("noop-ish"));
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Tiny CLI argument parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands. Each binary declares its options up front so `--help`
+//! is generated consistently.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for help generation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line: subcommand, `--key value` options, bare flags and
+/// positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`. `with_subcommand` treats the first
+    /// positional as a subcommand name.
+    pub fn parse_env(with_subcommand: bool) -> Args {
+        Self::parse(std::env::args().collect(), with_subcommand)
+    }
+
+    /// Parse an explicit argv (index 0 = program name).
+    pub fn parse(argv: Vec<String>, with_subcommand: bool) -> Args {
+        let mut args = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Args::default()
+        };
+        let mut it = argv.into_iter().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else if with_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Register an option spec (for `--help` output).
+    pub fn spec(&mut self, name: &'static str, help: &'static str, default: Option<&'static str>) {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+    }
+
+    /// Register a flag spec (for `--help` output).
+    pub fn flag_spec(&mut self, name: &'static str, help: &'static str) {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+    }
+
+    /// True if `--name` was given as a bare flag (or as `--name=true`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on parse
+    /// failure (CLI boundary, so a panic is the right UX).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(s) => s.split(',').map(|p| p.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Render help text from the registered specs.
+    pub fn help(&self, about: &str) -> String {
+        let mut out = format!("{about}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:\n", self.program);
+        for s in &self.specs {
+            let head = if s.is_flag {
+                format!("  --{}", s.name)
+            } else {
+                format!("  --{} <value>", s.name)
+            };
+            let def = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            out.push_str(&format!("{head:<32} {}{def}\n", s.help));
+        }
+        out
+    }
+
+    /// Print help and exit if `--help` was passed.
+    pub fn exit_on_help(&self, about: &str) {
+        if self.flag("help") {
+            println!("{}", self.help(about));
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        // Note: a bare `--flag` followed by a non-dash token is parsed as
+        // `--flag token` (option with value) — flags should come last or
+        // use `--flag=true`. This matches the documented grammar.
+        let a = Args::parse(argv("prog --k 32 --name=test pos1 --verbose"), false);
+        assert_eq!(a.get("k"), Some("32"));
+        assert_eq!(a.get("name"), Some("test"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        let b = Args::parse(argv("prog --verbose=true pos1"), false);
+        assert!(b.flag("verbose"));
+        assert_eq!(b.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn subcommand_mode() {
+        let a = Args::parse(argv("sparkv train --steps 100"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_parsed_or("steps", 0usize), 100);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(argv("prog"), false);
+        assert_eq!(a.get_parsed_or("lr", 0.1f64), 0.1);
+        assert_eq!(a.get_or("op", "topk"), "topk");
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(argv("prog --ops dense,topk, gaussiank"), false);
+        // note: the space split means 'gaussiank' is positional; list parsing
+        // only applies to the option value
+        assert_eq!(a.get_list("ops", &[]), vec!["dense", "topk", ""]);
+        let b = Args::parse(argv("prog --ops dense,topk,gaussiank"), false);
+        assert_eq!(b.get_list("ops", &[]), vec!["dense", "topk", "gaussiank"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn bad_typed_value_panics() {
+        let a = Args::parse(argv("prog --steps abc"), false);
+        let _ = a.get_parsed_or("steps", 0usize);
+    }
+
+    #[test]
+    fn flag_last_token() {
+        let a = Args::parse(argv("prog --cdf"), false);
+        assert!(a.flag("cdf"));
+    }
+}

@@ -1,0 +1,58 @@
+//! General-purpose substrates built in-tree for the offline environment:
+//! a minimal JSON layer, a CLI argument parser, a micro-benchmark harness
+//! and a property-testing kit (stand-ins for `serde_json`, `clap`,
+//! `criterion` and `proptest`, which are unavailable offline — see
+//! DESIGN.md §2).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod testkit;
+
+/// Format a byte count as a human-readable string (e.g. `1.5 MiB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit (ns/µs/ms/s).
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(0.5e-9 * 10.0), "5.0 ns");
+        assert_eq!(human_secs(1.5e-3), "1.500 ms");
+        assert_eq!(human_secs(2.0), "2.000 s");
+    }
+}

