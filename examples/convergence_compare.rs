@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
                 hist_every: 0,
                 momentum_correction: false,
                 global_topk: false,
+                parallelism: sparkv::config::Parallelism::Serial,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

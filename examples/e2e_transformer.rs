@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         hist_every: 0,
         momentum_correction: false,
         global_topk: false,
+        parallelism: sparkv::config::Parallelism::Serial,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

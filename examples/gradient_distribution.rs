@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         hist_every,
         momentum_correction: false,
         global_topk: false,
+        parallelism: sparkv::config::Parallelism::Serial,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

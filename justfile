@@ -1,0 +1,19 @@
+# Task runner for the sparkv reproduction. Mirrors .github/workflows/rust.yml.
+
+# Tier-1 verify: release build + quiet test run.
+test:
+    cd rust && cargo build --release && cargo test -q
+
+# The nightly CI configuration, locally: 4× property-test cases for every
+# testkit::forall invariant (serial/threaded equivalence, compressor
+# contracts, error-feedback mass conservation).
+test-heavy:
+    cd rust && cargo build --release && SPARKV_PROPTEST_CASES=256 cargo test -q
+
+# Fast bench pass (reduced dimension sweep).
+bench-fast:
+    cd rust && SPARKV_BENCH_FAST=1 cargo bench
+
+# Full figure/table regeneration.
+bench:
+    cd rust && cargo bench

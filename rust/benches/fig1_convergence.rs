@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
             hist_every: 0,
             momentum_correction: false,
             global_topk: false,
+            parallelism: sparkv::config::Parallelism::Serial,
         };
         let out = train(cfg, &mut model, &data)?;
         let series = out.metrics.smoothed_loss((steps / 10).max(1));

@@ -3,6 +3,7 @@
 //! CPU; the *shape* — exact selection expensive, Gaussian_k a small
 //! multiple of a memcpy — is the target, not the absolute values).
 
+use sparkv::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
 use sparkv::compress::OpKind;
 use sparkv::stats::rng::Pcg64;
 use sparkv::util::benchkit::Bench;
@@ -62,6 +63,43 @@ fn main() -> anyhow::Result<()> {
         last.0,
         last.1[1] / last.1[2],
         if last.1[2] <= last.1[1] * 2.0 { "OK (CPU parity)" } else { "VIOLATED" }
+    );
+
+    // Worker-runtime section: the channel-based threaded collectives
+    // engine vs the serial oracle on a ResNet-50-sized gradient
+    // (25,557,032 params, the paper's Table 1), P = 4 workers. Numerics
+    // are bit-identical by construction; the point here is wall-clock —
+    // the threaded ring folds each worker's chunks on its own core.
+    // Fast mode shrinks the vector like the dims sweep above does.
+    let p_workers = 4;
+    let d_ring = if fast { 4_000_000usize } else { 25_557_032usize };
+    let mut rng = Pcg64::seed(11);
+    let inputs: Vec<Vec<f32>> = (0..p_workers)
+        .map(|_| (0..d_ring).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    let serial_engine = SerialCollectives;
+    let threaded_engine = ThreadedCollectives;
+    // Bit-identity check first (single un-timed run per engine)...
+    let identical =
+        serial_engine.ring_allreduce_avg(&inputs) == threaded_engine.ring_allreduce_avg(&inputs);
+    // ...then the timed comparison.
+    let t_serial = bench.run("ring_allreduce/serial/resnet50/P=4", || {
+        std::hint::black_box(serial_engine.ring_allreduce_avg(&inputs));
+    });
+    let t_threaded = bench.run("ring_allreduce/threads4/resnet50/P=4", || {
+        std::hint::black_box(threaded_engine.ring_allreduce_avg(&inputs));
+    });
+    println!(
+        "\nworker runtime — ring all-reduce, {} (d = {d_ring}), P = {p_workers}:\n\
+         \x20 serial    {}\n\
+         \x20 threads:4 {}   ({:.2}× vs serial) — {}\n\
+         \x20 bit-identical outputs: {}",
+        if fast { "fast-mode size" } else { "resnet50-sized" },
+        sparkv::util::human_secs(t_serial),
+        sparkv::util::human_secs(t_threaded),
+        t_serial / t_threaded,
+        if t_threaded < t_serial { "OK (threads win)" } else { "VIOLATED" },
+        if identical { "OK" } else { "VIOLATED" },
     );
 
     bench.write_json("results/fig4_operator_speed.json")?;

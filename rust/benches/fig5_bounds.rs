@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         hist_every: steps / 2,
         momentum_correction: false,
         global_topk: false,
+        parallelism: sparkv::config::Parallelism::Serial,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

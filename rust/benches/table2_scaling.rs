@@ -3,8 +3,9 @@
 //! the simulated 16× V100 / 10 GbE cluster, printed side-by-side with the
 //! paper's published numbers.
 
-use sparkv::cluster::scaling_table;
+use sparkv::cluster::scaling_table_par;
 use sparkv::compress::OpKind;
+use sparkv::config::Parallelism;
 use sparkv::netsim::{ComputeProfile, Topology};
 
 /// The paper's Table 2 (iteration time, seconds). `None` = cell not
@@ -59,9 +60,22 @@ fn main() -> anyhow::Result<()> {
         OpKind::Trimmed,
         OpKind::GaussianK,
     ];
-    let table = scaling_table(&ComputeProfile::paper_models(), &ops, &topo, 0.001);
+    // Every (model, op) cell is an independent simulation: fan the sweep
+    // out across the available cores (cell values are identical to the
+    // serial sweep — see `parallel_sweep_matches_serial`).
+    let parallelism = Parallelism::auto();
+    let table = scaling_table_par(
+        &ComputeProfile::paper_models(),
+        &ops,
+        &topo,
+        0.001,
+        parallelism,
+    );
 
-    println!("Table 2 — simulated vs paper (iteration time, s)\n");
+    println!(
+        "Table 2 — simulated vs paper (iteration time, s; sweep = {})\n",
+        parallelism.name()
+    );
     println!(
         "{:<14}{:<11}{:>10} {:>10} {:>9}",
         "model", "op", "simulated", "paper", "rel err"

@@ -7,6 +7,7 @@
 //! iteration time, no communication).
 
 use crate::compress::OpKind;
+use crate::config::Parallelism;
 use crate::netsim::{ComputeProfile, SimConfig, Simulator, Topology};
 use crate::util::json::Json;
 
@@ -28,36 +29,71 @@ pub struct ScalingTable {
     pub cells: Vec<ScalingCell>,
 }
 
-/// Run the Table 2 simulation for the given models/operators/topology.
+/// Run the Table 2 simulation for the given models/operators/topology
+/// (serial; see [`scaling_table_par`] for the multi-threaded sweep).
 pub fn scaling_table(
     models: &[ComputeProfile],
     ops: &[OpKind],
     topo: &Topology,
     k_ratio: f64,
 ) -> ScalingTable {
-    let mut cells = Vec::new();
-    for m in models {
-        for &op in ops {
-            let cfg = SimConfig {
-                topo: topo.clone(),
-                model: m.clone(),
-                op,
-                k_ratio,
-                straggler_sigma: 0.0,
-                seed: 1,
-            };
-            let b = Simulator::new(cfg).iteration();
-            cells.push(ScalingCell {
-                model: m.name.to_string(),
-                op,
-                iter_time_s: b.total,
-                scaling_efficiency: m.t1_compute / b.total,
-                compute_s: b.compute,
-                select_s: b.select,
-                comm_s: b.comm,
-            });
+    scaling_table_par(models, ops, topo, k_ratio, Parallelism::Serial)
+}
+
+/// Table 2 sweep with a configurable worker runtime: every (model, op)
+/// cell is an independent simulation, so `Parallelism::Threads(n)` fans
+/// the cells out across up to `n` OS threads. Cell values are exact
+/// per-cell computations either way, and the table is assembled in
+/// (model, op) input order — the output is identical for every
+/// parallelism setting.
+pub fn scaling_table_par(
+    models: &[ComputeProfile],
+    ops: &[OpKind],
+    topo: &Topology,
+    k_ratio: f64,
+    parallelism: Parallelism,
+) -> ScalingTable {
+    let jobs: Vec<(&ComputeProfile, OpKind)> = models
+        .iter()
+        .flat_map(|m| ops.iter().map(move |&op| (m, op)))
+        .collect();
+    let run_cell = |&(m, op): &(&ComputeProfile, OpKind)| -> ScalingCell {
+        let cfg = SimConfig {
+            topo: topo.clone(),
+            model: m.clone(),
+            op,
+            k_ratio,
+            straggler_sigma: 0.0,
+            seed: 1,
+        };
+        let b = Simulator::new(cfg).iteration();
+        ScalingCell {
+            model: m.name.to_string(),
+            op,
+            iter_time_s: b.total,
+            scaling_efficiency: m.t1_compute / b.total,
+            compute_s: b.compute,
+            select_s: b.select,
+            comm_s: b.comm,
         }
-    }
+    };
+    let nthreads = parallelism.threads().min(jobs.len()).max(1);
+    let cells: Vec<ScalingCell> = if nthreads <= 1 {
+        jobs.iter().map(run_cell).collect()
+    } else {
+        let per = jobs.len().div_ceil(nthreads);
+        std::thread::scope(|s| {
+            let run_cell = &run_cell;
+            let handles: Vec<_> = jobs
+                .chunks(per)
+                .map(|group| s.spawn(move || group.iter().map(run_cell).collect::<Vec<_>>()))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("scaling cell thread panicked"))
+                .collect()
+        })
+    };
     ScalingTable { cells }
 }
 
@@ -224,6 +260,24 @@ mod tests {
         let t = table();
         let eff = t.cell("vgg16", OpKind::GaussianK).unwrap().scaling_efficiency;
         assert!(eff > 0.75, "VGG-16 GaussianK efficiency {eff:.3}");
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        // Cells are independent simulations; the threaded sweep must
+        // produce the identical table in the identical order.
+        let models = ComputeProfile::paper_models();
+        let ops = [OpKind::Dense, OpKind::GaussianK];
+        let topo = Topology::paper_16gpu();
+        let serial = scaling_table_par(&models, &ops, &topo, 0.001, Parallelism::Serial);
+        let par = scaling_table_par(&models, &ops, &topo, 0.001, Parallelism::Threads(4));
+        assert_eq!(serial.cells.len(), par.cells.len());
+        for (a, b) in serial.cells.iter().zip(&par.cells) {
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.iter_time_s.to_bits(), b.iter_time_s.to_bits());
+            assert_eq!(a.scaling_efficiency.to_bits(), b.scaling_efficiency.to_bits());
+        }
     }
 
     #[test]

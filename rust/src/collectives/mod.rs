@@ -8,82 +8,97 @@
 //! ring schedule (reduce-scatter + all-gather in 2(P−1) chunked phases) so
 //! that floating-point summation order matches a real ring, not a naive
 //! sequential sum.
+//!
+//! ## Engine design
+//!
+//! Every collective is exposed through the [`Collectives`] trait, with two
+//! interchangeable engines:
+//!
+//! * [`SerialCollectives`] — the single-threaded reference oracle; it
+//!   simulates the P-worker exchange on the calling thread (the original
+//!   implementation).
+//! * [`ThreadedCollectives`] — one OS thread per ring participant,
+//!   exchanging chunks over `mpsc` channels in the very same ring
+//!   schedule.
+//!
+//! ### The determinism guarantee
+//!
+//! The two engines are **bit-identical**, not approximately equal, and the
+//! property suite (`tests/parallel_equivalence.rs`) locks that invariant.
+//! The reason chunked ring order makes threading safe: floating-point
+//! addition is order-sensitive, but in a ring reduce-scatter the partial
+//! sum for chunk c hops around the ring along a fixed path (worker c →
+//! c+1 → …), so the per-element addition order is fully determined by the
+//! ring topology. Threads only exchange data through FIFO channels along
+//! those same ring links, so no scheduler interleaving can reorder the
+//! additions. The sparse all-gather partitions output-chunk *ownership*
+//! across workers and has each owner fold the P contributions in rank
+//! order — again a fixed order, regardless of which thread finishes first.
+//!
+//! The free functions below delegate to [`SerialCollectives`] and remain
+//! the convenient entry points for analysis code and tests; the trainer
+//! picks its engine from `config::Parallelism`.
+
+mod serial;
+mod threaded;
+
+pub use serial::SerialCollectives;
+pub use threaded::ThreadedCollectives;
 
 use crate::tensor::SparseVec;
 
-/// Dense ring all-reduce (average) over per-worker vectors.
+/// The collective-communication engine of the synchronous trainer: dense
+/// ring all-reduce, sparse all-gather union, and gTop-k tree reduction,
+/// all returning the *averaged* aggregate.
 ///
-/// Implements the bandwidth-optimal ring: vectors are split into P chunks;
-/// chunk c is reduced around the ring starting at worker c (reduce-scatter),
-/// then broadcast around the ring (all-gather). Returns the averaged vector
-/// (all workers receive identical copies in a real deployment; we return
-/// one).
-pub fn ring_allreduce_avg(inputs: &[Vec<f32>]) -> Vec<f32> {
-    let p = inputs.len();
-    assert!(p > 0, "no workers");
-    let d = inputs[0].len();
-    assert!(inputs.iter().all(|v| v.len() == d), "dim mismatch across workers");
-    if p == 1 {
-        return inputs[0].clone();
-    }
+/// Implementations must be numerically deterministic: for the same inputs
+/// the result is bit-identical across calls **and across engines** (the
+/// serial engine is the oracle; see the module docs for why the ring
+/// schedule makes that possible under threading).
+pub trait Collectives: Send + Sync {
+    /// Engine name for logs/reports.
+    fn name(&self) -> &'static str;
 
-    // Chunk boundaries (last chunks may be empty when d < p).
-    let chunk = d.div_ceil(p);
-    let bounds: Vec<(usize, usize)> = (0..p)
-        .map(|c| ((c * chunk).min(d), ((c + 1) * chunk).min(d)))
-        .collect();
+    /// Dense ring all-reduce (average) over per-worker vectors.
+    ///
+    /// Implements the bandwidth-optimal ring: vectors are split into P
+    /// chunks; chunk c is reduced around the ring starting at worker c
+    /// (reduce-scatter), then broadcast around the ring (all-gather).
+    /// Returns the averaged vector (all workers receive identical copies
+    /// in a real deployment; we return one). `d == 0` yields an empty
+    /// vector.
+    fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Vec<f32>;
 
-    // Working copies simulate each worker's buffer.
-    let mut bufs: Vec<Vec<f32>> = inputs.to_vec();
+    /// Sparse all-gather aggregation: every worker contributes its sparse
+    /// gradient; the result is the dense *average* of the union
+    /// (coordinates selected by multiple workers sum their values;
+    /// divisor is P, matching Eq. 2's (1/P)Σ Comp_k semantics).
+    fn sparse_allgather_avg(&self, inputs: &[SparseVec]) -> Vec<f32>;
 
-    // Reduce-scatter: at step s, worker w sends chunk (w - s) to worker w+1.
-    for s in 0..p - 1 {
-        // Snapshot of the chunks being sent this step (all sends happen
-        // "simultaneously" on a real ring).
-        let sends: Vec<(usize, usize, Vec<f32>)> = (0..p)
-            .map(|w| {
-                let c = (w + p - s) % p;
-                let (lo, hi) = bounds[c];
-                (w, c, bufs[w][lo..hi].to_vec())
-            })
-            .collect();
-        for (w, c, data) in sends {
-            let dst = (w + 1) % p;
-            let (lo, _hi) = bounds[c];
-            for (i, v) in data.into_iter().enumerate() {
-                bufs[dst][lo + i] += v;
-            }
-        }
-    }
-    // After reduce-scatter, worker w owns the fully-reduced chunk
-    // (w + 1) % p. Assemble the result from the owners.
-    let mut out = vec![0.0f32; d];
-    for w in 0..p {
-        let c = (w + 1) % p;
-        let (lo, hi) = bounds[c];
-        out[lo..hi].copy_from_slice(&bufs[w][lo..hi]);
-    }
-    let inv = 1.0 / p as f32;
-    out.iter_mut().for_each(|v| *v *= inv);
-    out
+    /// Global top-k aggregation (gTop-k, Shi et al. ICDCS 2019): tree-
+    /// reduce the per-worker sparse gradients, re-truncating to the k
+    /// largest |sums| at every merge. Returns the dense *average* plus the
+    /// globally-selected index set (the trainer uses it to restore each
+    /// worker's globally-dropped contributions into its residual).
+    fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>);
 }
 
-/// Sparse all-gather aggregation: every worker contributes its sparse
-/// gradient; the result is the dense *average* of the union (coordinates
-/// selected by multiple workers sum their values; divisor is P, matching
-/// Eq. 2's (1/P)Σ Comp_k semantics).
+/// Dense ring all-reduce (average) over per-worker vectors — serial
+/// reference engine. See [`Collectives::ring_allreduce_avg`].
+pub fn ring_allreduce_avg(inputs: &[Vec<f32>]) -> Vec<f32> {
+    SerialCollectives.ring_allreduce_avg(inputs)
+}
+
+/// Sparse all-gather aggregation — serial reference engine. See
+/// [`Collectives::sparse_allgather_avg`].
 pub fn sparse_allgather_avg(inputs: &[SparseVec]) -> Vec<f32> {
-    let p = inputs.len();
-    assert!(p > 0, "no workers");
-    let d = inputs[0].d;
-    assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
-    let mut out = vec![0.0f32; d];
-    for s in inputs {
-        s.add_into(&mut out);
-    }
-    let inv = 1.0 / p as f32;
-    out.iter_mut().for_each(|v| *v *= inv);
-    out
+    SerialCollectives.sparse_allgather_avg(inputs)
+}
+
+/// Global top-k aggregation (gTop-k) — serial reference engine. See
+/// [`Collectives::gtopk_allreduce_avg`].
+pub fn gtopk_allreduce_avg(inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+    SerialCollectives.gtopk_allreduce_avg(inputs, k)
 }
 
 /// Total wire bytes each worker transmits for a sparse all-gather of the
@@ -93,6 +108,56 @@ pub fn sparse_allgather_avg(inputs: &[SparseVec]) -> Vec<f32> {
 /// by the netsim α-β model).
 pub fn sparse_allgather_bytes(inputs: &[SparseVec]) -> u64 {
     inputs.iter().map(|s| s.wire_bytes()).sum()
+}
+
+/// Ring chunk boundaries shared by both engines: `d.div_ceil(p)`-sized
+/// chunks, the trailing ones possibly empty when d < p. Centralised here
+/// because the bit-equivalence guarantee depends on both engines chunking
+/// identically — a drift axis if each computed its own.
+pub(crate) fn chunk_bounds(d: usize, p: usize) -> Vec<(usize, usize)> {
+    let chunk = d.div_ceil(p);
+    (0..p)
+        .map(|c| ((c * chunk).min(d), ((c + 1) * chunk).min(d)))
+        .collect()
+}
+
+/// Merge two sparse vectors (summing overlaps) and keep the k largest
+/// magnitudes. Linear in nnz(a) + nnz(b) plus a quickselect. Shared by
+/// both gTop-k engines — a pure function, so the tree reduction it builds
+/// is engine-independent.
+pub(crate) fn merge_truncate(a: &SparseVec, b: &SparseVec, k: usize) -> SparseVec {
+    debug_assert_eq!(a.d, b.d);
+    let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(a.nnz() + b.nnz());
+    let (mut i, mut j) = (0, 0);
+    while i < a.nnz() && j < b.nnz() {
+        match a.indices[i].cmp(&b.indices[j]) {
+            std::cmp::Ordering::Less => {
+                pairs.push((a.indices[i], a.values[i]));
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                pairs.push((b.indices[j], b.values[j]));
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                pairs.push((a.indices[i], a.values[i] + b.values[j]));
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    pairs.extend(a.indices[i..].iter().zip(&a.values[i..]).map(|(&x, &v)| (x, v)));
+    pairs.extend(b.indices[j..].iter().zip(&b.values[j..]).map(|(&x, &v)| (x, v)));
+    if pairs.len() > k {
+        pairs.select_nth_unstable_by(k - 1, |x, y| y.1.abs().total_cmp(&x.1.abs()));
+        pairs.truncate(k);
+        pairs.sort_unstable_by_key(|p| p.0);
+    }
+    SparseVec {
+        d: a.d,
+        indices: pairs.iter().map(|p| p.0).collect(),
+        values: pairs.iter().map(|p| p.1).collect(),
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +191,16 @@ mod tests {
         let inputs = vec![vec![4.0f32], vec![8.0], vec![0.0], vec![-4.0]];
         let out = ring_allreduce_avg(&inputs);
         assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ring_empty_gradient_returns_empty() {
+        // Regression: d == 0 (empty model / empty layer group) must not
+        // panic — it returns an empty averaged vector.
+        let inputs: Vec<Vec<f32>> = vec![Vec::new(), Vec::new()];
+        assert_eq!(ring_allreduce_avg(&inputs), Vec::<f32>::new());
+        // Single worker, empty gradient.
+        assert_eq!(ring_allreduce_avg(&[Vec::new()]), Vec::<f32>::new());
     }
 
     /// Ring all-reduce equals the sequential average for any P, d.
@@ -184,86 +259,6 @@ mod tests {
         let a = SparseVec::from_pairs(10, vec![(1, 1.0)]);
         let b = SparseVec::from_pairs(10, vec![(2, 1.0), (3, 1.0)]);
         assert_eq!(sparse_allgather_bytes(&[a, b]), 24);
-    }
-}
-
-/// Global top-k aggregation (gTop-k, Shi et al. ICDCS 2019 — the paper's
-/// cited companion system): tree-reduce the per-worker sparse gradients,
-/// re-truncating to the k largest |sums| at every merge, so the final
-/// update has exactly ≤ k non-zeros and per-round traffic stays O(k·log P)
-/// instead of the all-gather's O(k·P).
-///
-/// Returns the dense *average* plus the globally-selected index set (the
-/// trainer uses it to restore each worker's globally-dropped contributions
-/// into its residual, keeping error feedback exact — see
-/// `coordinator::trainer`).
-pub fn gtopk_allreduce_avg(inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
-    let p = inputs.len();
-    assert!(p > 0, "no workers");
-    let d = inputs[0].d;
-    assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
-
-    // Tree reduction: pairwise merge + truncate, log2(P) rounds.
-    let mut level: Vec<SparseVec> = inputs.to_vec();
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(2));
-        let mut it = level.into_iter();
-        while let Some(a) = it.next() {
-            match it.next() {
-                Some(b) => next.push(merge_truncate(&a, &b, k)),
-                None => next.push(a),
-            }
-        }
-        level = next;
-    }
-    let mut merged = level.pop().unwrap();
-    // Uniform contract: the result is always ≤ k-sparse (P = 1 included).
-    if merged.nnz() > k {
-        let empty = SparseVec::new(d);
-        merged = merge_truncate(&merged, &empty, k);
-    }
-    let mut out = vec![0.0f32; d];
-    let inv = 1.0 / p as f32;
-    for (&i, &v) in merged.indices.iter().zip(&merged.values) {
-        out[i as usize] = v * inv;
-    }
-    (out, merged.indices)
-}
-
-/// Merge two sparse vectors (summing overlaps) and keep the k largest
-/// magnitudes. Linear in nnz(a) + nnz(b) plus a quickselect.
-fn merge_truncate(a: &SparseVec, b: &SparseVec, k: usize) -> SparseVec {
-    debug_assert_eq!(a.d, b.d);
-    let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(a.nnz() + b.nnz());
-    let (mut i, mut j) = (0, 0);
-    while i < a.nnz() && j < b.nnz() {
-        match a.indices[i].cmp(&b.indices[j]) {
-            std::cmp::Ordering::Less => {
-                pairs.push((a.indices[i], a.values[i]));
-                i += 1;
-            }
-            std::cmp::Ordering::Greater => {
-                pairs.push((b.indices[j], b.values[j]));
-                j += 1;
-            }
-            std::cmp::Ordering::Equal => {
-                pairs.push((a.indices[i], a.values[i] + b.values[j]));
-                i += 1;
-                j += 1;
-            }
-        }
-    }
-    pairs.extend(a.indices[i..].iter().zip(&a.values[i..]).map(|(&x, &v)| (x, v)));
-    pairs.extend(b.indices[j..].iter().zip(&b.values[j..]).map(|(&x, &v)| (x, v)));
-    if pairs.len() > k {
-        pairs.select_nth_unstable_by(k - 1, |x, y| y.1.abs().total_cmp(&x.1.abs()));
-        pairs.truncate(k);
-        pairs.sort_unstable_by_key(|p| p.0);
-    }
-    SparseVec {
-        d: a.d,
-        indices: pairs.iter().map(|p| p.0).collect(),
-        values: pairs.iter().map(|p| p.1).collect(),
     }
 }
 

@@ -1,0 +1,123 @@
+//! The serial reference engine: every collective is computed on the
+//! calling thread, simulating the P-worker exchange step by step.
+//!
+//! This engine is the *oracle* for the threaded engine — the property
+//! suite (`tests/parallel_equivalence.rs`) asserts bit-identical outputs
+//! between the two for every collective, so any change here must be
+//! mirrored in [`super::ThreadedCollectives`] (and vice versa).
+
+use super::{chunk_bounds, merge_truncate, Collectives};
+use crate::tensor::SparseVec;
+
+/// Single-threaded collectives engine (the original implementation and
+/// the numerics oracle).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialCollectives;
+
+impl Collectives for SerialCollectives {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Vec<f32> {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == d), "dim mismatch across workers");
+        // Empty gradient: nothing to reduce. Return early instead of
+        // deriving degenerate chunk bounds (regression-tested).
+        if d == 0 {
+            return Vec::new();
+        }
+        if p == 1 {
+            return inputs[0].clone();
+        }
+
+        // Chunk boundaries (last chunks may be empty when d < p) — shared
+        // with the threaded engine so the schedules can never drift.
+        let bounds = chunk_bounds(d, p);
+
+        // Working copies simulate each worker's buffer.
+        let mut bufs: Vec<Vec<f32>> = inputs.to_vec();
+
+        // Reduce-scatter: at step s, worker w sends chunk (w - s) to worker w+1.
+        for s in 0..p - 1 {
+            // Snapshot of the chunks being sent this step (all sends happen
+            // "simultaneously" on a real ring).
+            let sends: Vec<(usize, usize, Vec<f32>)> = (0..p)
+                .map(|w| {
+                    let c = (w + p - s) % p;
+                    let (lo, hi) = bounds[c];
+                    (w, c, bufs[w][lo..hi].to_vec())
+                })
+                .collect();
+            for (w, c, data) in sends {
+                let dst = (w + 1) % p;
+                let (lo, _hi) = bounds[c];
+                for (i, v) in data.into_iter().enumerate() {
+                    bufs[dst][lo + i] += v;
+                }
+            }
+        }
+        // After reduce-scatter, worker w owns the fully-reduced chunk
+        // (w + 1) % p. Assemble the result from the owners.
+        let mut out = vec![0.0f32; d];
+        for w in 0..p {
+            let c = (w + 1) % p;
+            let (lo, hi) = bounds[c];
+            out[lo..hi].copy_from_slice(&bufs[w][lo..hi]);
+        }
+        let inv = 1.0 / p as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        out
+    }
+
+    fn sparse_allgather_avg(&self, inputs: &[SparseVec]) -> Vec<f32> {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].d;
+        assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
+        let mut out = vec![0.0f32; d];
+        // Rank-order accumulation — the threaded engine reproduces exactly
+        // this per-coordinate addition order.
+        for s in inputs {
+            s.add_into(&mut out);
+        }
+        let inv = 1.0 / p as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        out
+    }
+
+    fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].d;
+        assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
+
+        // Tree reduction: pairwise merge + truncate, log2(P) rounds.
+        let mut level: Vec<SparseVec> = inputs.to_vec();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(merge_truncate(&a, &b, k)),
+                    None => next.push(a),
+                }
+            }
+            level = next;
+        }
+        let mut merged = level.pop().unwrap();
+        // Uniform contract: the result is always ≤ k-sparse (P = 1 included).
+        if merged.nnz() > k {
+            let empty = SparseVec::new(d);
+            merged = merge_truncate(&merged, &empty, k);
+        }
+        let mut out = vec![0.0f32; d];
+        let inv = 1.0 / p as f32;
+        for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+            out[i as usize] = v * inv;
+        }
+        (out, merged.indices)
+    }
+}

@@ -1,0 +1,279 @@
+//! The threaded engine: real OS threads exchanging chunks over `mpsc`
+//! channels in the exact ring schedule of the serial oracle.
+//!
+//! ## Why the results are bit-identical to [`super::SerialCollectives`]
+//!
+//! Floating-point addition is not associative, so "parallel but only
+//! approximately equal" would poison every determinism guarantee the
+//! trainer makes. The ring schedule sidesteps this: each coordinate of the
+//! reduced vector is accumulated along a *fixed path around the ring*
+//! (chunk c is reduced hop by hop starting at worker c), so the summation
+//! order per element is a property of the ring topology, not of thread
+//! scheduling. The only cross-thread data flow is through the per-link
+//! channels, and each link carries its chunks in step order (mpsc channels
+//! are FIFO), so every interleaving the OS scheduler picks yields the same
+//! per-element addition order — the one the serial engine simulates with
+//! its snapshot-then-apply loop. The same argument covers the sparse
+//! all-gather: ownership of output chunks is partitioned across workers,
+//! and each owner accumulates the P contributions in rank order, exactly
+//! as the serial engine's sequential `add_into` loop does.
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::{chunk_bounds, merge_truncate, Collectives};
+use crate::tensor::SparseVec;
+
+/// Channel-based collectives engine: one OS thread per ring participant.
+///
+/// The ring schedule is defined per worker, so these collectives always
+/// spawn exactly one thread per participating worker — there is no thread
+/// budget here. The `n` of `Parallelism::Threads(n)` caps only the
+/// *trainer's* gradient-compute fan-out (see `coordinator::trainer`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ThreadedCollectives;
+
+impl Collectives for ThreadedCollectives {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Vec<f32> {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].len();
+        assert!(inputs.iter().all(|v| v.len() == d), "dim mismatch across workers");
+        // Empty gradient: nothing to reduce (mirrors the serial early
+        // return; chunk bounds would all be (0, 0)).
+        if d == 0 {
+            return Vec::new();
+        }
+        if p == 1 {
+            return inputs[0].clone();
+        }
+
+        let bounds = chunk_bounds(d, p);
+        // Link l carries chunks from worker l to worker (l + 1) % p; worker
+        // w therefore receives on link (w + p - 1) % p.
+        let mut txs: Vec<Option<mpsc::Sender<Vec<f32>>>> = Vec::with_capacity(p);
+        let mut rxs: Vec<Option<mpsc::Receiver<Vec<f32>>>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel();
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+
+        let mut out = vec![0.0f32; d];
+        thread::scope(|s| {
+            let bounds = &bounds;
+            let mut handles = Vec::with_capacity(p);
+            for w in 0..p {
+                let tx = txs[w].take().expect("tx taken twice");
+                let rx = rxs[(w + p - 1) % p].take().expect("rx taken twice");
+                let init = &inputs[w];
+                handles.push(s.spawn(move || {
+                    let mut buf = init.clone();
+                    // Reduce-scatter: send chunk (w - s), receive and fold
+                    // chunk (w - 1 - s). The chunk sent at step s is the one
+                    // folded at step s - 1, so channel FIFO order alone
+                    // enforces the serial schedule — no barrier needed.
+                    for step in 0..p - 1 {
+                        let (lo, hi) = bounds[(w + p - step) % p];
+                        tx.send(buf[lo..hi].to_vec()).expect("ring peer hung up");
+                        let inc = rx.recv().expect("ring peer hung up");
+                        let (lo, hi) = bounds[(w + p - 1 - step) % p];
+                        for (dst, v) in buf[lo..hi].iter_mut().zip(inc) {
+                            *dst += v;
+                        }
+                    }
+                    // Worker w now owns the fully-reduced chunk (w + 1) % p.
+                    let own = (w + 1) % p;
+                    let (lo, hi) = bounds[own];
+                    (own, buf[lo..hi].to_vec())
+                }));
+            }
+            for h in handles {
+                let (c, data) = h.join().expect("ring worker panicked");
+                let (lo, hi) = bounds[c];
+                out[lo..hi].copy_from_slice(&data);
+            }
+        });
+        let inv = 1.0 / p as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        out
+    }
+
+    fn sparse_allgather_avg(&self, inputs: &[SparseVec]) -> Vec<f32> {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].d;
+        assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
+        if d == 0 {
+            return Vec::new();
+        }
+        if p == 1 {
+            // Average over P = 1: densify only (×1.0 is exact).
+            let mut out = vec![0.0f32; d];
+            inputs[0].add_into(&mut out);
+            return out;
+        }
+
+        let bounds = chunk_bounds(d, p);
+        // Ring all-gather: each worker's payload travels all the way around
+        // the ring (references — the real system copies 2k numbers per hop,
+        // accounted separately by `sparse_allgather_bytes`). Afterwards,
+        // worker w owns output chunk w and accumulates the P contributions
+        // restricted to it *in rank order*, reproducing the serial engine's
+        // per-coordinate addition order.
+        let mut txs: Vec<Option<mpsc::Sender<&SparseVec>>> = Vec::with_capacity(p);
+        let mut rxs: Vec<Option<mpsc::Receiver<&SparseVec>>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel();
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+
+        let mut out = vec![0.0f32; d];
+        thread::scope(|s| {
+            let bounds = &bounds;
+            let mut handles = Vec::with_capacity(p);
+            for w in 0..p {
+                let tx = txs[w].take().expect("tx taken twice");
+                let rx = rxs[(w + p - 1) % p].take().expect("rx taken twice");
+                handles.push(s.spawn(move || {
+                    let mut by_rank: Vec<Option<&SparseVec>> = vec![None; p];
+                    by_rank[w] = Some(&inputs[w]);
+                    let mut cur = &inputs[w];
+                    for step in 0..p - 1 {
+                        tx.send(cur).expect("ring peer hung up");
+                        let inc = rx.recv().expect("ring peer hung up");
+                        // The payload received at step s originated at rank
+                        // (w - 1 - s) and has circulated s + 1 hops.
+                        by_rank[(w + p - 1 - step) % p] = Some(inc);
+                        cur = inc;
+                    }
+                    let (lo, hi) = bounds[w];
+                    let mut acc = vec![0.0f32; hi - lo];
+                    for r in 0..p {
+                        let sv = by_rank[r].expect("allgather incomplete");
+                        // Indices are sorted: binary-search the [lo, hi) window.
+                        let a = sv.indices.partition_point(|&i| (i as usize) < lo);
+                        let b = sv.indices.partition_point(|&i| (i as usize) < hi);
+                        for t in a..b {
+                            acc[sv.indices[t] as usize - lo] += sv.values[t];
+                        }
+                    }
+                    (w, acc)
+                }));
+            }
+            for h in handles {
+                let (c, data) = h.join().expect("allgather worker panicked");
+                let (lo, hi) = bounds[c];
+                out[lo..hi].copy_from_slice(&data);
+            }
+        });
+        let inv = 1.0 / p as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        out
+    }
+
+    fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].d;
+        assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
+
+        // Tree reduction with the merges of each level running concurrently.
+        // The pairing (chunks of 2, in rank order) matches the serial
+        // engine's, and each merge is a pure function of its pair, so the
+        // tree — and therefore the result — is bit-identical.
+        let mut level: Vec<SparseVec> = inputs.to_vec();
+        while level.len() > 1 {
+            level = thread::scope(|s| {
+                // Spawn only real merges; an odd trailing element just
+                // carries over (cloned on the calling thread — no point
+                // paying a thread spawn for a clone).
+                let handles: Vec<_> = level
+                    .chunks_exact(2)
+                    .map(|pair| s.spawn(move || merge_truncate(&pair[0], &pair[1], k)))
+                    .collect();
+                let mut next: Vec<SparseVec> = handles
+                    .into_iter()
+                    .map(|h| h.join().expect("gtopk merge panicked"))
+                    .collect();
+                if level.len() % 2 == 1 {
+                    next.push(level.last().expect("non-empty level").clone());
+                }
+                next
+            });
+        }
+        let mut merged = level.pop().unwrap();
+        if merged.nnz() > k {
+            let empty = SparseVec::new(d);
+            merged = merge_truncate(&merged, &empty, k);
+        }
+        let mut out = vec![0.0f32; d];
+        let inv = 1.0 / p as f32;
+        for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+            out[i as usize] = v * inv;
+        }
+        (out, merged.indices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::SerialCollectives;
+
+    #[test]
+    fn threaded_ring_matches_serial_small() {
+        let inputs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![-1.0, -2.0, -3.0, -4.0, -5.0],
+        ];
+        let serial = SerialCollectives.ring_allreduce_avg(&inputs);
+        let threaded = ThreadedCollectives.ring_allreduce_avg(&inputs);
+        assert_eq!(serial, threaded);
+    }
+
+    #[test]
+    fn threaded_ring_d_smaller_than_p() {
+        // d = 1, P = 4: three of the four ring chunks are empty.
+        let inputs = vec![vec![4.0f32], vec![8.0], vec![0.0], vec![-4.0]];
+        let serial = SerialCollectives.ring_allreduce_avg(&inputs);
+        let threaded = ThreadedCollectives.ring_allreduce_avg(&inputs);
+        assert_eq!(serial, threaded);
+        assert!((threaded[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn threaded_ring_empty_gradient() {
+        // Regression: d == 0 must return an empty vector, not panic on
+        // degenerate chunk bounds.
+        let inputs: Vec<Vec<f32>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        assert_eq!(ThreadedCollectives.ring_allreduce_avg(&inputs), Vec::<f32>::new());
+        assert_eq!(SerialCollectives.ring_allreduce_avg(&inputs), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn threaded_sparse_matches_serial_small() {
+        let a = SparseVec::from_pairs(6, vec![(0, 1.0), (2, 2.0)]);
+        let b = SparseVec::from_pairs(6, vec![(2, 4.0), (5, -1.0)]);
+        let serial = SerialCollectives.sparse_allgather_avg(&[a.clone(), b.clone()]);
+        let threaded = ThreadedCollectives.sparse_allgather_avg(&[a, b]);
+        assert_eq!(serial, threaded);
+        assert_eq!(threaded, vec![0.5, 0.0, 3.0, 0.0, 0.0, -0.5]);
+    }
+
+    #[test]
+    fn threaded_gtopk_matches_serial_small() {
+        let a = SparseVec::from_pairs(6, vec![(0, 3.0), (2, 1.0)]);
+        let b = SparseVec::from_pairs(6, vec![(2, 1.5), (5, -4.0)]);
+        let c = SparseVec::from_pairs(6, vec![(1, 0.5), (5, 1.0)]);
+        let serial = SerialCollectives.gtopk_allreduce_avg(&[a.clone(), b.clone(), c.clone()], 2);
+        let threaded = ThreadedCollectives.gtopk_allreduce_avg(&[a, b, c], 2);
+        assert_eq!(serial, threaded);
+    }
+}

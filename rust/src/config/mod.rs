@@ -4,10 +4,116 @@
 //! The parser supports the subset our configs use: `[section]` headers,
 //! `key = value` with string/number/bool values, and `#` comments — enough
 //! for full experiment files while staying dependency-free (DESIGN.md §2).
+//!
+//! ## `[train]` keys
+//!
+//! | key                   | default    | meaning                                              |
+//! |-----------------------|------------|------------------------------------------------------|
+//! | `workers`             | `16`       | simulated workers P                                  |
+//! | `op`                  | `"topk"`   | compression operator (`dense`/`topk`/`randk`/`dgc`/`trimmed`/`gaussiank`) |
+//! | `k_ratio`             | `0.001`    | sparsity ratio k/d                                   |
+//! | `batch_size`          | `32`       | per-worker batch size                                |
+//! | `steps`               | `400`      | training steps                                       |
+//! | `lr`                  | `0.1`      | base learning rate                                   |
+//! | `momentum`            | `0.9`      | SGD momentum                                         |
+//! | `lr_final_frac`       | `0.1`      | cosine-decay floor as a fraction of `lr`             |
+//! | `seed`                | `42`       | master RNG seed                                      |
+//! | `eval_every`          | `50`       | eval period in steps                                 |
+//! | `hist_every`          | `0`        | gradient-histogram period (0 = never)                |
+//! | `momentum_correction` | `false`    | DGC-style local momentum before compression          |
+//! | `global_topk`         | `false`    | gTop-k tree aggregation instead of all-gather union  |
+//! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads` (one thread per available core), or `threads:N` — results are bit-identical across all settings |
 
 use std::collections::BTreeMap;
 
+use crate::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
 use crate::compress::OpKind;
+
+/// How the trainer runs its P simulated workers.
+///
+/// `Serial` steps the workers one after another on the calling thread —
+/// the reference path. `Threads(n)` spawns up to `n` OS threads that own
+/// disjoint worker groups and run the gradient/compression phase
+/// concurrently, aggregating through the channel-based
+/// [`ThreadedCollectives`] engine. Both settings produce **bit-identical**
+/// training trajectories (see `collectives` module docs for the why);
+/// `Threads` only changes wall-clock time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    /// One thread, workers stepped in rank order (the oracle).
+    Serial,
+    /// Up to n OS threads across the worker group (n ≥ workers gives one
+    /// thread per simulated worker).
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// `Threads(n)` with n = available cores — the single auto-detect
+    /// policy (benches and the `"threads"` config value both use this).
+    pub fn auto() -> Parallelism {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Parallelism::Threads(n)
+    }
+
+    /// Parse a config/CLI value: `serial`, `threads` (auto = available
+    /// cores), `threads:N`, or `threads(N)`.
+    pub fn parse(s: &str) -> anyhow::Result<Parallelism> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "serial" {
+            return Ok(Parallelism::Serial);
+        }
+        if t == "threads" {
+            return Ok(Parallelism::auto());
+        }
+        if let Some(rest) = t.strip_prefix("threads") {
+            // Exactly one separator form: threads:N, threads=N, threads(N).
+            // (Sloppy forms like `threads4` are rejected, not guessed at.)
+            let digits = rest
+                .strip_prefix(':')
+                .or_else(|| rest.strip_prefix('='))
+                .or_else(|| rest.strip_prefix('(').and_then(|d| d.strip_suffix(')')))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bad parallelism '{s}': expected serial|threads|threads:N")
+                })?;
+            let n: usize = digits
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad parallelism '{s}': expected serial|threads|threads:N"))?;
+            anyhow::ensure!(n >= 1, "parallelism threads:N needs N >= 1");
+            return Ok(Parallelism::Threads(n));
+        }
+        anyhow::bail!("bad parallelism '{s}': expected serial|threads|threads:N")
+    }
+
+    /// Display form (round-trips through [`Parallelism::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Parallelism::Serial => "serial".to_string(),
+            Parallelism::Threads(n) => format!("threads:{n}"),
+        }
+    }
+
+    /// Thread budget for the trainer's gradient phase (1 for serial).
+    pub fn threads(&self) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Threads(n) => (*n).max(1),
+        }
+    }
+
+    /// Build the matching collectives engine. The thread count does not
+    /// parameterize the engine — ring collectives always use one thread
+    /// per participant; `n` only budgets the trainer's gradient phase.
+    pub fn engine(&self) -> Box<dyn Collectives> {
+        match self {
+            Parallelism::Serial => Box::new(SerialCollectives),
+            Parallelism::Threads(_) => Box::new(ThreadedCollectives),
+        }
+    }
+
+    pub fn is_threaded(&self) -> bool {
+        matches!(self, Parallelism::Threads(_))
+    }
+}
 
 /// Raw parsed config: section → key → string value.
 #[derive(Debug, Clone, Default)]
@@ -108,6 +214,9 @@ pub struct TrainConfig {
     /// contributions are restored into each worker's residual so error
     /// feedback stays exact.
     pub global_topk: bool,
+    /// Worker runtime: serial (reference) or threaded. Bit-identical
+    /// numerics either way; threads only change wall-clock time.
+    pub parallelism: Parallelism,
 }
 
 impl Default for TrainConfig {
@@ -126,6 +235,7 @@ impl Default for TrainConfig {
             hist_every: 0,
             momentum_correction: false,
             global_topk: false,
+            parallelism: Parallelism::Serial,
         }
     }
 }
@@ -156,6 +266,10 @@ impl TrainConfig {
                 d.momentum_correction,
             )?,
             global_topk: raw.parsed_or("train", "global_topk", d.global_topk)?,
+            parallelism: match raw.get("train", "parallelism") {
+                Some(s) => Parallelism::parse(s)?,
+                None => d.parallelism,
+            },
         })
     }
 
@@ -172,6 +286,9 @@ impl TrainConfig {
             (0.0..1.0).contains(&self.momentum),
             "momentum must be in [0, 1)"
         );
+        if let Parallelism::Threads(n) = self.parallelism {
+            anyhow::ensure!(n >= 1, "parallelism threads:N needs N >= 1");
+        }
         Ok(())
     }
 }
@@ -231,6 +348,41 @@ lr = 0.05
         cfg.k_ratio = 0.5;
         cfg.momentum = 1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parallelism_parsing() {
+        assert_eq!(Parallelism::parse("serial").unwrap(), Parallelism::Serial);
+        assert_eq!(Parallelism::parse("threads:4").unwrap(), Parallelism::Threads(4));
+        assert_eq!(Parallelism::parse("threads(8)").unwrap(), Parallelism::Threads(8));
+        assert_eq!(Parallelism::parse("THREADS:2").unwrap(), Parallelism::Threads(2));
+        match Parallelism::parse("threads").unwrap() {
+            Parallelism::Threads(n) => assert!(n >= 1),
+            other => panic!("auto threads parsed as {other:?}"),
+        }
+        assert!(Parallelism::parse("threads:0").is_err());
+        assert!(Parallelism::parse("threads4").is_err()); // separator required
+        assert!(Parallelism::parse("threads(4").is_err()); // unclosed paren
+        assert!(Parallelism::parse("gpu").is_err());
+        // name() round-trips.
+        for p in [Parallelism::Serial, Parallelism::Threads(4)] {
+            assert_eq!(Parallelism::parse(&p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn parallelism_from_raw_and_engine() {
+        let raw = RawConfig::parse("[train]\nparallelism = \"threads:3\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Threads(3));
+        assert_eq!(cfg.parallelism.threads(), 3);
+        assert_eq!(cfg.parallelism.engine().name(), "threaded");
+        assert_eq!(Parallelism::Serial.engine().name(), "serial");
+        assert_eq!(Parallelism::Serial.threads(), 1);
+        // Default stays serial.
+        let d = TrainConfig::default();
+        assert_eq!(d.parallelism, Parallelism::Serial);
+        d.validate().unwrap();
     }
 
     #[test]

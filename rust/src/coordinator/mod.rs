@@ -15,6 +15,21 @@
 //! tested against sequential sums). Virtual timing for throughput studies
 //! comes from [`crate::netsim`]; wall-clock timing of the L3 hot path is
 //! recorded per step.
+//!
+//! ## Parallel worker runtime
+//!
+//! Under `config::Parallelism::Threads(n)` the per-worker compute phase
+//! (gradient + error feedback + compression) runs on up to `n` OS
+//! threads. Each thread owns a disjoint contiguous group of
+//! [`WorkerState`]s and a forked model replica (`Model::fork`), so the
+//! phase is lock-free; aggregation then goes through the channel-based
+//! `collectives::ThreadedCollectives` engine, whose ring schedule keeps
+//! per-element summation order fixed. The guarantee — proved by
+//! `tests/parallel_equivalence.rs` — is that `Threads(n)` produces
+//! **bit-identical** training trajectories to `Serial` for every operator
+//! and every `n`: threading changes wall-clock time, never numerics. The
+//! serial path stays alive behind the same `Collectives` trait as the
+//! reference oracle.
 
 pub mod optimizer;
 pub mod trainer;

@@ -71,9 +71,42 @@ impl SgdMomentum {
     }
 }
 
+/// DGC-style local momentum correction (Lin et al. 2018, the paper's §4.4
+/// fix), run *inside* each worker before compression:
+/// `v ← m·v + g; g ← v`.
+///
+/// Lives here so the serial and threaded worker runtimes share one
+/// implementation (it runs on worker threads under
+/// `Parallelism::Threads`). The velocity buffer is lazily allocated on
+/// first use; the update is a pure function of (v, g), so per-worker
+/// results are bit-identical across runtimes.
+pub fn momentum_correct(velocity: &mut Vec<f32>, grad: &mut [f32], m: f32) {
+    if velocity.is_empty() {
+        velocity.resize(grad.len(), 0.0);
+    }
+    debug_assert_eq!(velocity.len(), grad.len());
+    for (v, g) in velocity.iter_mut().zip(grad.iter_mut()) {
+        *v = m * *v + *g;
+        *g = *v;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn momentum_correct_accumulates_locally() {
+        let mut v = Vec::new();
+        let mut g = vec![1.0f32, -2.0];
+        momentum_correct(&mut v, &mut g, 0.5);
+        assert_eq!(v, vec![1.0, -2.0]); // lazily allocated, v = g
+        assert_eq!(g, vec![1.0, -2.0]);
+        let mut g2 = vec![1.0f32, 0.0];
+        momentum_correct(&mut v, &mut g2, 0.5);
+        assert_eq!(v, vec![1.5, -1.0]); // v = 0.5·v + g
+        assert_eq!(g2, v);
+    }
 
     #[test]
     fn plain_sgd_update() {

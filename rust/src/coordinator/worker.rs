@@ -2,6 +2,12 @@
 //! independent data-shard RNG, the error-feedback residual store, the
 //! worker's own compressor instance (stochastic operators keep
 //! independent streams), and a reusable gradient buffer.
+//!
+//! Every field is *owned* — no shared references, no interior mutability —
+//! so a `WorkerState` is `Send` and the threaded worker runtime can hand
+//! each OS thread exclusive `&mut` access to its worker group without
+//! locks. The `Send` bound is asserted at compile time in the tests below;
+//! breaking it (e.g. by adding an `Rc` field) fails the build.
 
 use crate::compress::{Compressor, OpKind};
 use crate::error_feedback::ResidualStore;
@@ -46,6 +52,14 @@ impl WorkerState {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Compile-time contract: worker state (and thus everything inside it,
+    /// including the boxed compressor) can move to a worker thread.
+    #[test]
+    fn worker_state_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<WorkerState>();
+    }
 
     #[test]
     fn workers_have_independent_data_streams() {

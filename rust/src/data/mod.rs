@@ -20,8 +20,10 @@ pub struct Batch {
     pub features: usize,
 }
 
-/// A deterministic classification data source.
-pub trait DataSource: Send {
+/// A deterministic classification data source. `Sync` because the
+/// threaded worker runtime samples shards from multiple worker threads
+/// concurrently (each with its own RNG; the source itself is immutable).
+pub trait DataSource: Send + Sync {
     fn features(&self) -> usize;
     fn classes(&self) -> usize;
     /// Sample a batch with the given RNG (callers shard by giving each

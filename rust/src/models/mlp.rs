@@ -248,6 +248,13 @@ impl Model for NativeMlp {
         }
         correct as f64 / n as f64
     }
+
+    fn fork(&self) -> Option<Box<dyn Model + Send>> {
+        // A fresh replica with the same dims shares the layout and the
+        // (pure) forward/backward math; scratch buffers are lazily sized
+        // on first use, so gradients are bit-identical to the original's.
+        Some(Box::new(NativeMlp::new(&self.dims)))
+    }
 }
 
 #[cfg(test)]

@@ -15,8 +15,10 @@ use crate::tensor::Layout;
 
 /// A trainable model: owns nothing; parameters are a flat f32 vector the
 /// coordinator manages (so compression operates on the same flat layout
-/// the AOT artifacts use). Not `Send`: the PJRT backend wraps raw client
-/// handles; the coordinator is single-threaded by design (DESIGN.md §4).
+/// the AOT artifacts use). The trait itself is not `Send` (the PJRT
+/// backend wraps raw client handles), but backends that *can* replicate
+/// themselves expose [`Model::fork`], which the threaded worker runtime
+/// uses to give each worker thread its own gradient engine.
 pub trait Model {
     /// Parameter layout (names + sizes). `layout().total()` == d.
     fn layout(&self) -> &Layout;
@@ -46,5 +48,16 @@ pub trait Model {
         let loss = self.train_step(params, x, y, n, &mut scratch);
         let acc = self.accuracy(params, x, y, n);
         (loss, acc)
+    }
+
+    /// Fork an independent replica for a parallel worker thread.
+    ///
+    /// The replica must compute bit-identical `train_step` results for the
+    /// same (params, batch) — gradients are a pure function of the inputs;
+    /// only scratch buffers may be fresh. Returns `None` when the backend
+    /// cannot be replicated (PJRT wraps raw runtime handles), in which
+    /// case the trainer rejects `Parallelism::Threads`.
+    fn fork(&self) -> Option<Box<dyn Model + Send>> {
+        None
     }
 }

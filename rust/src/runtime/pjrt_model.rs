@@ -180,4 +180,12 @@ impl Model for PjrtModel {
             (loss / chunks as f64, acc / chunks as f64)
         }
     }
+
+    fn fork(&self) -> Option<Box<dyn Model + Send>> {
+        // PJRT executables wrap raw client/buffer handles that are neither
+        // Send nor safely replicable from here, so the threaded worker
+        // runtime is unavailable; `Parallelism::Threads` on this backend
+        // is rejected by the trainer with a pointer at the native MLP.
+        None
+    }
 }

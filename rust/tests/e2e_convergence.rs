@@ -2,7 +2,7 @@
 //! artifacts needed): the paper's qualitative claims at miniature scale.
 
 use sparkv::compress::OpKind;
-use sparkv::config::TrainConfig;
+use sparkv::config::{Parallelism, TrainConfig};
 use sparkv::coordinator::train;
 use sparkv::data::{GaussianMixture, SyntheticDigits};
 use sparkv::models::NativeMlp;
@@ -23,6 +23,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         hist_every: 0,
         momentum_correction: false,
         global_topk: false,
+        parallelism: Parallelism::Serial,
     }
 }
 
@@ -89,6 +90,68 @@ fn gaussiank_comm_volume_tracks_target() {
     // And it must NOT be exactly 1 (that would mean no under/over-
     // sparsification at all, contradicting Fig. 10).
     assert!((ratio - 1.0).abs() > 1e-6);
+}
+
+/// The tentpole determinism guarantee, end to end: training with
+/// `Threads(4)` is **bit-identical** to `Serial` — same final loss, same
+/// final parameters, same eval history — for the same seed, for every
+/// compression operator (the threaded runtime and channel collectives
+/// must never change numerics, only wall-clock).
+#[test]
+fn threaded_training_is_bit_identical_per_operator() {
+    let data = GaussianMixture::new(32, 10, 2.0, 1.0, 21);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    for &op in OpKind::all() {
+        let serial_cfg = cfg(op, 30, 0.002);
+        let mut threaded_cfg = serial_cfg.clone();
+        threaded_cfg.parallelism = Parallelism::Threads(4);
+        let a = train(serial_cfg, &mut model, &data).unwrap();
+        let b = train(threaded_cfg, &mut model, &data).unwrap();
+        assert_eq!(
+            a.final_params, b.final_params,
+            "{}: threaded final params diverged from serial",
+            op.name()
+        );
+        assert_eq!(
+            a.metrics.final_loss().unwrap().to_bits(),
+            b.metrics.final_loss().unwrap().to_bits(),
+            "{}: final loss diverged",
+            op.name()
+        );
+        assert_eq!(a.metrics.evals.len(), b.metrics.evals.len(), "{}", op.name());
+        for (ea, eb) in a.metrics.evals.iter().zip(&b.metrics.evals) {
+            assert_eq!(ea.step, eb.step, "{}", op.name());
+            assert_eq!(ea.accuracy.to_bits(), eb.accuracy.to_bits(), "{}: eval accuracy diverged at step {}", op.name(), ea.step);
+            assert_eq!(ea.loss.to_bits(), eb.loss.to_bits(), "{}: eval loss diverged at step {}", op.name(), ea.step);
+        }
+        for (sa, sb) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "{}: step {} loss diverged", op.name(), sa.step);
+            assert_eq!(sa.sent_elements, sb.sent_elements, "{}: step {} sends diverged", op.name(), sa.step);
+        }
+    }
+}
+
+/// Same guarantee for the two aggregation variants the operators compose
+/// with: gTop-k global re-truncation (residual restore runs after the
+/// threaded phase) and DGC momentum correction (velocity lives on worker
+/// threads).
+#[test]
+fn threaded_training_is_bit_identical_gtopk_and_momentum() {
+    let data = GaussianMixture::new(32, 10, 2.0, 1.0, 22);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    for (global_topk, momentum_correction) in [(true, false), (false, true), (true, true)] {
+        let mut serial_cfg = cfg(OpKind::TopK, 30, 0.005);
+        serial_cfg.global_topk = global_topk;
+        serial_cfg.momentum_correction = momentum_correction;
+        let mut threaded_cfg = serial_cfg.clone();
+        threaded_cfg.parallelism = Parallelism::Threads(3); // uneven split of 8 workers
+        let a = train(serial_cfg, &mut model, &data).unwrap();
+        let b = train(threaded_cfg, &mut model, &data).unwrap();
+        assert_eq!(
+            a.final_params, b.final_params,
+            "gtopk={global_topk} mc={momentum_correction}: diverged"
+        );
+    }
 }
 
 /// k-sensitivity (Fig. 11): GaussianK accuracy is robust across

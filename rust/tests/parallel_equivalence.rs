@@ -1,0 +1,178 @@
+//! The serial/parallel equivalence suite: locks the tentpole invariant
+//! that the threaded worker runtime and channel-based collectives are
+//! **bit-identical** to the serial reference path — threading may change
+//! wall-clock time, never numerics.
+//!
+//! Three layers of defence:
+//! 1. property tests over the collectives engines (random P, d, k,
+//!    including the d < P edge chunks and d == 0),
+//! 2. the `Compressor` concurrency contract (Send + deterministic under
+//!    cloned state),
+//! 3. end-to-end trainer determinism lives in `e2e_convergence.rs`
+//!    (`threaded_training_is_bit_identical_per_operator`).
+
+use sparkv::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
+use sparkv::compress::{Compressor, OpKind, TopK};
+use sparkv::stats::rng::Pcg64;
+use sparkv::tensor::SparseVec;
+use sparkv::util::testkit::{self, Gen};
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{what}: index {i}: {x} ({:#x}) vs {y} ({:#x})", x.to_bits(), y.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+/// Serial and threaded ring all-reduce agree bit-for-bit for any P and d —
+/// including d < P (empty trailing chunks) and d == 0 (empty gradient).
+#[test]
+fn prop_ring_allreduce_engines_bit_identical() {
+    let threaded = ThreadedCollectives;
+    testkit::forall("ring-serial-vs-threaded", |g: &mut Gen| {
+        let p = g.usize_in(1, 12);
+        let d = g.usize_in(0, 300); // 0 and d < p on purpose
+        let mut rng = Pcg64::seed(g.rng.next_u64());
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..d).map(|_| (rng.next_gaussian() * 100.0) as f32).collect())
+            .collect();
+        let a = SerialCollectives.ring_allreduce_avg(&inputs);
+        let b = threaded.ring_allreduce_avg(&inputs);
+        assert_bits_eq(&a, &b, &format!("ring p={p} d={d}"))
+    });
+}
+
+/// Serial and threaded sparse all-gather agree bit-for-bit across random
+/// P, d, k, with real Top_k-compressed contributions (overlapping index
+/// sets sum in rank order on both engines).
+#[test]
+fn prop_sparse_allgather_engines_bit_identical() {
+    let threaded = ThreadedCollectives;
+    testkit::forall("allgather-serial-vs-threaded", |g: &mut Gen| {
+        let p = g.usize_in(1, 10);
+        let d = g.usize_in(1, 400);
+        let k = g.usize_in(1, d);
+        let mut rng = Pcg64::seed(g.rng.next_u64());
+        let inputs: Vec<SparseVec> = (0..p)
+            .map(|_| {
+                let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                TopK::new(k).compress(&u)
+            })
+            .collect();
+        let a = SerialCollectives.sparse_allgather_avg(&inputs);
+        let b = threaded.sparse_allgather_avg(&inputs);
+        assert_bits_eq(&a, &b, &format!("allgather p={p} d={d} k={k}"))
+    });
+}
+
+/// Serial and threaded gTop-k agree bit-for-bit (same pairing, same
+/// merges): dense output, and the globally-selected index set.
+#[test]
+fn prop_gtopk_engines_bit_identical() {
+    let threaded = ThreadedCollectives;
+    testkit::forall("gtopk-serial-vs-threaded", |g: &mut Gen| {
+        let p = g.usize_in(1, 9);
+        let d = g.usize_in(8, 300);
+        let k = g.usize_in(1, d / 2 + 1);
+        let mut rng = Pcg64::seed(g.rng.next_u64());
+        let inputs: Vec<SparseVec> = (0..p)
+            .map(|_| {
+                let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                TopK::new(k).compress(&u)
+            })
+            .collect();
+        let (da, sa) = SerialCollectives.gtopk_allreduce_avg(&inputs, k);
+        let (db, sb) = threaded.gtopk_allreduce_avg(&inputs, k);
+        if sa != sb {
+            return Err(format!("gtopk p={p} d={d} k={k}: selected sets differ"));
+        }
+        assert_bits_eq(&da, &db, &format!("gtopk p={p} d={d} k={k}"))
+    });
+}
+
+/// d == 0 regression (the latent chunk-bounds panic): both engines return
+/// an empty vector for an empty gradient, at any P.
+#[test]
+fn ring_allreduce_empty_gradient_regression() {
+    for p in 1..=6 {
+        let inputs: Vec<Vec<f32>> = vec![Vec::new(); p];
+        assert_eq!(SerialCollectives.ring_allreduce_avg(&inputs), Vec::<f32>::new(), "serial P={p}");
+        assert_eq!(
+            ThreadedCollectives.ring_allreduce_avg(&inputs),
+            Vec::<f32>::new(),
+            "threaded P={p}"
+        );
+    }
+}
+
+/// Compile-time half of the `Compressor` concurrency contract: every
+/// operator (and the boxed trait object) can move to a worker thread.
+#[test]
+fn compressors_are_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<sparkv::compress::Dense>();
+    assert_send::<sparkv::compress::TopK>();
+    assert_send::<sparkv::compress::RandK>();
+    assert_send::<sparkv::compress::DgcK>();
+    assert_send::<sparkv::compress::TrimmedK>();
+    assert_send::<sparkv::compress::GaussianK>();
+    assert_send::<Box<dyn Compressor>>();
+}
+
+/// Runtime half of the contract: compressing the same u from two threads
+/// with cloned state (same k, same seed) yields identical `SparseVec`s,
+/// with sorted-unique indices and values unchanged from u — so per-worker
+/// compressors are safe to run concurrently in the threaded runtime.
+#[test]
+fn prop_compressor_contract_under_concurrency() {
+    testkit::forall("compressor-concurrency", |g: &mut Gen| {
+        let d = g.usize_in(16, 2048);
+        let k = g.usize_in(1, d);
+        let seed = g.rng.next_u64();
+        let u = g.mixed_vec(d);
+        for &op in OpKind::all() {
+            // "Cloned state": two instances built from the same (k, seed).
+            let mut c1 = op.build(k, seed);
+            let mut c2 = op.build(k, seed);
+            let (s1, s2) = std::thread::scope(|s| {
+                let u1 = &u;
+                let u2 = &u;
+                let h1 = s.spawn(move || c1.compress(u1));
+                let h2 = s.spawn(move || c2.compress(u2));
+                (
+                    h1.join().expect("compress thread 1 panicked"),
+                    h2.join().expect("compress thread 2 panicked"),
+                )
+            });
+            if s1 != s2 {
+                return Err(format!(
+                    "{}: cloned-state compress diverged across threads (nnz {} vs {})",
+                    op.name(),
+                    s1.nnz(),
+                    s2.nnz()
+                ));
+            }
+            // Indices sorted strictly ascending (unique), values = u[i] bitwise.
+            for w in s1.indices.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("{}: indices not sorted-unique: {:?}", op.name(), w));
+                }
+            }
+            for (&i, &v) in s1.indices.iter().zip(&s1.values) {
+                if u[i as usize].to_bits() != v.to_bits() {
+                    return Err(format!(
+                        "{}: value changed at {i}: {} -> {v}",
+                        op.name(),
+                        u[i as usize]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -179,6 +179,7 @@ fn distributed_training_through_pjrt_learns() {
         hist_every: 0,
         momentum_correction: false,
         global_topk: false,
+        parallelism: sparkv::config::Parallelism::Serial,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
@@ -261,6 +262,7 @@ fn lm_small_trains_through_pjrt() {
         hist_every: 0,
         momentum_correction: false,
         global_topk: false,
+        parallelism: sparkv::config::Parallelism::Serial,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
