@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
                 momentum_correction: false,
                 global_topk: false,
                 parallelism: sparkv::config::Parallelism::Serial,
+                buckets: sparkv::config::Buckets::None,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         momentum_correction: false,
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
+        buckets: sparkv::config::Buckets::None,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         momentum_correction: false,
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
+        buckets: sparkv::config::Buckets::None,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

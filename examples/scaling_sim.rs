@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
             k_ratio,
             straggler_sigma: args.get_parsed_or("stragglers", 0.0),
             seed: 1,
+            buckets: 1,
         };
         let b = Simulator::new(cfg).mean_iteration(20);
         println!(

@@ -4,6 +4,10 @@
 test:
     cd rust && cargo build --release && cargo test -q
 
+# The lint CI job, locally: formatting + clippy with warnings denied.
+lint:
+    cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
+
 # The nightly CI configuration, locally: 4× property-test cases for every
 # testkit::forall invariant (serial/threaded equivalence, compressor
 # contracts, error-feedback mass conservation).

@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
             momentum_correction: false,
             global_topk: false,
             parallelism: sparkv::config::Parallelism::Serial,
+            buckets: sparkv::config::Buckets::None,
         };
         let out = train(cfg, &mut model, &data)?;
         let sent = out.metrics.cumulative_sent();

@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
         momentum_correction: false,
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
+        buckets: sparkv::config::Buckets::None,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

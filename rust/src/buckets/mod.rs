@@ -1,0 +1,379 @@
+//! Gradient bucketing and the compute/communication-overlap pipeline.
+//!
+//! The paper's Table 2 / Fig. 4 argument is a systems-balance one: TopK-SGD
+//! only scales when selection + communication hide behind compute. Real DDP
+//! stacks achieve that by partitioning the flattened gradient into buckets
+//! and overlapping each bucket's exchange with the next bucket's local work
+//! (Horovod tensor fusion, PyTorch DDP gradient buckets, and the pipelined
+//! sparse aggregation of Shi et al. 2019). This module provides the two
+//! pieces the trainer and the netsim share:
+//!
+//! * [`BucketSchedule`] — a partition of the flat `d`-dimensional gradient
+//!   into contiguous, layer-aligned or fixed-byte buckets, each carrying its
+//!   own slice of the error-feedback residual and its own per-bucket `k`.
+//! * [`run_pipelined`] — a two-stage, double-buffered producer/consumer
+//!   pipeline: the producer compresses bucket `i + 1` on its own thread
+//!   while the consumer runs the ring exchange for bucket `i`.
+//!
+//! ## Per-bucket `k` apportionment
+//!
+//! The global budget `k` is split across buckets proportionally to bucket
+//! size with the largest-remainder method ([`apportion_k`]): bucket `b` of
+//! `d_b` elements gets `⌊k·d_b/d⌋` slots, and the leftover slots go to the
+//! buckets with the largest fractional remainders (ties broken by lower
+//! bucket index). This follows the paper's per-layer density observation —
+//! top-k mass is spread across layers roughly in proportion to layer size —
+//! and guarantees `Σ_b k_b == min(k, d)` exactly, with `k_b ≤ d_b` per
+//! bucket, so the wire budget of a bucketed step equals the monolithic one.
+//!
+//! ## The determinism guarantee under pipelining
+//!
+//! Bucketed training is **bit-identical** between the serial bucket loop
+//! and the pipelined path, by construction:
+//!
+//! 1. buckets are disjoint, contiguous slices, so the per-bucket
+//!    error-feedback update `ε_b ← u_b − s_b` touches state no other bucket
+//!    reads;
+//! 2. the producer emits buckets in index order (a single thread), and the
+//!    consumer applies aggregates in arrival order over a FIFO channel, so
+//!    the schedule seen by every stage is `0, 1, …, B−1` in both modes;
+//! 3. each bucket's aggregation runs through the same
+//!    [`Collectives`](crate::collectives::Collectives) engine either way,
+//!    and those engines are themselves bit-identical across serial/threaded
+//!    (see the `collectives` module docs).
+//!
+//! `tests/bucket_equivalence.rs` locks the invariant end to end for every
+//! operator.
+
+use crate::tensor::Layout;
+
+/// One bucket of the flat gradient: the contiguous range `[lo, hi)` and its
+/// apportioned share of the global sparsification budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketSpec {
+    /// Position of this bucket in the schedule (0-based).
+    pub index: usize,
+    /// Inclusive start offset into the flat gradient.
+    pub lo: usize,
+    /// Exclusive end offset.
+    pub hi: usize,
+    /// This bucket's share of the global k (may be 0 for tiny buckets).
+    pub k: usize,
+}
+
+impl BucketSpec {
+    /// Number of gradient elements in this bucket.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// A partition of the flat `d`-dimensional gradient into contiguous
+/// non-empty buckets covering `[0, d)` exactly, with per-bucket `k`
+/// apportioned from the global budget (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BucketSchedule {
+    d: usize,
+    specs: Vec<BucketSpec>,
+}
+
+impl BucketSchedule {
+    /// Single bucket covering the whole gradient (the monolithic baseline
+    /// expressed in bucket form). `d == 0` yields an empty schedule.
+    pub fn monolithic(d: usize, k: usize) -> BucketSchedule {
+        Self::from_ranges(d, k, vec![(0, d)])
+    }
+
+    /// Layer-aligned buckets: one bucket per layer slice of `layout`
+    /// (zero-size layers are skipped). This is the `buckets = layers` knob.
+    pub fn from_layout(layout: &Layout, k: usize) -> BucketSchedule {
+        let ranges: Vec<(usize, usize)> = layout
+            .offsets
+            .iter()
+            .zip(&layout.sizes)
+            .map(|(&o, &s)| (o, o + s))
+            .collect();
+        Self::from_ranges(layout.total(), k, ranges)
+    }
+
+    /// Fixed-byte buckets of `bytes` each (f32 elements, so `bytes / 4`
+    /// elements per bucket, minimum 1); the trailing bucket may be smaller.
+    /// This is the `buckets = bytes:N` knob.
+    pub fn fixed_bytes(d: usize, bytes: usize, k: usize) -> BucketSchedule {
+        let elems = (bytes / 4).max(1);
+        let mut ranges = Vec::new();
+        let mut lo = 0;
+        while lo < d {
+            let hi = (lo + elems).min(d);
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        Self::from_ranges(d, k, ranges)
+    }
+
+    /// Build from explicit ranges: empty ranges are dropped, the rest must
+    /// tile `[0, d)` contiguously in order (debug-asserted), and the global
+    /// `k` is apportioned across the survivors.
+    fn from_ranges(d: usize, k: usize, ranges: Vec<(usize, usize)>) -> BucketSchedule {
+        let ranges: Vec<(usize, usize)> = ranges.into_iter().filter(|(lo, hi)| hi > lo).collect();
+        debug_assert!(
+            {
+                let mut cursor = 0;
+                ranges.iter().all(|&(lo, hi)| {
+                    let ok = lo == cursor && hi <= d;
+                    cursor = hi;
+                    ok
+                }) && (cursor == d)
+            },
+            "bucket ranges must tile [0, {d}) contiguously"
+        );
+        let sizes: Vec<usize> = ranges.iter().map(|(lo, hi)| hi - lo).collect();
+        let ks = apportion_k(&sizes, k);
+        let specs = ranges
+            .into_iter()
+            .zip(ks)
+            .enumerate()
+            .map(|(index, ((lo, hi), k))| BucketSpec { index, lo, hi, k })
+            .collect();
+        BucketSchedule { d, specs }
+    }
+
+    /// Flat gradient dimension this schedule partitions.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of (non-empty) buckets.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// The bucket specs in schedule order.
+    pub fn specs(&self) -> &[BucketSpec] {
+        &self.specs
+    }
+
+    /// Sum of the per-bucket budgets (== `min(k, d)` by construction).
+    pub fn total_k(&self) -> usize {
+        self.specs.iter().map(|s| s.k).sum()
+    }
+}
+
+/// Split the global budget `k` across buckets of the given sizes with the
+/// largest-remainder method: `k_b = ⌊k·d_b/d⌋` plus one extra slot for the
+/// buckets with the largest remainders `(k·d_b) mod d` (ties → lower
+/// index), capped at the bucket size. Zero-size buckets get 0.
+///
+/// Guarantees (property-tested in `tests/bucket_equivalence.rs`):
+/// `Σ k_b == min(k, Σ d_b)`, `k_b ≤ d_b`, and `|k_b − k·d_b/d| ≤ 1` for
+/// every uncapped bucket.
+pub fn apportion_k(sizes: &[usize], k: usize) -> Vec<usize> {
+    let d: usize = sizes.iter().sum();
+    if d == 0 {
+        return vec![0; sizes.len()];
+    }
+    let k = k.min(d);
+    // Floor quotas (u128 intermediates: k·d_b can overflow u64 at large d).
+    let mut ks: Vec<usize> = sizes
+        .iter()
+        .map(|&s| ((k as u128 * s as u128) / d as u128) as usize)
+        .collect();
+    let assigned: usize = ks.iter().sum();
+    let mut leftover = k - assigned;
+    if leftover == 0 {
+        return ks;
+    }
+    // Largest fractional remainder first; ties broken by lower index so the
+    // split is fully deterministic.
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by_key(|&i| {
+        (
+            std::cmp::Reverse((k as u128 * sizes[i] as u128) % d as u128),
+            i,
+        )
+    });
+    // Round-robin over the remainder order, skipping buckets already at
+    // capacity. Terminates because Σ capacity = d ≥ k: while leftover > 0
+    // some bucket has spare room, so every full pass makes progress.
+    let mut cursor = 0;
+    while leftover > 0 {
+        let i = order[cursor % order.len()];
+        if ks[i] < sizes[i] {
+            ks[i] += 1;
+            leftover -= 1;
+        }
+        cursor += 1;
+    }
+    ks
+}
+
+/// Two-stage, double-buffered pipeline: `produce(b)` runs on a dedicated
+/// producer thread for `b = 0..n` in order, while `consume(b, item)` runs
+/// on the calling thread in the same order. A rendezvous channel of depth 1
+/// means at most one finished item waits while the next is being produced —
+/// classic double buffering, so the producer works on bucket `i + 1` while
+/// the consumer exchanges bucket `i`.
+///
+/// Determinism: both closures observe the exact sequence `0, 1, …, n − 1`,
+/// so the result is bit-identical to the serial loop
+/// `for b in 0..n { consume(b, produce(b)) }` whenever `produce` and
+/// `consume` are deterministic functions of their own accumulated state —
+/// the pipeline changes *when* work happens, never *what* happens.
+pub fn run_pipelined<T, P, C>(n: usize, produce: P, mut consume: C)
+where
+    T: Send,
+    P: FnMut(usize) -> T + Send,
+    C: FnMut(usize, T),
+{
+    if n == 0 {
+        return;
+    }
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(1);
+    std::thread::scope(|s| {
+        let mut produce = produce;
+        s.spawn(move || {
+            for b in 0..n {
+                let item = produce(b);
+                // A send error means the consumer side is gone (panicked);
+                // stop producing and let the scope surface the panic.
+                if tx.send((b, item)).is_err() {
+                    break;
+                }
+            }
+        });
+        for _ in 0..n {
+            let (b, item) = rx.recv().expect("pipeline producer hung up");
+            consume(b, item);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monolithic_is_one_bucket() {
+        let s = BucketSchedule::monolithic(100, 7);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.specs()[0], BucketSpec { index: 0, lo: 0, hi: 100, k: 7 });
+        assert_eq!(s.total_k(), 7);
+        // d == 0: empty schedule, nothing to exchange.
+        assert!(BucketSchedule::monolithic(0, 5).is_empty());
+    }
+
+    #[test]
+    fn fixed_bytes_tiles_exactly() {
+        // 10 elements in 16-byte (4-element) buckets: 4 + 4 + 2.
+        let s = BucketSchedule::fixed_bytes(10, 16, 5);
+        let sizes: Vec<usize> = s.specs().iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(s.total_k(), 5);
+        let mut cursor = 0;
+        for b in s.specs() {
+            assert_eq!(b.lo, cursor);
+            cursor = b.hi;
+        }
+        assert_eq!(cursor, 10);
+        // bytes < 4 clamps to one element per bucket.
+        assert_eq!(BucketSchedule::fixed_bytes(3, 1, 3).len(), 3);
+    }
+
+    #[test]
+    fn layout_buckets_skip_empty_layers() {
+        let mut l = Layout::new();
+        l.push("w1", 6);
+        l.push("empty", 0);
+        l.push("b1", 2);
+        let s = BucketSchedule::from_layout(&l, 4);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.specs()[0].len(), 6);
+        assert_eq!(s.specs()[1].len(), 2);
+        assert_eq!(s.total_k(), 4);
+        // Proportional: the 6-element bucket gets 3, the 2-element one 1.
+        assert_eq!(s.specs()[0].k, 3);
+        assert_eq!(s.specs()[1].k, 1);
+    }
+
+    #[test]
+    fn apportion_sums_and_caps() {
+        assert_eq!(apportion_k(&[6, 2], 4), vec![3, 1]);
+        // k > d clamps to d.
+        assert_eq!(apportion_k(&[2, 2], 100), vec![2, 2]);
+        // Zero-size buckets get 0; all-empty sums to 0.
+        assert_eq!(apportion_k(&[0, 3, 0], 2), vec![0, 2, 0]);
+        assert_eq!(apportion_k(&[0, 0], 5), vec![0, 0]);
+        assert_eq!(apportion_k(&[], 5), Vec::<usize>::new());
+        // k smaller than the bucket count: leftover slots go to the largest
+        // remainders, lower index on ties.
+        assert_eq!(apportion_k(&[1, 1, 1, 1], 2), vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn apportion_is_deterministic_and_exact() {
+        let sizes = vec![7, 0, 13, 1, 1, 512, 3];
+        for k in 0..=537 {
+            let ks = apportion_k(&sizes, k);
+            assert_eq!(ks.iter().sum::<usize>(), k.min(537), "k={k}");
+            for (b, (&kb, &db)) in ks.iter().zip(&sizes).enumerate() {
+                assert!(kb <= db, "k={k} bucket {b}: {kb} > {db}");
+            }
+            assert_eq!(ks, apportion_k(&sizes, k), "k={k} not deterministic");
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_serial_loop() {
+        // Stateful producer and consumer: the pipeline must see the same
+        // sequence and produce the same folds as the serial loop.
+        for n in [0usize, 1, 2, 7, 32] {
+            let mut produced = Vec::new();
+            let mut folded = 0u64;
+            run_pipelined(
+                n,
+                |b| {
+                    // Deterministic per-bucket "work".
+                    (b as u64 + 1) * (b as u64 + 1)
+                },
+                |b, item| {
+                    produced.push(b);
+                    folded = folded.wrapping_mul(31).wrapping_add(item);
+                },
+            );
+            let want_order: Vec<usize> = (0..n).collect();
+            assert_eq!(produced, want_order, "n={n}");
+            let mut want_fold = 0u64;
+            for b in 0..n {
+                want_fold = want_fold
+                    .wrapping_mul(31)
+                    .wrapping_add((b as u64 + 1) * (b as u64 + 1));
+            }
+            assert_eq!(folded, want_fold, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pipeline_producer_state_is_sequential() {
+        // The producer's own mutable state must evolve in bucket order even
+        // though it runs on another thread.
+        let mut counter = 0usize;
+        let mut seen = Vec::new();
+        run_pipelined(
+            5,
+            move |b| {
+                counter += b;
+                (b, counter)
+            },
+            |_, item| seen.push(item),
+        );
+        assert_eq!(seen, vec![(0, 0), (1, 1), (2, 3), (3, 6), (4, 10)]);
+    }
+}

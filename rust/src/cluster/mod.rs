@@ -21,6 +21,11 @@ pub struct ScalingCell {
     pub compute_s: f64,
     pub select_s: f64,
     pub comm_s: f64,
+    /// Exchange granularity this cell was simulated with (1 = monolithic).
+    pub buckets: usize,
+    /// Wall time hidden by compute/communication overlap (0 for the
+    /// monolithic exchange; see `IterationBreakdown::overlap_saved`).
+    pub overlap_saved_s: f64,
 }
 
 /// The full Table 2 reproduction: models × operators.
@@ -53,6 +58,24 @@ pub fn scaling_table_par(
     k_ratio: f64,
     parallelism: Parallelism,
 ) -> ScalingTable {
+    scaling_table_bucketed(models, ops, topo, k_ratio, 1, parallelism)
+}
+
+/// Table 2 sweep over the *bucketed, pipelined* exchange: every cell is
+/// simulated with the gradient split into `buckets` equal buckets and
+/// selection overlapped with communication (`SimConfig::buckets`). With
+/// `buckets ≤ 1` this is exactly [`scaling_table_par`]. The per-cell
+/// `overlap_saved_s` reports the wall time the pipeline hid — the
+/// monolithic-vs-pipelined comparison the fig4/table2 benches emit.
+pub fn scaling_table_bucketed(
+    models: &[ComputeProfile],
+    ops: &[OpKind],
+    topo: &Topology,
+    k_ratio: f64,
+    buckets: usize,
+    parallelism: Parallelism,
+) -> ScalingTable {
+    let buckets = buckets.max(1);
     let jobs: Vec<(&ComputeProfile, OpKind)> = models
         .iter()
         .flat_map(|m| ops.iter().map(move |&op| (m, op)))
@@ -65,6 +88,7 @@ pub fn scaling_table_par(
             k_ratio,
             straggler_sigma: 0.0,
             seed: 1,
+            buckets,
         };
         let b = Simulator::new(cfg).iteration();
         ScalingCell {
@@ -75,6 +99,8 @@ pub fn scaling_table_par(
             compute_s: b.compute,
             select_s: b.select,
             comm_s: b.comm,
+            buckets,
+            overlap_saved_s: b.overlap_saved,
         }
     };
     let nthreads = parallelism.threads().min(jobs.len()).max(1);
@@ -170,7 +196,9 @@ impl ScalingTable {
                         .set("scaling_efficiency", Json::from(c.scaling_efficiency))
                         .set("compute_s", Json::from(c.compute_s))
                         .set("select_s", Json::from(c.select_s))
-                        .set("comm_s", Json::from(c.comm_s));
+                        .set("comm_s", Json::from(c.comm_s))
+                        .set("buckets", Json::from(c.buckets))
+                        .set("overlap_saved_s", Json::from(c.overlap_saved_s));
                     o
                 })
                 .collect(),
@@ -278,6 +306,33 @@ mod tests {
             assert_eq!(a.iter_time_s.to_bits(), b.iter_time_s.to_bits());
             assert_eq!(a.scaling_efficiency.to_bits(), b.scaling_efficiency.to_bits());
         }
+    }
+
+    #[test]
+    fn bucketed_table_reports_overlap_and_defaults_to_monolithic() {
+        let models = [ComputeProfile::by_name("resnet50").unwrap()];
+        let ops = [OpKind::TopK, OpKind::GaussianK, OpKind::Dense];
+        let topo = Topology::paper_16gpu();
+        let mono = scaling_table_bucketed(&models, &ops, &topo, 0.001, 1, Parallelism::Serial);
+        let pipe = scaling_table_bucketed(&models, &ops, &topo, 0.001, 8, Parallelism::Serial);
+        // buckets = 1 is bit-identical to the plain sweep.
+        let plain = scaling_table(&models, &ops, &topo, 0.001);
+        for (a, b) in mono.cells.iter().zip(&plain.cells) {
+            assert_eq!(a.iter_time_s.to_bits(), b.iter_time_s.to_bits());
+            assert_eq!(a.overlap_saved_s, 0.0);
+            assert_eq!(a.buckets, 1);
+        }
+        // Sparse ops hide communication behind bucketed selection; Dense
+        // has nothing to overlap against.
+        for op in [OpKind::TopK, OpKind::GaussianK] {
+            let c = pipe.cell("resnet50", op).unwrap();
+            assert!(c.overlap_saved_s > 0.0, "{op:?}: no overlap");
+            assert_eq!(c.buckets, 8);
+            // Reconciliation: total + saved == compute + select + comm.
+            let serialized = c.compute_s + c.select_s + c.comm_s;
+            assert!((c.iter_time_s + c.overlap_saved_s - serialized).abs() < 1e-12);
+        }
+        assert_eq!(pipe.cell("resnet50", OpKind::Dense).unwrap().overlap_saved_s, 0.0);
     }
 
     #[test]

@@ -38,6 +38,22 @@
 //! The free functions below delegate to [`SerialCollectives`] and remain
 //! the convenient entry points for analysis code and tests; the trainer
 //! picks its engine from `config::Parallelism`.
+//!
+//! ### Bucketed, pipelined exchange
+//!
+//! With `buckets = layers|bytes:N` the trainer no longer makes one big
+//! collective call per step: the flat gradient is partitioned by a
+//! [`crate::buckets::BucketSchedule`] (layer-aligned or fixed-byte
+//! buckets, each with a proportional share of the global k — see
+//! [`crate::buckets::apportion_k`]), and these engines are invoked once
+//! per bucket over the bucket-local slices. Under a threaded runtime the
+//! bucket calls are *pipelined* ([`crate::buckets::run_pipelined`]):
+//! worker threads compress bucket `i + 1` while the ring exchanges bucket
+//! `i`. Determinism survives pipelining because buckets are disjoint
+//! slices processed in a fixed index order on both sides of a FIFO
+//! channel — each per-bucket collective sees exactly the inputs the
+//! serial bucket loop would hand it, and is itself engine-bit-identical.
+//! The invariant suite lives in `tests/bucket_equivalence.rs`.
 
 mod serial;
 mod threaded;
@@ -125,8 +141,20 @@ pub(crate) fn chunk_bounds(d: usize, p: usize) -> Vec<(usize, usize)> {
 /// magnitudes. Linear in nnz(a) + nnz(b) plus a quickselect. Shared by
 /// both gTop-k engines — a pure function, so the tree reduction it builds
 /// is engine-independent.
+///
+/// Edge cases (audited + regression-tested): `k == 0` returns the empty
+/// vector (previously `select_nth_unstable_by(k - 1, …)` underflowed and
+/// panicked — reachable through per-bucket gTop-k where a tiny bucket's
+/// apportioned k is 0); `k ≥ nnz(a) + nnz(b)` keeps the full merge;
+/// duplicate-magnitude ties at the k-th slot resolve by the quickselect's
+/// deterministic partition order — unspecified *which* equal-magnitude
+/// entry survives, but identical for identical inputs, so the serial and
+/// threaded engines can never disagree.
 pub(crate) fn merge_truncate(a: &SparseVec, b: &SparseVec, k: usize) -> SparseVec {
     debug_assert_eq!(a.d, b.d);
+    if k == 0 {
+        return SparseVec::new(a.d);
+    }
     let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(a.nnz() + b.nnz());
     let (mut i, mut j) = (0, 0);
     while i < a.nnz() && j < b.nnz() {
@@ -368,5 +396,99 @@ mod gtopk_tests {
         // idx5 cancels to 0.0 but stays as an explicit entry (≤ k).
         assert_eq!(m.indices, vec![1, 5, 7]);
         assert_eq!(m.values, vec![1.0, 0.0, 3.0]);
+    }
+}
+
+/// Edge-case audit of the shared ring/merge primitives (the satellite
+/// regression suite): k = 0, k > nnz, d < P, and duplicate-magnitude ties.
+#[cfg(test)]
+mod edge_case_audit {
+    use super::*;
+    use crate::collectives::{SerialCollectives, ThreadedCollectives};
+
+    #[test]
+    fn merge_truncate_k_zero_returns_empty() {
+        // Regression: k == 0 used to underflow `select_nth_unstable_by
+        // (k - 1, …)` and panic. Reachable via per-bucket gTop-k where a
+        // tiny bucket's apportioned k is 0.
+        let a = SparseVec::from_pairs(8, vec![(0, 1.0), (3, -2.0)]);
+        let b = SparseVec::from_pairs(8, vec![(1, 4.0)]);
+        let m = merge_truncate(&a, &b, 0);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.d, 8);
+        // And through the public gTop-k path, on both engines.
+        let (dense_s, sel_s) = SerialCollectives.gtopk_allreduce_avg(&[a.clone(), b.clone()], 0);
+        let (dense_t, sel_t) = ThreadedCollectives.gtopk_allreduce_avg(&[a, b], 0);
+        assert!(sel_s.is_empty() && sel_t.is_empty());
+        assert!(dense_s.iter().all(|&v| v == 0.0));
+        assert_eq!(dense_s, dense_t);
+    }
+
+    #[test]
+    fn merge_truncate_k_exceeding_nnz_keeps_everything() {
+        let a = SparseVec::from_pairs(6, vec![(0, 1.0), (2, 2.0)]);
+        let b = SparseVec::from_pairs(6, vec![(4, -3.0)]);
+        for k in [3, 4, 100, usize::MAX] {
+            let m = merge_truncate(&a, &b, k);
+            assert_eq!(m.indices, vec![0, 2, 4], "k={k}");
+            assert_eq!(m.values, vec![1.0, 2.0, -3.0], "k={k}");
+        }
+    }
+
+    #[test]
+    fn merge_truncate_ties_are_deterministic_and_exact_k() {
+        // All magnitudes equal: which entries survive is unspecified, but
+        // the choice must be deterministic (same inputs → same output) and
+        // exactly k entries with unchanged values must survive.
+        let a = SparseVec::from_pairs(10, vec![(0, 1.0), (2, -1.0), (4, 1.0)]);
+        let b = SparseVec::from_pairs(10, vec![(1, -1.0), (3, 1.0)]);
+        for k in 1..=5 {
+            let m1 = merge_truncate(&a, &b, k);
+            let m2 = merge_truncate(&a, &b, k);
+            assert_eq!(m1, m2, "k={k}: tie-break not deterministic");
+            assert_eq!(m1.nnz(), k, "k={k}");
+            assert!(m1.values.iter().all(|v| v.abs() == 1.0));
+            assert!(m1.indices.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn gtopk_ties_agree_across_engines() {
+        // Duplicate magnitudes through the full tree reduction: both
+        // engines must pick the *same* survivors (same pure merges).
+        let inputs: Vec<SparseVec> = (0..5)
+            .map(|w| {
+                SparseVec::from_pairs(
+                    12,
+                    (0..6).map(|i| ((2 * i) as u32, if (w + i) % 2 == 0 { 1.0 } else { -1.0 })).collect(),
+                )
+            })
+            .collect();
+        for k in [1, 3, 6] {
+            let (ds, ss) = SerialCollectives.gtopk_allreduce_avg(&inputs, k);
+            let (dt, st) = ThreadedCollectives.gtopk_allreduce_avg(&inputs, k);
+            assert_eq!(ss, st, "k={k}");
+            assert_eq!(ds, dt, "k={k}");
+            assert!(ss.len() <= k, "k={k}");
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_tile_for_all_d_p() {
+        // chunk_bounds must tile [0, d) with p contiguous (possibly empty)
+        // chunks for every d, p — including d < p and d == 0.
+        for p in 1..=9 {
+            for d in 0..=40 {
+                let bounds = chunk_bounds(d, p);
+                assert_eq!(bounds.len(), p, "d={d} p={p}");
+                let mut cursor = 0;
+                for &(lo, hi) in &bounds {
+                    assert_eq!(lo, cursor, "d={d} p={p}");
+                    assert!(hi >= lo && hi <= d, "d={d} p={p}");
+                    cursor = hi;
+                }
+                assert_eq!(cursor, d, "d={d} p={p}: chunks do not cover [0, d)");
+            }
+        }
     }
 }

@@ -23,6 +23,7 @@
 //! | `momentum_correction` | `false`    | DGC-style local momentum before compression          |
 //! | `global_topk`         | `false`    | gTop-k tree aggregation instead of all-gather union  |
 //! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads` (one thread per available core), or `threads:N` — results are bit-identical across all settings |
+//! | `buckets`             | `"none"`   | gradient exchange granularity: `none` (monolithic), `layers` (layer-aligned buckets), or `bytes:N` (fixed-byte buckets); under a threaded runtime bucket `i+1` is compressed while bucket `i` is on the ring |
 
 use std::collections::BTreeMap;
 
@@ -112,6 +113,71 @@ impl Parallelism {
 
     pub fn is_threaded(&self) -> bool {
         matches!(self, Parallelism::Threads(_))
+    }
+}
+
+/// Gradient-exchange granularity: how the flat gradient is partitioned
+/// into buckets for the compression + communication phase.
+///
+/// `None` keeps the original monolithic path (one compress, one
+/// collective). `Layers` buckets along the model's layer boundaries;
+/// `Bytes(n)` uses fixed `n`-byte buckets. Bucketed runs apportion the
+/// global `k` across buckets proportionally to bucket size
+/// ([`crate::buckets::apportion_k`]); under `Parallelism::Threads` the
+/// trainer pipelines the buckets (compress bucket `i + 1` while bucket `i`
+/// is on the ring), with results **bit-identical** to the serial bucket
+/// loop (`tests/bucket_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Buckets {
+    /// Monolithic gradient exchange (the original path).
+    None,
+    /// One bucket per model layer (zero-size layers are skipped).
+    Layers,
+    /// Fixed-size buckets of this many bytes (f32 elements = n / 4).
+    Bytes(usize),
+}
+
+impl Buckets {
+    /// Parse a config/CLI value: `none`, `layers`, `bytes:N` (also
+    /// `bytes=N`, `bytes(N)` — the same separator forms `parallelism`
+    /// accepts).
+    pub fn parse(s: &str) -> anyhow::Result<Buckets> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "none" {
+            return Ok(Buckets::None);
+        }
+        if t == "layers" {
+            return Ok(Buckets::Layers);
+        }
+        if let Some(rest) = t.strip_prefix("bytes") {
+            let digits = rest
+                .strip_prefix(':')
+                .or_else(|| rest.strip_prefix('='))
+                .or_else(|| rest.strip_prefix('(').and_then(|d| d.strip_suffix(')')))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bad buckets '{s}': expected none|layers|bytes:N")
+                })?;
+            let n: usize = digits
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad buckets '{s}': expected none|layers|bytes:N"))?;
+            anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
+            return Ok(Buckets::Bytes(n));
+        }
+        anyhow::bail!("bad buckets '{s}': expected none|layers|bytes:N")
+    }
+
+    /// Display form (round-trips through [`Buckets::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Buckets::None => "none".to_string(),
+            Buckets::Layers => "layers".to_string(),
+            Buckets::Bytes(n) => format!("bytes:{n}"),
+        }
+    }
+
+    /// True when the bucketed exchange path should run.
+    pub fn is_bucketed(&self) -> bool {
+        !matches!(self, Buckets::None)
     }
 }
 
@@ -217,6 +283,9 @@ pub struct TrainConfig {
     /// Worker runtime: serial (reference) or threaded. Bit-identical
     /// numerics either way; threads only change wall-clock time.
     pub parallelism: Parallelism,
+    /// Gradient-exchange granularity: monolithic, layer-aligned buckets,
+    /// or fixed-byte buckets (pipelined under a threaded runtime).
+    pub buckets: Buckets,
 }
 
 impl Default for TrainConfig {
@@ -236,6 +305,7 @@ impl Default for TrainConfig {
             momentum_correction: false,
             global_topk: false,
             parallelism: Parallelism::Serial,
+            buckets: Buckets::None,
         }
     }
 }
@@ -270,6 +340,10 @@ impl TrainConfig {
                 Some(s) => Parallelism::parse(s)?,
                 None => d.parallelism,
             },
+            buckets: match raw.get("train", "buckets") {
+                Some(s) => Buckets::parse(s)?,
+                None => d.buckets,
+            },
         })
     }
 
@@ -288,6 +362,9 @@ impl TrainConfig {
         );
         if let Parallelism::Threads(n) = self.parallelism {
             anyhow::ensure!(n >= 1, "parallelism threads:N needs N >= 1");
+        }
+        if let Buckets::Bytes(n) = self.buckets {
+            anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
         }
         Ok(())
     }
@@ -383,6 +460,37 @@ lr = 0.05
         let d = TrainConfig::default();
         assert_eq!(d.parallelism, Parallelism::Serial);
         d.validate().unwrap();
+    }
+
+    #[test]
+    fn buckets_parsing() {
+        assert_eq!(Buckets::parse("none").unwrap(), Buckets::None);
+        assert_eq!(Buckets::parse("layers").unwrap(), Buckets::Layers);
+        assert_eq!(Buckets::parse("bytes:1024").unwrap(), Buckets::Bytes(1024));
+        assert_eq!(Buckets::parse("bytes(64)").unwrap(), Buckets::Bytes(64));
+        assert_eq!(Buckets::parse("BYTES:8").unwrap(), Buckets::Bytes(8));
+        assert!(Buckets::parse("bytes:2").is_err()); // below one f32
+        assert!(Buckets::parse("bytes64").is_err()); // separator required
+        assert!(Buckets::parse("bytes(64").is_err()); // unclosed paren
+        assert!(Buckets::parse("rings").is_err());
+        for b in [Buckets::None, Buckets::Layers, Buckets::Bytes(4096)] {
+            assert_eq!(Buckets::parse(&b.name()).unwrap(), b);
+        }
+        assert!(!Buckets::None.is_bucketed());
+        assert!(Buckets::Layers.is_bucketed());
+    }
+
+    #[test]
+    fn buckets_from_raw_and_validate() {
+        let raw = RawConfig::parse("[train]\nbuckets = \"bytes:256\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.buckets, Buckets::Bytes(256));
+        cfg.validate().unwrap();
+        // Default stays monolithic.
+        assert_eq!(TrainConfig::default().buckets, Buckets::None);
+        let mut bad = TrainConfig::default();
+        bad.buckets = Buckets::Bytes(2);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -36,6 +36,20 @@
 //! persistent worker pool fed by per-step channels behind the same
 //! `Parallelism` knob — the bit-identity argument is unchanged.
 //!
+//! ## Bucketed, pipelined exchange
+//!
+//! With `buckets = layers|bytes:N` the step splits differently: gradients
+//! are computed first (same worker threading), then the flat gradient is
+//! walked bucket by bucket ([`BucketSchedule`]) — each bucket carries its
+//! own error-feedback residual slice and a proportional share of the
+//! global k. Under `Parallelism::Threads` the bucket loop runs through
+//! [`run_pipelined`]: a producer thread compresses bucket `i + 1` while
+//! the calling thread runs the collective for bucket `i` (double
+//! buffering over a rendezvous channel). Both paths walk buckets in index
+//! order over disjoint slices, so serial and pipelined bucketed training
+//! are **bit-identical** (`tests/bucket_equivalence.rs`); `buckets = none`
+//! keeps the monolithic path below untouched.
+//!
 //! The trainer also captures the paper's measurement hooks: gradient
 //! histograms of u_t on worker 0 (Fig. 2/7/8/9), per-step communicated
 //! element counts (Fig. 10), and periodic eval accuracy (Fig. 1/6/11).
@@ -44,9 +58,10 @@ use std::time::Instant;
 
 use super::optimizer::{momentum_correct, LrSchedule, SgdMomentum};
 use super::worker::WorkerState;
+use crate::buckets::{run_pipelined, BucketSchedule};
 use crate::collectives::Collectives;
 use crate::compress::OpKind;
-use crate::config::TrainConfig;
+use crate::config::{Buckets, TrainConfig};
 use crate::data::DataSource;
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::models::Model;
@@ -84,6 +99,14 @@ struct WorkerMsg {
     loss: f64,
     snapshot: Option<GradSnapshot>,
     payload: Payload,
+}
+
+/// One bucket's worth of per-worker contributions (rank order), produced
+/// by the compression stage of the bucketed exchange and consumed by the
+/// aggregation stage.
+enum BucketMsg {
+    Dense(Vec<Vec<f32>>),
+    Sparse(Vec<crate::tensor::SparseVec>),
 }
 
 /// Immutable per-step context shared by every worker thread.
@@ -149,6 +172,33 @@ fn worker_step<M: Model + ?Sized>(
     }
 }
 
+/// One worker's gradient phase for the *bucketed* path: sample the shard,
+/// compute the gradient into `w.grad`, apply local momentum correction.
+/// This is exactly the front half of [`worker_step`]; error feedback and
+/// compression then run per bucket (`WorkerState::compress_bucket`).
+fn grad_step<M: Model + ?Sized>(
+    ctx: StepCtx<'_>,
+    w: &mut WorkerState,
+    model: &mut M,
+    params: &[f32],
+) -> (usize, f64) {
+    let batch = ctx.data.sample(ctx.batch_size, &mut w.data_rng);
+    let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
+    if ctx.momentum_correction && !ctx.is_dense {
+        momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
+    }
+    (w.rank, loss)
+}
+
+/// Minimum bucket size (elements) worth fanning compression out over the
+/// worker threads: below this the per-bucket `thread::scope` spawn cost
+/// (~tens of µs × nthreads) exceeds the compression work itself, so small
+/// buckets compress on the producer thread. Results are identical either
+/// way — per-worker compression is a pure function of per-worker state —
+/// so this is purely a scheduling knob, invisible to the bit-identity
+/// suite.
+const FANOUT_MIN_BUCKET_ELEMS: usize = 1 << 15;
+
 /// The synchronous trainer.
 pub struct Trainer<'a> {
     pub cfg: TrainConfig,
@@ -170,9 +220,81 @@ impl<'a> Trainer<'a> {
         }
     }
 
-    /// Run the full training loop.
+    /// Fork one model replica per worker thread (threaded runtimes only).
+    fn fork_models(&self, nthreads: usize) -> anyhow::Result<Vec<Box<dyn Model + Send>>> {
+        (0..nthreads)
+            .map(|_| self.model.fork())
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "parallelism={} requires a forkable model backend \
+                     (native MLP); this backend is single-threaded — \
+                     use parallelism=serial",
+                    self.cfg.parallelism.name()
+                )
+            })
+    }
+
+    /// Build the global optimizer. DGC-style momentum correction moves
+    /// momentum into the workers (before compression); the global
+    /// optimizer then runs plain SGD.
+    fn build_optimizer(&self, d: usize) -> SgdMomentum {
+        let global_momentum = if self.cfg.momentum_correction {
+            0.0
+        } else {
+            self.cfg.momentum
+        };
+        SgdMomentum::new(
+            d,
+            self.cfg.lr,
+            global_momentum,
+            LrSchedule::Cosine {
+                final_frac: self.cfg.lr_final_frac,
+            },
+        )
+    }
+
+    /// Periodic eval (+ final step), shared by both exchange paths. Eval
+    /// set size: a multiple of the train batch so static-batch backends
+    /// (PJRT) can chunk it exactly.
+    fn maybe_eval(
+        &mut self,
+        step: usize,
+        params: &[f32],
+        eval_rng: &mut Pcg64,
+        metrics: &mut RunMetrics,
+    ) {
+        if self.cfg.eval_every == 0
+            || !(step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps)
+        {
+            return;
+        }
+        let eval_n = self.cfg.batch_size * 8;
+        let eval = self.data.sample(eval_n, eval_rng);
+        let (eloss, acc) = self.model.eval_step(params, &eval.x, &eval.y, eval.n);
+        metrics.record_eval(EvalRecord {
+            step,
+            accuracy: acc,
+            loss: eloss,
+        });
+    }
+
+    /// Run the full training loop, dispatching on the exchange
+    /// granularity: `buckets = none` keeps the original monolithic path;
+    /// `layers`/`bytes:N` runs the bucketed (and, under a threaded
+    /// runtime, pipelined) exchange.
     pub fn run(&mut self) -> anyhow::Result<TrainOutput> {
         self.cfg.validate()?;
+        if self.cfg.buckets.is_bucketed() {
+            self.run_bucketed()
+        } else {
+            self.run_monolithic()
+        }
+    }
+
+    /// The original monolithic path: one error-feedback accumulate, one
+    /// compress, and one collective per worker per step.
+    fn run_monolithic(&mut self) -> anyhow::Result<TrainOutput> {
         let d = self.model.layout().total();
         let k = ((d as f64 * self.cfg.k_ratio).round() as usize).clamp(1, d);
         let p = self.cfg.workers;
@@ -187,37 +309,13 @@ impl<'a> Trainer<'a> {
         let threaded = self.cfg.parallelism.is_threaded();
         let nthreads = self.cfg.parallelism.threads().min(p).max(1);
         let mut fork_models: Vec<Box<dyn Model + Send>> = if threaded {
-            (0..nthreads)
-                .map(|_| self.model.fork())
-                .collect::<Option<Vec<_>>>()
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "parallelism={} requires a forkable model backend \
-                         (native MLP); this backend is single-threaded — \
-                         use parallelism=serial",
-                        self.cfg.parallelism.name()
-                    )
-                })?
+            self.fork_models(nthreads)?
         } else {
             Vec::new()
         };
         let workers_per_thread = p.div_ceil(nthreads);
 
-        // DGC-style momentum correction moves momentum into the workers
-        // (before compression); the global optimizer then runs plain SGD.
-        let global_momentum = if self.cfg.momentum_correction {
-            0.0
-        } else {
-            self.cfg.momentum
-        };
-        let mut opt = SgdMomentum::new(
-            d,
-            self.cfg.lr,
-            global_momentum,
-            LrSchedule::Cosine {
-                final_frac: self.cfg.lr_final_frac,
-            },
-        );
+        let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
         let mut metrics = RunMetrics::new(&format!(
             "{}-P{}-k{}",
@@ -350,20 +448,276 @@ impl<'a> Trainer<'a> {
                 wall_s: t0.elapsed().as_secs_f64(),
             });
 
-            if self.cfg.eval_every > 0
-                && (step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps)
-            {
-                // Eval set size: a multiple of the train batch so static-
-                // batch backends (PJRT) can chunk it exactly.
-                let eval_n = self.cfg.batch_size * 8;
-                let eval = self.data.sample(eval_n, &mut eval_rng);
-                let (eloss, acc) = self.model.eval_step(&params, &eval.x, &eval.y, eval.n);
-                metrics.record_eval(EvalRecord {
+            self.maybe_eval(step, &params, &mut eval_rng, &mut metrics);
+        }
+
+        Ok(TrainOutput {
+            metrics,
+            snapshots,
+            final_params: params,
+            k,
+        })
+    }
+
+    /// The bucketed exchange path (`buckets = layers|bytes:N`): the flat
+    /// gradient is partitioned by a [`BucketSchedule`]; each bucket
+    /// carries its own error-feedback residual slice and its proportional
+    /// share of the global k ([`crate::buckets::apportion_k`]). Under
+    /// `Parallelism::Threads` the buckets are *pipelined*: the worker
+    /// threads compress bucket `i + 1` while the collectives engine
+    /// exchanges bucket `i` (double-buffered producer/consumer,
+    /// [`run_pipelined`]). Results are **bit-identical** to the serial
+    /// bucket loop — both walk the buckets in index order, per-bucket work
+    /// is a pure function of per-worker state, and the engines themselves
+    /// are serial/threaded bit-identical (`tests/bucket_equivalence.rs`).
+    fn run_bucketed(&mut self) -> anyhow::Result<TrainOutput> {
+        let d = self.model.layout().total();
+        let k = ((d as f64 * self.cfg.k_ratio).round() as usize).clamp(1, d);
+        let p = self.cfg.workers;
+        let schedule = match self.cfg.buckets {
+            Buckets::None => unreachable!("run_bucketed requires a bucketed config"),
+            Buckets::Layers => BucketSchedule::from_layout(self.model.layout(), k),
+            Buckets::Bytes(n) => BucketSchedule::fixed_bytes(d, n, k),
+        };
+        let is_dense = self.cfg.op == OpKind::Dense;
+
+        let mut workers: Vec<WorkerState> = (0..p)
+            .map(|r| WorkerState::new(r, d, self.cfg.op, k, self.cfg.seed))
+            .collect();
+        if !is_dense {
+            for w in workers.iter_mut() {
+                w.init_buckets(&schedule, self.cfg.op);
+            }
+        }
+        let mut params = self.model.init(self.cfg.seed);
+
+        let engine: Box<dyn Collectives> = self.cfg.parallelism.engine();
+        let threaded = self.cfg.parallelism.is_threaded();
+        let nthreads = self.cfg.parallelism.threads().min(p).max(1);
+        let mut fork_models: Vec<Box<dyn Model + Send>> = if threaded {
+            self.fork_models(nthreads)?
+        } else {
+            Vec::new()
+        };
+        let workers_per_thread = p.div_ceil(nthreads);
+
+        let mut opt = self.build_optimizer(d);
+        let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
+        let mut metrics = RunMetrics::new(&format!(
+            "{}-P{}-k{}-buckets{}",
+            self.cfg.op.name(),
+            p,
+            self.cfg.k_ratio,
+            schedule.len()
+        ));
+        let mut snapshots = Vec::new();
+        let mut agg = vec![0.0f32; d];
+
+        for step in 0..self.cfg.steps {
+            let t0 = Instant::now();
+            let ctx = StepCtx {
+                data: self.data,
+                step,
+                batch_size: self.cfg.batch_size,
+                is_dense,
+                momentum_correction: self.cfg.momentum_correction,
+                momentum: self.cfg.momentum,
+                hist_every: self.cfg.hist_every,
+                hist_bins: self.hist_bins,
+                keep_raw: self.keep_raw_snapshots,
+            };
+
+            // Phase 1 — gradients (+ local momentum correction): the
+            // monolithic compute phase minus compression. Losses are
+            // re-sorted and folded in rank order so the f64 accumulation
+            // order matches the serial loop exactly.
+            let losses: Vec<(usize, f64)> = if threaded {
+                let params_ref: &[f32] = &params;
+                let mut collected: Vec<(usize, f64)> = std::thread::scope(|s| {
+                    let handles: Vec<_> = workers
+                        .chunks_mut(workers_per_thread)
+                        .zip(fork_models.iter_mut())
+                        .map(|(group, model)| {
+                            s.spawn(move || {
+                                group
+                                    .iter_mut()
+                                    .map(|w| grad_step(ctx, w, model.as_mut(), params_ref))
+                                    .collect::<Vec<(usize, f64)>>()
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .flat_map(|h| h.join().expect("worker thread panicked"))
+                        .collect()
+                });
+                collected.sort_by_key(|m| m.0);
+                collected
+            } else {
+                let model = &mut *self.model;
+                workers
+                    .iter_mut()
+                    .map(|w| grad_step(ctx, w, &mut *model, &params))
+                    .collect()
+            };
+            let loss_acc: f64 = losses.iter().map(|&(_, l)| l).sum();
+
+            // Phase 2 — snapshot u_t = g + ε on worker 0 (ε is untouched
+            // until the bucket loop below, so this equals the monolithic
+            // snapshot).
+            if self.cfg.hist_every > 0 && step % self.cfg.hist_every == 0 {
+                let w0 = &workers[0];
+                let u: Vec<f32> = if is_dense {
+                    w0.grad.clone()
+                } else {
+                    w0.grad
+                        .iter()
+                        .zip(w0.residual.residual())
+                        .map(|(g, e)| g + e)
+                        .collect()
+                };
+                snapshots.push(GradSnapshot {
                     step,
-                    accuracy: acc,
-                    loss: eloss,
+                    histogram: Histogram::auto(&u, self.hist_bins),
+                    raw: if self.keep_raw_snapshots { Some(u.clone()) } else { None },
                 });
             }
+
+            // Phase 3 — the bucket exchange. `produce` compresses bucket b
+            // across all workers; `consume` runs the collective for bucket
+            // b and scatters the aggregate. Pipelined mode overlaps the
+            // two on adjacent buckets; serial mode interleaves them — the
+            // per-bucket computations are identical either way.
+            agg.iter_mut().for_each(|v| *v = 0.0);
+            let mut sent: u64 = 0;
+            // gTop-k residual restores are deferred until after the bucket
+            // loop: the producer owns the workers during the pipeline.
+            // Each (worker, coordinate) appears at most once (buckets are
+            // disjoint, per-payload indices unique), so ordering is
+            // immaterial.
+            let mut restores: Vec<(usize, u32, f32)> = Vec::new();
+            let nb = schedule.len();
+            {
+                let specs = schedule.specs();
+                let engine_ref: &dyn Collectives = engine.as_ref();
+                let global_topk = self.cfg.global_topk;
+                let workers_ref: &mut [WorkerState] = &mut workers;
+                let agg_ref = &mut agg;
+                let sent_ref = &mut sent;
+                let restores_ref = &mut restores;
+                let mut produce = move |b: usize| -> BucketMsg {
+                    let sp = specs[b];
+                    if is_dense {
+                        BucketMsg::Dense(
+                            workers_ref
+                                .iter()
+                                .map(|w| w.grad[sp.lo..sp.hi].to_vec())
+                                .collect(),
+                        )
+                    } else if nthreads > 1 && sp.len() >= FANOUT_MIN_BUCKET_ELEMS {
+                        // Fan the bucket's compression out over the worker
+                        // groups (big buckets only — below the threshold
+                        // the per-bucket thread spawns cost more than the
+                        // compression they parallelize); rank order
+                        // restored before aggregation.
+                        let payloads: Vec<crate::tensor::SparseVec> =
+                            std::thread::scope(|s| {
+                                let handles: Vec<_> = workers_ref
+                                    .chunks_mut(workers_per_thread)
+                                    .map(|group| {
+                                        s.spawn(move || {
+                                            group
+                                                .iter_mut()
+                                                .map(|w| {
+                                                    (w.rank, w.compress_bucket(b, sp.lo, sp.hi))
+                                                })
+                                                .collect::<Vec<_>>()
+                                        })
+                                    })
+                                    .collect();
+                                let mut all: Vec<(usize, crate::tensor::SparseVec)> = handles
+                                    .into_iter()
+                                    .flat_map(|h| {
+                                        h.join().expect("bucket compress thread panicked")
+                                    })
+                                    .collect();
+                                all.sort_by_key(|m| m.0);
+                                all.into_iter().map(|m| m.1).collect()
+                            });
+                        BucketMsg::Sparse(payloads)
+                    } else {
+                        BucketMsg::Sparse(
+                            workers_ref
+                                .iter_mut()
+                                .map(|w| w.compress_bucket(b, sp.lo, sp.hi))
+                                .collect(),
+                        )
+                    }
+                };
+                let mut consume = move |b: usize, msg: BucketMsg| {
+                    let sp = specs[b];
+                    match msg {
+                        BucketMsg::Dense(slices) => {
+                            *sent_ref += (slices.len() * sp.len()) as u64;
+                            let red = engine_ref.ring_allreduce_avg(&slices);
+                            agg_ref[sp.lo..sp.hi].copy_from_slice(&red);
+                        }
+                        BucketMsg::Sparse(msgs) => {
+                            *sent_ref += msgs.iter().map(|m| m.nnz() as u64).sum::<u64>();
+                            if global_topk {
+                                // Per-bucket gTop-k: re-truncate to the
+                                // bucket's own k_b; globally-dropped
+                                // contributions are queued for residual
+                                // restore.
+                                let (dense_b, selected) =
+                                    engine_ref.gtopk_allreduce_avg(&msgs, sp.k);
+                                let mut mask = vec![false; sp.len()];
+                                for &i in &selected {
+                                    mask[i as usize] = true;
+                                }
+                                for (wi, m) in msgs.iter().enumerate() {
+                                    for (&i, &v) in m.indices.iter().zip(&m.values) {
+                                        if !mask[i as usize] {
+                                            restores_ref.push((
+                                                wi,
+                                                (sp.lo + i as usize) as u32,
+                                                v,
+                                            ));
+                                        }
+                                    }
+                                }
+                                agg_ref[sp.lo..sp.hi].copy_from_slice(&dense_b);
+                            } else {
+                                let dense_b = engine_ref.sparse_allgather_avg(&msgs);
+                                agg_ref[sp.lo..sp.hi].copy_from_slice(&dense_b);
+                            }
+                        }
+                    }
+                };
+                if threaded && nb > 1 {
+                    run_pipelined(nb, produce, consume);
+                } else {
+                    for b in 0..nb {
+                        let msg = produce(b);
+                        consume(b, msg);
+                    }
+                }
+            }
+            for (wi, gi, v) in restores.drain(..) {
+                workers[wi].residual.restore(gi as usize, v);
+            }
+
+            opt.step(&mut params, &agg, step, self.cfg.steps);
+
+            metrics.record_step(StepRecord {
+                step,
+                loss: loss_acc / p as f64,
+                sent_elements: sent,
+                target_elements: if is_dense { (d * p) as u64 } else { (k * p) as u64 },
+                wall_s: t0.elapsed().as_secs_f64(),
+            });
+
+            self.maybe_eval(step, &params, &mut eval_rng, &mut metrics);
         }
 
         Ok(TrainOutput {
@@ -407,6 +761,7 @@ mod tests {
             momentum_correction: false,
             global_topk: false,
             parallelism: Parallelism::Serial,
+            buckets: crate::config::Buckets::None,
         }
     }
 
@@ -450,6 +805,7 @@ mod tests {
             momentum_correction: false,
             global_topk: false,
             parallelism: Parallelism::Serial,
+            buckets: crate::config::Buckets::None,
         };
         let dense = train(mk(OpKind::Dense), &mut model, &data).unwrap();
         let topk = train(mk(OpKind::TopK), &mut model, &data).unwrap();
@@ -571,6 +927,7 @@ mod momentum_correction_tests {
             momentum_correction: false,
             global_topk: false,
             parallelism: Parallelism::Serial,
+            buckets: crate::config::Buckets::None,
         };
         let plain = train(base.clone(), &mut model, &data).unwrap();
         let mut corrected_cfg = base;
@@ -628,6 +985,7 @@ mod gtopk_trainer_tests {
             momentum_correction: false,
             global_topk,
             parallelism: Parallelism::Serial,
+            buckets: crate::config::Buckets::None,
         }
     }
 

@@ -9,9 +9,11 @@
 //! locks. The `Send` bound is asserted at compile time in the tests below;
 //! breaking it (e.g. by adding an `Rc` field) fails the build.
 
+use crate::buckets::BucketSchedule;
 use crate::compress::{Compressor, OpKind};
 use crate::error_feedback::ResidualStore;
 use crate::stats::rng::Pcg64;
+use crate::tensor::SparseVec;
 
 /// One worker's private state.
 pub struct WorkerState {
@@ -20,13 +22,21 @@ pub struct WorkerState {
     pub data_rng: Pcg64,
     /// Error-feedback residual ε (Eq. 2).
     pub residual: ResidualStore,
-    /// This worker's compressor.
+    /// This worker's compressor (monolithic exchange path).
     pub compressor: Box<dyn Compressor>,
+    /// Per-bucket compressors for the bucketed exchange path, aligned with
+    /// the trainer's [`BucketSchedule`]; `None` for buckets whose
+    /// apportioned `k` is 0 (they send nothing and keep all mass in ε).
+    /// Empty until [`WorkerState::init_buckets`] runs.
+    pub bucket_compressors: Vec<Option<Box<dyn Compressor>>>,
     /// Reusable local-gradient buffer.
     pub grad: Vec<f32>,
     /// Local momentum velocity (only allocated when DGC-style momentum
     /// correction is enabled).
     pub velocity: Vec<f32>,
+    /// This worker's compressor seed stream root (bucket compressors derive
+    /// per-bucket sub-seeds from it).
+    comp_seed: u64,
 }
 
 impl WorkerState {
@@ -43,9 +53,47 @@ impl WorkerState {
             data_rng,
             residual: ResidualStore::new(d),
             compressor: op.build(k, comp_seed),
+            bucket_compressors: Vec::new(),
             grad: vec![0.0; d],
             velocity: Vec::new(),
+            comp_seed,
         }
+    }
+
+    /// Build one compressor per schedule bucket (stochastic operators get
+    /// an independent deterministic sub-stream per bucket). Buckets with
+    /// `k == 0` get `None`: nothing is selected there, so the whole slice
+    /// stays in the residual.
+    pub fn init_buckets(&mut self, schedule: &BucketSchedule, op: OpKind) {
+        let comp_seed = self.comp_seed;
+        self.bucket_compressors = schedule
+            .specs()
+            .iter()
+            .map(|spec| {
+                (spec.k > 0).then(|| {
+                    let salt = (spec.index as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+                    op.build(spec.k, comp_seed ^ salt)
+                })
+            })
+            .collect();
+    }
+
+    /// Error-feedback-compress bucket `b` (the `[lo, hi)` slice of the
+    /// flat gradient): `u_b = g_b + ε_b`, `s_b = Comp_{k_b}(u_b)`,
+    /// `ε_b ← u_b − s_b`. Returns the bucket-local sparse payload
+    /// (`d = hi − lo`, indices relative to `lo`). Pure with respect to
+    /// everything outside this worker's own state and the `[lo, hi)`
+    /// window, so per-worker calls can run on concurrent threads and
+    /// buckets interleave freely between steps of the same bucket index.
+    pub fn compress_bucket(&mut self, b: usize, lo: usize, hi: usize) -> SparseVec {
+        let u = self.residual.accumulate_range(&self.grad, lo, hi);
+        let sent = match self.bucket_compressors[b].as_mut() {
+            Some(comp) => comp.compress(u),
+            // k_b == 0: send nothing; ε_b absorbs the whole slice.
+            None => SparseVec::new(hi - lo),
+        };
+        self.residual.update_range(&sent, lo);
+        sent
     }
 }
 
@@ -78,6 +126,75 @@ mod tests {
         // Compressor streams also deterministic:
         let u = vec![1.0f32; 8];
         assert_eq!(a.compressor.compress(&u), b.compressor.compress(&u));
+    }
+
+    #[test]
+    fn bucket_compress_covers_schedule_and_conserves_mass() {
+        let d = 10;
+        let sched = BucketSchedule::fixed_bytes(d, 16, 4); // buckets 4+4+2
+        let mut w = WorkerState::new(0, d, OpKind::TopK, 4, 7);
+        w.init_buckets(&sched, OpKind::TopK);
+        assert_eq!(w.bucket_compressors.len(), 3);
+        w.grad = (0..d).map(|i| (i as f32) - 4.5).collect();
+        let mut total_sent = 0;
+        for spec in sched.specs() {
+            let s = w.compress_bucket(spec.index, spec.lo, spec.hi);
+            assert_eq!(s.d, spec.len());
+            assert_eq!(s.nnz(), spec.k.min(spec.len()));
+            total_sent += s.nnz();
+            // Per-bucket EF accounting: u_b == sent_b + ε_b exactly.
+            for j in 0..spec.len() {
+                let sent_j = s
+                    .indices
+                    .iter()
+                    .position(|&i| i as usize == j)
+                    .map(|t| s.values[t])
+                    .unwrap_or(0.0);
+                let u_j = w.grad[spec.lo + j]; // ε was 0 before this step
+                assert_eq!(sent_j + w.residual.residual()[spec.lo + j], u_j);
+            }
+        }
+        assert_eq!(total_sent, 4);
+    }
+
+    #[test]
+    fn zero_k_bucket_sends_nothing() {
+        // k = 1 over buckets of 8 + 1 elements: the tiny bucket gets k = 0
+        // and must produce an empty payload while keeping its mass in ε.
+        let d = 9;
+        let sched = BucketSchedule::fixed_bytes(d, 32, 1);
+        assert_eq!(sched.specs()[1].k, 0);
+        let mut w = WorkerState::new(0, d, OpKind::TopK, 1, 7);
+        w.init_buckets(&sched, OpKind::TopK);
+        assert!(w.bucket_compressors[1].is_none());
+        w.grad = vec![1.0; d];
+        let spec = sched.specs()[1];
+        let s = w.compress_bucket(spec.index, spec.lo, spec.hi);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(w.residual.residual()[spec.lo], 1.0);
+    }
+
+    #[test]
+    fn bucket_streams_are_deterministic_and_distinct() {
+        let d = 256;
+        let sched = BucketSchedule::fixed_bytes(d, 512, 32); // two 128-elem buckets
+        let mk = || {
+            let mut w = WorkerState::new(2, d, OpKind::RandK, 32, 7);
+            w.init_buckets(&sched, OpKind::RandK);
+            w.grad = vec![1.0; d];
+            let a = w.compress_bucket(0, 0, 128);
+            let b = w.compress_bucket(1, 128, 256);
+            (a, b)
+        };
+        let (a1, b1) = mk();
+        let (a2, b2) = mk();
+        // Same worker, same seed: reproducible.
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        // Different buckets draw from different sub-streams (16 draws from
+        // 128 candidates each — a coincidental match would mean the salts
+        // collapsed).
+        assert_ne!(a1.indices, b1.indices);
     }
 
     #[test]

@@ -54,6 +54,40 @@ impl ResidualStore {
         &self.u
     }
 
+    /// Bucketed accumulate: `u[lo..hi] = g[lo..hi] + ε[lo..hi]`, returning
+    /// the bucket's slice of the scratch. `g` is the *full* flat gradient;
+    /// only the `[lo, hi)` window is touched, so disjoint buckets can be
+    /// processed in any order between [`Self::update_range`] calls without
+    /// interfering (the per-bucket error-feedback path of the bucketed
+    /// trainer).
+    pub fn accumulate_range(&mut self, g: &[f32], lo: usize, hi: usize) -> &[f32] {
+        assert_eq!(g.len(), self.residual.len(), "gradient dim mismatch");
+        assert!(lo <= hi && hi <= g.len(), "bucket range out of bounds");
+        for ((u, &g), &e) in self.u[lo..hi]
+            .iter_mut()
+            .zip(&g[lo..hi])
+            .zip(&self.residual[lo..hi])
+        {
+            *u = g + e;
+        }
+        &self.u[lo..hi]
+    }
+
+    /// Bucketed update after compressing the `[lo, lo + sent.d)` slice:
+    /// `ε_b ← u_b` with the sent coordinates zeroed. `sent` is
+    /// bucket-local (`sent.d` = bucket length, indices relative to `lo`)
+    /// and must be the compressor output for the *same* slice returned by
+    /// [`Self::accumulate_range`]. Norm tracking is a monolithic-path
+    /// diagnostic and is not updated here.
+    pub fn update_range(&mut self, sent: &SparseVec, lo: usize) {
+        let hi = lo + sent.d;
+        assert!(hi <= self.residual.len(), "bucket range out of bounds");
+        self.residual[lo..hi].copy_from_slice(&self.u[lo..hi]);
+        for &i in &sent.indices {
+            self.residual[lo + i as usize] = 0.0;
+        }
+    }
+
     /// Step 2 after compressing `u`: ε ← u with the sent coordinates
     /// zeroed. `sent` must be the output of `Comp_k` on the *same* `u`.
     pub fn update(&mut self, sent: &SparseVec) {
@@ -157,6 +191,54 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn range_ops_match_monolithic_on_full_range() {
+        // accumulate_range/update_range over [0, d) must equal the
+        // monolithic accumulate/update for a deterministic compressor.
+        let g = vec![3.0f32, -1.0, 0.5, -4.0];
+        let mut mono = ResidualStore::new(4);
+        let mut bucketed = ResidualStore::new(4);
+        let sent_mono = mono.step(&g, &mut TopK::new(2));
+        let mut comp = TopK::new(2);
+        let u = bucketed.accumulate_range(&g, 0, 4).to_vec();
+        let sent_b = {
+            use crate::compress::Compressor;
+            comp.compress(&u)
+        };
+        bucketed.update_range(&sent_b, 0);
+        assert_eq!(sent_mono, sent_b);
+        assert_eq!(mono.residual(), bucketed.residual());
+    }
+
+    #[test]
+    fn range_ops_keep_buckets_disjoint() {
+        // Two buckets, processed in order: each bucket's ε only reflects
+        // its own slice; the other slice is untouched.
+        let g = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut store = ResidualStore::new(4);
+        use crate::compress::Compressor;
+        // Bucket 0 = [0, 2), k = 1.
+        let u0 = store.accumulate_range(&g, 0, 2).to_vec();
+        let s0 = TopK::new(1).compress(&u0);
+        store.update_range(&s0, 0);
+        assert_eq!(store.residual(), &[1.0, 0.0, 0.0, 0.0]); // 2.0 sent
+        // Bucket 1 = [2, 4), k = 1.
+        let u1 = store.accumulate_range(&g, 2, 4).to_vec();
+        let s1 = TopK::new(1).compress(&u1);
+        store.update_range(&s1, 2);
+        assert_eq!(store.residual(), &[1.0, 0.0, 3.0, 0.0]); // 4.0 sent
+    }
+
+    #[test]
+    fn update_range_with_empty_sent_keeps_all_mass() {
+        // k_b = 0 buckets send nothing: ε_b ← u_b verbatim.
+        let g = vec![5.0f32, -6.0];
+        let mut store = ResidualStore::new(2);
+        store.accumulate_range(&g, 0, 2);
+        store.update_range(&SparseVec::new(2), 0);
+        assert_eq!(store.residual(), &[5.0, -6.0]);
     }
 
     #[test]

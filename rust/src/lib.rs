@@ -38,6 +38,7 @@
 //! ```
 
 pub mod analysis;
+pub mod buckets;
 pub mod cluster;
 pub mod collectives;
 pub mod compress;

@@ -36,8 +36,9 @@ fn main() -> anyhow::Result<()> {
                 "sparkv — Top-K sparsification for distributed deep learning\n\n\
                  USAGE: sparkv <train|simulate|bench-op|analyze> [OPTIONS]\n\n\
                  train     --op <dense|topk|randk|dgc|trimmed|gaussiank> --workers N --steps N\n\
-                 \x20         [--parallelism serial|threads|threads:N] [--config file.toml]\n\
-                 \x20         [--set train.key=value] [--backend native|pjrt --model <name>]\n\
+                 \x20         [--parallelism serial|threads|threads:N] [--buckets none|layers|bytes:N]\n\
+                 \x20         [--config file.toml] [--set train.key=value]\n\
+                 \x20         [--backend native|pjrt --model <name>]\n\
                  simulate  [--k-ratio 0.001] [--nodes 4 --gpus 4]\n\
                  bench-op  [--dims 1000000,4000000,16000000] [--k-ratio 0.001]\n\
                  analyze   [--d 100000] [--ks 100,1000,10000]"
@@ -53,7 +54,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         None => RawConfig::default(),
     };
     // CLI conveniences map onto [train] keys.
-    for key in ["workers", "steps", "k_ratio", "lr", "op", "batch_size", "seed", "parallelism"] {
+    for key in [
+        "workers",
+        "steps",
+        "k_ratio",
+        "lr",
+        "op",
+        "batch_size",
+        "seed",
+        "parallelism",
+        "buckets",
+    ] {
         if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
             raw.set(&format!("train.{key}={v}"))?;
         }
@@ -63,13 +74,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     let cfg = TrainConfig::from_raw(&raw)?;
     println!(
-        "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={}",
+        "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={}",
         cfg.op.name(),
         cfg.workers,
         cfg.steps,
         cfg.k_ratio,
         cfg.lr,
-        cfg.parallelism.name()
+        cfg.parallelism.name(),
+        cfg.buckets.name()
     );
 
     let backend = args.get_or("backend", "native");

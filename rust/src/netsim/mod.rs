@@ -11,7 +11,15 @@
 //!   the paper's V100 measurements, and the per-model compute-time table.
 //! * [`sim`] — a discrete-event engine that replays a synchronous training
 //!   iteration (compute → select → communicate → update) per worker and
-//!   reports the timing breakdown; supports straggler jitter ablations.
+//!   reports the timing breakdown; supports straggler jitter ablations and
+//!   a *pipelined bucketed* exchange timeline (`SimConfig::buckets ≥ 2`):
+//!   the gradient splits into equal element buckets with the global k
+//!   apportioned proportionally (`crate::buckets::apportion_k`), selection
+//!   of bucket `i + 1` overlaps the collective of bucket `i`, each bucket
+//!   pays its own `(P − 1)·α` latency, and the hidden wall time surfaces
+//!   as `IterationBreakdown::overlap_saved` — making the bucket-size
+//!   trade-off (more overlap vs more latency terms) a first-class
+//!   scenario axis for Table 2.
 //!
 //! Table 2 is a systems-balance result — it depends on the *ratios*
 //! compute : selection : communication. Those three inputs are calibrated

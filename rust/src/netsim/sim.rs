@@ -31,6 +31,15 @@ pub struct SimConfig {
     pub straggler_sigma: f64,
     /// RNG seed for jitter.
     pub seed: u64,
+    /// Gradient-exchange granularity: ≤ 1 replays the monolithic timeline
+    /// (one selection pass, one collective); ≥ 2 replays the *pipelined
+    /// bucketed* exchange — the gradient splits into this many equal
+    /// element buckets (global k apportioned proportionally), selection of
+    /// bucket `i + 1` overlaps the collective of bucket `i`, and each
+    /// bucket's collective pays its own latency terms. The per-iteration
+    /// [`IterationBreakdown::overlap_saved`] reports how much wall time
+    /// the overlap hid versus the serialized schedule.
+    pub buckets: usize,
 }
 
 impl SimConfig {
@@ -42,6 +51,7 @@ impl SimConfig {
             k_ratio: 0.001,
             straggler_sigma: 0.0,
             seed: 1,
+            buckets: 1,
         }
     }
 }
@@ -55,6 +65,12 @@ pub struct IterationBreakdown {
     /// Barrier wait of the *fastest* worker (0 without stragglers).
     pub max_skew: f64,
     pub total: f64,
+    /// Wall time hidden by the bucketed compute/communication overlap:
+    /// `(compute + select + comm) − total`, clamped at 0. Always 0 on the
+    /// monolithic timeline (`total` composes exactly there); positive when
+    /// a pipelined bucket schedule slots collective time into selection
+    /// gaps.
+    pub overlap_saved: f64,
 }
 
 /// Event types in the per-iteration calendar.
@@ -81,6 +97,9 @@ impl Simulator {
 
     /// Simulate one synchronous iteration; returns the breakdown.
     pub fn iteration(&mut self) -> IterationBreakdown {
+        if self.cfg.buckets >= 2 {
+            return self.iteration_bucketed(self.cfg.buckets);
+        }
         let p = self.cfg.topo.world_size();
         let d = self.cfg.model.params;
         let op_cost = OpCostModel::for_op(self.cfg.op);
@@ -155,6 +174,90 @@ impl Simulator {
             comm,
             max_skew: if p > 1 { last_ready - first_ready } else { 0.0 },
             total: last_ready + comm,
+            overlap_saved: 0.0,
+        }
+    }
+
+    /// The pipelined bucketed timeline: after the compute barrier, the
+    /// gradient is split into `nb` equal element buckets (global k split
+    /// proportionally via [`crate::buckets::apportion_k`]); selection runs
+    /// bucket after bucket (the fixed framework overhead `F` is paid once,
+    /// at pipeline setup), and bucket `b`'s collective starts as soon as
+    /// both its selection is done and the ring is free — i.e. selection of
+    /// bucket `b + 1` overlaps the exchange of bucket `b`. Each bucket's
+    /// collective pays its own latency terms, which is exactly the
+    /// bucket-size trade-off: more buckets hide more communication but add
+    /// `(P − 1)·α` per extra bucket.
+    fn iteration_bucketed(&mut self, nb: usize) -> IterationBreakdown {
+        let p = self.cfg.topo.world_size();
+        let d = self.cfg.model.params;
+        let op_cost = OpCostModel::for_op(self.cfg.op);
+        let k = ((d as f64 * self.cfg.k_ratio).round() as u64).max(1);
+        let is_dense = self.cfg.op == OpKind::Dense;
+
+        // Compute barrier (same jitter model and RNG draw order as the
+        // monolithic path).
+        let mut last_compute = 0.0f64;
+        let mut first_compute = f64::INFINITY;
+        for _ in 0..p {
+            let jitter = if self.cfg.straggler_sigma > 0.0 {
+                (self.cfg.straggler_sigma * self.rng.next_gaussian()).exp()
+            } else {
+                1.0
+            };
+            let ct = self.cfg.model.t1_compute * jitter;
+            last_compute = last_compute.max(ct);
+            first_compute = first_compute.min(ct);
+        }
+
+        // Equal element buckets (trailing bucket may be smaller; empty
+        // buckets — nb > d — are skipped) and the proportional k split.
+        let chunk = (d as usize).div_ceil(nb);
+        let sizes: Vec<usize> = (0..nb)
+            .map(|b| ((b + 1) * chunk).min(d as usize).saturating_sub(b * chunk))
+            .filter(|&s| s > 0)
+            .collect();
+        let ks = crate::buckets::apportion_k(&sizes, k as usize);
+
+        // Selection pipeline: F once, then per-element cost per bucket
+        // back to back (Dense skips selection entirely).
+        let t_fixed = if is_dense { 0.0 } else { op_cost.fixed_s };
+        let per_elem = if is_dense { 0.0 } else { op_cost.per_elem_s };
+        let mut sel_end = Vec::with_capacity(sizes.len());
+        let mut t = last_compute + t_fixed;
+        for &s in &sizes {
+            t += per_elem * s as f64;
+            sel_end.push(t);
+        }
+
+        // Per-bucket collectives chained on the ring: bucket b starts at
+        // max(selection done, ring free).
+        let mut comm_total = 0.0f64;
+        let mut ring_free = 0.0f64;
+        for (i, (&s, &kb)) in sizes.iter().zip(&ks).enumerate() {
+            let tc = if is_dense {
+                allreduce_time(&self.cfg.topo, s as u64 * 4)
+            } else {
+                let k_eff = op_cost.effective_k(kb as u64);
+                allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
+            };
+            let start = sel_end[i].max(ring_free);
+            ring_free = start + tc;
+            comm_total += tc;
+        }
+
+        let select = if is_dense { 0.0 } else { op_cost.selection_time(d) };
+        // Degenerate d == 0 (no buckets survive): the iteration still costs
+        // the compute barrier.
+        let total = ring_free.max(last_compute);
+        let serialized = last_compute + select + comm_total;
+        IterationBreakdown {
+            compute: last_compute,
+            select,
+            comm: comm_total,
+            max_skew: if p > 1 { last_compute - first_compute } else { 0.0 },
+            total,
+            overlap_saved: (serialized - total).max(0.0),
         }
     }
 
@@ -168,6 +271,7 @@ impl Simulator {
             acc.comm += b.comm;
             acc.max_skew += b.max_skew;
             acc.total += b.total;
+            acc.overlap_saved += b.overlap_saved;
         }
         let inv = 1.0 / n.max(1) as f64;
         IterationBreakdown {
@@ -176,6 +280,7 @@ impl Simulator {
             comm: acc.comm * inv,
             max_skew: acc.max_skew * inv,
             total: acc.total * inv,
+            overlap_saved: acc.overlap_saved * inv,
         }
     }
 }
@@ -240,6 +345,66 @@ mod tests {
         assert!(t(OpKind::Dgc) < t(OpKind::Dense));
         assert!(t(OpKind::Dense) < t(OpKind::TopK));
         assert!(t(OpKind::TopK) < t(OpKind::Trimmed));
+    }
+
+    #[test]
+    fn bucketed_timeline_overlaps_comm_with_selection() {
+        let mut cfg = SimConfig::table2(resnet(), OpKind::TopK);
+        cfg.buckets = 8;
+        let b = Simulator::new(cfg).iteration();
+        // Overlap: the pipelined total is strictly below the serialized
+        // schedule, by exactly the reported saving.
+        assert!(b.overlap_saved > 0.0, "no overlap recorded: {b:?}");
+        assert!(
+            (b.total + b.overlap_saved - (b.compute + b.select + b.comm)).abs() < 1e-12,
+            "saving does not reconcile: {b:?}"
+        );
+        // Selection totals are bucket-count invariant (F once + c·d).
+        let mono = Simulator::new(SimConfig::table2(resnet(), OpKind::TopK)).iteration();
+        assert!((b.select - mono.select).abs() < 1e-12);
+        assert_eq!(b.compute, mono.compute);
+    }
+
+    #[test]
+    fn bucketed_comm_grows_with_bucket_count() {
+        // The bucket-size trade-off: every extra bucket pays (P−1)·α more
+        // latency, so total communication time is monotone in bucket count.
+        let comm_at = |nb: usize| {
+            let mut cfg = SimConfig::table2(resnet(), OpKind::GaussianK);
+            cfg.buckets = nb;
+            Simulator::new(cfg).iteration().comm
+        };
+        let (c1, c4, c16) = (comm_at(1), comm_at(4), comm_at(16));
+        assert!(c1 < c4 && c4 < c16, "comm not monotone: {c1} {c4} {c16}");
+    }
+
+    #[test]
+    fn bucketed_is_deterministic_and_single_bucket_matches_monolithic() {
+        let mut cfg = SimConfig::table2(resnet(), OpKind::GaussianK);
+        cfg.buckets = 6;
+        let mut s = Simulator::new(cfg);
+        let (a, b) = (s.iteration(), s.iteration());
+        assert_eq!(a.total.to_bits(), b.total.to_bits());
+        // buckets = 0 and 1 both replay the monolithic calendar.
+        for nb in [0usize, 1] {
+            let mut cfg = SimConfig::table2(resnet(), OpKind::GaussianK);
+            cfg.buckets = nb;
+            let got = Simulator::new(cfg).iteration();
+            let mono = Simulator::new(SimConfig::table2(resnet(), OpKind::GaussianK)).iteration();
+            assert_eq!(got.total.to_bits(), mono.total.to_bits(), "buckets={nb}");
+            assert_eq!(got.overlap_saved, 0.0);
+        }
+    }
+
+    #[test]
+    fn bucketed_handles_more_buckets_than_elements() {
+        // nb ≫ d: empty buckets are skipped, the timeline still composes.
+        let tiny = ComputeProfile::new("tiny", 3, 0.001);
+        let mut cfg = SimConfig::table2(tiny, OpKind::TopK);
+        cfg.buckets = 16;
+        let b = Simulator::new(cfg).iteration();
+        assert!(b.total.is_finite() && b.total > 0.0);
+        assert!(b.comm > 0.0);
     }
 
     #[test]

@@ -24,6 +24,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         momentum_correction: false,
         global_topk: false,
         parallelism: Parallelism::Serial,
+        buckets: sparkv::config::Buckets::None,
     }
 }
 

@@ -78,6 +78,7 @@ fn straggler_jitter_slows_barrier_monotonically() {
             k_ratio: 0.001,
             straggler_sigma: sigma,
             seed: 9,
+            buckets: 1,
         };
         means.push(Simulator::new(cfg).mean_iteration(100).total);
     }

@@ -1,0 +1,151 @@
+//! Golden regression test for the netsim cost model: snapshots
+//! `ScalingTable::to_json()` for the fixed Table 2 calibration and asserts
+//! field-level equality against `tests/golden/table2_scaling.json`.
+//!
+//! The Table 2 reproduction is only as trustworthy as the calibrated cost
+//! model underneath it; the existing tests check *orderings* and loose
+//! (±20%) envelopes, so a silent constant drift (a nudged α, a changed
+//! per-element cost) could skew every cell while staying green. This test
+//! pins the exact values: any cost-model change fails CI until the golden
+//! file is consciously regenerated.
+//!
+//! Regenerate after an *intentional* calibration change with:
+//! `SPARKV_UPDATE_GOLDEN=1 cargo test -q --test netsim_golden`
+
+use sparkv::cluster::scaling_table;
+use sparkv::compress::OpKind;
+use sparkv::netsim::{ComputeProfile, Topology};
+use sparkv::util::json::Json;
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("table2_scaling.json")
+}
+
+fn current_table_json() -> Json {
+    let table = scaling_table(
+        &ComputeProfile::paper_models(),
+        &[
+            OpKind::Dense,
+            OpKind::TopK,
+            OpKind::Dgc,
+            OpKind::Trimmed,
+            OpKind::GaussianK,
+        ],
+        &Topology::paper_16gpu(),
+        0.001,
+    );
+    // Round-trip through the serializer so the comparison sees exactly
+    // what a results/ emitter would write (f64 Display is shortest-
+    // roundtrip, so no precision is lost).
+    Json::parse(&table.to_json().to_string()).expect("self-emitted json must parse")
+}
+
+const NUMERIC_FIELDS: &[&str] = &[
+    "buckets",
+    "comm_s",
+    "compute_s",
+    "iter_time_s",
+    "overlap_saved_s",
+    "scaling_efficiency",
+    "select_s",
+];
+
+#[test]
+fn scaling_table_matches_golden_snapshot() {
+    let current = current_table_json();
+    let path = golden_path();
+    if std::env::var("SPARKV_UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{current}\n")).unwrap();
+        eprintln!("rewrote {}", path.display());
+        return;
+    }
+    let golden_text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {}: {e}", path.display()));
+    let golden = Json::parse(&golden_text).expect("golden file must be valid json");
+
+    let (cur, gold) = (
+        current.as_arr().expect("table json is an array"),
+        golden.as_arr().expect("golden json is an array"),
+    );
+    assert_eq!(
+        cur.len(),
+        gold.len(),
+        "cell count drifted (models × ops changed?)"
+    );
+    for (i, (c, g)) in cur.iter().zip(gold).enumerate() {
+        let ident = |j: &Json, key: &str| {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| panic!("cell {i}: missing '{key}'"))
+        };
+        let (model, op) = (ident(g, "model"), ident(g, "op"));
+        assert_eq!(ident(c, "model"), model, "cell {i}: model order drifted");
+        assert_eq!(ident(c, "op"), op, "cell {i}: op order drifted");
+        for &field in NUMERIC_FIELDS {
+            let num = |j: &Json| {
+                j.get(field)
+                    .and_then(Json::as_f64)
+                    .unwrap_or_else(|| panic!("{model}/{op}: missing numeric '{field}'"))
+            };
+            let (cv, gv) = (num(c), num(g));
+            let tol = 1e-12 + 1e-9 * gv.abs();
+            assert!(
+                (cv - gv).abs() <= tol,
+                "{model}/{op}: cost-model drift in '{field}': {cv} vs golden {gv} \
+                 (rerun with SPARKV_UPDATE_GOLDEN=1 only if the calibration \
+                 change is intentional)"
+            );
+        }
+        // Field-set equality both ways: new or dropped fields must also
+        // show up as drift, not silently pass.
+        let keys = |j: &Json| -> Vec<String> {
+            j.as_obj()
+                .expect("cell is an object")
+                .keys()
+                .cloned()
+                .collect()
+        };
+        assert_eq!(keys(c), keys(g), "{model}/{op}: field set drifted");
+    }
+}
+
+/// The golden file itself stays in range of the paper anchors (guards
+/// against regenerating the snapshot from a silently-broken model).
+#[test]
+fn golden_snapshot_matches_paper_anchors() {
+    let golden_text = std::fs::read_to_string(golden_path()).expect("golden file present");
+    let golden = Json::parse(&golden_text).unwrap();
+    let cell = |model: &str, op: &str| -> f64 {
+        golden
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|c| {
+                c.get("model").and_then(Json::as_str) == Some(model)
+                    && c.get("op").and_then(Json::as_str) == Some(op)
+            })
+            .unwrap_or_else(|| panic!("golden missing {model}/{op}"))
+            .get("iter_time_s")
+            .and_then(Json::as_f64)
+            .unwrap()
+    };
+    // Paper Table 2, ResNet-50 row (±20%, the envelope the sim tests use).
+    for (op, paper) in [
+        ("dense", 0.699),
+        ("topk", 0.810),
+        ("dgc", 0.655),
+        ("trimmed", 2.588),
+        ("gaussiank", 0.586),
+    ] {
+        let t = cell("resnet50", op);
+        assert!(
+            (t - paper).abs() / paper < 0.20,
+            "golden resnet50/{op}: {t:.3} vs paper {paper:.3}"
+        );
+    }
+}

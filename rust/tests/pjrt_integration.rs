@@ -180,6 +180,7 @@ fn distributed_training_through_pjrt_learns() {
         momentum_correction: false,
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
+        buckets: sparkv::config::Buckets::None,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
@@ -263,6 +264,7 @@ fn lm_small_trains_through_pjrt() {
         momentum_correction: false,
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
+        buckets: sparkv::config::Buckets::None,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
