@@ -57,6 +57,8 @@ fn main() -> anyhow::Result<()> {
                 global_topk: false,
                 parallelism: sparkv::config::Parallelism::Serial,
                 buckets: sparkv::config::Buckets::None,
+                k_schedule: sparkv::schedule::KSchedule::Const(None),
+                steps_per_epoch: 100,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

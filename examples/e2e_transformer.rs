@@ -77,6 +77,8 @@ fn main() -> anyhow::Result<()> {
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        k_schedule: sparkv::schedule::KSchedule::Const(None),
+        steps_per_epoch: 100,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

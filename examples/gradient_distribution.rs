@@ -43,6 +43,8 @@ fn main() -> anyhow::Result<()> {
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        k_schedule: sparkv::schedule::KSchedule::Const(None),
+        steps_per_epoch: 100,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

@@ -13,7 +13,7 @@
 //! `--ablation` additionally benches the two-sided-init Gaussian_k
 //! variant (DESIGN.md ablation).
 
-use sparkv::compress::{Compressor, GaussianK, GaussianKConfig, OpKind};
+use sparkv::compress::{Compressor, GaussianK, GaussianKConfig, OpKind, Workspace};
 use sparkv::stats::rng::Pcg64;
 use sparkv::util::benchkit::Bench;
 use sparkv::util::cli::Args;
@@ -33,9 +33,11 @@ fn main() -> anyhow::Result<()> {
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         for op_name in &ops {
             let op = OpKind::parse(op_name)?;
-            let mut c = op.build(k, 3);
+            let mut c = op.build(3);
+            let mut ws = Workspace::new();
             let med = bench.run(&format!("{}/d={d}", op.name()), || {
-                std::hint::black_box(c.compress(&u));
+                let s = c.compress_step(&u, k, &mut ws);
+                ws.recycle(std::hint::black_box(s));
             });
             println!(
                 "{:<10} d={d:>10}  {:>12}  ({:.2} ns/elem)",
@@ -45,15 +47,14 @@ fn main() -> anyhow::Result<()> {
             );
         }
         if args.flag("ablation") {
-            let mut c = GaussianK::with_config(
-                k,
-                GaussianKConfig {
-                    two_sided_init: true,
-                    ..Default::default()
-                },
-            );
+            let mut c = GaussianK::with_config(GaussianKConfig {
+                two_sided_init: true,
+                ..Default::default()
+            });
+            let mut ws = Workspace::new();
             let med = bench.run(&format!("gaussiank2s/d={d}"), || {
-                std::hint::black_box(c.compress(&u));
+                let s = c.compress_step(&u, k, &mut ws);
+                ws.recycle(std::hint::black_box(s));
             });
             println!(
                 "{:<10} d={d:>10}  {:>12}  ({:.2} ns/elem)",

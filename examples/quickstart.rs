@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use sparkv::analysis::exact_topk_ratio;
-use sparkv::compress::OpKind;
+use sparkv::compress::{Compressor, OpKind};
 use sparkv::config::TrainConfig;
 use sparkv::coordinator::train;
 use sparkv::data::{DataSource, GaussianMixture};
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         "{:<12} {:>8} {:>16} {:>14}",
         "operator", "nnz", "energy captured", "resid/‖u‖²"
     );
+    let mut ws = sparkv::compress::Workspace::new();
     for op in [
         OpKind::TopK,
         OpKind::RandK,
@@ -36,8 +37,8 @@ fn main() -> anyhow::Result<()> {
         OpKind::Trimmed,
         OpKind::GaussianK,
     ] {
-        let mut c = op.build(k, 7);
-        let s = c.compress(&u);
+        let mut c = op.build(7);
+        let s = c.compress_step(&u, k, &mut ws);
         let captured = s.norm2_sq();
         println!(
             "{:<12} {:>8} {:>15.1}% {:>14.6}",

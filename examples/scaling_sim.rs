@@ -6,14 +6,21 @@
 //!   cargo run --release --example scaling_sim -- \
 //!       [--nodes 4 --gpus 4] [--k-ratio 0.001] \
 //!       [--network 10g|25g|100g] [--stragglers 0.0] \
+//!       [--k-schedule warmup:0.016..0.001,epochs=2] [--sched-steps 48] \
+//!       [--steps-per-epoch 12] \
 //!       [--sweep-workers] [--out results/table2.json]
 //!
 //! `--sweep-workers` prints efficiency vs cluster size (the scalability
 //! curve implied by the paper's footnote 1: latency terms grow with P).
+//! `--k-schedule` additionally replays every (model, op) cell over the
+//! schedule's per-step density trace (the time-varying-density cost
+//! model) and writes `results/table2_scheduled.json`.
 
-use sparkv::cluster::scaling_table;
+use sparkv::cluster::{scaling_table, scaling_table_scheduled};
 use sparkv::compress::OpKind;
+use sparkv::config::Parallelism;
 use sparkv::netsim::{ComputeProfile, LinkSpec, SimConfig, Simulator, Topology};
+use sparkv::schedule::{density_trace, KSchedule};
 use sparkv::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -115,6 +122,30 @@ fn main() -> anyhow::Result<()> {
                 eff(OpKind::GaussianK)
             );
         }
+    }
+
+    if let Some(spec_text) = args.get("k-schedule") {
+        let spec = KSchedule::parse(spec_text)?;
+        let steps: usize = args.get_parsed_or("sched-steps", 48);
+        let steps_per_epoch: usize = args.get_parsed_or("steps-per-epoch", 12);
+        let trace = density_trace(&spec, k_ratio, steps_per_epoch, steps);
+        let scheduled = scaling_table_scheduled(
+            &ComputeProfile::paper_models(),
+            &ops,
+            &topo,
+            &trace,
+            Parallelism::Serial,
+        );
+        println!(
+            "\nscheduled sweep — {} over {steps} virtual steps (ρ {:.5} → {:.5}):\n{}",
+            spec.name(),
+            trace.first().copied().unwrap_or(0.0),
+            trace.last().copied().unwrap_or(0.0),
+            scheduled.render()
+        );
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/table2_scheduled.json", scheduled.to_json().to_string())?;
+        println!("wrote results/table2_scheduled.json");
     }
 
     let out_path = args.get_or("out", "results/table2.json");

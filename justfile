@@ -10,9 +10,18 @@ lint:
 
 # The nightly CI configuration, locally: 4× property-test cases for every
 # testkit::forall invariant (serial/threaded equivalence, compressor
-# contracts, error-feedback mass conservation).
+# contracts, error-feedback mass conservation, and the k-schedule
+# property suite in tests/schedule_equivalence.rs).
 test-heavy:
     cd rust && cargo build --release && SPARKV_PROPTEST_CASES=256 cargo test -q
+
+# The bench-smoke CI job, locally: every bench target must still compile,
+# and the scaling simulator must run end-to-end under a warmup k-schedule
+# (exercises the scheduled sweep + density-trace plumbing).
+bench-smoke:
+    cd rust && cargo build --benches
+    cd rust && cargo run --release --example scaling_sim -- \
+        --k-schedule warmup:0.016..0.001,epochs=2 --sched-steps 24 --steps-per-epoch 6
 
 # Fast bench pass (reduced dimension sweep).
 bench-fast:

@@ -38,6 +38,8 @@ fn main() -> anyhow::Result<()> {
             global_topk: false,
             parallelism: sparkv::config::Parallelism::Serial,
             buckets: sparkv::config::Buckets::None,
+            k_schedule: sparkv::schedule::KSchedule::Const(None),
+            steps_per_epoch: 100,
         };
         let out = train(cfg, &mut model, &data)?;
         let series = out.metrics.smoothed_loss((steps / 10).max(1));

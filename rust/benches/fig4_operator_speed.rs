@@ -5,7 +5,7 @@
 
 use sparkv::buckets::{run_pipelined, BucketSchedule};
 use sparkv::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
-use sparkv::compress::{Compressor, OpKind, TopK};
+use sparkv::compress::{Compressor, OpKind, TopK, Workspace};
 use sparkv::stats::rng::Pcg64;
 use sparkv::util::benchkit::Bench;
 
@@ -30,9 +30,11 @@ fn main() -> anyhow::Result<()> {
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         let mut times = Vec::new();
         for op in [OpKind::TopK, OpKind::Dgc, OpKind::GaussianK] {
-            let mut c = op.build(k, 3);
+            let mut c = op.build(3);
+            let mut ws = Workspace::new();
             let med = bench.run(&format!("{}/d={d}", op.name()), || {
-                std::hint::black_box(c.compress(&u));
+                let s = c.compress_step(&u, k, &mut ws);
+                ws.recycle(std::hint::black_box(s));
             });
             times.push(med);
         }
@@ -117,21 +119,24 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let schedule = BucketSchedule::fixed_bytes(d_pipe, d_pipe * 4 / nb, k_pipe);
     let engine = ThreadedCollectives;
+    let mut mono_ws = Workspace::new();
     let t_mono = bench.run("bucketed/monolithic/topk+allgather", || {
         let payloads: Vec<_> = grads
             .iter()
-            .map(|g| TopK::new(k_pipe).compress(g))
+            .map(|g| TopK::new().compress_step(g, k_pipe, &mut mono_ws))
             .collect();
         std::hint::black_box(engine.sparse_allgather_avg(&payloads));
     });
     let mut agg = vec![0.0f32; d_pipe];
     let t_pipe = bench.run("bucketed/pipelined/topk+allgather", || {
         let specs = schedule.specs();
+        let grads_ref = &grads;
+        let mut pws = Workspace::new();
         run_pipelined(
             specs.len(),
-            |b| {
+            move |b| {
                 let sp = specs[b];
-                grads
+                grads_ref
                     .iter()
                     .map(|g| {
                         // k_b == 0 buckets send nothing (same contract as
@@ -139,7 +144,7 @@ fn main() -> anyhow::Result<()> {
                         if sp.k == 0 {
                             sparkv::tensor::SparseVec::new(sp.len())
                         } else {
-                            TopK::new(sp.k).compress(&g[sp.lo..sp.hi])
+                            TopK::new().compress_step(&g[sp.lo..sp.hi], sp.k, &mut pws)
                         }
                     })
                     .collect::<Vec<_>>()
@@ -161,6 +166,46 @@ fn main() -> anyhow::Result<()> {
         t_mono / t_pipe,
         if t_pipe < t_mono * 1.15 {
             "OK (overlap hides exchange)"
+        } else {
+            "VIOLATED"
+        },
+    );
+
+    // Workspace section: the schedule engine moves k between steps, so
+    // the selection hot path must absorb a *varying* k without
+    // reallocating. Warm = one per-worker workspace reused across calls
+    // (the trainer's steady state, with output-buffer recycling); cold =
+    // a fresh workspace every call (what the pre-workspace API did
+    // implicitly with its per-operator scratch plus fresh outputs).
+    let d_ws = if fast { 4_000_000usize } else { 16_000_000usize };
+    let mut rng = Pcg64::seed(17);
+    let u_ws: Vec<f32> = (0..d_ws).map(|_| rng.next_gaussian() as f32).collect();
+    let ks = [d_ws / 2000, d_ws / 1000, d_ws / 500];
+    let mut c = TopK::new();
+    let mut warm = Workspace::new();
+    let mut i = 0usize;
+    let t_warm = bench.run("workspace/warm/topk-scheduled-k", || {
+        let k = ks[i % ks.len()];
+        i += 1;
+        let s = c.compress_step(&u_ws, k, &mut warm);
+        warm.recycle(std::hint::black_box(s));
+    });
+    let mut j = 0usize;
+    let t_cold = bench.run("workspace/cold/topk-scheduled-k", || {
+        let k = ks[j % ks.len()];
+        j += 1;
+        let mut cold = Workspace::new();
+        std::hint::black_box(c.compress_step(&u_ws, k, &mut cold));
+    });
+    println!(
+        "\nworkspace reuse under a varying k (top_k, d = {d_ws}, k cycling {ks:?}):\n\
+         \x20 warm (recycled buffers) {}\n\
+         \x20 cold (fresh per call)   {}   ({:.2}× vs warm) — {}",
+        sparkv::util::human_secs(t_warm),
+        sparkv::util::human_secs(t_cold),
+        t_cold / t_warm,
+        if t_warm <= t_cold * 1.05 {
+            "OK (reuse never loses)"
         } else {
             "VIOLATED"
         },

@@ -71,6 +71,8 @@ fn main() -> anyhow::Result<()> {
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        k_schedule: sparkv::schedule::KSchedule::Const(None),
+        steps_per_epoch: 100,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

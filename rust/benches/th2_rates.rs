@@ -22,10 +22,10 @@ fn main() -> anyhow::Result<()> {
     for c in [5usize, 10, 20, 50] {
         let k = d / c;
         let q = Quadratic::new(d, 20.0, 0.001);
-        let mut topk = TopK::new(k);
-        let rt = run_ef_sgd(&q, &mut topk, 0.05, 0.0, budget.min(400), 11, 200);
-        let mut randk = RandK::new(k, 13);
-        let rr = run_ef_sgd(&q, &mut randk, 0.05, 0.0, budget.min(400), 11, 200);
+        let mut topk = TopK::new();
+        let rt = run_ef_sgd(&q, &mut topk, k, 0.05, 0.0, budget.min(400), 11, 200);
+        let mut randk = RandK::new(13);
+        let rr = run_ef_sgd(&q, &mut randk, k, 0.05, 0.0, budget.min(400), 11, 200);
         let (gt, gr) = (rt.trajectory[1], rr.trajectory[1]);
         println!(
             "{c:>6} {k:>6} {gt:>14.4e} {gr:>14.4e} {:>7.1}×",
@@ -46,10 +46,10 @@ fn main() -> anyhow::Result<()> {
             let start = traj[0];
             traj.iter().all(|&g| g <= start * 1.01)
         };
-        let mut topk = TopK::new(k);
-        let rt = run_ef_sgd(&q, &mut topk, lr, 0.0, budget, 11, 200);
-        let mut randk = RandK::new(k, 13);
-        let rr = run_ef_sgd(&q, &mut randk, lr, 0.0, budget, 11, 200);
+        let mut topk = TopK::new();
+        let rt = run_ef_sgd(&q, &mut topk, k, lr, 0.0, budget, 11, 200);
+        let mut randk = RandK::new(13);
+        let rr = run_ef_sgd(&q, &mut randk, k, lr, 0.0, budget, 11, 200);
         println!(
             "  lr = {lr:<5} topk {}  randk {}",
             if stable(&rt.trajectory) { "stable  " } else { "UNSTABLE" },
@@ -60,10 +60,10 @@ fn main() -> anyhow::Result<()> {
     println!("\n(c) logistic regression (n = 400, d = 50, k = 5): grad-norm trajectory");
     let l = Logistic::synthetic(400, 50, 3);
     let iters = if fast { 2000 } else { 6000 };
-    let mut topk = TopK::new(5);
-    let rt = run_ef_sgd(&l, &mut topk, 0.5, 0.0, iters, 17, iters / 10);
-    let mut randk = RandK::new(5, 19);
-    let rr = run_ef_sgd(&l, &mut randk, 0.5, 0.0, iters, 17, iters / 10);
+    let mut topk = TopK::new();
+    let rt = run_ef_sgd(&l, &mut topk, 5, 0.5, 0.0, iters, 17, iters / 10);
+    let mut randk = RandK::new(19);
+    let rr = run_ef_sgd(&l, &mut randk, 5, 0.5, 0.0, iters, 17, iters / 10);
     println!("{:>8} {:>14} {:>14}", "iter", "topk", "randk");
     for (i, (a, b)) in rt.trajectory.iter().zip(&rr.trajectory).enumerate() {
         println!("{:>8} {a:>14.4e} {b:>14.4e}", i * iters / 10);

@@ -10,7 +10,7 @@
 //! iterations-to-ε on noisy quadratic and logistic-regression objectives
 //! and checks that empirical ordering.
 
-use crate::compress::Compressor;
+use crate::compress::{Compressor, Workspace};
 use crate::error_feedback::ResidualStore;
 use crate::stats::rng::Pcg64;
 
@@ -141,12 +141,15 @@ pub struct RateResult {
     pub trajectory: Vec<f64>,
 }
 
-/// Run single-worker EF-SGD with the given compressor until
-/// ‖∇f(x)‖² ≤ eps or max_iters. (Single worker isolates the *compressor's*
-/// effect, which is what Theorem 2 bounds.)
+/// Run single-worker EF-SGD with the given compressor at a fixed `k`
+/// until ‖∇f(x)‖² ≤ eps or max_iters. (Single worker isolates the
+/// *compressor's* effect, which is what Theorem 2 bounds; per-step k
+/// scheduling lives in the trainer.)
+#[allow(clippy::too_many_arguments)]
 pub fn run_ef_sgd(
     obj: &dyn Objective,
     comp: &mut dyn Compressor,
+    k: usize,
     lr: f32,
     eps: f64,
     max_iters: usize,
@@ -157,6 +160,7 @@ pub fn run_ef_sgd(
     let mut x = vec![0.5f32; d]; // deterministic non-optimal start
     let mut rng = Pcg64::seed(seed);
     let mut store = ResidualStore::new(d);
+    let mut ws = Workspace::new();
     let mut g = vec![0.0f32; d];
     let mut traj = Vec::new();
     for t in 0..max_iters {
@@ -173,7 +177,7 @@ pub fn run_ef_sgd(
             }
         }
         obj.stoch_grad(&x, &mut rng, &mut g);
-        let sent = store.step(&g, comp);
+        let sent = store.step(&g, comp, k, &mut ws);
         for (&i, &v) in sent.indices.iter().zip(&sent.values) {
             x[i as usize] -= lr * v;
         }
@@ -208,7 +212,7 @@ mod tests {
     fn dense_converges_on_quadratic() {
         let q = Quadratic::new(100, 10.0, 0.001);
         let mut comp = Dense;
-        let r = run_ef_sgd(&q, &mut comp, 0.5, 1e-4, 20_000, 7, 100);
+        let r = run_ef_sgd(&q, &mut comp, 100, 0.5, 1e-4, 20_000, 7, 100);
         assert!(r.reached_eps, "dense EF-SGD should converge: {r:?}");
     }
 
@@ -225,10 +229,10 @@ mod tests {
         // (a) Early-phase gap at lr = 0.05 (stable for both): after 200
         // iterations Top_k's full-gradient norm is orders of magnitude
         // below Rand_k's.
-        let mut topk = TopK::new(k);
-        let rt = run_ef_sgd(&q, &mut topk, 0.05, 0.0, 400, 11, 200);
-        let mut randk = RandK::new(k, 13);
-        let rr = run_ef_sgd(&q, &mut randk, 0.05, 0.0, 400, 11, 200);
+        let mut topk = TopK::new();
+        let rt = run_ef_sgd(&q, &mut topk, k, 0.05, 0.0, 400, 11, 200);
+        let mut randk = RandK::new(13);
+        let rr = run_ef_sgd(&q, &mut randk, k, 0.05, 0.0, 400, 11, 200);
         let (gt, gr) = (rt.trajectory[1], rr.trajectory[1]);
         assert!(
             gt * 5.0 < gr,
@@ -238,10 +242,10 @@ mod tests {
         // (b) Stability at lr = 0.1: Top_k descends monotonically into the
         // noise floor while Rand_k's delayed updates blow the transient up
         // by orders of magnitude above f(x₀)'s gradient norm.
-        let mut topk = TopK::new(k);
-        let rt = run_ef_sgd(&q, &mut topk, 0.1, 0.0, 4000, 11, 200);
-        let mut randk = RandK::new(k, 13);
-        let rr = run_ef_sgd(&q, &mut randk, 0.1, 0.0, 4000, 11, 200);
+        let mut topk = TopK::new();
+        let rt = run_ef_sgd(&q, &mut topk, k, 0.1, 0.0, 4000, 11, 200);
+        let mut randk = RandK::new(13);
+        let rr = run_ef_sgd(&q, &mut randk, k, 0.1, 0.0, 4000, 11, 200);
         let peak = |t: &[f64]| t.iter().cloned().fold(0.0, f64::max);
         let start = rt.trajectory[0];
         assert!(
@@ -259,8 +263,8 @@ mod tests {
     #[test]
     fn logistic_synthetic_learnable() {
         let l = Logistic::synthetic(200, 20, 3);
-        let mut comp = TopK::new(5);
-        let r = run_ef_sgd(&l, &mut comp, 0.5, 5e-3, 30_000, 17, 100);
+        let mut comp = TopK::new();
+        let r = run_ef_sgd(&l, &mut comp, 5, 0.5, 5e-3, 30_000, 17, 100);
         // Gradient norm should drop substantially from the start.
         assert!(
             r.final_grad_norm_sq < r.trajectory[0] * 0.05,
@@ -274,7 +278,7 @@ mod tests {
     fn trajectory_sampled() {
         let q = Quadratic::new(10, 2.0, 0.0);
         let mut comp = Dense;
-        let r = run_ef_sgd(&q, &mut comp, 0.1, 0.0, 1000, 5, 100);
+        let r = run_ef_sgd(&q, &mut comp, 10, 0.1, 0.0, 1000, 5, 100);
         assert_eq!(r.trajectory.len(), 10);
     }
 }

@@ -74,11 +74,18 @@ impl BucketSpec {
 
 /// A partition of the flat `d`-dimensional gradient into contiguous
 /// non-empty buckets covering `[0, d)` exactly, with per-bucket `k`
-/// apportioned from the global budget (see the module docs).
+/// apportioned from the global budget (see the module docs). The specs
+/// carry the apportionment of the *construction-time* k; when a
+/// [`crate::schedule`] plan varies k between steps, the trainer
+/// re-apportions per step via [`BucketSchedule::apportion_k`] over the
+/// same bucket sizes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BucketSchedule {
     d: usize,
     specs: Vec<BucketSpec>,
+    /// Cached bucket sizes (avoids rebuilding them for every per-step
+    /// re-apportionment).
+    sizes: Vec<usize>,
 }
 
 impl BucketSchedule {
@@ -139,7 +146,7 @@ impl BucketSchedule {
             .enumerate()
             .map(|(index, ((lo, hi), k))| BucketSpec { index, lo, hi, k })
             .collect();
-        BucketSchedule { d, specs }
+        BucketSchedule { d, specs, sizes }
     }
 
     /// Flat gradient dimension this schedule partitions.
@@ -164,6 +171,14 @@ impl BucketSchedule {
     /// Sum of the per-bucket budgets (== `min(k, d)` by construction).
     pub fn total_k(&self) -> usize {
         self.specs.iter().map(|s| s.k).sum()
+    }
+
+    /// Re-apportion a *per-step* budget `k_t` across this schedule's
+    /// buckets (largest-remainder over the cached sizes — the same
+    /// function that filled the specs at construction, so a constant
+    /// schedule reproduces `specs()[b].k` exactly). `Σ = min(k_t, d)`.
+    pub fn apportion_k(&self, k_t: usize) -> Vec<usize> {
+        apportion_k(&self.sizes, k_t)
     }
 }
 
@@ -327,6 +342,22 @@ mod tests {
                 assert!(kb <= db, "k={k} bucket {b}: {kb} > {db}");
             }
             assert_eq!(ks, apportion_k(&sizes, k), "k={k} not deterministic");
+        }
+    }
+
+    #[test]
+    fn per_step_reapportion_matches_construction() {
+        let s = BucketSchedule::fixed_bytes(100, 32, 10);
+        // Re-apportioning the construction-time k reproduces the specs.
+        let base: Vec<usize> = s.specs().iter().map(|b| b.k).collect();
+        assert_eq!(s.apportion_k(10), base);
+        // A varying k_t still sums to min(k_t, d) with per-bucket caps.
+        for k_t in [0usize, 1, 7, 50, 100, 1000] {
+            let ks = s.apportion_k(k_t);
+            assert_eq!(ks.iter().sum::<usize>(), k_t.min(100), "k_t={k_t}");
+            for (kb, sp) in ks.iter().zip(s.specs()) {
+                assert!(*kb <= sp.len());
+            }
         }
     }
 

@@ -123,6 +123,172 @@ pub fn scaling_table_bucketed(
     ScalingTable { cells }
 }
 
+/// One cell of the *scheduled* sweep: a (model, op) pair simulated over a
+/// per-step density trace (the time-varying-k cost model — the netsim
+/// side of the `k_schedule` engine).
+#[derive(Debug, Clone)]
+pub struct ScheduledCell {
+    pub model: String,
+    pub op: OpKind,
+    /// Virtual steps simulated (== the trace length).
+    pub steps: usize,
+    /// Σ per-step iteration time.
+    pub total_time_s: f64,
+    pub mean_iter_s: f64,
+    /// Σ per-step communication / selection time.
+    pub comm_s: f64,
+    pub select_s: f64,
+    pub first_density: f64,
+    pub last_density: f64,
+    pub mean_density: f64,
+    /// The density trace this cell was simulated with (echoed so the JSON
+    /// is self-describing; identical across cells of one sweep).
+    pub densities: Vec<f64>,
+    /// Per-step iteration times (the scheduled timeline).
+    pub iter_times_s: Vec<f64>,
+}
+
+/// The scheduled scaling table: models × operators, each replayed over
+/// the same per-step density trace.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduledTable {
+    pub cells: Vec<ScheduledCell>,
+}
+
+/// Sweep every (model, op) pair over a per-step density trace
+/// (`densities[t]` = the schedule's ρ_t; build one with
+/// [`crate::schedule::density_trace`]): step t runs one deterministic
+/// iteration at ρ_t ([`Simulator::iteration_at_ratio`]). A constant trace
+/// of length 1 reproduces the corresponding [`scaling_table`] cell
+/// exactly. Cells are independent simulations, so the sweep fans out
+/// across threads like [`scaling_table_par`]; output order is (model, op)
+/// input order regardless of parallelism.
+pub fn scaling_table_scheduled(
+    models: &[ComputeProfile],
+    ops: &[OpKind],
+    topo: &Topology,
+    densities: &[f64],
+    parallelism: Parallelism,
+) -> ScheduledTable {
+    let jobs: Vec<(&ComputeProfile, OpKind)> = models
+        .iter()
+        .flat_map(|m| ops.iter().map(move |&op| (m, op)))
+        .collect();
+    let run_cell = |&(m, op): &(&ComputeProfile, OpKind)| -> ScheduledCell {
+        let cfg = SimConfig {
+            topo: topo.clone(),
+            model: m.clone(),
+            op,
+            k_ratio: densities.first().copied().unwrap_or(0.001),
+            straggler_sigma: 0.0,
+            seed: 1,
+            buckets: 1,
+        };
+        let mut sim = Simulator::new(cfg);
+        let mut iter_times_s = Vec::with_capacity(densities.len());
+        let (mut total, mut comm, mut select) = (0.0f64, 0.0f64, 0.0f64);
+        for &rho in densities {
+            let b = sim.iteration_at_ratio(rho);
+            total += b.total;
+            comm += b.comm;
+            select += b.select;
+            iter_times_s.push(b.total);
+        }
+        let steps = densities.len();
+        let inv = 1.0 / steps.max(1) as f64;
+        ScheduledCell {
+            model: m.name.to_string(),
+            op,
+            steps,
+            total_time_s: total,
+            mean_iter_s: total * inv,
+            comm_s: comm,
+            select_s: select,
+            first_density: densities.first().copied().unwrap_or(0.0),
+            last_density: densities.last().copied().unwrap_or(0.0),
+            mean_density: densities.iter().sum::<f64>() * inv,
+            densities: densities.to_vec(),
+            iter_times_s,
+        }
+    };
+    let nthreads = parallelism.threads().min(jobs.len()).max(1);
+    let cells: Vec<ScheduledCell> = if nthreads <= 1 {
+        jobs.iter().map(run_cell).collect()
+    } else {
+        let per = jobs.len().div_ceil(nthreads);
+        std::thread::scope(|s| {
+            let run_cell = &run_cell;
+            let handles: Vec<_> = jobs
+                .chunks(per)
+                .map(|group| s.spawn(move || group.iter().map(run_cell).collect::<Vec<_>>()))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("scheduled cell thread panicked"))
+                .collect()
+        })
+    };
+    ScheduledTable { cells }
+}
+
+impl ScheduledTable {
+    pub fn cell(&self, model: &str, op: OpKind) -> Option<&ScheduledCell> {
+        self.cells.iter().find(|c| c.model == model && c.op == op)
+    }
+
+    /// Compact per-cell summary (bench/example output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<14}{:<11}{:>7} {:>12} {:>12} {:>10} {:>10}\n",
+            "model", "op", "steps", "total(s)", "mean(s)", "rho_0", "rho_T"
+        ));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:<14}{:<11}{:>7} {:>12.3} {:>12.4} {:>10.5} {:>10.5}\n",
+                c.model,
+                c.op.name(),
+                c.steps,
+                c.total_time_s,
+                c.mean_iter_s,
+                c.first_density,
+                c.last_density
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.cells
+                .iter()
+                .map(|c| {
+                    let mut o = Json::obj();
+                    o.set("model", Json::from(c.model.as_str()))
+                        .set("op", Json::from(c.op.name()))
+                        .set("steps", Json::from(c.steps))
+                        .set("total_time_s", Json::from(c.total_time_s))
+                        .set("mean_iter_s", Json::from(c.mean_iter_s))
+                        .set("comm_s", Json::from(c.comm_s))
+                        .set("select_s", Json::from(c.select_s))
+                        .set("first_density", Json::from(c.first_density))
+                        .set("last_density", Json::from(c.last_density))
+                        .set("mean_density", Json::from(c.mean_density))
+                        .set(
+                            "densities",
+                            Json::Arr(c.densities.iter().map(|&r| Json::from(r)).collect()),
+                        )
+                        .set(
+                            "iter_times_s",
+                            Json::Arr(c.iter_times_s.iter().map(|&t| Json::from(t)).collect()),
+                        );
+                    o
+                })
+                .collect(),
+        )
+    }
+}
+
 impl ScalingTable {
     pub fn cell(&self, model: &str, op: OpKind) -> Option<&ScalingCell> {
         self.cells.iter().find(|c| c.model == model && c.op == op)
@@ -333,6 +499,75 @@ mod tests {
             assert!((c.iter_time_s + c.overlap_saved_s - serialized).abs() < 1e-12);
         }
         assert_eq!(pipe.cell("resnet50", OpKind::Dense).unwrap().overlap_saved_s, 0.0);
+    }
+
+    #[test]
+    fn scheduled_sweep_reduces_to_constant_and_tracks_density() {
+        let models = [ComputeProfile::by_name("resnet50").unwrap()];
+        let ops = [OpKind::TopK, OpKind::GaussianK];
+        let topo = Topology::paper_16gpu();
+        // A length-1 constant trace reproduces the plain table cell.
+        let single = scaling_table_scheduled(&models, &ops, &topo, &[0.001], Parallelism::Serial);
+        let plain = scaling_table(&models, &ops, &topo, 0.001);
+        for (s, p) in single.cells.iter().zip(&plain.cells) {
+            assert_eq!(s.model, p.model);
+            assert_eq!(s.op, p.op);
+            assert_eq!(s.steps, 1);
+            assert_eq!(s.total_time_s.to_bits(), p.iter_time_s.to_bits());
+            assert_eq!(s.mean_iter_s.to_bits(), p.iter_time_s.to_bits());
+        }
+        // A decaying trace: per-step iteration times are non-increasing
+        // (comm shrinks with density; compute/select are density-free) and
+        // the trace is echoed verbatim.
+        let decay = [0.016, 0.008, 0.004, 0.002, 0.001];
+        let t = scaling_table_scheduled(&models, &ops, &topo, &decay, Parallelism::Serial);
+        for c in &t.cells {
+            assert_eq!(c.densities, decay);
+            assert_eq!(c.iter_times_s.len(), decay.len());
+            for w in c.iter_times_s.windows(2) {
+                assert!(w[1] <= w[0] + 1e-15, "{}/{:?}: {:?}", c.model, c.op, c.iter_times_s);
+            }
+            assert!((c.total_time_s - c.iter_times_s.iter().sum::<f64>()).abs() < 1e-12);
+            assert_eq!(c.first_density, 0.016);
+            assert_eq!(c.last_density, 0.001);
+        }
+        // The warmup tail is cheaper than the dense head for sparse ops.
+        let cell = t.cell("resnet50", OpKind::GaussianK).unwrap();
+        assert!(cell.iter_times_s.last().unwrap() < cell.iter_times_s.first().unwrap());
+    }
+
+    #[test]
+    fn scheduled_sweep_parallel_matches_serial() {
+        let models = ComputeProfile::paper_models();
+        let ops = [OpKind::TopK, OpKind::Dense];
+        let topo = Topology::paper_16gpu();
+        let trace = [0.01, 0.001];
+        let serial = scaling_table_scheduled(&models, &ops, &topo, &trace, Parallelism::Serial);
+        let par = scaling_table_scheduled(&models, &ops, &topo, &trace, Parallelism::Threads(4));
+        assert_eq!(serial.cells.len(), par.cells.len());
+        for (a, b) in serial.cells.iter().zip(&par.cells) {
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn scheduled_json_and_render_shape() {
+        let models = [ComputeProfile::by_name("vgg16").unwrap()];
+        let t = scaling_table_scheduled(
+            &models,
+            &[OpKind::GaussianK],
+            &Topology::paper_16gpu(),
+            &[0.004, 0.001],
+            Parallelism::Serial,
+        );
+        let j = t.to_json();
+        let cell = &j.as_arr().unwrap()[0];
+        assert_eq!(cell.get("op").and_then(crate::util::json::Json::as_str), Some("gaussiank"));
+        assert_eq!(cell.get("densities").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(cell.get("iter_times_s").unwrap().as_arr().unwrap().len(), 2);
+        assert!(t.render().contains("vgg16"));
     }
 
     #[test]

@@ -269,9 +269,12 @@ mod tests {
             let mut dense = Vec::new();
             for w in 0..p {
                 let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
-                let mut comp = crate::compress::TopK::new(k);
                 use crate::compress::Compressor;
-                let s = comp.compress(&u);
+                let s = crate::compress::TopK::new().compress_step(
+                    &u,
+                    k,
+                    &mut crate::compress::Workspace::new(),
+                );
                 dense.push(s.to_dense());
                 sparse.push(s);
                 let _ = w;
@@ -293,7 +296,7 @@ mod tests {
 #[cfg(test)]
 mod gtopk_tests {
     use super::*;
-    use crate::compress::{Compressor, TopK};
+    use crate::compress::{Compressor, TopK, Workspace};
     use crate::stats::rng::Pcg64;
     use crate::util::testkit::{self, Gen};
 
@@ -345,8 +348,7 @@ mod gtopk_tests {
             let sum: Vec<f32> = (0..d)
                 .map(|i| workers.iter().map(|w| w.values[i]).sum::<f32>())
                 .collect();
-            let mut topk = TopK::new(k);
-            let expect = topk.compress(&sum);
+            let expect = TopK::new().compress_step(&sum, k, &mut Workspace::new());
             let nnz = dense.iter().filter(|&&v| v != 0.0).count();
             if nnz > k {
                 return Err(format!("nnz {nnz} > k {k}"));
@@ -373,8 +375,7 @@ mod gtopk_tests {
         let workers: Vec<SparseVec> = (0..p)
             .map(|_| {
                 let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
-                let mut c = TopK::new(4 * k);
-                c.compress(&u)
+                TopK::new().compress_step(&u, 4 * k, &mut Workspace::new())
             })
             .collect();
         let (dense, sel) = gtopk_allreduce_avg(&workers, k);

@@ -9,82 +9,82 @@
 //! second exact top-k on the (small) candidate set — hence "invoke top-k
 //! selection twice on subsets of the original vector".
 
-use super::{select_above, Compressor};
+use super::{select_above, Compressor, Workspace};
 use crate::stats::rng::Pcg64;
 use crate::tensor::SparseVec;
 
-/// DGC hierarchical sampling selector.
+/// DGC hierarchical sampling selector (k arrives per step; `k == 0`
+/// returns an empty payload without advancing the sampling stream).
 pub struct DgcK {
-    k: usize,
     /// Sampling fraction (paper uses 1%).
     pub sample_ratio: f64,
     rng: Pcg64,
-    scratch: Vec<f32>,
 }
 
 impl DgcK {
-    pub fn new(k: usize, sample_ratio: f64, seed: u64) -> DgcK {
-        assert!(k > 0, "DgcK requires k >= 1");
+    pub fn new(sample_ratio: f64, seed: u64) -> DgcK {
         assert!((0.0..=1.0).contains(&sample_ratio) && sample_ratio > 0.0);
         DgcK {
-            k,
             sample_ratio,
             rng: Pcg64::seed(seed ^ 0x44474353), // "DGCS"
-            scratch: Vec::new(),
         }
     }
 
     /// Estimate the top-k threshold from a uniform sample (stage 1).
-    fn sampled_threshold(&mut self, u: &[f32]) -> f32 {
+    fn sampled_threshold(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> f32 {
         let d = u.len();
         let s = ((d as f64 * self.sample_ratio).ceil() as usize).clamp(1, d);
         // Sample-k proportional to the global k.
-        let sample_k = ((self.k as f64 * s as f64 / d as f64).ceil() as usize).clamp(1, s);
-        self.scratch.clear();
+        let sample_k = ((k as f64 * s as f64 / d as f64).ceil() as usize).clamp(1, s);
+        ws.abs.clear();
         for _ in 0..s {
             let i = self.rng.next_below(d as u64) as usize;
-            self.scratch.push(u[i].abs());
+            ws.abs.push(u[i].abs());
         }
         let idx = sample_k - 1;
-        let (_, kth, _) = self
-            .scratch
-            .select_nth_unstable_by(idx, |a, b| b.total_cmp(a));
+        let (_, kth, _) = ws.abs.select_nth_unstable_by(idx, |a, b| b.total_cmp(a));
         *kth
     }
 }
 
 impl Compressor for DgcK {
-    fn compress(&mut self, u: &[f32]) -> SparseVec {
+    fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec {
         let d = u.len();
-        let k = self.k.min(d);
-        if k == d {
-            return super::Dense.compress(u);
+        let k = k.min(d);
+        if k == 0 {
+            return SparseVec::new(d);
         }
-        let thres = self.sampled_threshold(u);
+        if k == d {
+            return super::Dense.compress_step(u, k, ws);
+        }
+        let thres = self.sampled_threshold(u, k, ws);
         // Stage 2: gather candidates above the sampled threshold.
-        let cand = select_above(u, thres);
+        let cand = select_above(u, thres, ws);
         if cand.nnz() <= k {
             // Under-selection: accept (DGC communicates what it found; the
             // residual keeps the rest). Guard the pathological empty case.
             if cand.nnz() == 0 {
-                return super::TopK::new(k).compress(u);
+                ws.recycle(cand);
+                return super::TopK::new().compress_step(u, k, ws);
             }
             return cand;
         }
         // Over-selection: exact top-k on the (small) candidate subset.
-        let mut pairs: Vec<(u32, f32)> = cand.indices.into_iter().zip(cand.values).collect();
+        ws.pairs.clear();
+        ws.pairs.extend(cand.indices.iter().copied().zip(cand.values.iter().copied()));
+        ws.recycle(cand);
         let idx = k - 1;
-        pairs.select_nth_unstable_by(idx, |a, b| b.1.abs().total_cmp(&a.1.abs()));
-        pairs.truncate(k);
-        SparseVec::from_pairs(d, pairs)
+        ws.pairs.select_nth_unstable_by(idx, |a, b| b.1.abs().total_cmp(&a.1.abs()));
+        ws.pairs.truncate(k);
+        ws.pairs.sort_unstable_by_key(|p| p.0);
+        let (mut indices, mut values) = ws.out_buffers(k);
+        indices.extend(ws.pairs.iter().map(|p| p.0));
+        values.extend(ws.pairs.iter().map(|p| p.1));
+        SparseVec { d, indices, values }
     }
 
     fn name(&self) -> &'static str {
         "dgc"
-    }
-
-    fn target_k(&self) -> usize {
-        self.k
     }
 }
 
@@ -99,11 +99,13 @@ mod tests {
         let mut rng = Pcg64::seed(20);
         let u: Vec<f32> = (0..50_000).map(|_| rng.next_gaussian() as f32).collect();
         let k = 50;
-        let mut op = DgcK::new(k, 0.01, 1);
+        let mut op = DgcK::new(0.01, 1);
+        let mut ws = Workspace::new();
         for _ in 0..10 {
-            let s = op.compress(&u);
+            let s = op.compress_step(&u, k, &mut ws);
             assert!(s.nnz() <= k, "nnz {} > k {k}", s.nnz());
             assert!(s.nnz() > 0);
+            ws.recycle(s);
         }
     }
 
@@ -114,12 +116,15 @@ mod tests {
         let mut rng = Pcg64::seed(21);
         let u: Vec<f32> = (0..100_000).map(|_| rng.next_gaussian() as f32).collect();
         let k = 100;
-        let exact = super::super::TopK::new(k).compress(&u).norm2_sq();
-        let mut op = DgcK::new(k, 0.01, 2);
+        let mut ws = Workspace::new();
+        let exact = super::super::TopK::new().compress_step(&u, k, &mut ws).norm2_sq();
+        let mut op = DgcK::new(0.01, 2);
         let mut acc = 0.0;
         let trials = 50;
         for _ in 0..trials {
-            acc += op.compress(&u).norm2_sq();
+            let s = op.compress_step(&u, k, &mut ws);
+            acc += s.norm2_sq();
+            ws.recycle(s);
         }
         let mean = acc / trials as f64;
         // The sampled threshold is noisy (sample-k is tiny at k = 0.001·d),
@@ -139,8 +144,8 @@ mod tests {
         let mut u = vec![0.0f32; 10_000];
         u[3] = 100.0;
         u[77] = -50.0;
-        let mut op = DgcK::new(10, 0.01, 3);
-        let s = op.compress(&u);
+        let mut op = DgcK::new(0.01, 3);
+        let s = op.compress_step(&u, 10, &mut Workspace::new());
         assert!(s.nnz() <= 10);
         assert!(s.indices.contains(&3) || s.indices.contains(&77) || s.nnz() > 0);
     }
@@ -151,8 +156,8 @@ mod tests {
             let d = g.usize_in(100, 8192);
             let k = g.usize_in(1, d / 4 + 1);
             let u = g.mixed_vec(d);
-            let mut op = DgcK::new(k, 0.01, g.rng.next_u64());
-            let s = op.compress(&u);
+            let mut op = DgcK::new(0.01, g.rng.next_u64());
+            let s = op.compress_step(&u, k, &mut Workspace::new());
             if s.nnz() > k.max(1) {
                 return Err(format!("nnz {} > k {k}", s.nnz()));
             }

@@ -20,8 +20,12 @@
 //!   exact-top-k fallback when the refinement ends empty; fallbacks are
 //!   counted and reported ([`GaussianK::fallbacks`]), and the numerical
 //!   studies show it never triggers on real bell-shaped gradients.
+//!
+//! The per-step k comes from the schedule plan; the strided-sample
+//! scratch lives in the caller's [`Workspace`], so a varying k never
+//! costs a reallocation.
 
-use super::{count_above, count_above_strided, select_above_hint, Compressor};
+use super::{count_above, count_above_strided, select_above_hint, Compressor, Workspace};
 use crate::stats::{mean_std, normal::ppf};
 use crate::tensor::SparseVec;
 
@@ -66,8 +70,8 @@ impl Default for GaussianKConfig {
 }
 
 /// The Gaussian_k approximate top-k operator (Algorithm 1).
+#[derive(Debug, Default)]
 pub struct GaussianK {
-    k: usize,
     pub cfg: GaussianKConfig,
     /// Number of times the exact-top-k fallback fired (diagnostics).
     pub fallbacks: u64,
@@ -75,33 +79,27 @@ pub struct GaussianK {
     /// (diagnostics; Fig. 10's under/over-sparsification study reads the
     /// per-call selected counts from the trainer's metrics instead).
     pub refine_iters: u64,
-    /// Reusable strided-sample scratch (large-d fast path; no per-call
-    /// allocation).
-    sample: Vec<f32>,
 }
 
 impl GaussianK {
-    pub fn new(k: usize) -> GaussianK {
-        Self::with_config(k, GaussianKConfig::default())
+    pub fn new() -> GaussianK {
+        GaussianK::default()
     }
 
-    pub fn with_config(k: usize, cfg: GaussianKConfig) -> GaussianK {
-        assert!(k > 0, "GaussianK requires k >= 1");
+    pub fn with_config(cfg: GaussianKConfig) -> GaussianK {
         GaussianK {
-            k,
             cfg,
             fallbacks: 0,
             refine_iters: 0,
-            sample: Vec::new(),
         }
     }
 
     /// The estimated threshold after refinement, plus the selected count —
     /// exposed for the analysis harnesses and the PJRT cross-check test
     /// (kernel parity with the Pallas implementation).
-    pub fn refined_threshold(&mut self, u: &[f32]) -> (f32, usize) {
+    pub fn refined_threshold(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> (f32, usize) {
         let d = u.len();
-        let k = self.k.min(d).max(1);
+        let k = k.min(d).max(1);
         let (mu, sigma) = mean_std(u);
         let p = if self.cfg.two_sided_init {
             1.0 - (k as f64) / (2.0 * d as f64)
@@ -131,26 +129,20 @@ impl GaussianK {
             }
             s => s,
         };
-        // With stride > 1, materialize the strided sample ONCE into a
-        // contiguous scratch: the ≤4 refinement counts then run over a
+        // With stride > 1, materialize the strided sample ONCE into the
+        // workspace scratch: the ≤4 refinement counts then run over a
         // d/stride-element buffer at cache speed instead of issuing
         // cache-missing strided loads per iteration (EXPERIMENTS.md §Perf).
         if stride > 1 {
-            self.sample.clear();
-            self.sample.reserve(d / stride + 1);
+            ws.sample.clear();
+            ws.sample.reserve(d / stride + 1);
             let mut i = 0;
             while i < d {
-                self.sample.push(u[i]);
+                ws.sample.push(u[i]);
                 i += stride;
             }
         }
-        let count_at = |s: &Self, t: f32| -> usize {
-            if stride > 1 {
-                count_above(&s.sample, t) * stride
-            } else {
-                count_above_strided(u, t, 1)
-            }
-        };
+        let sample: &[f32] = &ws.sample;
         // Algorithm 1 lines 5–13: evaluate the mask *first*, then adjust.
         // The mask used for the output is the last *evaluated* one — if the
         // loop exhausts right after an adjustment, the adjusted threshold
@@ -161,7 +153,11 @@ impl GaussianK {
         for _ in 0..self.cfg.max_iters {
             self.refine_iters += 1;
             eval_thres = thres;
-            count = count_at(self, eval_thres);
+            count = if stride > 1 {
+                count_above(sample, eval_thres) * stride
+            } else {
+                count_above_strided(u, eval_thres, 1)
+            };
             if count < lo.max(1) {
                 thres = eval_thres * self.cfg.down;
             } else if count > hi {
@@ -174,35 +170,34 @@ impl GaussianK {
         // callers only use it as a capacity hint and an emptiness check;
         // the actual selection pass is exact regardless. (An exact
         // reconciliation pass here would cost a full d-sweep and buy
-        // nothing: compress() materializes the exact set anyway.)
+        // nothing: compress_step materializes the exact set anyway.)
         (eval_thres, count)
     }
 }
 
 impl Compressor for GaussianK {
-    fn compress(&mut self, u: &[f32]) -> SparseVec {
+    fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec {
         let d = u.len();
-        let k = self.k.min(d);
-        if k == d {
-            return super::Dense.compress(u);
+        let k = k.min(d);
+        if k == 0 {
+            return SparseVec::new(d);
         }
-        let (thres, count) = self.refined_threshold(u);
+        if k == d {
+            return super::Dense.compress_step(u, k, ws);
+        }
+        let (thres, count) = self.refined_threshold(u, k, ws);
         if count == 0 {
             if self.cfg.exact_fallback && u.iter().any(|&v| v != 0.0) {
                 self.fallbacks += 1;
-                return super::TopK::new(k).compress(u);
+                return super::TopK::new().compress_step(u, k, ws);
             }
             return SparseVec::new(d);
         }
-        select_above_hint(u, thres, count)
+        select_above_hint(u, thres, count, ws)
     }
 
     fn name(&self) -> &'static str {
         "gaussiank"
-    }
-
-    fn target_k(&self) -> usize {
-        self.k
     }
 }
 
@@ -222,8 +217,8 @@ mod tests {
         let d = 1_000_000;
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         let k = d / 1000; // the paper's k = 0.001 d
-        let mut op = GaussianK::new(k);
-        let s = op.compress(&u);
+        let mut op = GaussianK::new();
+        let s = op.compress_step(&u, k, &mut Workspace::new());
         assert!(
             s.nnz() >= k / 3 && s.nnz() <= 3 * k,
             "nnz {} vs k {k}",
@@ -240,14 +235,11 @@ mod tests {
         let d = 1_000_000;
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         let k = d / 1000;
-        let mut op = GaussianK::with_config(
-            k,
-            GaussianKConfig {
-                two_sided_init: true,
-                ..Default::default()
-            },
-        );
-        let s = op.compress(&u);
+        let mut op = GaussianK::with_config(GaussianKConfig {
+            two_sided_init: true,
+            ..Default::default()
+        });
+        let s = op.compress_step(&u, k, &mut Workspace::new());
         assert!(
             s.nnz() >= 2 * k / 3 && s.nnz() <= 4 * k / 3 + 1,
             "nnz {} vs k {k}",
@@ -263,8 +255,9 @@ mod tests {
         let d = 200_000;
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         let k = 200;
-        let exact = super::super::TopK::new(k).compress(&u);
-        let approx = GaussianK::new(k).compress(&u);
+        let mut ws = Workspace::new();
+        let exact = super::super::TopK::new().compress_step(&u, k, &mut ws);
+        let approx = GaussianK::new().compress_step(&u, k, &mut ws);
         let ratio = approx.norm2_sq() / exact.norm2_sq();
         // A single Gaussian_k call can land on the under-selecting side of
         // the oscillating refinement (≈ half the exact energy); error
@@ -282,8 +275,8 @@ mod tests {
             let u: Vec<f32> = (0..d)
                 .map(|_| (mu + sigma * rng.next_gaussian()) as f32)
                 .collect();
-            let mut op = GaussianK::new(k);
-            let s = op.compress(&u);
+            let mut op = GaussianK::new();
+            let s = op.compress_step(&u, k, &mut Workspace::new());
             assert!(s.nnz() > 0, "mu={mu} sigma={sigma}: empty selection");
         }
     }
@@ -296,8 +289,8 @@ mod tests {
         let d = 500_000;
         let u: Vec<f32> = (0..d).map(|_| rng.next_laplace(0.0, 0.5) as f32).collect();
         let k = 500;
-        let mut op = GaussianK::new(k);
-        let s = op.compress(&u);
+        let mut op = GaussianK::new();
+        let s = op.compress_step(&u, k, &mut Workspace::new());
         // Heavy tails stretch the ±50% refinement further than on true
         // Gaussians: the operator over-communicates by up to ~8× here,
         // exactly the Fig. 10 over/under-sparsification behaviour.
@@ -312,12 +305,13 @@ mod tests {
     fn fallback_on_degenerate_input() {
         let mut u = vec![0.0f32; 10_000];
         u[5] = 1.0; // single spike, σ≈0.01, ppf threshold lands above |1.0|? Actually exercise it.
-        let mut op = GaussianK::new(10);
-        let s = op.compress(&u);
+        let mut op = GaussianK::new();
+        let mut ws = Workspace::new();
+        let s = op.compress_step(&u, 10, &mut ws);
         assert!(s.nnz() >= 1, "must select the spike (possibly via fallback)");
         let zero = vec![0.0f32; 100];
-        let mut op2 = GaussianK::new(5);
-        assert_eq!(op2.compress(&zero).nnz(), 0);
+        let mut op2 = GaussianK::new();
+        assert_eq!(op2.compress_step(&zero, 5, &mut ws).nnz(), 0);
     }
 
     #[test]
@@ -328,16 +322,14 @@ mod tests {
         let d = 500_000;
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         let k = 500;
-        let mut paper = GaussianK::new(k);
-        let mut two_sided = GaussianK::with_config(
-            k,
-            GaussianKConfig {
-                two_sided_init: true,
-                ..Default::default()
-            },
-        );
-        paper.compress(&u);
-        two_sided.compress(&u);
+        let mut ws = Workspace::new();
+        let mut paper = GaussianK::new();
+        let mut two_sided = GaussianK::with_config(GaussianKConfig {
+            two_sided_init: true,
+            ..Default::default()
+        });
+        paper.compress_step(&u, k, &mut ws);
+        two_sided.compress_step(&u, k, &mut ws);
         assert!(
             two_sided.refine_iters <= paper.refine_iters,
             "two-sided {} vs paper {}",
@@ -357,8 +349,8 @@ mod tests {
             // gracefully but unboundedly as |mu|/sigma grows.
             let mu = g.f32_in(-0.3, 0.3) * sigma;
             let u = g.gaussian_vec(d, mu, sigma);
-            let mut op = GaussianK::new(k);
-            let s = op.compress(&u);
+            let mut op = GaussianK::new();
+            let s = op.compress_step(&u, k, &mut Workspace::new());
             // Generous band after ≤4 coarse ±50% refinements: within ~6×.
             if s.nnz() < k / 6 || s.nnz() > 6 * k {
                 return Err(format!("d={d} k={k} mu={mu} sigma={sigma}: nnz {}", s.nnz()));
@@ -377,8 +369,8 @@ mod tests {
             let k = d / g.usize_in(50, 500);
             let sigma = g.f32_in(0.1, 3.0);
             let u = g.gaussian_vec(d, 0.0, sigma);
-            let mut op = GaussianK::new(k.max(1));
-            let s = op.compress(&u);
+            let mut op = GaussianK::new();
+            let s = op.compress_step(&u, k.max(1), &mut Workspace::new());
             let u_sq = crate::stats::norm2_sq(&u);
             let resid = u_sq - s.norm2_sq();
             // use the *selected* count as the effective k for the bound

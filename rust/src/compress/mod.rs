@@ -11,9 +11,32 @@
 //!   refinement loop.
 //!
 //! All operators implement [`Compressor`]: they take the error-compensated
-//! accumulation `u = g + ε` and return a [`SparseVec`] whose kept values
-//! are *unchanged* coordinates of `u` (a defining invariant, tested by the
-//! property suite).
+//! accumulation `u = g + ε` and a *per-step* target `k` (resolved by the
+//! [`crate::schedule`] plan engine — k is no longer operator state) and
+//! return a [`SparseVec`] whose kept values are *unchanged* coordinates of
+//! `u` (a defining invariant, tested by the property suite).
+//!
+//! ## The `Workspace` contract
+//!
+//! [`Compressor::compress_step`] draws every O(d) scratch buffer (the
+//! |u| quickselect copy, the Gaussian_k strided sample, tie/pair staging)
+//! and its O(k) output buffers from a caller-owned [`Workspace`], so a
+//! steady-state step performs **zero heap allocation** once the workspace
+//! is warm. (One scoped exception: [`RandK`]'s index sampling draws an
+//! O(k) buffer through `Pcg64::sample_indices` each call — its draw order
+//! is part of the reproducibility contract, so it is left untouched.)
+//! Rules:
+//!
+//! * One `Workspace` per worker (it is plain owned state — `Send`, no
+//!   sharing); any operator may be called with any workspace, in any
+//!   order — a `Workspace` carries no per-operator semantics, only
+//!   capacity.
+//! * Scratch contents are *undefined* between calls; implementations
+//!   must fully overwrite what they read.
+//! * Output buffers are handed out by [`Workspace::out_buffers`] and come
+//!   back through [`Workspace::recycle`] once the payload has been
+//!   consumed (the trainer recycles after the collective); skipping
+//!   `recycle` is safe — it only costs a fresh allocation next step.
 
 mod dgc;
 mod gaussian;
@@ -29,40 +52,98 @@ pub use trimmed::TrimmedK;
 
 use crate::tensor::SparseVec;
 
-/// A gradient sparsifier. `compress` must return coordinates of `u`
-/// unchanged; implementations aim for ~`target_k` non-zeros (exact for
-/// [`TopK`]/[`RandK`], approximate for the threshold-based operators).
+/// Reusable per-worker scratch for the compression hot path (see the
+/// module docs for the contract). All O(d) working memory lives here so
+/// operators themselves stay stateless apart from their RNG streams.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// |u| scratch (TopK/DGC quickselect).
+    pub(crate) abs: Vec<f32>,
+    /// Strided-sample scratch (GaussianK's large-d refinement path).
+    pub(crate) sample: Vec<f32>,
+    /// Tie-break index staging (TopK).
+    pub(crate) ties: Vec<u32>,
+    /// (index, value) staging (TopK ordering, DGC candidate truncation).
+    pub(crate) pairs: Vec<(u32, f32)>,
+    /// Cached identity indices 0..d (Dense's borrowed representation —
+    /// built once per dimension, then memcpy'd).
+    identity: Vec<u32>,
+    /// Recycled output buffers (indices/values pairs).
+    free: Vec<(Vec<u32>, Vec<f32>)>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A cleared (indices, values) output pair with at least `cap`
+    /// reserved — recycled from a previous payload when available.
+    pub(crate) fn out_buffers(&mut self, cap: usize) -> (Vec<u32>, Vec<f32>) {
+        let (mut indices, mut values) = self.free.pop().unwrap_or_default();
+        indices.clear();
+        values.clear();
+        indices.reserve(cap);
+        values.reserve(cap);
+        (indices, values)
+    }
+
+    /// Return a consumed payload's buffers to the free list (the trainer
+    /// calls this after the collective). Bounded so a one-off dense-sized
+    /// payload cannot pin memory forever.
+    pub fn recycle(&mut self, payload: SparseVec) {
+        if self.free.len() < 8 {
+            self.free.push((payload.indices, payload.values));
+        }
+    }
+
+    /// The identity index prefix `0..d`, cached across calls.
+    pub(crate) fn identity(&mut self, d: usize) -> &[u32] {
+        if self.identity.len() < d {
+            let start = self.identity.len() as u32;
+            self.identity.extend(start..d as u32);
+        }
+        &self.identity[..d]
+    }
+}
+
+/// A gradient sparsifier. `compress_step` must return coordinates of `u`
+/// unchanged; implementations aim for ~`k` non-zeros (exact for
+/// [`TopK`]/[`RandK`], approximate for the threshold-based operators) and
+/// every *sparse* operator must treat `k == 0` as "send nothing".
+/// [`Dense`] is the documented exception: it is the identity operator,
+/// ignores `k` entirely, and is never routed through sparse k budgets
+/// (the trainer's `is_dense` paths bypass bucket apportionment). The
+/// per-step `k` comes from the schedule plan
+/// ([`crate::schedule::Scheduler`]); operators hold no target-k state of
+/// their own.
 pub trait Compressor: Send {
-    /// Sparsify `u` (the error-compensated gradient accumulation).
-    fn compress(&mut self, u: &[f32]) -> SparseVec;
+    /// Sparsify `u` (the error-compensated gradient accumulation) to
+    /// ~`k` non-zeros using `ws` for all scratch and output buffers.
+    fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec;
 
     /// Operator name for reports (matches the paper's terminology).
     fn name(&self) -> &'static str;
-
-    /// The configured k.
-    fn target_k(&self) -> usize;
 }
 
-/// Identity "compressor" for Dense-SGD: keeps everything. Exists so the
-/// trainer can treat Dense/TopK/... uniformly; the collectives layer
-/// routes Dense through ring-allreduce rather than allgather.
+/// Identity "compressor" for Dense-SGD: keeps everything (`k` ignored).
+/// Exists so the trainer can treat Dense/TopK/... uniformly; the
+/// collectives layer routes Dense through ring-allreduce rather than
+/// allgather. Uses the workspace's cached identity indices, so repeat
+/// calls are two memcpys with no index-vector rebuild.
 pub struct Dense;
 
 impl Compressor for Dense {
-    fn compress(&mut self, u: &[f32]) -> SparseVec {
-        SparseVec {
-            d: u.len(),
-            indices: (0..u.len() as u32).collect(),
-            values: u.to_vec(),
-        }
+    fn compress_step(&mut self, u: &[f32], _k: usize, ws: &mut Workspace) -> SparseVec {
+        let d = u.len();
+        let (mut indices, mut values) = ws.out_buffers(d);
+        indices.extend_from_slice(ws.identity(d));
+        values.extend_from_slice(u);
+        SparseVec { d, indices, values }
     }
 
     fn name(&self) -> &'static str {
         "dense"
-    }
-
-    fn target_k(&self) -> usize {
-        usize::MAX
     }
 }
 
@@ -101,16 +182,17 @@ impl OpKind {
         }
     }
 
-    /// Instantiate an operator for dimension `d` with `k` targets and a
-    /// deterministic seed (used by the stochastic operators).
-    pub fn build(&self, k: usize, seed: u64) -> Box<dyn Compressor> {
+    /// Instantiate an operator with a deterministic seed (used by the
+    /// stochastic operators). The per-step k arrives at `compress_step`
+    /// time from the schedule plan.
+    pub fn build(&self, seed: u64) -> Box<dyn Compressor> {
         match self {
             OpKind::Dense => Box::new(Dense),
-            OpKind::TopK => Box::new(TopK::new(k)),
-            OpKind::RandK => Box::new(RandK::new(k, seed)),
-            OpKind::Dgc => Box::new(DgcK::new(k, 0.01, seed)),
-            OpKind::Trimmed => Box::new(TrimmedK::new(k)),
-            OpKind::GaussianK => Box::new(GaussianK::new(k)),
+            OpKind::TopK => Box::new(TopK::new()),
+            OpKind::RandK => Box::new(RandK::new(seed)),
+            OpKind::Dgc => Box::new(DgcK::new(0.01, seed)),
+            OpKind::Trimmed => Box::new(TrimmedK::new()),
+            OpKind::GaussianK => Box::new(GaussianK::new()),
         }
     }
 
@@ -129,11 +211,16 @@ impl OpKind {
 /// Shared helper: gather all elements with |u[i]| > thres into a sparse
 /// vector (single pass; the L3 twin of the Pallas mask kernel's pass 2).
 /// `size_hint` pre-sizes the output (the Gaussian_k refinement loop knows
-/// the count before selecting — EXPERIMENTS.md §Perf).
-pub(crate) fn select_above_hint(u: &[f32], thres: f32, size_hint: usize) -> SparseVec {
+/// the count before selecting — EXPERIMENTS.md §Perf); output buffers come
+/// from the workspace.
+pub(crate) fn select_above_hint(
+    u: &[f32],
+    thres: f32,
+    size_hint: usize,
+    ws: &mut Workspace,
+) -> SparseVec {
     let cap = size_hint.min(u.len());
-    let mut indices = Vec::with_capacity(cap);
-    let mut values = Vec::with_capacity(cap);
+    let (mut indices, mut values) = ws.out_buffers(cap);
     // Skip-fast: scan 32-wide blocks with two independent vectorizable
     // max-|v| chains and only fall into the scalar gather when the block
     // contains a hit. At k/d ≈ 0.1% the scalar path touches ~3% of blocks,
@@ -169,8 +256,8 @@ pub(crate) fn select_above_hint(u: &[f32], thres: f32, size_hint: usize) -> Spar
     }
 }
 
-pub(crate) fn select_above(u: &[f32], thres: f32) -> SparseVec {
-    select_above_hint(u, thres, 16)
+pub(crate) fn select_above(u: &[f32], thres: f32, ws: &mut Workspace) -> SparseVec {
+    select_above_hint(u, thres, 16, ws)
 }
 
 /// Shared helper: count elements with |u[i]| > thres (pass-only, no
@@ -218,13 +305,13 @@ mod tests {
     use crate::stats::rng::Pcg64;
     use crate::util::testkit::{self, Gen};
 
-    fn ops_under_test(k: usize) -> Vec<Box<dyn Compressor>> {
+    fn ops_under_test() -> Vec<Box<dyn Compressor>> {
         vec![
-            Box::new(TopK::new(k)),
-            Box::new(RandK::new(k, 7)),
-            Box::new(DgcK::new(k, 0.01, 7)),
-            Box::new(TrimmedK::new(k)),
-            Box::new(GaussianK::new(k)),
+            Box::new(TopK::new()),
+            Box::new(RandK::new(7)),
+            Box::new(DgcK::new(0.01, 7)),
+            Box::new(TrimmedK::new()),
+            Box::new(GaussianK::new()),
         ]
     }
 
@@ -239,46 +326,84 @@ mod tests {
     #[test]
     fn dense_keeps_everything() {
         let u = vec![1.0f32, -2.0, 0.0, 3.0];
-        let s = Dense.compress(&u);
+        let mut ws = Workspace::new();
+        let s = Dense.compress_step(&u, 1, &mut ws);
         assert_eq!(s.to_dense(), u);
+        // Repeat call reuses the cached identity prefix and recycled
+        // buffers (behavioural check: output is identical).
+        ws.recycle(s);
+        let s2 = Dense.compress_step(&u, 1, &mut ws);
+        assert_eq!(s2.to_dense(), u);
+        assert_eq!(s2.indices, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn workspace_recycles_buffers() {
+        let mut ws = Workspace::new();
+        let (mut i1, v1) = ws.out_buffers(4);
+        i1.push(42);
+        ws.recycle(SparseVec { d: 8, indices: i1, values: v1 });
+        let (i2, _v2) = ws.out_buffers(2);
+        // Recycled buffer comes back cleared with its capacity intact.
+        assert!(i2.is_empty());
+        assert!(i2.capacity() >= 4);
+    }
+
+    #[test]
+    fn zero_k_sends_nothing() {
+        let u = vec![1.0f32, -2.0, 3.0];
+        let mut ws = Workspace::new();
+        for op in ops_under_test().iter_mut() {
+            let s = op.compress_step(&u, 0, &mut ws);
+            assert_eq!(s.nnz(), 0, "{}: k = 0 must send nothing", op.name());
+            assert_eq!(s.d, u.len());
+        }
     }
 
     #[test]
     fn select_and_count_agree() {
         let mut rng = Pcg64::seed(1);
+        let mut ws = Workspace::new();
         let u: Vec<f32> = (0..10_000).map(|_| rng.next_gaussian() as f32).collect();
         for &t in &[0.0f32, 0.5, 1.0, 2.5, 10.0] {
-            let s = select_above(&u, t);
+            let s = select_above(&u, t, &mut ws);
             assert_eq!(s.nnz(), count_above(&u, t));
             assert!(s.values.iter().all(|v| v.abs() > t));
+            ws.recycle(s);
         }
     }
 
     /// Invariant: kept values are unchanged coordinates of u, at their
-    /// original indices, with no duplicates (all operators).
+    /// original indices, with no duplicates (all operators), for per-step
+    /// k values that *vary between calls* on a shared workspace.
     #[test]
     fn prop_values_unchanged() {
         testkit::forall("values-unchanged", |g: &mut Gen| {
             let d = g.usize_in(16, 4096);
-            let k = g.usize_in(1, d);
             let u = g.mixed_vec(d);
-            for op in ops_under_test(k).iter_mut() {
-                let s = op.compress(&u);
-                let mut seen = std::collections::HashSet::new();
-                for (&i, &v) in s.indices.iter().zip(&s.values) {
-                    if i as usize >= d {
-                        return Err(format!("{}: index {i} out of range", op.name()));
+            let mut ws = Workspace::new();
+            for op in ops_under_test().iter_mut() {
+                // Two calls with different k exercise workspace reuse.
+                for _ in 0..2 {
+                    let k = g.usize_in(1, d);
+                    let s = op.compress_step(&u, k, &mut ws);
+                    let mut seen = std::collections::HashSet::new();
+                    for (&i, &v) in s.indices.iter().zip(&s.values) {
+                        if i as usize >= d {
+                            return Err(format!("{}: index {i} out of range", op.name()));
+                        }
+                        if !seen.insert(i) {
+                            return Err(format!("{}: duplicate index {i}", op.name()));
+                        }
+                        if u[i as usize].to_bits() != v.to_bits() {
+                            return Err(format!(
+                                "{}: value changed at {i}: {} -> {v}",
+                                op.name(),
+                                u[i as usize]
+                            ));
+                        }
                     }
-                    if !seen.insert(i) {
-                        return Err(format!("{}: duplicate index {i}", op.name()));
-                    }
-                    if u[i as usize].to_bits() != v.to_bits() {
-                        return Err(format!(
-                            "{}: value changed at {i}: {} -> {v}",
-                            op.name(),
-                            u[i as usize]
-                        ));
-                    }
+                    ws.recycle(s);
                 }
             }
             Ok(())
@@ -295,8 +420,9 @@ mod tests {
             let mu = g.f32_in(-1.0, 1.0);
             let sigma = g.f32_in(0.01, 2.0);
             let u = g.gaussian_vec(d, mu, sigma);
-            for op in ops_under_test(k).iter_mut() {
-                let s = op.compress(&u);
+            let mut ws = Workspace::new();
+            for op in ops_under_test().iter_mut() {
+                let s = op.compress_step(&u, k, &mut ws);
                 let dense = s.to_dense();
                 let resid: Vec<f32> = u.iter().zip(&dense).map(|(a, b)| a - b).collect();
                 let recon: Vec<f32> = resid.iter().zip(&dense).map(|(a, b)| a + b).collect();
@@ -317,8 +443,9 @@ mod tests {
             let k = g.usize_in(1, d);
             let u = g.mixed_vec(d);
             let u_norm = crate::stats::norm2_sq(&u);
-            for op in ops_under_test(k).iter_mut() {
-                let s = op.compress(&u);
+            let mut ws = Workspace::new();
+            for op in ops_under_test().iter_mut() {
+                let s = op.compress_step(&u, k, &mut ws);
                 let dense = s.to_dense();
                 let resid: Vec<f32> = u.iter().zip(&dense).map(|(a, b)| a - b).collect();
                 let r = crate::stats::norm2_sq(&resid);

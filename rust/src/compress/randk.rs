@@ -3,45 +3,42 @@
 //! of the paper — and which converges far slower than Top_k in practice,
 //! Fig. 1).
 
-use super::Compressor;
+use super::{Compressor, Workspace};
 use crate::stats::rng::Pcg64;
 use crate::tensor::SparseVec;
 
 /// Uniform random-k selection with a deterministic per-instance stream.
+/// The per-step k comes from the schedule plan; `k == 0` returns an empty
+/// payload without advancing the RNG stream.
 pub struct RandK {
-    k: usize,
     rng: Pcg64,
 }
 
 impl RandK {
-    pub fn new(k: usize, seed: u64) -> RandK {
-        assert!(k > 0, "RandK requires k >= 1");
+    pub fn new(seed: u64) -> RandK {
         RandK {
-            k,
             rng: Pcg64::seed(seed ^ 0x52414e44), // "RAND"
         }
     }
 }
 
 impl Compressor for RandK {
-    fn compress(&mut self, u: &[f32]) -> SparseVec {
+    fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec {
         let d = u.len();
-        let k = self.k.min(d);
+        let k = k.min(d);
+        if k == 0 {
+            return SparseVec::new(d);
+        }
         let mut idx = self.rng.sample_indices(d, k);
         idx.sort_unstable();
-        SparseVec {
-            d,
-            values: idx.iter().map(|&i| u[i]).collect(),
-            indices: idx.into_iter().map(|i| i as u32).collect(),
-        }
+        let (mut indices, mut values) = ws.out_buffers(k);
+        indices.extend(idx.iter().map(|&i| i as u32));
+        values.extend(idx.iter().map(|&i| u[i]));
+        SparseVec { d, indices, values }
     }
 
     fn name(&self) -> &'static str {
         "randk"
-    }
-
-    fn target_k(&self) -> usize {
-        self.k
     }
 }
 
@@ -54,8 +51,8 @@ mod tests {
     #[test]
     fn exact_k_distinct() {
         let u: Vec<f32> = (0..100).map(|i| i as f32).collect();
-        let mut op = RandK::new(10, 1);
-        let s = op.compress(&u);
+        let mut op = RandK::new(1);
+        let s = op.compress_step(&u, 10, &mut Workspace::new());
         assert_eq!(s.nnz(), 10);
         assert!(s.indices.windows(2).all(|w| w[0] < w[1]));
     }
@@ -63,18 +60,33 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let u: Vec<f32> = (0..50).map(|i| (i as f32).sin()).collect();
-        let a = RandK::new(5, 42).compress(&u);
-        let b = RandK::new(5, 42).compress(&u);
+        let mut ws = Workspace::new();
+        let a = RandK::new(42).compress_step(&u, 5, &mut ws);
+        let b = RandK::new(42).compress_step(&u, 5, &mut ws);
         assert_eq!(a, b);
     }
 
     #[test]
     fn different_calls_differ() {
         let u: Vec<f32> = (0..1000).map(|i| i as f32).collect();
-        let mut op = RandK::new(10, 3);
-        let a = op.compress(&u);
-        let b = op.compress(&u);
+        let mut op = RandK::new(3);
+        let mut ws = Workspace::new();
+        let a = op.compress_step(&u, 10, &mut ws);
+        let b = op.compress_step(&u, 10, &mut ws);
         assert_ne!(a.indices, b.indices, "consecutive draws should differ");
+    }
+
+    #[test]
+    fn zero_k_leaves_stream_untouched() {
+        // A k = 0 step (e.g. a starved bucket) must not perturb the
+        // stream the next non-empty step draws from.
+        let u = vec![1.0f32; 64];
+        let mut ws = Workspace::new();
+        let mut with_gap = RandK::new(9);
+        assert_eq!(with_gap.compress_step(&u, 0, &mut ws).nnz(), 0);
+        let after_gap = with_gap.compress_step(&u, 8, &mut ws);
+        let direct = RandK::new(9).compress_step(&u, 8, &mut ws);
+        assert_eq!(after_gap.indices, direct.indices);
     }
 
     /// Eq. 4: E‖u − Rand_k(u)‖² = (1 − k/d)‖u‖² — check the empirical mean
@@ -86,12 +98,14 @@ mod tests {
         let k = 200;
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         let u_norm = crate::stats::norm2_sq(&u);
-        let mut op = RandK::new(k, 5);
+        let mut op = RandK::new(5);
+        let mut ws = Workspace::new();
         let trials = 300;
         let mut acc = 0.0f64;
         for _ in 0..trials {
-            let s = op.compress(&u);
+            let s = op.compress_step(&u, k, &mut ws);
             acc += u_norm - s.norm2_sq(); // residual energy
+            ws.recycle(s);
         }
         let mean_ratio = acc / trials as f64 / u_norm;
         let expect = 1.0 - k as f64 / d as f64;
@@ -108,13 +122,16 @@ mod tests {
             let d = g.usize_in(50, 200);
             let k = g.usize_in(1, d / 2);
             let u = vec![1.0f32; d];
-            let mut op = RandK::new(k, g.rng.next_u64());
+            let mut op = RandK::new(g.rng.next_u64());
+            let mut ws = Workspace::new();
             let trials = 400;
             let mut hits = vec![0usize; d];
             for _ in 0..trials {
-                for &i in &op.compress(&u).indices {
+                let s = op.compress_step(&u, k, &mut ws);
+                for &i in &s.indices {
                     hits[i as usize] += 1;
                 }
+                ws.recycle(s);
             }
             let expect = trials as f64 * k as f64 / d as f64;
             // 6-sigma binomial bound.

@@ -1,99 +1,90 @@
 //! Exact `Top_k`: select the k largest-magnitude coordinates.
 //!
-//! Algorithm: quickselect (`select_nth_unstable_by`) on a scratch copy of
-//! |u| to find the k-th largest magnitude in expected O(d), then one pass
-//! collecting elements above the pivot with exact tie-breaking so the
+//! Algorithm: quickselect (`select_nth_unstable_by`) on a workspace copy
+//! of |u| to find the k-th largest magnitude in expected O(d), then one
+//! pass collecting elements above the pivot with exact tie-breaking so the
 //! output has *exactly* k non-zeros (matching `tensor.topk()` semantics in
 //! the paper's PyTorch baseline).
 //!
 //! This is deliberately the strongest CPU implementation we could write —
 //! Fig. 4's comparison is only meaningful if the exact-selection baseline
 //! is not a strawman. See EXPERIMENTS.md §Perf for the heap-based variant
-//! it replaced.
+//! it replaced. All scratch (the |u| copy, tie and pair staging) comes
+//! from the caller's [`Workspace`], so steady-state calls are
+//! allocation-free at any per-step k.
 
-use super::Compressor;
+use super::{Compressor, Workspace};
 use crate::tensor::SparseVec;
 
-/// Exact top-k by absolute value.
-pub struct TopK {
-    k: usize,
-    /// Reusable scratch buffer (avoids the O(d) allocation per step).
-    scratch: Vec<f32>,
-}
+/// Exact top-k by absolute value (stateless — k arrives per step).
+#[derive(Debug, Default)]
+pub struct TopK;
 
 impl TopK {
-    pub fn new(k: usize) -> TopK {
-        assert!(k > 0, "TopK requires k >= 1");
-        TopK {
-            k,
-            scratch: Vec::new(),
-        }
+    pub fn new() -> TopK {
+        TopK
     }
 
     /// The k-th largest |value| (the exact selection threshold). Exposed
     /// for the analysis harnesses (Fig. 5 uses it to compute exact bounds).
-    pub fn exact_threshold(&mut self, u: &[f32]) -> f32 {
-        let k = self.k.min(u.len());
+    pub fn exact_threshold(&self, u: &[f32], k: usize, ws: &mut Workspace) -> f32 {
+        let k = k.min(u.len());
         if k == 0 {
             return f32::INFINITY;
         }
-        self.scratch.clear();
-        self.scratch.extend(u.iter().map(|v| v.abs()));
+        ws.abs.clear();
+        ws.abs.extend(u.iter().map(|v| v.abs()));
         let idx = k - 1;
-        let (_, kth, _) = self
-            .scratch
-            .select_nth_unstable_by(idx, |a, b| b.total_cmp(a));
+        let (_, kth, _) = ws.abs.select_nth_unstable_by(idx, |a, b| b.total_cmp(a));
         *kth
     }
 }
 
 impl Compressor for TopK {
-    fn compress(&mut self, u: &[f32]) -> SparseVec {
+    fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec {
         let d = u.len();
-        let k = self.k.min(d);
-        if k == d {
-            return SparseVec {
-                d,
-                indices: (0..d as u32).collect(),
-                values: u.to_vec(),
-            };
+        let k = k.min(d);
+        if k == 0 {
+            return SparseVec::new(d);
         }
-        let pivot = self.exact_threshold(u);
+        if k == d {
+            let (mut indices, mut values) = ws.out_buffers(d);
+            indices.extend_from_slice(ws.identity(d));
+            values.extend_from_slice(u);
+            return SparseVec { d, indices, values };
+        }
+        let pivot = self.exact_threshold(u, k, ws);
 
         // Collect strictly-above-pivot, then fill remaining slots with
         // pivot-equal elements (first-index tie-break, as PyTorch does).
-        let mut indices = Vec::with_capacity(k);
-        let mut values = Vec::with_capacity(k);
-        let mut ties: Vec<u32> = Vec::new();
+        let (mut indices, mut values) = ws.out_buffers(k);
+        ws.ties.clear();
         for (i, &v) in u.iter().enumerate() {
             let a = v.abs();
             if a > pivot {
                 indices.push(i as u32);
                 values.push(v);
             } else if a == pivot {
-                ties.push(i as u32);
+                ws.ties.push(i as u32);
             }
         }
         let missing = k - indices.len();
-        for &i in ties.iter().take(missing) {
+        for &i in ws.ties.iter().take(missing) {
             indices.push(i);
             values.push(u[i as usize]);
         }
-        let mut pairs: Vec<(u32, f32)> = indices.into_iter().zip(values).collect();
-        pairs.sort_unstable_by_key(|p| p.0);
-        SparseVec {
-            d,
-            indices: pairs.iter().map(|p| p.0).collect(),
-            values: pairs.iter().map(|p| p.1).collect(),
-        }
+        ws.pairs.clear();
+        ws.pairs.extend(indices.iter().copied().zip(values.iter().copied()));
+        ws.pairs.sort_unstable_by_key(|p| p.0);
+        indices.clear();
+        values.clear();
+        indices.extend(ws.pairs.iter().map(|p| p.0));
+        values.extend(ws.pairs.iter().map(|p| p.1));
+        SparseVec { d, indices, values }
     }
 
     fn name(&self) -> &'static str {
         "topk"
-    }
-
-    fn target_k(&self) -> usize {
-        self.k
     }
 }
 
@@ -103,10 +94,14 @@ mod tests {
     use crate::stats::rng::Pcg64;
     use crate::util::testkit::{self, Gen};
 
+    fn topk(u: &[f32], k: usize) -> SparseVec {
+        TopK::new().compress_step(u, k, &mut Workspace::new())
+    }
+
     #[test]
     fn selects_largest_magnitudes() {
         let u = vec![0.1f32, -5.0, 2.0, 0.0, -3.0, 4.0];
-        let s = TopK::new(3).compress(&u);
+        let s = topk(&u, 3);
         assert_eq!(s.indices, vec![1, 4, 5]);
         assert_eq!(s.values, vec![-5.0, -3.0, 4.0]);
     }
@@ -115,7 +110,7 @@ mod tests {
     fn exact_k_with_ties() {
         let u = vec![1.0f32, -1.0, 1.0, 1.0, -1.0];
         for k in 1..=5 {
-            let s = TopK::new(k).compress(&u);
+            let s = topk(&u, k);
             assert_eq!(s.nnz(), k, "k={k}");
         }
     }
@@ -123,17 +118,33 @@ mod tests {
     #[test]
     fn k_ge_d_keeps_all() {
         let u = vec![1.0f32, 2.0];
-        let s = TopK::new(10).compress(&u);
+        let s = topk(&u, 10);
         assert_eq!(s.to_dense(), u);
+    }
+
+    #[test]
+    fn varying_k_on_shared_workspace() {
+        // The per-step k can change between calls with no stale state.
+        let u = vec![0.1f32, -5.0, 2.0, 0.0, -3.0, 4.0];
+        let mut op = TopK::new();
+        let mut ws = Workspace::new();
+        let a = op.compress_step(&u, 1, &mut ws);
+        assert_eq!(a.indices, vec![1]);
+        ws.recycle(a);
+        let b = op.compress_step(&u, 3, &mut ws);
+        assert_eq!(b.indices, vec![1, 4, 5]);
+        ws.recycle(b);
+        let c = op.compress_step(&u, 2, &mut ws);
+        assert_eq!(c.indices, vec![1, 5]);
     }
 
     #[test]
     fn threshold_is_kth_magnitude() {
         let u = vec![3.0f32, -1.0, 4.0, -1.5, 5.0];
-        let mut t = TopK::new(2);
-        assert_eq!(t.exact_threshold(&u), 4.0);
-        let mut t5 = TopK::new(5);
-        assert_eq!(t5.exact_threshold(&u), 1.0);
+        let mut ws = Workspace::new();
+        let t = TopK::new();
+        assert_eq!(t.exact_threshold(&u, 2, &mut ws), 4.0);
+        assert_eq!(t.exact_threshold(&u, 5, &mut ws), 1.0);
     }
 
     /// Top_k optimality: no unselected |v| exceeds the smallest selected.
@@ -143,7 +154,7 @@ mod tests {
             let d = g.usize_in(8, 4096);
             let k = g.usize_in(1, d);
             let u = g.mixed_vec(d);
-            let s = TopK::new(k).compress(&u);
+            let s = topk(&u, k);
             if s.nnz() != k.min(d) {
                 return Err(format!("nnz {} != k {}", s.nnz(), k.min(d)));
             }
@@ -166,7 +177,7 @@ mod tests {
             let d = g.usize_in(8, 1024);
             let k = g.usize_in(1, d);
             let u = g.gaussian_vec(d, 0.0, 1.0);
-            let s = TopK::new(k).compress(&u);
+            let s = topk(&u, k);
             let dense = s.to_dense();
             let resid_sq: f64 = u
                 .iter()
@@ -188,7 +199,7 @@ mod tests {
         let mut rng = Pcg64::seed(2);
         let u: Vec<f32> = (0..1_000_000).map(|_| rng.next_gaussian() as f32).collect();
         let k = 1000;
-        let s = TopK::new(k).compress(&u);
+        let s = topk(&u, k);
         assert_eq!(s.nnz(), k);
     }
 }

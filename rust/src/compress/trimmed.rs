@@ -11,24 +11,29 @@
 //! the `over_selection_on_heavy_tails` test reproduces on Laplace
 //! gradients.
 
-use super::{count_above, select_above, Compressor};
+use super::{count_above, select_above, Compressor, Workspace};
 use crate::tensor::SparseVec;
 
-/// RedSync-style trimmed threshold search.
+/// RedSync-style trimmed threshold search (k arrives per step).
+#[derive(Debug)]
 pub struct TrimmedK {
-    k: usize,
     /// Max number of ratio-halving iterations.
     pub max_iters: usize,
 }
 
+impl Default for TrimmedK {
+    fn default() -> Self {
+        TrimmedK { max_iters: 24 }
+    }
+}
+
 impl TrimmedK {
-    pub fn new(k: usize) -> TrimmedK {
-        assert!(k > 0, "TrimmedK requires k >= 1");
-        TrimmedK { k, max_iters: 24 }
+    pub fn new() -> TrimmedK {
+        TrimmedK::default()
     }
 
     /// The accepted threshold (exposed for diagnostics/benches).
-    pub fn search_threshold(&self, u: &[f32]) -> f32 {
+    pub fn search_threshold(&self, u: &[f32], k: usize) -> f32 {
         let d = u.len();
         // mean and max of |u| in one pass.
         let (mut sum, mut maxv) = (0.0f64, 0.0f32);
@@ -51,7 +56,7 @@ impl TrimmedK {
             let cand = mean + ratio * (maxv - mean);
             let c = count_above(u, cand);
             thres = cand;
-            if c >= self.k {
+            if c >= k {
                 break; // coarse accept — this is where over-selection is born
             }
         }
@@ -60,39 +65,39 @@ impl TrimmedK {
 }
 
 impl Compressor for TrimmedK {
-    fn compress(&mut self, u: &[f32]) -> SparseVec {
+    fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec {
         let d = u.len();
-        let k = self.k.min(d);
-        if k == d {
-            return super::Dense.compress(u);
+        let k = k.min(d);
+        if k == 0 {
+            return SparseVec::new(d);
         }
-        let thres = self.search_threshold(u);
+        if k == d {
+            return super::Dense.compress_step(u, k, ws);
+        }
+        let thres = self.search_threshold(u, k);
         if !thres.is_finite() {
             return SparseVec::new(d);
         }
-        let out = select_above(u, thres);
+        let out = select_above(u, thres, ws);
         if out.nnz() == 0 {
             // Degenerate tie at max (e.g. constant vector): keep the max
             // element(s).
+            ws.recycle(out);
             let maxv = u.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let mut s = SparseVec::new(d);
+            let (mut indices, mut values) = ws.out_buffers(16);
             for (i, &v) in u.iter().enumerate() {
                 if v.abs() >= maxv {
-                    s.indices.push(i as u32);
-                    s.values.push(v);
+                    indices.push(i as u32);
+                    values.push(v);
                 }
             }
-            return s;
+            return SparseVec { d, indices, values };
         }
         out
     }
 
     fn name(&self) -> &'static str {
         "trimmed"
-    }
-
-    fn target_k(&self) -> usize {
-        self.k
     }
 }
 
@@ -102,13 +107,16 @@ mod tests {
     use crate::stats::rng::Pcg64;
     use crate::util::testkit::{self, Gen};
 
+    fn trim(u: &[f32], k: usize) -> SparseVec {
+        TrimmedK::new().compress_step(u, k, &mut Workspace::new())
+    }
+
     #[test]
     fn selects_some_top_mass() {
         let mut rng = Pcg64::seed(30);
         let u: Vec<f32> = (0..100_000).map(|_| rng.next_gaussian() as f32).collect();
         let k = 100;
-        let mut op = TrimmedK::new(k);
-        let s = op.compress(&u);
+        let s = trim(&u, k);
         assert!(s.nnz() >= k, "must select at least k on a smooth vector");
         // Captured energy per element must beat random selection.
         let frac = s.norm2_sq() / crate::stats::norm2_sq(&u);
@@ -123,7 +131,7 @@ mod tests {
         let mut rng = Pcg64::seed(31);
         let u: Vec<f32> = (0..200_000).map(|_| rng.next_laplace(0.0, 1.0) as f32).collect();
         let k = 500;
-        let s = TrimmedK::new(k).compress(&u);
+        let s = trim(&u, k);
         assert!(
             s.nnz() > 2 * k,
             "expected over-selection, got nnz={} (k={k})",
@@ -134,14 +142,14 @@ mod tests {
     #[test]
     fn all_zero_input() {
         let u = vec![0.0f32; 1000];
-        let s = TrimmedK::new(10).compress(&u);
+        let s = trim(&u, 10);
         assert_eq!(s.nnz(), 0);
     }
 
     #[test]
     fn constant_input_degenerate() {
         let u = vec![2.0f32; 100];
-        let s = TrimmedK::new(5).compress(&u);
+        let s = trim(&u, 5);
         // mean == max: the fallback keeps the ties.
         assert!(s.nnz() > 0);
         assert!(s.values.iter().all(|&v| v == 2.0));
@@ -153,7 +161,7 @@ mod tests {
             let d = g.usize_in(64, 8192);
             let k = g.usize_in(1, d / 8 + 1);
             let u = g.mixed_vec(d);
-            let s = TrimmedK::new(k).compress(&u);
+            let s = trim(&u, k);
             if s.indices.windows(2).any(|w| w[0] >= w[1]) {
                 return Err("indices not sorted-unique".into());
             }

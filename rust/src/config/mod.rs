@@ -24,11 +24,14 @@
 //! | `global_topk`         | `false`    | gTop-k tree aggregation instead of all-gather union  |
 //! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads` (one thread per available core), or `threads:N` — results are bit-identical across all settings |
 //! | `buckets`             | `"none"`   | gradient exchange granularity: `none` (monolithic), `layers` (layer-aligned buckets), or `bytes:N` (fixed-byte buckets); under a threaded runtime bucket `i+1` is compressed while bucket `i` is on the ring |
+//! | `k_schedule`          | `"const"`  | per-step density plan: `const` (follow `k_ratio` — bit-identical to the pre-schedule path), `const:K`, `warmup:K0..K,epochs=E` (exponential density decay), or `adaptive:DELTA` (smallest k capturing DELTA of ‖u‖²) — see [`crate::schedule`] |
+//! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 
 use std::collections::BTreeMap;
 
 use crate::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
 use crate::compress::OpKind;
+use crate::schedule::KSchedule;
 
 /// How the trainer runs its P simulated workers.
 ///
@@ -286,6 +289,11 @@ pub struct TrainConfig {
     /// Gradient-exchange granularity: monolithic, layer-aligned buckets,
     /// or fixed-byte buckets (pipelined under a threaded runtime).
     pub buckets: Buckets,
+    /// Per-step density plan (`const` follows `k_ratio` and reproduces
+    /// the pre-schedule trainer bit-for-bit; see [`crate::schedule`]).
+    pub k_schedule: KSchedule,
+    /// Epoch length in steps for the warmup grammar's `epochs=E`.
+    pub steps_per_epoch: usize,
 }
 
 impl Default for TrainConfig {
@@ -306,6 +314,8 @@ impl Default for TrainConfig {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: Buckets::None,
+            k_schedule: KSchedule::Const(None),
+            steps_per_epoch: 100,
         }
     }
 }
@@ -344,6 +354,11 @@ impl TrainConfig {
                 Some(s) => Buckets::parse(s)?,
                 None => d.buckets,
             },
+            k_schedule: match raw.get("train", "k_schedule") {
+                Some(s) => KSchedule::parse(s)?,
+                None => d.k_schedule,
+            },
+            steps_per_epoch: raw.parsed_or("train", "steps_per_epoch", d.steps_per_epoch)?,
         })
     }
 
@@ -366,6 +381,8 @@ impl TrainConfig {
         if let Buckets::Bytes(n) = self.buckets {
             anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
         }
+        self.k_schedule.validate()?;
+        anyhow::ensure!(self.steps_per_epoch >= 1, "steps_per_epoch must be >= 1");
         Ok(())
     }
 }
@@ -491,6 +508,32 @@ lr = 0.05
         let mut bad = TrainConfig::default();
         bad.buckets = Buckets::Bytes(2);
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn k_schedule_from_raw_and_validate() {
+        let raw = RawConfig::parse(
+            "[train]\nk_schedule = \"warmup:0.05..0.001,epochs=2\"\nsteps_per_epoch = 25",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(
+            cfg.k_schedule,
+            KSchedule::Warmup { from: 0.05, to: 0.001, epochs: 2 }
+        );
+        assert_eq!(cfg.steps_per_epoch, 25);
+        cfg.validate().unwrap();
+        // Default stays const (follow k_ratio).
+        let d = TrainConfig::default();
+        assert_eq!(d.k_schedule, KSchedule::Const(None));
+        assert_eq!(d.steps_per_epoch, 100);
+        d.validate().unwrap();
+        // Bad grammar surfaces as a config error.
+        let bad = RawConfig::parse("[train]\nk_schedule = \"linear:0.1\"").unwrap();
+        assert!(TrainConfig::from_raw(&bad).is_err());
+        let mut zero_epoch = TrainConfig::default();
+        zero_epoch.steps_per_epoch = 0;
+        assert!(zero_epoch.validate().is_err());
     }
 
     #[test]

@@ -2,14 +2,25 @@
 //!
 //! ```text
 //! for t in 0..steps:
-//!   for each worker p:                # independent shards, real numerics
+//!   k_t = plan(t)                       # schedule engine (may vary per step)
+//!   for each worker p:                  # independent shards, real numerics
 //!     g_p   = ∇f_p(x; batch_p)
-//!     u_p   = g_p + ε_p               # error feedback accumulate
-//!     s_p   = Comp_k(u_p)             # sparsify (or Dense)
+//!     u_p   = g_p + ε_p                 # error feedback accumulate
+//!     s_p   = Comp_{k_t}(u_p)           # sparsify (or Dense)
 //!     ε_p   = u_p − s_p
-//!   G = (1/P) Σ_p s_p                 # sparse all-gather / dense ring
-//!   x ← x − η_t · momentum(G)         # shared optimizer
+//!   G = (1/P) Σ_p s_p                   # sparse all-gather / dense ring
+//!   x ← x − η_t · momentum(G)           # shared optimizer
 //! ```
+//!
+//! ## Per-step compression plans
+//!
+//! The static `(operator, k)` pair is resolved per step by the
+//! [`crate::schedule`] engine: `const` schedules reproduce the fixed-k
+//! trainer bit-for-bit, `warmup` decays the density over early epochs,
+//! and `adaptive` picks k from the previous step's |u| histogram on
+//! worker 0 (collected as part of the worker fold, applied in rank order,
+//! so serial and threaded runs resolve identical k sequences). The
+//! resolved density lands in every [`StepRecord`] (CSV/JSON trace).
 //!
 //! ## Worker runtime
 //!
@@ -18,13 +29,27 @@
 //! on up to `n` OS threads, each owning a disjoint contiguous group of
 //! workers plus its own forked model replica ([`Model::fork`]). Worker
 //! state (residual ε, compressor RNG streams, DGC velocity, data-shard
-//! RNG) lives in [`WorkerState`] and is owned by exactly one thread per
-//! step, so no locks are needed; aggregation then runs through the
-//! engine selected by the config (`collectives::Collectives`), and the
-//! channel-based ring engine preserves the serial engine's per-element
-//! summation order. The result: `Threads(n)` training trajectories are
-//! **bit-identical** to `Serial` for every operator and every n — the
-//! equivalence suite (`tests/parallel_equivalence.rs`) locks this.
+//! RNG, compression workspace) lives in [`WorkerState`] and is owned by
+//! exactly one thread per step, so no locks are needed; aggregation then
+//! runs through the engine selected by the config
+//! (`collectives::Collectives`), and the channel-based ring engine
+//! preserves the serial engine's per-element summation order. The result:
+//! `Threads(n)` training trajectories are **bit-identical** to `Serial`
+//! for every operator and every n — the equivalence suite
+//! (`tests/parallel_equivalence.rs`) locks this.
+//!
+//! ## Hot-loop allocation discipline
+//!
+//! Compression scratch comes from each worker's [`Workspace`]
+//! (`compress_step` contract). On the *monolithic* path payload buffers
+//! are also *recycled*: after the collective consumes a step's sparse
+//! payloads the trainer hands their buffers back to the owning worker's
+//! workspace, and the dense path moves `w.grad` out to the ring and back
+//! instead of cloning it. The bucketed exchange still allocates its
+//! per-bucket payloads (the producer owns the workers during the
+//! pipeline, so returning buffers needs a consumer→producer channel —
+//! an open item in ROADMAP.md). Snapshot copies (`keep_raw`) happen only
+//! on the steps where the histogram sampling actually fires.
 //!
 //! A deliberate trade-off: worker threads are scoped *per step* (spawn,
 //! compute, join), not pooled across steps. That keeps the runtime
@@ -41,8 +66,10 @@
 //! With `buckets = layers|bytes:N` the step splits differently: gradients
 //! are computed first (same worker threading), then the flat gradient is
 //! walked bucket by bucket ([`BucketSchedule`]) — each bucket carries its
-//! own error-feedback residual slice and a proportional share of the
-//! global k. Under `Parallelism::Threads` the bucket loop runs through
+//! own error-feedback residual slice and a share of this step's `k_t`
+//! (re-apportioned every step via [`BucketSchedule::apportion_k`], since
+//! the plan may move k between steps; EF residual semantics are
+//! unchanged). Under `Parallelism::Threads` the bucket loop runs through
 //! [`run_pipelined`]: a producer thread compresses bucket `i + 1` while
 //! the calling thread runs the collective for bucket `i` (double
 //! buffering over a rendezvous channel). Both paths walk buckets in index
@@ -65,6 +92,7 @@ use crate::config::{Buckets, TrainConfig};
 use crate::data::DataSource;
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::models::Model;
+use crate::schedule::{feedback_histogram, KSchedule, Scheduler};
 use crate::stats::histogram::Histogram;
 use crate::stats::rng::Pcg64;
 
@@ -83,7 +111,8 @@ pub struct TrainOutput {
     pub metrics: RunMetrics,
     pub snapshots: Vec<GradSnapshot>,
     pub final_params: Vec<f32>,
-    /// k actually configured (elements per worker per step target).
+    /// Nominal k from `k_ratio` (the per-step k_t of a scheduled run may
+    /// differ — see the `density` trace in `metrics`).
     pub k: usize,
 }
 
@@ -98,6 +127,9 @@ struct WorkerMsg {
     rank: usize,
     loss: f64,
     snapshot: Option<GradSnapshot>,
+    /// |u| histogram for the adaptive schedule (worker 0 only, and only
+    /// when the plan engine asked for feedback).
+    feedback: Option<Histogram>,
     payload: Payload,
 }
 
@@ -121,12 +153,17 @@ struct StepCtx<'a> {
     hist_every: usize,
     hist_bins: usize,
     keep_raw: bool,
+    /// This step's resolved k (the plan's k_t).
+    k: usize,
+    /// Collect the adaptive-schedule |u| histogram on worker 0.
+    feedback: bool,
 }
 
 /// One worker's compute phase: sample the shard, compute the gradient,
-/// apply local momentum correction, error-feedback-compress. Pure with
-/// respect to everything except `w` and the model's scratch, so the
-/// serial and threaded runtimes produce bit-identical messages.
+/// apply local momentum correction, error-feedback-compress at this
+/// step's k. Pure with respect to everything except `w` and the model's
+/// scratch, so the serial and threaded runtimes produce bit-identical
+/// messages.
 fn worker_step<M: Model + ?Sized>(
     ctx: StepCtx<'_>,
     w: &mut WorkerState,
@@ -146,7 +183,10 @@ fn worker_step<M: Model + ?Sized>(
             rank: w.rank,
             loss,
             snapshot: None, // dense-mode snapshots: see the Fig. 8 block in `run`
-            payload: Payload::Dense(w.grad.clone()),
+            feedback: None,
+            // Move the gradient buffer to the ring; the trainer hands it
+            // back after aggregation (no per-step clone).
+            payload: Payload::Dense(std::mem::take(&mut w.grad)),
         };
     }
 
@@ -162,12 +202,18 @@ fn worker_step<M: Model + ?Sized>(
     } else {
         None
     };
-    let s = w.compressor.compress(u);
+    let feedback = if ctx.feedback && w.rank == 0 {
+        Some(feedback_histogram(u))
+    } else {
+        None
+    };
+    let s = w.compressor.compress_step(u, ctx.k, &mut w.workspace);
     w.residual.update(&s);
     WorkerMsg {
         rank: w.rank,
         loss,
         snapshot,
+        feedback,
         payload: Payload::Sparse(s),
     }
 }
@@ -254,6 +300,33 @@ impl<'a> Trainer<'a> {
         )
     }
 
+    /// Resolve the schedule engine for a d-dimensional run.
+    fn build_scheduler(&self, d: usize) -> Scheduler {
+        Scheduler::for_run(
+            &self.cfg.k_schedule,
+            self.cfg.k_ratio,
+            self.cfg.steps_per_epoch,
+            d,
+        )
+    }
+
+    /// Metrics run name: the historical `op-P-k` stem plus the schedule
+    /// when it deviates from the default constant plan.
+    fn run_name(&self, suffix: &str) -> String {
+        let mut name = format!(
+            "{}-P{}-k{}{}",
+            self.cfg.op.name(),
+            self.cfg.workers,
+            self.cfg.k_ratio,
+            suffix
+        );
+        if self.cfg.k_schedule != KSchedule::Const(None) {
+            name.push('-');
+            name.push_str(&self.cfg.k_schedule.name());
+        }
+        name
+    }
+
     /// Periodic eval (+ final step), shared by both exchange paths. Eval
     /// set size: a multiple of the train batch so static-batch backends
     /// (PJRT) can chunk it exactly.
@@ -300,7 +373,7 @@ impl<'a> Trainer<'a> {
         let p = self.cfg.workers;
 
         let mut workers: Vec<WorkerState> = (0..p)
-            .map(|r| WorkerState::new(r, d, self.cfg.op, k, self.cfg.seed))
+            .map(|r| WorkerState::new(r, d, self.cfg.op, self.cfg.seed))
             .collect();
         let mut params = self.model.init(self.cfg.seed);
 
@@ -315,16 +388,14 @@ impl<'a> Trainer<'a> {
         };
         let workers_per_thread = p.div_ceil(nthreads);
 
+        let mut scheduler = self.build_scheduler(d);
+        let is_dense = self.cfg.op == OpKind::Dense;
+        let wants_feedback = !is_dense && scheduler.wants_feedback();
+
         let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
-        let mut metrics = RunMetrics::new(&format!(
-            "{}-P{}-k{}",
-            self.cfg.op.name(),
-            p,
-            self.cfg.k_ratio
-        ));
+        let mut metrics = RunMetrics::new(&self.run_name(""));
         let mut snapshots = Vec::new();
-        let is_dense = self.cfg.op == OpKind::Dense;
 
         // Reusable per-step buffers.
         let mut sparse_msgs = Vec::with_capacity(p);
@@ -333,6 +404,7 @@ impl<'a> Trainer<'a> {
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
+            let plan = scheduler.plan(step);
             let ctx = StepCtx {
                 data: self.data,
                 step,
@@ -343,6 +415,8 @@ impl<'a> Trainer<'a> {
                 hist_every: self.cfg.hist_every,
                 hist_bins: self.hist_bins,
                 keep_raw: self.keep_raw_snapshots,
+                k: plan.k,
+                feedback: wants_feedback,
             };
 
             // Compute phase: serial rank order, or one thread per worker
@@ -385,10 +459,14 @@ impl<'a> Trainer<'a> {
             dense_msgs.clear();
             let mut loss_acc = 0.0f64;
             let mut sent: u64 = 0;
+            let mut feedback_hist: Option<Histogram> = None;
             for m in msgs.drain(..) {
                 loss_acc += m.loss;
                 if let Some(snap) = m.snapshot {
                     snapshots.push(snap);
+                }
+                if m.feedback.is_some() {
+                    feedback_hist = m.feedback;
                 }
                 match m.payload {
                     Payload::Dense(g) => {
@@ -418,11 +496,11 @@ impl<'a> Trainer<'a> {
             let agg = if is_dense {
                 engine.ring_allreduce_avg(&dense_msgs)
             } else if self.cfg.global_topk {
-                // gTop-k: globally re-truncate to k; restore each worker's
-                // globally-dropped contributions into its residual so no
-                // gradient mass is lost (exactness tested in
-                // `gtopk_mass_conservation`).
-                let (dense, selected) = engine.gtopk_allreduce_avg(&sparse_msgs, k);
+                // gTop-k: globally re-truncate to this step's k_t; restore
+                // each worker's globally-dropped contributions into its
+                // residual so no gradient mass is lost (exactness tested
+                // in `gtopk_mass_conservation`).
+                let (dense, selected) = engine.gtopk_allreduce_avg(&sparse_msgs, plan.k);
                 selected_mask.iter_mut().for_each(|b| *b = false);
                 for &i in &selected {
                     selected_mask[i as usize] = true;
@@ -438,13 +516,33 @@ impl<'a> Trainer<'a> {
             } else {
                 engine.sparse_allgather_avg(&sparse_msgs)
             };
+
+            // Hand the payload buffers back to their owners (rank order is
+            // preserved end to end): dense gradients return to `w.grad`,
+            // sparse index/value buffers return to the workspace free
+            // lists — the steady-state loop allocates nothing.
+            if is_dense {
+                for (w, g) in workers.iter_mut().zip(dense_msgs.drain(..)) {
+                    w.grad = g;
+                }
+            } else {
+                for (w, s) in workers.iter_mut().zip(sparse_msgs.drain(..)) {
+                    w.workspace.recycle(s);
+                }
+            }
+
             opt.step(&mut params, &agg, step, self.cfg.steps);
+
+            if let Some(h) = feedback_hist {
+                scheduler.observe(step, &h);
+            }
 
             metrics.record_step(StepRecord {
                 step,
                 loss: loss_acc / p as f64,
                 sent_elements: sent,
-                target_elements: if is_dense { (d * p) as u64 } else { (k * p) as u64 },
+                target_elements: if is_dense { (d * p) as u64 } else { (plan.k * p) as u64 },
+                density: if is_dense { 1.0 } else { plan.density },
                 wall_s: t0.elapsed().as_secs_f64(),
             });
 
@@ -461,15 +559,16 @@ impl<'a> Trainer<'a> {
 
     /// The bucketed exchange path (`buckets = layers|bytes:N`): the flat
     /// gradient is partitioned by a [`BucketSchedule`]; each bucket
-    /// carries its own error-feedback residual slice and its proportional
-    /// share of the global k ([`crate::buckets::apportion_k`]). Under
-    /// `Parallelism::Threads` the buckets are *pipelined*: the worker
-    /// threads compress bucket `i + 1` while the collectives engine
-    /// exchanges bucket `i` (double-buffered producer/consumer,
-    /// [`run_pipelined`]). Results are **bit-identical** to the serial
-    /// bucket loop — both walk the buckets in index order, per-bucket work
-    /// is a pure function of per-worker state, and the engines themselves
-    /// are serial/threaded bit-identical (`tests/bucket_equivalence.rs`).
+    /// carries its own error-feedback residual slice and a share of this
+    /// step's k_t ([`BucketSchedule::apportion_k`], recomputed per step
+    /// because the plan may move k). Under `Parallelism::Threads` the
+    /// buckets are *pipelined*: the worker threads compress bucket `i + 1`
+    /// while the collectives engine exchanges bucket `i` (double-buffered
+    /// producer/consumer, [`run_pipelined`]). Results are **bit-identical**
+    /// to the serial bucket loop — both walk the buckets in index order,
+    /// per-bucket work is a pure function of per-worker state, and the
+    /// engines themselves are serial/threaded bit-identical
+    /// (`tests/bucket_equivalence.rs`).
     fn run_bucketed(&mut self) -> anyhow::Result<TrainOutput> {
         let d = self.model.layout().total();
         let k = ((d as f64 * self.cfg.k_ratio).round() as usize).clamp(1, d);
@@ -482,7 +581,7 @@ impl<'a> Trainer<'a> {
         let is_dense = self.cfg.op == OpKind::Dense;
 
         let mut workers: Vec<WorkerState> = (0..p)
-            .map(|r| WorkerState::new(r, d, self.cfg.op, k, self.cfg.seed))
+            .map(|r| WorkerState::new(r, d, self.cfg.op, self.cfg.seed))
             .collect();
         if !is_dense {
             for w in workers.iter_mut() {
@@ -501,20 +600,22 @@ impl<'a> Trainer<'a> {
         };
         let workers_per_thread = p.div_ceil(nthreads);
 
+        let mut scheduler = self.build_scheduler(d);
+        let wants_feedback = !is_dense && scheduler.wants_feedback();
+
         let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
-        let mut metrics = RunMetrics::new(&format!(
-            "{}-P{}-k{}-buckets{}",
-            self.cfg.op.name(),
-            p,
-            self.cfg.k_ratio,
-            schedule.len()
-        ));
+        let mut metrics = RunMetrics::new(&self.run_name(&format!("-buckets{}", schedule.len())));
         let mut snapshots = Vec::new();
         let mut agg = vec![0.0f32; d];
+        // Reusable u_0 = g + ε scratch for the snapshot/feedback block.
+        let mut u0: Vec<f32> = Vec::new();
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
+            let plan = scheduler.plan(step);
+            // Per-step bucket budgets: Σ ks_t == min(k_t, d).
+            let ks_t: Vec<usize> = schedule.apportion_k(plan.k);
             let ctx = StepCtx {
                 data: self.data,
                 step,
@@ -525,6 +626,13 @@ impl<'a> Trainer<'a> {
                 hist_every: self.cfg.hist_every,
                 hist_bins: self.hist_bins,
                 keep_raw: self.keep_raw_snapshots,
+                k: plan.k,
+                // The bucketed worker phase is grad_step (no compression,
+                // no per-worker feedback): schedule feedback is collected
+                // on the coordinator in Phase 2 below. Keep this false so
+                // routing Phase 1 through worker_step could never
+                // double-observe the scheduler.
+                feedback: false,
             };
 
             // Phase 1 — gradients (+ local momentum correction): the
@@ -564,23 +672,40 @@ impl<'a> Trainer<'a> {
 
             // Phase 2 — snapshot u_t = g + ε on worker 0 (ε is untouched
             // until the bucket loop below, so this equals the monolithic
-            // snapshot).
-            if self.cfg.hist_every > 0 && step % self.cfg.hist_every == 0 {
+            // snapshot) and/or the adaptive-schedule feedback histogram.
+            // Copies are made only when a consumer actually fires.
+            let snap_now = self.cfg.hist_every > 0 && step % self.cfg.hist_every == 0;
+            if is_dense {
+                if snap_now {
+                    let w0 = &workers[0];
+                    snapshots.push(GradSnapshot {
+                        step,
+                        histogram: Histogram::auto(&w0.grad, self.hist_bins),
+                        raw: if self.keep_raw_snapshots {
+                            Some(w0.grad.clone())
+                        } else {
+                            None
+                        },
+                    });
+                }
+            } else if snap_now || wants_feedback {
                 let w0 = &workers[0];
-                let u: Vec<f32> = if is_dense {
-                    w0.grad.clone()
-                } else {
-                    w0.grad
-                        .iter()
-                        .zip(w0.residual.residual())
-                        .map(|(g, e)| g + e)
-                        .collect()
-                };
-                snapshots.push(GradSnapshot {
-                    step,
-                    histogram: Histogram::auto(&u, self.hist_bins),
-                    raw: if self.keep_raw_snapshots { Some(u.clone()) } else { None },
-                });
+                u0.clear();
+                u0.extend(w0.grad.iter().zip(w0.residual.residual()).map(|(g, e)| g + e));
+                if wants_feedback {
+                    scheduler.observe(step, &feedback_histogram(&u0));
+                }
+                if snap_now {
+                    snapshots.push(GradSnapshot {
+                        step,
+                        histogram: Histogram::auto(&u0, self.hist_bins),
+                        raw: if self.keep_raw_snapshots {
+                            Some(u0.clone())
+                        } else {
+                            None
+                        },
+                    });
+                }
             }
 
             // Phase 3 — the bucket exchange. `produce` compresses bucket b
@@ -599,6 +724,7 @@ impl<'a> Trainer<'a> {
             let nb = schedule.len();
             {
                 let specs = schedule.specs();
+                let ks_ref: &[usize] = &ks_t;
                 let engine_ref: &dyn Collectives = engine.as_ref();
                 let global_topk = self.cfg.global_topk;
                 let workers_ref: &mut [WorkerState] = &mut workers;
@@ -629,7 +755,12 @@ impl<'a> Trainer<'a> {
                                             group
                                                 .iter_mut()
                                                 .map(|w| {
-                                                    (w.rank, w.compress_bucket(b, sp.lo, sp.hi))
+                                                    (
+                                                        w.rank,
+                                                        w.compress_bucket(
+                                                            b, sp.lo, sp.hi, ks_ref[b],
+                                                        ),
+                                                    )
                                                 })
                                                 .collect::<Vec<_>>()
                                         })
@@ -649,7 +780,7 @@ impl<'a> Trainer<'a> {
                         BucketMsg::Sparse(
                             workers_ref
                                 .iter_mut()
-                                .map(|w| w.compress_bucket(b, sp.lo, sp.hi))
+                                .map(|w| w.compress_bucket(b, sp.lo, sp.hi, ks_ref[b]))
                                 .collect(),
                         )
                     }
@@ -666,11 +797,11 @@ impl<'a> Trainer<'a> {
                             *sent_ref += msgs.iter().map(|m| m.nnz() as u64).sum::<u64>();
                             if global_topk {
                                 // Per-bucket gTop-k: re-truncate to the
-                                // bucket's own k_b; globally-dropped
-                                // contributions are queued for residual
-                                // restore.
+                                // bucket's share of this step's k_t;
+                                // globally-dropped contributions are
+                                // queued for residual restore.
                                 let (dense_b, selected) =
-                                    engine_ref.gtopk_allreduce_avg(&msgs, sp.k);
+                                    engine_ref.gtopk_allreduce_avg(&msgs, ks_ref[b]);
                                 let mut mask = vec![false; sp.len()];
                                 for &i in &selected {
                                     mask[i as usize] = true;
@@ -713,7 +844,8 @@ impl<'a> Trainer<'a> {
                 step,
                 loss: loss_acc / p as f64,
                 sent_elements: sent,
-                target_elements: if is_dense { (d * p) as u64 } else { (k * p) as u64 },
+                target_elements: if is_dense { (d * p) as u64 } else { (plan.k * p) as u64 },
+                density: if is_dense { 1.0 } else { plan.density },
                 wall_s: t0.elapsed().as_secs_f64(),
             });
 
@@ -762,6 +894,8 @@ mod tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            k_schedule: KSchedule::Const(None),
+            steps_per_epoch: 100,
         }
     }
 
@@ -806,6 +940,8 @@ mod tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            k_schedule: KSchedule::Const(None),
+            steps_per_epoch: 100,
         };
         let dense = train(mk(OpKind::Dense), &mut model, &data).unwrap();
         let topk = train(mk(OpKind::TopK), &mut model, &data).unwrap();
@@ -871,6 +1007,7 @@ mod tests {
         for s in &out.metrics.steps {
             assert_eq!(s.sent_elements, (k * 4) as u64); // exact top-k
             assert_eq!(s.target_elements, (k * 4) as u64);
+            assert!((s.density - k as f64 / d as f64).abs() < 1e-12);
         }
     }
 
@@ -896,6 +1033,124 @@ mod tests {
             gk.metrics.best_accuracy().unwrap(),
         );
         assert!((at - ag).abs() < 0.15, "topk {at} vs gaussiank {ag}");
+    }
+}
+
+#[cfg(test)]
+mod schedule_trainer_tests {
+    use super::*;
+    use crate::config::Parallelism;
+    use crate::data::GaussianMixture;
+    use crate::models::NativeMlp;
+
+    fn cfg(schedule: KSchedule) -> TrainConfig {
+        TrainConfig {
+            workers: 4,
+            op: OpKind::TopK,
+            k_ratio: 0.002,
+            batch_size: 32,
+            steps: 40,
+            lr: 0.1,
+            momentum: 0.9,
+            lr_final_frac: 0.1,
+            seed: 42,
+            eval_every: 20,
+            hist_every: 0,
+            momentum_correction: false,
+            global_topk: false,
+            parallelism: Parallelism::Serial,
+            buckets: crate::config::Buckets::None,
+            k_schedule: schedule,
+            steps_per_epoch: 5,
+        }
+    }
+
+    fn setup() -> (GaussianMixture, NativeMlp) {
+        (
+            GaussianMixture::new(32, 10, 2.0, 1.0, 13),
+            NativeMlp::new(&[32, 64, 64, 10]),
+        )
+    }
+
+    #[test]
+    fn warmup_density_trace_decreases() {
+        let (data, mut model) = setup();
+        let out = train(
+            cfg(KSchedule::Warmup { from: 0.1, to: 0.002, epochs: 4 }),
+            &mut model,
+            &data,
+        )
+        .unwrap();
+        let dens: Vec<f64> = out.metrics.steps.iter().map(|s| s.density).collect();
+        // Non-increasing throughout, strictly decreasing over the warmup
+        // (k moves by whole elements, so compare first vs warmup end).
+        for t in 1..dens.len() {
+            assert!(dens[t] <= dens[t - 1] + 1e-12, "density rose at step {t}: {dens:?}");
+        }
+        assert!(dens[0] > 10.0 * dens[19], "no decay: {} -> {}", dens[0], dens[19]);
+        // Post-warmup density equals the target.
+        let d = model.layout().total();
+        let k_final = ((d as f64 * 0.002).round() as usize).clamp(1, d);
+        assert!((dens[25] - k_final as f64 / d as f64).abs() < 1e-12);
+        // Sends track the varying k exactly for TopK.
+        for s in &out.metrics.steps {
+            assert_eq!(s.sent_elements, s.target_elements);
+        }
+    }
+
+    #[test]
+    fn adaptive_schedule_trains_and_varies_k() {
+        let (data, mut model) = setup();
+        let out = train(cfg(KSchedule::Adaptive { delta: 0.7 }), &mut model, &data).unwrap();
+        let dens: Vec<f64> = out.metrics.steps.iter().map(|s| s.density).collect();
+        // Every step in range, and the feedback loop actually moved k off
+        // its open-loop start after step 0.
+        assert!(dens.iter().all(|&r| r > 0.0 && r <= 1.0));
+        assert!(
+            dens[1..].iter().any(|&r| (r - dens[0]).abs() > 1e-12),
+            "adaptive never moved: {dens:?}"
+        );
+        // Still learns.
+        assert!(out.metrics.best_accuracy().unwrap() > 0.3);
+    }
+
+    #[test]
+    fn adaptive_serial_threaded_bit_identical() {
+        // Feedback is collected on worker 0 and applied in rank order, so
+        // the adaptive k sequence (and thus the whole trajectory) must be
+        // identical across runtimes.
+        let (data, mut model) = setup();
+        let serial = train(cfg(KSchedule::Adaptive { delta: 0.8 }), &mut model, &data).unwrap();
+        let mut tcfg = cfg(KSchedule::Adaptive { delta: 0.8 });
+        tcfg.parallelism = Parallelism::Threads(3);
+        let threaded = train(tcfg, &mut model, &data).unwrap();
+        assert_eq!(serial.final_params, threaded.final_params);
+        for (a, b) in serial.metrics.steps.iter().zip(&threaded.metrics.steps) {
+            assert_eq!(a.sent_elements, b.sent_elements, "step {}", a.step);
+            assert_eq!(a.density.to_bits(), b.density.to_bits(), "step {}", a.step);
+        }
+    }
+
+    #[test]
+    fn explicit_const_matches_default_path() {
+        // `const:K` with K == k_ratio is the documented bit-identity
+        // contract with the pre-schedule trainer (the default Const(None)
+        // path IS that trainer).
+        let (data, mut model) = setup();
+        let default_run = train(cfg(KSchedule::Const(None)), &mut model, &data).unwrap();
+        let explicit = train(cfg(KSchedule::Const(Some(0.002))), &mut model, &data).unwrap();
+        assert_eq!(default_run.final_params, explicit.final_params);
+    }
+
+    #[test]
+    fn const_k_overrides_k_ratio() {
+        let (data, mut model) = setup();
+        let out = train(cfg(KSchedule::Const(Some(0.01))), &mut model, &data).unwrap();
+        let d = model.layout().total();
+        let k = ((d as f64 * 0.01).round() as usize).clamp(1, d);
+        for s in &out.metrics.steps {
+            assert_eq!(s.target_elements, (k * 4) as u64);
+        }
     }
 }
 
@@ -928,6 +1183,8 @@ mod momentum_correction_tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            k_schedule: KSchedule::Const(None),
+            steps_per_epoch: 100,
         };
         let plain = train(base.clone(), &mut model, &data).unwrap();
         let mut corrected_cfg = base;
@@ -986,6 +1243,8 @@ mod gtopk_trainer_tests {
             global_topk,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            k_schedule: KSchedule::Const(None),
+            steps_per_epoch: 100,
         }
     }
 

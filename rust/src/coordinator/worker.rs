@@ -1,16 +1,21 @@
 //! Per-worker state for the synchronous data-parallel engine: an
 //! independent data-shard RNG, the error-feedback residual store, the
 //! worker's own compressor instance (stochastic operators keep
-//! independent streams), and a reusable gradient buffer.
+//! independent streams), a reusable gradient buffer, and the compression
+//! [`Workspace`] every `compress_step` call draws its scratch from.
 //!
 //! Every field is *owned* — no shared references, no interior mutability —
 //! so a `WorkerState` is `Send` and the threaded worker runtime can hand
 //! each OS thread exclusive `&mut` access to its worker group without
 //! locks. The `Send` bound is asserted at compile time in the tests below;
 //! breaking it (e.g. by adding an `Rc` field) fails the build.
+//!
+//! Since the schedule refactor, compressors carry no target-k state: the
+//! per-step k arrives from the trainer's resolved plan (monolithic path)
+//! or the per-step bucket apportionment (bucketed path).
 
 use crate::buckets::BucketSchedule;
-use crate::compress::{Compressor, OpKind};
+use crate::compress::{Compressor, OpKind, Workspace};
 use crate::error_feedback::ResidualStore;
 use crate::stats::rng::Pcg64;
 use crate::tensor::SparseVec;
@@ -25,10 +30,15 @@ pub struct WorkerState {
     /// This worker's compressor (monolithic exchange path).
     pub compressor: Box<dyn Compressor>,
     /// Per-bucket compressors for the bucketed exchange path, aligned with
-    /// the trainer's [`BucketSchedule`]; `None` for buckets whose
-    /// apportioned `k` is 0 (they send nothing and keep all mass in ε).
-    /// Empty until [`WorkerState::init_buckets`] runs.
-    pub bucket_compressors: Vec<Option<Box<dyn Compressor>>>,
+    /// the trainer's [`BucketSchedule`] (one per bucket — a bucket whose
+    /// per-step apportioned k is 0 simply skips its compressor that step,
+    /// keeping stochastic streams untouched). Empty until
+    /// [`WorkerState::init_buckets`] runs.
+    pub bucket_compressors: Vec<Box<dyn Compressor>>,
+    /// Reusable compression scratch + recycled output buffers (shared by
+    /// the monolithic compressor and every bucket compressor — the
+    /// workspace carries capacity, not semantics).
+    pub workspace: Workspace,
     /// Reusable local-gradient buffer.
     pub grad: Vec<f32>,
     /// Local momentum velocity (only allocated when DGC-style momentum
@@ -42,7 +52,7 @@ pub struct WorkerState {
 impl WorkerState {
     /// Build worker `rank` of `world` with deterministic sub-streams of
     /// `seed`.
-    pub fn new(rank: usize, d: usize, op: OpKind, k: usize, seed: u64) -> WorkerState {
+    pub fn new(rank: usize, d: usize, op: OpKind, seed: u64) -> WorkerState {
         let mut master = Pcg64::seed(seed);
         // Burn to the rank's stream deterministically (independent of
         // construction order elsewhere).
@@ -52,8 +62,9 @@ impl WorkerState {
             rank,
             data_rng,
             residual: ResidualStore::new(d),
-            compressor: op.build(k, comp_seed),
+            compressor: op.build(comp_seed),
             bucket_compressors: Vec::new(),
+            workspace: Workspace::new(),
             grad: vec![0.0; d],
             velocity: Vec::new(),
             comp_seed,
@@ -61,36 +72,39 @@ impl WorkerState {
     }
 
     /// Build one compressor per schedule bucket (stochastic operators get
-    /// an independent deterministic sub-stream per bucket). Buckets with
-    /// `k == 0` get `None`: nothing is selected there, so the whole slice
-    /// stays in the residual.
+    /// an independent deterministic sub-stream per bucket). Every bucket
+    /// gets a compressor — the per-step apportionment decides which ones
+    /// actually run (`k_b == 0` skips the call entirely, so the sub-stream
+    /// of a starved bucket never advances).
     pub fn init_buckets(&mut self, schedule: &BucketSchedule, op: OpKind) {
         let comp_seed = self.comp_seed;
         self.bucket_compressors = schedule
             .specs()
             .iter()
             .map(|spec| {
-                (spec.k > 0).then(|| {
-                    let salt = (spec.index as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407);
-                    op.build(spec.k, comp_seed ^ salt)
-                })
+                let salt = (spec.index as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407);
+                op.build(comp_seed ^ salt)
             })
             .collect();
     }
 
     /// Error-feedback-compress bucket `b` (the `[lo, hi)` slice of the
-    /// flat gradient): `u_b = g_b + ε_b`, `s_b = Comp_{k_b}(u_b)`,
-    /// `ε_b ← u_b − s_b`. Returns the bucket-local sparse payload
-    /// (`d = hi − lo`, indices relative to `lo`). Pure with respect to
-    /// everything outside this worker's own state and the `[lo, hi)`
-    /// window, so per-worker calls can run on concurrent threads and
-    /// buckets interleave freely between steps of the same bucket index.
-    pub fn compress_bucket(&mut self, b: usize, lo: usize, hi: usize) -> SparseVec {
+    /// flat gradient) with this step's apportioned budget `k`:
+    /// `u_b = g_b + ε_b`, `s_b = Comp_k(u_b)`, `ε_b ← u_b − s_b`. Returns
+    /// the bucket-local sparse payload (`d = hi − lo`, indices relative to
+    /// `lo`). Pure with respect to everything outside this worker's own
+    /// state and the `[lo, hi)` window, so per-worker calls can run on
+    /// concurrent threads and buckets interleave freely between steps of
+    /// the same bucket index.
+    pub fn compress_bucket(&mut self, b: usize, lo: usize, hi: usize, k: usize) -> SparseVec {
         let u = self.residual.accumulate_range(&self.grad, lo, hi);
-        let sent = match self.bucket_compressors[b].as_mut() {
-            Some(comp) => comp.compress(u),
-            // k_b == 0: send nothing; ε_b absorbs the whole slice.
-            None => SparseVec::new(hi - lo),
+        let sent = if k == 0 {
+            // k_b == 0: send nothing; ε_b absorbs the whole slice (and the
+            // bucket's compressor — including any RNG stream — is left
+            // untouched).
+            SparseVec::new(hi - lo)
+        } else {
+            self.bucket_compressors[b].compress_step(u, k, &mut self.workspace)
         };
         self.residual.update_range(&sent, lo);
         sent
@@ -102,7 +116,8 @@ mod tests {
     use super::*;
 
     /// Compile-time contract: worker state (and thus everything inside it,
-    /// including the boxed compressor) can move to a worker thread.
+    /// including the boxed compressor and workspace) can move to a worker
+    /// thread.
     #[test]
     fn worker_state_is_send() {
         fn assert_send<T: Send>() {}
@@ -111,8 +126,8 @@ mod tests {
 
     #[test]
     fn workers_have_independent_data_streams() {
-        let mut a = WorkerState::new(0, 8, OpKind::TopK, 2, 7);
-        let mut b = WorkerState::new(1, 8, OpKind::TopK, 2, 7);
+        let mut a = WorkerState::new(0, 8, OpKind::TopK, 7);
+        let mut b = WorkerState::new(1, 8, OpKind::TopK, 7);
         let xa: Vec<u64> = (0..8).map(|_| a.data_rng.next_u64()).collect();
         let xb: Vec<u64> = (0..8).map(|_| b.data_rng.next_u64()).collect();
         assert_ne!(xa, xb);
@@ -120,25 +135,28 @@ mod tests {
 
     #[test]
     fn same_rank_same_seed_reproducible() {
-        let mut a = WorkerState::new(3, 8, OpKind::RandK, 2, 7);
-        let mut b = WorkerState::new(3, 8, OpKind::RandK, 2, 7);
+        let mut a = WorkerState::new(3, 8, OpKind::RandK, 7);
+        let mut b = WorkerState::new(3, 8, OpKind::RandK, 7);
         assert_eq!(a.data_rng.next_u64(), b.data_rng.next_u64());
         // Compressor streams also deterministic:
         let u = vec![1.0f32; 8];
-        assert_eq!(a.compressor.compress(&u), b.compressor.compress(&u));
+        assert_eq!(
+            a.compressor.compress_step(&u, 2, &mut a.workspace),
+            b.compressor.compress_step(&u, 2, &mut b.workspace)
+        );
     }
 
     #[test]
     fn bucket_compress_covers_schedule_and_conserves_mass() {
         let d = 10;
         let sched = BucketSchedule::fixed_bytes(d, 16, 4); // buckets 4+4+2
-        let mut w = WorkerState::new(0, d, OpKind::TopK, 4, 7);
+        let mut w = WorkerState::new(0, d, OpKind::TopK, 7);
         w.init_buckets(&sched, OpKind::TopK);
         assert_eq!(w.bucket_compressors.len(), 3);
         w.grad = (0..d).map(|i| (i as f32) - 4.5).collect();
         let mut total_sent = 0;
         for spec in sched.specs() {
-            let s = w.compress_bucket(spec.index, spec.lo, spec.hi);
+            let s = w.compress_bucket(spec.index, spec.lo, spec.hi, spec.k);
             assert_eq!(s.d, spec.len());
             assert_eq!(s.nnz(), spec.k.min(spec.len()));
             total_sent += s.nnz();
@@ -164,14 +182,34 @@ mod tests {
         let d = 9;
         let sched = BucketSchedule::fixed_bytes(d, 32, 1);
         assert_eq!(sched.specs()[1].k, 0);
-        let mut w = WorkerState::new(0, d, OpKind::TopK, 1, 7);
+        let mut w = WorkerState::new(0, d, OpKind::TopK, 7);
         w.init_buckets(&sched, OpKind::TopK);
-        assert!(w.bucket_compressors[1].is_none());
+        // The compressor exists (a later step may apportion it budget)...
+        assert_eq!(w.bucket_compressors.len(), 2);
         w.grad = vec![1.0; d];
         let spec = sched.specs()[1];
-        let s = w.compress_bucket(spec.index, spec.lo, spec.hi);
+        // ...but a k = 0 step sends nothing.
+        let s = w.compress_bucket(spec.index, spec.lo, spec.hi, 0);
         assert_eq!(s.nnz(), 0);
         assert_eq!(w.residual.residual()[spec.lo], 1.0);
+    }
+
+    #[test]
+    fn per_step_k_changes_between_steps() {
+        // The same bucket can get different budgets on different steps —
+        // the varying-k trainer path in miniature.
+        let d = 16;
+        let sched = BucketSchedule::fixed_bytes(d, 64, 4); // one bucket
+        let mut w = WorkerState::new(0, d, OpKind::TopK, 7);
+        w.init_buckets(&sched, OpKind::TopK);
+        w.grad = (0..d).map(|i| i as f32 + 1.0).collect();
+        let s4 = w.compress_bucket(0, 0, d, 4);
+        assert_eq!(s4.nnz(), 4);
+        w.grad = vec![0.0; d]; // only ε remains
+        let s2 = w.compress_bucket(0, 0, d, 2);
+        assert_eq!(s2.nnz(), 2);
+        let s0 = w.compress_bucket(0, 0, d, 0);
+        assert_eq!(s0.nnz(), 0);
     }
 
     #[test]
@@ -179,11 +217,11 @@ mod tests {
         let d = 256;
         let sched = BucketSchedule::fixed_bytes(d, 512, 32); // two 128-elem buckets
         let mk = || {
-            let mut w = WorkerState::new(2, d, OpKind::RandK, 32, 7);
+            let mut w = WorkerState::new(2, d, OpKind::RandK, 7);
             w.init_buckets(&sched, OpKind::RandK);
             w.grad = vec![1.0; d];
-            let a = w.compress_bucket(0, 0, 128);
-            let b = w.compress_bucket(1, 128, 256);
+            let a = w.compress_bucket(0, 0, 128, 16);
+            let b = w.compress_bucket(1, 128, 256, 16);
             (a, b)
         };
         let (a1, b1) = mk();
@@ -199,9 +237,12 @@ mod tests {
 
     #[test]
     fn randk_streams_differ_across_ranks() {
-        let mut a = WorkerState::new(0, 100, OpKind::RandK, 10, 7);
-        let mut b = WorkerState::new(1, 100, OpKind::RandK, 10, 7);
+        let mut a = WorkerState::new(0, 100, OpKind::RandK, 7);
+        let mut b = WorkerState::new(1, 100, OpKind::RandK, 7);
         let u = vec![1.0f32; 100];
-        assert_ne!(a.compressor.compress(&u).indices, b.compressor.compress(&u).indices);
+        assert_ne!(
+            a.compressor.compress_step(&u, 10, &mut a.workspace).indices,
+            b.compressor.compress_step(&u, 10, &mut b.workspace).indices
+        );
     }
 }

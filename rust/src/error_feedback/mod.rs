@@ -102,14 +102,18 @@ impl ResidualStore {
         }
     }
 
-    /// Convenience: run a full accumulate → compress → update cycle.
+    /// Convenience: run a full accumulate → compress → update cycle at
+    /// this step's target `k` (per-step k is schedule-resolved; see
+    /// `crate::schedule`).
     pub fn step(
         &mut self,
         g: &[f32],
         comp: &mut dyn crate::compress::Compressor,
+        k: usize,
+        ws: &mut crate::compress::Workspace,
     ) -> SparseVec {
         self.accumulate(g);
-        let sent = comp.compress(&self.u);
+        let sent = comp.compress_step(&self.u, k, ws);
         self.update(&sent);
         sent
     }
@@ -129,7 +133,7 @@ impl ResidualStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::TopK;
+    use crate::compress::{TopK, Workspace};
     use crate::stats::rng::Pcg64;
     use crate::util::testkit::{self, Gen};
 
@@ -137,7 +141,7 @@ mod tests {
     fn first_step_residual_is_unsent_mass() {
         let g = vec![3.0f32, -1.0, 0.5, -4.0];
         let mut store = ResidualStore::new(4);
-        let sent = store.step(&g, &mut TopK::new(2));
+        let sent = store.step(&g, &mut TopK::new(), 2, &mut Workspace::new());
         assert_eq!(sent.indices, vec![0, 3]);
         assert_eq!(store.residual(), &[0.0, -1.0, 0.5, 0.0]);
     }
@@ -146,14 +150,38 @@ mod tests {
     fn residual_carries_to_next_step() {
         // A small coordinate must eventually be sent once ε accumulates.
         let mut store = ResidualStore::new(3);
-        let mut comp = TopK::new(1);
+        let mut comp = TopK::new();
+        let mut ws = Workspace::new();
         let g = vec![1.0f32, 0.6, 0.0];
-        let s1 = store.step(&g, &mut comp);
+        let s1 = store.step(&g, &mut comp, 1, &mut ws);
         assert_eq!(s1.indices, vec![0]); // 1.0 wins
-        let s2 = store.step(&g, &mut comp);
+        let s2 = store.step(&g, &mut comp, 1, &mut ws);
         // u = [1.0, 1.2, 0.0] now: accumulated 0.6+0.6 beats fresh 1.0.
         assert_eq!(s2.indices, vec![1]);
         assert!((s2.values[0] - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn varying_k_conserves_mass() {
+        // The schedule engine changes k between steps; Σ sent + ε == Σ g
+        // must hold regardless (the bucketed twin lives in
+        // tests/schedule_equivalence.rs).
+        let mut store = ResidualStore::new(6);
+        let mut comp = TopK::new();
+        let mut ws = Workspace::new();
+        let g = vec![1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0];
+        let mut total_sent = vec![0.0f64; 6];
+        for (step, k) in [4usize, 1, 0, 3].into_iter().enumerate() {
+            let sent = store.step(&g, &mut comp, k, &mut ws);
+            assert_eq!(sent.nnz(), k, "step {step}");
+            for (&i, &v) in sent.indices.iter().zip(&sent.values) {
+                total_sent[i as usize] += v as f64;
+            }
+        }
+        for i in 0..6 {
+            let lhs = total_sent[i] + store.residual()[i] as f64;
+            assert!((lhs - 4.0 * g[i] as f64).abs() < 1e-4, "coord {i}: {lhs}");
+        }
     }
 
     /// Mass conservation: across T steps, Σ sent + ε_T == Σ g (exactly,
@@ -165,7 +193,8 @@ mod tests {
             let k = g.usize_in(1, d);
             let steps = g.usize_in(1, 12);
             let mut store = ResidualStore::new(d);
-            let mut comp = TopK::new(k);
+            let mut comp = TopK::new();
+            let mut ws = Workspace::new();
             let mut total_g = vec![0.0f64; d];
             let mut total_sent = vec![0.0f64; d];
             let mut rng = Pcg64::seed(g.rng.next_u64());
@@ -174,7 +203,7 @@ mod tests {
                 for (t, &x) in total_g.iter_mut().zip(&grad) {
                     *t += x as f64;
                 }
-                let sent = store.step(&grad, &mut comp);
+                let sent = store.step(&grad, &mut comp, k, &mut ws);
                 for (&i, &v) in sent.indices.iter().zip(&sent.values) {
                     total_sent[i as usize] += v as f64;
                 }
@@ -200,12 +229,13 @@ mod tests {
         let g = vec![3.0f32, -1.0, 0.5, -4.0];
         let mut mono = ResidualStore::new(4);
         let mut bucketed = ResidualStore::new(4);
-        let sent_mono = mono.step(&g, &mut TopK::new(2));
-        let mut comp = TopK::new(2);
+        let mut ws = Workspace::new();
+        let sent_mono = mono.step(&g, &mut TopK::new(), 2, &mut ws);
+        let mut comp = TopK::new();
         let u = bucketed.accumulate_range(&g, 0, 4).to_vec();
         let sent_b = {
             use crate::compress::Compressor;
-            comp.compress(&u)
+            comp.compress_step(&u, 2, &mut ws)
         };
         bucketed.update_range(&sent_b, 0);
         assert_eq!(sent_mono, sent_b);
@@ -218,15 +248,16 @@ mod tests {
         // its own slice; the other slice is untouched.
         let g = vec![1.0f32, 2.0, 3.0, 4.0];
         let mut store = ResidualStore::new(4);
+        let mut ws = Workspace::new();
         use crate::compress::Compressor;
         // Bucket 0 = [0, 2), k = 1.
         let u0 = store.accumulate_range(&g, 0, 2).to_vec();
-        let s0 = TopK::new(1).compress(&u0);
+        let s0 = TopK::new().compress_step(&u0, 1, &mut ws);
         store.update_range(&s0, 0);
         assert_eq!(store.residual(), &[1.0, 0.0, 0.0, 0.0]); // 2.0 sent
         // Bucket 1 = [2, 4), k = 1.
         let u1 = store.accumulate_range(&g, 2, 4).to_vec();
-        let s1 = TopK::new(1).compress(&u1);
+        let s1 = TopK::new().compress_step(&u1, 1, &mut ws);
         store.update_range(&s1, 2);
         assert_eq!(store.residual(), &[1.0, 0.0, 3.0, 0.0]); // 4.0 sent
     }
@@ -245,7 +276,7 @@ mod tests {
     fn norm_tracking() {
         let mut store = ResidualStore::new(4);
         store.track_norm = true;
-        store.step(&[1.0, 2.0, 3.0, 4.0], &mut TopK::new(2));
+        store.step(&[1.0, 2.0, 3.0, 4.0], &mut TopK::new(), 2, &mut Workspace::new());
         assert_eq!(store.norm_history.len(), 1);
         assert!((store.norm_history[0] - 5.0).abs() < 1e-6); // 1² + 2²
     }

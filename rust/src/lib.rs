@@ -25,14 +25,15 @@
 //! flow executes in `examples/quickstart.rs` and the unit tests.)
 //!
 //! ```no_run
-//! use sparkv::compress::{Compressor, GaussianK, TopK};
+//! use sparkv::compress::{Compressor, GaussianK, TopK, Workspace};
 //! use sparkv::stats::rng::Pcg64;
 //!
 //! let mut rng = Pcg64::seed(42);
 //! let u: Vec<f32> = (0..10_000).map(|_| rng.next_gaussian() as f32).collect();
-//! let k = 10; // 0.001 * d
-//! let exact = TopK::new(k).compress(&u);
-//! let approx = GaussianK::new(k).compress(&u);
+//! let k = 10; // this step's plan (see sparkv::schedule for k schedules)
+//! let mut ws = Workspace::new();
+//! let exact = TopK::new().compress_step(&u, k, &mut ws);
+//! let approx = GaussianK::new().compress_step(&u, k, &mut ws);
 //! assert_eq!(exact.values.len(), k);
 //! assert!(!approx.values.is_empty());
 //! ```
@@ -50,6 +51,7 @@ pub mod metrics;
 pub mod models;
 pub mod netsim;
 pub mod runtime;
+pub mod schedule;
 pub mod stats;
 pub mod tensor;
 pub mod util;

@@ -37,7 +37,8 @@ fn main() -> anyhow::Result<()> {
                  USAGE: sparkv <train|simulate|bench-op|analyze> [OPTIONS]\n\n\
                  train     --op <dense|topk|randk|dgc|trimmed|gaussiank> --workers N --steps N\n\
                  \x20         [--parallelism serial|threads|threads:N] [--buckets none|layers|bytes:N]\n\
-                 \x20         [--config file.toml] [--set train.key=value]\n\
+                 \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
+                 \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
                  \x20         [--backend native|pjrt --model <name>]\n\
                  simulate  [--k-ratio 0.001] [--nodes 4 --gpus 4]\n\
                  bench-op  [--dims 1000000,4000000,16000000] [--k-ratio 0.001]\n\
@@ -64,6 +65,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "seed",
         "parallelism",
         "buckets",
+        "k_schedule",
+        "steps_per_epoch",
     ] {
         if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
             raw.set(&format!("train.{key}={v}"))?;
@@ -74,14 +77,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     let cfg = TrainConfig::from_raw(&raw)?;
     println!(
-        "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={}",
+        "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={} k_schedule={}",
         cfg.op.name(),
         cfg.workers,
         cfg.steps,
         cfg.k_ratio,
         cfg.lr,
         cfg.parallelism.name(),
-        cfg.buckets.name()
+        cfg.buckets.name(),
+        cfg.k_schedule.name()
     );
 
     let backend = args.get_or("backend", "native");
@@ -163,9 +167,11 @@ fn cmd_bench_op(args: &Args) -> anyhow::Result<()> {
         let mut rng = Pcg64::seed(7);
         let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
         for op in [OpKind::TopK, OpKind::Dgc, OpKind::GaussianK] {
-            let mut c = op.build(k, 3);
+            let mut c = op.build(3);
+            let mut ws = sparkv::compress::Workspace::new();
             bench.run(&format!("{}/d={d}", op.name()), || {
-                std::hint::black_box(c.compress(&u));
+                let s = c.compress_step(&u, k, &mut ws);
+                ws.recycle(std::hint::black_box(s));
             });
         }
     }
@@ -201,8 +207,8 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
 
     // Sanity: GaussianK on this vector lands near k.
     let k = ks.first().copied().unwrap_or(d / 1000).max(1);
-    let mut gk = sparkv::compress::GaussianK::new(k);
-    let s = gk.compress(&u);
+    let mut gk = sparkv::compress::GaussianK::new();
+    let s = gk.compress_step(&u, k, &mut sparkv::compress::Workspace::new());
     println!("Gaussian_k(k={k}) selected {} elements", s.nnz());
     Ok(())
 }

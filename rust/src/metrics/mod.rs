@@ -14,8 +14,13 @@ pub struct StepRecord {
     pub loss: f64,
     /// Elements actually communicated this step (summed over workers).
     pub sent_elements: u64,
-    /// Configured k summed over workers (target volume).
+    /// This step's resolved k summed over workers (target volume —
+    /// per-step under a k schedule).
     pub target_elements: u64,
+    /// The schedule plan's resolved density k_t/d for this step (1.0 for
+    /// Dense). Constant for `const` schedules; the warmup/adaptive trace
+    /// otherwise.
+    pub density: f64,
     /// Wall-clock seconds for the step (L3 hot path).
     pub wall_s: f64,
 }
@@ -78,6 +83,11 @@ impl RunMetrics {
             .collect()
     }
 
+    /// The per-step density trace (the k schedule made visible).
+    pub fn density_trace(&self) -> Vec<f64> {
+        self.steps.iter().map(|s| s.density).collect()
+    }
+
     /// Final (or best) eval accuracy.
     pub fn best_accuracy(&self) -> Option<f64> {
         self.evals.iter().map(|e| e.accuracy).fold(None, |m, a| {
@@ -119,6 +129,10 @@ impl RunMetrics {
                 ),
             )
             .set(
+                "density",
+                Json::Arr(self.steps.iter().map(|s| Json::from(s.density)).collect()),
+            )
+            .set(
                 "evals",
                 Json::Arr(
                     self.evals
@@ -143,12 +157,12 @@ impl RunMetrics {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,loss,sent_elements,target_elements,wall_s")?;
+        writeln!(f, "step,loss,sent_elements,target_elements,density,wall_s")?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{}",
-                s.step, s.loss, s.sent_elements, s.target_elements, s.wall_s
+                "{},{},{},{},{},{}",
+                s.step, s.loss, s.sent_elements, s.target_elements, s.density, s.wall_s
             )?;
         }
         Ok(())
@@ -165,6 +179,7 @@ mod tests {
             loss,
             sent_elements: sent,
             target_elements: 10,
+            density: 0.001,
             wall_s: 0.01,
         }
     }
@@ -209,8 +224,8 @@ mod tests {
         let path = dir.join("run.csv");
         m.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("step,loss"));
-        assert!(text.contains("0,0.5,3,10,0.01"));
+        assert!(text.starts_with("step,loss,sent_elements,target_elements,density,wall_s"));
+        assert!(text.contains("0,0.5,3,10,0.001,0.01"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -220,6 +235,19 @@ mod tests {
         m.record_step(rec(0, 1.0, 5));
         let j = m.to_json();
         assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("density").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("name").unwrap().as_str(), Some("run"));
+    }
+
+    #[test]
+    fn density_trace_extracted() {
+        let mut m = RunMetrics::new("t");
+        let mut r = rec(0, 1.0, 5);
+        r.density = 0.05;
+        m.record_step(r);
+        let mut r2 = rec(1, 0.9, 5);
+        r2.density = 0.01;
+        m.record_step(r2);
+        assert_eq!(m.density_trace(), vec![0.05, 0.01]);
     }
 }

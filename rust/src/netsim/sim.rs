@@ -95,15 +95,25 @@ impl Simulator {
         }
     }
 
-    /// Simulate one synchronous iteration; returns the breakdown.
+    /// Simulate one synchronous iteration at the configured density;
+    /// returns the breakdown.
     pub fn iteration(&mut self) -> IterationBreakdown {
+        self.iteration_at_ratio(self.cfg.k_ratio)
+    }
+
+    /// Simulate one iteration at an explicit density `k_ratio` — the
+    /// time-varying-density hook: a k schedule replays its per-step trace
+    /// by calling this once per virtual step (see
+    /// [`crate::cluster::scaling_table_scheduled`]). With
+    /// `k_ratio == cfg.k_ratio` this is exactly [`Simulator::iteration`].
+    pub fn iteration_at_ratio(&mut self, k_ratio: f64) -> IterationBreakdown {
         if self.cfg.buckets >= 2 {
-            return self.iteration_bucketed(self.cfg.buckets);
+            return self.iteration_bucketed(self.cfg.buckets, k_ratio);
         }
         let p = self.cfg.topo.world_size();
         let d = self.cfg.model.params;
         let op_cost = OpCostModel::for_op(self.cfg.op);
-        let k = ((d as f64 * self.cfg.k_ratio).round() as u64).max(1);
+        let k = ((d as f64 * k_ratio).round() as u64).max(1);
         let t_select = if self.cfg.op == OpKind::Dense {
             0.0
         } else {
@@ -188,11 +198,11 @@ impl Simulator {
     /// collective pays its own latency terms, which is exactly the
     /// bucket-size trade-off: more buckets hide more communication but add
     /// `(P − 1)·α` per extra bucket.
-    fn iteration_bucketed(&mut self, nb: usize) -> IterationBreakdown {
+    fn iteration_bucketed(&mut self, nb: usize, k_ratio: f64) -> IterationBreakdown {
         let p = self.cfg.topo.world_size();
         let d = self.cfg.model.params;
         let op_cost = OpCostModel::for_op(self.cfg.op);
-        let k = ((d as f64 * self.cfg.k_ratio).round() as u64).max(1);
+        let k = ((d as f64 * k_ratio).round() as u64).max(1);
         let is_dense = self.cfg.op == OpKind::Dense;
 
         // Compute barrier (same jitter model and RNG draw order as the
@@ -405,6 +415,30 @@ mod tests {
         let b = Simulator::new(cfg).iteration();
         assert!(b.total.is_finite() && b.total > 0.0);
         assert!(b.comm > 0.0);
+    }
+
+    #[test]
+    fn iteration_at_ratio_matches_configured_and_scales_comm() {
+        // Same density ⇒ bit-identical to iteration(); lower density ⇒
+        // cheaper communication, same compute/select.
+        let mut a = Simulator::new(SimConfig::table2(resnet(), OpKind::TopK));
+        let mut b = Simulator::new(SimConfig::table2(resnet(), OpKind::TopK));
+        let via_cfg = a.iteration();
+        let via_ratio = b.iteration_at_ratio(0.001);
+        assert_eq!(via_cfg.total.to_bits(), via_ratio.total.to_bits());
+        assert_eq!(via_cfg.comm.to_bits(), via_ratio.comm.to_bits());
+        let sparse = b.iteration_at_ratio(0.0001);
+        let dense = b.iteration_at_ratio(0.01);
+        assert!(sparse.comm < via_ratio.comm && via_ratio.comm < dense.comm);
+        assert_eq!(sparse.select.to_bits(), dense.select.to_bits());
+        assert_eq!(sparse.compute.to_bits(), dense.compute.to_bits());
+        // The bucketed timeline accepts per-step densities too.
+        let mut cfg = SimConfig::table2(resnet(), OpKind::TopK);
+        cfg.buckets = 8;
+        let mut s = Simulator::new(cfg);
+        let b1 = s.iteration_at_ratio(0.001);
+        let b2 = s.iteration();
+        assert_eq!(b1.total.to_bits(), b2.total.to_bits());
     }
 
     #[test]

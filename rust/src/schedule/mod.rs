@@ -1,0 +1,585 @@
+//! Per-step k-scheduling: the compression *plan* engine.
+//!
+//! The paper's density sweeps (§4, Table 2) fix k for a whole run, but
+//! follow-up work varies it over training: Adaptive Top-K (Ruan et al.
+//! 2022) picks k per step from gradient statistics, and density
+//! *schedules* dominate end-to-end scaling efficiency in the
+//! supercomputing study of Yoon & Oh (2022). This module turns the static
+//! `(operator, k)` pair into a per-step [`StepPlan`] resolved by a
+//! [`KPolicy`]:
+//!
+//! * [`Constant`] — today's behaviour: `k = round(d · k_ratio)` every
+//!   step (the `const` schedule; bit-identical to the pre-schedule path).
+//! * [`WarmupDecay`] — exponential *density* decay from `R0` to `R` over
+//!   the first `E` epochs (`warmup:R0..R,epochs=E`), then constant at
+//!   `R`. Start dense while gradients are chaotic, sparsify as training
+//!   settles.
+//! * [`AdaptiveMass`] — pick the smallest k whose top-|u| coordinates
+//!   capture a target fraction δ of ‖u‖² (`adaptive:DELTA`), estimated
+//!   from a [`Histogram`] of |u| on worker 0 (`stats::histogram`); the
+//!   estimate from step t steers k at step t + 1 (open loop at step 0).
+//!
+//! ## The `k_schedule` grammar (TOML `[train]` key and `--set` override)
+//!
+//! ```text
+//! k_schedule = "const"                      # follow k_ratio (default)
+//! k_schedule = "const:K"                    # fixed density K
+//! k_schedule = "warmup:K0..K,epochs=E"      # exponential decay K0 → K
+//! k_schedule = "adaptive:DELTA"             # smallest k with δ of ‖u‖²
+//! ```
+//!
+//! `K`, `K0`, `DELTA` are densities/fractions in (0, 1] with `K0 ≥ K`
+//! (warmup *decays* — a reversed range is rejected at parse/validate
+//! time); `E` is a number of epochs, converted to steps via the
+//! `steps_per_epoch` config key (synthetic data streams have no natural
+//! epoch boundary, so the epoch length is explicit configuration).
+//!
+//! ## Contracts
+//!
+//! * Every resolved plan satisfies `1 ≤ k_t ≤ d` ([`Scheduler::plan`]
+//!   clamps; property-locked in `tests/schedule_equivalence.rs`).
+//! * `const` schedules resolve the *identical* k the pre-schedule trainer
+//!   computed (`round(d · k_ratio)` clamped to `[1, d]`), so constant
+//!   runs are bit-for-bit reproductions of the old path.
+//! * Policies are `Send`: the trainer owns the scheduler on the
+//!   coordinator thread; workers only see the resolved `k_t`.
+//! * Feedback ([`Scheduler::observe`]) is collected from worker 0 only
+//!   and applied after the step's fold, in rank order, so serial and
+//!   threaded runs resolve identical k sequences.
+
+use crate::stats::histogram::Histogram;
+
+/// Bins used for the |u| feedback histogram ([`feedback_histogram`]).
+/// Coarse is fine: the adaptive policy only needs the energy-vs-count
+/// trade-off curve, not the exact distribution.
+pub const FEEDBACK_BINS: usize = 128;
+
+/// A parsed `k_schedule` specification (see the module docs for the
+/// grammar). Lives in the config layer; [`Scheduler::for_run`] resolves
+/// it into a policy once the model dimension d is known.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KSchedule {
+    /// `const` (follow the `k_ratio` key — the default) or `const:K`
+    /// (fixed density K, overriding `k_ratio`).
+    Const(Option<f64>),
+    /// `warmup:K0..K,epochs=E` — exponential density decay K0 → K over
+    /// the first E epochs, then constant at K.
+    Warmup { from: f64, to: f64, epochs: usize },
+    /// `adaptive:DELTA` — smallest k capturing DELTA of ‖u‖².
+    Adaptive { delta: f64 },
+}
+
+impl Default for KSchedule {
+    fn default() -> Self {
+        KSchedule::Const(None)
+    }
+}
+
+impl KSchedule {
+    /// Parse a config/CLI value (see the module-docs grammar). The value
+    /// invariants live in [`KSchedule::validate`], which runs on every
+    /// parse — grammar shape and value constraints cannot drift apart.
+    pub fn parse(s: &str) -> anyhow::Result<KSchedule> {
+        let t = s.trim().to_ascii_lowercase();
+        let grammar = "const[:K] | warmup:K0..K,epochs=E | adaptive:DELTA";
+        let bad = || anyhow::anyhow!("bad k_schedule '{s}': expected {grammar}");
+        let spec = if t == "const" {
+            KSchedule::Const(None)
+        } else if let Some(rest) = t.strip_prefix("const:") {
+            KSchedule::Const(Some(rest.parse().map_err(|_| bad())?))
+        } else if let Some(rest) = t.strip_prefix("warmup:") {
+            let (range, epochs) = rest.split_once(',').ok_or_else(bad)?;
+            let (from, to) = range.split_once("..").ok_or_else(bad)?;
+            KSchedule::Warmup {
+                from: from.parse().map_err(|_| bad())?,
+                to: to.parse().map_err(|_| bad())?,
+                epochs: epochs
+                    .strip_prefix("epochs=")
+                    .ok_or_else(bad)?
+                    .parse()
+                    .map_err(|_| bad())?,
+            }
+        } else if let Some(rest) = t.strip_prefix("adaptive:") {
+            KSchedule::Adaptive {
+                delta: rest.parse().map_err(|_| bad())?,
+            }
+        } else {
+            return Err(bad());
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Display form (round-trips through [`KSchedule::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            KSchedule::Const(None) => "const".to_string(),
+            KSchedule::Const(Some(r)) => format!("const:{r}"),
+            KSchedule::Warmup { from, to, epochs } => {
+                format!("warmup:{from}..{to},epochs={epochs}")
+            }
+            KSchedule::Adaptive { delta } => format!("adaptive:{delta}"),
+        }
+    }
+
+    /// Validate the spec's invariants (config-level check).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            KSchedule::Const(None) => Ok(()),
+            KSchedule::Const(Some(r)) => {
+                anyhow::ensure!(r > 0.0 && r <= 1.0, "k_schedule const:K needs K in (0, 1]");
+                Ok(())
+            }
+            KSchedule::Warmup { from, to, epochs } => {
+                anyhow::ensure!(
+                    from > 0.0 && from <= 1.0 && to > 0.0 && to <= 1.0,
+                    "k_schedule warmup densities must be in (0, 1]"
+                );
+                anyhow::ensure!(
+                    from >= to,
+                    "k_schedule warmup decays: K0 must be >= K (got {from}..{to})"
+                );
+                anyhow::ensure!(epochs >= 1, "k_schedule warmup needs epochs >= 1");
+                Ok(())
+            }
+            KSchedule::Adaptive { delta } => {
+                anyhow::ensure!(
+                    delta > 0.0 && delta <= 1.0,
+                    "k_schedule adaptive:DELTA needs DELTA in (0, 1]"
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The resolved compression plan for one step: `k` is already clamped to
+/// `[1, d]`; `density = k / d`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepPlan {
+    pub k: usize,
+    pub density: f64,
+}
+
+/// A per-step k policy. Implementations must be deterministic functions
+/// of `(step, observed history)` — the trainer relies on that for its
+/// serial/threaded bit-identity guarantee.
+pub trait KPolicy: Send {
+    /// The k this policy wants for `step`. The [`Scheduler`] clamps the
+    /// result to `[1, d]`; implementations should stay in range anyway.
+    fn k_for_step(&mut self, step: usize) -> usize;
+
+    /// Feed back the |u| histogram of worker 0 after `step` (adaptive
+    /// policies steer k at step + 1 with it). Default: ignored.
+    fn observe(&mut self, _step: usize, _u_abs_hist: &Histogram) {}
+
+    /// Whether this policy consumes [`KPolicy::observe`] feedback (lets
+    /// the trainer skip building the histogram when nobody listens).
+    fn wants_feedback(&self) -> bool {
+        false
+    }
+
+    /// Human-readable name for metrics/reports.
+    fn name(&self) -> String;
+}
+
+/// Fixed k every step — `round(d · ratio)` clamped to `[1, d]`, the exact
+/// expression the pre-schedule trainer used.
+pub struct Constant {
+    k: usize,
+    ratio: f64,
+}
+
+impl Constant {
+    pub fn new(d: usize, ratio: f64) -> Constant {
+        let k = ((d as f64 * ratio).round() as usize).clamp(1, d.max(1));
+        Constant { k, ratio }
+    }
+}
+
+impl KPolicy for Constant {
+    fn k_for_step(&mut self, _step: usize) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> String {
+        format!("const:{}", self.ratio)
+    }
+}
+
+/// Exponential density decay `from → to` over `warmup_steps` steps, then
+/// constant at `to`. With `from > to` the density trace is non-increasing
+/// (strictly decreasing wherever the rounded k still moves).
+pub struct WarmupDecay {
+    d: usize,
+    from: f64,
+    to: f64,
+    warmup_steps: usize,
+}
+
+impl WarmupDecay {
+    pub fn new(d: usize, from: f64, to: f64, warmup_steps: usize) -> WarmupDecay {
+        WarmupDecay {
+            d,
+            from,
+            to,
+            warmup_steps: warmup_steps.max(1),
+        }
+    }
+
+    /// The (un-rounded) density at `step`.
+    pub fn density_at(&self, step: usize) -> f64 {
+        warmup_density(self.from, self.to, self.warmup_steps, step)
+    }
+}
+
+/// The warmup-decay density curve, shared with the open-loop trace used
+/// by the netsim scheduled sweeps ([`density_trace`]).
+fn warmup_density(from: f64, to: f64, warmup_steps: usize, step: usize) -> f64 {
+    let w = warmup_steps.max(1);
+    if step >= w {
+        return to;
+    }
+    from * (to / from).powf(step as f64 / w as f64)
+}
+
+impl KPolicy for WarmupDecay {
+    fn k_for_step(&mut self, step: usize) -> usize {
+        let rho = self.density_at(step);
+        ((self.d as f64 * rho).round() as usize).clamp(1, self.d.max(1))
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "warmup:{}..{},steps={}",
+            self.from, self.to, self.warmup_steps
+        )
+    }
+}
+
+/// Smallest k whose top-|u| coordinates capture `delta` of ‖u‖²,
+/// estimated from the previous step's |u| histogram (worker 0). The
+/// energy in bin i is approximated as `count_i · center_i²`; walking bins
+/// from the largest magnitude down until the accumulated energy reaches
+/// `delta · Σ energy` yields the count — an O(bins) estimate whose
+/// granularity is the bin width. Starts open-loop at `round(d · k_ratio)`.
+pub struct AdaptiveMass {
+    d: usize,
+    delta: f64,
+    k: usize,
+}
+
+impl AdaptiveMass {
+    pub fn new(d: usize, delta: f64, init_ratio: f64) -> AdaptiveMass {
+        AdaptiveMass {
+            d,
+            delta,
+            k: ((d as f64 * init_ratio).round() as usize).clamp(1, d.max(1)),
+        }
+    }
+}
+
+impl KPolicy for AdaptiveMass {
+    fn k_for_step(&mut self, _step: usize) -> usize {
+        self.k
+    }
+
+    fn observe(&mut self, _step: usize, hist: &Histogram) {
+        if hist.hi <= 1e-12 || hist.total == 0 {
+            // Degenerate |u| ≈ 0 histogram (feedback_histogram floors the
+            // span at 1e-12): no usable energy profile — keep the current
+            // k rather than collapsing the walk into the zero bin.
+            return;
+        }
+        let centers = hist.centers();
+        let mut total = 0.0f64;
+        for (&c, &x) in hist.counts.iter().zip(&centers) {
+            total += c as f64 * x * x;
+        }
+        if total <= 0.0 {
+            return;
+        }
+        let target = self.delta * total;
+        let mut acc = 0.0f64;
+        let mut count = 0u64;
+        for i in (0..hist.counts.len()).rev() {
+            acc += hist.counts[i] as f64 * centers[i] * centers[i];
+            count += hist.counts[i];
+            if acc >= target {
+                break;
+            }
+        }
+        self.k = (count as usize).clamp(1, self.d.max(1));
+    }
+
+    fn wants_feedback(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> String {
+        format!("adaptive:{}", self.delta)
+    }
+}
+
+/// The trainer-facing engine: owns the policy, clamps its output, and
+/// exposes the feedback hook.
+pub struct Scheduler {
+    policy: Box<dyn KPolicy>,
+    d: usize,
+}
+
+impl Scheduler {
+    pub fn new(policy: Box<dyn KPolicy>, d: usize) -> Scheduler {
+        Scheduler { policy, d }
+    }
+
+    /// Resolve a spec into a running scheduler for a d-dimensional model.
+    /// `k_ratio` is the base density (`const` default and the adaptive
+    /// policy's open-loop start); `steps_per_epoch` converts the warmup
+    /// grammar's `epochs=E` into steps.
+    pub fn for_run(
+        spec: &KSchedule,
+        k_ratio: f64,
+        steps_per_epoch: usize,
+        d: usize,
+    ) -> Scheduler {
+        let policy: Box<dyn KPolicy> = match *spec {
+            KSchedule::Const(r) => Box::new(Constant::new(d, r.unwrap_or(k_ratio))),
+            KSchedule::Warmup { from, to, epochs } => Box::new(WarmupDecay::new(
+                d,
+                from,
+                to,
+                epochs.saturating_mul(steps_per_epoch.max(1)),
+            )),
+            KSchedule::Adaptive { delta } => Box::new(AdaptiveMass::new(d, delta, k_ratio)),
+        };
+        Scheduler::new(policy, d)
+    }
+
+    /// The plan for `step`, with `1 ≤ k ≤ d` enforced.
+    pub fn plan(&mut self, step: usize) -> StepPlan {
+        let d = self.d.max(1);
+        let k = self.policy.k_for_step(step).clamp(1, d);
+        StepPlan {
+            k,
+            density: k as f64 / d as f64,
+        }
+    }
+
+    /// Feed worker 0's |u| histogram back to the policy.
+    pub fn observe(&mut self, step: usize, u_abs_hist: &Histogram) {
+        self.policy.observe(step, u_abs_hist);
+    }
+
+    pub fn wants_feedback(&self) -> bool {
+        self.policy.wants_feedback()
+    }
+
+    pub fn name(&self) -> String {
+        self.policy.name()
+    }
+}
+
+/// Build the |u| feedback histogram the adaptive policies consume
+/// (`FEEDBACK_BINS` uniform bins over `[0, max |u|]`).
+pub fn feedback_histogram(u: &[f32]) -> Histogram {
+    let mut span = 0.0f64;
+    for &v in u {
+        span = span.max((v as f64).abs());
+    }
+    let mut h = Histogram::new(0.0, span.max(1e-12), FEEDBACK_BINS);
+    for &v in u {
+        h.push((v as f64).abs());
+    }
+    h
+}
+
+/// The open-loop per-step *density* trace of a schedule, independent of
+/// any concrete model dimension — the input of the netsim scheduled
+/// sweeps ([`crate::cluster::scaling_table_scheduled`]), which quantize
+/// it per model via `round(d · ρ_t)`. `Adaptive` has no open-loop trace
+/// (it needs gradient feedback the cost model cannot provide) and is
+/// reported at its initial density.
+pub fn density_trace(
+    spec: &KSchedule,
+    k_ratio: f64,
+    steps_per_epoch: usize,
+    steps: usize,
+) -> Vec<f64> {
+    (0..steps)
+        .map(|t| match *spec {
+            KSchedule::Const(r) => r.unwrap_or(k_ratio),
+            KSchedule::Warmup { from, to, epochs } => {
+                warmup_density(from, to, epochs.saturating_mul(steps_per_epoch.max(1)), t)
+            }
+            KSchedule::Adaptive { .. } => k_ratio,
+        })
+        .map(|rho| rho.clamp(f64::MIN_POSITIVE, 1.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    #[test]
+    fn grammar_roundtrip_and_errors() {
+        for s in [
+            "const",
+            "const:0.01",
+            "warmup:0.05..0.001,epochs=3",
+            "adaptive:0.95",
+        ] {
+            let spec = KSchedule::parse(s).unwrap();
+            assert_eq!(KSchedule::parse(&spec.name()).unwrap(), spec, "{s}");
+            spec.validate().unwrap();
+        }
+        assert_eq!(KSchedule::parse("CONST").unwrap(), KSchedule::Const(None));
+        for bad in [
+            "",
+            "linear:0.1",
+            "const:0",
+            "const:2.0",
+            "warmup:0.05,epochs=3",
+            "warmup:0.05..0.001",
+            "warmup:0.05..0.001,epochs=0",
+            "warmup:0.05..1.5,epochs=2",
+            "warmup:0.001..0.05,epochs=2", // reversed range: warmup decays
+            "adaptive:0",
+            "adaptive:1.5",
+            "adaptive:x",
+        ] {
+            assert!(KSchedule::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn constant_matches_trainer_expression() {
+        // The exact pre-schedule trainer expression, for a sweep of (d, ratio).
+        for &(d, ratio) in &[(3300usize, 0.001f64), (10, 0.5), (7, 1.0), (1, 0.001)] {
+            let mut c = Constant::new(d, ratio);
+            let want = ((d as f64 * ratio).round() as usize).clamp(1, d);
+            assert_eq!(c.k_for_step(0), want, "d={d} ratio={ratio}");
+            assert_eq!(c.k_for_step(999), want);
+        }
+    }
+
+    #[test]
+    fn warmup_decays_to_target() {
+        let d = 100_000;
+        let mut w = WarmupDecay::new(d, 0.05, 0.001, 10);
+        let ks: Vec<usize> = (0..15).map(|t| w.k_for_step(t)).collect();
+        assert_eq!(ks[0], 5000); // round(d · 0.05)
+        for t in 1..15 {
+            assert!(ks[t] <= ks[t - 1], "k not non-increasing at {t}: {ks:?}");
+        }
+        // Strictly decreasing while the density still moves the rounded k.
+        assert!(ks[1] < ks[0] && ks[5] < ks[4]);
+        assert_eq!(ks[10], 100); // round(d · 0.001) after warmup
+        assert_eq!(ks[14], 100);
+    }
+
+    #[test]
+    fn adaptive_tracks_energy_mass() {
+        // Spiky u: 10 coordinates carry essentially all the energy, so the
+        // adaptive k must collapse toward ~10. Gaussian u spreads energy,
+        // so the same δ needs a much larger k.
+        let d = 20_000;
+        let mut spiky = vec![1e-4f32; d];
+        for i in 0..10 {
+            spiky[i * 7] = 100.0;
+        }
+        let mut p = AdaptiveMass::new(d, 0.9, 0.001);
+        p.observe(0, &feedback_histogram(&spiky));
+        let k_spiky = p.k_for_step(1);
+        assert!(k_spiky <= 200, "spiky k {k_spiky} should be tiny");
+
+        let mut rng = Pcg64::seed(5);
+        let gauss: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let mut p2 = AdaptiveMass::new(d, 0.9, 0.001);
+        p2.observe(0, &feedback_histogram(&gauss));
+        let k_gauss = p2.k_for_step(1);
+        assert!(
+            k_gauss > 10 * k_spiky.max(1),
+            "gaussian k {k_gauss} vs spiky k {k_spiky}"
+        );
+        // All-zero feedback keeps the previous k.
+        let before = p2.k_for_step(2);
+        p2.observe(2, &feedback_histogram(&vec![0.0f32; d]));
+        assert_eq!(p2.k_for_step(3), before);
+    }
+
+    /// Tentpole invariant: every policy yields 1 ≤ k_t ≤ d for random
+    /// dimensions, specs, and (for adaptive) random feedback.
+    #[test]
+    fn prop_policies_stay_in_range() {
+        testkit::forall("kpolicy-range", |g: &mut Gen| {
+            let d = g.usize_in(1, 5000);
+            let ratio = g.f32_in(1e-4, 1.0) as f64;
+            let spec = match g.usize_in(0, 2) {
+                0 => KSchedule::Const(if g.bool() { Some(ratio) } else { None }),
+                1 => KSchedule::Warmup {
+                    from: g.f32_in(1e-3, 1.0) as f64,
+                    to: g.f32_in(1e-4, 1.0) as f64,
+                    epochs: g.usize_in(1, 4),
+                },
+                _ => KSchedule::Adaptive {
+                    delta: g.f32_in(0.1, 1.0) as f64,
+                },
+            };
+            let mut sched = Scheduler::for_run(&spec, ratio, g.usize_in(1, 20), d);
+            let mut rng = Pcg64::seed(g.rng.next_u64());
+            for step in 0..30 {
+                let plan = sched.plan(step);
+                if plan.k < 1 || plan.k > d {
+                    return Err(format!("{}: step {step} k {} ∉ [1, {d}]", sched.name(), plan.k));
+                }
+                let want = plan.k as f64 / d as f64;
+                if (plan.density - want).abs() > 1e-12 {
+                    return Err(format!("density {} != k/d {want}", plan.density));
+                }
+                if sched.wants_feedback() {
+                    let u: Vec<f32> =
+                        (0..d.min(256)).map(|_| rng.next_gaussian() as f32).collect();
+                    sched.observe(step, &feedback_histogram(&u));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn density_trace_shapes() {
+        let spec = KSchedule::parse("warmup:0.016..0.001,epochs=2").unwrap();
+        let trace = density_trace(&spec, 0.001, 3, 12);
+        assert_eq!(trace.len(), 12);
+        assert!((trace[0] - 0.016).abs() < 1e-12);
+        for t in 1..12 {
+            assert!(trace[t] <= trace[t - 1] + 1e-15, "not non-increasing at {t}");
+        }
+        assert!((trace[6] - 0.001).abs() < 1e-12, "post-warmup density");
+        // Const and adaptive traces are flat at the base density.
+        for spec in [KSchedule::Const(None), KSchedule::Adaptive { delta: 0.9 }] {
+            let tr = density_trace(&spec, 0.002, 5, 4);
+            assert!(tr.iter().all(|&r| (r - 0.002).abs() < 1e-15));
+        }
+        let explicit = density_trace(&KSchedule::Const(Some(0.01)), 0.002, 5, 2);
+        assert!((explicit[0] - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scheduler_clamps_degenerate_dims() {
+        // d = 1: every schedule must resolve k = 1.
+        for spec in [
+            KSchedule::Const(Some(0.0001)),
+            KSchedule::Warmup { from: 1.0, to: 0.001, epochs: 1 },
+            KSchedule::Adaptive { delta: 0.5 },
+        ] {
+            let mut s = Scheduler::for_run(&spec, 0.001, 10, 1);
+            assert_eq!(s.plan(0).k, 1);
+            assert_eq!(s.plan(0).density, 1.0);
+        }
+    }
+}

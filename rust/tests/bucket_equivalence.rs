@@ -131,7 +131,7 @@ fn prop_bucketed_ef_mass_conservation() {
         let steps = g.usize_in(1, 6);
         let op = *g.choose(&[OpKind::TopK, OpKind::RandK, OpKind::GaussianK, OpKind::Trimmed]);
         let schedule = BucketSchedule::fixed_bytes(d, bytes, k);
-        let mut w = WorkerState::new(0, d, op, k, g.rng.next_u64());
+        let mut w = WorkerState::new(0, d, op, g.rng.next_u64());
         w.init_buckets(&schedule, op);
         let mut rng = Pcg64::seed(g.rng.next_u64());
         let mut total_g = vec![0.0f64; d];
@@ -142,7 +142,7 @@ fn prop_bucketed_ef_mass_conservation() {
                 *t += x as f64;
             }
             for sp in schedule.specs() {
-                let sent = w.compress_bucket(sp.index, sp.lo, sp.hi);
+                let sent = w.compress_bucket(sp.index, sp.lo, sp.hi, sp.k);
                 if sent.d != sp.len() {
                     return Err(format!("payload d {} != bucket len {}", sent.d, sp.len()));
                 }
@@ -221,6 +221,8 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         global_topk: false,
         parallelism,
         buckets,
+        k_schedule: sparkv::schedule::KSchedule::Const(None),
+        steps_per_epoch: 100,
     }
 }
 

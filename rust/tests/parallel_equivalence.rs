@@ -12,10 +12,14 @@
 //!    (`threaded_training_is_bit_identical_per_operator`).
 
 use sparkv::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
-use sparkv::compress::{Compressor, OpKind, TopK};
+use sparkv::compress::{Compressor, OpKind, TopK, Workspace};
 use sparkv::stats::rng::Pcg64;
 use sparkv::tensor::SparseVec;
 use sparkv::util::testkit::{self, Gen};
+
+fn topk(u: &[f32], k: usize) -> SparseVec {
+    TopK::new().compress_step(u, k, &mut Workspace::new())
+}
 
 fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
     if a.len() != b.len() {
@@ -61,7 +65,7 @@ fn prop_sparse_allgather_engines_bit_identical() {
         let inputs: Vec<SparseVec> = (0..p)
             .map(|_| {
                 let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
-                TopK::new(k).compress(&u)
+                topk(&u, k)
             })
             .collect();
         let a = SerialCollectives.sparse_allgather_avg(&inputs);
@@ -83,7 +87,7 @@ fn prop_gtopk_engines_bit_identical() {
         let inputs: Vec<SparseVec> = (0..p)
             .map(|_| {
                 let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
-                TopK::new(k).compress(&u)
+                topk(&u, k)
             })
             .collect();
         let (da, sa) = SerialCollectives.gtopk_allreduce_avg(&inputs, k);
@@ -111,10 +115,12 @@ fn ring_allreduce_empty_gradient_regression() {
 }
 
 /// Compile-time half of the `Compressor` concurrency contract: every
-/// operator (and the boxed trait object) can move to a worker thread.
+/// operator, the boxed trait object, and the workspace can move to a
+/// worker thread.
 #[test]
 fn compressors_are_send() {
     fn assert_send<T: Send>() {}
+    assert_send::<Workspace>();
     assert_send::<sparkv::compress::Dense>();
     assert_send::<sparkv::compress::TopK>();
     assert_send::<sparkv::compress::RandK>();
@@ -125,9 +131,10 @@ fn compressors_are_send() {
 }
 
 /// Runtime half of the contract: compressing the same u from two threads
-/// with cloned state (same k, same seed) yields identical `SparseVec`s,
-/// with sorted-unique indices and values unchanged from u — so per-worker
-/// compressors are safe to run concurrently in the threaded runtime.
+/// with cloned state (same seed, same per-step k, thread-private
+/// workspaces) yields identical `SparseVec`s, with sorted-unique indices
+/// and values unchanged from u — so per-worker compressors are safe to
+/// run concurrently in the threaded runtime.
 #[test]
 fn prop_compressor_contract_under_concurrency() {
     testkit::forall("compressor-concurrency", |g: &mut Gen| {
@@ -136,14 +143,14 @@ fn prop_compressor_contract_under_concurrency() {
         let seed = g.rng.next_u64();
         let u = g.mixed_vec(d);
         for &op in OpKind::all() {
-            // "Cloned state": two instances built from the same (k, seed).
-            let mut c1 = op.build(k, seed);
-            let mut c2 = op.build(k, seed);
+            // "Cloned state": two instances built from the same seed.
+            let mut c1 = op.build(seed);
+            let mut c2 = op.build(seed);
             let (s1, s2) = std::thread::scope(|s| {
                 let u1 = &u;
                 let u2 = &u;
-                let h1 = s.spawn(move || c1.compress(u1));
-                let h2 = s.spawn(move || c2.compress(u2));
+                let h1 = s.spawn(move || c1.compress_step(u1, k, &mut Workspace::new()));
+                let h2 = s.spawn(move || c2.compress_step(u2, k, &mut Workspace::new()));
                 (
                     h1.join().expect("compress thread 1 panicked"),
                     h2.join().expect("compress thread 2 panicked"),

@@ -133,8 +133,9 @@ fn gaussian_k_kernel_parity_rust_vs_pallas() {
     let resid: Vec<f32> = out[1].to_vec().unwrap();
     let thres: f32 = out[2].get_first_element().unwrap();
 
-    let mut rust_op = GaussianK::new(k);
-    let (rust_thres, rust_count) = rust_op.refined_threshold(&u);
+    let mut rust_op = GaussianK::new();
+    let (rust_thres, rust_count) =
+        rust_op.refined_threshold(&u, k, &mut sparkv::compress::Workspace::new());
     assert!(
         (thres - rust_thres).abs() < 1e-4 * rust_thres.abs().max(1.0),
         "threshold mismatch: pallas {thres} vs rust {rust_thres}"
@@ -181,6 +182,8 @@ fn distributed_training_through_pjrt_learns() {
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        k_schedule: sparkv::schedule::KSchedule::Const(None),
+        steps_per_epoch: 100,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
@@ -265,6 +268,8 @@ fn lm_small_trains_through_pjrt() {
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        k_schedule: sparkv::schedule::KSchedule::Const(None),
+        steps_per_epoch: 100,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;

@@ -1,0 +1,308 @@
+//! The k-schedule invariant suite: locks the PR-3 tentpole guarantees
+//! for the per-step compression plan engine.
+//!
+//! Three layers of defence:
+//! 1. property tests over the plan machinery (every policy resolves
+//!    `1 ≤ k_t ≤ d`; per-step bucket apportionment sums to `min(k_t, d)`
+//!    with per-bucket caps);
+//! 2. error-feedback mass conservation under a *varying-k* run (both the
+//!    monolithic workspace path and the bucketed per-step apportionment);
+//! 3. end-to-end trainer contracts: `const:K` is bit-identical to the
+//!    default `k_ratio` path for every operator × {serial, threads:4}
+//!    (the pre-refactor trainer IS the default path), and warmup /
+//!    adaptive schedules keep the serial/threaded bit-identity while
+//!    producing the documented density traces.
+
+use sparkv::buckets::BucketSchedule;
+use sparkv::compress::{OpKind, Workspace};
+use sparkv::config::{Buckets, Parallelism, TrainConfig};
+use sparkv::coordinator::{train, TrainOutput, WorkerState};
+use sparkv::data::GaussianMixture;
+use sparkv::models::NativeMlp;
+use sparkv::schedule::{KSchedule, Scheduler};
+use sparkv::stats::rng::Pcg64;
+use sparkv::util::testkit::{self, Gen};
+
+// ---------------------------------------------------------------------
+// Layer 1: plan machinery properties.
+// ---------------------------------------------------------------------
+
+/// Every policy × random dimensions: `1 ≤ k_t ≤ d` at every step, and the
+/// per-step bucket apportionment of k_t sums to `min(k_t, d)` with
+/// per-bucket caps — the wire-budget contract of a scheduled bucketed
+/// step.
+#[test]
+fn prop_per_step_apportionment_sums_to_plan_k() {
+    testkit::forall("schedule-apportion", |g: &mut Gen| {
+        let d = g.usize_in(1, 800);
+        let ratio = g.f32_in(1e-3, 1.0) as f64;
+        let spec = *g.choose(&[
+            KSchedule::Const(None),
+            KSchedule::Const(Some(0.05)),
+            KSchedule::Warmup { from: 0.5, to: 0.005, epochs: 2 },
+        ]);
+        let schedule = BucketSchedule::fixed_bytes(d, 4 * g.usize_in(1, 64), d.min(8));
+        let mut sched = Scheduler::for_run(&spec, ratio, g.usize_in(1, 10), d);
+        for step in 0..12 {
+            let plan = sched.plan(step);
+            if plan.k < 1 || plan.k > d {
+                return Err(format!("step {step}: k {} ∉ [1, {d}]", plan.k));
+            }
+            let ks = schedule.apportion_k(plan.k);
+            let total: usize = ks.iter().sum();
+            if total != plan.k.min(d) {
+                return Err(format!("step {step}: Σk_b {total} != min({}, {d})", plan.k));
+            }
+            for (&kb, sp) in ks.iter().zip(schedule.specs()) {
+                if kb > sp.len() {
+                    return Err(format!("bucket {}: k_b {kb} > len {}", sp.index, sp.len()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Layer 2: EF mass conservation under varying k.
+// ---------------------------------------------------------------------
+
+/// Monolithic varying-k EF: across T steps whose k follows a decaying
+/// schedule, Σ sent + ε_T == Σ g exactly, coordinate-wise, for every
+/// operator (the workspace-based `compress_step` must not leak or
+/// duplicate mass when k moves between calls).
+#[test]
+fn prop_varying_k_ef_mass_conservation() {
+    testkit::forall("varying-k-ef-mass", |g: &mut Gen| {
+        let d = g.usize_in(8, 300);
+        let steps = g.usize_in(2, 8);
+        let op = *g.choose(&[OpKind::TopK, OpKind::RandK, OpKind::GaussianK, OpKind::Trimmed]);
+        let mut comp = op.build(g.rng.next_u64());
+        let mut ws = Workspace::new();
+        let mut store = sparkv::error_feedback::ResidualStore::new(d);
+        let mut rng = Pcg64::seed(g.rng.next_u64());
+        let mut total_g = vec![0.0f64; d];
+        let mut total_sent = vec![0.0f64; d];
+        for t in 0..steps {
+            // A per-step k that moves: halving decay with an occasional 0.
+            let k = if g.bool() && t > 0 { 0 } else { (d >> t).max(1) };
+            let grad: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            for (acc, &x) in total_g.iter_mut().zip(&grad) {
+                *acc += x as f64;
+            }
+            let sent = store.step(&grad, comp.as_mut(), k, &mut ws);
+            for (&i, &v) in sent.indices.iter().zip(&sent.values) {
+                total_sent[i as usize] += v as f64;
+            }
+            ws.recycle(sent);
+        }
+        for i in 0..d {
+            let lhs = total_sent[i] + store.residual()[i] as f64;
+            if (lhs - total_g[i]).abs() > 1e-3 {
+                return Err(format!(
+                    "op {:?} coord {i}: sent+resid {lhs} != Σg {}",
+                    op, total_g[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bucketed varying-k EF: the per-step re-apportionment path conserves
+/// mass too (buckets whose k_b hits 0 absorb their slice into ε).
+#[test]
+fn prop_bucketed_varying_k_mass_conservation() {
+    testkit::forall("bucketed-varying-k-mass", |g: &mut Gen| {
+        let d = g.usize_in(4, 200);
+        let steps = g.usize_in(2, 6);
+        let op = *g.choose(&[OpKind::TopK, OpKind::RandK, OpKind::GaussianK]);
+        let schedule = BucketSchedule::fixed_bytes(d, 4 * g.usize_in(1, 40), d.min(4));
+        let mut w = WorkerState::new(0, d, op, g.rng.next_u64());
+        w.init_buckets(&schedule, op);
+        let mut rng = Pcg64::seed(g.rng.next_u64());
+        let mut total_g = vec![0.0f64; d];
+        let mut total_sent = vec![0.0f64; d];
+        for t in 0..steps {
+            let k_t = (d >> t).max(1).min(d);
+            let ks = schedule.apportion_k(k_t);
+            w.grad = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            for (acc, &x) in total_g.iter_mut().zip(&w.grad) {
+                *acc += x as f64;
+            }
+            let mut sent_this_step = 0usize;
+            for sp in schedule.specs() {
+                let sent = w.compress_bucket(sp.index, sp.lo, sp.hi, ks[sp.index]);
+                sent_this_step += sent.nnz();
+                for (&i, &v) in sent.indices.iter().zip(&sent.values) {
+                    total_sent[sp.lo + i as usize] += v as f64;
+                }
+            }
+            // Exact-selection ops fill the whole budget.
+            if (op == OpKind::TopK || op == OpKind::RandK) && sent_this_step != k_t.min(d) {
+                return Err(format!("step {t}: sent {sent_this_step} != k_t {k_t}"));
+            }
+        }
+        for i in 0..d {
+            let lhs = total_sent[i] + w.residual.residual()[i] as f64;
+            if (lhs - total_g[i]).abs() > 1e-3 {
+                return Err(format!(
+                    "op {:?} coord {i}: sent+resid {lhs} != Σg {}",
+                    op, total_g[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Layer 3: end-to-end trainer contracts.
+// ---------------------------------------------------------------------
+
+fn cfg(op: OpKind, schedule: KSchedule, parallelism: Parallelism) -> TrainConfig {
+    TrainConfig {
+        workers: 8,
+        op,
+        k_ratio: 0.002,
+        batch_size: 32,
+        steps: 25,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: 7,
+        eval_every: 12,
+        hist_every: 0,
+        momentum_correction: false,
+        global_topk: false,
+        parallelism,
+        buckets: Buckets::None,
+        k_schedule: schedule,
+        steps_per_epoch: 4,
+    }
+}
+
+fn assert_runs_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.final_params, b.final_params, "{what}: final params diverged");
+    assert_eq!(a.metrics.steps.len(), b.metrics.steps.len(), "{what}");
+    for (sa, sb) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(
+            sa.loss.to_bits(),
+            sb.loss.to_bits(),
+            "{what}: step {} loss diverged",
+            sa.step
+        );
+        assert_eq!(
+            sa.sent_elements, sb.sent_elements,
+            "{what}: step {} sends diverged",
+            sa.step
+        );
+        assert_eq!(
+            sa.density.to_bits(),
+            sb.density.to_bits(),
+            "{what}: step {} density diverged",
+            sa.step
+        );
+    }
+}
+
+/// The tentpole bit-identity contract: `k_schedule = const:K` (K ==
+/// k_ratio) reproduces the default path — which is the pre-refactor
+/// trainer — bit for bit, for every operator and both runtimes.
+#[test]
+fn const_schedule_is_bit_identical_to_default_per_operator() {
+    let data = GaussianMixture::new(32, 10, 2.0, 1.0, 41);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    for &op in OpKind::all() {
+        for parallelism in [Parallelism::Serial, Parallelism::Threads(4)] {
+            let default_run =
+                train(cfg(op, KSchedule::Const(None), parallelism), &mut model, &data).unwrap();
+            let explicit = train(
+                cfg(op, KSchedule::Const(Some(0.002)), parallelism),
+                &mut model,
+                &data,
+            )
+            .unwrap();
+            assert_runs_bit_identical(
+                &default_run,
+                &explicit,
+                &format!("{} {}", op.name(), parallelism.name()),
+            );
+        }
+    }
+}
+
+/// Scheduled runs keep the serial/threaded bit-identity (the plan is
+/// resolved on the coordinator; feedback folds in rank order), on both
+/// the monolithic and the bucketed exchange.
+#[test]
+fn scheduled_runs_are_runtime_bit_identical() {
+    let data = GaussianMixture::new(32, 10, 2.0, 1.0, 42);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    for schedule in [
+        KSchedule::Warmup { from: 0.05, to: 0.002, epochs: 3 },
+        KSchedule::Adaptive { delta: 0.8 },
+    ] {
+        for buckets in [Buckets::None, Buckets::Bytes(512)] {
+            let mut serial_cfg = cfg(OpKind::TopK, schedule, Parallelism::Serial);
+            serial_cfg.buckets = buckets;
+            let mut piped_cfg = serial_cfg.clone();
+            piped_cfg.parallelism = Parallelism::Threads(3); // uneven split of 8
+            let a = train(serial_cfg, &mut model, &data).unwrap();
+            let b = train(piped_cfg, &mut model, &data).unwrap();
+            assert_runs_bit_identical(
+                &a,
+                &b,
+                &format!("{} buckets={}", schedule.name(), buckets.name()),
+            );
+        }
+    }
+}
+
+/// Warmup over the bucketed exchange: the per-step wire budget follows
+/// the decaying k_t exactly for exact-selection operators, and the
+/// density trace lands in the metrics.
+#[test]
+fn bucketed_warmup_budget_tracks_plan() {
+    let data = GaussianMixture::new(16, 4, 2.5, 1.0, 43);
+    let mut model = NativeMlp::new(&[16, 64, 32, 4]);
+    let mut c = cfg(
+        OpKind::TopK,
+        KSchedule::Warmup { from: 0.1, to: 0.01, epochs: 4 },
+        Parallelism::Serial,
+    );
+    c.workers = 4;
+    c.buckets = Buckets::Layers;
+    let out = train(c, &mut model, &data).unwrap();
+    let d = model.layout().total();
+    for s in &out.metrics.steps {
+        // density == k_t/d, and TopK sends exactly k_t per worker even
+        // when k_t is re-apportioned across layer buckets.
+        let k_t = (s.density * d as f64).round() as u64;
+        assert_eq!(s.sent_elements, k_t * 4, "step {}", s.step);
+        assert_eq!(s.target_elements, k_t * 4, "step {}", s.step);
+    }
+    let dens = out.metrics.density_trace();
+    assert!(dens[0] > *dens.last().unwrap(), "no decay: {dens:?}");
+    for w in dens.windows(2) {
+        assert!(w[1] <= w[0] + 1e-12, "density rose: {dens:?}");
+    }
+}
+
+/// Adaptive + gTop-k + momentum correction compose with the schedule
+/// engine (the aggregation re-truncates to the *per-step* k_t).
+#[test]
+fn adaptive_composes_with_gtopk_and_momentum() {
+    let data = GaussianMixture::new(32, 10, 2.0, 1.0, 44);
+    let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+    let mut c = cfg(OpKind::TopK, KSchedule::Adaptive { delta: 0.6 }, Parallelism::Serial);
+    c.global_topk = true;
+    c.momentum_correction = true;
+    let out = train(c, &mut model, &data).unwrap();
+    // Trained without panicking, k stayed in range, and sends never
+    // exceeded the per-step target (gTop-k caps at k_t per worker).
+    for s in &out.metrics.steps {
+        assert!(s.density > 0.0 && s.density <= 1.0);
+        assert_eq!(s.sent_elements, s.target_elements);
+    }
+}

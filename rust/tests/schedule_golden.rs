@@ -1,0 +1,186 @@
+//! Golden regression for the *scheduled* scaling table: snapshots
+//! `ScheduledTable::to_json()` for a fixed warmup-style density trace and
+//! asserts field-level equality against `tests/golden/table2_scheduled.json`
+//! — the time-varying-density twin of `tests/netsim_golden.rs`.
+//!
+//! The scheduled sweep composes the per-step plan densities with the
+//! calibrated cost model, so drift in *either* (a nudged α, a changed
+//! per-element cost, a reordered accumulation in the sweep) skews every
+//! scheduled cell while the ordering-style tests stay green. This test
+//! pins the exact values: any change fails CI until the golden file is
+//! consciously regenerated.
+//!
+//! The trace is a literal (not a `KPolicy` output) on purpose: policy
+//! math involving `powf` is platform-sensitive in the last ulp and has
+//! its own tolerance-based tests; the golden pins the deterministic
+//! cost-model arithmetic under a time-varying density.
+//!
+//! Regenerate after an *intentional* calibration change with:
+//! `SPARKV_UPDATE_GOLDEN=1 cargo test -q --test schedule_golden`
+
+use sparkv::cluster::scaling_table_scheduled;
+use sparkv::compress::OpKind;
+use sparkv::config::Parallelism;
+use sparkv::netsim::{ComputeProfile, Topology};
+use sparkv::util::json::Json;
+
+/// A 12-step warmup-shaped decay, 1.6% → the paper's 0.1% density.
+const TRACE: &[f64] = &[
+    0.016, 0.012, 0.008, 0.006, 0.004, 0.003, 0.002, 0.0015, 0.001, 0.001, 0.001, 0.001,
+];
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("table2_scheduled.json")
+}
+
+fn current_table_json() -> Json {
+    let models = [
+        ComputeProfile::by_name("resnet50").unwrap(),
+        ComputeProfile::by_name("vgg16").unwrap(),
+    ];
+    let table = scaling_table_scheduled(
+        &models,
+        &[OpKind::Dense, OpKind::TopK, OpKind::GaussianK],
+        &Topology::paper_16gpu(),
+        TRACE,
+        Parallelism::Serial,
+    );
+    // Round-trip through the serializer so the comparison sees exactly
+    // what a results/ emitter would write (f64 Display is shortest-
+    // roundtrip, so no precision is lost).
+    Json::parse(&table.to_json().to_string()).expect("self-emitted json must parse")
+}
+
+const SCALAR_FIELDS: &[&str] = &[
+    "comm_s",
+    "first_density",
+    "last_density",
+    "mean_density",
+    "mean_iter_s",
+    "select_s",
+    "steps",
+    "total_time_s",
+];
+
+const SERIES_FIELDS: &[&str] = &["densities", "iter_times_s"];
+
+#[test]
+fn scheduled_table_matches_golden_snapshot() {
+    let current = current_table_json();
+    let path = golden_path();
+    if std::env::var("SPARKV_UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{current}\n")).unwrap();
+        eprintln!("rewrote {}", path.display());
+        return;
+    }
+    let golden_text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {}: {e}", path.display()));
+    let golden = Json::parse(&golden_text).expect("golden file must be valid json");
+
+    let (cur, gold) = (
+        current.as_arr().expect("table json is an array"),
+        golden.as_arr().expect("golden json is an array"),
+    );
+    assert_eq!(cur.len(), gold.len(), "cell count drifted");
+    let close = |cv: f64, gv: f64| (cv - gv).abs() <= 1e-12 + 1e-9 * gv.abs();
+    for (i, (c, g)) in cur.iter().zip(gold).enumerate() {
+        let ident = |j: &Json, key: &str| {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| panic!("cell {i}: missing '{key}'"))
+        };
+        let (model, op) = (ident(g, "model"), ident(g, "op"));
+        assert_eq!(ident(c, "model"), model, "cell {i}: model order drifted");
+        assert_eq!(ident(c, "op"), op, "cell {i}: op order drifted");
+        for &field in SCALAR_FIELDS {
+            let num = |j: &Json| {
+                j.get(field)
+                    .and_then(Json::as_f64)
+                    .unwrap_or_else(|| panic!("{model}/{op}: missing numeric '{field}'"))
+            };
+            let (cv, gv) = (num(c), num(g));
+            assert!(
+                close(cv, gv),
+                "{model}/{op}: scheduled cost-model drift in '{field}': {cv} vs golden {gv} \
+                 (rerun with SPARKV_UPDATE_GOLDEN=1 only if the calibration change is intentional)"
+            );
+        }
+        for &field in SERIES_FIELDS {
+            let arr = |j: &Json| -> Vec<f64> {
+                j.get(field)
+                    .and_then(Json::as_arr)
+                    .unwrap_or_else(|| panic!("{model}/{op}: missing series '{field}'"))
+                    .iter()
+                    .map(|v| v.as_f64().expect("numeric series"))
+                    .collect()
+            };
+            let (cv, gv) = (arr(c), arr(g));
+            assert_eq!(cv.len(), gv.len(), "{model}/{op}: '{field}' length drifted");
+            for (t, (a, b)) in cv.iter().zip(&gv).enumerate() {
+                assert!(
+                    close(*a, *b),
+                    "{model}/{op}: '{field}'[{t}] drifted: {a} vs golden {b}"
+                );
+            }
+        }
+        // Field-set equality both ways: new or dropped fields must also
+        // show up as drift, not silently pass.
+        let keys = |j: &Json| -> Vec<String> {
+            j.as_obj()
+                .expect("cell is an object")
+                .keys()
+                .cloned()
+                .collect()
+        };
+        assert_eq!(keys(c), keys(g), "{model}/{op}: field set drifted");
+    }
+}
+
+/// The golden file itself stays physically sensible (guards against
+/// regenerating the snapshot from a silently-broken model): the dense
+/// head of the trace costs more than the sparse tail, the dense-op cell
+/// is density-invariant, and the scheduled total undercuts a
+/// constant-at-ρ₀ run.
+#[test]
+fn golden_scheduled_snapshot_is_physical() {
+    let golden_text = std::fs::read_to_string(golden_path()).expect("golden file present");
+    let golden = Json::parse(&golden_text).unwrap();
+    let cell = |model: &str, op: &str| -> Vec<f64> {
+        golden
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|c| {
+                c.get("model").and_then(Json::as_str) == Some(model)
+                    && c.get("op").and_then(Json::as_str) == Some(op)
+            })
+            .unwrap_or_else(|| panic!("golden missing {model}/{op}"))
+            .get("iter_times_s")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+    for model in ["resnet50", "vgg16"] {
+        let topk = cell(model, "topk");
+        assert!(
+            topk.first().unwrap() > topk.last().unwrap(),
+            "{model}/topk: warmup head should cost more than the sparse tail"
+        );
+        let dense = cell(model, "dense");
+        assert!(
+            (dense.first().unwrap() - dense.last().unwrap()).abs() < 1e-15,
+            "{model}/dense: dense cells must be density-invariant"
+        );
+        // Scheduled total < 12 × the head-density iteration (the decay
+        // must actually be saving simulated wall time).
+        let total: f64 = topk.iter().sum();
+        assert!(total < 12.0 * topk[0], "{model}/topk: no saving vs ρ₀");
+    }
+}
