@@ -7,7 +7,7 @@
 //!       [--nodes 4 --gpus 4] [--k-ratio 0.001] \
 //!       [--network 10g|25g|100g] [--stragglers 0.0] \
 //!       [--k-schedule warmup:0.016..0.001,epochs=2] [--sched-steps 48] \
-//!       [--steps-per-epoch 12] \
+//!       [--steps-per-epoch 12] [--parallelism serial|threads:N|pool:N] \
 //!       [--sweep-workers] [--out results/table2.json]
 //!
 //! `--sweep-workers` prints efficiency vs cluster size (the scalability
@@ -15,11 +15,21 @@
 //! `--k-schedule` additionally replays every (model, op) cell over the
 //! schedule's per-step density trace (the time-varying-density cost
 //! model) and writes `results/table2_scheduled.json`.
+//! `--parallelism` selects the worker runtime for the scheduled sweep's
+//! cell fan-out AND runs a short *real* training loop under serial /
+//! threads / the requested runtime, printing the measured per-step
+//! `spawn_or_dispatch_us` — the pooled-vs-scoped launch overhead, not a
+//! cost-model projection.
 
 use sparkv::cluster::{scaling_table, scaling_table_scheduled};
 use sparkv::compress::OpKind;
-use sparkv::config::Parallelism;
-use sparkv::netsim::{ComputeProfile, LinkSpec, SimConfig, Simulator, Topology};
+use sparkv::config::{Parallelism, TrainConfig};
+use sparkv::coordinator::train;
+use sparkv::data::GaussianMixture;
+use sparkv::models::NativeMlp;
+use sparkv::netsim::{
+    runtime_overhead_s, ComputeProfile, LinkSpec, SimConfig, Simulator, Topology,
+};
 use sparkv::schedule::{density_trace, KSchedule};
 use sparkv::util::cli::Args;
 
@@ -29,6 +39,10 @@ fn main() -> anyhow::Result<()> {
     let nodes: usize = args.get_parsed_or("nodes", 4);
     let gpus: usize = args.get_parsed_or("gpus", 4);
     let k_ratio: f64 = args.get_parsed_or("k-ratio", 0.001);
+    let parallelism = match args.get("parallelism") {
+        Some(s) => Parallelism::parse(s)?,
+        None => Parallelism::Serial,
+    };
     let inter = match args.get_or("network", "10g").as_str() {
         "10g" => LinkSpec::ethernet_10g(),
         "25g" => LinkSpec::ethernet_25g(),
@@ -87,6 +101,7 @@ fn main() -> anyhow::Result<()> {
             straggler_sigma: args.get_parsed_or("stragglers", 0.0),
             seed: 1,
             buckets: 1,
+            host_overhead_s: runtime_overhead_s(parallelism, topo.world_size()),
         };
         let b = Simulator::new(cfg).mean_iteration(20);
         println!(
@@ -134,7 +149,7 @@ fn main() -> anyhow::Result<()> {
             &ops,
             &topo,
             &trace,
-            Parallelism::Serial,
+            parallelism,
         );
         println!(
             "\nscheduled sweep — {} over {steps} virtual steps (ρ {:.5} → {:.5}):\n{}",
@@ -146,6 +161,41 @@ fn main() -> anyhow::Result<()> {
         std::fs::create_dir_all("results")?;
         std::fs::write("results/table2_scheduled.json", scheduled.to_json().to_string())?;
         println!("wrote results/table2_scheduled.json");
+    }
+
+    if args.get("parallelism").is_some() {
+        // Measured (not modelled) launch overhead: a short real training
+        // run per runtime, reporting the mean per-step spawn/dispatch
+        // microseconds from the StepRecord trace. The netsim twin of this
+        // number is `runtime_overhead_s` above.
+        println!(
+            "\nmeasured per-step launch overhead (send/spawn side; real trainer, \
+             8 workers × 40 steps):"
+        );
+        let data = GaussianMixture::new(16, 4, 2.5, 1.0, 11);
+        let mut seen = std::collections::BTreeSet::new();
+        let runtimes: Vec<Parallelism> =
+            [Parallelism::Serial, Parallelism::Threads(parallelism.threads()), parallelism]
+                .into_iter()
+                .filter(|rt| seen.insert(rt.name()))
+                .collect();
+        for rt in runtimes {
+            let mut model = NativeMlp::new(&[16, 64, 32, 4]);
+            let cfg = TrainConfig {
+                workers: 8,
+                steps: 40,
+                eval_every: 0,
+                parallelism: rt,
+                ..TrainConfig::default()
+            };
+            let out = train(cfg, &mut model, &data)?;
+            println!(
+                "  {:<12} {:>9.1} µs/step (mean wall {:>8.1} µs)",
+                rt.name(),
+                out.metrics.mean_spawn_or_dispatch_us(),
+                out.metrics.step_time.mean() * 1e6,
+            );
+        }
     }
 
     let out_path = args.get_or("out", "results/table2.json");

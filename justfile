@@ -9,9 +9,10 @@ lint:
     cd rust && cargo fmt --check && cargo clippy --all-targets -- -D warnings
 
 # The nightly CI configuration, locally: 4× property-test cases for every
-# testkit::forall invariant (serial/threaded equivalence, compressor
-# contracts, error-feedback mass conservation, and the k-schedule
-# property suite in tests/schedule_equivalence.rs).
+# testkit::forall invariant (serial/threaded/pooled equivalence, compressor
+# contracts, error-feedback mass conservation, the k-schedule property
+# suite in tests/schedule_equivalence.rs, and the worker-pool suite in
+# tests/pool_equivalence.rs).
 test-heavy:
     cd rust && cargo build --release && SPARKV_PROPTEST_CASES=256 cargo test -q
 
@@ -22,6 +23,14 @@ bench-smoke:
     cd rust && cargo build --benches
     cd rust && cargo run --release --example scaling_sim -- \
         --k-schedule warmup:0.016..0.001,epochs=2 --sched-steps 24 --steps-per-epoch 6
+
+# The pool axis of bench-smoke: the same scheduled sweep driven through
+# the persistent worker-pool runtime, plus the real measured
+# spawn-vs-dispatch comparison the --parallelism flag enables.
+pool-smoke:
+    cd rust && cargo run --release --example scaling_sim -- \
+        --k-schedule warmup:0.016..0.001,epochs=2 --sched-steps 24 --steps-per-epoch 6 \
+        --parallelism pool:4
 
 # Fast bench pass (reduced dimension sweep).
 bench-fast:

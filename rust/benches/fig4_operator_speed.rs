@@ -6,6 +6,8 @@
 use sparkv::buckets::{run_pipelined, BucketSchedule};
 use sparkv::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
 use sparkv::compress::{Compressor, OpKind, TopK, Workspace};
+use sparkv::coordinator::WorkerPool;
+use sparkv::models::{Model, NativeMlp};
 use sparkv::stats::rng::Pcg64;
 use sparkv::util::benchkit::Bench;
 
@@ -210,6 +212,46 @@ fn main() -> anyhow::Result<()> {
             "VIOLATED"
         },
     );
+
+    // Runtime-launch section: the per-step cost the persistent pool
+    // retires. Scoped = spawn + join N no-op threads, which is exactly
+    // what `threads:N` pays every training step before any work happens;
+    // pooled = one ping round-trip through an N-thread WorkerPool (one
+    // job send + one result recv per thread — a pooled step's dispatch).
+    // Real wall-clock on this host, the measured twin of netsim's
+    // `runtime_overhead_s` model and of the trainer's per-step
+    // `spawn_or_dispatch_us` trace field.
+    let n_rt = 4usize;
+    let proto = NativeMlp::new(&[8, 8, 4]);
+    let pool = WorkerPool::spawn(
+        (0..n_rt)
+            .map(|_| proto.fork().expect("native mlp forks"))
+            .collect(),
+    );
+    let t_spawn = bench.run("runtime/scoped-spawn/n=4", || {
+        std::thread::scope(|s| {
+            for _ in 0..n_rt {
+                s.spawn(|| std::hint::black_box(0u64));
+            }
+        });
+    });
+    let t_dispatch = bench.run("runtime/pool-dispatch/n=4", || {
+        std::hint::black_box(pool.ping());
+    });
+    println!(
+        "\nworker-runtime launch cost, n = {n_rt} threads (per step):\n\
+         \x20 scoped spawn+join {}\n\
+         \x20 pool dispatch     {}   ({:.1}× cheaper) — {}",
+        sparkv::util::human_secs(t_spawn),
+        sparkv::util::human_secs(t_dispatch),
+        t_spawn / t_dispatch,
+        if t_dispatch < t_spawn {
+            "OK (pool retires the spawn cost)"
+        } else {
+            "VIOLATED"
+        },
+    );
+    drop(pool);
 
     bench.write_json("results/fig4_operator_speed.json")?;
     println!("\nwrote results/fig4_operator_speed.json");

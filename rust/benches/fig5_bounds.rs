@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         global_topk: false,
         parallelism: sparkv::config::Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
     };

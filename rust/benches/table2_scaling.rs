@@ -3,10 +3,12 @@
 //! the simulated 16× V100 / 10 GbE cluster, printed side-by-side with the
 //! paper's published numbers.
 
-use sparkv::cluster::{scaling_table_bucketed, scaling_table_par, scaling_table_scheduled};
+use sparkv::cluster::{
+    scaling_table_bucketed, scaling_table_par, scaling_table_runtime, scaling_table_scheduled,
+};
 use sparkv::compress::OpKind;
 use sparkv::config::Parallelism;
-use sparkv::netsim::{ComputeProfile, Topology};
+use sparkv::netsim::{runtime_overhead_s, ComputeProfile, Topology};
 use sparkv::schedule::{density_trace, KSchedule};
 
 /// The paper's Table 2 (iteration time, seconds). `None` = cell not
@@ -155,6 +157,56 @@ fn main() -> anyhow::Result<()> {
             c.op.name(),
             c.iter_time_s,
             c.overlap_saved_s * 1e3
+        );
+    }
+
+    // Worker-runtime overhead (the POOL trajectory): the same sweep with
+    // the per-step host overhead of a scoped-thread runtime vs the
+    // persistent worker pool folded into every iteration
+    // (`SimConfig::host_overhead_s`). The absolute numbers are the
+    // calibrated end-to-end spawn/dispatch constants × 16 workers; the
+    // point is the per-step delta the pool retires — compare with the
+    // *measured* `spawn_or_dispatch_us` that `scaling_sim --parallelism
+    // pool:N` prints from a real trainer run (launch-side only, so a
+    // lower bound on these modelled costs).
+    let spawn_oh = runtime_overhead_s(Parallelism::Threads(16), 16);
+    let pool_oh = runtime_overhead_s(Parallelism::Pool(16), 16);
+    let spawned = scaling_table_runtime(
+        &ComputeProfile::paper_models(),
+        &ops,
+        &topo,
+        0.001,
+        1,
+        parallelism,
+        spawn_oh,
+    );
+    let pooled = scaling_table_runtime(
+        &ComputeProfile::paper_models(),
+        &ops,
+        &topo,
+        0.001,
+        1,
+        parallelism,
+        pool_oh,
+    );
+    println!(
+        "\nworker-runtime overhead — threads:16 (spawn/step {:.0} µs) vs pool:16 \
+         (dispatch/step {:.1} µs), iteration time, s:",
+        spawn_oh * 1e6,
+        pool_oh * 1e6
+    );
+    println!(
+        "{:<14}{:<11}{:>11} {:>11} {:>11}",
+        "model", "op", "spawned", "pooled", "saved/step"
+    );
+    for c in &pooled.cells {
+        let sp = spawned.cell(&c.model, c.op).unwrap().iter_time_s;
+        println!(
+            "{:<14}{:<11}{sp:>11.4} {:>11.4} {:>9.1}µs",
+            c.model,
+            c.op.name(),
+            c.iter_time_s,
+            (sp - c.iter_time_s) * 1e6
         );
     }
 

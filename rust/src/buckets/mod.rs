@@ -14,6 +14,9 @@
 //! * [`run_pipelined`] — a two-stage, double-buffered producer/consumer
 //!   pipeline: the producer compresses bucket `i + 1` on its own thread
 //!   while the consumer runs the ring exchange for bucket `i`.
+//!   [`run_pipelined_return`] adds a **payload return channel** so spent
+//!   O(k) payload buffers flow back to the producer for recycling — the
+//!   bucketed twin of the monolithic path's workspace recycling.
 //!
 //! ## Per-bucket `k` apportionment
 //!
@@ -25,6 +28,13 @@
 //! top-k mass is spread across layers roughly in proportion to layer size —
 //! and guarantees `Σ_b k_b == min(k, d)` exactly, with `k_b ≤ d_b` per
 //! bucket, so the wire budget of a bucketed step equals the monolithic one.
+//!
+//! The `bucket_apportion = mass` knob swaps the size weights for worker
+//! 0's per-bucket ‖u‖² shares ([`BucketSchedule::apportion_k_by_mass`],
+//! built on [`apportion_k_weighted`]) — the Adaptive Top-K observation
+//! that layers with more gradient energy deserve more of the budget. The
+//! Σ/cap guarantees are identical, so the wire budget never changes, only
+//! its distribution.
 //!
 //! ## The determinism guarantee under pipelining
 //!
@@ -180,6 +190,27 @@ impl BucketSchedule {
     pub fn apportion_k(&self, k_t: usize) -> Vec<usize> {
         apportion_k(&self.sizes, k_t)
     }
+
+    /// Adaptive (Adaptive Top-K style) re-apportionment: split the
+    /// per-step budget `k_t` proportionally to `per_bucket_mass` — worker
+    /// 0's per-bucket error-compensated gradient energy ‖u_b‖², one entry
+    /// per schedule bucket — with the same largest-remainder rounding and
+    /// per-bucket size caps as [`BucketSchedule::apportion_k`], so
+    /// `Σ = min(k_t, d)` and `k_b ≤ d_b` always hold.
+    ///
+    /// Degenerate statistics fall back to the size-proportional split:
+    /// a length mismatch, any non-finite mass, or total mass ≤ 0 (an
+    /// all-zero gradient — nothing to steer by). The fallback keeps the
+    /// wire budget intact on the steps where stats are absent.
+    pub fn apportion_k_by_mass(&self, k_t: usize, per_bucket_mass: &[f64]) -> Vec<usize> {
+        let degenerate = per_bucket_mass.len() != self.sizes.len()
+            || per_bucket_mass.iter().any(|m| !m.is_finite() || *m < 0.0)
+            || per_bucket_mass.iter().sum::<f64>() <= 0.0;
+        if degenerate {
+            return apportion_k(&self.sizes, k_t);
+        }
+        apportion_k_weighted(&self.sizes, per_bucket_mass, k_t)
+    }
 }
 
 /// Split the global budget `k` across buckets of the given sizes with the
@@ -230,6 +261,73 @@ pub fn apportion_k(sizes: &[usize], k: usize) -> Vec<usize> {
     ks
 }
 
+/// Largest-remainder apportionment over arbitrary non-negative f64
+/// weights (the mass-proportional variant of [`apportion_k`]): bucket b
+/// gets `⌊k·w_b/W⌋` slots (capped at its size), and leftover slots go to
+/// the largest fractional remainders (ties → lower index), skipping full
+/// buckets. Guarantees `Σ k_b == min(k, Σ d_b)` and `k_b ≤ d_b` for any
+/// weight vector with `W > 0`; fully deterministic (f64 quotas are pure
+/// arithmetic, ties break by index).
+///
+/// Callers must pre-screen degenerate weights
+/// ([`BucketSchedule::apportion_k_by_mass`] falls back to the size split);
+/// here `W ≤ 0` simply yields the zero assignment after the capacity
+/// round-robin fills from bucket 0 — never a panic.
+pub fn apportion_k_weighted(sizes: &[usize], weights: &[f64], k: usize) -> Vec<usize> {
+    debug_assert_eq!(sizes.len(), weights.len());
+    let d: usize = sizes.iter().sum();
+    if d == 0 || sizes.is_empty() {
+        return vec![0; sizes.len()];
+    }
+    let k = k.min(d);
+    let total_w: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    // Zero/invalid total weight: all quotas 0, the round-robin below fills
+    // the whole budget in index order (still exact and deterministic).
+    let quota = |i: usize| -> f64 {
+        let w = weights[i];
+        if total_w > 0.0 && w.is_finite() && w > 0.0 {
+            k as f64 * (w / total_w)
+        } else {
+            0.0
+        }
+    };
+    let mut ks: Vec<usize> = (0..sizes.len())
+        .map(|i| (quota(i).floor() as usize).min(sizes[i]))
+        .collect();
+    let mut assigned: usize = ks.iter().sum();
+    // Paranoia against f64 rounding pushing Σ⌊quota⌋ past k: shave from
+    // the highest-index non-empty assignment (unreachable in practice,
+    // but the Σ == min(k, d) contract must hold unconditionally).
+    while assigned > k {
+        let i = ks.iter().rposition(|&x| x > 0).expect("assigned > k implies a non-zero entry");
+        ks[i] -= 1;
+        assigned -= 1;
+    }
+    let mut leftover = k - assigned;
+    if leftover == 0 {
+        return ks;
+    }
+    // Largest fractional remainder first; ties broken by lower index.
+    // f64 bit order via total_cmp — deterministic across platforms.
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = quota(a) - quota(a).floor();
+        let rb = quota(b) - quota(b).floor();
+        rb.total_cmp(&ra).then(a.cmp(&b))
+    });
+    // Round-robin with capacity skip — terminates because Σ d_b = d ≥ k.
+    let mut cursor = 0;
+    while leftover > 0 {
+        let i = order[cursor % order.len()];
+        if ks[i] < sizes[i] {
+            ks[i] += 1;
+            leftover -= 1;
+        }
+        cursor += 1;
+    }
+    ks
+}
+
 /// Two-stage, double-buffered pipeline: `produce(b)` runs on a dedicated
 /// producer thread for `b = 0..n` in order, while `consume(b, item)` runs
 /// on the calling thread in the same order. A rendezvous channel of depth 1
@@ -242,33 +340,100 @@ pub fn apportion_k(sizes: &[usize], k: usize) -> Vec<usize> {
 /// `for b in 0..n { consume(b, produce(b)) }` whenever `produce` and
 /// `consume` are deterministic functions of their own accumulated state —
 /// the pipeline changes *when* work happens, never *what* happens.
-pub fn run_pipelined<T, P, C>(n: usize, produce: P, mut consume: C)
+///
+/// This is the no-recycling convenience wrapper around
+/// [`run_pipelined_return`]: consumed items are simply dropped.
+pub fn run_pipelined<T, P, C>(n: usize, mut produce: P, mut consume: C)
 where
     T: Send,
     P: FnMut(usize) -> T + Send,
     C: FnMut(usize, T),
 {
+    let (leftovers, _spawn_s) = run_pipelined_return(
+        n,
+        move |b, _spent: &mut Vec<T>| produce(b),
+        move |b, item| {
+            consume(b, item);
+            None
+        },
+    );
+    debug_assert!(leftovers.is_empty(), "drop-only consume returned payloads");
+}
+
+/// [`run_pipelined`] with a **payload return channel**: after `consume`
+/// finishes with an item it may hand it back (`Some(spent)`), and the
+/// spent items flow to the producer thread over a second channel. Before
+/// producing bucket `b`, the producer drains everything that has arrived
+/// into `spent` and passes it to `produce(b, &mut spent)` — the trainer's
+/// producer recycles the O(k) payload buffers into the owning workers'
+/// workspaces there, which is what makes the *bucketed* exchange
+/// allocation-free in the steady state (the monolithic path already
+/// recycles after its single collective).
+///
+/// Returned value: `(leftovers, producer_spawn_seconds)`. The leftovers
+/// are the spent items the producer never saw (those of the final
+/// buckets, returned after the producer finished); the caller recycles
+/// them itself — they seed the free lists for the *next* step, so across
+/// steps nothing is lost. The spawn time is the wall clock of creating
+/// the producer thread — the per-step launch cost the trainer folds into
+/// `StepRecord::spawn_or_dispatch_us` (and the cost the pooled pipeline
+/// retires).
+///
+/// Determinism is unchanged from [`run_pipelined`]: recycling only moves
+/// buffer *capacity* around (recycled buffers are cleared before reuse —
+/// the [`crate::compress::Workspace`] contract), and the drain order can
+/// therefore never influence numerics. Both closures still observe
+/// buckets in the exact sequence `0, 1, …, n − 1`.
+pub fn run_pipelined_return<T, P, C>(n: usize, produce: P, mut consume: C) -> (Vec<T>, f64)
+where
+    T: Send,
+    P: FnMut(usize, &mut Vec<T>) -> T + Send,
+    C: FnMut(usize, T) -> Option<T>,
+{
     if n == 0 {
-        return;
+        return (Vec::new(), 0.0);
     }
     let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(1);
+    let (return_tx, return_rx) = std::sync::mpsc::channel::<T>();
+    let mut leftovers = Vec::new();
+    let mut spawn_s = 0.0f64;
     std::thread::scope(|s| {
         let mut produce = produce;
-        s.spawn(move || {
+        let t_spawn = std::time::Instant::now();
+        let handle = s.spawn(move || {
+            let mut spent: Vec<T> = Vec::new();
             for b in 0..n {
-                let item = produce(b);
+                while let Ok(item) = return_rx.try_recv() {
+                    spent.push(item);
+                }
+                let item = produce(b, &mut spent);
                 // A send error means the consumer side is gone (panicked);
                 // stop producing and let the scope surface the panic.
                 if tx.send((b, item)).is_err() {
                     break;
                 }
             }
+            // Anything produce() left in `spent` plus whatever is still in
+            // flight goes back to the caller.
+            (spent, return_rx)
         });
+        spawn_s = t_spawn.elapsed().as_secs_f64();
         for _ in 0..n {
             let (b, item) = rx.recv().expect("pipeline producer hung up");
-            consume(b, item);
+            if let Some(spent) = consume(b, item) {
+                // The producer may already be past its last drain; the
+                // leftover sweep below catches anything it missed.
+                let _ = return_tx.send(spent);
+            }
+        }
+        drop(return_tx);
+        let (mut spent, return_rx) = handle.join().expect("pipeline producer panicked");
+        leftovers.append(&mut spent);
+        while let Ok(item) = return_rx.try_recv() {
+            leftovers.push(item);
         }
     });
+    (leftovers, spawn_s)
 }
 
 #[cfg(test)]
@@ -388,6 +553,84 @@ mod tests {
                     .wrapping_add((b as u64 + 1) * (b as u64 + 1));
             }
             assert_eq!(folded, want_fold, "n={n}");
+        }
+    }
+
+    #[test]
+    fn weighted_apportion_sums_caps_and_follows_mass() {
+        let sizes = [8usize, 8, 8];
+        // All the mass in bucket 1: it takes everything it can hold.
+        let ks = apportion_k_weighted(&sizes, &[0.0, 10.0, 0.0], 6);
+        assert_eq!(ks, vec![0, 6, 0]);
+        // More mass than capacity spills over to the rest (round-robin in
+        // remainder order, index ties upward).
+        let ks = apportion_k_weighted(&sizes, &[0.0, 10.0, 0.0], 12);
+        assert_eq!(ks.iter().sum::<usize>(), 12);
+        assert_eq!(ks[1], 8);
+        // Equal mass reduces to an even split.
+        assert_eq!(apportion_k_weighted(&sizes, &[1.0, 1.0, 1.0], 6), vec![2, 2, 2]);
+        // Exactness + caps + determinism over a k sweep.
+        let w = [0.3, 5.0, 0.0, 2.2];
+        let sz = [3usize, 10, 2, 5];
+        for k in 0..=25 {
+            let ks = apportion_k_weighted(&sz, &w, k);
+            assert_eq!(ks.iter().sum::<usize>(), k.min(20), "k={k}");
+            for (b, (&kb, &db)) in ks.iter().zip(&sz).enumerate() {
+                assert!(kb <= db, "k={k} bucket {b}");
+            }
+            assert_eq!(ks, apportion_k_weighted(&sz, &w, k), "k={k} not deterministic");
+        }
+        // Degenerate inputs never panic.
+        assert_eq!(apportion_k_weighted(&[], &[], 4), Vec::<usize>::new());
+        assert_eq!(apportion_k_weighted(&[0, 0], &[1.0, 1.0], 3), vec![0, 0]);
+    }
+
+    #[test]
+    fn mass_apportion_falls_back_to_size() {
+        let s = BucketSchedule::fixed_bytes(16, 32, 4); // two 8-elem buckets
+        let size_split = s.apportion_k(4);
+        // Degenerate stats: wrong length, NaN, zero total → size split.
+        assert_eq!(s.apportion_k_by_mass(4, &[1.0]), size_split);
+        assert_eq!(s.apportion_k_by_mass(4, &[f64::NAN, 1.0]), size_split);
+        assert_eq!(s.apportion_k_by_mass(4, &[0.0, 0.0]), size_split);
+        assert_eq!(s.apportion_k_by_mass(4, &[-1.0, 2.0]), size_split);
+        // Real mass steers the split but conserves the budget.
+        let ks = s.apportion_k_by_mass(4, &[9.0, 1.0]);
+        assert_eq!(ks.iter().sum::<usize>(), 4);
+        assert!(ks[0] > ks[1]);
+    }
+
+    #[test]
+    fn pipeline_return_channel_recycles_and_reports_leftovers() {
+        // Items are Vec<u8> "payloads"; the producer reuses returned
+        // buffers, and whatever it never saw comes back as leftovers.
+        for n in [1usize, 2, 5, 17] {
+            let mut consumed = Vec::new();
+            let (leftovers, spawn_s) = run_pipelined_return(
+                n,
+                move |b, spent: &mut Vec<Vec<u8>>| {
+                    let mut buf = spent.pop().unwrap_or_default();
+                    spent.clear(); // producer contract: drain every drain-point
+                    buf.clear();
+                    buf.push(b as u8);
+                    buf
+                },
+                |b, item| {
+                    consumed.push((b, item[0]));
+                    Some(item)
+                },
+            );
+            // Every bucket consumed in order, payload intact.
+            let want: Vec<(usize, u8)> = (0..n).map(|b| (b, b as u8)).collect();
+            assert_eq!(consumed, want, "n={n}");
+            // Every payload is either recycled by the producer or handed
+            // back as a leftover — none silently dropped. (The producer
+            // pops at most one buffer per bucket and clears the rest, so
+            // we only assert the conservation bound.)
+            assert!(!leftovers.is_empty(), "n={n}: final payloads must come back");
+            assert!(leftovers.len() <= n, "n={n}");
+            // A real producer thread was spawned and timed.
+            assert!(spawn_s.is_finite() && spawn_s >= 0.0, "n={n}");
         }
     }
 

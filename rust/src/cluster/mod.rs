@@ -75,6 +75,27 @@ pub fn scaling_table_bucketed(
     buckets: usize,
     parallelism: Parallelism,
 ) -> ScalingTable {
+    scaling_table_runtime(models, ops, topo, k_ratio, buckets, parallelism, 0.0)
+}
+
+/// [`scaling_table_bucketed`] with an explicit per-iteration host-runtime
+/// overhead (`SimConfig::host_overhead_s`) added to every cell — the
+/// cost-model twin of the trainer's `spawn_or_dispatch_us` measurement.
+/// Pass [`crate::netsim::runtime_overhead_s`] of the worker runtime being
+/// modelled; the fig4/table2 benches use this to print spawn-per-step vs
+/// pooled iteration times side by side. `host_overhead_s = 0.0` is
+/// bit-identical to [`scaling_table_bucketed`] (the golden snapshot
+/// path).
+#[allow(clippy::too_many_arguments)]
+pub fn scaling_table_runtime(
+    models: &[ComputeProfile],
+    ops: &[OpKind],
+    topo: &Topology,
+    k_ratio: f64,
+    buckets: usize,
+    parallelism: Parallelism,
+    host_overhead_s: f64,
+) -> ScalingTable {
     let buckets = buckets.max(1);
     let jobs: Vec<(&ComputeProfile, OpKind)> = models
         .iter()
@@ -89,6 +110,7 @@ pub fn scaling_table_bucketed(
             straggler_sigma: 0.0,
             seed: 1,
             buckets,
+            host_overhead_s,
         };
         let b = Simulator::new(cfg).iteration();
         ScalingCell {
@@ -183,6 +205,7 @@ pub fn scaling_table_scheduled(
             straggler_sigma: 0.0,
             seed: 1,
             buckets: 1,
+            host_overhead_s: 0.0,
         };
         let mut sim = Simulator::new(cfg);
         let mut iter_times_s = Vec::with_capacity(densities.len());

@@ -19,7 +19,12 @@
 //!   implementation).
 //! * [`ThreadedCollectives`] — one OS thread per ring participant,
 //!   exchanging chunks over `mpsc` channels in the very same ring
-//!   schedule.
+//!   schedule (threads are scoped per call).
+//! * [`PooledCollectives`] — the engine of the persistent worker-pool
+//!   runtime (`parallelism = pool:N`): the serial schedules executed on
+//!   the coordinator thread, because the pool's contract is *zero*
+//!   per-step thread spawns and the scoped per-call ring would
+//!   reintroduce them (see `pooled.rs` docs).
 //!
 //! ### The determinism guarantee
 //!
@@ -55,9 +60,11 @@
 //! serial bucket loop would hand it, and is itself engine-bit-identical.
 //! The invariant suite lives in `tests/bucket_equivalence.rs`.
 
+mod pooled;
 mod serial;
 mod threaded;
 
+pub use pooled::PooledCollectives;
 pub use serial::SerialCollectives;
 pub use threaded::ThreadedCollectives;
 

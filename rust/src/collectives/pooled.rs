@@ -1,0 +1,84 @@
+//! The pooled-runtime collectives engine: the serial ring/tree schedules
+//! executed on the coordinator thread, with **zero thread activity** per
+//! call.
+//!
+//! ## Why the pool's engine is spawn-free rather than thread-per-rank
+//!
+//! `parallelism = pool:N` exists to eliminate per-step thread churn: the
+//! worker pool ([`crate::coordinator::pool`]) is spawned once per run and
+//! fed per-step jobs over channels. Routing the aggregation through
+//! [`super::ThreadedCollectives`] would silently reintroduce exactly the
+//! cost the pool removes — that engine spawns one scoped OS thread per
+//! ring participant *per collective call*, i.e. per training step (and
+//! per bucket on the bucketed path). The pooled runtime instead runs the
+//! collective on the coordinator thread while the pool threads are
+//! parked at the step barrier: the simulated exchange is memory-bound
+//! rather than compute-bound, so at trainer scale the serial schedule
+//! costs less than the spawn/join traffic it replaces.
+//!
+//! ## Bit-identity
+//!
+//! [`PooledCollectives`] delegates every collective to
+//! [`SerialCollectives`] — the numerics **oracle** the whole equivalence
+//! suite is anchored to — so `pool:N` trajectories are bit-identical to
+//! `serial` (and therefore to `threads:N`) by construction, not by
+//! argument. The end-to-end lock lives in `tests/pool_equivalence.rs`.
+
+use super::{Collectives, SerialCollectives};
+use crate::tensor::SparseVec;
+
+/// Zero-spawn collectives engine for the persistent worker-pool runtime.
+///
+/// Same ring reduce-scatter/all-gather and gTop-k tree merges as the
+/// serial oracle, executed on the calling (coordinator) thread. See the
+/// module docs for why the pool deliberately does *not* use the
+/// thread-per-rank engine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PooledCollectives;
+
+impl Collectives for PooledCollectives {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Vec<f32> {
+        SerialCollectives.ring_allreduce_avg(inputs)
+    }
+
+    fn sparse_allgather_avg(&self, inputs: &[SparseVec]) -> Vec<f32> {
+        SerialCollectives.sparse_allgather_avg(inputs)
+    }
+
+    fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        SerialCollectives.gtopk_allreduce_avg(inputs, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooled_engine_is_the_serial_oracle() {
+        let inputs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![-1.0, -2.0, -3.0, -4.0, -5.0],
+        ];
+        assert_eq!(
+            PooledCollectives.ring_allreduce_avg(&inputs),
+            SerialCollectives.ring_allreduce_avg(&inputs)
+        );
+        let a = SparseVec::from_pairs(6, vec![(0, 3.0), (2, 1.0)]);
+        let b = SparseVec::from_pairs(6, vec![(2, 1.5), (5, -4.0)]);
+        assert_eq!(
+            PooledCollectives.sparse_allgather_avg(&[a.clone(), b.clone()]),
+            SerialCollectives.sparse_allgather_avg(&[a.clone(), b.clone()])
+        );
+        assert_eq!(
+            PooledCollectives.gtopk_allreduce_avg(&[a.clone(), b.clone()], 2),
+            SerialCollectives.gtopk_allreduce_avg(&[a, b], 2)
+        );
+        assert_eq!(PooledCollectives.name(), "pooled");
+    }
+}

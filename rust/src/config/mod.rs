@@ -22,70 +22,95 @@
 //! | `hist_every`          | `0`        | gradient-histogram period (0 = never)                |
 //! | `momentum_correction` | `false`    | DGC-style local momentum before compression          |
 //! | `global_topk`         | `false`    | gTop-k tree aggregation instead of all-gather union  |
-//! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads` (one thread per available core), or `threads:N` — results are bit-identical across all settings |
-//! | `buckets`             | `"none"`   | gradient exchange granularity: `none` (monolithic), `layers` (layer-aligned buckets), or `bytes:N` (fixed-byte buckets); under a threaded runtime bucket `i+1` is compressed while bucket `i` is on the ring |
+//! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads`/`threads:N` (scoped threads re-spawned every step), or `pool`/`pool:N` (persistent worker pool, zero per-step spawns — see [`crate::coordinator::pool`]) — results are bit-identical across all settings |
+//! | `buckets`             | `"none"`   | gradient exchange granularity: `none` (monolithic), `layers` (layer-aligned buckets), or `bytes:N` (fixed-byte buckets); under a threaded/pooled runtime bucket `i+1` is compressed while bucket `i` is on the ring |
+//! | `bucket_apportion`    | `"size"`   | how a bucketed run splits the per-step k across buckets: `size` (proportional to element count) or `mass` (proportional to worker 0's per-bucket ‖u‖², the Adaptive Top-K direction; falls back to `size` when the stats are degenerate) |
 //! | `k_schedule`          | `"const"`  | per-step density plan: `const` (follow `k_ratio` — bit-identical to the pre-schedule path), `const:K`, `warmup:K0..K,epochs=E` (exponential density decay), or `adaptive:DELTA` (smallest k capturing DELTA of ‖u‖²) — see [`crate::schedule`] |
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 
 use std::collections::BTreeMap;
 
-use crate::collectives::{Collectives, SerialCollectives, ThreadedCollectives};
+use crate::collectives::{Collectives, PooledCollectives, SerialCollectives, ThreadedCollectives};
 use crate::compress::OpKind;
 use crate::schedule::KSchedule;
 
 /// How the trainer runs its P simulated workers.
 ///
 /// `Serial` steps the workers one after another on the calling thread —
-/// the reference path. `Threads(n)` spawns up to `n` OS threads that own
-/// disjoint worker groups and run the gradient/compression phase
-/// concurrently, aggregating through the channel-based
-/// [`ThreadedCollectives`] engine. Both settings produce **bit-identical**
-/// training trajectories (see `collectives` module docs for the why);
-/// `Threads` only changes wall-clock time.
+/// the reference path. `Threads(n)` spawns up to `n` *scoped* OS threads
+/// every step (spawn, compute, join) that own disjoint worker groups and
+/// run the gradient/compression phase concurrently, aggregating through
+/// the channel-based [`ThreadedCollectives`] engine. `Pool(n)` keeps up
+/// to `n` OS threads alive for the whole run (a persistent worker pool —
+/// [`crate::coordinator::pool`]) and feeds them per-step plans over
+/// channels: zero thread spawns in the steady state. All settings produce
+/// **bit-identical** training trajectories (see `collectives` and
+/// `coordinator::pool` module docs for the why); the runtime choice only
+/// changes wall-clock time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Parallelism {
     /// One thread, workers stepped in rank order (the oracle).
     Serial,
-    /// Up to n OS threads across the worker group (n ≥ workers gives one
-    /// thread per simulated worker).
+    /// Up to n scoped OS threads across the worker group, re-spawned every
+    /// step (n ≥ workers gives one thread per simulated worker).
     Threads(usize),
+    /// Up to n persistent OS threads, spawned once per run and fed
+    /// per-step jobs over channels (zero steady-state spawns).
+    Pool(usize),
 }
 
 impl Parallelism {
     /// `Threads(n)` with n = available cores — the single auto-detect
     /// policy (benches and the `"threads"` config value both use this).
     pub fn auto() -> Parallelism {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Parallelism::Threads(n)
+        Parallelism::Threads(Self::auto_n())
     }
 
-    /// Parse a config/CLI value: `serial`, `threads` (auto = available
-    /// cores), `threads:N`, or `threads(N)`.
+    /// `Pool(n)` with n = available cores (the `"pool"` config value).
+    pub fn auto_pool() -> Parallelism {
+        Parallelism::Pool(Self::auto_n())
+    }
+
+    fn auto_n() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Parse a config/CLI value: `serial`, `threads`/`pool` (auto =
+    /// available cores), `threads:N`, or `pool:N`.
     pub fn parse(s: &str) -> anyhow::Result<Parallelism> {
         let t = s.trim().to_ascii_lowercase();
+        let grammar = "serial|threads|threads:N|pool|pool:N";
         if t == "serial" {
             return Ok(Parallelism::Serial);
         }
         if t == "threads" {
             return Ok(Parallelism::auto());
         }
-        if let Some(rest) = t.strip_prefix("threads") {
-            // Exactly one separator form: threads:N, threads=N, threads(N).
-            // (Sloppy forms like `threads4` are rejected, not guessed at.)
-            let digits = rest
-                .strip_prefix(':')
-                .or_else(|| rest.strip_prefix('='))
-                .or_else(|| rest.strip_prefix('(').and_then(|d| d.strip_suffix(')')))
-                .ok_or_else(|| {
-                    anyhow::anyhow!("bad parallelism '{s}': expected serial|threads|threads:N")
-                })?;
-            let n: usize = digits
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad parallelism '{s}': expected serial|threads|threads:N"))?;
-            anyhow::ensure!(n >= 1, "parallelism threads:N needs N >= 1");
-            return Ok(Parallelism::Threads(n));
+        if t == "pool" {
+            return Ok(Parallelism::auto_pool());
         }
-        anyhow::bail!("bad parallelism '{s}': expected serial|threads|threads:N")
+        for (prefix, build) in [
+            ("threads", Parallelism::Threads as fn(usize) -> Parallelism),
+            ("pool", Parallelism::Pool as fn(usize) -> Parallelism),
+        ] {
+            if let Some(rest) = t.strip_prefix(prefix) {
+                // Exactly one separator form: `:N`, `=N`, `(N)`. (Sloppy
+                // forms like `threads4` are rejected, not guessed at.)
+                let digits = rest
+                    .strip_prefix(':')
+                    .or_else(|| rest.strip_prefix('='))
+                    .or_else(|| rest.strip_prefix('(').and_then(|d| d.strip_suffix(')')))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("bad parallelism '{s}': expected {grammar}")
+                    })?;
+                let n: usize = digits
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad parallelism '{s}': expected {grammar}"))?;
+                anyhow::ensure!(n >= 1, "parallelism {prefix}:N needs N >= 1");
+                return Ok(build(n));
+            }
+        }
+        anyhow::bail!("bad parallelism '{s}': expected {grammar}")
     }
 
     /// Display form (round-trips through [`Parallelism::parse`]).
@@ -93,6 +118,7 @@ impl Parallelism {
         match self {
             Parallelism::Serial => "serial".to_string(),
             Parallelism::Threads(n) => format!("threads:{n}"),
+            Parallelism::Pool(n) => format!("pool:{n}"),
         }
     }
 
@@ -100,17 +126,19 @@ impl Parallelism {
     pub fn threads(&self) -> usize {
         match self {
             Parallelism::Serial => 1,
-            Parallelism::Threads(n) => (*n).max(1),
+            Parallelism::Threads(n) | Parallelism::Pool(n) => (*n).max(1),
         }
     }
 
     /// Build the matching collectives engine. The thread count does not
-    /// parameterize the engine — ring collectives always use one thread
-    /// per participant; `n` only budgets the trainer's gradient phase.
+    /// parameterize the engine — the scoped ring collectives always use
+    /// one thread per participant and the pooled engine none at all; `n`
+    /// only budgets the trainer's gradient phase.
     pub fn engine(&self) -> Box<dyn Collectives> {
         match self {
             Parallelism::Serial => Box::new(SerialCollectives),
             Parallelism::Threads(_) => Box::new(ThreadedCollectives),
+            Parallelism::Pool(_) => Box::new(PooledCollectives),
         }
     }
 
@@ -181,6 +209,46 @@ impl Buckets {
     /// True when the bucketed exchange path should run.
     pub fn is_bucketed(&self) -> bool {
         !matches!(self, Buckets::None)
+    }
+}
+
+/// How a bucketed run splits the per-step budget k_t across buckets.
+///
+/// `Size` is the original policy: largest-remainder proportional to
+/// bucket element count ([`crate::buckets::apportion_k`]). `Mass` follows
+/// the Adaptive Top-K direction (Ruan et al. 2022): the share of bucket b
+/// is proportional to worker 0's per-bucket error-compensated gradient
+/// energy ‖u_b‖², recomputed every step
+/// ([`crate::buckets::BucketSchedule::apportion_k_by_mass`]), falling
+/// back to `Size` on degenerate statistics (all-zero or non-finite mass).
+/// Both policies are deterministic functions of worker state, so every
+/// runtime (`serial`/`threads`/`pool`) resolves identical per-bucket
+/// budgets.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BucketApportion {
+    /// Proportional to bucket element count (the default).
+    #[default]
+    Size,
+    /// Proportional to worker 0's per-bucket ‖u‖² (size fallback).
+    Mass,
+}
+
+impl BucketApportion {
+    /// Parse a config/CLI value: `size` or `mass`.
+    pub fn parse(s: &str) -> anyhow::Result<BucketApportion> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "size" => Ok(BucketApportion::Size),
+            "mass" => Ok(BucketApportion::Mass),
+            other => anyhow::bail!("bad bucket_apportion '{other}': expected size|mass"),
+        }
+    }
+
+    /// Display form (round-trips through [`BucketApportion::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BucketApportion::Size => "size",
+            BucketApportion::Mass => "mass",
+        }
     }
 }
 
@@ -287,8 +355,12 @@ pub struct TrainConfig {
     /// numerics either way; threads only change wall-clock time.
     pub parallelism: Parallelism,
     /// Gradient-exchange granularity: monolithic, layer-aligned buckets,
-    /// or fixed-byte buckets (pipelined under a threaded runtime).
+    /// or fixed-byte buckets (pipelined under a threaded/pooled runtime).
     pub buckets: Buckets,
+    /// How a bucketed run splits the per-step k across buckets:
+    /// proportional to bucket size (default) or to worker 0's per-bucket
+    /// ‖u‖² mass (Adaptive Top-K style). Ignored when `buckets = none`.
+    pub bucket_apportion: BucketApportion,
     /// Per-step density plan (`const` follows `k_ratio` and reproduces
     /// the pre-schedule trainer bit-for-bit; see [`crate::schedule`]).
     pub k_schedule: KSchedule,
@@ -314,6 +386,7 @@ impl Default for TrainConfig {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: Buckets::None,
+            bucket_apportion: BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
         }
@@ -354,6 +427,10 @@ impl TrainConfig {
                 Some(s) => Buckets::parse(s)?,
                 None => d.buckets,
             },
+            bucket_apportion: match raw.get("train", "bucket_apportion") {
+                Some(s) => BucketApportion::parse(s)?,
+                None => d.bucket_apportion,
+            },
             k_schedule: match raw.get("train", "k_schedule") {
                 Some(s) => KSchedule::parse(s)?,
                 None => d.k_schedule,
@@ -375,8 +452,8 @@ impl TrainConfig {
             (0.0..1.0).contains(&self.momentum),
             "momentum must be in [0, 1)"
         );
-        if let Parallelism::Threads(n) = self.parallelism {
-            anyhow::ensure!(n >= 1, "parallelism threads:N needs N >= 1");
+        if let Parallelism::Threads(n) | Parallelism::Pool(n) = self.parallelism {
+            anyhow::ensure!(n >= 1, "parallelism threads:N / pool:N needs N >= 1");
         }
         if let Buckets::Bytes(n) = self.buckets {
             anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
@@ -454,14 +531,52 @@ lr = 0.05
             Parallelism::Threads(n) => assert!(n >= 1),
             other => panic!("auto threads parsed as {other:?}"),
         }
+        assert_eq!(Parallelism::parse("pool:4").unwrap(), Parallelism::Pool(4));
+        assert_eq!(Parallelism::parse("POOL(2)").unwrap(), Parallelism::Pool(2));
+        match Parallelism::parse("pool").unwrap() {
+            Parallelism::Pool(n) => assert!(n >= 1),
+            other => panic!("auto pool parsed as {other:?}"),
+        }
         assert!(Parallelism::parse("threads:0").is_err());
+        assert!(Parallelism::parse("pool:0").is_err());
         assert!(Parallelism::parse("threads4").is_err()); // separator required
+        assert!(Parallelism::parse("pool4").is_err());
         assert!(Parallelism::parse("threads(4").is_err()); // unclosed paren
         assert!(Parallelism::parse("gpu").is_err());
         // name() round-trips.
-        for p in [Parallelism::Serial, Parallelism::Threads(4)] {
+        for p in [Parallelism::Serial, Parallelism::Threads(4), Parallelism::Pool(3)] {
             assert_eq!(Parallelism::parse(&p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn pool_parallelism_shape() {
+        let p = Parallelism::Pool(3);
+        assert_eq!(p.threads(), 3);
+        assert!(!p.is_threaded(), "pool is not the scoped-thread runtime");
+        assert_eq!(p.engine().name(), "pooled");
+        let raw = RawConfig::parse("[train]\nparallelism = \"pool:2\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::Pool(2));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn bucket_apportion_parsing_and_raw() {
+        assert_eq!(BucketApportion::parse("size").unwrap(), BucketApportion::Size);
+        assert_eq!(BucketApportion::parse("MASS").unwrap(), BucketApportion::Mass);
+        assert!(BucketApportion::parse("energy").is_err());
+        for a in [BucketApportion::Size, BucketApportion::Mass] {
+            assert_eq!(BucketApportion::parse(a.name()).unwrap(), a);
+        }
+        let raw = RawConfig::parse("[train]\nbucket_apportion = \"mass\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.bucket_apportion, BucketApportion::Mass);
+        cfg.validate().unwrap();
+        // Default stays size-proportional.
+        assert_eq!(TrainConfig::default().bucket_apportion, BucketApportion::Size);
+        let bad = RawConfig::parse("[train]\nbucket_apportion = \"energy\"").unwrap();
+        assert!(TrainConfig::from_raw(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! The execution layer of the trainer: one per-worker step function, three
+//! interchangeable runtimes.
+//!
+//! PR 4 split `coordinator::trainer` into a thin step-orchestration loop
+//! (resolve the plan, fold messages, aggregate, optimize) and this module,
+//! which owns *how* the per-worker compute phase actually runs:
+//!
+//! * [`Executor::Serial`] — workers stepped in rank order on the calling
+//!   thread with the trainer's own model (the oracle).
+//! * [`Executor::Scoped`] — the PR-1 runtime: up to `n` scoped OS threads
+//!   re-spawned every step (`parallelism = threads:N`), each owning a
+//!   disjoint worker group and a forked model replica.
+//! * [`Executor::Pool`] — the persistent worker pool
+//!   (`parallelism = pool:N`, [`super::pool`]): threads spawned once per
+//!   run, fed per-step jobs over channels. Zero thread spawns in the
+//!   steady state.
+//!
+//! ## Why all three are bit-identical
+//!
+//! [`worker_step`]/[`grad_step`] are pure functions of `(ctx, worker
+//! state, model replica, params, batch)` — every mutable input is owned
+//! by exactly one runtime unit per step, so *where* a worker runs can
+//! never change *what* it computes. Batch sampling draws only from each
+//! worker's own `data_rng`, so its *placement* is a scheduling choice:
+//! the serial and scoped runtimes sample inside the compute phase (P
+//! concurrent draws under `threads:N`, exactly the PR-1 behaviour),
+//! while the pool pre-samples on the coordinator (`sample_batches`) and
+//! ships batches with the job — its long-lived threads cannot borrow
+//! the `DataSource`. Every runtime re-sorts its results by rank before
+//! the trainer folds them. `tests/pool_equivalence.rs` (pool) and
+//! `tests/parallel_equivalence.rs` (threads) lock the invariant.
+//!
+//! ## Parameter sharing without clones
+//!
+//! The pool's worker threads outlive any one step, so they cannot borrow
+//! the optimizer's parameter vector the way scoped threads do. Instead
+//! the trainer wraps params in a [`ParamStore`]: the pooled variant holds
+//! an `Arc<Vec<f32>>`, each dispatch hands every thread a refcount bump
+//! (no allocation, no copy), and each thread drops its handle *before*
+//! reporting its result — so after the step barrier the coordinator's
+//! `Arc::get_mut` succeeds and the optimizer mutates the vector in place.
+//! The release/acquire pair of the result channel makes the refcount
+//! decrement visible; the protocol is asserted, not assumed
+//! (`make_mut` panics loudly if a handle leaks past the barrier).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::optimizer::momentum_correct;
+use super::pool::{PoolJob, PoolPhase, PoolResult, WorkerPool};
+use super::trainer::GradSnapshot;
+use super::worker::WorkerState;
+use crate::buckets::BucketSpec;
+use crate::data::{Batch, DataSource};
+use crate::models::Model;
+use crate::schedule::feedback_histogram;
+use crate::stats::histogram::Histogram;
+use crate::tensor::SparseVec;
+
+/// What one worker hands the aggregation phase for one step.
+pub(crate) enum Payload {
+    Dense(Vec<f32>),
+    Sparse(SparseVec),
+}
+
+/// Per-worker result of the compute phase, identical across runtimes.
+pub(crate) struct WorkerMsg {
+    pub rank: usize,
+    pub loss: f64,
+    pub snapshot: Option<GradSnapshot>,
+    /// |u| histogram for the adaptive schedule (worker 0 only, and only
+    /// when the plan engine asked for feedback).
+    pub feedback: Option<Histogram>,
+    pub payload: Payload,
+}
+
+/// One bucket's worth of per-worker contributions (rank order), produced
+/// by the compression stage of the bucketed exchange and consumed by the
+/// aggregation stage. Flows back to the producer over the payload return
+/// channel once consumed, so its buffers recycle across steps.
+pub(crate) enum BucketMsg {
+    Dense(Vec<Vec<f32>>),
+    Sparse(Vec<SparseVec>),
+}
+
+/// Immutable per-step context shared by every worker. Plain `Copy` data —
+/// no borrows — so the pool can ship it over a job channel.
+#[derive(Clone, Copy)]
+pub(crate) struct StepCtx {
+    pub step: usize,
+    pub is_dense: bool,
+    pub momentum_correction: bool,
+    pub momentum: f32,
+    pub hist_every: usize,
+    pub hist_bins: usize,
+    pub keep_raw: bool,
+    /// This step's resolved k (the plan's k_t).
+    pub k: usize,
+    /// Collect the adaptive-schedule |u| histogram on worker 0.
+    pub feedback: bool,
+}
+
+/// Sample one batch per worker, in rank order, on the coordinator —
+/// the *pool* runtime's sampling path: its long-lived threads cannot
+/// borrow the `DataSource`, so batches ship with the job. Sampling draws
+/// only from each worker's own `data_rng`, so hoisting it out of the
+/// compute phase leaves every stream byte-identical to the in-thread
+/// sampling the serial and scoped runtimes keep (those sample inside the
+/// phase so P workers draw concurrently under `threads:N`).
+fn sample_batches(
+    workers: &mut [WorkerState],
+    data: &dyn DataSource,
+    batch_size: usize,
+) -> Vec<Batch> {
+    workers
+        .iter_mut()
+        .map(|w| data.sample(batch_size, &mut w.data_rng))
+        .collect()
+}
+
+/// One worker's compute phase: gradient on the pre-sampled batch, local
+/// momentum correction, error-feedback compression at this step's k.
+/// Pure with respect to everything except `w` and the model's scratch, so
+/// all three runtimes produce bit-identical messages.
+pub(crate) fn worker_step<M: Model + ?Sized>(
+    ctx: StepCtx,
+    w: &mut WorkerState,
+    model: &mut M,
+    params: &[f32],
+    batch: &Batch,
+) -> WorkerMsg {
+    let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
+
+    // Momentum correction: v ← m·v + g locally, compress v.
+    if ctx.momentum_correction && !ctx.is_dense {
+        momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
+    }
+
+    if ctx.is_dense {
+        return WorkerMsg {
+            rank: w.rank,
+            loss,
+            snapshot: None, // dense-mode snapshots: see the Fig. 8 block in the trainer
+            feedback: None,
+            // Move the gradient buffer to the ring; the trainer hands it
+            // back after aggregation (no per-step clone).
+            payload: Payload::Dense(std::mem::take(&mut w.grad)),
+        };
+    }
+
+    let u = w.residual.accumulate(&w.grad);
+    // Snapshot u_t on worker 0 (paper plots worker 1; "different workers
+    // have very close distributions").
+    let snapshot = if w.rank == 0 && ctx.hist_every > 0 && ctx.step % ctx.hist_every == 0 {
+        Some(GradSnapshot {
+            step: ctx.step,
+            histogram: Histogram::auto(u, ctx.hist_bins),
+            raw: if ctx.keep_raw { Some(u.to_vec()) } else { None },
+        })
+    } else {
+        None
+    };
+    let feedback = if ctx.feedback && w.rank == 0 {
+        Some(feedback_histogram(u))
+    } else {
+        None
+    };
+    let s = w.compressor.compress_step(u, ctx.k, &mut w.workspace);
+    w.residual.update(&s);
+    WorkerMsg {
+        rank: w.rank,
+        loss,
+        snapshot,
+        feedback,
+        payload: Payload::Sparse(s),
+    }
+}
+
+/// One worker's gradient phase for the *bucketed* path: gradient into
+/// `w.grad`, local momentum correction. Exactly the front half of
+/// [`worker_step`]; error feedback and compression then run per bucket
+/// (`WorkerState::compress_bucket`).
+pub(crate) fn grad_step<M: Model + ?Sized>(
+    ctx: StepCtx,
+    w: &mut WorkerState,
+    model: &mut M,
+    params: &[f32],
+    batch: &Batch,
+) -> (usize, f64) {
+    let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
+    if ctx.momentum_correction && !ctx.is_dense {
+        momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
+    }
+    (w.rank, loss)
+}
+
+/// The bucketed path's cross-step buffer bank: recycled dense bucket
+/// slices and the outer per-bucket containers. Sparse O(k) payload
+/// buffers recycle into the owning worker's [`crate::compress::Workspace`]
+/// instead (they travel with the `WorkerState`); the bank carries what
+/// has no per-worker home. Owned by the trainer across steps and shipped
+/// with the pipeline job on the pooled path, so the steady state
+/// allocates nothing on either side. Bounded (see
+/// [`recycle_bucket_msg`]), so a one-off burst cannot pin memory.
+#[derive(Default)]
+pub(crate) struct PayloadBank {
+    /// Empty `Vec<SparseVec>` outer containers (capacity P each).
+    pub sparse_outer: Vec<Vec<SparseVec>>,
+    /// Dense bucket slice buffers.
+    pub dense: Vec<Vec<f32>>,
+    /// Empty `Vec<Vec<f32>>` outer containers.
+    pub dense_outer: Vec<Vec<Vec<f32>>>,
+}
+
+/// Recycle a consumed [`BucketMsg`]: sparse payload buffers return to the
+/// owning workers' workspace free lists (rank order — the message was
+/// produced in rank order), dense slices and the outer containers go to
+/// the [`PayloadBank`]. Capacity only — recycled buffers are cleared
+/// before reuse, so recycling can never influence numerics.
+pub(crate) fn recycle_bucket_msg(
+    msg: BucketMsg,
+    workers: &mut [WorkerState],
+    bank: &mut PayloadBank,
+) {
+    match msg {
+        BucketMsg::Sparse(mut vecs) => {
+            for (w, s) in workers.iter_mut().zip(vecs.drain(..)) {
+                w.workspace.recycle(s);
+            }
+            if bank.sparse_outer.len() < 4 {
+                bank.sparse_outer.push(vecs);
+            }
+        }
+        BucketMsg::Dense(mut vecs) => {
+            for v in vecs.drain(..) {
+                if bank.dense.len() < 2 * workers.len().max(1) {
+                    bank.dense.push(v);
+                }
+            }
+            if bank.dense_outer.len() < 4 {
+                bank.dense_outer.push(vecs);
+            }
+        }
+    }
+}
+
+/// Produce bucket `sp`'s [`BucketMsg`] across all workers (rank order),
+/// drawing buffers from the bank: dense slices copy into recycled
+/// buffers, sparse payloads come from each worker's workspace via
+/// `compress_bucket`. The single source of truth for bucket production —
+/// the trainer's serial loop, its scoped pipeline producer, and the
+/// pool's pipeline thread all call this, so the pooled and serial
+/// trajectories cannot drift apart here. (The scoped runtime's
+/// big-bucket compression fanout is the one special case, kept in the
+/// trainer.)
+pub(crate) fn produce_bucket_msg(
+    workers: &mut [WorkerState],
+    bank: &mut PayloadBank,
+    sp: BucketSpec,
+    k: usize,
+    is_dense: bool,
+) -> BucketMsg {
+    if is_dense {
+        let mut vecs = bank.dense_outer.pop().unwrap_or_default();
+        vecs.clear();
+        for w in workers.iter() {
+            let mut buf = bank.dense.pop().unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(&w.grad[sp.lo..sp.hi]);
+            vecs.push(buf);
+        }
+        BucketMsg::Dense(vecs)
+    } else {
+        sparse_msg_from(
+            bank,
+            workers.iter_mut().map(|w| w.compress_bucket(sp.index, sp.lo, sp.hi, k)),
+        )
+    }
+}
+
+/// Pack per-worker sparse payloads (rank order) into a [`BucketMsg`]
+/// using a recycled outer container from the bank — the one place the
+/// sparse container contract lives (the fanout producer uses it too).
+pub(crate) fn sparse_msg_from(
+    bank: &mut PayloadBank,
+    payloads: impl IntoIterator<Item = SparseVec>,
+) -> BucketMsg {
+    let mut vecs = bank.sparse_outer.pop().unwrap_or_default();
+    vecs.clear();
+    vecs.extend(payloads);
+    BucketMsg::Sparse(vecs)
+}
+
+/// The trainer's parameter vector, wrapped for the runtime in use:
+/// `Plain` for serial/scoped (borrowable slices suffice), `Shared` for
+/// the pool (an `Arc` handle per thread per step, exclusively reclaimed
+/// at the step barrier — see the module docs).
+pub(crate) enum ParamStore {
+    Plain(Vec<f32>),
+    Shared(Arc<Vec<f32>>),
+}
+
+impl ParamStore {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            ParamStore::Plain(v) => v,
+            ParamStore::Shared(a) => a,
+        }
+    }
+
+    /// Exclusive access for the optimizer update. For `Shared`, the pool
+    /// protocol guarantees every worker handle was dropped before the
+    /// step barrier, so this is in-place (no clone, no allocation).
+    pub fn make_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            ParamStore::Plain(v) => v,
+            ParamStore::Shared(a) => Arc::get_mut(a)
+                .expect("pool protocol violation: a params handle outlived the step barrier"),
+        }
+    }
+
+    fn shared_handle(&self) -> Arc<Vec<f32>> {
+        match self {
+            ParamStore::Shared(a) => Arc::clone(a),
+            ParamStore::Plain(_) => unreachable!("pool dispatch requires ParamStore::Shared"),
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        match self {
+            ParamStore::Plain(v) => v,
+            ParamStore::Shared(a) => Arc::try_unwrap(a)
+                .expect("pool protocol violation: a params handle outlived the run"),
+        }
+    }
+}
+
+/// The worker runtime selected by `config::Parallelism`, owning whatever
+/// long-lived state that runtime needs (forked model replicas, the
+/// persistent pool). Both trainer paths (monolithic and bucketed) drive
+/// their compute phases through this one type.
+pub(crate) enum Executor {
+    /// Rank-order loop on the calling thread, using the trainer's model.
+    Serial,
+    /// Scoped threads re-spawned per step (`threads:N`).
+    Scoped {
+        fork_models: Vec<Box<dyn Model + Send>>,
+        nthreads: usize,
+    },
+    /// Persistent worker pool (`pool:N`).
+    Pool(WorkerPool),
+}
+
+impl Executor {
+    /// Wrap freshly-initialized params in the store this runtime needs.
+    pub fn wrap_params(&self, params: Vec<f32>) -> ParamStore {
+        match self {
+            Executor::Pool(_) => ParamStore::Shared(Arc::new(params)),
+            _ => ParamStore::Plain(params),
+        }
+    }
+
+    /// The pool, when this runtime is pooled (the bucketed path routes
+    /// its compression pipeline through it).
+    pub fn pool(&mut self) -> Option<&mut WorkerPool> {
+        match self {
+            Executor::Pool(pool) => Some(pool),
+            _ => None,
+        }
+    }
+
+    /// Full compute phase (sample + gradient + EF + compression): one
+    /// [`WorkerMsg`] per worker, rank order, plus the wall-clock
+    /// microseconds spent *launching* the phase (thread spawns for
+    /// `Scoped`, channel job sends for `Pool`, 0 for `Serial` — the
+    /// send/spawn side only; the join/recv barrier overlaps compute).
+    pub fn run_full(
+        &mut self,
+        ctx: StepCtx,
+        workers: &mut Vec<WorkerState>,
+        model: &mut dyn Model,
+        params: &ParamStore,
+        data: &dyn DataSource,
+        batch_size: usize,
+    ) -> (Vec<WorkerMsg>, f64) {
+        match self {
+            Executor::Serial => {
+                let p = params.as_slice();
+                let msgs = workers
+                    .iter_mut()
+                    .map(|w| {
+                        let batch = data.sample(batch_size, &mut w.data_rng);
+                        worker_step(ctx, w, &mut *model, p, &batch)
+                    })
+                    .collect();
+                (msgs, 0.0)
+            }
+            Executor::Scoped { fork_models, nthreads } => {
+                let (mut collected, dispatch_us) = run_scoped(
+                    fork_models,
+                    *nthreads,
+                    workers,
+                    data,
+                    batch_size,
+                    params,
+                    ctx,
+                    worker_step,
+                );
+                collected.sort_by_key(|m| m.rank);
+                (collected, dispatch_us)
+            }
+            Executor::Pool(pool) => {
+                let batches = sample_batches(workers, data, batch_size);
+                let (results, dispatch_us) =
+                    dispatch_pool(pool, ctx, workers, params, batches, PoolPhase::Full);
+                let mut msgs = Vec::new();
+                for r in results {
+                    match r {
+                        PoolResult::Compute { states, msgs: m } => {
+                            workers.extend(states);
+                            msgs.extend(m);
+                        }
+                        _ => unreachable!("pool returned a non-compute result to run_full"),
+                    }
+                }
+                workers.sort_by_key(|w| w.rank);
+                msgs.sort_by_key(|m| m.rank);
+                (msgs, dispatch_us)
+            }
+        }
+    }
+
+    /// Gradient-only phase for the bucketed path: `(rank, loss)` pairs in
+    /// rank order, plus the launch microseconds (as in [`Self::run_full`]).
+    pub fn run_grad(
+        &mut self,
+        ctx: StepCtx,
+        workers: &mut Vec<WorkerState>,
+        model: &mut dyn Model,
+        params: &ParamStore,
+        data: &dyn DataSource,
+        batch_size: usize,
+    ) -> (Vec<(usize, f64)>, f64) {
+        match self {
+            Executor::Serial => {
+                let p = params.as_slice();
+                let losses = workers
+                    .iter_mut()
+                    .map(|w| {
+                        let batch = data.sample(batch_size, &mut w.data_rng);
+                        grad_step(ctx, w, &mut *model, p, &batch)
+                    })
+                    .collect();
+                (losses, 0.0)
+            }
+            Executor::Scoped { fork_models, nthreads } => {
+                let (mut collected, dispatch_us) = run_scoped(
+                    fork_models,
+                    *nthreads,
+                    workers,
+                    data,
+                    batch_size,
+                    params,
+                    ctx,
+                    grad_step,
+                );
+                collected.sort_by_key(|m| m.0);
+                (collected, dispatch_us)
+            }
+            Executor::Pool(pool) => {
+                let batches = sample_batches(workers, data, batch_size);
+                let (results, dispatch_us) =
+                    dispatch_pool(pool, ctx, workers, params, batches, PoolPhase::Grad);
+                let mut losses = Vec::new();
+                for r in results {
+                    match r {
+                        PoolResult::Grad { states, losses: l } => {
+                            workers.extend(states);
+                            losses.extend(l);
+                        }
+                        _ => unreachable!("pool returned a non-grad result to run_grad"),
+                    }
+                }
+                workers.sort_by_key(|w| w.rank);
+                losses.sort_by_key(|m| m.0);
+                (losses, dispatch_us)
+            }
+        }
+    }
+}
+
+/// The scoped-thread driver shared by both phases: spawn up to
+/// `nthreads` scoped threads over contiguous rank chunks of workers,
+/// sample each worker's batch *on its thread* (P concurrent draws — the
+/// per-worker `data_rng` makes the streams identical to any other
+/// sampling placement), run `f` per worker on the chunk's forked model,
+/// and report the spawn-loop wall time (the per-step cost `pool:N`
+/// retires). Results come back in thread order — callers re-sort by
+/// rank.
+#[allow(clippy::too_many_arguments)]
+fn run_scoped<R: Send>(
+    fork_models: &mut [Box<dyn Model + Send>],
+    nthreads: usize,
+    workers: &mut [WorkerState],
+    data: &dyn DataSource,
+    batch_size: usize,
+    params: &ParamStore,
+    ctx: StepCtx,
+    f: fn(StepCtx, &mut WorkerState, &mut dyn Model, &[f32], &Batch) -> R,
+) -> (Vec<R>, f64) {
+    let wpt = workers.len().div_ceil(nthreads.max(1)).max(1);
+    let params_ref = params.as_slice();
+    let t0 = Instant::now();
+    let mut dispatch_us = 0.0;
+    let collected: Vec<R> = std::thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .chunks_mut(wpt)
+            .zip(fork_models.iter_mut())
+            .map(|(group, fm)| {
+                s.spawn(move || {
+                    group
+                        .iter_mut()
+                        .map(|w| {
+                            let batch = data.sample(batch_size, &mut w.data_rng);
+                            f(ctx, w, fm.as_mut(), params_ref, &batch)
+                        })
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        dispatch_us = t0.elapsed().as_secs_f64() * 1e6;
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    });
+    (collected, dispatch_us)
+}
+
+/// Ship one compute/grad phase to the pool: drain the workers into
+/// per-thread groups (the same contiguous rank chunks the scoped runtime
+/// uses), send one job per group, and collect one result per group. The
+/// returned dispatch time covers the sends only — the launch cost the
+/// pooled runtime pays instead of thread spawns.
+fn dispatch_pool(
+    pool: &mut WorkerPool,
+    ctx: StepCtx,
+    workers: &mut Vec<WorkerState>,
+    params: &ParamStore,
+    mut batches: Vec<Batch>,
+    phase: PoolPhase,
+) -> (Vec<PoolResult>, f64) {
+    let p = workers.len();
+    let n = pool.threads().min(p).max(1);
+    let wpt = p.div_ceil(n);
+    let t0 = Instant::now();
+    let mut njobs = 0;
+    while !workers.is_empty() {
+        let take = wpt.min(workers.len());
+        let group: Vec<WorkerState> = workers.drain(..take).collect();
+        let group_batches: Vec<Batch> = batches.drain(..take).collect();
+        pool.send_job(
+            njobs,
+            PoolJob::Compute {
+                ctx,
+                phase,
+                states: group,
+                batches: group_batches,
+                params: params.shared_handle(),
+            },
+        );
+        njobs += 1;
+    }
+    let dispatch_us = t0.elapsed().as_secs_f64() * 1e6;
+    let results = (0..njobs).map(|_| pool.recv_result()).collect();
+    (results, dispatch_us)
+}

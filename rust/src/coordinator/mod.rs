@@ -4,10 +4,13 @@
 //! * [`optimizer`] — SGD + momentum + LR schedules.
 //! * [`worker`] — per-worker state (data shard RNG, residual store,
 //!   compressor instance).
-//! * [`trainer`] — the synchronous step loop: every worker computes its
-//!   stochastic gradient, error-feedback-compresses it, the cluster
-//!   aggregates (sparse all-gather or dense ring all-reduce), and the
-//!   shared optimizer applies the averaged update.
+//! * `exec` — the execution layer (crate-internal): the one per-worker
+//!   step function plus the three interchangeable runtimes that drive it.
+//! * [`pool`] — the persistent worker pool behind `parallelism = pool:N`.
+//! * [`trainer`] — the thin synchronous step-orchestration loop: resolve
+//!   the per-step plan, dispatch the compute phase through the execution
+//!   layer, aggregate (sparse all-gather or dense ring all-reduce), and
+//!   apply the averaged update through the shared optimizer.
 //!
 //! Workers are simulated in-process with fully independent state and
 //! *real* numerics: the aggregated update is bit-identical to what P
@@ -16,25 +19,37 @@
 //! comes from [`crate::netsim`]; wall-clock timing of the L3 hot path is
 //! recorded per step.
 //!
-//! ## Parallel worker runtime
+//! ## Execution engines
 //!
-//! Under `config::Parallelism::Threads(n)` the per-worker compute phase
-//! (gradient + error feedback + compression) runs on up to `n` OS
-//! threads. Each thread owns a disjoint contiguous group of
-//! [`WorkerState`]s and a forked model replica (`Model::fork`), so the
-//! phase is lock-free; aggregation then goes through the channel-based
-//! `collectives::ThreadedCollectives` engine, whose ring schedule keeps
-//! per-element summation order fixed. The guarantee — proved by
-//! `tests/parallel_equivalence.rs` — is that `Threads(n)` produces
-//! **bit-identical** training trajectories to `Serial` for every operator
-//! and every `n`: threading changes wall-clock time, never numerics. The
-//! serial path stays alive behind the same `Collectives` trait as the
-//! reference oracle.
+//! `config::Parallelism` selects how the per-worker compute phase
+//! (gradient + error feedback + compression) runs; all three settings
+//! produce **bit-identical** training trajectories — the runtime changes
+//! wall-clock time, never numerics:
+//!
+//! | setting      | worker phase                           | collectives engine | per-step spawns |
+//! |--------------|----------------------------------------|--------------------|-----------------|
+//! | `serial`     | rank-order loop, calling thread        | `serial` (oracle)  | 0               |
+//! | `threads:N`  | N *scoped* threads, re-spawned per step| `threaded` (thread per rank, per call) | N + ring |
+//! | `pool:N`     | N *persistent* threads, channel-fed    | `pooled` (serial schedule, coordinator thread) | **0** |
+//!
+//! `serial` is the reference; `threads:N` buys compute overlap at a
+//! per-step spawn/join cost (~tens of µs × N, re-paid every step);
+//! `pool:N` keeps the overlap and retires the spawn cost — the
+//! [`pool`] module documents the channel protocol and why the barrier
+//! makes pooled runs bit-identical. Per-worker state ([`WorkerState`])
+//! is owned by exactly one runtime unit per step in every mode, so the
+//! phase is lock-free throughout; each thread of a multi-thread runtime
+//! additionally owns a forked model replica (`Model::fork`). The
+//! equivalence locks live in `tests/parallel_equivalence.rs` (threads)
+//! and `tests/pool_equivalence.rs` (pool).
 
+pub(crate) mod exec;
 pub mod optimizer;
+pub mod pool;
 pub mod trainer;
 pub mod worker;
 
 pub use optimizer::{LrSchedule, SgdMomentum};
+pub use pool::WorkerPool;
 pub use trainer::{train, TrainOutput, Trainer};
 pub use worker::WorkerState;

@@ -1,0 +1,375 @@
+//! The persistent worker pool behind `parallelism = pool:N`: long-lived
+//! worker threads, channel-fed step plans, recycled bucket payloads.
+//!
+//! ## Why a pool
+//!
+//! The PR-1 threaded runtime scopes its worker threads *per step* (spawn,
+//! compute, join) — simple and trivially deadlock-free, but the
+//! spawn/join cost (~tens of µs × N threads) is re-paid every training
+//! step on every hot path, which caps steps/sec exactly where TopK-SGD's
+//! value proposition lives (per-step overheads must stay small relative
+//! to compute; gTop-k and Adaptive Top-K systems both assume long-lived
+//! workers). Since PR 3's `compress::Workspace` made per-worker state
+//! fully reusable across steps, nothing forces the re-spawn: this module
+//! keeps N threads alive for the whole run and feeds them per-step jobs
+//! over channels. Steady-state thread spawns: **zero**.
+//!
+//! ## The protocol
+//!
+//! Ownership ping-pong with a barrier per phase — no locks, no shared
+//! mutable state, no unsafe:
+//!
+//! 1. **Spawn** (once per run): each thread receives its own job channel
+//!    and a forked model replica ([`crate::models::Model::fork`]), which
+//!    it owns until teardown. A single shared result channel flows back.
+//! 2. **Dispatch** (per step/phase): the coordinator *moves* each
+//!    contiguous rank group of [`WorkerState`]s (plus pre-sampled
+//!    batches and an `Arc` params handle) into a [`PoolJob::Compute`];
+//!    moving a `WorkerState` is pointer-sized — its buffers don't copy.
+//! 3. **Compute**: the thread runs the same pure
+//!    [`worker_step`](super::exec::worker_step)/
+//!    [`grad_step`](super::exec::grad_step) functions every other runtime
+//!    uses, drops its params handle, and sends states + results back.
+//! 4. **Barrier**: the coordinator collects one result per dispatched
+//!    job, re-sorts by rank, and owns every `WorkerState` again — at
+//!    which point `Arc::get_mut` on the params provably succeeds (each
+//!    thread's handle drop happens-before its result send; the channel's
+//!    release/acquire pair publishes the refcount decrement).
+//!
+//! Epoch/step sequencing needs no extra machinery: the coordinator never
+//! dispatches phase t+1 before the phase-t barrier completes, so each
+//! thread sees a strictly serial job stream and channel FIFO order is the
+//! whole synchronization story.
+//!
+//! **Bit-identity** follows the same argument as the scoped runtime, now
+//! with one fewer moving part: worker functions are pure in per-worker
+//! state, grouping is by contiguous ranks, results re-sort by rank, and
+//! aggregation runs the serial oracle schedule
+//! ([`crate::collectives::PooledCollectives`]). The end-to-end lock is
+//! `tests/pool_equivalence.rs` (every operator × both exchange paths ×
+//! every schedule family).
+//!
+//! ## The bucketed pipeline and payload recycling
+//!
+//! On the bucketed path the pool also replaces the per-step pipeline
+//! producer thread: a [`PoolJob::Pipeline`] moves *all* workers to
+//! thread 0, which compresses buckets in index order and streams each
+//! [`BucketMsg`] through a depth-1 channel (double buffering — the
+//! coordinator runs bucket b's collective while thread 0 compresses
+//! b+1). Consumed payloads flow *back* over a return channel: before
+//! compressing each bucket the producer drains it and recycles the O(k)
+//! buffers into the owning workers' workspaces
+//! ([`super::exec::recycle_bucket_msg`]); after the last bucket it blocks
+//! on the return channel until the coordinator closes it, so every
+//! payload of the step is recycled before the workers travel home — the
+//! bucketed path allocates **zero** steady-state payload buffers, like
+//! the monolithic path has since PR 3. (Big-bucket compression is not
+//! fanned out across pool threads the way the scoped runtime fans out
+//! with nested spawns — that was a scheduling-only optimization whose
+//! spawn cost is exactly what the pool exists to remove; the overlap
+//! with the ring is preserved.)
+//!
+//! ## Teardown
+//!
+//! Dropping the [`WorkerPool`] closes every job channel; threads observe
+//! the disconnect at their next `recv` and exit, and `Drop` joins them —
+//! mid-epoch teardown (early return, panic unwind, test harness drop) is
+//! deterministic and leak-free. A thread blocked mid-pipeline exits
+//! through the same path: its payload sends start failing the moment the
+//! coordinator's receiving end is gone.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::exec::{
+    grad_step, produce_bucket_msg, recycle_bucket_msg, worker_step, BucketMsg, PayloadBank,
+    StepCtx, WorkerMsg,
+};
+use super::worker::WorkerState;
+use crate::buckets::BucketSpec;
+use crate::data::Batch;
+use crate::models::Model;
+
+/// Which half of the step a [`PoolJob::Compute`] runs.
+#[derive(Clone, Copy)]
+pub(crate) enum PoolPhase {
+    /// Gradient + error feedback + compression ([`worker_step`]).
+    Full,
+    /// Gradient only — the bucketed path's phase 1 ([`grad_step`]).
+    Grad,
+}
+
+/// One unit of work shipped to a pool thread.
+pub(crate) enum PoolJob {
+    /// Run a compute phase over a contiguous rank group.
+    Compute {
+        ctx: StepCtx,
+        phase: PoolPhase,
+        states: Vec<WorkerState>,
+        batches: Vec<Batch>,
+        params: Arc<Vec<f32>>,
+    },
+    /// Run the bucketed compression pipeline over *all* workers
+    /// (dispatched to one thread; see the module docs).
+    Pipeline {
+        states: Vec<WorkerState>,
+        specs: Arc<Vec<BucketSpec>>,
+        ks: Vec<usize>,
+        is_dense: bool,
+        /// Cross-step buffer bank (travels with the job and back).
+        bank: PayloadBank,
+        payload_tx: mpsc::SyncSender<(usize, BucketMsg)>,
+        return_rx: mpsc::Receiver<BucketMsg>,
+    },
+    /// Liveness probe (tests, dispatch micro-benches).
+    Ping,
+}
+
+/// A pool thread's reply.
+pub(crate) enum PoolResult {
+    Compute {
+        states: Vec<WorkerState>,
+        msgs: Vec<WorkerMsg>,
+    },
+    Grad {
+        states: Vec<WorkerState>,
+        losses: Vec<(usize, f64)>,
+    },
+    Pipeline {
+        states: Vec<WorkerState>,
+        bank: PayloadBank,
+    },
+    Pong,
+}
+
+/// The persistent worker pool: N long-lived threads, one job channel
+/// each, one shared result channel. See the module docs for the
+/// protocol; the trainer drives it through the crate-internal
+/// `coordinator::exec::Executor`.
+pub struct WorkerPool {
+    job_txs: Vec<mpsc::Sender<PoolJob>>,
+    res_rx: mpsc::Receiver<PoolResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn one persistent thread per forked model replica. This is the
+    /// run's only thread creation — every subsequent step is channel
+    /// traffic.
+    pub fn spawn(fork_models: Vec<Box<dyn Model + Send>>) -> WorkerPool {
+        let (res_tx, res_rx) = mpsc::channel::<PoolResult>();
+        let mut job_txs = Vec::with_capacity(fork_models.len());
+        let mut handles = Vec::with_capacity(fork_models.len());
+        for (tid, model) in fork_models.into_iter().enumerate() {
+            let (job_tx, job_rx) = mpsc::channel::<PoolJob>();
+            let res_tx = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sparkv-pool-{tid}"))
+                .spawn(move || pool_thread_main(model, job_rx, res_tx))
+                .expect("failed to spawn pool worker thread");
+            job_txs.push(job_tx);
+            handles.push(handle);
+        }
+        WorkerPool {
+            job_txs,
+            res_rx,
+            handles,
+        }
+    }
+
+    /// Number of pool threads.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Round-trip a no-op job through every thread; returns the number of
+    /// responders (== [`Self::threads`] for a healthy pool). Used by the
+    /// teardown tests and the fig4 dispatch micro-bench — one `ping()` is
+    /// exactly the per-step channel cost a pooled compute phase pays.
+    pub fn ping(&self) -> usize {
+        for tx in &self.job_txs {
+            if tx.send(PoolJob::Ping).is_err() {
+                panic!("pool worker died before ping");
+            }
+        }
+        let mut pongs = 0;
+        for _ in 0..self.job_txs.len() {
+            match self.res_rx.recv() {
+                Ok(PoolResult::Pong) => pongs += 1,
+                Ok(_) => panic!("pool returned a non-pong result to ping"),
+                Err(_) => break,
+            }
+        }
+        pongs
+    }
+
+    /// Fire-and-forget pings (exercises drop-with-results-in-flight).
+    pub fn ping_async(&self) {
+        for tx in &self.job_txs {
+            let _ = tx.send(PoolJob::Ping);
+        }
+    }
+
+    /// Send `job` to thread `tid` (panics if that thread is gone — a pool
+    /// thread only exits on teardown, so this is a protocol bug, not a
+    /// recoverable condition).
+    pub(crate) fn send_job(&self, tid: usize, job: PoolJob) {
+        self.job_txs[tid]
+            .send(job)
+            .unwrap_or_else(|_| panic!("pool worker {tid} died mid-run"));
+    }
+
+    /// Receive the next result (phase barrier: callers issue exactly one
+    /// recv per dispatched job).
+    pub(crate) fn recv_result(&self) -> PoolResult {
+        self.res_rx
+            .recv()
+            .expect("all pool workers died mid-run")
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels is the shutdown signal; join makes
+        // teardown deterministic (no detached threads outliving the run).
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A pool thread's main loop: serve jobs until the job channel closes.
+fn pool_thread_main(
+    mut model: Box<dyn Model + Send>,
+    job_rx: mpsc::Receiver<PoolJob>,
+    res_tx: mpsc::Sender<PoolResult>,
+) {
+    while let Ok(job) = job_rx.recv() {
+        let result = match job {
+            PoolJob::Compute {
+                ctx,
+                phase,
+                mut states,
+                batches,
+                params,
+            } => {
+                let result = match phase {
+                    PoolPhase::Full => {
+                        let msgs: Vec<WorkerMsg> = states
+                            .iter_mut()
+                            .zip(&batches)
+                            .map(|(w, b)| worker_step(ctx, w, model.as_mut(), &params, b))
+                            .collect();
+                        PoolResult::Compute { states, msgs }
+                    }
+                    PoolPhase::Grad => {
+                        let losses: Vec<(usize, f64)> = states
+                            .iter_mut()
+                            .zip(&batches)
+                            .map(|(w, b)| grad_step(ctx, w, model.as_mut(), &params, b))
+                            .collect();
+                        PoolResult::Grad { states, losses }
+                    }
+                };
+                // Protocol: the params handle dies before the result is
+                // sent, so the coordinator's post-barrier `Arc::get_mut`
+                // always succeeds (drop happens-before send).
+                drop(params);
+                result
+            }
+            PoolJob::Pipeline {
+                states,
+                specs,
+                ks,
+                is_dense,
+                bank,
+                payload_tx,
+                return_rx,
+            } => run_pipeline(states, &specs, &ks, is_dense, bank, payload_tx, return_rx),
+            PoolJob::Ping => PoolResult::Pong,
+        };
+        if res_tx.send(result).is_err() {
+            // Coordinator gone (teardown raced a reply): exit quietly.
+            break;
+        }
+    }
+}
+
+/// The pooled bucketed-path producer: compress buckets in index order,
+/// stream payloads out, recycle everything the consumer returns, and only
+/// then hand the workers home. See the module docs for the termination
+/// protocol (the coordinator closes the return channel after its last
+/// bucket, which releases the final drain loop here).
+fn run_pipeline(
+    mut states: Vec<WorkerState>,
+    specs: &[BucketSpec],
+    ks: &[usize],
+    is_dense: bool,
+    mut bank: PayloadBank,
+    payload_tx: mpsc::SyncSender<(usize, BucketMsg)>,
+    return_rx: mpsc::Receiver<BucketMsg>,
+) -> PoolResult {
+    for (b, sp) in specs.iter().enumerate() {
+        // Drain whatever the consumer has already finished with.
+        while let Ok(spent) = return_rx.try_recv() {
+            recycle_bucket_msg(spent, &mut states, &mut bank);
+        }
+        let msg = produce_bucket_msg(&mut states, &mut bank, *sp, ks[b], is_dense);
+        if payload_tx.send((b, msg)).is_err() {
+            // Consumer gone (teardown/panic on the coordinator): abandon
+            // the step; the drain below unblocks immediately for the same
+            // reason.
+            break;
+        }
+    }
+    drop(payload_tx);
+    // Final drain: runs until the coordinator closes the return channel,
+    // so every payload of this step is recycled before the workers go
+    // home — next step's productions start from warm free lists.
+    while let Ok(spent) = return_rx.recv() {
+        recycle_bucket_msg(spent, &mut states, &mut bank);
+    }
+    PoolResult::Pipeline { states, bank }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::NativeMlp;
+
+    fn tiny_pool(n: usize) -> WorkerPool {
+        let proto = NativeMlp::new(&[4, 8, 2]);
+        let models: Vec<Box<dyn Model + Send>> = (0..n)
+            .map(|_| proto.fork().expect("native mlp forks"))
+            .collect();
+        WorkerPool::spawn(models)
+    }
+
+    #[test]
+    fn ping_round_trips_every_thread() {
+        let pool = tiny_pool(3);
+        assert_eq!(pool.threads(), 3);
+        assert_eq!(pool.ping(), 3);
+        // Repeat pings reuse the same threads (no respawn side effects).
+        assert_eq!(pool.ping(), 3);
+    }
+
+    #[test]
+    fn drop_joins_cleanly_with_results_in_flight() {
+        // Fire pings and drop without receiving: threads must finish the
+        // job, fail or buffer the reply, observe the closed job channel,
+        // and exit — Drop joins them all. A hang here fails via the test
+        // harness timeout.
+        let pool = tiny_pool(4);
+        pool.ping_async();
+        drop(pool);
+    }
+
+    #[test]
+    fn drop_immediately_after_spawn() {
+        let pool = tiny_pool(2);
+        drop(pool);
+    }
+}

@@ -19,76 +19,91 @@
 //! trainer bit-for-bit, `warmup` decays the density over early epochs,
 //! and `adaptive` picks k from the previous step's |u| histogram on
 //! worker 0 (collected as part of the worker fold, applied in rank order,
-//! so serial and threaded runs resolve identical k sequences). The
-//! resolved density lands in every [`StepRecord`] (CSV/JSON trace).
+//! so every runtime resolves identical k sequences). The resolved density
+//! lands in every [`StepRecord`] (CSV/JSON trace).
 //!
 //! ## Worker runtime
 //!
-//! The per-worker phase (gradient, error feedback, compression) runs
-//! either serially in rank order or — under `Parallelism::Threads(n)` —
-//! on up to `n` OS threads, each owning a disjoint contiguous group of
-//! workers plus its own forked model replica ([`Model::fork`]). Worker
-//! state (residual ε, compressor RNG streams, DGC velocity, data-shard
-//! RNG, compression workspace) lives in [`WorkerState`] and is owned by
-//! exactly one thread per step, so no locks are needed; aggregation then
-//! runs through the engine selected by the config
-//! (`collectives::Collectives`), and the channel-based ring engine
-//! preserves the serial engine's per-element summation order. The result:
-//! `Threads(n)` training trajectories are **bit-identical** to `Serial`
-//! for every operator and every n — the equivalence suite
-//! (`tests/parallel_equivalence.rs`) locks this.
+//! Since PR 4 the trainer is a thin step-orchestration loop over the
+//! execution layer (`coordinator::exec`): the per-worker phase (batch
+//! sample, gradient, error feedback, compression) is dispatched through
+//! an `Executor`, and the results are folded in rank order. Three runtimes implement the
+//! dispatch — serial rank-order loop, scoped threads re-spawned per step
+//! (`threads:N`), and the **persistent worker pool** (`pool:N`,
+//! [`super::pool`]) whose threads live for the whole run and receive
+//! per-step jobs over channels. Worker state (residual ε, compressor RNG
+//! streams, DGC velocity, data-shard RNG, compression workspace) lives in
+//! [`WorkerState`] and is owned by exactly one runtime unit per step, so
+//! no locks are needed; aggregation then runs through the engine selected
+//! by the config (`collectives::Collectives`). The result: `threads:N`
+//! and `pool:N` training trajectories are **bit-identical** to `serial`
+//! for every operator and every n — the equivalence suites
+//! (`tests/parallel_equivalence.rs`, `tests/pool_equivalence.rs`) lock
+//! this.
+//!
+//! The historical trade-off — scoped per-step spawns in exchange for a
+//! trivially deadlock-free runtime — still exists behind `threads:N`,
+//! and its ~tens-of-µs-per-step spawn cost is now *measured* (the
+//! `spawn_or_dispatch_us` field of every [`StepRecord`]) rather than
+//! waved at. The upgrade path that section of the old docs promised is
+//! `pool:N`: same bit-identity argument, zero steady-state spawns, with
+//! the channel/barrier protocol documented in [`super::pool`].
 //!
 //! ## Hot-loop allocation discipline
 //!
 //! Compression scratch comes from each worker's [`Workspace`]
-//! (`compress_step` contract). On the *monolithic* path payload buffers
-//! are also *recycled*: after the collective consumes a step's sparse
-//! payloads the trainer hands their buffers back to the owning worker's
-//! workspace, and the dense path moves `w.grad` out to the ring and back
-//! instead of cloning it. The bucketed exchange still allocates its
-//! per-bucket payloads (the producer owns the workers during the
-//! pipeline, so returning buffers needs a consumer→producer channel —
-//! an open item in ROADMAP.md). Snapshot copies (`keep_raw`) happen only
-//! on the steps where the histogram sampling actually fires.
-//!
-//! A deliberate trade-off: worker threads are scoped *per step* (spawn,
-//! compute, join), not pooled across steps. That keeps the runtime
-//! lock-free and trivially deadlock-free at a cost of ~tens of µs of
-//! spawn overhead per step — negligible at the gradient sizes where
-//! threading pays (the fig4 resnet50-sized collectives), and irrelevant
-//! to the determinism tests on miniature models. If per-step overhead
-//! ever matters for a large-model trainer, the upgrade path is a
-//! persistent worker pool fed by per-step channels behind the same
-//! `Parallelism` knob — the bit-identity argument is unchanged.
+//! (`compress_step` contract). Payload buffers are recycled on *both*
+//! exchange paths: the monolithic path hands each step's sparse payload
+//! buffers back to the owning worker's workspace after the collective
+//! (and moves dense `w.grad` out to the ring and back), and the bucketed
+//! path — which used to allocate per-bucket payloads every step — now
+//! routes consumed [`BucketMsg`]s back to the producer over a payload
+//! **return channel** ([`run_pipelined_return`], or the pool's pipeline
+//! return channel) where their buffers recycle into the workspaces and
+//! the cross-step [`PayloadBank`]. In the pooled steady state neither
+//! path spawns a thread or allocates a payload buffer. Snapshot copies
+//! (`keep_raw`) happen only on the steps where the histogram sampling
+//! actually fires.
 //!
 //! ## Bucketed, pipelined exchange
 //!
 //! With `buckets = layers|bytes:N` the step splits differently: gradients
-//! are computed first (same worker threading), then the flat gradient is
+//! are computed first (same worker runtime), then the flat gradient is
 //! walked bucket by bucket ([`BucketSchedule`]) — each bucket carries its
-//! own error-feedback residual slice and a share of this step's `k_t`
-//! (re-apportioned every step via [`BucketSchedule::apportion_k`], since
-//! the plan may move k between steps; EF residual semantics are
-//! unchanged). Under `Parallelism::Threads` the bucket loop runs through
-//! [`run_pipelined`]: a producer thread compresses bucket `i + 1` while
-//! the calling thread runs the collective for bucket `i` (double
-//! buffering over a rendezvous channel). Both paths walk buckets in index
-//! order over disjoint slices, so serial and pipelined bucketed training
-//! are **bit-identical** (`tests/bucket_equivalence.rs`); `buckets = none`
-//! keeps the monolithic path below untouched.
+//! own error-feedback residual slice and a share of this step's `k_t`,
+//! re-apportioned every step: proportional to bucket size by default, or
+//! to worker 0's per-bucket ‖u‖² under `bucket_apportion = mass`
+//! ([`BucketSchedule::apportion_k_by_mass`]; EF residual semantics are
+//! unchanged either way). Under `threads:N` the bucket loop runs through
+//! [`run_pipelined_return`]: a producer thread compresses bucket `i + 1`
+//! while the calling thread runs the collective for bucket `i`; under
+//! `pool:N` the same double-buffered schedule runs on pool thread 0 with
+//! no per-step spawn. All paths walk buckets in index order over disjoint
+//! slices, so serial, pipelined, and pooled bucketed training are
+//! **bit-identical** (`tests/bucket_equivalence.rs`,
+//! `tests/pool_equivalence.rs`); `buckets = none` keeps the monolithic
+//! path untouched.
 //!
 //! The trainer also captures the paper's measurement hooks: gradient
 //! histograms of u_t on worker 0 (Fig. 2/7/8/9), per-step communicated
 //! element counts (Fig. 10), and periodic eval accuracy (Fig. 1/6/11).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use super::optimizer::{momentum_correct, LrSchedule, SgdMomentum};
+use super::exec::{
+    produce_bucket_msg, recycle_bucket_msg, sparse_msg_from, BucketMsg, Executor, Payload,
+    PayloadBank, StepCtx,
+};
+use super::optimizer::{LrSchedule, SgdMomentum};
+use super::pool::{PoolJob, PoolResult, WorkerPool};
 use super::worker::WorkerState;
-use crate::buckets::{run_pipelined, BucketSchedule};
+use crate::buckets::{run_pipelined_return, BucketSchedule, BucketSpec};
 use crate::collectives::Collectives;
 use crate::compress::OpKind;
-use crate::config::{Buckets, TrainConfig};
+use crate::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
 use crate::data::DataSource;
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::models::Model;
@@ -116,133 +131,16 @@ pub struct TrainOutput {
     pub k: usize,
 }
 
-/// What one worker hands the aggregation phase for one step.
-enum Payload {
-    Dense(Vec<f32>),
-    Sparse(crate::tensor::SparseVec),
-}
-
-/// Per-worker result of the (possibly threaded) compute phase.
-struct WorkerMsg {
-    rank: usize,
-    loss: f64,
-    snapshot: Option<GradSnapshot>,
-    /// |u| histogram for the adaptive schedule (worker 0 only, and only
-    /// when the plan engine asked for feedback).
-    feedback: Option<Histogram>,
-    payload: Payload,
-}
-
-/// One bucket's worth of per-worker contributions (rank order), produced
-/// by the compression stage of the bucketed exchange and consumed by the
-/// aggregation stage.
-enum BucketMsg {
-    Dense(Vec<Vec<f32>>),
-    Sparse(Vec<crate::tensor::SparseVec>),
-}
-
-/// Immutable per-step context shared by every worker thread.
-#[derive(Clone, Copy)]
-struct StepCtx<'a> {
-    data: &'a dyn DataSource,
-    step: usize,
-    batch_size: usize,
-    is_dense: bool,
-    momentum_correction: bool,
-    momentum: f32,
-    hist_every: usize,
-    hist_bins: usize,
-    keep_raw: bool,
-    /// This step's resolved k (the plan's k_t).
-    k: usize,
-    /// Collect the adaptive-schedule |u| histogram on worker 0.
-    feedback: bool,
-}
-
-/// One worker's compute phase: sample the shard, compute the gradient,
-/// apply local momentum correction, error-feedback-compress at this
-/// step's k. Pure with respect to everything except `w` and the model's
-/// scratch, so the serial and threaded runtimes produce bit-identical
-/// messages.
-fn worker_step<M: Model + ?Sized>(
-    ctx: StepCtx<'_>,
-    w: &mut WorkerState,
-    model: &mut M,
-    params: &[f32],
-) -> WorkerMsg {
-    let batch = ctx.data.sample(ctx.batch_size, &mut w.data_rng);
-    let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
-
-    // Momentum correction: v ← m·v + g locally, compress v.
-    if ctx.momentum_correction && !ctx.is_dense {
-        momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
-    }
-
-    if ctx.is_dense {
-        return WorkerMsg {
-            rank: w.rank,
-            loss,
-            snapshot: None, // dense-mode snapshots: see the Fig. 8 block in `run`
-            feedback: None,
-            // Move the gradient buffer to the ring; the trainer hands it
-            // back after aggregation (no per-step clone).
-            payload: Payload::Dense(std::mem::take(&mut w.grad)),
-        };
-    }
-
-    let u = w.residual.accumulate(&w.grad);
-    // Snapshot u_t on worker 0 (paper plots worker 1; "different workers
-    // have very close distributions").
-    let snapshot = if w.rank == 0 && ctx.hist_every > 0 && ctx.step % ctx.hist_every == 0 {
-        Some(GradSnapshot {
-            step: ctx.step,
-            histogram: Histogram::auto(u, ctx.hist_bins),
-            raw: if ctx.keep_raw { Some(u.to_vec()) } else { None },
-        })
-    } else {
-        None
-    };
-    let feedback = if ctx.feedback && w.rank == 0 {
-        Some(feedback_histogram(u))
-    } else {
-        None
-    };
-    let s = w.compressor.compress_step(u, ctx.k, &mut w.workspace);
-    w.residual.update(&s);
-    WorkerMsg {
-        rank: w.rank,
-        loss,
-        snapshot,
-        feedback,
-        payload: Payload::Sparse(s),
-    }
-}
-
-/// One worker's gradient phase for the *bucketed* path: sample the shard,
-/// compute the gradient into `w.grad`, apply local momentum correction.
-/// This is exactly the front half of [`worker_step`]; error feedback and
-/// compression then run per bucket (`WorkerState::compress_bucket`).
-fn grad_step<M: Model + ?Sized>(
-    ctx: StepCtx<'_>,
-    w: &mut WorkerState,
-    model: &mut M,
-    params: &[f32],
-) -> (usize, f64) {
-    let batch = ctx.data.sample(ctx.batch_size, &mut w.data_rng);
-    let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
-    if ctx.momentum_correction && !ctx.is_dense {
-        momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
-    }
-    (w.rank, loss)
-}
-
 /// Minimum bucket size (elements) worth fanning compression out over the
-/// worker threads: below this the per-bucket `thread::scope` spawn cost
-/// (~tens of µs × nthreads) exceeds the compression work itself, so small
-/// buckets compress on the producer thread. Results are identical either
-/// way — per-worker compression is a pure function of per-worker state —
-/// so this is purely a scheduling knob, invisible to the bit-identity
-/// suite.
+/// *scoped* worker threads: below this the per-bucket `thread::scope`
+/// spawn cost (~tens of µs × nthreads) exceeds the compression work
+/// itself, so small buckets compress on the producer thread. This knob
+/// only exists under `threads:N` — the pooled runtime never nests spawns
+/// (re-paying per-bucket spawn cost is exactly what `pool:N` retires);
+/// its pipeline compresses every bucket on pool thread 0, still
+/// overlapped with the ring. Results are identical regardless —
+/// per-worker compression is a pure function of per-worker state — so
+/// this is purely a scheduling knob, invisible to the bit-identity suite.
 const FANOUT_MIN_BUCKET_ELEMS: usize = 1 << 15;
 
 /// The synchronous trainer.
@@ -266,7 +164,7 @@ impl<'a> Trainer<'a> {
         }
     }
 
-    /// Fork one model replica per worker thread (threaded runtimes only).
+    /// Fork one model replica per worker thread (multi-thread runtimes).
     fn fork_models(&self, nthreads: usize) -> anyhow::Result<Vec<Box<dyn Model + Send>>> {
         (0..nthreads)
             .map(|_| self.model.fork())
@@ -279,6 +177,27 @@ impl<'a> Trainer<'a> {
                     self.cfg.parallelism.name()
                 )
             })
+    }
+
+    /// Build the execution engine for this run's `parallelism` setting:
+    /// the serial rank-order loop, per-step scoped threads, or the
+    /// persistent worker pool (spawned here, joined when the run's
+    /// executor drops — the only thread creation of a pooled run).
+    fn build_executor(&self, p: usize) -> anyhow::Result<Executor> {
+        Ok(match self.cfg.parallelism {
+            Parallelism::Serial => Executor::Serial,
+            Parallelism::Threads(_) => {
+                let n = self.cfg.parallelism.threads().min(p).max(1);
+                Executor::Scoped {
+                    fork_models: self.fork_models(n)?,
+                    nthreads: n,
+                }
+            }
+            Parallelism::Pool(_) => {
+                let n = self.cfg.parallelism.threads().min(p).max(1);
+                Executor::Pool(WorkerPool::spawn(self.fork_models(n)?))
+            }
+        })
     }
 
     /// Build the global optimizer. DGC-style momentum correction moves
@@ -354,8 +273,8 @@ impl<'a> Trainer<'a> {
 
     /// Run the full training loop, dispatching on the exchange
     /// granularity: `buckets = none` keeps the original monolithic path;
-    /// `layers`/`bytes:N` runs the bucketed (and, under a threaded
-    /// runtime, pipelined) exchange.
+    /// `layers`/`bytes:N` runs the bucketed (and, under a threaded or
+    /// pooled runtime, pipelined) exchange.
     pub fn run(&mut self) -> anyhow::Result<TrainOutput> {
         self.cfg.validate()?;
         if self.cfg.buckets.is_bucketed() {
@@ -375,19 +294,10 @@ impl<'a> Trainer<'a> {
         let mut workers: Vec<WorkerState> = (0..p)
             .map(|r| WorkerState::new(r, d, self.cfg.op, self.cfg.seed))
             .collect();
-        let mut params = self.model.init(self.cfg.seed);
+        let mut executor = self.build_executor(p)?;
+        let mut params = executor.wrap_params(self.model.init(self.cfg.seed));
 
-        // Worker runtime: thread count and per-thread model replicas.
         let engine: Box<dyn Collectives> = self.cfg.parallelism.engine();
-        let threaded = self.cfg.parallelism.is_threaded();
-        let nthreads = self.cfg.parallelism.threads().min(p).max(1);
-        let mut fork_models: Vec<Box<dyn Model + Send>> = if threaded {
-            self.fork_models(nthreads)?
-        } else {
-            Vec::new()
-        };
-        let workers_per_thread = p.div_ceil(nthreads);
-
         let mut scheduler = self.build_scheduler(d);
         let is_dense = self.cfg.op == OpKind::Dense;
         let wants_feedback = !is_dense && scheduler.wants_feedback();
@@ -406,9 +316,7 @@ impl<'a> Trainer<'a> {
             let t0 = Instant::now();
             let plan = scheduler.plan(step);
             let ctx = StepCtx {
-                data: self.data,
                 step,
-                batch_size: self.cfg.batch_size,
                 is_dense,
                 momentum_correction: self.cfg.momentum_correction,
                 momentum: self.cfg.momentum,
@@ -419,39 +327,20 @@ impl<'a> Trainer<'a> {
                 feedback: wants_feedback,
             };
 
-            // Compute phase: serial rank order, or one thread per worker
-            // group. Messages are re-sorted by rank so everything
-            // downstream (loss sum, aggregation, residual restore) sees
-            // the exact serial order regardless of thread finish order.
-            let mut msgs: Vec<WorkerMsg> = if threaded {
-                let params_ref: &[f32] = &params;
-                let mut collected: Vec<WorkerMsg> = std::thread::scope(|s| {
-                    let handles: Vec<_> = workers
-                        .chunks_mut(workers_per_thread)
-                        .zip(fork_models.iter_mut())
-                        .map(|(group, model)| {
-                            s.spawn(move || {
-                                group
-                                    .iter_mut()
-                                    .map(|w| worker_step(ctx, w, model.as_mut(), params_ref))
-                                    .collect::<Vec<WorkerMsg>>()
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .flat_map(|h| h.join().expect("worker thread panicked"))
-                        .collect()
-                });
-                collected.sort_by_key(|m| m.rank);
-                collected
-            } else {
-                let model = &mut *self.model;
-                workers
-                    .iter_mut()
-                    .map(|w| worker_step(ctx, w, &mut *model, &params))
-                    .collect()
-            };
+            // Compute phase, dispatched through the execution layer
+            // (sampling placement is per-runtime — see `exec` — and
+            // numerics-invariant because each worker samples only from its
+            // own RNG). Every runtime returns messages in rank order, so
+            // everything downstream (loss sum, aggregation, residual
+            // restore) sees the exact serial order.
+            let (mut msgs, dispatch_us) = executor.run_full(
+                ctx,
+                &mut workers,
+                &mut *self.model,
+                &params,
+                self.data,
+                self.cfg.batch_size,
+            );
 
             // Fold messages in rank order (identical to the serial loop's
             // incremental accumulation).
@@ -531,7 +420,7 @@ impl<'a> Trainer<'a> {
                 }
             }
 
-            opt.step(&mut params, &agg, step, self.cfg.steps);
+            opt.step(params.make_mut(), &agg, step, self.cfg.steps);
 
             if let Some(h) = feedback_hist {
                 scheduler.observe(step, &h);
@@ -544,15 +433,16 @@ impl<'a> Trainer<'a> {
                 target_elements: if is_dense { (d * p) as u64 } else { (plan.k * p) as u64 },
                 density: if is_dense { 1.0 } else { plan.density },
                 wall_s: t0.elapsed().as_secs_f64(),
+                spawn_or_dispatch_us: dispatch_us,
             });
 
-            self.maybe_eval(step, &params, &mut eval_rng, &mut metrics);
+            self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut metrics);
         }
 
         Ok(TrainOutput {
             metrics,
             snapshots,
-            final_params: params,
+            final_params: params.into_vec(),
             k,
         })
     }
@@ -560,15 +450,16 @@ impl<'a> Trainer<'a> {
     /// The bucketed exchange path (`buckets = layers|bytes:N`): the flat
     /// gradient is partitioned by a [`BucketSchedule`]; each bucket
     /// carries its own error-feedback residual slice and a share of this
-    /// step's k_t ([`BucketSchedule::apportion_k`], recomputed per step
-    /// because the plan may move k). Under `Parallelism::Threads` the
-    /// buckets are *pipelined*: the worker threads compress bucket `i + 1`
-    /// while the collectives engine exchanges bucket `i` (double-buffered
-    /// producer/consumer, [`run_pipelined`]). Results are **bit-identical**
-    /// to the serial bucket loop — both walk the buckets in index order,
-    /// per-bucket work is a pure function of per-worker state, and the
-    /// engines themselves are serial/threaded bit-identical
-    /// (`tests/bucket_equivalence.rs`).
+    /// step's k_t, recomputed per step — by bucket size, or by worker 0's
+    /// per-bucket ‖u‖² under `bucket_apportion = mass`. Under `threads:N`
+    /// the buckets are *pipelined* (producer thread via
+    /// [`run_pipelined_return`]); under `pool:N` the pipeline runs on
+    /// pool thread 0 with zero per-step spawns, and consumed payloads
+    /// recycle through the return channel either way. Results are
+    /// **bit-identical** to the serial bucket loop — all paths walk the
+    /// buckets in index order, per-bucket work is a pure function of
+    /// per-worker state, and the engines themselves are bit-identical
+    /// (`tests/bucket_equivalence.rs`, `tests/pool_equivalence.rs`).
     fn run_bucketed(&mut self) -> anyhow::Result<TrainOutput> {
         let d = self.model.layout().total();
         let k = ((d as f64 * self.cfg.k_ratio).round() as usize).clamp(1, d);
@@ -579,6 +470,7 @@ impl<'a> Trainer<'a> {
             Buckets::Bytes(n) => BucketSchedule::fixed_bytes(d, n, k),
         };
         let is_dense = self.cfg.op == OpKind::Dense;
+        let mass_mode = self.cfg.bucket_apportion == BucketApportion::Mass && !is_dense;
 
         let mut workers: Vec<WorkerState> = (0..p)
             .map(|r| WorkerState::new(r, d, self.cfg.op, self.cfg.seed))
@@ -588,16 +480,12 @@ impl<'a> Trainer<'a> {
                 w.init_buckets(&schedule, self.cfg.op);
             }
         }
-        let mut params = self.model.init(self.cfg.seed);
+        let mut executor = self.build_executor(p)?;
+        let mut params = executor.wrap_params(self.model.init(self.cfg.seed));
 
         let engine: Box<dyn Collectives> = self.cfg.parallelism.engine();
         let threaded = self.cfg.parallelism.is_threaded();
         let nthreads = self.cfg.parallelism.threads().min(p).max(1);
-        let mut fork_models: Vec<Box<dyn Model + Send>> = if threaded {
-            self.fork_models(nthreads)?
-        } else {
-            Vec::new()
-        };
         let workers_per_thread = p.div_ceil(nthreads);
 
         let mut scheduler = self.build_scheduler(d);
@@ -605,21 +493,27 @@ impl<'a> Trainer<'a> {
 
         let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
-        let mut metrics = RunMetrics::new(&self.run_name(&format!("-buckets{}", schedule.len())));
+        let mut run_suffix = format!("-buckets{}", schedule.len());
+        if mass_mode {
+            run_suffix.push_str("-mass");
+        }
+        let mut metrics = RunMetrics::new(&self.run_name(&run_suffix));
         let mut snapshots = Vec::new();
         let mut agg = vec![0.0f32; d];
-        // Reusable u_0 = g + ε scratch for the snapshot/feedback block.
+        // Reusable u_0 = g + ε scratch for the snapshot/feedback/mass block.
         let mut u0: Vec<f32> = Vec::new();
+        // Per-step bucket masses (worker 0's ‖u_b‖², mass apportionment).
+        let mut bucket_mass: Vec<f64> = Vec::new();
+        // Cross-step payload buffer bank (see `exec::PayloadBank`) and the
+        // shared bucket specs the pool's pipeline jobs reference.
+        let mut bank = PayloadBank::default();
+        let specs_shared: Arc<Vec<BucketSpec>> = Arc::new(schedule.specs().to_vec());
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
             let plan = scheduler.plan(step);
-            // Per-step bucket budgets: Σ ks_t == min(k_t, d).
-            let ks_t: Vec<usize> = schedule.apportion_k(plan.k);
             let ctx = StepCtx {
-                data: self.data,
                 step,
-                batch_size: self.cfg.batch_size,
                 is_dense,
                 momentum_correction: self.cfg.momentum_correction,
                 momentum: self.cfg.momentum,
@@ -627,52 +521,33 @@ impl<'a> Trainer<'a> {
                 hist_bins: self.hist_bins,
                 keep_raw: self.keep_raw_snapshots,
                 k: plan.k,
-                // The bucketed worker phase is grad_step (no compression,
+                // The bucketed worker phase is grad-only (no compression,
                 // no per-worker feedback): schedule feedback is collected
                 // on the coordinator in Phase 2 below. Keep this false so
-                // routing Phase 1 through worker_step could never
+                // routing Phase 1 through the full step could never
                 // double-observe the scheduler.
                 feedback: false,
             };
 
             // Phase 1 — gradients (+ local momentum correction): the
-            // monolithic compute phase minus compression. Losses are
-            // re-sorted and folded in rank order so the f64 accumulation
-            // order matches the serial loop exactly.
-            let losses: Vec<(usize, f64)> = if threaded {
-                let params_ref: &[f32] = &params;
-                let mut collected: Vec<(usize, f64)> = std::thread::scope(|s| {
-                    let handles: Vec<_> = workers
-                        .chunks_mut(workers_per_thread)
-                        .zip(fork_models.iter_mut())
-                        .map(|(group, model)| {
-                            s.spawn(move || {
-                                group
-                                    .iter_mut()
-                                    .map(|w| grad_step(ctx, w, model.as_mut(), params_ref))
-                                    .collect::<Vec<(usize, f64)>>()
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .flat_map(|h| h.join().expect("worker thread panicked"))
-                        .collect()
-                });
-                collected.sort_by_key(|m| m.0);
-                collected
-            } else {
-                let model = &mut *self.model;
-                workers
-                    .iter_mut()
-                    .map(|w| grad_step(ctx, w, &mut *model, &params))
-                    .collect()
-            };
+            // monolithic compute phase minus compression, dispatched
+            // through the execution layer. Losses come back in rank order
+            // so the f64 accumulation order matches the serial loop
+            // exactly.
+            let (losses, dispatch_us) = executor.run_grad(
+                ctx,
+                &mut workers,
+                &mut *self.model,
+                &params,
+                self.data,
+                self.cfg.batch_size,
+            );
             let loss_acc: f64 = losses.iter().map(|&(_, l)| l).sum();
 
             // Phase 2 — snapshot u_t = g + ε on worker 0 (ε is untouched
             // until the bucket loop below, so this equals the monolithic
-            // snapshot) and/or the adaptive-schedule feedback histogram.
+            // snapshot), the adaptive-schedule feedback histogram, and/or
+            // the per-bucket ‖u‖² masses for `bucket_apportion = mass`.
             // Copies are made only when a consumer actually fires.
             let snap_now = self.cfg.hist_every > 0 && step % self.cfg.hist_every == 0;
             if is_dense {
@@ -688,7 +563,7 @@ impl<'a> Trainer<'a> {
                         },
                     });
                 }
-            } else if snap_now || wants_feedback {
+            } else if snap_now || wants_feedback || mass_mode {
                 let w0 = &workers[0];
                 u0.clear();
                 u0.extend(w0.grad.iter().zip(w0.residual.residual()).map(|(g, e)| g + e));
@@ -706,13 +581,37 @@ impl<'a> Trainer<'a> {
                         },
                     });
                 }
+                if mass_mode {
+                    bucket_mass.clear();
+                    for sp in schedule.specs() {
+                        bucket_mass.push(
+                            u0[sp.lo..sp.hi]
+                                .iter()
+                                .map(|&v| (v as f64) * (v as f64))
+                                .sum(),
+                        );
+                    }
+                }
             }
 
-            // Phase 3 — the bucket exchange. `produce` compresses bucket b
-            // across all workers; `consume` runs the collective for bucket
-            // b and scatters the aggregate. Pipelined mode overlaps the
-            // two on adjacent buckets; serial mode interleaves them — the
-            // per-bucket computations are identical either way.
+            // Per-step bucket budgets: Σ ks_t == min(k_t, d). Mass mode
+            // steers the split by worker 0's per-bucket energy (identical
+            // on every runtime — the stats come from the coordinator-side
+            // u_0 above); degenerate stats fall back to the size split
+            // inside `apportion_k_by_mass`.
+            let ks_t: Vec<usize> = if mass_mode {
+                schedule.apportion_k_by_mass(plan.k, &bucket_mass)
+            } else {
+                schedule.apportion_k(plan.k)
+            };
+
+            // Phase 3 — the bucket exchange. The producer compresses
+            // bucket b across all workers; the consumer runs the
+            // collective for bucket b, scatters the aggregate, and hands
+            // the spent payload back for recycling. Pipelined runtimes
+            // overlap the two on adjacent buckets; the serial loop
+            // interleaves them — the per-bucket computations are identical
+            // either way.
             agg.iter_mut().for_each(|v| *v = 0.0);
             let mut sent: u64 = 0;
             // gTop-k residual restores are deferred until after the bucket
@@ -722,76 +621,30 @@ impl<'a> Trainer<'a> {
             // immaterial.
             let mut restores: Vec<(usize, u32, f32)> = Vec::new();
             let nb = schedule.len();
-            {
+            // Phase-3 launch costs, folded into this step's
+            // spawn_or_dispatch_us: the pool's pipeline-job send, and the
+            // scoped runtime's per-bucket fanout spawns (accumulated from
+            // the producer thread, hence the atomic).
+            let mut pipeline_dispatch_us = 0.0f64;
+            let fanout_spawn_ns = AtomicU64::new(0);
+            let leftovers: Vec<BucketMsg> = {
                 let specs = schedule.specs();
                 let ks_ref: &[usize] = &ks_t;
                 let engine_ref: &dyn Collectives = engine.as_ref();
                 let global_topk = self.cfg.global_topk;
-                let workers_ref: &mut [WorkerState] = &mut workers;
                 let agg_ref = &mut agg;
                 let sent_ref = &mut sent;
                 let restores_ref = &mut restores;
-                let mut produce = move |b: usize| -> BucketMsg {
-                    let sp = specs[b];
-                    if is_dense {
-                        BucketMsg::Dense(
-                            workers_ref
-                                .iter()
-                                .map(|w| w.grad[sp.lo..sp.hi].to_vec())
-                                .collect(),
-                        )
-                    } else if nthreads > 1 && sp.len() >= FANOUT_MIN_BUCKET_ELEMS {
-                        // Fan the bucket's compression out over the worker
-                        // groups (big buckets only — below the threshold
-                        // the per-bucket thread spawns cost more than the
-                        // compression they parallelize); rank order
-                        // restored before aggregation.
-                        let payloads: Vec<crate::tensor::SparseVec> =
-                            std::thread::scope(|s| {
-                                let handles: Vec<_> = workers_ref
-                                    .chunks_mut(workers_per_thread)
-                                    .map(|group| {
-                                        s.spawn(move || {
-                                            group
-                                                .iter_mut()
-                                                .map(|w| {
-                                                    (
-                                                        w.rank,
-                                                        w.compress_bucket(
-                                                            b, sp.lo, sp.hi, ks_ref[b],
-                                                        ),
-                                                    )
-                                                })
-                                                .collect::<Vec<_>>()
-                                        })
-                                    })
-                                    .collect();
-                                let mut all: Vec<(usize, crate::tensor::SparseVec)> = handles
-                                    .into_iter()
-                                    .flat_map(|h| {
-                                        h.join().expect("bucket compress thread panicked")
-                                    })
-                                    .collect();
-                                all.sort_by_key(|m| m.0);
-                                all.into_iter().map(|m| m.1).collect()
-                            });
-                        BucketMsg::Sparse(payloads)
-                    } else {
-                        BucketMsg::Sparse(
-                            workers_ref
-                                .iter_mut()
-                                .map(|w| w.compress_bucket(b, sp.lo, sp.hi, ks_ref[b]))
-                                .collect(),
-                        )
-                    }
-                };
-                let mut consume = move |b: usize, msg: BucketMsg| {
+                // Consume bucket b's message and return it spent (the
+                // driver routes it back to the producer for recycling).
+                let mut consume = move |b: usize, msg: BucketMsg| -> BucketMsg {
                     let sp = specs[b];
                     match msg {
                         BucketMsg::Dense(slices) => {
                             *sent_ref += (slices.len() * sp.len()) as u64;
                             let red = engine_ref.ring_allreduce_avg(&slices);
                             agg_ref[sp.lo..sp.hi].copy_from_slice(&red);
+                            BucketMsg::Dense(slices)
                         }
                         BucketMsg::Sparse(msgs) => {
                             *sent_ref += msgs.iter().map(|m| m.nnz() as u64).sum::<u64>();
@@ -822,24 +675,148 @@ impl<'a> Trainer<'a> {
                                 let dense_b = engine_ref.sparse_allgather_avg(&msgs);
                                 agg_ref[sp.lo..sp.hi].copy_from_slice(&dense_b);
                             }
+                            BucketMsg::Sparse(msgs)
                         }
                     }
                 };
-                if threaded && nb > 1 {
-                    run_pipelined(nb, produce, consume);
-                } else {
+
+                if let Some(pool) = executor.pool() {
+                    // Pooled pipeline: ship workers + bank to pool thread
+                    // 0, consume payloads in bucket order here, return
+                    // each spent message for recycling, then close the
+                    // return channel to release the producer's final
+                    // drain. Zero thread spawns, zero leftover payloads.
+                    let (payload_tx, payload_rx) = mpsc::sync_channel::<(usize, BucketMsg)>(1);
+                    let (return_tx, return_rx) = mpsc::channel::<BucketMsg>();
+                    let t_dispatch = Instant::now();
+                    pool.send_job(
+                        0,
+                        PoolJob::Pipeline {
+                            states: workers.drain(..).collect(),
+                            specs: Arc::clone(&specs_shared),
+                            ks: ks_t.clone(),
+                            is_dense,
+                            bank: std::mem::take(&mut bank),
+                            payload_tx,
+                            return_rx,
+                        },
+                    );
+                    pipeline_dispatch_us = t_dispatch.elapsed().as_secs_f64() * 1e6;
                     for b in 0..nb {
-                        let msg = produce(b);
-                        consume(b, msg);
+                        let (bb, msg) = payload_rx.recv().expect("pool pipeline hung up");
+                        debug_assert_eq!(bb, b, "pipeline bucket order violated");
+                        let spent = consume(b, msg);
+                        let _ = return_tx.send(spent);
+                    }
+                    drop(return_tx);
+                    match pool.recv_result() {
+                        PoolResult::Pipeline { states, bank: b } => {
+                            workers.extend(states);
+                            bank = b;
+                        }
+                        _ => unreachable!("pool returned a non-pipeline result"),
+                    }
+                    workers.sort_by_key(|w| w.rank);
+                    Vec::new()
+                } else {
+                    let workers_ref: &mut [WorkerState] = &mut workers;
+                    let bank_ref = &mut bank;
+                    let fanout_ns_ref = &fanout_spawn_ns;
+                    let mut produce = move |b: usize, spent: &mut Vec<BucketMsg>| -> BucketMsg {
+                        // Recycle everything the consumer has returned so
+                        // far — payload buffers go back to the workspaces,
+                        // containers to the bank.
+                        for m in spent.drain(..) {
+                            recycle_bucket_msg(m, workers_ref, bank_ref);
+                        }
+                        let sp = specs[b];
+                        if !is_dense && nthreads > 1 && sp.len() >= FANOUT_MIN_BUCKET_ELEMS {
+                            // Fan the bucket's compression out over the
+                            // scoped worker threads (big buckets only —
+                            // below the threshold the per-bucket spawns
+                            // cost more than the compression they
+                            // parallelize); rank order restored before
+                            // aggregation.
+                            let payloads: Vec<crate::tensor::SparseVec> =
+                                std::thread::scope(|s| {
+                                    let t_spawn = Instant::now();
+                                    let handles: Vec<_> = workers_ref
+                                        .chunks_mut(workers_per_thread)
+                                        .map(|group| {
+                                            s.spawn(move || {
+                                                group
+                                                    .iter_mut()
+                                                    .map(|w| {
+                                                        (
+                                                            w.rank,
+                                                            w.compress_bucket(
+                                                                sp.index, sp.lo, sp.hi,
+                                                                ks_ref[b],
+                                                            ),
+                                                        )
+                                                    })
+                                                    .collect::<Vec<_>>()
+                                            })
+                                        })
+                                        .collect();
+                                    fanout_ns_ref.fetch_add(
+                                        t_spawn.elapsed().as_nanos() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                    let mut all: Vec<(usize, crate::tensor::SparseVec)> =
+                                        handles
+                                            .into_iter()
+                                            .flat_map(|h| {
+                                                h.join()
+                                                    .expect("bucket compress thread panicked")
+                                            })
+                                            .collect();
+                                    all.sort_by_key(|m| m.0);
+                                    all.into_iter().map(|m| m.1).collect()
+                                });
+                            sparse_msg_from(bank_ref, payloads)
+                        } else {
+                            produce_bucket_msg(workers_ref, bank_ref, sp, ks_ref[b], is_dense)
+                        }
+                    };
+                    if threaded && nb > 1 {
+                        let (lo, spawn_s) =
+                            run_pipelined_return(nb, produce, |b, msg| Some(consume(b, msg)));
+                        // The per-step producer-thread spawn is part of the
+                        // scoped runtime's launch bill.
+                        pipeline_dispatch_us = spawn_s * 1e6;
+                        lo
+                    } else {
+                        // Serial bucket loop with the same recycling
+                        // contract: spent messages feed the next
+                        // production's free lists.
+                        let mut spent_bank: Vec<BucketMsg> = Vec::new();
+                        for b in 0..nb {
+                            let item = produce(b, &mut spent_bank);
+                            let spent = consume(b, item);
+                            spent_bank.push(spent);
+                        }
+                        spent_bank
                     }
                 }
+            };
+            // Whatever the producer never drained (the final buckets)
+            // recycles here, seeding the next step's free lists.
+            for m in leftovers {
+                recycle_bucket_msg(m, &mut workers, &mut bank);
             }
             for (wi, gi, v) in restores.drain(..) {
                 workers[wi].residual.restore(gi as usize, v);
             }
 
-            opt.step(&mut params, &agg, step, self.cfg.steps);
+            opt.step(params.make_mut(), &agg, step, self.cfg.steps);
 
+            // Launch cost of the whole step: phase-1 dispatch plus the
+            // phase-3 pipeline-job send (pool) or per-bucket fanout
+            // spawns (scoped) — the complete spawn-vs-dispatch picture.
+            let launch_us = dispatch_us
+                + pipeline_dispatch_us
+                + fanout_spawn_ns.load(Ordering::Relaxed) as f64 / 1e3;
             metrics.record_step(StepRecord {
                 step,
                 loss: loss_acc / p as f64,
@@ -847,15 +824,16 @@ impl<'a> Trainer<'a> {
                 target_elements: if is_dense { (d * p) as u64 } else { (plan.k * p) as u64 },
                 density: if is_dense { 1.0 } else { plan.density },
                 wall_s: t0.elapsed().as_secs_f64(),
+                spawn_or_dispatch_us: launch_us,
             });
 
-            self.maybe_eval(step, &params, &mut eval_rng, &mut metrics);
+            self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut metrics);
         }
 
         Ok(TrainOutput {
             metrics,
             snapshots,
-            final_params: params,
+            final_params: params.into_vec(),
             k,
         })
     }
@@ -869,7 +847,6 @@ pub fn train(
 ) -> anyhow::Result<TrainOutput> {
     Trainer::new(cfg, model, data).run()
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -894,6 +871,7 @@ mod tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
         }
@@ -940,6 +918,7 @@ mod tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
         };
@@ -993,6 +972,40 @@ mod tests {
         let (data, mut model) = setup();
         let mut cfg = quick_cfg(OpKind::TopK, 10);
         cfg.parallelism = Parallelism::Threads(64); // > workers=4
+        let out = train(cfg, &mut model, &data).unwrap();
+        let serial = train(quick_cfg(OpKind::TopK, 10), &mut model, &data).unwrap();
+        assert_eq!(out.final_params, serial.final_params);
+    }
+
+    #[test]
+    fn pooled_runs_match_serial_bitwise() {
+        // The PR-4 tentpole in miniature (the full operator × path ×
+        // schedule sweep lives in tests/pool_equivalence.rs).
+        let (data, mut model) = setup();
+        let serial = train(quick_cfg(OpKind::TopK, 20), &mut model, &data).unwrap();
+        let mut pcfg = quick_cfg(OpKind::TopK, 20);
+        pcfg.parallelism = Parallelism::Pool(3);
+        let pooled = train(pcfg, &mut model, &data).unwrap();
+        assert_eq!(serial.final_params, pooled.final_params);
+        for (a, b) in serial.metrics.steps.iter().zip(&pooled.metrics.steps) {
+            assert_eq!(a.loss, b.loss, "step {} loss diverged", a.step);
+            assert_eq!(a.sent_elements, b.sent_elements);
+        }
+        // Launch-overhead accounting: serial dispatches nothing; the pool
+        // records its (tiny) channel-send cost.
+        assert!(serial.metrics.steps.iter().all(|s| s.spawn_or_dispatch_us == 0.0));
+        assert!(pooled
+            .metrics
+            .steps
+            .iter()
+            .all(|s| s.spawn_or_dispatch_us.is_finite() && s.spawn_or_dispatch_us >= 0.0));
+    }
+
+    #[test]
+    fn pool_exceeding_workers_is_capped() {
+        let (data, mut model) = setup();
+        let mut cfg = quick_cfg(OpKind::TopK, 10);
+        cfg.parallelism = Parallelism::Pool(64); // > workers=4
         let out = train(cfg, &mut model, &data).unwrap();
         let serial = train(quick_cfg(OpKind::TopK, 10), &mut model, &data).unwrap();
         assert_eq!(out.final_params, serial.final_params);
@@ -1060,6 +1073,7 @@ mod schedule_trainer_tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: schedule,
             steps_per_epoch: 5,
         }
@@ -1183,6 +1197,7 @@ mod momentum_correction_tests {
             global_topk: false,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
         };
@@ -1243,6 +1258,7 @@ mod gtopk_trainer_tests {
             global_topk,
             parallelism: Parallelism::Serial,
             buckets: crate::config::Buckets::None,
+            bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
         }

@@ -36,8 +36,9 @@ fn main() -> anyhow::Result<()> {
                 "sparkv — Top-K sparsification for distributed deep learning\n\n\
                  USAGE: sparkv <train|simulate|bench-op|analyze> [OPTIONS]\n\n\
                  train     --op <dense|topk|randk|dgc|trimmed|gaussiank> --workers N --steps N\n\
-                 \x20         [--parallelism serial|threads|threads:N] [--buckets none|layers|bytes:N]\n\
+                 \x20         [--parallelism serial|threads:N|pool:N] [--buckets none|layers|bytes:N]\n\
                  \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
+                 \x20         [--bucket-apportion size|mass]\n\
                  \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
                  \x20         [--backend native|pjrt --model <name>]\n\
                  simulate  [--k-ratio 0.001] [--nodes 4 --gpus 4]\n\
@@ -65,6 +66,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "seed",
         "parallelism",
         "buckets",
+        "bucket_apportion",
         "k_schedule",
         "steps_per_epoch",
     ] {

@@ -23,6 +23,16 @@ pub struct StepRecord {
     pub density: f64,
     /// Wall-clock seconds for the step (L3 hot path).
     pub wall_s: f64,
+    /// Wall-clock microseconds the worker runtime spent *launching* this
+    /// step's work: scoped thread spawns (worker phase + pipeline
+    /// producer + big-bucket fanout) under `parallelism = threads:N`,
+    /// channel job sends under `pool:N`, and exactly 0 for `serial`.
+    /// Launch side only — the matching join/recv barrier overlaps
+    /// compute, so this is a lower bound on the runtime's total per-step
+    /// overhead (`netsim::runtime_overhead_s` models the end-to-end
+    /// cost). The pooled-vs-scoped win made visible in every trace
+    /// (CSV/JSON).
+    pub spawn_or_dispatch_us: f64,
 }
 
 /// Periodic evaluation record.
@@ -147,8 +157,26 @@ impl RunMetrics {
                         .collect(),
                 ),
             )
+            .set(
+                "spawn_or_dispatch_us",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| Json::from(s.spawn_or_dispatch_us))
+                        .collect(),
+                ),
+            )
             .set("mean_step_s", Json::from(self.step_time.mean()));
         o
+    }
+
+    /// Mean per-step runtime-launch overhead (µs) — the headline number of
+    /// the scoped-spawn vs pooled-dispatch comparison.
+    pub fn mean_spawn_or_dispatch_us(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.spawn_or_dispatch_us).sum::<f64>() / self.steps.len() as f64
     }
 
     /// Write step records as CSV.
@@ -157,12 +185,21 @@ impl RunMetrics {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,loss,sent_elements,target_elements,density,wall_s")?;
+        writeln!(
+            f,
+            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us"
+        )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{}",
-                s.step, s.loss, s.sent_elements, s.target_elements, s.density, s.wall_s
+                "{},{},{},{},{},{},{}",
+                s.step,
+                s.loss,
+                s.sent_elements,
+                s.target_elements,
+                s.density,
+                s.wall_s,
+                s.spawn_or_dispatch_us
             )?;
         }
         Ok(())
@@ -181,6 +218,7 @@ mod tests {
             target_elements: 10,
             density: 0.001,
             wall_s: 0.01,
+            spawn_or_dispatch_us: 12.5,
         }
     }
 
@@ -224,8 +262,9 @@ mod tests {
         let path = dir.join("run.csv");
         m.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("step,loss,sent_elements,target_elements,density,wall_s"));
-        assert!(text.contains("0,0.5,3,10,0.001,0.01"));
+        let header = "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us";
+        assert!(text.starts_with(header));
+        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -236,7 +275,24 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("density").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(
+            j.get("spawn_or_dispatch_us").unwrap().as_arr().unwrap().len(),
+            1
+        );
         assert_eq!(j.get("name").unwrap().as_str(), Some("run"));
+    }
+
+    #[test]
+    fn dispatch_overhead_mean() {
+        let mut m = RunMetrics::new("t");
+        assert_eq!(m.mean_spawn_or_dispatch_us(), 0.0);
+        let mut a = rec(0, 1.0, 5);
+        a.spawn_or_dispatch_us = 10.0;
+        let mut b = rec(1, 1.0, 5);
+        b.spawn_or_dispatch_us = 30.0;
+        m.record_step(a);
+        m.record_step(b);
+        assert_eq!(m.mean_spawn_or_dispatch_us(), 20.0);
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //!   pays its own `(P − 1)·α` latency, and the hidden wall time surfaces
 //!   as `IterationBreakdown::overlap_saved` — making the bucket-size
 //!   trade-off (more overlap vs more latency terms) a first-class
-//!   scenario axis for Table 2.
+//!   scenario axis for Table 2. A per-iteration host-runtime overhead
+//!   (`SimConfig::host_overhead_s`, modelled by [`runtime_overhead_s`])
+//!   exposes the trainer's spawn-per-step vs pooled-dispatch choice to
+//!   the cost model; its measured twin is the trainer's
+//!   `spawn_or_dispatch_us` trace field.
 //!
 //! Table 2 is a systems-balance result — it depends on the *ratios*
 //! compute : selection : communication. Those three inputs are calibrated
@@ -36,5 +40,8 @@ pub mod topology;
 pub use cost::{allgather_time, allreduce_time};
 pub use link::LinkSpec;
 pub use ops_cost::{ComputeProfile, OpCostModel};
-pub use sim::{IterationBreakdown, SimConfig, Simulator};
+pub use sim::{
+    runtime_overhead_s, IterationBreakdown, SimConfig, Simulator, POOL_DISPATCH_PER_THREAD_S,
+    SPAWN_PER_THREAD_S,
+};
 pub use topology::Topology;

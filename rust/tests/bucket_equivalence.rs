@@ -221,6 +221,7 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         global_topk: false,
         parallelism,
         buckets,
+        bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
     }

@@ -25,6 +25,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         global_topk: false,
         parallelism: Parallelism::Serial,
         buckets: sparkv::config::Buckets::None,
+        bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
     }

@@ -79,6 +79,7 @@ fn straggler_jitter_slows_barrier_monotonically() {
             straggler_sigma: sigma,
             seed: 9,
             buckets: 1,
+            host_overhead_s: 0.0,
         };
         means.push(Simulator::new(cfg).mean_iteration(100).total);
     }

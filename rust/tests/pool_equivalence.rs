@@ -1,0 +1,316 @@
+//! The persistent-worker-pool equivalence suite: locks the PR-4 tentpole
+//! invariant that `parallelism = pool:N` produces **bit-identical**
+//! training trajectories to `serial` (and therefore to `threads:N`, via
+//! `tests/parallel_equivalence.rs`) — pooling changes wall-clock time and
+//! steady-state spawn/allocation counts, never numerics.
+//!
+//! Four layers of defence:
+//! 1. end-to-end bit-identity for every operator on both exchange paths
+//!    (monolithic and bucketed), across every schedule family
+//!    (const/warmup/adaptive), with gTop-k and mass apportionment
+//!    included;
+//! 2. the pool teardown contract: dropping the pool joins its threads
+//!    deterministically, including mid-epoch and with replies in flight;
+//! 3. a property test that payload-buffer recycling can never alias two
+//!    live payloads (the mechanism behind "zero steady-state payload
+//!    allocations" must be capacity-only);
+//! 4. launch-overhead accounting: the `spawn_or_dispatch_us` trace field
+//!    is 0 for serial and finite for the dispatching runtimes.
+
+use sparkv::compress::{Compressor, OpKind, Workspace};
+use sparkv::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
+use sparkv::coordinator::{train, TrainOutput, WorkerPool};
+use sparkv::data::GaussianMixture;
+use sparkv::models::{Model, NativeMlp};
+use sparkv::schedule::KSchedule;
+use sparkv::util::testkit::{self, Gen};
+
+fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        op,
+        k_ratio: 0.01,
+        batch_size: 16,
+        steps: 12,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: 7,
+        eval_every: 6,
+        hist_every: 0,
+        momentum_correction: false,
+        global_topk: false,
+        parallelism,
+        buckets,
+        bucket_apportion: BucketApportion::Size,
+        k_schedule: KSchedule::Const(None),
+        steps_per_epoch: 5,
+    }
+}
+
+fn setup() -> (GaussianMixture, NativeMlp) {
+    (
+        GaussianMixture::new(16, 4, 2.5, 1.0, 11),
+        NativeMlp::new(&[16, 32, 4]),
+    )
+}
+
+fn assert_runs_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.final_params, b.final_params, "{what}: final params diverged");
+    assert_eq!(a.metrics.steps.len(), b.metrics.steps.len(), "{what}");
+    for (sa, sb) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "{what}: step {}", sa.step);
+        assert_eq!(sa.sent_elements, sb.sent_elements, "{what}: step {}", sa.step);
+        assert_eq!(sa.density.to_bits(), sb.density.to_bits(), "{what}: step {}", sa.step);
+    }
+    for (ea, eb) in a.metrics.evals.iter().zip(&b.metrics.evals) {
+        assert_eq!(ea.accuracy.to_bits(), eb.accuracy.to_bits(), "{what}: eval {}", ea.step);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 1: end-to-end bit-identity.
+// ---------------------------------------------------------------------
+
+/// Every operator, monolithic path: pool:3 ≡ serial bit-for-bit.
+#[test]
+fn pool_matches_serial_every_op_monolithic() {
+    let (data, mut model) = setup();
+    for &op in OpKind::all() {
+        let serial =
+            train(cfg(op, Buckets::None, Parallelism::Serial), &mut model, &data).unwrap();
+        let pooled =
+            train(cfg(op, Buckets::None, Parallelism::Pool(3)), &mut model, &data).unwrap();
+        assert_runs_bit_identical(&serial, &pooled, &format!("monolithic/{}", op.name()));
+    }
+}
+
+/// Every operator, bucketed path (3 buckets): the pooled pipeline —
+/// including its payload return channel — is bit-identical to the serial
+/// bucket loop.
+#[test]
+fn pool_matches_serial_every_op_bucketed() {
+    let (data, mut model) = setup();
+    let buckets = Buckets::Bytes(1024); // 256-element buckets over d = 676
+    for &op in OpKind::all() {
+        let serial = train(cfg(op, buckets, Parallelism::Serial), &mut model, &data).unwrap();
+        let pooled = train(cfg(op, buckets, Parallelism::Pool(3)), &mut model, &data).unwrap();
+        assert_runs_bit_identical(&serial, &pooled, &format!("bucketed/{}", op.name()));
+    }
+}
+
+/// Every schedule family × both exchange paths: the pool resolves the
+/// identical per-step k sequence (adaptive feedback included) and the
+/// identical trajectory; threads:3 agrees too, closing the three-runtime
+/// triangle.
+#[test]
+fn pool_matches_serial_across_schedules_both_paths() {
+    let (data, mut model) = setup();
+    let schedules = [
+        KSchedule::Const(None),
+        KSchedule::Warmup { from: 0.1, to: 0.01, epochs: 2 },
+        KSchedule::Adaptive { delta: 0.8 },
+    ];
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        for schedule in schedules {
+            let mk = |parallelism| {
+                let mut c = cfg(OpKind::TopK, buckets, parallelism);
+                c.k_schedule = schedule;
+                c
+            };
+            let what = format!("{}/{}", buckets.name(), schedule.name());
+            let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+            let pooled = train(mk(Parallelism::Pool(3)), &mut model, &data).unwrap();
+            let threaded = train(mk(Parallelism::Threads(3)), &mut model, &data).unwrap();
+            assert_runs_bit_identical(&serial, &pooled, &format!("pool/{what}"));
+            assert_runs_bit_identical(&serial, &threaded, &format!("threads/{what}"));
+        }
+    }
+}
+
+/// gTop-k aggregation (global re-truncation + deferred residual
+/// restores) under the pool, on both paths.
+#[test]
+fn pool_matches_serial_gtopk_both_paths() {
+    let (data, mut model) = setup();
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        let mk = |parallelism| {
+            let mut c = cfg(OpKind::TopK, buckets, parallelism);
+            c.global_topk = true;
+            c
+        };
+        let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+        let pooled = train(mk(Parallelism::Pool(2)), &mut model, &data).unwrap();
+        assert_runs_bit_identical(&serial, &pooled, &format!("gtopk/{}", buckets.name()));
+    }
+}
+
+/// `bucket_apportion = mass`: the mass split is computed on the
+/// coordinator from worker 0's u, so it must resolve identically on
+/// every runtime; TopK sends exactly Σ k_b = k_t per worker, so the wire
+/// budget is conserved under the adaptive split.
+#[test]
+fn mass_apportionment_pool_matches_serial_and_conserves_budget() {
+    let (data, mut model) = setup();
+    let mk = |parallelism| {
+        let mut c = cfg(OpKind::TopK, Buckets::Bytes(1024), parallelism);
+        c.bucket_apportion = BucketApportion::Mass;
+        c.steps = 40; // long enough for the learns-something check below
+        c
+    };
+    let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+    let pooled = train(mk(Parallelism::Pool(3)), &mut model, &data).unwrap();
+    let threaded = train(mk(Parallelism::Threads(2)), &mut model, &data).unwrap();
+    assert_runs_bit_identical(&serial, &pooled, "mass/pool");
+    assert_runs_bit_identical(&serial, &threaded, "mass/threads");
+    // Exact-k operator + exact apportionment ⇒ sends match the target
+    // volume every step, mass-steered or not.
+    for s in &serial.metrics.steps {
+        assert_eq!(s.sent_elements, s.target_elements, "step {}", s.step);
+    }
+    // And the mass mode actually trains.
+    assert!(serial.metrics.best_accuracy().unwrap() > 0.3);
+}
+
+/// Mass and size apportionment are both valid EF-SGD instances — they
+/// may pick different buckets but must send the same total volume.
+#[test]
+fn mass_and_size_apportionment_send_identical_volume() {
+    let (data, mut model) = setup();
+    let size_cfg = cfg(OpKind::TopK, Buckets::Bytes(1024), Parallelism::Serial);
+    let size = train(size_cfg, &mut model, &data).unwrap();
+    let mut mass_cfg = cfg(OpKind::TopK, Buckets::Bytes(1024), Parallelism::Serial);
+    mass_cfg.bucket_apportion = BucketApportion::Mass;
+    let mass = train(mass_cfg, &mut model, &data).unwrap();
+    for (a, b) in size.metrics.steps.iter().zip(&mass.metrics.steps) {
+        assert_eq!(a.sent_elements, b.sent_elements, "step {}", a.step);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 2: teardown.
+// ---------------------------------------------------------------------
+
+/// A pooled run that ends mid-epoch (steps % steps_per_epoch != 0) drops
+/// its pool on exit; a second run immediately after proves the first
+/// teardown left nothing behind (threads joined, no poisoned state).
+#[test]
+fn pool_teardown_mid_epoch_and_respawn() {
+    let (data, mut model) = setup();
+    let mut c = cfg(OpKind::TopK, Buckets::None, Parallelism::Pool(2));
+    c.steps = 7; // steps_per_epoch = 5 ⇒ the run ends mid-epoch
+    let a = train(c.clone(), &mut model, &data).unwrap();
+    let b = train(c, &mut model, &data).unwrap();
+    assert_eq!(a.final_params, b.final_params);
+}
+
+/// Direct pool teardown through the public API: healthy ping, then drop
+/// with replies in flight — Drop must join every thread (a hang fails
+/// via the harness timeout).
+#[test]
+fn pool_drop_joins_with_replies_in_flight() {
+    let proto = NativeMlp::new(&[8, 8, 4]);
+    let models: Vec<Box<dyn Model + Send>> =
+        (0..3).map(|_| proto.fork().expect("native mlp forks")).collect();
+    let pool = WorkerPool::spawn(models);
+    assert_eq!(pool.threads(), 3);
+    assert_eq!(pool.ping(), 3);
+    pool.ping_async();
+    drop(pool); // joins; buffered pongs are discarded with the channel
+}
+
+// ---------------------------------------------------------------------
+// Layer 3: recycling can never alias live buffers.
+// ---------------------------------------------------------------------
+
+/// Random interleavings of compress / hold-live / recycle against shared
+/// workspaces: every pair of *live* payloads must be backed by disjoint
+/// buffers (a recycled buffer may only resurface after its payload was
+/// handed back). This is the safety contract behind payload recycling on
+/// both exchange paths.
+#[test]
+fn prop_payload_recycling_never_aliases_live_buffers() {
+    testkit::forall("recycle-no-alias", |g: &mut Gen| {
+        let d = g.usize_in(64, 1024);
+        let u = g.mixed_vec(d);
+        let mut ws = Workspace::new();
+        let mut op = if g.bool() {
+            OpKind::TopK.build(g.rng.next_u64())
+        } else {
+            OpKind::GaussianK.build(g.rng.next_u64())
+        };
+        let mut live: Vec<sparkv::tensor::SparseVec> = Vec::new();
+        for _ in 0..g.usize_in(4, 16) {
+            if !live.is_empty() && g.bool() {
+                // Recycle the oldest live payload.
+                let s = live.remove(0);
+                ws.recycle(s);
+            } else {
+                let k = g.usize_in(1, d / 2);
+                live.push(op.compress_step(&u, k, &mut ws));
+                if live.len() > 4 {
+                    let s = live.remove(0);
+                    ws.recycle(s);
+                }
+            }
+            // Pairwise-disjoint backing storage for everything live.
+            for i in 0..live.len() {
+                for j in (i + 1)..live.len() {
+                    let (a, b) = (&live[i], &live[j]);
+                    if a.indices.capacity() > 0
+                        && b.indices.capacity() > 0
+                        && std::ptr::eq(a.indices.as_ptr(), b.indices.as_ptr())
+                    {
+                        return Err(format!("live index buffers {i}/{j} alias"));
+                    }
+                    if a.values.capacity() > 0
+                        && b.values.capacity() > 0
+                        && std::ptr::eq(a.values.as_ptr(), b.values.as_ptr())
+                    {
+                        return Err(format!("live value buffers {i}/{j} alias"));
+                    }
+                }
+            }
+            // Live payload contents stay valid coordinates of u (an
+            // aliased-then-clobbered buffer would fail this).
+            for s in &live {
+                for (&i, &v) in s.indices.iter().zip(&s.values) {
+                    if u[i as usize].to_bits() != v.to_bits() {
+                        return Err(format!("live payload corrupted at index {i}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Layer 4: launch-overhead accounting.
+// ---------------------------------------------------------------------
+
+/// `spawn_or_dispatch_us`: exactly 0 for serial, finite and non-negative
+/// for the dispatching runtimes, on both exchange paths.
+#[test]
+fn spawn_or_dispatch_accounting_per_runtime() {
+    let (data, mut model) = setup();
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        let serial = train(cfg(OpKind::TopK, buckets, Parallelism::Serial), &mut model, &data)
+            .unwrap();
+        assert!(
+            serial.metrics.steps.iter().all(|s| s.spawn_or_dispatch_us == 0.0),
+            "serial run recorded launch overhead"
+        );
+        for parallelism in [Parallelism::Threads(2), Parallelism::Pool(2)] {
+            let run = train(cfg(OpKind::TopK, buckets, parallelism), &mut model, &data).unwrap();
+            assert!(
+                run.metrics
+                    .steps
+                    .iter()
+                    .all(|s| s.spawn_or_dispatch_us.is_finite() && s.spawn_or_dispatch_us >= 0.0),
+                "{}: bad launch overhead trace",
+                parallelism.name()
+            );
+        }
+    }
+}

@@ -177,6 +177,7 @@ fn cfg(op: OpKind, schedule: KSchedule, parallelism: Parallelism) -> TrainConfig
         global_topk: false,
         parallelism,
         buckets: Buckets::None,
+        bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: schedule,
         steps_per_epoch: 4,
     }
