@@ -32,6 +32,15 @@ pool-smoke:
         --k-schedule warmup:0.016..0.001,epochs=2 --sched-steps 24 --steps-per-epoch 6 \
         --parallelism pool:4
 
+# The tune-smoke CI job, locally: the closed-loop autotuner end to end on
+# a tiny grid (2 candidates, 3 measured calibration probe steps, 3
+# virtual steps/epoch), then a real training replay of the plan it wrote
+# — compiles and runs the whole tune → plan → `train --plan` loop.
+tune-smoke:
+    cd rust && cargo run --release -- tune --smoke --out results/tuned_plan_smoke.json
+    cd rust && cargo run --release -- train --plan results/tuned_plan_smoke.json \
+        --steps 6 --workers 4
+
 # Fast bench pass (reduced dimension sweep).
 bench-fast:
     cd rust && SPARKV_BENCH_FAST=1 cargo bench

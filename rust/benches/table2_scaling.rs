@@ -243,6 +243,31 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Autotune (the TUNE trajectory): close the loop — let the plan
+    // tuner search {op × density × buckets × apportionment × runtime}
+    // over this same cluster and report the predicted-optimal plan per
+    // model next to the default config's cost. The full plan artifact
+    // workflow lives in `sparkv tune` / `examples/autotune_sweep.rs`;
+    // this section prints the headline the search adds to Table 2.
+    println!("\nautotuned plans (exhaustive grid over the default space):");
+    for model in ["alexnet", "vgg16", "resnet50", "inceptionv4"] {
+        let scenario = sparkv::autotune::TuneScenario::from_parts(model, 4, 4, 0.001, 24)?;
+        let plan = sparkv::autotune::tune(
+            &scenario,
+            &sparkv::autotune::SearchSpace::default_space(),
+            &mut sparkv::autotune::ExhaustiveGrid,
+            sparkv::autotune::DEFAULT_TUNE_SEED,
+            None,
+        );
+        println!(
+            "{:<14}{:<52} {:>8.4} s/epoch ({:.2}× vs default)",
+            model,
+            plan.chosen.name(),
+            plan.predicted_epoch_s,
+            plan.speedup_vs_baseline
+        );
+    }
+
     std::fs::create_dir_all("results")?;
     std::fs::write("results/table2_scaling.json", table.to_json().to_string())?;
     std::fs::write(

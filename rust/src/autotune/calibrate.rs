@@ -1,0 +1,295 @@
+//! Measured calibration of the cost oracle: fit the netsim constants
+//! that are machine-dependent — per-runtime launch overhead, a compute
+//! scale, and a link-bandwidth scale — from a handful of *measured* probe
+//! steps, so the simulator ranks candidates for the machine the tuner is
+//! actually running on.
+//!
+//! What gets fitted, and from what:
+//!
+//! * `spawn_per_thread_s` / `pool_dispatch_per_thread_s` — the per-thread
+//!   launch cost of the scoped and pooled runtimes, from the
+//!   `StepRecord::spawn_or_dispatch_us` trace of short real training runs
+//!   (the measured twin of [`crate::netsim::SPAWN_PER_THREAD_S`] /
+//!   [`crate::netsim::POOL_DISPATCH_PER_THREAD_S`]). Launch-half only,
+//!   like the trace field itself — a lower bound, which is fine for
+//!   *ranking* runtimes.
+//! * `compute_scale` — measured serial step wall-clock over the probe's
+//!   modelled compute time, where the probe model is scaled from the
+//!   scenario profile by parameter count (a crude first-order fit: the
+//!   scenario's t1 is multiplied by this host-vs-V100 factor).
+//! * `bandwidth_scale` — a timed in-process ring all-reduce gives this
+//!   host's achievable bytes/second for collective traffic; the scale is
+//!   that throughput over the scenario link's modelled effective
+//!   bandwidth.
+//!
+//! Calibration is measurement: it is **not deterministic** across runs or
+//! machines, which is exactly its purpose. The tuner therefore keeps it
+//! opt-in (`sparkv tune --calibrate N`), records the fitted constants in
+//! the plan artifact, and the golden/determinism suites run uncalibrated.
+
+use crate::collectives::{Collectives, SerialCollectives};
+use crate::config::{Parallelism, TrainConfig};
+use crate::data::GaussianMixture;
+use crate::models::{Model, NativeMlp};
+use crate::netsim::{POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S};
+use crate::util::json::Json;
+
+use super::space::TuneScenario;
+
+/// Fitted model constants (see the module docs for the fit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// Measured per-thread launch cost of `threads:N` (seconds).
+    pub spawn_per_thread_s: f64,
+    /// Measured per-thread dispatch cost of `pool:N` (seconds).
+    pub pool_dispatch_per_thread_s: f64,
+    /// Host-vs-modelled compute factor applied to the scenario's t1.
+    pub compute_scale: f64,
+    /// Host-vs-modelled link bandwidth factor applied to the scenario's
+    /// links.
+    pub bandwidth_scale: f64,
+    /// Probe length the constants were fitted from.
+    pub probe_steps: usize,
+}
+
+impl Calibration {
+    /// The identity calibration: reproduces the uncalibrated oracle
+    /// exactly (stock netsim constants, unit scales).
+    pub fn identity() -> Calibration {
+        Calibration {
+            spawn_per_thread_s: SPAWN_PER_THREAD_S,
+            pool_dispatch_per_thread_s: POOL_DISPATCH_PER_THREAD_S,
+            compute_scale: 1.0,
+            bandwidth_scale: 1.0,
+            probe_steps: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("spawn_per_thread_s", Json::from(self.spawn_per_thread_s))
+            .set(
+                "pool_dispatch_per_thread_s",
+                Json::from(self.pool_dispatch_per_thread_s),
+            )
+            .set("compute_scale", Json::from(self.compute_scale))
+            .set("bandwidth_scale", Json::from(self.bandwidth_scale))
+            .set("probe_steps", Json::from(self.probe_steps));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Calibration> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("calibration: missing numeric field '{key}'"))
+        };
+        Ok(Calibration {
+            spawn_per_thread_s: num("spawn_per_thread_s")?,
+            pool_dispatch_per_thread_s: num("pool_dispatch_per_thread_s")?,
+            compute_scale: num("compute_scale")?,
+            bandwidth_scale: num("bandwidth_scale")?,
+            probe_steps: num("probe_steps")? as usize,
+        })
+    }
+
+    /// Every constant finite and positive (scales strictly so), so a
+    /// degenerate measurement can never zero out a whole cost term.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, v) in [
+            ("spawn_per_thread_s", self.spawn_per_thread_s),
+            ("pool_dispatch_per_thread_s", self.pool_dispatch_per_thread_s),
+            ("compute_scale", self.compute_scale),
+            ("bandwidth_scale", self.bandwidth_scale),
+        ] {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "calibration {name} must be finite and > 0, got {v}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Runs the measured probes and fits a [`Calibration`]. The probe is a
+/// tiny native-MLP training job — large enough to exercise every
+/// runtime's dispatch path, small enough that `--calibrate 8` costs well
+/// under a second.
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    /// Training steps per runtime probe (≥ 1; more steps average out
+    /// scheduler noise).
+    pub probe_steps: usize,
+    /// Simulated workers in the probe runs.
+    pub workers: usize,
+    /// Thread budget for the threads/pool probes.
+    pub threads: usize,
+}
+
+impl Default for Calibrator {
+    fn default() -> Self {
+        Calibrator {
+            probe_steps: 8,
+            workers: 4,
+            threads: 4,
+        }
+    }
+}
+
+impl Calibrator {
+    fn probe_cfg(&self, parallelism: Parallelism) -> TrainConfig {
+        TrainConfig {
+            workers: self.workers.max(1),
+            steps: self.probe_steps.max(1),
+            eval_every: 0,
+            parallelism,
+            ..TrainConfig::default()
+        }
+    }
+
+    /// Run the probes and fit. Measurement floors guard against
+    /// zero-resolution clocks: a constant that measures as 0 falls back
+    /// to the stock netsim value rather than telling the oracle that a
+    /// runtime is free.
+    pub fn run(&self, scenario: &TuneScenario) -> anyhow::Result<Calibration> {
+        let data = GaussianMixture::new(16, 4, 2.5, 1.0, 17);
+        let probe_layers = [16usize, 64, 32, 4];
+        let n = self.threads.max(1);
+
+        let run_probe = |parallelism: Parallelism| -> anyhow::Result<(f64, f64)> {
+            let mut model = NativeMlp::new(&probe_layers);
+            let out = crate::coordinator::train(self.probe_cfg(parallelism), &mut model, &data)?;
+            Ok((
+                out.metrics.step_time.mean(),
+                out.metrics.mean_spawn_or_dispatch_us() * 1e-6,
+            ))
+        };
+
+        let (serial_step_s, _) = run_probe(Parallelism::Serial)?;
+        let (_, spawn_s) = run_probe(Parallelism::Threads(n))?;
+        let (_, dispatch_s) = run_probe(Parallelism::Pool(n))?;
+        let launch_n = n.min(self.workers.max(1)).max(1) as f64;
+        let spawn_per_thread_s = if spawn_s > 0.0 {
+            spawn_s / launch_n
+        } else {
+            SPAWN_PER_THREAD_S
+        };
+        let pool_dispatch_per_thread_s = if dispatch_s > 0.0 {
+            dispatch_s / launch_n
+        } else {
+            POOL_DISPATCH_PER_THREAD_S
+        };
+
+        // Compute scale: measured serial step wall over the probe's
+        // modelled compute (scenario t1 scaled down by parameter count).
+        // The serial probe steps its P workers *sequentially* while the
+        // simulated cluster computes them in parallel (netsim charges t1
+        // once per iteration), so the modelled probe wall is P × one
+        // worker's compute — without that factor the fitted scale would
+        // be inflated ~P× and over-weight compute in the ranking.
+        let probe_model = NativeMlp::new(&probe_layers);
+        let d_probe = Model::layout(&probe_model).total().max(1) as f64;
+        let modelled_probe_s = scenario.model.t1_compute
+            * (d_probe / scenario.model.params.max(1) as f64)
+            * self.workers.max(1) as f64;
+        let compute_scale = if serial_step_s > 0.0 && modelled_probe_s > 0.0 {
+            serial_step_s / modelled_probe_s
+        } else {
+            1.0
+        };
+
+        // Bandwidth scale: time an in-process ring all-reduce and compare
+        // this host's achieved bytes/s to the scenario link model. The
+        // ring moves 2(P−1)·(m/P) bytes over the modelled bottleneck.
+        let p = self.workers.max(2);
+        let elems = 1usize << 16;
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|w| (0..elems).map(|i| (w * elems + i) as f32 * 1e-6).collect())
+            .collect();
+        let engine = SerialCollectives;
+        let t0 = std::time::Instant::now();
+        let reps = 4usize;
+        for _ in 0..reps {
+            std::hint::black_box(engine.ring_allreduce_avg(std::hint::black_box(&inputs)));
+        }
+        let elapsed = t0.elapsed().as_secs_f64() / reps as f64;
+        let bytes_moved = 2.0 * (p as f64 - 1.0) * (elems as f64 * 4.0 / p as f64);
+        let modelled_bps = scenario.topo.ring_bottleneck().effective_bandwidth();
+        let bandwidth_scale = if elapsed > 0.0 && modelled_bps > 0.0 {
+            (bytes_moved / elapsed) / modelled_bps
+        } else {
+            1.0
+        };
+
+        let cal = Calibration {
+            spawn_per_thread_s,
+            pool_dispatch_per_thread_s,
+            compute_scale,
+            bandwidth_scale,
+            probe_steps: self.probe_steps.max(1),
+        };
+        cal.validate()?;
+        Ok(cal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_calibration_matches_stock_oracle() {
+        use super::super::oracle::CostOracle;
+        use super::super::space::{Candidate, TuneScenario};
+        let mut scen = TuneScenario::default_16gpu();
+        scen.steps_per_epoch = 4;
+        let cal = Calibration::identity();
+        cal.validate().unwrap();
+        let stock = CostOracle::new(&scen, None);
+        let ident = CostOracle::new(&scen, Some(&cal));
+        let mut c = Candidate::baseline();
+        c.parallelism = Parallelism::Threads(4);
+        assert_eq!(
+            stock.predict(&c).epoch_s.to_bits(),
+            ident.predict(&c).epoch_s.to_bits(),
+            "identity calibration must reproduce the stock oracle bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn calibration_json_round_trips_and_validates() {
+        let cal = Calibration {
+            spawn_per_thread_s: 2.5e-5,
+            pool_dispatch_per_thread_s: 1.1e-6,
+            compute_scale: 3.5,
+            bandwidth_scale: 12.0,
+            probe_steps: 8,
+        };
+        let j = Json::parse(&cal.to_json().to_string()).unwrap();
+        assert_eq!(Calibration::from_json(&j).unwrap(), cal);
+        let mut bad = cal.clone();
+        bad.compute_scale = 0.0;
+        assert!(bad.validate().is_err());
+        bad.compute_scale = f64::NAN;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn calibrator_fits_finite_positive_constants() {
+        let scen = TuneScenario::default_16gpu();
+        let cal = Calibrator {
+            probe_steps: 3,
+            workers: 4,
+            threads: 2,
+        }
+        .run(&scen)
+        .unwrap();
+        cal.validate().unwrap();
+        assert_eq!(cal.probe_steps, 3);
+        // Measured constants are real measurements: positive and finite
+        // (asserting machine-specific magnitudes would be flaky).
+        assert!(cal.spawn_per_thread_s > 0.0);
+        assert!(cal.pool_dispatch_per_thread_s > 0.0);
+        assert!(cal.compute_scale > 0.0 && cal.bandwidth_scale > 0.0);
+    }
+}

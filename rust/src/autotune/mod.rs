@@ -1,0 +1,99 @@
+//! Closed-loop autotuning: search the compression-plan space with the
+//! netsim cost model in the loop, calibrate the model against measured
+//! probe steps, and emit a deterministic, replayable [`TunedPlan`].
+//!
+//! The paper's central systems insight is that the best sparsification
+//! configuration is workload-dependent: the right (operator, density,
+//! bucketing, runtime) point moves with the model, the cluster shape, and
+//! the phase of training (Adaptive Top-K, Ruan et al. 2022; the
+//! supercomputing-scale study of Yoon & Oh 2022). Every ingredient for a
+//! search loop already exists in this crate — the [`crate::schedule`]
+//! plan engine, the bucketed pipeline, the three worker runtimes, and the
+//! calibrated [`crate::netsim`] cost model with its per-runtime launch
+//! overhead — but nothing closed the loop. This module does:
+//!
+//! ```text
+//!                 ┌──────────────────────────────────────────────┐
+//!                 │                 sparkv tune                  │
+//!                 └──────────────────────────────────────────────┘
+//!   ┌───────────┐   candidates    ┌──────────────┐   predicted
+//!   │ Search    │ ──────────────▶ │ CostOracle   │   epoch time
+//!   │ Space     │                 │ (netsim +    │ ─────────────┐
+//!   │ op × k-   │                 │  runtime     │              ▼
+//!   │ schedule ×│                 │  overhead)   │      ┌──────────────┐
+//!   │ buckets × │                 └──────▲───────┘      │ Search       │
+//!   │ apportion │                        │ constants    │ Strategy     │
+//!   │ × runtime │                 ┌──────┴───────┐      │ grid/greedy/ │
+//!   └───────────┘                 │ Calibrator   │      │ halving      │
+//!                                 │ (measured    │      └──────┬───────┘
+//!        measured probe steps ───▶│ probe steps) │             │ winner
+//!        (StepRecord wall/launch) └──────────────┘             ▼
+//!                                                      ┌──────────────┐
+//!   sparkv train --plan plan.json  ◀───────────────────│ TunedPlan    │
+//!   (replays through the existing                      │ (seeded,     │
+//!    Scheduler/BucketSchedule/                         │  bit-exact   │
+//!    Executor seams, untouched)                        │  JSON)       │
+//!                                                      └──────────────┘
+//! ```
+//!
+//! ## The three layers
+//!
+//! * [`space`] — the configuration space: a [`Candidate`] is one point of
+//!   {[`OpKind`](crate::compress::OpKind) × k-schedule ×
+//!   buckets (`none`/`layers`/`bytes:N`) × bucket apportionment ×
+//!   parallelism (`serial`/`threads:N`/`pool:N`)}; a [`SearchSpace`] is a
+//!   cross-product of axis value lists, enumerated in a deterministic
+//!   order with config-equivalent duplicates collapsed.
+//! * [`strategy`] — pluggable [`SearchStrategy`] implementations over a
+//!   [`CostOracle`]: [`ExhaustiveGrid`] (score everything),
+//!   [`GreedyDescent`] (coordinate descent over the axes), and
+//!   [`SuccessiveHalving`] (cheap low-fidelity rungs eliminate most of
+//!   the cohort; survivors are re-scored at full fidelity and can be
+//!   *promoted to short real training runs* whose measured
+//!   `StepRecord` wall time picks the final winner).
+//! * [`plan`] — the [`TunedPlan`] artifact: a self-describing JSON file
+//!   (scenario, seed, strategy, chosen candidate, leaderboard,
+//!   per-bucket budgets) that `sparkv train --plan` maps back onto the
+//!   ordinary `[train]` config keys. Replay therefore goes through the
+//!   existing `Scheduler`/`BucketSchedule`/`Executor` seams with their
+//!   semantics untouched — a plan run is bit-identical to the same
+//!   config written by hand (`tests/autotune_plan.rs`).
+//!
+//! ## Determinism
+//!
+//! A fixed `(scenario, space, strategy, seed)` quadruple yields a
+//! byte-identical plan: candidate enumeration is ordered, the oracle is
+//! pure f64 arithmetic over the deterministic netsim timeline, ranking
+//! ties break by enumeration order, and the only randomness — successive
+//! halving's optional cohort subsample — draws from a `Pcg64` seeded
+//! with the plan seed. The default scenario's plan is golden-pinned
+//! (`tests/golden/tuned_plan.json`); the seed ⇒ bit-identity property is
+//! locked in `tests/autotune_plan.rs`. Measured promotion and
+//! calibration are the deliberate exceptions (they exist to pull *this
+//! machine's* constants into the loop) and are off unless explicitly
+//! requested.
+//!
+//! ## Calibration
+//!
+//! The stock oracle uses the paper-calibrated V100/10 GbE constants. A
+//! [`Calibrator`] run replaces the machine-dependent ones with measured
+//! values: per-runtime launch overhead from `StepRecord`'s
+//! `spawn_or_dispatch_us` trace, a compute scale from measured serial
+//! step wall time, and a link-bandwidth scale from a timed in-process
+//! ring all-reduce. The fitted [`Calibration`] is recorded in the plan so
+//! a tuned artifact says which machine's constants ranked it.
+
+pub mod calibrate;
+pub mod oracle;
+pub mod plan;
+pub mod space;
+pub mod strategy;
+
+pub use calibrate::{Calibration, Calibrator};
+pub use oracle::{CandidateCost, CostOracle};
+pub use plan::{tune, TunedPlan, DEFAULT_TUNE_SEED, PLAN_VERSION};
+pub use space::{Candidate, SearchSpace, TuneScenario};
+pub use strategy::{
+    ExhaustiveGrid, GreedyDescent, ScoredCandidate, SearchResult, SearchStrategy,
+    SuccessiveHalving,
+};

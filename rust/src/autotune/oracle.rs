@@ -1,0 +1,267 @@
+//! The search loop's cost oracle: predicted epoch wall-clock for one
+//! candidate, from the netsim timeline plus the per-runtime launch
+//! overhead model (optionally replaced by measured, calibrated
+//! constants).
+
+use super::calibrate::Calibration;
+use super::space::{Candidate, TuneScenario};
+use crate::config::Parallelism;
+use crate::netsim::{runtime_overhead_s, runtime_overhead_with, SimConfig, Simulator};
+use crate::schedule::density_trace;
+
+/// Predicted cost of one candidate over one virtual epoch.
+#[derive(Debug, Clone)]
+pub struct CandidateCost {
+    /// Σ per-step predicted iteration time (the ranking key).
+    pub epoch_s: f64,
+    pub mean_iter_s: f64,
+    /// Σ per-step communication / selection time (diagnostics).
+    pub comm_s: f64,
+    pub select_s: f64,
+    /// The per-iteration host-runtime overhead this candidate's
+    /// parallelism was charged.
+    pub host_overhead_s: f64,
+    /// Virtual steps the prediction summed (the fidelity — successive
+    /// halving scores early rungs at a fraction of the epoch).
+    pub steps: usize,
+}
+
+/// Scores candidates with [`Simulator::iteration_at_ratio`] over the
+/// candidate's per-step density trace, plus [`runtime_overhead_s`] for
+/// the worker runtime. Two modelling choices tie the prediction to the
+/// real trainer:
+///
+/// * a **serial** runtime runs the bucket loop without the pipeline, so
+///   its bucketed cost is the *serialized* schedule — the simulator's
+///   `total + overlap_saved` (overlap only exists under `threads`/`pool`);
+/// * the host overhead is the launch cost of the runtime
+///   (spawn-per-step for `threads:N`, channel dispatch for `pool:N`,
+///   zero for `serial`), with the same thread-budget capping the trainer
+///   applies — measured twins replace the constants under a
+///   [`Calibration`].
+///
+/// The oracle is pure f64 arithmetic over a deterministic timeline: a
+/// given `(scenario, calibration, candidate, fidelity)` always yields
+/// bit-identical costs — the foundation of the plan determinism
+/// contract.
+///
+/// One axis is invisible to it: `bucket_apportion` redistributes the
+/// per-bucket wire budget but never resizes it, so `mass` and `size`
+/// candidates score identically here. Ranking that axis needs the
+/// measured leg (`SuccessiveHalving::measure` in `super::strategy`); the
+/// default space pins it to `size` for exactly this reason.
+pub struct CostOracle<'a> {
+    scenario: &'a TuneScenario,
+    calibration: Option<&'a Calibration>,
+}
+
+impl<'a> CostOracle<'a> {
+    pub fn new(scenario: &'a TuneScenario, calibration: Option<&'a Calibration>) -> CostOracle<'a> {
+        CostOracle {
+            scenario,
+            calibration,
+        }
+    }
+
+    pub fn scenario(&self) -> &TuneScenario {
+        self.scenario
+    }
+
+    /// The per-iteration host overhead charged to `parallelism`: the
+    /// stock [`runtime_overhead_s`] model, or the same formula
+    /// ([`runtime_overhead_with`]) with the calibrated per-thread
+    /// constants — one capping/dispatch rule for both paths.
+    pub fn host_overhead_s(&self, parallelism: Parallelism) -> f64 {
+        let workers = self.scenario.workers();
+        match self.calibration {
+            None => runtime_overhead_s(parallelism, workers),
+            Some(c) => runtime_overhead_with(
+                parallelism,
+                workers,
+                c.spawn_per_thread_s,
+                c.pool_dispatch_per_thread_s,
+            ),
+        }
+    }
+
+    /// Predicted cost over the scenario's full epoch.
+    pub fn predict(&self, cand: &Candidate) -> CandidateCost {
+        self.predict_at_fidelity(cand, self.scenario.steps_per_epoch)
+    }
+
+    /// Predicted cost over the first `steps` virtual steps of the epoch
+    /// (the successive-halving fidelity knob; `steps == steps_per_epoch`
+    /// is the full prediction).
+    pub fn predict_at_fidelity(&self, cand: &Candidate, steps: usize) -> CandidateCost {
+        let scen = self.scenario;
+        let steps = steps.max(1);
+        let trace = density_trace(&cand.k_schedule, scen.k_ratio, scen.steps_per_epoch, steps);
+
+        let mut model = scen.model.clone();
+        let mut topo = scen.topo.clone();
+        if let Some(c) = self.calibration {
+            model.t1_compute *= c.compute_scale;
+            topo.intra.bandwidth_bps *= c.bandwidth_scale;
+            topo.inter.bandwidth_bps *= c.bandwidth_scale;
+        }
+        let host_overhead_s = self.host_overhead_s(cand.parallelism);
+        // The serial runtime walks buckets without the pipeline: charge it
+        // the serialized schedule (total + overlap_saved reconstructs it
+        // exactly — see `IterationBreakdown::overlap_saved`).
+        let serialized = matches!(cand.parallelism, Parallelism::Serial);
+
+        let mut sim = Simulator::new(SimConfig {
+            topo,
+            model,
+            op: cand.op,
+            k_ratio: scen.k_ratio,
+            straggler_sigma: 0.0,
+            seed: 1,
+            buckets: scen.sim_buckets(cand.buckets),
+            host_overhead_s,
+        });
+        let (mut epoch_s, mut comm_s, mut select_s) = (0.0f64, 0.0f64, 0.0f64);
+        for &rho in &trace {
+            let b = sim.iteration_at_ratio(rho);
+            let iter = if serialized { b.total + b.overlap_saved } else { b.total };
+            epoch_s += iter;
+            comm_s += b.comm;
+            select_s += b.select;
+        }
+        CandidateCost {
+            epoch_s,
+            mean_iter_s: epoch_s / steps as f64,
+            comm_s,
+            select_s,
+            host_overhead_s,
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::OpKind;
+    use crate::config::{BucketApportion, Buckets};
+    use crate::schedule::KSchedule;
+
+    fn cand(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> Candidate {
+        Candidate {
+            op,
+            k_schedule: KSchedule::Const(None),
+            buckets,
+            bucket_apportion: BucketApportion::Size,
+            parallelism,
+        }
+        .normalized()
+    }
+
+    #[test]
+    fn predictions_are_deterministic_and_positive() {
+        let scen = TuneScenario::default_16gpu();
+        let oracle = CostOracle::new(&scen, None);
+        let c = cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Pool(4));
+        let a = oracle.predict(&c);
+        let b = oracle.predict(&c);
+        assert_eq!(a.epoch_s.to_bits(), b.epoch_s.to_bits());
+        assert!(a.epoch_s > 0.0 && a.epoch_s.is_finite());
+        assert_eq!(a.steps, scen.steps_per_epoch);
+        assert!((a.mean_iter_s - a.epoch_s / a.steps as f64).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monolithic_epoch_matches_simulator_sum() {
+        // The oracle is exactly the scheduled netsim timeline plus the
+        // runtime overhead: cross-check against a hand-driven simulator.
+        let scen = TuneScenario::default_16gpu();
+        let oracle = CostOracle::new(&scen, None);
+        let c = cand(OpKind::TopK, Buckets::None, Parallelism::Serial);
+        let got = oracle.predict(&c);
+        let mut sim = Simulator::new(SimConfig {
+            topo: scen.topo.clone(),
+            model: scen.model.clone(),
+            op: OpKind::TopK,
+            k_ratio: scen.k_ratio,
+            straggler_sigma: 0.0,
+            seed: 1,
+            buckets: 1,
+            host_overhead_s: 0.0,
+        });
+        let mut want = 0.0f64;
+        for _ in 0..scen.steps_per_epoch {
+            want += sim.iteration_at_ratio(scen.k_ratio).total;
+        }
+        assert_eq!(got.epoch_s.to_bits(), want.to_bits());
+        assert_eq!(got.host_overhead_s, 0.0);
+    }
+
+    #[test]
+    fn serial_is_charged_the_serialized_bucket_schedule() {
+        let scen = TuneScenario::default_16gpu();
+        let oracle = CostOracle::new(&scen, None);
+        let serial = oracle.predict(&cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Serial));
+        let pooled =
+            oracle.predict(&cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Pool(4)));
+        // The pipeline hides communication the serial loop must serialize,
+        // and that saving dominates the pool's µs-scale dispatch bill.
+        assert!(
+            pooled.epoch_s < serial.epoch_s,
+            "pooled {0} !< serial {1}",
+            pooled.epoch_s,
+            serial.epoch_s
+        );
+        // Serial pays zero launch overhead; pool pays its dispatch model.
+        assert_eq!(serial.host_overhead_s, 0.0);
+        assert!(pooled.host_overhead_s > 0.0);
+        // Runtime ordering of launch overhead matches the netsim model.
+        let threaded =
+            oracle.predict(&cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Threads(4)));
+        assert!(threaded.host_overhead_s > pooled.host_overhead_s);
+    }
+
+    #[test]
+    fn calibration_overrides_constants() {
+        let scen = TuneScenario::default_16gpu();
+        let cal = Calibration {
+            spawn_per_thread_s: 1e-3,
+            pool_dispatch_per_thread_s: 1e-4,
+            compute_scale: 2.0,
+            bandwidth_scale: 1.0,
+            probe_steps: 3,
+        };
+        let stock = CostOracle::new(&scen, None);
+        let tuned = CostOracle::new(&scen, Some(&cal));
+        // Measured launch constants replace the model's.
+        assert_eq!(tuned.host_overhead_s(Parallelism::Threads(4)), 4e-3);
+        assert_eq!(tuned.host_overhead_s(Parallelism::Pool(4)), 4e-4);
+        assert_eq!(tuned.host_overhead_s(Parallelism::Serial), 0.0);
+        // Thread budget caps at the worker count like the trainer.
+        assert_eq!(tuned.host_overhead_s(Parallelism::Threads(64)), 16e-3);
+        // A 2× compute scale makes every candidate strictly slower.
+        let c = cand(OpKind::TopK, Buckets::None, Parallelism::Serial);
+        assert!(tuned.predict(&c).epoch_s > stock.predict(&c).epoch_s);
+        // And a faster link makes comm cheaper.
+        let fast = Calibration {
+            bandwidth_scale: 10.0,
+            compute_scale: 1.0,
+            ..cal.clone()
+        };
+        let fast_oracle = CostOracle::new(&scen, Some(&fast));
+        let dense = cand(OpKind::Dense, Buckets::None, Parallelism::Serial);
+        assert!(fast_oracle.predict(&dense).comm_s < stock.predict(&dense).comm_s);
+    }
+
+    #[test]
+    fn fidelity_prefix_is_monotone() {
+        let scen = TuneScenario::default_16gpu();
+        let oracle = CostOracle::new(&scen, None);
+        let c = cand(OpKind::Dgc, Buckets::Bytes(4 << 20), Parallelism::Threads(4));
+        let short = oracle.predict_at_fidelity(&c, 6);
+        let full = oracle.predict(&c);
+        assert_eq!(short.steps, 6);
+        assert!(short.epoch_s < full.epoch_s);
+        // Constant-density trace: mean iteration time is fidelity-free.
+        assert!((short.mean_iter_s - full.mean_iter_s).abs() < 1e-12);
+    }
+}

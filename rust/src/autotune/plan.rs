@@ -1,0 +1,519 @@
+//! The [`TunedPlan`] artifact: a seeded, fully deterministic JSON record
+//! of one tuning run — what was searched, what won, what it should cost —
+//! that `sparkv train --plan plan.json` replays through the ordinary
+//! config keys (the `Scheduler`/`BucketSchedule`/`Executor` seams are
+//! untouched, so a plan run is bit-identical to the same config written
+//! by hand).
+
+use super::calibrate::Calibration;
+use super::oracle::CostOracle;
+use super::space::{Candidate, SearchSpace, TuneScenario};
+use super::strategy::SearchStrategy;
+use crate::buckets::apportion_k;
+use crate::config::{RawConfig, TrainConfig};
+use crate::util::json::Json;
+
+/// The seed `sparkv tune` uses when none is given (and the golden plan
+/// pins). Any fixed seed ⇒ a byte-identical plan; this one is just the
+/// default identity of "the default tuning run".
+pub const DEFAULT_TUNE_SEED: u64 = 7;
+
+/// Artifact schema version (bump on breaking JSON layout changes).
+pub const PLAN_VERSION: usize = 1;
+
+/// One leaderboard row: candidate identity, its predicted epoch time,
+/// and the fidelity (virtual steps) the prediction covered — successive
+/// halving retains eliminated candidates at their last (reduced) rung, so
+/// rows are only comparable at equal `steps`. When measured promotion
+/// ran, the promoted rows also carry the measured step wall-clock that
+/// decided their order (rows are best-first by *measured* time among the
+/// promoted, then by predicted time — so `epoch_s` alone need not be
+/// ascending on a measured plan).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaderboardEntry {
+    pub name: String,
+    pub epoch_s: f64,
+    pub steps: usize,
+    /// Mean measured seconds/step of the promotion probe (measured
+    /// halving only).
+    pub measured_step_s: Option<f64>,
+}
+
+/// The tuned-plan artifact. Everything needed to (a) replay the winning
+/// configuration (`chosen` + the scenario's base density), (b) audit the
+/// search (seed, strategy, evaluation count, leaderboard), and (c) check
+/// the paper-trail invariants (per-bucket budgets, predicted-vs-baseline
+/// times) without re-running anything.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPlan {
+    pub version: usize,
+    /// The search seed. Serialized as a JSON number, so seeds must stay
+    /// below 2⁵³ to round-trip exactly (the CLI enforces this; library
+    /// callers passing larger seeds lose the low bits on save/load).
+    pub seed: u64,
+    /// The strategy's identity string (e.g. `grid`,
+    /// `halving:eta=2,rungs=3`).
+    pub strategy: String,
+    /// Scenario identity: netsim model name + cluster shape + densities.
+    pub model: String,
+    pub params: u64,
+    pub nodes: usize,
+    pub gpus: usize,
+    pub k_ratio: f64,
+    pub steps_per_epoch: usize,
+    pub layer_buckets: usize,
+    /// The winning candidate.
+    pub chosen: Candidate,
+    pub predicted_epoch_s: f64,
+    pub predicted_mean_iter_s: f64,
+    /// Predicted epoch time of [`Candidate::baseline`] (the default
+    /// config) under the same oracle — `chosen` is never worse.
+    pub baseline_epoch_s: f64,
+    pub speedup_vs_baseline: f64,
+    /// The chosen candidate's per-bucket budgets at its schedule's base k
+    /// ([`TuneScenario::base_k_for`]) over the simulated bucket
+    /// partition: `Σ = min(k, d)`, `k_b ≤ d_b`, and each bucket respects
+    /// the `bytes:N` budget (locked by the determinism proptest and the
+    /// golden).
+    pub bucket_ks: Vec<usize>,
+    /// Oracle evaluations the search spent.
+    pub evaluated: usize,
+    /// Top candidates, best first (≤ 8 rows).
+    pub leaderboard: Vec<LeaderboardEntry>,
+    /// The measured calibration the oracle ran under, when one was fitted.
+    pub calibration: Option<Calibration>,
+}
+
+/// Rows kept in the plan's leaderboard.
+const LEADERBOARD_ROWS: usize = 8;
+
+/// Run a search and assemble the plan. The baseline guard makes the
+/// acceptance invariant structural: if the strategy's best candidate is
+/// worse than the default config (possible with an aggressively
+/// subsampled cohort), the plan falls back to the baseline — a tuned
+/// plan's predicted epoch time is never above the default's. One
+/// deliberate exception: a winner picked by *measured* promotion is kept
+/// even when the simulator disagrees (measurement outranks the model —
+/// discarding it would defeat the measured leg exactly where it
+/// matters); such a plan reports its honest sim prediction, which may
+/// sit above the baseline's.
+pub fn tune(
+    scenario: &TuneScenario,
+    space: &SearchSpace,
+    strategy: &mut dyn SearchStrategy,
+    seed: u64,
+    calibration: Option<&Calibration>,
+) -> TunedPlan {
+    let oracle = CostOracle::new(scenario, calibration);
+    let result = strategy.search(space, &oracle, seed);
+    let baseline = Candidate::baseline();
+    let baseline_cost = oracle.predict(&baseline);
+    let (chosen, chosen_cost) = match result.ranked.first() {
+        Some(best) => {
+            // Re-predict at full fidelity first (a strategy may have
+            // ranked its winner at a reduced one); the baseline guard
+            // must compare like with like, or a cheap low-fidelity score
+            // could smuggle a worse-than-default candidate past it.
+            let cost = if best.cost.steps == scenario.steps_per_epoch {
+                best.cost.clone()
+            } else {
+                oracle.predict(&best.candidate)
+            };
+            // A measured winner bypasses the guard: its rank came from a
+            // real training run, which outranks the simulation.
+            if best.measured_step_s.is_some() || cost.epoch_s <= baseline_cost.epoch_s {
+                (best.candidate.clone(), cost)
+            } else {
+                (baseline.clone(), baseline_cost.clone())
+            }
+        }
+        None => (baseline.clone(), baseline_cost.clone()),
+    };
+
+    // Per-bucket budgets at the *chosen* schedule's base k (a `const:K`
+    // winner overrides the scenario density — the artifact must record
+    // the budgets the plan actually implies).
+    let sizes = scenario.sim_bucket_sizes(chosen.buckets);
+    let bucket_ks = apportion_k(&sizes, scenario.base_k_for(&chosen.k_schedule));
+
+    let leaderboard = result
+        .ranked
+        .iter()
+        .take(LEADERBOARD_ROWS)
+        .map(|s| LeaderboardEntry {
+            name: s.candidate.name(),
+            epoch_s: s.cost.epoch_s,
+            steps: s.cost.steps,
+            measured_step_s: s.measured_step_s,
+        })
+        .collect();
+
+    TunedPlan {
+        version: PLAN_VERSION,
+        seed,
+        strategy: strategy.name(),
+        model: scenario.model.name.to_string(),
+        params: scenario.model.params,
+        nodes: scenario.topo.nodes,
+        gpus: scenario.topo.gpus_per_node,
+        k_ratio: scenario.k_ratio,
+        steps_per_epoch: scenario.steps_per_epoch,
+        layer_buckets: scenario.layer_buckets,
+        predicted_epoch_s: chosen_cost.epoch_s,
+        predicted_mean_iter_s: chosen_cost.mean_iter_s,
+        baseline_epoch_s: baseline_cost.epoch_s,
+        speedup_vs_baseline: baseline_cost.epoch_s / chosen_cost.epoch_s,
+        chosen,
+        bucket_ks,
+        evaluated: result.evaluated,
+        leaderboard,
+        calibration: calibration.cloned(),
+    }
+}
+
+impl TunedPlan {
+    pub fn to_json(&self) -> Json {
+        let mut scenario = Json::obj();
+        scenario
+            .set("model", Json::from(self.model.as_str()))
+            .set("params", Json::from(self.params as f64))
+            .set("nodes", Json::from(self.nodes))
+            .set("gpus", Json::from(self.gpus))
+            .set("k_ratio", Json::from(self.k_ratio))
+            .set("steps_per_epoch", Json::from(self.steps_per_epoch))
+            .set("layer_buckets", Json::from(self.layer_buckets));
+        let mut o = Json::obj();
+        o.set("version", Json::from(self.version))
+            .set("seed", Json::from(self.seed as f64))
+            .set("strategy", Json::from(self.strategy.as_str()))
+            .set("scenario", scenario)
+            .set("chosen", self.chosen.to_json())
+            .set("predicted_epoch_s", Json::from(self.predicted_epoch_s))
+            .set(
+                "predicted_mean_iter_s",
+                Json::from(self.predicted_mean_iter_s),
+            )
+            .set("baseline_epoch_s", Json::from(self.baseline_epoch_s))
+            .set("speedup_vs_baseline", Json::from(self.speedup_vs_baseline))
+            .set(
+                "bucket_ks",
+                Json::Arr(self.bucket_ks.iter().map(|&k| Json::from(k)).collect()),
+            )
+            .set("evaluated", Json::from(self.evaluated))
+            .set(
+                "leaderboard",
+                Json::Arr(
+                    self.leaderboard
+                        .iter()
+                        .map(|e| {
+                            let mut row = Json::obj();
+                            row.set("name", Json::from(e.name.as_str()))
+                                .set("epoch_s", Json::from(e.epoch_s))
+                                .set("steps", Json::from(e.steps))
+                                .set(
+                                    "measured_step_s",
+                                    e.measured_step_s.map_or(Json::Null, Json::from),
+                                );
+                            row
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "calibration",
+                match &self.calibration {
+                    Some(c) => c.to_json(),
+                    None => Json::Null,
+                },
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TunedPlan> {
+        let num = |node: &Json, key: &str| -> anyhow::Result<f64> {
+            node.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("plan: missing numeric field '{key}'"))
+        };
+        let version = num(j, "version")? as usize;
+        anyhow::ensure!(
+            version == PLAN_VERSION,
+            "plan version {version} unsupported (this build reads version {PLAN_VERSION})"
+        );
+        let scen = j
+            .get("scenario")
+            .ok_or_else(|| anyhow::anyhow!("plan: missing 'scenario'"))?;
+        let chosen = Candidate::from_json(
+            j.get("chosen").ok_or_else(|| anyhow::anyhow!("plan: missing 'chosen'"))?,
+        )?;
+        let leaderboard = j
+            .get("leaderboard")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|row| -> anyhow::Result<LeaderboardEntry> {
+                Ok(LeaderboardEntry {
+                    name: row
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("plan: leaderboard row missing 'name'"))?
+                        .to_string(),
+                    epoch_s: num(row, "epoch_s")?,
+                    steps: num(row, "steps")? as usize,
+                    measured_step_s: row.get("measured_step_s").and_then(Json::as_f64),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let calibration = match j.get("calibration") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(Calibration::from_json(c)?),
+        };
+        Ok(TunedPlan {
+            version,
+            seed: num(j, "seed")? as u64,
+            strategy: j
+                .get("strategy")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("plan: missing 'strategy'"))?
+                .to_string(),
+            model: scen
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("plan: scenario missing 'model'"))?
+                .to_string(),
+            params: num(scen, "params")? as u64,
+            nodes: num(scen, "nodes")? as usize,
+            gpus: num(scen, "gpus")? as usize,
+            k_ratio: num(scen, "k_ratio")?,
+            steps_per_epoch: num(scen, "steps_per_epoch")? as usize,
+            layer_buckets: num(scen, "layer_buckets")? as usize,
+            chosen,
+            predicted_epoch_s: num(j, "predicted_epoch_s")?,
+            predicted_mean_iter_s: num(j, "predicted_mean_iter_s")?,
+            baseline_epoch_s: num(j, "baseline_epoch_s")?,
+            speedup_vs_baseline: num(j, "speedup_vs_baseline")?,
+            bucket_ks: j
+                .get("bucket_ks")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("plan: non-numeric bucket_ks entry"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            evaluated: num(j, "evaluated")? as usize,
+            leaderboard,
+            calibration,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing plan {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<TunedPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading plan {path}: {e}"))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("plan {path}: {e}"))?)
+    }
+
+    /// Map the plan onto `[train]` config keys (the replay path of
+    /// `sparkv train --plan`): the five searched knobs plus the
+    /// scenario's base density *and* epoch length — a warmup-style
+    /// schedule converts `epochs=E` through `steps_per_epoch`, so the
+    /// replayed density trace matches the one the plan was scored on.
+    /// Replay goes through the ordinary string-parse path, so a plan is
+    /// exactly equivalent to writing the same keys in a config file.
+    pub fn apply(&self, raw: &mut RawConfig) -> anyhow::Result<()> {
+        raw.set(&format!("train.op={}", self.chosen.op.name()))?;
+        raw.set(&format!("train.k_schedule={}", self.chosen.k_schedule.name()))?;
+        raw.set(&format!("train.buckets={}", self.chosen.buckets.name()))?;
+        raw.set(&format!(
+            "train.bucket_apportion={}",
+            self.chosen.bucket_apportion.name()
+        ))?;
+        raw.set(&format!("train.parallelism={}", self.chosen.parallelism.name()))?;
+        raw.set(&format!("train.k_ratio={}", self.k_ratio))?;
+        raw.set(&format!("train.steps_per_epoch={}", self.steps_per_epoch))?;
+        Ok(())
+    }
+
+    /// Apply the plan directly to a typed config (library-side replay;
+    /// same keys as [`TunedPlan::apply`]).
+    pub fn to_train_config(&self, mut base: TrainConfig) -> TrainConfig {
+        self.chosen.apply(&mut base);
+        base.k_ratio = self.k_ratio;
+        base.steps_per_epoch = self.steps_per_epoch;
+        base
+    }
+
+    /// One-line human summary for CLI/bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} → predicted {:.4} s/epoch ({:.4} s/iter), baseline {:.4} s/epoch, {:.2}× ({} candidates, strategy {})",
+            self.chosen.name(),
+            self.predicted_epoch_s,
+            self.predicted_mean_iter_s,
+            self.baseline_epoch_s,
+            self.speedup_vs_baseline,
+            self.evaluated,
+            self.strategy
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::strategy::ExhaustiveGrid;
+    use crate::compress::OpKind;
+    use crate::config::{Buckets, Parallelism};
+
+    fn quick_scenario() -> TuneScenario {
+        let mut s = TuneScenario::default_16gpu();
+        s.steps_per_epoch = 6;
+        s
+    }
+
+    #[test]
+    fn tune_beats_baseline_and_round_trips_json() {
+        let scen = quick_scenario();
+        let plan = tune(
+            &scen,
+            &SearchSpace::default_space(),
+            &mut ExhaustiveGrid,
+            DEFAULT_TUNE_SEED,
+            None,
+        );
+        assert!(plan.predicted_epoch_s <= plan.baseline_epoch_s);
+        assert!(plan.speedup_vs_baseline >= 1.0);
+        assert_eq!(plan.version, PLAN_VERSION);
+        assert_eq!(plan.strategy, "grid");
+        assert!(!plan.leaderboard.is_empty());
+        assert!(plan.leaderboard.len() <= 8);
+        // Σ bucket_ks == min(k, d) at the chosen schedule's base k
+        // (apportion_k guarantee surfaced in the artifact).
+        let k = scen.base_k_for(&plan.chosen.k_schedule);
+        assert_eq!(plan.bucket_ks.iter().sum::<usize>(), k.min(scen.model.params as usize));
+        // Byte-exact JSON round trip through the parser.
+        let text = plan.to_json().to_string();
+        let back = TunedPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn plan_applies_to_raw_and_typed_configs_identically() {
+        let scen = quick_scenario();
+        let plan = tune(
+            &scen,
+            &SearchSpace::default_space(),
+            &mut ExhaustiveGrid,
+            3,
+            None,
+        );
+        // String-keyed replay (the CLI path)…
+        let mut raw = RawConfig::default();
+        plan.apply(&mut raw).unwrap();
+        let from_raw = TrainConfig::from_raw(&raw).unwrap();
+        // …and the typed replay agree on every searched knob.
+        let typed = plan.to_train_config(TrainConfig::default());
+        assert_eq!(from_raw.op, typed.op);
+        assert_eq!(from_raw.k_schedule, typed.k_schedule);
+        assert_eq!(from_raw.buckets, typed.buckets);
+        assert_eq!(from_raw.bucket_apportion, typed.bucket_apportion);
+        assert_eq!(from_raw.parallelism, typed.parallelism);
+        assert_eq!(from_raw.k_ratio, typed.k_ratio);
+        assert_eq!(typed.k_ratio, scen.k_ratio);
+        // Epoch length replays too (warmup grammars convert through it).
+        assert_eq!(from_raw.steps_per_epoch, typed.steps_per_epoch);
+        assert_eq!(typed.steps_per_epoch, scen.steps_per_epoch);
+        from_raw.validate().unwrap();
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let scen = quick_scenario();
+        let plan = tune(
+            &scen,
+            &SearchSpace::smoke_space(),
+            &mut ExhaustiveGrid,
+            11,
+            None,
+        );
+        let dir = std::env::temp_dir().join("sparkv_plan_test");
+        let path = dir.join("plan.json");
+        plan.save(path.to_str().unwrap()).unwrap();
+        let loaded = TunedPlan::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, plan);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn baseline_guard_kicks_in_for_a_worse_only_space() {
+        // A space of candidates strictly worse than the default config:
+        // RedSync-style Trimmed, serial, monolithic. The plan must fall
+        // back to the baseline rather than ship a slowdown.
+        let scen = quick_scenario();
+        let space = SearchSpace {
+            ops: vec![OpKind::Trimmed],
+            k_schedules: vec![crate::schedule::KSchedule::Const(None)],
+            buckets: vec![Buckets::None],
+            apportions: vec![crate::config::BucketApportion::Size],
+            parallelisms: vec![Parallelism::Serial],
+        };
+        let plan = tune(&scen, &space, &mut ExhaustiveGrid, 5, None);
+        assert_eq!(plan.chosen, Candidate::baseline());
+        assert_eq!(plan.predicted_epoch_s.to_bits(), plan.baseline_epoch_s.to_bits());
+        assert_eq!(plan.speedup_vs_baseline, 1.0);
+    }
+
+    #[test]
+    fn measured_winner_bypasses_the_baseline_guard() {
+        // A space that is strictly sim-worse than the baseline, but whose
+        // winner was picked by a *measured* probe: the plan must keep the
+        // measured winner (measurement outranks the model), report its
+        // honest sim prediction (> baseline), and serialize the measured
+        // wall-clock in the leaderboard.
+        let scen = quick_scenario();
+        let space = SearchSpace {
+            ops: vec![OpKind::Trimmed],
+            k_schedules: vec![crate::schedule::KSchedule::Const(None)],
+            buckets: vec![Buckets::None],
+            apportions: vec![crate::config::BucketApportion::Size],
+            parallelisms: vec![Parallelism::Serial],
+        };
+        let mut halving = crate::autotune::strategy::SuccessiveHalving {
+            promote: 1,
+            measure: Some(Box::new(|_: &Candidate| Ok(0.001))),
+            ..crate::autotune::strategy::SuccessiveHalving::default()
+        };
+        let plan = tune(&scen, &space, &mut halving, 5, None);
+        assert_eq!(plan.chosen.op, OpKind::Trimmed);
+        assert!(plan.predicted_epoch_s > plan.baseline_epoch_s);
+        assert!(plan.speedup_vs_baseline < 1.0);
+        assert_eq!(plan.leaderboard[0].measured_step_s, Some(0.001));
+        // Some(measured) round-trips through the JSON artifact.
+        let back =
+            TunedPlan::from_json(&Json::parse(&plan.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn seeded_plans_are_byte_identical() {
+        let scen = quick_scenario();
+        let mk = |seed| {
+            tune(&scen, &SearchSpace::default_space(), &mut ExhaustiveGrid, seed, None)
+                .to_json()
+                .to_string()
+        };
+        assert_eq!(mk(7), mk(7));
+    }
+}

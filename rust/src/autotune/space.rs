@@ -1,0 +1,430 @@
+//! The tuning configuration space: scenarios, candidates, and the
+//! deterministic cross-product enumeration the search strategies walk.
+
+use crate::compress::OpKind;
+use crate::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
+use crate::netsim::{ComputeProfile, LinkSpec, Topology};
+use crate::schedule::KSchedule;
+use crate::util::json::Json;
+
+/// The netsim context candidates are scored against: which model's
+/// gradient is being exchanged, over which cluster, at what base density,
+/// for how many virtual steps per epoch.
+#[derive(Debug, Clone)]
+pub struct TuneScenario {
+    /// Compute/size profile of the simulated model (Table 2 catalog).
+    pub model: ComputeProfile,
+    pub topo: Topology,
+    /// Base density k/d (the `const` schedule default and the adaptive
+    /// policies' open-loop start).
+    pub k_ratio: f64,
+    /// Virtual steps summed into one predicted epoch (also the
+    /// `steps_per_epoch` used to convert warmup `epochs=E` grammars).
+    pub steps_per_epoch: usize,
+    /// How many equal netsim buckets `buckets = layers` maps to (the cost
+    /// model has no layer table, so the layer count is scenario config).
+    pub layer_buckets: usize,
+}
+
+impl TuneScenario {
+    /// The default tuning scenario: ResNet-50 on the paper's 16-GPU /
+    /// 10 GbE testbed at the paper's 0.1% density, 24 virtual steps per
+    /// epoch, 16 layer buckets. This is the scenario `sparkv tune` uses
+    /// when no flags are given and the one the golden plan pins.
+    pub fn default_16gpu() -> TuneScenario {
+        TuneScenario {
+            model: ComputeProfile::by_name("resnet50").expect("catalog model"),
+            topo: Topology::paper_16gpu(),
+            k_ratio: 0.001,
+            steps_per_epoch: 24,
+            layer_buckets: 16,
+        }
+    }
+
+    /// Build a scenario from catalog-model name + cluster shape (the CLI
+    /// surface). The links are the paper's PCIe/10 GbE pair.
+    pub fn from_parts(
+        model: &str,
+        nodes: usize,
+        gpus: usize,
+        k_ratio: f64,
+        steps_per_epoch: usize,
+    ) -> anyhow::Result<TuneScenario> {
+        let model = ComputeProfile::by_name(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown tune model '{model}' (see netsim catalog)"))?;
+        anyhow::ensure!(nodes >= 1 && gpus >= 1, "tune cluster shape needs nodes/gpus >= 1");
+        anyhow::ensure!(k_ratio > 0.0 && k_ratio <= 1.0, "tune k_ratio must be in (0, 1]");
+        anyhow::ensure!(steps_per_epoch >= 1, "tune steps_per_epoch must be >= 1");
+        Ok(TuneScenario {
+            model,
+            topo: Topology::new(nodes, gpus, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g()),
+            k_ratio,
+            steps_per_epoch,
+            layer_buckets: 16,
+        })
+    }
+
+    /// Simulated worker count P.
+    pub fn workers(&self) -> usize {
+        self.topo.world_size()
+    }
+
+    /// The base budget `k = round(d · k_ratio)` clamped to `[1, d]` — the
+    /// exact expression the trainer resolves for a `const` schedule.
+    pub fn base_k(&self) -> usize {
+        self.base_k_for(&KSchedule::Const(None))
+    }
+
+    /// The per-step budget a schedule resolves against this scenario:
+    /// `const:K` overrides the base density, every other schedule starts
+    /// from `k_ratio` (warmup/adaptive vary k over the run — this is
+    /// their base point). The expression mirrors the trainer's.
+    pub fn base_k_for(&self, schedule: &KSchedule) -> usize {
+        let d = self.model.params as usize;
+        let rho = match *schedule {
+            KSchedule::Const(Some(r)) => r,
+            _ => self.k_ratio,
+        };
+        ((d as f64 * rho).round() as usize).clamp(1, d.max(1))
+    }
+
+    /// How many equal netsim buckets a `Buckets` knob maps to:
+    /// `none` → 1 (monolithic timeline), `layers` → [`Self::layer_buckets`],
+    /// `bytes:N` → `⌈d / (N/4)⌉` (one bucket per N bytes of f32 gradient,
+    /// mirroring [`crate::buckets::BucketSchedule::fixed_bytes`]).
+    pub fn sim_buckets(&self, buckets: Buckets) -> usize {
+        let d = self.model.params as usize;
+        match buckets {
+            Buckets::None => 1,
+            Buckets::Layers => self.layer_buckets.max(1),
+            Buckets::Bytes(n) => d.div_ceil((n / 4).max(1)).max(1),
+        }
+    }
+
+    /// The equal-chunk bucket sizes the netsim bucketed timeline uses for
+    /// this knob (empty buckets skipped — exactly the simulator's
+    /// partition, so per-bucket budgets derived from these sizes describe
+    /// the simulated timeline).
+    pub fn sim_bucket_sizes(&self, buckets: Buckets) -> Vec<usize> {
+        let d = self.model.params as usize;
+        let nb = self.sim_buckets(buckets);
+        let chunk = d.div_ceil(nb);
+        (0..nb)
+            .map(|b| ((b + 1) * chunk).min(d).saturating_sub(b * chunk))
+            .filter(|&s| s > 0)
+            .collect()
+    }
+}
+
+/// One point of the search space — a complete compression-plan
+/// configuration. Applying a candidate to a [`TrainConfig`] touches only
+/// the five searched knobs; everything else (steps, lr, seed, …) stays
+/// with the caller.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub op: OpKind,
+    pub k_schedule: KSchedule,
+    pub buckets: Buckets,
+    pub bucket_apportion: BucketApportion,
+    pub parallelism: Parallelism,
+}
+
+impl Candidate {
+    /// The default-config candidate ([`TrainConfig::default`] projected
+    /// onto the searched axes) — the reference point every tuned plan is
+    /// compared against.
+    pub fn baseline() -> Candidate {
+        let d = TrainConfig::default();
+        Candidate {
+            op: d.op,
+            k_schedule: d.k_schedule,
+            buckets: d.buckets,
+            bucket_apportion: d.bucket_apportion,
+            parallelism: d.parallelism,
+        }
+    }
+
+    /// Compact identity string, `op|k_schedule|buckets|apportion|runtime`
+    /// (each field round-trips through its own parser).
+    pub fn name(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.op.name(),
+            self.k_schedule.name(),
+            self.buckets.name(),
+            self.bucket_apportion.name(),
+            self.parallelism.name()
+        )
+    }
+
+    /// Collapse config-equivalent forms onto one canonical candidate:
+    /// apportionment is meaningful only on a bucketed, sparse exchange
+    /// (otherwise forced to `size`), and `dense` ignores the density
+    /// schedule entirely (forced to `const`). Enumeration dedupes on the
+    /// normalized form, so each distinct training behaviour is scored
+    /// once.
+    pub fn normalized(&self) -> Candidate {
+        let mut c = self.clone();
+        if !c.buckets.is_bucketed() || c.op == OpKind::Dense {
+            c.bucket_apportion = BucketApportion::Size;
+        }
+        if c.op == OpKind::Dense {
+            c.k_schedule = KSchedule::Const(None);
+        }
+        c
+    }
+
+    /// Write this candidate's knobs into a training config.
+    pub fn apply(&self, cfg: &mut TrainConfig) {
+        cfg.op = self.op;
+        cfg.k_schedule = self.k_schedule;
+        cfg.buckets = self.buckets;
+        cfg.bucket_apportion = self.bucket_apportion;
+        cfg.parallelism = self.parallelism;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("op", Json::from(self.op.name()))
+            .set("k_schedule", Json::from(self.k_schedule.name()))
+            .set("buckets", Json::from(self.buckets.name()))
+            .set("bucket_apportion", Json::from(self.bucket_apportion.name()))
+            .set("parallelism", Json::from(self.parallelism.name()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Candidate> {
+        fn field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("plan candidate: missing string field '{key}'"))
+        }
+        Ok(Candidate {
+            op: OpKind::parse(field(j, "op")?)?,
+            k_schedule: KSchedule::parse(field(j, "k_schedule")?)?,
+            buckets: Buckets::parse(field(j, "buckets")?)?,
+            bucket_apportion: BucketApportion::parse(field(j, "bucket_apportion")?)?,
+            parallelism: Parallelism::parse(field(j, "parallelism")?)?,
+        })
+    }
+}
+
+/// A cross-product of axis value lists. [`SearchSpace::enumerate`]
+/// produces the candidate list every strategy walks, in a fixed nested
+/// order (op → k-schedule → buckets → apportionment → parallelism) with
+/// config-equivalent duplicates collapsed — the enumeration order is part
+/// of the determinism contract (ranking ties break by it).
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub ops: Vec<OpKind>,
+    pub k_schedules: Vec<KSchedule>,
+    pub buckets: Vec<Buckets>,
+    pub apportions: Vec<BucketApportion>,
+    pub parallelisms: Vec<Parallelism>,
+}
+
+impl SearchSpace {
+    /// The default space `sparkv tune` searches (and the golden plan
+    /// pins): the four headline operators, the base density plus a denser
+    /// 0.4% constant, all three bucketing modes, and all three worker
+    /// runtimes. Two axes are deliberately held to one value here:
+    ///
+    /// * density *schedules* with `powf` in their trace (warmup) — the
+    ///   golden pins exact values and policy-curve math is
+    ///   platform-sensitive in the last ulp (the same rationale as
+    ///   `tests/schedule_golden.rs`);
+    /// * `bucket_apportion` — apportionment redistributes the wire budget
+    ///   but never resizes it, so the cost oracle scores `mass` and
+    ///   `size` identically and an unmeasured search could never pick
+    ///   `mass` (the tie-break keeps the first-enumerated twin). Search
+    ///   it through a custom space with halving's *measured* promotion,
+    ///   where the difference is real.
+    pub fn default_space() -> SearchSpace {
+        SearchSpace {
+            ops: vec![OpKind::Dense, OpKind::TopK, OpKind::Dgc, OpKind::GaussianK],
+            k_schedules: vec![KSchedule::Const(None), KSchedule::Const(Some(0.004))],
+            buckets: vec![Buckets::None, Buckets::Layers, Buckets::Bytes(4 << 20)],
+            apportions: vec![BucketApportion::Size],
+            parallelisms: vec![
+                Parallelism::Serial,
+                Parallelism::Threads(4),
+                Parallelism::Pool(4),
+            ],
+        }
+    }
+
+    /// A 2-candidate space for CI smoke runs (`sparkv tune --smoke`,
+    /// `just tune-smoke`): TopK vs GaussianK, everything else at the
+    /// baseline.
+    pub fn smoke_space() -> SearchSpace {
+        SearchSpace {
+            ops: vec![OpKind::TopK, OpKind::GaussianK],
+            k_schedules: vec![KSchedule::Const(None)],
+            buckets: vec![Buckets::None],
+            apportions: vec![BucketApportion::Size],
+            parallelisms: vec![Parallelism::Serial],
+        }
+    }
+
+    /// All normalized candidates, in deterministic first-occurrence
+    /// order.
+    pub fn enumerate(&self) -> Vec<Candidate> {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        for &op in &self.ops {
+            for &k_schedule in &self.k_schedules {
+                for &buckets in &self.buckets {
+                    for &bucket_apportion in &self.apportions {
+                        for &parallelism in &self.parallelisms {
+                            let c = Candidate {
+                                op,
+                                k_schedule,
+                                buckets,
+                                bucket_apportion,
+                                parallelism,
+                            }
+                            .normalized();
+                            if seen.insert(c.name()) {
+                                out.push(c);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of distinct (normalized) candidates.
+    pub fn len(&self) -> usize {
+        self.enumerate().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+            || self.k_schedules.is_empty()
+            || self.buckets.is_empty()
+            || self.apportions.is_empty()
+            || self.parallelisms.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_bucket_mapping() {
+        let s = TuneScenario::default_16gpu();
+        assert_eq!(s.workers(), 16);
+        assert_eq!(s.sim_buckets(Buckets::None), 1);
+        assert_eq!(s.sim_buckets(Buckets::Layers), 16);
+        // 25,557,032 f32s = 102,228,128 bytes in 4 MiB buckets → 25 buckets.
+        let nb = s.sim_buckets(Buckets::Bytes(4 << 20));
+        assert_eq!(nb, (25_557_032usize).div_ceil((4 << 20) / 4));
+        let sizes = s.sim_bucket_sizes(Buckets::Bytes(4 << 20));
+        assert_eq!(sizes.len(), nb);
+        assert_eq!(sizes.iter().sum::<usize>(), 25_557_032);
+        // Every equal-chunk bucket respects the byte budget.
+        for &sz in &sizes {
+            assert!(sz <= (4 << 20) / 4, "bucket of {sz} elems exceeds 4 MiB");
+        }
+        // Base k is the trainer's expression.
+        assert_eq!(s.base_k(), (25_557_032f64 * 0.001).round() as usize);
+    }
+
+    #[test]
+    fn scenario_from_parts_validates() {
+        let s = TuneScenario::from_parts("vgg16", 2, 4, 0.01, 8).unwrap();
+        assert_eq!(s.model.name, "vgg16");
+        assert_eq!(s.workers(), 8);
+        assert!(TuneScenario::from_parts("nope", 4, 4, 0.001, 8).is_err());
+        assert!(TuneScenario::from_parts("vgg16", 4, 4, 0.0, 8).is_err());
+        assert!(TuneScenario::from_parts("vgg16", 4, 4, 0.001, 0).is_err());
+        // Zero cluster shapes error cleanly instead of panicking in
+        // Topology::new's assert.
+        assert!(TuneScenario::from_parts("vgg16", 0, 4, 0.001, 8).is_err());
+        assert!(TuneScenario::from_parts("vgg16", 4, 0, 0.001, 8).is_err());
+    }
+
+    #[test]
+    fn candidate_name_round_trips_and_baseline_matches_default_config() {
+        let c = Candidate {
+            op: OpKind::GaussianK,
+            k_schedule: KSchedule::Const(Some(0.004)),
+            buckets: Buckets::Bytes(4096),
+            bucket_apportion: BucketApportion::Mass { ema_beta: 0.5 },
+            parallelism: Parallelism::Pool(4),
+        };
+        let j = c.to_json();
+        assert_eq!(Candidate::from_json(&j).unwrap(), c);
+        // The baseline projects TrainConfig::default() exactly.
+        let b = Candidate::baseline();
+        let mut cfg = TrainConfig::default();
+        cfg.steps = 3; // non-searched knobs are the caller's business
+        b.apply(&mut cfg);
+        let d = TrainConfig::default();
+        assert_eq!(cfg.op, d.op);
+        assert_eq!(cfg.k_schedule, d.k_schedule);
+        assert_eq!(cfg.buckets, d.buckets);
+        assert_eq!(cfg.bucket_apportion, d.bucket_apportion);
+        assert_eq!(cfg.parallelism, d.parallelism);
+        assert_eq!(cfg.steps, 3);
+    }
+
+    #[test]
+    fn normalization_collapses_equivalent_configs() {
+        // Monolithic ⇒ apportionment is irrelevant.
+        let c = Candidate {
+            op: OpKind::TopK,
+            k_schedule: KSchedule::Const(None),
+            buckets: Buckets::None,
+            bucket_apportion: BucketApportion::mass(),
+            parallelism: Parallelism::Serial,
+        };
+        assert_eq!(c.normalized().bucket_apportion, BucketApportion::Size);
+        // Dense ⇒ schedule and apportionment are irrelevant.
+        let d = Candidate {
+            op: OpKind::Dense,
+            k_schedule: KSchedule::Const(Some(0.01)),
+            buckets: Buckets::Layers,
+            bucket_apportion: BucketApportion::mass(),
+            parallelism: Parallelism::Pool(2),
+        };
+        let n = d.normalized();
+        assert_eq!(n.k_schedule, KSchedule::Const(None));
+        assert_eq!(n.bucket_apportion, BucketApportion::Size);
+        assert_eq!(n.buckets, Buckets::Layers); // bucketing still matters for dense
+    }
+
+    #[test]
+    fn enumeration_is_deduped_ordered_and_contains_baseline() {
+        let space = SearchSpace::default_space();
+        let cands = space.enumerate();
+        assert_eq!(cands.len(), space.len());
+        // Raw cross product is 4·2·3·1·3 = 72; normalization collapses
+        // the dense schedule duplicates: dense 1·3·3 = 9, three sparse
+        // ops 2·3·3 = 18 each.
+        assert_eq!(cands.len(), 9 + 3 * 18);
+        // A space that *does* sweep apportionment dedupes the monolithic
+        // and dense mass twins.
+        let mut with_mass = SearchSpace::default_space();
+        with_mass.apportions = vec![BucketApportion::Size, BucketApportion::mass()];
+        assert_eq!(with_mass.len(), 9 + 3 * 30);
+        // No duplicate names, all in normal form.
+        let names: std::collections::BTreeSet<String> =
+            cands.iter().map(Candidate::name).collect();
+        assert_eq!(names.len(), cands.len());
+        for c in &cands {
+            assert_eq!(c, &c.normalized());
+        }
+        // The baseline candidate is in the default space (so a tuned plan
+        // can never be worse than the default config by construction).
+        assert!(names.contains(&Candidate::baseline().name()));
+        // Deterministic: two enumerations agree element-wise.
+        assert_eq!(cands, space.enumerate());
+        // The smoke space is the advertised 2 candidates.
+        assert_eq!(SearchSpace::smoke_space().len(), 2);
+        assert!(!space.is_empty());
+    }
+}

@@ -328,6 +328,30 @@ pub fn apportion_k_weighted(sizes: &[usize], weights: &[f64], k: usize) -> Vec<u
     ks
 }
 
+/// Exponential-moving-average update of the per-bucket mass estimates the
+/// `bucket_apportion = mass:ema=BETA` trainer mode steers by:
+/// `m̄_b ← β·m̄_b + (1 − β)·m_b`. An empty (or wrong-length) `smoothed`
+/// state seeds from the raw masses — step 0 of an EMA run therefore
+/// apportions exactly like the unsmoothed mode. Raw vectors containing a
+/// non-finite entry are ignored (the last good state is kept), so one
+/// degenerate step can never poison the smoothing state; the downstream
+/// [`BucketSchedule::apportion_k_by_mass`] degenerate screen still
+/// applies to whatever is passed on.
+pub fn ema_masses(smoothed: &mut Vec<f64>, raw: &[f64], beta: f64) {
+    debug_assert!((0.0..1.0).contains(&beta), "ema beta must be in [0, 1)");
+    if raw.iter().any(|m| !m.is_finite()) {
+        return;
+    }
+    if smoothed.len() != raw.len() {
+        smoothed.clear();
+        smoothed.extend_from_slice(raw);
+        return;
+    }
+    for (s, &m) in smoothed.iter_mut().zip(raw) {
+        *s = beta * *s + (1.0 - beta) * m;
+    }
+}
+
 /// Two-stage, double-buffered pipeline: `produce(b)` runs on a dedicated
 /// producer thread for `b = 0..n` in order, while `consume(b, item)` runs
 /// on the calling thread in the same order. A rendezvous channel of depth 1
@@ -632,6 +656,57 @@ mod tests {
             // A real producer thread was spawned and timed.
             assert!(spawn_s.is_finite() && spawn_s >= 0.0, "n={n}");
         }
+    }
+
+    #[test]
+    fn ema_masses_seeds_smooths_and_reduces_thrash() {
+        // Seeding: an empty state copies the raw masses (step 0 of an EMA
+        // run apportions exactly like the unsmoothed mode).
+        let mut s = Vec::new();
+        ema_masses(&mut s, &[1.0, 9.0], 0.9);
+        assert_eq!(s, vec![1.0, 9.0]);
+        // β = 0 tracks the raw masses exactly.
+        let mut t = vec![5.0, 5.0];
+        ema_masses(&mut t, &[1.0, 9.0], 0.0);
+        assert_eq!(t, vec![1.0, 9.0]);
+        // Thrash reduction: alternating raw masses swing the per-bucket k
+        // split bucket-to-bucket every step; the β = 0.9 EMA holds it
+        // nearly constant. Measure total step-to-step k movement.
+        let sizes = [64usize, 64];
+        let sched = BucketSchedule::fixed_bytes(128, 256, 16);
+        let raw_steps: Vec<[f64; 2]> =
+            (0..20).map(|t| if t % 2 == 0 { [9.0, 1.0] } else { [1.0, 9.0] }).collect();
+        let movement = |betas: f64| -> usize {
+            let mut smoothed = Vec::new();
+            let mut prev: Option<Vec<usize>> = None;
+            let mut moved = 0;
+            for raw in &raw_steps {
+                ema_masses(&mut smoothed, raw, betas);
+                let ks = sched.apportion_k_by_mass(16, &smoothed);
+                assert_eq!(ks.iter().sum::<usize>(), 16);
+                for (kb, &db) in ks.iter().zip(&sizes) {
+                    assert!(*kb <= db);
+                }
+                if let Some(p) = &prev {
+                    moved += ks.iter().zip(p).map(|(a, b)| a.abs_diff(*b)).sum::<usize>();
+                }
+                prev = Some(ks);
+            }
+            moved
+        };
+        let raw_movement = movement(0.0);
+        let smoothed_movement = movement(0.9);
+        assert!(
+            smoothed_movement * 4 < raw_movement,
+            "ema did not damp thrash: {smoothed_movement} vs raw {raw_movement}"
+        );
+        // A non-finite raw step leaves the state untouched.
+        let mut u = vec![2.0, 4.0];
+        ema_masses(&mut u, &[f64::NAN, 1.0], 0.5);
+        assert_eq!(u, vec![2.0, 4.0]);
+        // A schedule-length change re-seeds rather than zipping short.
+        ema_masses(&mut u, &[1.0, 2.0, 3.0], 0.5);
+        assert_eq!(u, vec![1.0, 2.0, 3.0]);
     }
 
     #[test]

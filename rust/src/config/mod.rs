@@ -24,7 +24,7 @@
 //! | `global_topk`         | `false`    | gTop-k tree aggregation instead of all-gather union  |
 //! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads`/`threads:N` (scoped threads re-spawned every step), or `pool`/`pool:N` (persistent worker pool, zero per-step spawns — see [`crate::coordinator::pool`]) — results are bit-identical across all settings |
 //! | `buckets`             | `"none"`   | gradient exchange granularity: `none` (monolithic), `layers` (layer-aligned buckets), or `bytes:N` (fixed-byte buckets); under a threaded/pooled runtime bucket `i+1` is compressed while bucket `i` is on the ring |
-//! | `bucket_apportion`    | `"size"`   | how a bucketed run splits the per-step k across buckets: `size` (proportional to element count) or `mass` (proportional to worker 0's per-bucket ‖u‖², the Adaptive Top-K direction; falls back to `size` when the stats are degenerate) |
+//! | `bucket_apportion`    | `"size"`   | how a bucketed run splits the per-step k across buckets: `size` (proportional to element count), `mass` (proportional to worker 0's per-bucket ‖u‖², the Adaptive Top-K direction; falls back to `size` when the stats are degenerate), or `mass:ema=BETA` (mass shares EMA-smoothed across steps with coefficient BETA ∈ [0, 1) so per-bucket budgets don't thrash; `mass` ≡ `mass:ema=0`, bit-identical to the unsmoothed policy) |
 //! | `k_schedule`          | `"const"`  | per-step density plan: `const` (follow `k_ratio` — bit-identical to the pre-schedule path), `const:K`, `warmup:K0..K,epochs=E` (exponential density decay), or `adaptive:DELTA` (smallest k capturing DELTA of ‖u‖²) — see [`crate::schedule`] |
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 
@@ -224,30 +224,61 @@ impl Buckets {
 /// Both policies are deterministic functions of worker state, so every
 /// runtime (`serial`/`threads`/`pool`) resolves identical per-bucket
 /// budgets.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+///
+/// `Mass` optionally smooths the per-step masses with an exponential
+/// moving average (`mass:ema=BETA`): the trainer steers the split by
+/// `m̄_b ← β·m̄_b + (1 − β)·m_b` instead of the raw per-step `m_b`
+/// ([`crate::buckets::ema_masses`]), so per-bucket budgets stop thrashing
+/// between steps when the gradient energy profile is noisy. `β = 0` (the
+/// bare `mass` grammar) uses the raw masses and is bit-identical to the
+/// pre-EMA behaviour.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub enum BucketApportion {
     /// Proportional to bucket element count (the default).
     #[default]
     Size,
-    /// Proportional to worker 0's per-bucket ‖u‖² (size fallback).
-    Mass,
+    /// Proportional to worker 0's per-bucket ‖u‖² (size fallback),
+    /// optionally EMA-smoothed across steps with coefficient `ema_beta`
+    /// in `[0, 1)` (0 = no smoothing, the bit-exact legacy behaviour).
+    Mass { ema_beta: f64 },
 }
 
 impl BucketApportion {
-    /// Parse a config/CLI value: `size` or `mass`.
+    /// The unsmoothed mass policy (`mass`, β = 0).
+    pub fn mass() -> BucketApportion {
+        BucketApportion::Mass { ema_beta: 0.0 }
+    }
+
+    /// Parse a config/CLI value: `size`, `mass`, or `mass:ema=BETA`.
     pub fn parse(s: &str) -> anyhow::Result<BucketApportion> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "size" => Ok(BucketApportion::Size),
-            "mass" => Ok(BucketApportion::Mass),
-            other => anyhow::bail!("bad bucket_apportion '{other}': expected size|mass"),
+        let t = s.trim().to_ascii_lowercase();
+        let grammar = "size|mass|mass:ema=BETA";
+        match t.as_str() {
+            "size" => return Ok(BucketApportion::Size),
+            "mass" => return Ok(BucketApportion::mass()),
+            _ => {}
         }
+        if let Some(rest) = t.strip_prefix("mass:") {
+            let beta: f64 = rest
+                .strip_prefix("ema=")
+                .ok_or_else(|| anyhow::anyhow!("bad bucket_apportion '{s}': expected {grammar}"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad bucket_apportion '{s}': expected {grammar}"))?;
+            anyhow::ensure!(
+                (0.0..1.0).contains(&beta) && beta.is_finite(),
+                "bucket_apportion mass:ema=BETA needs BETA in [0, 1)"
+            );
+            return Ok(BucketApportion::Mass { ema_beta: beta });
+        }
+        anyhow::bail!("bad bucket_apportion '{s}': expected {grammar}")
     }
 
     /// Display form (round-trips through [`BucketApportion::parse`]).
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> String {
         match self {
-            BucketApportion::Size => "size",
-            BucketApportion::Mass => "mass",
+            BucketApportion::Size => "size".to_string(),
+            BucketApportion::Mass { ema_beta } if *ema_beta == 0.0 => "mass".to_string(),
+            BucketApportion::Mass { ema_beta } => format!("mass:ema={ema_beta}"),
         }
     }
 }
@@ -458,6 +489,12 @@ impl TrainConfig {
         if let Buckets::Bytes(n) = self.buckets {
             anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
         }
+        if let BucketApportion::Mass { ema_beta } = self.bucket_apportion {
+            anyhow::ensure!(
+                ema_beta.is_finite() && (0.0..1.0).contains(&ema_beta),
+                "bucket_apportion mass:ema=BETA needs BETA in [0, 1)"
+            );
+        }
         self.k_schedule.validate()?;
         anyhow::ensure!(self.steps_per_epoch >= 1, "steps_per_epoch must be >= 1");
         Ok(())
@@ -564,19 +601,47 @@ lr = 0.05
     #[test]
     fn bucket_apportion_parsing_and_raw() {
         assert_eq!(BucketApportion::parse("size").unwrap(), BucketApportion::Size);
-        assert_eq!(BucketApportion::parse("MASS").unwrap(), BucketApportion::Mass);
+        assert_eq!(BucketApportion::parse("MASS").unwrap(), BucketApportion::mass());
         assert!(BucketApportion::parse("energy").is_err());
-        for a in [BucketApportion::Size, BucketApportion::Mass] {
-            assert_eq!(BucketApportion::parse(a.name()).unwrap(), a);
+        for a in [
+            BucketApportion::Size,
+            BucketApportion::mass(),
+            BucketApportion::Mass { ema_beta: 0.9 },
+        ] {
+            assert_eq!(BucketApportion::parse(&a.name()).unwrap(), a);
         }
         let raw = RawConfig::parse("[train]\nbucket_apportion = \"mass\"").unwrap();
         let cfg = TrainConfig::from_raw(&raw).unwrap();
-        assert_eq!(cfg.bucket_apportion, BucketApportion::Mass);
+        assert_eq!(cfg.bucket_apportion, BucketApportion::mass());
         cfg.validate().unwrap();
         // Default stays size-proportional.
         assert_eq!(TrainConfig::default().bucket_apportion, BucketApportion::Size);
         let bad = RawConfig::parse("[train]\nbucket_apportion = \"energy\"").unwrap();
         assert!(TrainConfig::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn bucket_apportion_ema_grammar() {
+        // The smoothing grammar: `mass:ema=BETA` with BETA in [0, 1).
+        assert_eq!(
+            BucketApportion::parse("mass:ema=0.9").unwrap(),
+            BucketApportion::Mass { ema_beta: 0.9 }
+        );
+        // `mass` and `mass:ema=0` are the same (unsmoothed) policy, and
+        // both render as the bare `mass` form.
+        assert_eq!(BucketApportion::parse("mass:ema=0").unwrap(), BucketApportion::mass());
+        assert_eq!(BucketApportion::mass().name(), "mass");
+        for bad in ["mass:ema=1.0", "mass:ema=-0.1", "mass:ema=x", "mass:0.9", "mass:ema=nan"] {
+            assert!(BucketApportion::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        let raw = RawConfig::parse("[train]\nbucket_apportion = \"mass:ema=0.75\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.bucket_apportion, BucketApportion::Mass { ema_beta: 0.75 });
+        cfg.validate().unwrap();
+        let mut out_of_range = TrainConfig::default();
+        out_of_range.buckets = Buckets::Layers;
+        out_of_range.bucket_apportion = BucketApportion::Mass { ema_beta: 1.5 };
+        assert!(out_of_range.validate().is_err());
     }
 
     #[test]

@@ -24,11 +24,15 @@
 //! worker's own `data_rng`, so its *placement* is a scheduling choice:
 //! the serial and scoped runtimes sample inside the compute phase (P
 //! concurrent draws under `threads:N`, exactly the PR-1 behaviour),
-//! while the pool pre-samples on the coordinator (`sample_batches`) and
-//! ships batches with the job — its long-lived threads cannot borrow
-//! the `DataSource`. Every runtime re-sorts its results by rank before
-//! the trainer folds them. `tests/pool_equivalence.rs` (pool) and
-//! `tests/parallel_equivalence.rs` (threads) lock the invariant.
+//! while the pool pre-samples on the coordinator (`sample_batches`) —
+//! its long-lived threads cannot borrow the `DataSource`. Every runtime
+//! samples into the worker's own recycled batch buffer
+//! ([`WorkerState::batch`] via `DataSource::sample_into`), which travels
+//! with the state through the pool's ownership ping-pong — so the steady
+//! state allocates no batch storage on any runtime. Every runtime
+//! re-sorts its results by rank before the trainer folds them.
+//! `tests/pool_equivalence.rs` (pool) and `tests/parallel_equivalence.rs`
+//! (threads) lock the invariant.
 //!
 //! ## Parameter sharing without clones
 //!
@@ -102,20 +106,35 @@ pub(crate) struct StepCtx {
 
 /// Sample one batch per worker, in rank order, on the coordinator —
 /// the *pool* runtime's sampling path: its long-lived threads cannot
-/// borrow the `DataSource`, so batches ship with the job. Sampling draws
-/// only from each worker's own `data_rng`, so hoisting it out of the
-/// compute phase leaves every stream byte-identical to the in-thread
-/// sampling the serial and scoped runtimes keep (those sample inside the
-/// phase so P workers draw concurrently under `threads:N`).
-fn sample_batches(
-    workers: &mut [WorkerState],
-    data: &dyn DataSource,
-    batch_size: usize,
-) -> Vec<Batch> {
-    workers
-        .iter_mut()
-        .map(|w| data.sample(batch_size, &mut w.data_rng))
-        .collect()
+/// borrow the `DataSource`, so batches travel to the threads inside each
+/// worker's recycled [`WorkerState::batch`] buffer (and home again with
+/// the state — zero steady-state batch allocation). Sampling draws only
+/// from each worker's own `data_rng`, so hoisting it out of the compute
+/// phase leaves every stream byte-identical to the in-thread sampling
+/// the serial and scoped runtimes keep (those sample inside the phase so
+/// P workers draw concurrently under `threads:N`).
+fn sample_batches(workers: &mut [WorkerState], data: &dyn DataSource, batch_size: usize) {
+    for w in workers.iter_mut() {
+        data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+    }
+}
+
+/// Run `f` on one worker against its own (already sampled) batch buffer:
+/// the batch moves out of the state for the call — `f` takes `&mut
+/// WorkerState` *and* `&Batch`, which would otherwise alias — and moves
+/// back afterwards, keeping the buffer in the recycling loop. Shared by
+/// all three runtimes.
+pub(crate) fn step_with_own_batch<M: Model + ?Sized, R>(
+    ctx: StepCtx,
+    w: &mut WorkerState,
+    model: &mut M,
+    params: &[f32],
+    f: fn(StepCtx, &mut WorkerState, &mut M, &[f32], &Batch) -> R,
+) -> R {
+    let batch = std::mem::take(&mut w.batch);
+    let out = f(ctx, w, model, params, &batch);
+    w.batch = batch;
+    out
 }
 
 /// One worker's compute phase: gradient on the pre-sampled batch, local
@@ -389,8 +408,8 @@ impl Executor {
                 let msgs = workers
                     .iter_mut()
                     .map(|w| {
-                        let batch = data.sample(batch_size, &mut w.data_rng);
-                        worker_step(ctx, w, &mut *model, p, &batch)
+                        data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+                        step_with_own_batch(ctx, w, &mut *model, p, worker_step)
                     })
                     .collect();
                 (msgs, 0.0)
@@ -410,9 +429,9 @@ impl Executor {
                 (collected, dispatch_us)
             }
             Executor::Pool(pool) => {
-                let batches = sample_batches(workers, data, batch_size);
+                sample_batches(workers, data, batch_size);
                 let (results, dispatch_us) =
-                    dispatch_pool(pool, ctx, workers, params, batches, PoolPhase::Full);
+                    dispatch_pool(pool, ctx, workers, params, PoolPhase::Full);
                 let mut msgs = Vec::new();
                 for r in results {
                     match r {
@@ -447,8 +466,8 @@ impl Executor {
                 let losses = workers
                     .iter_mut()
                     .map(|w| {
-                        let batch = data.sample(batch_size, &mut w.data_rng);
-                        grad_step(ctx, w, &mut *model, p, &batch)
+                        data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+                        step_with_own_batch(ctx, w, &mut *model, p, grad_step)
                     })
                     .collect();
                 (losses, 0.0)
@@ -468,9 +487,9 @@ impl Executor {
                 (collected, dispatch_us)
             }
             Executor::Pool(pool) => {
-                let batches = sample_batches(workers, data, batch_size);
+                sample_batches(workers, data, batch_size);
                 let (results, dispatch_us) =
-                    dispatch_pool(pool, ctx, workers, params, batches, PoolPhase::Grad);
+                    dispatch_pool(pool, ctx, workers, params, PoolPhase::Grad);
                 let mut losses = Vec::new();
                 for r in results {
                     match r {
@@ -491,12 +510,12 @@ impl Executor {
 
 /// The scoped-thread driver shared by both phases: spawn up to
 /// `nthreads` scoped threads over contiguous rank chunks of workers,
-/// sample each worker's batch *on its thread* (P concurrent draws — the
-/// per-worker `data_rng` makes the streams identical to any other
-/// sampling placement), run `f` per worker on the chunk's forked model,
-/// and report the spawn-loop wall time (the per-step cost `pool:N`
-/// retires). Results come back in thread order — callers re-sort by
-/// rank.
+/// sample each worker's batch *on its thread* into the worker's recycled
+/// batch buffer (P concurrent draws — the per-worker `data_rng` makes
+/// the streams identical to any other sampling placement), run `f` per
+/// worker on the chunk's forked model, and report the spawn-loop wall
+/// time (the per-step cost `pool:N` retires). Results come back in
+/// thread order — callers re-sort by rank.
 #[allow(clippy::too_many_arguments)]
 fn run_scoped<R: Send>(
     fork_models: &mut [Box<dyn Model + Send>],
@@ -521,8 +540,8 @@ fn run_scoped<R: Send>(
                     group
                         .iter_mut()
                         .map(|w| {
-                            let batch = data.sample(batch_size, &mut w.data_rng);
-                            f(ctx, w, fm.as_mut(), params_ref, &batch)
+                            data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+                            step_with_own_batch(ctx, w, fm.as_mut(), params_ref, f)
                         })
                         .collect::<Vec<R>>()
                 })
@@ -540,6 +559,8 @@ fn run_scoped<R: Send>(
 /// Ship one compute/grad phase to the pool: drain the workers into
 /// per-thread groups (the same contiguous rank chunks the scoped runtime
 /// uses), send one job per group, and collect one result per group. The
+/// pre-sampled batches travel inside the states (and home again with the
+/// barrier — the batch buffers never leave the recycling loop). The
 /// returned dispatch time covers the sends only — the launch cost the
 /// pooled runtime pays instead of thread spawns.
 fn dispatch_pool(
@@ -547,7 +568,6 @@ fn dispatch_pool(
     ctx: StepCtx,
     workers: &mut Vec<WorkerState>,
     params: &ParamStore,
-    mut batches: Vec<Batch>,
     phase: PoolPhase,
 ) -> (Vec<PoolResult>, f64) {
     let p = workers.len();
@@ -558,14 +578,12 @@ fn dispatch_pool(
     while !workers.is_empty() {
         let take = wpt.min(workers.len());
         let group: Vec<WorkerState> = workers.drain(..take).collect();
-        let group_batches: Vec<Batch> = batches.drain(..take).collect();
         pool.send_job(
             njobs,
             PoolJob::Compute {
                 ctx,
                 phase,
                 states: group,
-                batches: group_batches,
                 params: params.shared_handle(),
             },
         );

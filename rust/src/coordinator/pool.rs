@@ -23,9 +23,10 @@
 //!    and a forked model replica ([`crate::models::Model::fork`]), which
 //!    it owns until teardown. A single shared result channel flows back.
 //! 2. **Dispatch** (per step/phase): the coordinator *moves* each
-//!    contiguous rank group of [`WorkerState`]s (plus pre-sampled
-//!    batches and an `Arc` params handle) into a [`PoolJob::Compute`];
-//!    moving a `WorkerState` is pointer-sized — its buffers don't copy.
+//!    contiguous rank group of [`WorkerState`]s (each carrying its
+//!    pre-sampled batch in its recycled buffer, plus an `Arc` params
+//!    handle) into a [`PoolJob::Compute`]; moving a `WorkerState` is
+//!    pointer-sized — its buffers don't copy.
 //! 3. **Compute**: the thread runs the same pure
 //!    [`worker_step`](super::exec::worker_step)/
 //!    [`grad_step`](super::exec::grad_step) functions every other runtime
@@ -83,12 +84,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::exec::{
-    grad_step, produce_bucket_msg, recycle_bucket_msg, worker_step, BucketMsg, PayloadBank,
-    StepCtx, WorkerMsg,
+    grad_step, produce_bucket_msg, recycle_bucket_msg, step_with_own_batch, worker_step,
+    BucketMsg, PayloadBank, StepCtx, WorkerMsg,
 };
 use super::worker::WorkerState;
 use crate::buckets::BucketSpec;
-use crate::data::Batch;
 use crate::models::Model;
 
 /// Which half of the step a [`PoolJob::Compute`] runs.
@@ -102,12 +102,12 @@ pub(crate) enum PoolPhase {
 
 /// One unit of work shipped to a pool thread.
 pub(crate) enum PoolJob {
-    /// Run a compute phase over a contiguous rank group.
+    /// Run a compute phase over a contiguous rank group (each state
+    /// carries its pre-sampled batch in its recycled buffer).
     Compute {
         ctx: StepCtx,
         phase: PoolPhase,
         states: Vec<WorkerState>,
-        batches: Vec<Batch>,
         params: Arc<Vec<f32>>,
     },
     /// Run the bucketed compression pipeline over *all* workers
@@ -252,23 +252,24 @@ fn pool_thread_main(
                 ctx,
                 phase,
                 mut states,
-                batches,
                 params,
             } => {
                 let result = match phase {
                     PoolPhase::Full => {
                         let msgs: Vec<WorkerMsg> = states
                             .iter_mut()
-                            .zip(&batches)
-                            .map(|(w, b)| worker_step(ctx, w, model.as_mut(), &params, b))
+                            .map(|w| {
+                                step_with_own_batch(ctx, w, model.as_mut(), &params, worker_step)
+                            })
                             .collect();
                         PoolResult::Compute { states, msgs }
                     }
                     PoolPhase::Grad => {
                         let losses: Vec<(usize, f64)> = states
                             .iter_mut()
-                            .zip(&batches)
-                            .map(|(w, b)| grad_step(ctx, w, model.as_mut(), &params, b))
+                            .map(|w| {
+                                step_with_own_batch(ctx, w, model.as_mut(), &params, grad_step)
+                            })
                             .collect();
                         PoolResult::Grad { states, losses }
                     }

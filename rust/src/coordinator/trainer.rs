@@ -60,10 +60,14 @@
 //! routes consumed [`BucketMsg`]s back to the producer over a payload
 //! **return channel** ([`run_pipelined_return`], or the pool's pipeline
 //! return channel) where their buffers recycle into the workspaces and
-//! the cross-step [`PayloadBank`]. In the pooled steady state neither
-//! path spawns a thread or allocates a payload buffer. Snapshot copies
-//! (`keep_raw`) happen only on the steps where the histogram sampling
-//! actually fires.
+//! the cross-step [`PayloadBank`]. Batch sampling recycles too: every
+//! runtime samples each worker's shard into the worker's own
+//! [`crate::data::Batch`] buffer (`DataSource::sample_into`), which
+//! travels with the `WorkerState` through the pool's ownership
+//! ping-pong, and the periodic eval set reuses one run-owned buffer. In
+//! the pooled steady state a step spawns no thread and allocates neither
+//! a payload nor a batch buffer. Snapshot copies (`keep_raw`) happen
+//! only on the steps where the histogram sampling actually fires.
 //!
 //! ## Bucketed, pipelined exchange
 //!
@@ -104,7 +108,7 @@ use crate::buckets::{run_pipelined_return, BucketSchedule, BucketSpec};
 use crate::collectives::Collectives;
 use crate::compress::OpKind;
 use crate::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
-use crate::data::DataSource;
+use crate::data::{Batch, DataSource};
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::models::Model;
 use crate::schedule::{feedback_histogram, KSchedule, Scheduler};
@@ -248,12 +252,15 @@ impl<'a> Trainer<'a> {
 
     /// Periodic eval (+ final step), shared by both exchange paths. Eval
     /// set size: a multiple of the train batch so static-batch backends
-    /// (PJRT) can chunk it exactly.
+    /// (PJRT) can chunk it exactly. The eval set samples into a recycled
+    /// buffer owned by the run loop — like the per-worker train batches,
+    /// steady-state evals allocate nothing.
     fn maybe_eval(
         &mut self,
         step: usize,
         params: &[f32],
         eval_rng: &mut Pcg64,
+        eval_batch: &mut Batch,
         metrics: &mut RunMetrics,
     ) {
         if self.cfg.eval_every == 0
@@ -262,8 +269,8 @@ impl<'a> Trainer<'a> {
             return;
         }
         let eval_n = self.cfg.batch_size * 8;
-        let eval = self.data.sample(eval_n, eval_rng);
-        let (eloss, acc) = self.model.eval_step(params, &eval.x, &eval.y, eval.n);
+        self.data.sample_into(eval_n, eval_rng, eval_batch);
+        let (eloss, acc) = self.model.eval_step(params, &eval_batch.x, &eval_batch.y, eval_batch.n);
         metrics.record_eval(EvalRecord {
             step,
             accuracy: acc,
@@ -304,6 +311,7 @@ impl<'a> Trainer<'a> {
 
         let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
+        let mut eval_batch = Batch::default();
         let mut metrics = RunMetrics::new(&self.run_name(""));
         let mut snapshots = Vec::new();
 
@@ -436,7 +444,7 @@ impl<'a> Trainer<'a> {
                 spawn_or_dispatch_us: dispatch_us,
             });
 
-            self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut metrics);
+            self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
         }
 
         Ok(TrainOutput {
@@ -470,7 +478,10 @@ impl<'a> Trainer<'a> {
             Buckets::Bytes(n) => BucketSchedule::fixed_bytes(d, n, k),
         };
         let is_dense = self.cfg.op == OpKind::Dense;
-        let mass_mode = self.cfg.bucket_apportion == BucketApportion::Mass && !is_dense;
+        let (mass_mode, ema_beta) = match self.cfg.bucket_apportion {
+            BucketApportion::Mass { ema_beta } if !is_dense => (true, ema_beta),
+            _ => (false, 0.0),
+        };
 
         let mut workers: Vec<WorkerState> = (0..p)
             .map(|r| WorkerState::new(r, d, self.cfg.op, self.cfg.seed))
@@ -493,6 +504,7 @@ impl<'a> Trainer<'a> {
 
         let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
+        let mut eval_batch = Batch::default();
         let mut run_suffix = format!("-buckets{}", schedule.len());
         if mass_mode {
             run_suffix.push_str("-mass");
@@ -502,8 +514,12 @@ impl<'a> Trainer<'a> {
         let mut agg = vec![0.0f32; d];
         // Reusable u_0 = g + ε scratch for the snapshot/feedback/mass block.
         let mut u0: Vec<f32> = Vec::new();
-        // Per-step bucket masses (worker 0's ‖u_b‖², mass apportionment).
+        // Per-step bucket masses (worker 0's ‖u_b‖², mass apportionment)
+        // and their cross-step EMA under `mass:ema=BETA` (empty ⇒ not yet
+        // seeded; β = 0 bypasses the EMA entirely so the bare `mass` mode
+        // stays bit-identical to the pre-EMA trainer).
         let mut bucket_mass: Vec<f64> = Vec::new();
+        let mut smoothed_mass: Vec<f64> = Vec::new();
         // Cross-step payload buffer bank (see `exec::PayloadBank`) and the
         // shared bucket specs the pool's pipeline jobs reference.
         let mut bank = PayloadBank::default();
@@ -597,10 +613,17 @@ impl<'a> Trainer<'a> {
             // Per-step bucket budgets: Σ ks_t == min(k_t, d). Mass mode
             // steers the split by worker 0's per-bucket energy (identical
             // on every runtime — the stats come from the coordinator-side
-            // u_0 above); degenerate stats fall back to the size split
-            // inside `apportion_k_by_mass`.
+            // u_0 above), optionally EMA-smoothed across steps
+            // (`mass:ema=BETA` — `buckets::ema_masses`); degenerate stats
+            // fall back to the size split inside `apportion_k_by_mass`.
             let ks_t: Vec<usize> = if mass_mode {
-                schedule.apportion_k_by_mass(plan.k, &bucket_mass)
+                let masses: &[f64] = if ema_beta > 0.0 {
+                    crate::buckets::ema_masses(&mut smoothed_mass, &bucket_mass, ema_beta);
+                    &smoothed_mass
+                } else {
+                    &bucket_mass
+                };
+                schedule.apportion_k_by_mass(plan.k, masses)
             } else {
                 schedule.apportion_k(plan.k)
             };
@@ -827,7 +850,7 @@ impl<'a> Trainer<'a> {
                 spawn_or_dispatch_us: launch_us,
             });
 
-            self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut metrics);
+            self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
         }
 
         Ok(TrainOutput {
@@ -1009,6 +1032,63 @@ mod tests {
         let out = train(cfg, &mut model, &data).unwrap();
         let serial = train(quick_cfg(OpKind::TopK, 10), &mut model, &data).unwrap();
         assert_eq!(out.final_params, serial.final_params);
+    }
+
+    #[test]
+    fn steady_state_steps_allocate_no_batch_storage() {
+        // The batch-buffer pool contract: after the first step warms the
+        // per-worker buffers (and the first eval warms the eval buffer),
+        // no runtime allocates batch storage again. The counting wrapper
+        // flags any capacity growth in `sample_into` and any call to the
+        // allocating `sample` at all.
+        use std::sync::atomic::AtomicUsize;
+        struct CountingSource {
+            inner: GaussianMixture,
+            grows: AtomicUsize,
+        }
+        impl crate::data::DataSource for CountingSource {
+            fn features(&self) -> usize {
+                self.inner.features()
+            }
+            fn classes(&self) -> usize {
+                self.inner.classes()
+            }
+            fn sample(&self, n: usize, rng: &mut Pcg64) -> Batch {
+                // The trainer must never take the allocating path.
+                self.grows.fetch_add(1000, Ordering::Relaxed);
+                self.inner.sample(n, rng)
+            }
+            fn sample_into(&self, n: usize, rng: &mut Pcg64, out: &mut Batch) {
+                let (cx, cy) = (out.x.capacity(), out.y.capacity());
+                crate::data::DataSource::sample_into(&self.inner, n, rng, out);
+                if out.x.capacity() > cx || out.y.capacity() > cy {
+                    self.grows.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        for parallelism in [Parallelism::Serial, Parallelism::Threads(3), Parallelism::Pool(3)] {
+            for buckets in [crate::config::Buckets::None, crate::config::Buckets::Bytes(1024)] {
+                let data = CountingSource {
+                    inner: GaussianMixture::new(16, 4, 2.5, 1.0, 11),
+                    grows: AtomicUsize::new(0),
+                };
+                let mut model = NativeMlp::new(&[16, 64, 32, 4]);
+                let mut cfg = quick_cfg(OpKind::TopK, 12);
+                cfg.parallelism = parallelism;
+                cfg.buckets = buckets;
+                cfg.eval_every = 4;
+                train(cfg, &mut model, &data).unwrap();
+                // Exactly one warm-up growth per worker batch buffer plus
+                // one for the eval buffer — nothing per-step.
+                assert_eq!(
+                    data.grows.load(Ordering::Relaxed),
+                    4 + 1,
+                    "batch storage allocated in steady state under {}/{}",
+                    parallelism.name(),
+                    buckets.name()
+                );
+            }
+        }
     }
 
     #[test]

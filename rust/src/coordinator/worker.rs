@@ -16,6 +16,7 @@
 
 use crate::buckets::BucketSchedule;
 use crate::compress::{Compressor, OpKind, Workspace};
+use crate::data::Batch;
 use crate::error_feedback::ResidualStore;
 use crate::stats::rng::Pcg64;
 use crate::tensor::SparseVec;
@@ -41,6 +42,11 @@ pub struct WorkerState {
     pub workspace: Workspace,
     /// Reusable local-gradient buffer.
     pub grad: Vec<f32>,
+    /// Reusable batch buffer: every runtime samples this worker's shard
+    /// into it ([`crate::data::DataSource::sample_into`]) and it travels
+    /// with the state through the pool's ownership ping-pong, so
+    /// steady-state steps allocate no batch storage on any runtime.
+    pub batch: Batch,
     /// Local momentum velocity (only allocated when DGC-style momentum
     /// correction is enabled).
     pub velocity: Vec<f32>,
@@ -66,6 +72,7 @@ impl WorkerState {
             bucket_compressors: Vec::new(),
             workspace: Workspace::new(),
             grad: vec![0.0; d],
+            batch: Batch::default(),
             velocity: Vec::new(),
             comp_seed,
         }

@@ -12,7 +12,9 @@
 use crate::stats::rng::Pcg64;
 
 /// A classification batch: `x` is row-major `[n, features]`, `y` labels.
-#[derive(Debug, Clone)]
+/// `Default` is the empty batch — the zero-capacity seed of the
+/// trainer's recycled batch buffers ([`DataSource::sample_into`]).
+#[derive(Debug, Clone, Default)]
 pub struct Batch {
     pub x: Vec<f32>,
     pub y: Vec<u32>,
@@ -29,6 +31,18 @@ pub trait DataSource: Send + Sync {
     /// Sample a batch with the given RNG (callers shard by giving each
     /// worker an independent split of the master RNG).
     fn sample(&self, n: usize, rng: &mut Pcg64) -> Batch;
+
+    /// Sample into a caller-owned batch, reusing its buffers. The
+    /// trainer's hot loop recycles one `Batch` per worker through this
+    /// hook (plus one for eval), so steady-state steps allocate **no**
+    /// batch storage once the buffers are warm — the batch twin of the
+    /// payload/workspace recycling. The RNG draw sequence is identical to
+    /// [`DataSource::sample`] (reproducibility contract); the default
+    /// implementation simply replaces `out` with a fresh sample, so
+    /// third-party sources stay correct without opting in.
+    fn sample_into(&self, n: usize, rng: &mut Pcg64, out: &mut Batch) {
+        *out = self.sample(n, rng);
+    }
 }
 
 /// Class-conditional Gaussian mixture in `features` dimensions.
@@ -70,21 +84,25 @@ impl DataSource for GaussianMixture {
     }
 
     fn sample(&self, n: usize, rng: &mut Pcg64) -> Batch {
-        let mut x = Vec::with_capacity(n * self.features);
-        let mut y = Vec::with_capacity(n);
+        let mut out = Batch::default();
+        self.sample_into(n, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&self, n: usize, rng: &mut Pcg64, out: &mut Batch) {
+        out.n = n;
+        out.features = self.features;
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(n * self.features);
+        out.y.reserve(n);
         for _ in 0..n {
             let c = rng.next_below(self.classes as u64) as usize;
-            y.push(c as u32);
+            out.y.push(c as u32);
             let center = &self.centers[c * self.features..(c + 1) * self.features];
             for &m in center {
-                x.push(m + self.noise * rng.next_gaussian() as f32);
+                out.x.push(m + self.noise * rng.next_gaussian() as f32);
             }
-        }
-        Batch {
-            x,
-            y,
-            n,
-            features: self.features,
         }
     }
 }
@@ -148,22 +166,26 @@ impl DataSource for SyntheticDigits {
     }
 
     fn sample(&self, n: usize, rng: &mut Pcg64) -> Batch {
+        let mut out = Batch::default();
+        self.sample_into(n, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&self, n: usize, rng: &mut Pcg64, out: &mut Batch) {
         let f = self.features();
-        let mut x = Vec::with_capacity(n * f);
-        let mut y = Vec::with_capacity(n);
+        out.n = n;
+        out.features = f;
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(n * f);
+        out.y.reserve(n);
         for _ in 0..n {
             let c = rng.next_below(self.classes as u64) as usize;
-            y.push(c as u32);
+            out.y.push(c as u32);
             let t = &self.templates[c * f..(c + 1) * f];
             for &m in t {
-                x.push(m + self.noise * rng.next_gaussian() as f32);
+                out.x.push(m + self.noise * rng.next_gaussian() as f32);
             }
-        }
-        Batch {
-            x,
-            y,
-            n,
-            features: f,
         }
     }
 }
@@ -210,17 +232,27 @@ impl CharCorpus {
         self.vocab.len()
     }
 
+    /// Visit `n` random (context, target) windows — the single source of
+    /// the window-sampling draw order, shared by [`Self::sample_windows`]
+    /// and the buffer-reusing `LmDataSource::sample_into` so the two can
+    /// never drift apart.
+    fn visit_windows(&self, n: usize, rng: &mut Pcg64, mut f: impl FnMut(&[u32], u32)) {
+        let max_start = self.tokens.len() - self.context - 1;
+        for _ in 0..n {
+            let s = rng.next_below(max_start as u64 + 1) as usize;
+            f(&self.tokens[s..s + self.context], self.tokens[s + self.context]);
+        }
+    }
+
     /// Sample a batch of (context, target) windows: x is `[n, context]`
     /// token ids (as f32 for the flat Batch container), y the next token.
     pub fn sample_windows(&self, n: usize, rng: &mut Pcg64) -> (Vec<u32>, Vec<u32>) {
         let mut x = Vec::with_capacity(n * self.context);
         let mut y = Vec::with_capacity(n);
-        let max_start = self.tokens.len() - self.context - 1;
-        for _ in 0..n {
-            let s = rng.next_below(max_start as u64 + 1) as usize;
-            x.extend_from_slice(&self.tokens[s..s + self.context]);
-            y.push(self.tokens[s + self.context]);
-        }
+        self.visit_windows(n, rng, |ctx, target| {
+            x.extend_from_slice(ctx);
+            y.push(target);
+        });
         (x, y)
     }
 }
@@ -253,13 +285,25 @@ impl DataSource for LmDataSource {
     }
 
     fn sample(&self, n: usize, rng: &mut Pcg64) -> Batch {
-        let (x_ids, y) = self.corpus.sample_windows(n, rng);
-        Batch {
-            x: x_ids.into_iter().map(|t| t as f32).collect(),
-            y,
-            n,
-            features: self.corpus.context,
-        }
+        let mut out = Batch::default();
+        self.sample_into(n, rng, &mut out);
+        out
+    }
+
+    fn sample_into(&self, n: usize, rng: &mut Pcg64, out: &mut Batch) {
+        // Token ids straight into the recycled buffers; the draw order is
+        // `visit_windows` — the same loop `sample_windows` uses.
+        let ctx = self.corpus.context;
+        out.n = n;
+        out.features = ctx;
+        out.x.clear();
+        out.y.clear();
+        out.x.reserve(n * ctx);
+        out.y.reserve(n);
+        self.corpus.visit_windows(n, rng, |window, target| {
+            out.x.extend(window.iter().map(|&t| t as f32));
+            out.y.push(target);
+        });
     }
 }
 
@@ -343,6 +387,39 @@ mod tests {
                 .position(|w| w == ctx)
                 .expect("context must exist in corpus");
             assert_eq!(y[i], c.tokens[pos + 2]);
+        }
+    }
+
+    #[test]
+    fn sample_into_matches_sample_and_reuses_capacity() {
+        // Same RNG seed ⇒ sample() and sample_into() draw identically,
+        // for every built-in source; a second sample_into of the same
+        // shape reuses the buffers (no new allocation).
+        let sources: Vec<Box<dyn DataSource>> = vec![
+            Box::new(GaussianMixture::new(8, 3, 2.0, 1.0, 5)),
+            Box::new(SyntheticDigits::new(8, 4, 0.3, 5)),
+            Box::new(LmDataSource::builtin(12)),
+        ];
+        for ds in &sources {
+            let mut r1 = Pcg64::seed(21);
+            let mut r2 = Pcg64::seed(21);
+            let fresh = ds.sample(6, &mut r1);
+            let mut reused = Batch::default();
+            ds.sample_into(6, &mut r2, &mut reused);
+            assert_eq!(fresh.x, reused.x);
+            assert_eq!(fresh.y, reused.y);
+            assert_eq!(fresh.n, reused.n);
+            assert_eq!(fresh.features, reused.features);
+            // And the RNGs are in the same state afterwards.
+            assert_eq!(r1.next_u64(), r2.next_u64());
+            // Steady state: the warm buffers are reused in place.
+            let (px, py) = (reused.x.as_ptr(), reused.y.as_ptr());
+            let (cx, cy) = (reused.x.capacity(), reused.y.capacity());
+            ds.sample_into(6, &mut r2, &mut reused);
+            assert_eq!(reused.x.as_ptr(), px, "x buffer reallocated");
+            assert_eq!(reused.y.as_ptr(), py, "y buffer reallocated");
+            assert_eq!(reused.x.capacity(), cx);
+            assert_eq!(reused.y.capacity(), cy);
         }
     }
 

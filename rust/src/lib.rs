@@ -9,8 +9,11 @@
 //!   sparsification operators ([`compress`]), error-feedback state
 //!   ([`error_feedback`]), in-process collectives ([`collectives`]), a
 //!   discrete-event cluster/network simulator ([`netsim`], [`cluster`]),
-//!   the training engine ([`coordinator`]), and the analysis toolkit that
-//!   regenerates every figure/table of the paper ([`analysis`]).
+//!   the training engine ([`coordinator`]), the closed-loop plan tuner
+//!   ([`autotune`]: netsim-driven search over compression plans with
+//!   measured calibration and deterministic replay), and the analysis
+//!   toolkit that regenerates every figure/table of the paper
+//!   ([`analysis`]).
 //! * **L2 (JAX, build-time)** — model fwd/bwd graphs lowered to HLO text in
 //!   `artifacts/`, loaded at runtime through [`runtime`] (PJRT CPU client).
 //! * **L1 (Pallas, build-time)** — the Gaussian-k compression hot-spot as a
@@ -39,6 +42,7 @@
 //! ```
 
 pub mod analysis;
+pub mod autotune;
 pub mod buckets;
 pub mod cluster;
 pub mod collectives;

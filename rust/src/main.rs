@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //! * `train`     — run a distributed (simulated-P-worker) training job with
-//!   any operator; native or PJRT backend.
+//!   any operator; native or PJRT backend. `--plan plan.json` replays a
+//!   tuned plan's compression configuration.
+//! * `tune`      — closed-loop search over compression plans (operator ×
+//!   k-schedule × buckets × apportionment × runtime) with the netsim cost
+//!   model in the loop; writes a deterministic `TunedPlan` JSON.
 //! * `simulate`  — Table 2 cluster simulation (iteration time + scaling
 //!   efficiency for every model × operator).
 //! * `bench-op`  — operator selection-speed sweep (Fig. 4 shape on CPU).
@@ -12,6 +16,10 @@
 //! See `examples/` for the figure-for-figure reproduction drivers.
 
 use sparkv::analysis::{bound_sweep, pi_curve};
+use sparkv::autotune::{
+    Calibrator, Candidate, ExhaustiveGrid, GreedyDescent, SearchSpace, SearchStrategy,
+    SuccessiveHalving, TuneScenario, TunedPlan, DEFAULT_TUNE_SEED,
+};
 use sparkv::cluster::scaling_table;
 use sparkv::compress::{Compressor, OpKind};
 use sparkv::config::{RawConfig, TrainConfig};
@@ -28,19 +36,24 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(true);
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("tune") => cmd_tune(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("bench-op") => cmd_bench_op(&args),
         Some("analyze") => cmd_analyze(&args),
         _ => {
             println!(
                 "sparkv — Top-K sparsification for distributed deep learning\n\n\
-                 USAGE: sparkv <train|simulate|bench-op|analyze> [OPTIONS]\n\n\
+                 USAGE: sparkv <train|tune|simulate|bench-op|analyze> [OPTIONS]\n\n\
                  train     --op <dense|topk|randk|dgc|trimmed|gaussiank> --workers N --steps N\n\
                  \x20         [--parallelism serial|threads:N|pool:N] [--buckets none|layers|bytes:N]\n\
                  \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
-                 \x20         [--bucket-apportion size|mass]\n\
+                 \x20         [--bucket-apportion size|mass|mass:ema=BETA]\n\
                  \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
-                 \x20         [--backend native|pjrt --model <name>]\n\
+                 \x20         [--plan plan.json] [--backend native|pjrt --model <name>]\n\
+                 tune      [--model resnet50] [--nodes 4 --gpus 4] [--k-ratio 0.001]\n\
+                 \x20         [--steps-per-epoch 24] [--strategy grid|greedy|halving] [--seed 7]\n\
+                 \x20         [--sample N] [--measure] [--measure-steps 8] [--calibrate N]\n\
+                 \x20         [--smoke] [--out results/tuned_plan.json]\n\
                  simulate  [--k-ratio 0.001] [--nodes 4 --gpus 4]\n\
                  bench-op  [--dims 1000000,4000000,16000000] [--k-ratio 0.001]\n\
                  analyze   [--d 100000] [--ks 100,1000,10000]"
@@ -55,6 +68,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         Some(path) => RawConfig::load(path)?,
         None => RawConfig::default(),
     };
+    // A tuned plan replays through the ordinary [train] keys (applied
+    // after the config file, before explicit CLI keys — flags still win).
+    if let Some(path) = args.get("plan") {
+        let plan = TunedPlan::load(path)?;
+        plan.apply(&mut raw)?;
+        println!("plan {path}: {}", plan.summary());
+    }
     // CLI conveniences map onto [train] keys.
     for key in [
         "workers",
@@ -124,6 +144,139 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, out.metrics.to_json().to_string())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let smoke = args.flag("smoke");
+    let scenario = TuneScenario::from_parts(
+        &args.get_or("model", "resnet50"),
+        args.get_parsed_or("nodes", 4usize),
+        args.get_parsed_or("gpus", 4usize),
+        args.get_parsed_or("k-ratio", 0.001f64),
+        args.get_parsed_or("steps-per-epoch", if smoke { 3 } else { 24 }),
+    )?;
+    let space = if smoke {
+        SearchSpace::smoke_space()
+    } else {
+        SearchSpace::default_space()
+    };
+    let seed: u64 = args.get_parsed_or("seed", DEFAULT_TUNE_SEED);
+    anyhow::ensure!(
+        seed < (1u64 << 53),
+        "--seed must be < 2^53 (the plan records it as a JSON number)"
+    );
+    // Validate the strategy selection and its flag combinations *before*
+    // any measured work, so a bad invocation errors immediately instead
+    // of after the calibration probes have trained and printed.
+    let strategy_name = args.get_or("strategy", "grid");
+    anyhow::ensure!(
+        matches!(strategy_name.as_str(), "grid" | "greedy" | "halving"),
+        "unknown tune strategy '{strategy_name}': expected grid|greedy|halving"
+    );
+    // The measured-promotion and subsample knobs only exist on halving —
+    // reject rather than silently ignore them elsewhere.
+    let halving_only_flags = args.flag("measure")
+        || args.get("sample").is_some()
+        || args.get("measure-steps").is_some();
+    if strategy_name != "halving" && halving_only_flags {
+        anyhow::bail!(
+            "--measure/--measure-steps/--sample require --strategy halving \
+             (got '{strategy_name}')"
+        );
+    }
+    if args.get("measure-steps").is_some() && !args.flag("measure") {
+        anyhow::bail!("--measure-steps only applies with --measure");
+    }
+
+    // Opt-in measured calibration (--smoke implies a 3-step probe so CI
+    // exercises the measured leg on every push).
+    let calibrate_steps: usize = args.get_parsed_or("calibrate", if smoke { 3 } else { 0 });
+    let calibration = if calibrate_steps > 0 {
+        let cal = Calibrator {
+            probe_steps: calibrate_steps,
+            ..Calibrator::default()
+        }
+        .run(&scenario)?;
+        println!(
+            "calibration ({} probe steps): spawn {:.2} µs/thread, pool dispatch {:.3} µs/thread, \
+             compute ×{:.3}, bandwidth ×{:.3}",
+            calibrate_steps,
+            cal.spawn_per_thread_s * 1e6,
+            cal.pool_dispatch_per_thread_s * 1e6,
+            cal.compute_scale,
+            cal.bandwidth_scale
+        );
+        Some(cal)
+    } else {
+        None
+    };
+
+    // Measured promotion probe for `halving --measure`: a short real
+    // training run per promoted candidate; its mean step wall-clock
+    // (StepRecord trace) picks the winner among the survivors.
+    let measure_steps: usize = args.get_parsed_or("measure-steps", 8usize);
+    let probe = move |c: &Candidate| -> anyhow::Result<f64> {
+        let data = GaussianMixture::new(16, 4, 2.5, 1.0, 23);
+        let mut model = NativeMlp::new(&[16, 64, 32, 4]);
+        let mut cfg = TrainConfig {
+            workers: 8,
+            steps: measure_steps.max(1),
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        c.apply(&mut cfg);
+        let out = train(cfg, &mut model, &data)?;
+        Ok(out.metrics.step_time.mean())
+    };
+
+    let mut grid = ExhaustiveGrid;
+    let mut greedy = GreedyDescent::default();
+    let mut halving = SuccessiveHalving {
+        sample: args.get("sample").map(|s| s.parse()).transpose()?,
+        measure: if args.flag("measure") {
+            Some(Box::new(probe))
+        } else {
+            None
+        },
+        ..SuccessiveHalving::default()
+    };
+    let strategy: &mut dyn SearchStrategy = match strategy_name.as_str() {
+        "grid" => &mut grid,
+        "greedy" => &mut greedy,
+        "halving" => &mut halving,
+        _ => unreachable!("strategy name validated before the calibration probes"),
+    };
+
+    println!(
+        "tune — {} on {} GPUs ({}×{}), k = {}·d, {} virtual steps/epoch, space of {} candidates",
+        scenario.model.name,
+        scenario.workers(),
+        scenario.topo.nodes,
+        scenario.topo.gpus_per_node,
+        scenario.k_ratio,
+        scenario.steps_per_epoch,
+        space.len()
+    );
+    let plan = sparkv::autotune::tune(&scenario, &space, strategy, seed, calibration.as_ref());
+    println!(
+        "\nleaderboard (predicted s/epoch; halving keeps eliminated rows at reduced fidelity):"
+    );
+    for (i, e) in plan.leaderboard.iter().enumerate() {
+        let mut note = String::new();
+        if let Some(m) = e.measured_step_s {
+            note.push_str(&format!("  [measured {:.1} µs/step]", m * 1e6));
+        }
+        if e.steps != scenario.steps_per_epoch {
+            note.push_str(&format!("  (over {} of {} steps)", e.steps, scenario.steps_per_epoch));
+        }
+        println!("  {:>2}. {:<60} {:>10.4}{note}", i + 1, e.name, e.epoch_s);
+    }
+    println!("\n{}", plan.summary());
+
+    let out_path = args.get_or("out", "results/tuned_plan.json");
+    plan.save(&out_path)?;
+    println!("wrote {out_path} (replay with: sparkv train --plan {out_path})");
     Ok(())
 }
 

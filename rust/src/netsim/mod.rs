@@ -41,7 +41,7 @@ pub use cost::{allgather_time, allreduce_time};
 pub use link::LinkSpec;
 pub use ops_cost::{ComputeProfile, OpCostModel};
 pub use sim::{
-    runtime_overhead_s, IterationBreakdown, SimConfig, Simulator, POOL_DISPATCH_PER_THREAD_S,
-    SPAWN_PER_THREAD_S,
+    runtime_overhead_s, runtime_overhead_with, IterationBreakdown, SimConfig, Simulator,
+    POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S,
 };
 pub use topology::Topology;

@@ -45,11 +45,29 @@ pub const POOL_DISPATCH_PER_THREAD_S: f64 = 1.5e-6;
 /// timings; the measured (launch-half) twin is
 /// `StepRecord::spawn_or_dispatch_us`.
 pub fn runtime_overhead_s(parallelism: Parallelism, workers: usize) -> f64 {
+    runtime_overhead_with(
+        parallelism,
+        workers,
+        SPAWN_PER_THREAD_S,
+        POOL_DISPATCH_PER_THREAD_S,
+    )
+}
+
+/// [`runtime_overhead_s`] with explicit per-thread constants — the single
+/// home of the thread-budget capping and runtime dispatch, shared with
+/// the autotune oracle's *calibrated* path (measured constants replace
+/// the stock ones, the formula cannot drift).
+pub fn runtime_overhead_with(
+    parallelism: Parallelism,
+    workers: usize,
+    spawn_per_thread_s: f64,
+    pool_dispatch_per_thread_s: f64,
+) -> f64 {
     let n = parallelism.threads().min(workers.max(1)).max(1) as f64;
     match parallelism {
         Parallelism::Serial => 0.0,
-        Parallelism::Threads(_) => SPAWN_PER_THREAD_S * n,
-        Parallelism::Pool(_) => POOL_DISPATCH_PER_THREAD_S * n,
+        Parallelism::Threads(_) => spawn_per_thread_s * n,
+        Parallelism::Pool(_) => pool_dispatch_per_thread_s * n,
     }
 }
 

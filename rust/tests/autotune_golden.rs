@@ -1,0 +1,122 @@
+//! Golden regression for the default tuning run: snapshots
+//! `TunedPlan::to_json()` for the default scenario × default space ×
+//! exhaustive grid × default seed and asserts field-level equality
+//! against `tests/golden/tuned_plan.json` — the autotune twin of
+//! `tests/netsim_golden.rs`.
+//!
+//! The tuner composes the calibrated cost model, the runtime-overhead
+//! model, the bucket apportionment, and the ranking rules; drift in any
+//! of them silently reshuffles every leaderboard while the
+//! ordering-style tests stay green. This pins the exact default plan:
+//! any change fails CI until the golden file is consciously regenerated.
+//!
+//! Like `tests/schedule_golden.rs`, the pinned search space contains no
+//! `powf`-based schedule curves (warmup traces are platform-sensitive in
+//! the last ulp and have their own tolerance-based tests); the default
+//! space is `const`-density only, so the snapshot is pure deterministic
+//! f64 arithmetic.
+//!
+//! Regenerate after an *intentional* model/space change with:
+//! `SPARKV_UPDATE_GOLDEN=1 cargo test -q --test autotune_golden`
+
+use sparkv::autotune::{
+    tune, Candidate, ExhaustiveGrid, SearchSpace, TuneScenario, TunedPlan, DEFAULT_TUNE_SEED,
+};
+use sparkv::util::json::Json;
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("tuned_plan.json")
+}
+
+fn current_plan_json() -> Json {
+    let plan = tune(
+        &TuneScenario::default_16gpu(),
+        &SearchSpace::default_space(),
+        &mut ExhaustiveGrid,
+        DEFAULT_TUNE_SEED,
+        None,
+    );
+    // Round-trip through the serializer so the comparison sees exactly
+    // what `sparkv tune` writes (f64 Display is shortest-roundtrip, so
+    // no precision is lost).
+    Json::parse(&plan.to_json().to_string()).expect("self-emitted json must parse")
+}
+
+/// Structure-aware comparison: strings/bools/null exact, numbers within
+/// the goldens' standard tolerance, arrays/objects recursed with
+/// key-set equality both ways (new or dropped fields are drift too).
+fn assert_json_close(path: &str, cur: &Json, gold: &Json) {
+    match (cur, gold) {
+        (Json::Num(a), Json::Num(b)) => {
+            let tol = 1e-12 + 1e-9 * b.abs();
+            assert!(
+                (a - b).abs() <= tol,
+                "{path}: tuner drift {a} vs golden {b} (rerun with SPARKV_UPDATE_GOLDEN=1 \
+                 only if the change is intentional)"
+            );
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            assert_eq!(a.len(), b.len(), "{path}: array length drifted");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_json_close(&format!("{path}[{i}]"), x, y);
+            }
+        }
+        (Json::Obj(a), Json::Obj(b)) => {
+            let (ka, kb): (Vec<&String>, Vec<&String>) = (a.keys().collect(), b.keys().collect());
+            assert_eq!(ka, kb, "{path}: field set drifted");
+            for (k, x) in a {
+                assert_json_close(&format!("{path}.{k}"), x, &b[k]);
+            }
+        }
+        _ => assert_eq!(cur, gold, "{path}: value drifted"),
+    }
+}
+
+#[test]
+fn tuned_plan_matches_golden_snapshot() {
+    let current = current_plan_json();
+    let path = golden_path();
+    if std::env::var("SPARKV_UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{current}\n")).unwrap();
+        eprintln!("rewrote {}", path.display());
+        return;
+    }
+    let golden_text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {}: {e}", path.display()));
+    let golden = Json::parse(&golden_text).expect("golden file must be valid json");
+    assert_json_close("plan", &current, &golden);
+}
+
+/// The golden plan itself stays sensible (guards against regenerating
+/// the snapshot from a silently-broken tuner): it parses as a plan, its
+/// predicted time undercuts the baseline, the winner is a sparse
+/// pipelined configuration, and the per-bucket budgets are exact.
+#[test]
+fn golden_plan_is_physical() {
+    let golden_text = std::fs::read_to_string(golden_path()).expect("golden file present");
+    let golden = Json::parse(&golden_text).unwrap();
+    let plan = TunedPlan::from_json(&golden).expect("golden parses as a TunedPlan");
+    assert_eq!(plan.seed, DEFAULT_TUNE_SEED);
+    assert_eq!(plan.strategy, "grid");
+    assert_eq!(plan.model, "resnet50");
+    assert!(plan.predicted_epoch_s < plan.baseline_epoch_s);
+    assert!(plan.speedup_vs_baseline > 1.0);
+    // The winner the search should find on this cluster: a cheap sparse
+    // selector with the bucketed pipeline on a dispatching runtime.
+    assert!(plan.chosen.buckets.is_bucketed());
+    assert_ne!(plan.chosen.op, sparkv::compress::OpKind::Dense);
+    // Per-bucket budgets conserve the wire budget exactly.
+    let scen = TuneScenario::default_16gpu();
+    assert_eq!(
+        plan.bucket_ks.iter().sum::<usize>(),
+        scen.base_k_for(&plan.chosen.k_schedule).min(scen.model.params as usize)
+    );
+    // And the baseline candidate heads a leaderboard entry somewhere
+    // behind the winner.
+    let baseline_name = Candidate::baseline().name();
+    assert_ne!(plan.leaderboard[0].name, baseline_name);
+}

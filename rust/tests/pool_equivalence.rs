@@ -154,7 +154,7 @@ fn mass_apportionment_pool_matches_serial_and_conserves_budget() {
     let (data, mut model) = setup();
     let mk = |parallelism| {
         let mut c = cfg(OpKind::TopK, Buckets::Bytes(1024), parallelism);
-        c.bucket_apportion = BucketApportion::Mass;
+        c.bucket_apportion = BucketApportion::mass();
         c.steps = 40; // long enough for the learns-something check below
         c
     };
@@ -180,11 +180,42 @@ fn mass_and_size_apportionment_send_identical_volume() {
     let size_cfg = cfg(OpKind::TopK, Buckets::Bytes(1024), Parallelism::Serial);
     let size = train(size_cfg, &mut model, &data).unwrap();
     let mut mass_cfg = cfg(OpKind::TopK, Buckets::Bytes(1024), Parallelism::Serial);
-    mass_cfg.bucket_apportion = BucketApportion::Mass;
+    mass_cfg.bucket_apportion = BucketApportion::mass();
     let mass = train(mass_cfg, &mut model, &data).unwrap();
     for (a, b) in size.metrics.steps.iter().zip(&mass.metrics.steps) {
         assert_eq!(a.sent_elements, b.sent_elements, "step {}", a.step);
     }
+}
+
+/// A smoothed (`ema=0.9`) mass run still conserves the wire budget,
+/// still trains, and resolves identically on every runtime (the EMA
+/// state lives on the coordinator, like the raw masses). The
+/// `mass ≡ mass:ema=0` identity is *structural* — `BucketApportion::
+/// mass()` IS `Mass { ema_beta: 0.0 }` and the trainer routes β = 0
+/// around the EMA entirely; `ema_masses`'s own β = 0 raw-tracking is
+/// unit-tested in `buckets` — so there is no distinct config to compare
+/// here.
+#[test]
+fn mass_ema_smoothing_stays_runtime_equivalent_and_budget_exact() {
+    let (data, mut model) = setup();
+    let mk = |apportion: BucketApportion, parallelism| {
+        let mut c = cfg(OpKind::TopK, Buckets::Bytes(1024), parallelism);
+        c.bucket_apportion = apportion;
+        c.steps = 30;
+        c
+    };
+    let smooth = BucketApportion::Mass { ema_beta: 0.9 };
+    let serial = train(mk(smooth, Parallelism::Serial), &mut model, &data).unwrap();
+    let pooled = train(mk(smooth, Parallelism::Pool(3)), &mut model, &data).unwrap();
+    let threaded = train(mk(smooth, Parallelism::Threads(2)), &mut model, &data).unwrap();
+    assert_runs_bit_identical(&serial, &pooled, "mass:ema/pool");
+    assert_runs_bit_identical(&serial, &threaded, "mass:ema/threads");
+    // Exact-k operator + exact apportionment ⇒ the EMA redistributes the
+    // budget but never changes its size.
+    for s in &serial.metrics.steps {
+        assert_eq!(s.sent_elements, s.target_elements, "step {}", s.step);
+    }
+    assert!(serial.metrics.best_accuracy().unwrap() > 0.3);
 }
 
 // ---------------------------------------------------------------------
