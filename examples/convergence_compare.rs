@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
                 bucket_apportion: sparkv::config::BucketApportion::Size,
                 k_schedule: sparkv::schedule::KSchedule::Const(None),
                 steps_per_epoch: 100,
+                exchange: sparkv::config::Exchange::DenseRing,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

@@ -80,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
+        exchange: sparkv::config::Exchange::DenseRing,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
+        exchange: sparkv::config::Exchange::DenseRing,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

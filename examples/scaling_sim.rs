@@ -8,7 +8,8 @@
 //!       [--network 10g|25g|100g] [--stragglers 0.0] \
 //!       [--k-schedule warmup:0.016..0.001,epochs=2] [--sched-steps 48] \
 //!       [--steps-per-epoch 12] [--parallelism serial|threads:N|pool:N] \
-//!       [--sweep-workers] [--out results/table2.json]
+//!       [--exchange dense-ring|tree-sparse] [--sweep-workers] \
+//!       [--out results/table2.json]
 //!
 //! `--sweep-workers` prints efficiency vs cluster size (the scalability
 //! curve implied by the paper's footnote 1: latency terms grow with P).
@@ -20,10 +21,14 @@
 //! threads / the requested runtime, printing the measured per-step
 //! `spawn_or_dispatch_us` — the pooled-vs-scoped launch overhead, not a
 //! cost-model projection.
+//! `--exchange` re-prices the sparse cells with the requested gTop-k
+//! wire schedule (ring all-gather vs recursive-halving tree) and prints
+//! the ring-vs-tree crossover against cluster size — the netsim half of
+//! `just gtopk-smoke`.
 
-use sparkv::cluster::{scaling_table, scaling_table_scheduled};
+use sparkv::cluster::{scaling_table, scaling_table_exchange, scaling_table_scheduled};
 use sparkv::compress::OpKind;
-use sparkv::config::{Parallelism, TrainConfig};
+use sparkv::config::{Exchange, Parallelism, TrainConfig};
 use sparkv::coordinator::train;
 use sparkv::data::GaussianMixture;
 use sparkv::models::NativeMlp;
@@ -102,6 +107,7 @@ fn main() -> anyhow::Result<()> {
             seed: 1,
             buckets: 1,
             host_overhead_s: runtime_overhead_s(parallelism, topo.world_size()),
+            exchange: Exchange::DenseRing,
         };
         let b = Simulator::new(cfg).mean_iteration(20);
         println!(
@@ -137,6 +143,64 @@ fn main() -> anyhow::Result<()> {
                 eff(OpKind::GaussianK)
             );
         }
+    }
+
+    // Sparse-exchange what-if (`--exchange dense-ring|tree-sparse`): the
+    // same sweep with the requested gTop-k wire schedule pricing the
+    // sparse cells, plus the ring-vs-tree crossover against cluster size
+    // on the selected inter-node link. The ring all-gather forwards the
+    // union for P−1 rounds; the tree moves one 8k-byte payload for
+    // 2⌈log₂P⌉ rounds — the ring wins a single node, the tree wins wide
+    // slow clusters.
+    if let Some(ex_text) = args.get("exchange") {
+        let exchange = Exchange::parse(ex_text)?;
+        let priced = scaling_table_exchange(
+            &ComputeProfile::paper_models(),
+            &ops,
+            &topo,
+            k_ratio,
+            1,
+            parallelism,
+            0.0,
+            exchange,
+        );
+        println!(
+            "\nsparse exchange = {} — iteration time, s:\n{}",
+            exchange.name(),
+            priced.render()
+        );
+        println!(
+            "ring-vs-tree comm crossover (resnet50 TopK, {} inter-node):",
+            args.get_or("network", "10g")
+        );
+        let resnet = [ComputeProfile::by_name("resnet50").unwrap()];
+        for n in [1usize, 2, 4, 8, 16] {
+            let t = Topology::new(n, gpus, LinkSpec::pcie3_x16(), inter);
+            let comm = |ex| {
+                scaling_table_exchange(
+                    &resnet,
+                    &[OpKind::TopK],
+                    &t,
+                    k_ratio,
+                    1,
+                    Parallelism::Serial,
+                    0.0,
+                    ex,
+                )
+                .cell("resnet50", OpKind::TopK)
+                .unwrap()
+                .comm_s
+            };
+            let (r, g) = (comm(Exchange::DenseRing), comm(Exchange::TreeSparse));
+            println!(
+                "  {:>3} GPUs: ring {r:>9.5}s  tree {g:>9.5}s  -> {}",
+                t.world_size(),
+                if g < r { "tree-sparse" } else { "dense-ring" }
+            );
+        }
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/table2_exchange.json", priced.to_json().to_string())?;
+        println!("wrote results/table2_exchange.json");
     }
 
     if let Some(spec_text) = args.get("k-schedule") {

@@ -32,6 +32,17 @@ pool-smoke:
         --k-schedule warmup:0.016..0.001,epochs=2 --sched-steps 24 --steps-per-epoch 6 \
         --parallelism pool:4
 
+# The gtopk-smoke leg of bench-smoke: the tree-sparse exchange end to
+# end — a short *real* gTop-k training run over the recursive-halving
+# tree (bit-identical to the dense-ring path by construction), then the
+# netsim ring-vs-tree crossover sweep the cost model prices the mode
+# switch with.
+gtopk-smoke:
+    cd rust && cargo run --release -- train --op topk --global-topk true \
+        --exchange tree-sparse --workers 4 --steps 6
+    cd rust && cargo run --release --example scaling_sim -- \
+        --exchange tree-sparse --k-ratio 0.001
+
 # The tune-smoke CI job, locally: the closed-loop autotuner end to end on
 # a tiny grid (2 candidates, 3 measured calibration probe steps, 3
 # virtual steps/epoch), then a real training replay of the plan it wrote

@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             bucket_apportion: sparkv::config::BucketApportion::Size,
             k_schedule: sparkv::schedule::KSchedule::Const(None),
             steps_per_epoch: 100,
+            exchange: sparkv::config::Exchange::DenseRing,
         };
         let out = train(cfg, &mut model, &data)?;
         let sent = out.metrics.cumulative_sent();

@@ -74,6 +74,7 @@ fn main() -> anyhow::Result<()> {
         bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
+        exchange: sparkv::config::Exchange::DenseRing,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

@@ -325,12 +325,15 @@ impl TunedPlan {
     }
 
     /// Map the plan onto `[train]` config keys (the replay path of
-    /// `sparkv train --plan`): the five searched knobs plus the
+    /// `sparkv train --plan`): the six searched knobs plus the
     /// scenario's base density *and* epoch length — a warmup-style
     /// schedule converts `epochs=E` through `steps_per_epoch`, so the
     /// replayed density trace matches the one the plan was scored on.
-    /// Replay goes through the ordinary string-parse path, so a plan is
-    /// exactly equivalent to writing the same keys in a config file.
+    /// A `tree-sparse` winner also sets `global_topk = true` (the tree is
+    /// a gTop-k wire schedule; `validate` rejects it otherwise), exactly
+    /// as [`Candidate::apply`] does on the typed path. Replay goes
+    /// through the ordinary string-parse path, so a plan is exactly
+    /// equivalent to writing the same keys in a config file.
     pub fn apply(&self, raw: &mut RawConfig) -> anyhow::Result<()> {
         raw.set(&format!("train.op={}", self.chosen.op.name()))?;
         raw.set(&format!("train.k_schedule={}", self.chosen.k_schedule.name()))?;
@@ -340,6 +343,10 @@ impl TunedPlan {
             self.chosen.bucket_apportion.name()
         ))?;
         raw.set(&format!("train.parallelism={}", self.chosen.parallelism.name()))?;
+        raw.set(&format!("train.exchange={}", self.chosen.exchange.name()))?;
+        if self.chosen.exchange.is_tree() {
+            raw.set("train.global_topk=true")?;
+        }
         raw.set(&format!("train.k_ratio={}", self.k_ratio))?;
         raw.set(&format!("train.steps_per_epoch={}", self.steps_per_epoch))?;
         Ok(())
@@ -374,7 +381,7 @@ mod tests {
     use super::*;
     use crate::autotune::strategy::ExhaustiveGrid;
     use crate::compress::OpKind;
-    use crate::config::{Buckets, Parallelism};
+    use crate::config::{Buckets, Exchange, Parallelism};
 
     fn quick_scenario() -> TuneScenario {
         let mut s = TuneScenario::default_16gpu();
@@ -430,6 +437,8 @@ mod tests {
         assert_eq!(from_raw.buckets, typed.buckets);
         assert_eq!(from_raw.bucket_apportion, typed.bucket_apportion);
         assert_eq!(from_raw.parallelism, typed.parallelism);
+        assert_eq!(from_raw.exchange, typed.exchange);
+        assert_eq!(from_raw.global_topk, typed.global_topk);
         assert_eq!(from_raw.k_ratio, typed.k_ratio);
         assert_eq!(typed.k_ratio, scen.k_ratio);
         // Epoch length replays too (warmup grammars convert through it).
@@ -468,6 +477,7 @@ mod tests {
             buckets: vec![Buckets::None],
             apportions: vec![crate::config::BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
+            exchanges: vec![Exchange::DenseRing],
         };
         let plan = tune(&scen, &space, &mut ExhaustiveGrid, 5, None);
         assert_eq!(plan.chosen, Candidate::baseline());
@@ -489,6 +499,7 @@ mod tests {
             buckets: vec![Buckets::None],
             apportions: vec![crate::config::BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
+            exchanges: vec![Exchange::DenseRing],
         };
         let mut halving = crate::autotune::strategy::SuccessiveHalving {
             promote: 1,
@@ -504,6 +515,51 @@ mod tests {
         let back =
             TunedPlan::from_json(&Json::parse(&plan.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn tuned_plan_switches_exchange_with_the_bandwidth_regime() {
+        // The acceptance demonstration at plan level: give the search both
+        // wirings of the same gTop-k candidate and let the cluster shape
+        // decide. On the paper's 16-GPU / 10 GbE testbed the tree's
+        // 2·⌈log₂16⌉ = 8 rounds beat the all-gather ring's P − 1 = 15, so
+        // the tuned plan flips to `tree-sparse`; on one 4-GPU node
+        // (4 rounds vs 3) the ring keeps winning and the plan stays on
+        // `dense-ring`. Numerics are identical either way, so this is a
+        // pure wire-schedule decision.
+        let space = SearchSpace {
+            ops: vec![OpKind::TopK],
+            k_schedules: vec![crate::schedule::KSchedule::Const(None)],
+            buckets: vec![Buckets::None],
+            apportions: vec![crate::config::BucketApportion::Size],
+            parallelisms: vec![Parallelism::Serial],
+            exchanges: vec![Exchange::DenseRing, Exchange::TreeSparse],
+        };
+
+        let wide = quick_scenario(); // 4 nodes × 4 GPUs over 10 GbE
+        let plan_wide = tune(&wide, &space, &mut ExhaustiveGrid, 5, None);
+        assert_eq!(plan_wide.chosen.exchange, Exchange::TreeSparse);
+        assert!(plan_wide.chosen.name().ends_with("|tree-sparse"));
+        assert!(plan_wide.predicted_epoch_s < plan_wide.baseline_epoch_s);
+
+        let mut narrow = quick_scenario();
+        narrow.topo = crate::netsim::Topology::new(
+            1,
+            4,
+            crate::netsim::LinkSpec::pcie3_x16(),
+            crate::netsim::LinkSpec::ethernet_10g(),
+        );
+        let plan_narrow = tune(&narrow, &space, &mut ExhaustiveGrid, 5, None);
+        assert_eq!(plan_narrow.chosen.exchange, Exchange::DenseRing);
+
+        // A tree winner replays through the raw-config path with the
+        // gTop-k flag it needs to validate.
+        let mut raw = RawConfig::default();
+        plan_wide.apply(&mut raw).unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.exchange, Exchange::TreeSparse);
+        assert!(cfg.global_topk);
+        cfg.validate().unwrap();
     }
 
     #[test]

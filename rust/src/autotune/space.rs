@@ -2,7 +2,7 @@
 //! deterministic cross-product enumeration the search strategies walk.
 
 use crate::compress::OpKind;
-use crate::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
+use crate::config::{BucketApportion, Buckets, Exchange, Parallelism, TrainConfig};
 use crate::netsim::{ComputeProfile, LinkSpec, Topology};
 use crate::schedule::KSchedule;
 use crate::util::json::Json;
@@ -118,8 +118,10 @@ impl TuneScenario {
 
 /// One point of the search space — a complete compression-plan
 /// configuration. Applying a candidate to a [`TrainConfig`] touches only
-/// the five searched knobs; everything else (steps, lr, seed, …) stays
-/// with the caller.
+/// the six searched knobs; everything else (steps, lr, seed, …) stays
+/// with the caller — except `global_topk`, which a `tree-sparse`
+/// candidate forces on (the tree schedule only exists for the gTop-k
+/// merge).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Candidate {
     pub op: OpKind,
@@ -127,6 +129,10 @@ pub struct Candidate {
     pub buckets: Buckets,
     pub bucket_apportion: BucketApportion,
     pub parallelism: Parallelism,
+    /// Sparse-exchange wiring (`dense-ring` | `tree-sparse`). A tree
+    /// candidate is a *gTop-k* plan: [`Candidate::apply`] also sets
+    /// `global_topk = true`.
+    pub exchange: Exchange,
 }
 
 impl Candidate {
@@ -141,20 +147,28 @@ impl Candidate {
             buckets: d.buckets,
             bucket_apportion: d.bucket_apportion,
             parallelism: d.parallelism,
+            exchange: d.exchange,
         }
     }
 
     /// Compact identity string, `op|k_schedule|buckets|apportion|runtime`
-    /// (each field round-trips through its own parser).
+    /// (each field round-trips through its own parser), with
+    /// `|tree-sparse` appended only when the exchange deviates from the
+    /// dense-ring default — so every pre-exchange plan name is unchanged.
     pub fn name(&self) -> String {
-        format!(
+        let mut name = format!(
             "{}|{}|{}|{}|{}",
             self.op.name(),
             self.k_schedule.name(),
             self.buckets.name(),
             self.bucket_apportion.name(),
             self.parallelism.name()
-        )
+        );
+        if self.exchange.is_tree() {
+            name.push('|');
+            name.push_str(&self.exchange.name());
+        }
+        name
     }
 
     /// Collapse config-equivalent forms onto one canonical candidate:
@@ -170,17 +184,28 @@ impl Candidate {
         }
         if c.op == OpKind::Dense {
             c.k_schedule = KSchedule::Const(None);
+            // Dense gradients have no k-truncated payload: the exchange
+            // knob is meaningless, so dense candidates collapse onto the
+            // ring form.
+            c.exchange = Exchange::DenseRing;
         }
         c
     }
 
-    /// Write this candidate's knobs into a training config.
+    /// Write this candidate's knobs into a training config. A
+    /// `tree-sparse` candidate additionally forces `global_topk = true` —
+    /// the tree schedule is the gTop-k merge's wire plan, so the
+    /// combination is the only valid one ([`TrainConfig::validate`]).
     pub fn apply(&self, cfg: &mut TrainConfig) {
         cfg.op = self.op;
         cfg.k_schedule = self.k_schedule;
         cfg.buckets = self.buckets;
         cfg.bucket_apportion = self.bucket_apportion;
         cfg.parallelism = self.parallelism;
+        cfg.exchange = self.exchange;
+        if self.exchange.is_tree() {
+            cfg.global_topk = true;
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -189,7 +214,8 @@ impl Candidate {
             .set("k_schedule", Json::from(self.k_schedule.name()))
             .set("buckets", Json::from(self.buckets.name()))
             .set("bucket_apportion", Json::from(self.bucket_apportion.name()))
-            .set("parallelism", Json::from(self.parallelism.name()));
+            .set("parallelism", Json::from(self.parallelism.name()))
+            .set("exchange", Json::from(self.exchange.name().as_str()));
         o
     }
 
@@ -205,15 +231,23 @@ impl Candidate {
             buckets: Buckets::parse(field(j, "buckets")?)?,
             bucket_apportion: BucketApportion::parse(field(j, "bucket_apportion")?)?,
             parallelism: Parallelism::parse(field(j, "parallelism")?)?,
+            // Plans written before the exchange axis carry no key: they
+            // were all dense-ring by construction.
+            exchange: match j.get("exchange").and_then(Json::as_str) {
+                Some(s) => Exchange::parse(s)?,
+                None => Exchange::DenseRing,
+            },
         })
     }
 }
 
 /// A cross-product of axis value lists. [`SearchSpace::enumerate`]
 /// produces the candidate list every strategy walks, in a fixed nested
-/// order (op → k-schedule → buckets → apportionment → parallelism) with
-/// config-equivalent duplicates collapsed — the enumeration order is part
-/// of the determinism contract (ranking ties break by it).
+/// order (op → k-schedule → buckets → apportionment → parallelism →
+/// exchange) with config-equivalent duplicates collapsed — the
+/// enumeration order is part of the determinism contract (ranking ties
+/// break by it; the exchange loop is innermost so single-exchange spaces
+/// enumerate exactly as they did before the axis existed).
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
     pub ops: Vec<OpKind>,
@@ -221,28 +255,40 @@ pub struct SearchSpace {
     pub buckets: Vec<Buckets>,
     pub apportions: Vec<BucketApportion>,
     pub parallelisms: Vec<Parallelism>,
+    pub exchanges: Vec<Exchange>,
 }
 
 impl SearchSpace {
     /// The default space `sparkv tune` searches (and the golden plan
     /// pins): the four headline operators, the base density plus a denser
-    /// 0.4% constant, all three bucketing modes, and all three worker
-    /// runtimes. Two axes are deliberately held to one value here:
+    /// 0.4% constant plus the paper-style warmup decay
+    /// (`warmup:0.016..0.001,epochs=2` — first-class since the golden
+    /// comparison went tolerance-based; see `tests/schedule_golden.rs`),
+    /// all three bucketing modes, and all three worker runtimes. Two axes
+    /// are deliberately held to one value here:
     ///
-    /// * density *schedules* with `powf` in their trace (warmup) — the
-    ///   golden pins exact values and policy-curve math is
-    ///   platform-sensitive in the last ulp (the same rationale as
-    ///   `tests/schedule_golden.rs`);
     /// * `bucket_apportion` — apportionment redistributes the wire budget
     ///   but never resizes it, so the cost oracle scores `mass` and
     ///   `size` identically and an unmeasured search could never pick
     ///   `mass` (the tie-break keeps the first-enumerated twin). Search
     ///   it through a custom space with halving's *measured* promotion,
     ///   where the difference is real.
+    /// * `exchange` — a `tree-sparse` candidate is a *gTop-k* plan
+    ///   (`apply` forces `global_topk = true`), which changes the
+    ///   training numerics relative to its dense-ring twin, not just the
+    ///   wire schedule; sweeping it by default would silently mix the
+    ///   two training behaviours in one leaderboard. Sweep it through a
+    ///   custom space when the run is gTop-k to begin with (the
+    ///   plan-switch test in `oracle.rs` and the table2 bench's crossover
+    ///   sweep do exactly that).
     pub fn default_space() -> SearchSpace {
         SearchSpace {
             ops: vec![OpKind::Dense, OpKind::TopK, OpKind::Dgc, OpKind::GaussianK],
-            k_schedules: vec![KSchedule::Const(None), KSchedule::Const(Some(0.004))],
+            k_schedules: vec![
+                KSchedule::Const(None),
+                KSchedule::Const(Some(0.004)),
+                KSchedule::Warmup { from: 0.016, to: 0.001, epochs: 2 },
+            ],
             buckets: vec![Buckets::None, Buckets::Layers, Buckets::Bytes(4 << 20)],
             apportions: vec![BucketApportion::Size],
             parallelisms: vec![
@@ -250,6 +296,7 @@ impl SearchSpace {
                 Parallelism::Threads(4),
                 Parallelism::Pool(4),
             ],
+            exchanges: vec![Exchange::DenseRing],
         }
     }
 
@@ -263,6 +310,7 @@ impl SearchSpace {
             buckets: vec![Buckets::None],
             apportions: vec![BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
+            exchanges: vec![Exchange::DenseRing],
         }
     }
 
@@ -276,16 +324,19 @@ impl SearchSpace {
                 for &buckets in &self.buckets {
                     for &bucket_apportion in &self.apportions {
                         for &parallelism in &self.parallelisms {
-                            let c = Candidate {
-                                op,
-                                k_schedule,
-                                buckets,
-                                bucket_apportion,
-                                parallelism,
-                            }
-                            .normalized();
-                            if seen.insert(c.name()) {
-                                out.push(c);
+                            for &exchange in &self.exchanges {
+                                let c = Candidate {
+                                    op,
+                                    k_schedule,
+                                    buckets,
+                                    bucket_apportion,
+                                    parallelism,
+                                    exchange,
+                                }
+                                .normalized();
+                                if seen.insert(c.name()) {
+                                    out.push(c);
+                                }
                             }
                         }
                     }
@@ -306,6 +357,7 @@ impl SearchSpace {
             || self.buckets.is_empty()
             || self.apportions.is_empty()
             || self.parallelisms.is_empty()
+            || self.exchanges.is_empty()
     }
 }
 
@@ -355,6 +407,7 @@ mod tests {
             buckets: Buckets::Bytes(4096),
             bucket_apportion: BucketApportion::Mass { ema_beta: 0.5 },
             parallelism: Parallelism::Pool(4),
+            exchange: Exchange::DenseRing,
         };
         let j = c.to_json();
         assert_eq!(Candidate::from_json(&j).unwrap(), c);
@@ -369,7 +422,42 @@ mod tests {
         assert_eq!(cfg.buckets, d.buckets);
         assert_eq!(cfg.bucket_apportion, d.bucket_apportion);
         assert_eq!(cfg.parallelism, d.parallelism);
+        assert_eq!(cfg.exchange, d.exchange);
         assert_eq!(cfg.steps, 3);
+    }
+
+    #[test]
+    fn tree_candidates_name_apply_and_round_trip() {
+        let mut c = Candidate::baseline();
+        c.op = OpKind::TopK;
+        // Dense-ring names are byte-identical to the pre-exchange format.
+        assert!(!c.name().contains("dense-ring"));
+        c.exchange = Exchange::TreeSparse;
+        assert!(c.name().ends_with("|tree-sparse"));
+        assert_eq!(Candidate::from_json(&c.to_json()).unwrap(), c);
+        // A plan JSON written before the axis existed (no `exchange` key)
+        // parses as dense-ring.
+        let mut legacy = Json::obj();
+        legacy
+            .set("op", Json::from("topk"))
+            .set("k_schedule", Json::from("const"))
+            .set("buckets", Json::from("none"))
+            .set("bucket_apportion", Json::from("size"))
+            .set("parallelism", Json::from("serial"));
+        let parsed = Candidate::from_json(&legacy).unwrap();
+        assert_eq!(parsed.exchange, Exchange::DenseRing);
+        // apply() forces the gTop-k merge on for tree plans and the
+        // resulting config is self-consistent.
+        let mut cfg = TrainConfig::default();
+        assert!(!cfg.global_topk);
+        c.apply(&mut cfg);
+        assert!(cfg.global_topk);
+        assert_eq!(cfg.exchange, Exchange::TreeSparse);
+        cfg.validate().unwrap();
+        // Dense candidates collapse the exchange knob.
+        let mut dense = c.clone();
+        dense.op = OpKind::Dense;
+        assert_eq!(dense.normalized().exchange, Exchange::DenseRing);
     }
 
     #[test]
@@ -381,19 +469,22 @@ mod tests {
             buckets: Buckets::None,
             bucket_apportion: BucketApportion::mass(),
             parallelism: Parallelism::Serial,
+            exchange: Exchange::DenseRing,
         };
         assert_eq!(c.normalized().bucket_apportion, BucketApportion::Size);
-        // Dense ⇒ schedule and apportionment are irrelevant.
+        // Dense ⇒ schedule, apportionment, and exchange are irrelevant.
         let d = Candidate {
             op: OpKind::Dense,
             k_schedule: KSchedule::Const(Some(0.01)),
             buckets: Buckets::Layers,
             bucket_apportion: BucketApportion::mass(),
             parallelism: Parallelism::Pool(2),
+            exchange: Exchange::TreeSparse,
         };
         let n = d.normalized();
         assert_eq!(n.k_schedule, KSchedule::Const(None));
         assert_eq!(n.bucket_apportion, BucketApportion::Size);
+        assert_eq!(n.exchange, Exchange::DenseRing);
         assert_eq!(n.buckets, Buckets::Layers); // bucketing still matters for dense
     }
 
@@ -402,15 +493,27 @@ mod tests {
         let space = SearchSpace::default_space();
         let cands = space.enumerate();
         assert_eq!(cands.len(), space.len());
-        // Raw cross product is 4·2·3·1·3 = 72; normalization collapses
+        // Raw cross product is 4·3·3·1·3·1 = 108; normalization collapses
         // the dense schedule duplicates: dense 1·3·3 = 9, three sparse
-        // ops 2·3·3 = 18 each.
-        assert_eq!(cands.len(), 9 + 3 * 18);
+        // ops 3·3·3 = 27 each.
+        assert_eq!(cands.len(), 9 + 3 * 27);
         // A space that *does* sweep apportionment dedupes the monolithic
-        // and dense mass twins.
+        // and dense mass twins: per sparse op, 3 schedules × (3 monolithic
+        // + 2 bucketings · 2 apportions · 3 runtimes) = 45.
         let mut with_mass = SearchSpace::default_space();
         with_mass.apportions = vec![BucketApportion::Size, BucketApportion::mass()];
-        assert_eq!(with_mass.len(), 9 + 3 * 30);
+        assert_eq!(with_mass.len(), 9 + 3 * 45);
+        // Sweeping the exchange axis doubles only the sparse candidates
+        // (dense twins collapse), appended innermost so the dense-ring
+        // prefix order is untouched.
+        let mut with_tree = SearchSpace::default_space();
+        with_tree.exchanges = vec![Exchange::DenseRing, Exchange::TreeSparse];
+        assert_eq!(with_tree.len(), 9 + 3 * 27 * 2);
+        let tree_cands = with_tree.enumerate();
+        assert!(tree_cands
+            .iter()
+            .filter(|c| c.exchange.is_tree())
+            .all(|c| c.op != OpKind::Dense));
         // No duplicate names, all in normal form.
         let names: std::collections::BTreeSet<String> =
             cands.iter().map(Candidate::name).collect();

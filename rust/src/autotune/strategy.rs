@@ -77,7 +77,7 @@ impl SearchStrategy for ExhaustiveGrid {
     }
 }
 
-/// Coordinate descent over the five axes: start from the space's first
+/// Coordinate descent over the six axes: start from the space's first
 /// candidate, sweep axis by axis adopting any strictly-better single-axis
 /// move, and stop at a fixed point (or after `max_sweeps`). Evaluates
 /// O(axes · values · sweeps) candidates instead of the full cross
@@ -138,7 +138,7 @@ impl SearchStrategy for GreedyDescent {
         let mut best = score(&current, &mut cache, &mut log, &mut evaluated);
         for _ in 0..self.max_sweeps.max(1) {
             let mut improved = false;
-            for axis in 0..5 {
+            for axis in 0..6 {
                 // Axis values in space order; the move keeps every other
                 // axis fixed and renormalizes.
                 let moves: Vec<Candidate> = match axis {
@@ -171,11 +171,19 @@ impl SearchStrategy for GreedyDescent {
                             ..current.clone()
                         })
                         .collect(),
-                    _ => space
+                    4 => space
                         .parallelisms
                         .iter()
                         .map(|&parallelism| Candidate {
                             parallelism,
+                            ..current.clone()
+                        })
+                        .collect(),
+                    _ => space
+                        .exchanges
+                        .iter()
+                        .map(|&exchange| Candidate {
+                            exchange,
                             ..current.clone()
                         })
                         .collect(),

@@ -192,8 +192,9 @@ impl BucketSchedule {
     }
 
     /// Adaptive (Adaptive Top-K style) re-apportionment: split the
-    /// per-step budget `k_t` proportionally to `per_bucket_mass` — worker
-    /// 0's per-bucket error-compensated gradient energy ‖u_b‖², one entry
+    /// per-step budget `k_t` proportionally to `per_bucket_mass` — the
+    /// cluster's per-bucket error-compensated gradient energy
+    /// (`Σ_w ‖u_{w,b}‖²` summed over all workers in rank order), one entry
     /// per schedule bucket — with the same largest-remainder rounding and
     /// per-bucket size caps as [`BucketSchedule::apportion_k`], so
     /// `Σ = min(k_t, d)` and `k_b ≤ d_b` always hold.

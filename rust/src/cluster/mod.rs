@@ -7,7 +7,7 @@
 //! iteration time, no communication).
 
 use crate::compress::OpKind;
-use crate::config::Parallelism;
+use crate::config::{Exchange, Parallelism};
 use crate::netsim::{ComputeProfile, SimConfig, Simulator, Topology};
 use crate::util::json::Json;
 
@@ -96,6 +96,36 @@ pub fn scaling_table_runtime(
     parallelism: Parallelism,
     host_overhead_s: f64,
 ) -> ScalingTable {
+    scaling_table_exchange(
+        models,
+        ops,
+        topo,
+        k_ratio,
+        buckets,
+        parallelism,
+        host_overhead_s,
+        Exchange::DenseRing,
+    )
+}
+
+/// The full-knob Table 2 sweep: [`scaling_table_runtime`] plus the sparse
+/// exchange wiring (`SimConfig::exchange`). `Exchange::DenseRing` is
+/// bit-identical to every older entry point; `Exchange::TreeSparse` costs
+/// sparse cells with the gTop-k recursive-halving tree
+/// ([`crate::netsim::gtopk_tree_time`]) instead of the ring all-gather —
+/// the dense-ring-vs-tree crossover sweep the table2 bench emits. Dense
+/// cells ignore the knob (they always ride the dense ring).
+#[allow(clippy::too_many_arguments)]
+pub fn scaling_table_exchange(
+    models: &[ComputeProfile],
+    ops: &[OpKind],
+    topo: &Topology,
+    k_ratio: f64,
+    buckets: usize,
+    parallelism: Parallelism,
+    host_overhead_s: f64,
+    exchange: Exchange,
+) -> ScalingTable {
     let buckets = buckets.max(1);
     let jobs: Vec<(&ComputeProfile, OpKind)> = models
         .iter()
@@ -111,6 +141,7 @@ pub fn scaling_table_runtime(
             seed: 1,
             buckets,
             host_overhead_s,
+            exchange,
         };
         let b = Simulator::new(cfg).iteration();
         ScalingCell {
@@ -206,6 +237,7 @@ pub fn scaling_table_scheduled(
             seed: 1,
             buckets: 1,
             host_overhead_s: 0.0,
+            exchange: Exchange::DenseRing,
         };
         let mut sim = Simulator::new(cfg);
         let mut iter_times_s = Vec::with_capacity(densities.len());
@@ -522,6 +554,37 @@ mod tests {
             assert!((c.iter_time_s + c.overlap_saved_s - serialized).abs() < 1e-12);
         }
         assert_eq!(pipe.cell("resnet50", OpKind::Dense).unwrap().overlap_saved_s, 0.0);
+    }
+
+    #[test]
+    fn exchange_sweep_defaults_to_dense_ring_and_tree_wins_at_16() {
+        let models = [ComputeProfile::by_name("resnet50").unwrap()];
+        let ops = [OpKind::TopK, OpKind::Dense];
+        let topo = Topology::paper_16gpu();
+        // DenseRing through the new entry point is bit-identical to the
+        // historical sweep (golden-compatible).
+        let old = scaling_table_runtime(&models, &ops, &topo, 0.001, 1, Parallelism::Serial, 0.0);
+        let ring = scaling_table_exchange(
+            &models, &ops, &topo, 0.001, 1,
+            Parallelism::Serial, 0.0, Exchange::DenseRing,
+        );
+        for (a, b) in old.cells.iter().zip(&ring.cells) {
+            assert_eq!(a.iter_time_s.to_bits(), b.iter_time_s.to_bits());
+        }
+        // TreeSparse: sparse cells get cheaper on the paper's 16-GPU /
+        // 10 GbE cluster (8 rounds vs 15); Dense cells are untouched.
+        let tree = scaling_table_exchange(
+            &models, &ops, &topo, 0.001, 1,
+            Parallelism::Serial, 0.0, Exchange::TreeSparse,
+        );
+        assert!(
+            tree.cell("resnet50", OpKind::TopK).unwrap().comm_s
+                < ring.cell("resnet50", OpKind::TopK).unwrap().comm_s
+        );
+        assert_eq!(
+            tree.cell("resnet50", OpKind::Dense).unwrap().iter_time_s.to_bits(),
+            ring.cell("resnet50", OpKind::Dense).unwrap().iter_time_s.to_bits()
+        );
     }
 
     #[test]

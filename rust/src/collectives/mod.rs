@@ -59,14 +59,41 @@
 //! channel — each per-bucket collective sees exactly the inputs the
 //! serial bucket loop would hand it, and is itself engine-bit-identical.
 //! The invariant suite lives in `tests/bucket_equivalence.rs`.
+//!
+//! ### Exchange modes (gTop-k wire schedules)
+//!
+//! gTop-k runs can move their sparse payloads over two wire schedules
+//! (`config::Exchange`, the `exchange` key), selectable per bucket and
+//! **bit-identical** in their numerics — same merge tree, same
+//! [`merge_truncate`] kernel, same truncation — differing only in what
+//! the simulated network carries:
+//!
+//! | mode          | schedule                          | rounds     | busiest-link bytes          |
+//! |---------------|-----------------------------------|------------|-----------------------------|
+//! | `dense-ring`  | ring all-gather of the union      | P − 1      | `sparse_allgather_bytes` (Σ per-worker nnz · 8) |
+//! | `tree-sparse` | recursive halving over payloads   | ⌈log₂P⌉    | [`gtopk_tree_wire_bytes`] (k · 8 per round)     |
+//!
+//! Per round the tree moves exactly one k-truncated payload between
+//! partner ranks — 2k numbers (u32 index + f32 value), i.e. 8k bytes —
+//! so its reduction half totals `⌈log₂P⌉ · 8k`
+//! ([`gtopk_tree_wire_bytes`]); the cost model charges the round trip
+//! (reduction up plus broadcast back down, `2⌈log₂P⌉` rounds) against
+//! the dense ring's `(P − 1) · (α + union/B)` sweep. On slow links or
+//! large P the tree wins (the crossover is demonstrated in the table2
+//! bench and priced by [`crate::netsim::gtopk_tree_time`] so autotune
+//! can pick the mode per scenario).
+//! See `tree.rs`'s module docs for the halving schedule and the proof of
+//! bit-identity with the level-list merge.
 
 mod pooled;
 mod serial;
 mod threaded;
+mod tree;
 
 pub use pooled::PooledCollectives;
 pub use serial::SerialCollectives;
 pub use threaded::ThreadedCollectives;
+pub use tree::{gtopk_tree_rounds, gtopk_tree_wire_bytes};
 
 use crate::tensor::SparseVec;
 
@@ -104,6 +131,17 @@ pub trait Collectives: Send + Sync {
     /// globally-selected index set (the trainer uses it to restore each
     /// worker's globally-dropped contributions into its residual).
     fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>);
+
+    /// gTop-k over the **tree-sparse** wire schedule (`exchange =
+    /// tree-sparse`): recursive halving over sparse payloads, 2k values
+    /// per round in ⌈log₂P⌉ rounds (gTopKAllReduce). Numerically
+    /// **bit-identical** to [`Collectives::gtopk_allreduce_avg`] — the
+    /// halving schedule builds the same merge tree (see `tree.rs`) — so
+    /// the exchange mode only changes the simulated wire cost. Engines
+    /// differ in *how* they run the rounds: serial/pooled walk the level
+    /// list on the calling thread, threaded runs real rank threads with
+    /// per-round channels.
+    fn gtopk_tree_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>);
 }
 
 /// Dense ring all-reduce (average) over per-worker vectors — serial
@@ -122,6 +160,12 @@ pub fn sparse_allgather_avg(inputs: &[SparseVec]) -> Vec<f32> {
 /// [`Collectives::gtopk_allreduce_avg`].
 pub fn gtopk_allreduce_avg(inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
     SerialCollectives.gtopk_allreduce_avg(inputs, k)
+}
+
+/// gTop-k over the tree-sparse wire schedule — serial reference engine.
+/// See [`Collectives::gtopk_tree_allreduce_avg`].
+pub fn gtopk_tree_allreduce_avg(inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+    SerialCollectives.gtopk_tree_allreduce_avg(inputs, k)
 }
 
 /// Total wire bytes each worker transmits for a sparse all-gather of the

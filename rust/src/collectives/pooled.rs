@@ -52,6 +52,13 @@ impl Collectives for PooledCollectives {
     fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
         SerialCollectives.gtopk_allreduce_avg(inputs, k)
     }
+
+    fn gtopk_tree_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        // Zero-spawn contract: the tree rounds run as the serial level
+        // list on the coordinator thread (spawning one thread per rank
+        // per call would reintroduce exactly the churn the pool removes).
+        SerialCollectives.gtopk_tree_allreduce_avg(inputs, k)
+    }
 }
 
 #[cfg(test)]

@@ -6,7 +6,8 @@
 //! between the two for every collective, so any change here must be
 //! mirrored in [`super::ThreadedCollectives`] (and vice versa).
 
-use super::{chunk_bounds, merge_truncate, Collectives};
+use super::tree::{finish_gtopk, tree_merge_serial};
+use super::{chunk_bounds, Collectives};
 use crate::tensor::SparseVec;
 
 /// Single-threaded collectives engine (the original implementation and
@@ -93,31 +94,15 @@ impl Collectives for SerialCollectives {
         assert!(p > 0, "no workers");
         let d = inputs[0].d;
         assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
+        // Tree reduction: pairwise merge + truncate, ⌈log₂P⌉ rounds
+        // (the shared level-list kernel in `tree.rs`), then the uniform
+        // ≤ k-sparse contract and the densified average.
+        finish_gtopk(tree_merge_serial(inputs, k), d, p, k)
+    }
 
-        // Tree reduction: pairwise merge + truncate, log2(P) rounds.
-        let mut level: Vec<SparseVec> = inputs.to_vec();
-        while level.len() > 1 {
-            let mut next = Vec::with_capacity(level.len().div_ceil(2));
-            let mut it = level.into_iter();
-            while let Some(a) = it.next() {
-                match it.next() {
-                    Some(b) => next.push(merge_truncate(&a, &b, k)),
-                    None => next.push(a),
-                }
-            }
-            level = next;
-        }
-        let mut merged = level.pop().unwrap();
-        // Uniform contract: the result is always ≤ k-sparse (P = 1 included).
-        if merged.nnz() > k {
-            let empty = SparseVec::new(d);
-            merged = merge_truncate(&merged, &empty, k);
-        }
-        let mut out = vec![0.0f32; d];
-        let inv = 1.0 / p as f32;
-        for (&i, &v) in merged.indices.iter().zip(&merged.values) {
-            out[i as usize] = v * inv;
-        }
-        (out, merged.indices)
+    fn gtopk_tree_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        // Same merge tree as the dense-ring path — the exchange mode only
+        // changes the simulated wire schedule, never the numbers.
+        self.gtopk_allreduce_avg(inputs, k)
     }
 }

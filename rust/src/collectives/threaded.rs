@@ -21,6 +21,7 @@
 use std::sync::mpsc;
 use std::thread;
 
+use super::tree::{finish_gtopk, tree_merge_halving};
 use super::{chunk_bounds, merge_truncate, Collectives};
 use crate::tensor::SparseVec;
 
@@ -207,17 +208,20 @@ impl Collectives for ThreadedCollectives {
                 next
             });
         }
-        let mut merged = level.pop().unwrap();
-        if merged.nnz() > k {
-            let empty = SparseVec::new(d);
-            merged = merge_truncate(&merged, &empty, k);
-        }
-        let mut out = vec![0.0f32; d];
-        let inv = 1.0 / p as f32;
-        for (&i, &v) in merged.indices.iter().zip(&merged.values) {
-            out[i as usize] = v * inv;
-        }
-        (out, merged.indices)
+        let merged = level.pop().unwrap();
+        finish_gtopk(merged, d, p, k)
+    }
+
+    fn gtopk_tree_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        let p = inputs.len();
+        assert!(p > 0, "no workers");
+        let d = inputs[0].d;
+        assert!(inputs.iter().all(|s| s.d == d), "dim mismatch across workers");
+        // Genuine recursive halving: one OS thread per rank, payloads
+        // moving over per-(round, receiver) channels — the tree-sparse
+        // wire schedule run for real. Bit-identical to the level-list
+        // merge (same pairing, same kernel; see `tree.rs`).
+        finish_gtopk(tree_merge_halving(inputs, k), d, p, k)
     }
 }
 

@@ -1,0 +1,359 @@
+//! The tree-sparse gTop-k exchange: recursive-halving merge over sparse
+//! payloads (gTopKAllReduce, Shi et al. ICDCS 2019).
+//!
+//! ## The schedule
+//!
+//! Round r (stride s = 2^r): every rank w with `w mod 2s == s` ships its
+//! ≤ k-sparse payload to partner `w − s` and leaves the tree; every rank
+//! with `w mod 2s == 0` and an in-range partner `w + s < P` receives and
+//! folds via [`super::merge_truncate`] (lower rank is always the left
+//! merge argument). After ⌈log₂P⌉ rounds rank 0 holds the tree-merged
+//! result. Each round moves exactly one k-truncated payload per
+//! *pair* — 2k numbers, 8k wire bytes on the busiest link — instead of
+//! the dense-ring/allgather schedule's full union, which is where the
+//! low-bandwidth win comes from ([`crate::netsim::gtopk_tree_time`]).
+//!
+//! ## Bit-identity with the level-list merge
+//!
+//! [`SerialCollectives::gtopk_allreduce_avg`](super::SerialCollectives)
+//! merges a level list pairwise (adjacent pairs in rank order, an odd
+//! trailing element carried). The recursive-halving schedule produces the
+//! *same* tree: at round r the surviving ranks are exactly
+//! {0, 2^r, 2·2^r, …} ∩ [0, P), in rank order, and pairing each even
+//! survivor with its `+2^r` neighbour is pairing adjacent level-list
+//! elements — a trailing survivor with no in-range partner is the odd
+//! carry. Every merge is the same pure [`super::merge_truncate`] call
+//! with the same (left, right) argument order, so tree-sparse output is
+//! bit-identical to the dense-ring gTop-k path — across the serial,
+//! threaded, and pooled engines (locked by the proptests below and
+//! `tests/parallel_equivalence.rs` / `tests/pool_equivalence.rs`).
+//!
+//! The threaded implementation here runs the halving rounds on real OS
+//! threads (one per rank) with a dedicated `mpsc` channel per
+//! (round, receiver) — a sender that races ahead of the schedule can
+//! never be confused for an earlier round's payload.
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::merge_truncate;
+use crate::tensor::SparseVec;
+
+/// Rounds of the recursive-halving tree: ⌈log₂P⌉ (0 when P ≤ 1).
+pub fn gtopk_tree_rounds(p: usize) -> usize {
+    if p <= 1 {
+        0
+    } else {
+        (usize::BITS - (p - 1).leading_zeros()) as usize
+    }
+}
+
+/// Wire bytes the tree-sparse *reduction* puts on the busiest link: one
+/// ≤ k payload (2k numbers = 8k bytes: u32 index + f32 value) per round,
+/// ⌈log₂P⌉ rounds. This counts the up-tree half only — the merged result
+/// still has to fan back out, which the cost model
+/// ([`crate::netsim::gtopk_tree_time`]) charges as a second ⌈log₂P⌉
+/// broadcast rounds of the same payload; double this figure for the
+/// round-trip accounting. Compare `sparse_allgather_bytes` for the
+/// dense-ring schedule's Σ-of-unions accounting.
+pub fn gtopk_tree_wire_bytes(p: usize, k: usize) -> u64 {
+    gtopk_tree_rounds(p) as u64 * (k as u64) * 8
+}
+
+/// Serial recursive-halving merge (the oracle): the level-list pairwise
+/// tree, extracted from the original gTop-k path so both exchange modes
+/// share one kernel.
+pub(crate) fn tree_merge_serial(inputs: &[SparseVec], k: usize) -> SparseVec {
+    let mut level: Vec<SparseVec> = inputs.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(merge_truncate(&a, &b, k)),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    level.pop().expect("non-empty worker set")
+}
+
+/// Threaded recursive halving: one OS thread per rank exchanging payloads
+/// over per-(round, receiver) channels in the schedule described in the
+/// module docs. Bit-identical to [`tree_merge_serial`] — same pairing,
+/// same merge kernel, fixed channel routing per round.
+pub(crate) fn tree_merge_halving(inputs: &[SparseVec], k: usize) -> SparseVec {
+    let p = inputs.len();
+    assert!(p > 0, "no workers");
+    if p == 1 {
+        return inputs[0].clone();
+    }
+    let rounds = gtopk_tree_rounds(p);
+    // One channel per (round, receiver): a rank that finishes early and
+    // sends ahead of slower peers still lands in its own round's slot.
+    let mut rxs: Vec<Vec<Option<mpsc::Receiver<SparseVec>>>> = Vec::with_capacity(rounds);
+    let mut txs: Vec<Vec<mpsc::Sender<SparseVec>>> = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let mut row_rx = Vec::with_capacity(p);
+        let mut row_tx = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = mpsc::channel();
+            row_tx.push(tx);
+            row_rx.push(Some(rx));
+        }
+        txs.push(row_tx);
+        rxs.push(row_rx);
+    }
+
+    let mut result: Option<SparseVec> = None;
+    thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p);
+        for w in 0..p {
+            // Rank w > 0 sends exactly once, at round tz(w) (the first
+            // round where w mod 2s == s), to partner w − 2^tz(w); before
+            // that it receives at rounds 0..tz(w) from w + 2^r when the
+            // partner is in range. Rank 0 only ever receives.
+            let send_round = if w == 0 { rounds } else { w.trailing_zeros() as usize };
+            let tx = if w == 0 {
+                None
+            } else {
+                Some(txs[send_round][w - (1 << send_round)].clone())
+            };
+            let mut my_rxs: Vec<Option<mpsc::Receiver<SparseVec>>> = (0..send_round.min(rounds))
+                .map(|r| rxs[r][w].take())
+                .collect();
+            let init = &inputs[w];
+            handles.push(s.spawn(move || {
+                let mut mine = init.clone();
+                for (r, slot) in my_rxs.iter_mut().enumerate() {
+                    if w + (1 << r) < p {
+                        let theirs = slot
+                            .take()
+                            .expect("channel taken twice")
+                            .recv()
+                            .expect("tree peer hung up");
+                        mine = merge_truncate(&mine, &theirs, k);
+                    }
+                }
+                match tx {
+                    Some(tx) => {
+                        tx.send(mine).expect("tree parent hung up");
+                        None
+                    }
+                    None => Some(mine),
+                }
+            }));
+        }
+        for h in handles {
+            if let Some(merged) = h.join().expect("tree rank panicked") {
+                result = Some(merged);
+            }
+        }
+    });
+    result.expect("rank 0 produced the tree result")
+}
+
+/// Shared tail of both gTop-k exchange modes: enforce the ≤ k-sparse
+/// contract (P = 1 skips every merge) and densify the average.
+pub(crate) fn finish_gtopk(
+    mut merged: SparseVec,
+    d: usize,
+    p: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<u32>) {
+    if merged.nnz() > k {
+        let empty = SparseVec::new(d);
+        merged = merge_truncate(&merged, &empty, k);
+    }
+    let mut out = vec![0.0f32; d];
+    let inv = 1.0 / p as f32;
+    for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+        out[i as usize] = v * inv;
+    }
+    (out, merged.indices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{
+        Collectives, PooledCollectives, SerialCollectives, ThreadedCollectives,
+    };
+    use crate::compress::{Compressor, TopK, Workspace};
+    use crate::stats::rng::Pcg64;
+    use crate::util::testkit::{self, Gen};
+
+    #[test]
+    fn rounds_and_wire_bytes() {
+        assert_eq!(gtopk_tree_rounds(0), 0);
+        assert_eq!(gtopk_tree_rounds(1), 0);
+        assert_eq!(gtopk_tree_rounds(2), 1);
+        assert_eq!(gtopk_tree_rounds(3), 2);
+        assert_eq!(gtopk_tree_rounds(4), 2);
+        assert_eq!(gtopk_tree_rounds(5), 3);
+        assert_eq!(gtopk_tree_rounds(16), 4);
+        assert_eq!(gtopk_tree_rounds(17), 5);
+        // 2k values per round = 8k bytes per round.
+        assert_eq!(gtopk_tree_wire_bytes(16, 100), 4 * 800);
+        assert_eq!(gtopk_tree_wire_bytes(1, 100), 0);
+    }
+
+    /// The tentpole proptest: for every P ∈ {1..9} — deep, unbalanced
+    /// trees included — with tie values and overlapping index sets, the
+    /// tree merge is bit-identical across serial halving, threaded
+    /// halving, and the existing dense-ring gTop-k path on all three
+    /// engines; and when k admits the full union (no mid-tree
+    /// truncation), it equals Top-k(Σ inputs) exactly.
+    #[test]
+    fn prop_tree_merge_matches_topk_of_sum_all_p() {
+        testkit::forall("tree-merge-vs-topk-of-sum", |g: &mut Gen| {
+            let d = g.usize_in(8, 256);
+            let p = g.usize_in(1, 9);
+            let per_worker = g.usize_in(1, (d / 2).max(1));
+            let mut rng = Pcg64::seed(g.rng.next_u64());
+            let use_ties = g.bool();
+            let workers: Vec<SparseVec> = (0..p)
+                .map(|_| {
+                    let u: Vec<f32> = (0..d)
+                        .map(|_| {
+                            if use_ties {
+                                // Quantized magnitudes force tie-breaks at
+                                // every truncation boundary.
+                                (rng.next_below(7) as f32) - 3.0
+                            } else {
+                                rng.next_gaussian() as f32
+                            }
+                        })
+                        .collect();
+                    // Top-k per worker ⇒ overlapping index sets across
+                    // workers (all pick from the same dense u-space).
+                    TopK::new().compress_step(&u, per_worker, &mut Workspace::new())
+                })
+                .collect();
+            // k ≥ Σ nnz: no merge ever truncates, so the tree result is
+            // the union sum — Top-k(Σ) is the identity on its support.
+            // Integer-valued (tie) inputs sum exactly in f32 regardless
+            // of association, so they must match bit-for-bit; gaussian
+            // inputs get an ulp-scale tolerance (the tree associates
+            // pairwise, the reference sum in rank order).
+            let total_nnz: usize = workers.iter().map(|s| s.nnz()).sum();
+            let merged = tree_merge_serial(&workers, total_nnz);
+            let mut sum = vec![0.0f32; d];
+            for w in &workers {
+                w.add_into(&mut sum);
+            }
+            for (&i, &v) in merged.indices.iter().zip(&merged.values) {
+                let want = sum[i as usize];
+                let ok = if use_ties {
+                    v == want || (v == 0.0 && want == 0.0)
+                } else {
+                    (v - want).abs() <= 1e-5 * want.abs().max(1.0)
+                };
+                if !ok {
+                    return Err(format!("idx {i}: tree {v} != Σ {want}"));
+                }
+            }
+            // Threaded halving ≡ serial level list, bit-for-bit, at a
+            // truncating k too (the deep-tree case).
+            let k = g.usize_in(1, (total_nnz / 2).max(1));
+            let a = tree_merge_serial(&workers, k);
+            let b = tree_merge_halving(&workers, k);
+            if a != b {
+                return Err(format!("p={p} k={k}: halving != level list"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Tree-sparse ≡ dense-ring gTop-k bit-for-bit, across all three
+    /// engines, for every P ∈ {1..9}: the exchange mode changes the wire
+    /// schedule, never the numbers.
+    #[test]
+    fn prop_tree_exchange_is_bit_identical_across_engines() {
+        testkit::forall("tree-exchange-engine-identity", |g: &mut Gen| {
+            let d = g.usize_in(8, 200);
+            let p = g.usize_in(1, 9);
+            let k = g.usize_in(1, d);
+            let mut rng = Pcg64::seed(g.rng.next_u64());
+            let workers: Vec<SparseVec> = (0..p)
+                .map(|_| {
+                    let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                    TopK::new().compress_step(&u, k, &mut Workspace::new())
+                })
+                .collect();
+            let ring = SerialCollectives.gtopk_allreduce_avg(&workers, k);
+            for engine in [
+                &SerialCollectives as &dyn Collectives,
+                &ThreadedCollectives,
+                &PooledCollectives,
+            ] {
+                let tree = engine.gtopk_tree_allreduce_avg(&workers, k);
+                if tree != ring {
+                    return Err(format!(
+                        "p={p} k={k}: {} tree-sparse != dense-ring gTop-k",
+                        engine.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn halving_matches_serial_on_awkward_worker_counts() {
+        // P = 3, 5, 6, 7: odd carries at different tree depths.
+        let d = 64;
+        let mut rng = Pcg64::seed(17);
+        for p in [1usize, 2, 3, 5, 6, 7, 8, 9] {
+            let workers: Vec<SparseVec> = (0..p)
+                .map(|_| {
+                    let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                    TopK::new().compress_step(&u, 12, &mut Workspace::new())
+                })
+                .collect();
+            for k in [1usize, 5, 12, 64] {
+                assert_eq!(
+                    tree_merge_halving(&workers, k),
+                    tree_merge_serial(&workers, k),
+                    "p={p} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tie_values_survive_identically_in_both_schedules() {
+        // Every value ±1: which equal-magnitude entries survive is
+        // unspecified but must match between the two schedules exactly.
+        let workers: Vec<SparseVec> = (0..7)
+            .map(|w| {
+                SparseVec::from_pairs(
+                    24,
+                    (0..8)
+                        .map(|i| ((3 * i) as u32, if (w + i) % 2 == 0 { 1.0 } else { -1.0 }))
+                        .collect(),
+                )
+            })
+            .collect();
+        for k in [1usize, 3, 8, 24] {
+            assert_eq!(
+                tree_merge_halving(&workers, k),
+                tree_merge_serial(&workers, k),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn k_zero_tree_is_empty() {
+        let workers = vec![
+            SparseVec::from_pairs(8, vec![(0, 1.0), (3, -2.0)]),
+            SparseVec::from_pairs(8, vec![(1, 4.0)]),
+            SparseVec::from_pairs(8, vec![(7, -1.0)]),
+        ];
+        let (dense, sel) = SerialCollectives.gtopk_tree_allreduce_avg(&workers, 0);
+        assert!(sel.is_empty());
+        assert!(dense.iter().all(|&v| v == 0.0));
+    }
+}

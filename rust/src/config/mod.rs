@@ -24,9 +24,10 @@
 //! | `global_topk`         | `false`    | gTop-k tree aggregation instead of all-gather union  |
 //! | `parallelism`         | `"serial"` | worker runtime: `serial`, `threads`/`threads:N` (scoped threads re-spawned every step), or `pool`/`pool:N` (persistent worker pool, zero per-step spawns — see [`crate::coordinator::pool`]) — results are bit-identical across all settings |
 //! | `buckets`             | `"none"`   | gradient exchange granularity: `none` (monolithic), `layers` (layer-aligned buckets), or `bytes:N` (fixed-byte buckets); under a threaded/pooled runtime bucket `i+1` is compressed while bucket `i` is on the ring |
-//! | `bucket_apportion`    | `"size"`   | how a bucketed run splits the per-step k across buckets: `size` (proportional to element count), `mass` (proportional to worker 0's per-bucket ‖u‖², the Adaptive Top-K direction; falls back to `size` when the stats are degenerate), or `mass:ema=BETA` (mass shares EMA-smoothed across steps with coefficient BETA ∈ [0, 1) so per-bucket budgets don't thrash; `mass` ≡ `mass:ema=0`, bit-identical to the unsmoothed policy) |
+//! | `bucket_apportion`    | `"size"`   | how a bucketed run splits the per-step k across buckets: `size` (proportional to element count), `mass` (proportional to the all-worker per-bucket ‖u‖² sums, the Adaptive Top-K direction; falls back to `size` when the stats are degenerate), or `mass:ema=BETA` (mass shares EMA-smoothed across steps with coefficient BETA ∈ [0, 1) so per-bucket budgets don't thrash; `mass` ≡ `mass:ema=0`, bit-identical to the unsmoothed policy) |
 //! | `k_schedule`          | `"const"`  | per-step density plan: `const` (follow `k_ratio` — bit-identical to the pre-schedule path), `const:K`, `warmup:K0..K,epochs=E` (exponential density decay), or `adaptive:DELTA` (smallest k capturing DELTA of ‖u‖²) — see [`crate::schedule`] |
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
+//! | `exchange`            | `"dense-ring"` | sparse-exchange wiring for gTop-k runs: `dense-ring` (merge through the dense ring / allgather schedule) or `tree-sparse` (recursive-halving tree over sparse payloads, 2k values per round in ⌈log₂P⌉ rounds — gTopKAllReduce, Shi et al. 2019); requires `global_topk = true` and a sparse `op`; bit-identical numerics either way |
 
 use std::collections::BTreeMap;
 
@@ -217,8 +218,9 @@ impl Buckets {
 /// `Size` is the original policy: largest-remainder proportional to
 /// bucket element count ([`crate::buckets::apportion_k`]). `Mass` follows
 /// the Adaptive Top-K direction (Ruan et al. 2022): the share of bucket b
-/// is proportional to worker 0's per-bucket error-compensated gradient
-/// energy ‖u_b‖², recomputed every step
+/// is proportional to the cluster-wide per-bucket error-compensated
+/// gradient energy — `Σ_w ‖u_{w,b}‖²` summed over all workers in rank
+/// order — recomputed every step
 /// ([`crate::buckets::BucketSchedule::apportion_k_by_mass`]), falling
 /// back to `Size` on degenerate statistics (all-zero or non-finite mass).
 /// Both policies are deterministic functions of worker state, so every
@@ -237,7 +239,7 @@ pub enum BucketApportion {
     /// Proportional to bucket element count (the default).
     #[default]
     Size,
-    /// Proportional to worker 0's per-bucket ‖u‖² (size fallback),
+    /// Proportional to the all-worker per-bucket ‖u‖² sum (size fallback),
     /// optionally EMA-smoothed across steps with coefficient `ema_beta`
     /// in `[0, 1)` (0 = no smoothing, the bit-exact legacy behaviour).
     Mass { ema_beta: f64 },
@@ -280,6 +282,53 @@ impl BucketApportion {
             BucketApportion::Mass { ema_beta } if *ema_beta == 0.0 => "mass".to_string(),
             BucketApportion::Mass { ema_beta } => format!("mass:ema={ema_beta}"),
         }
+    }
+}
+
+/// How a gTop-k run moves sparse payloads between workers.
+///
+/// `DenseRing` is the original wiring: the pairwise gTop-k merge tree is
+/// *costed* as the dense ring / allgather schedule (every round ships the
+/// full union). `TreeSparse` is the gTopKAllReduce of the companion
+/// gTop-k paper (Shi et al., ICDCS 2019): recursive halving over sparse
+/// payloads — each of the ⌈log₂P⌉ rounds moves exactly one k-truncated
+/// payload (2k numbers, 8k wire bytes) between partner ranks, with
+/// [`crate::collectives::merge_truncate`] as the merge kernel. The two
+/// modes are **bit-identical** in their numerics (same merge pairing,
+/// same truncation); they differ only in the simulated wire schedule and
+/// therefore in the netsim/autotune cost
+/// ([`crate::netsim::gtopk_tree_time`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Exchange {
+    /// Merge through the dense ring / allgather schedule (the default).
+    #[default]
+    DenseRing,
+    /// Recursive-halving tree over sparse payloads (2k values/round,
+    /// ⌈log₂P⌉ rounds). Requires `global_topk` and a sparse operator.
+    TreeSparse,
+}
+
+impl Exchange {
+    /// Parse a config/CLI value: `dense-ring` or `tree-sparse`.
+    pub fn parse(s: &str) -> anyhow::Result<Exchange> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dense-ring" => Ok(Exchange::DenseRing),
+            "tree-sparse" => Ok(Exchange::TreeSparse),
+            _ => anyhow::bail!("bad exchange '{s}': expected dense-ring|tree-sparse"),
+        }
+    }
+
+    /// Display form (round-trips through [`Exchange::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Exchange::DenseRing => "dense-ring".to_string(),
+            Exchange::TreeSparse => "tree-sparse".to_string(),
+        }
+    }
+
+    /// True when the tree-sparse wire schedule should run.
+    pub fn is_tree(&self) -> bool {
+        matches!(self, Exchange::TreeSparse)
     }
 }
 
@@ -389,14 +438,19 @@ pub struct TrainConfig {
     /// or fixed-byte buckets (pipelined under a threaded/pooled runtime).
     pub buckets: Buckets,
     /// How a bucketed run splits the per-step k across buckets:
-    /// proportional to bucket size (default) or to worker 0's per-bucket
-    /// ‖u‖² mass (Adaptive Top-K style). Ignored when `buckets = none`.
+    /// proportional to bucket size (default) or to the all-worker
+    /// per-bucket ‖u‖² mass sums (Adaptive Top-K style). Ignored when
+    /// `buckets = none`.
     pub bucket_apportion: BucketApportion,
     /// Per-step density plan (`const` follows `k_ratio` and reproduces
     /// the pre-schedule trainer bit-for-bit; see [`crate::schedule`]).
     pub k_schedule: KSchedule,
     /// Epoch length in steps for the warmup grammar's `epochs=E`.
     pub steps_per_epoch: usize,
+    /// Sparse-exchange wiring for gTop-k runs: merge through the dense
+    /// ring (default) or the 2k-per-round recursive-halving tree.
+    /// Requires `global_topk` and a sparse op when `tree-sparse`.
+    pub exchange: Exchange,
 }
 
 impl Default for TrainConfig {
@@ -420,6 +474,7 @@ impl Default for TrainConfig {
             bucket_apportion: BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
+            exchange: Exchange::DenseRing,
         }
     }
 }
@@ -467,6 +522,10 @@ impl TrainConfig {
                 None => d.k_schedule,
             },
             steps_per_epoch: raw.parsed_or("train", "steps_per_epoch", d.steps_per_epoch)?,
+            exchange: match raw.get("train", "exchange") {
+                Some(s) => Exchange::parse(s)?,
+                None => d.exchange,
+            },
         })
     }
 
@@ -497,6 +556,18 @@ impl TrainConfig {
         }
         self.k_schedule.validate()?;
         anyhow::ensure!(self.steps_per_epoch >= 1, "steps_per_epoch must be >= 1");
+        if self.exchange.is_tree() {
+            anyhow::ensure!(
+                self.global_topk,
+                "exchange = tree-sparse requires global_topk = true \
+                 (the tree schedule only exists for the gTop-k merge)"
+            );
+            anyhow::ensure!(
+                self.op != OpKind::Dense,
+                "exchange = tree-sparse requires a sparse op (dense gradients \
+                 have no k-truncated payload to tree-merge)"
+            );
+        }
         Ok(())
     }
 }
@@ -714,6 +785,31 @@ lr = 0.05
         let mut zero_epoch = TrainConfig::default();
         zero_epoch.steps_per_epoch = 0;
         assert!(zero_epoch.validate().is_err());
+    }
+
+    #[test]
+    fn exchange_parsing_and_validation() {
+        assert_eq!(Exchange::parse("dense-ring").unwrap(), Exchange::DenseRing);
+        assert_eq!(Exchange::parse("tree-sparse").unwrap(), Exchange::TreeSparse);
+        assert_eq!(Exchange::parse("TREE-SPARSE").unwrap(), Exchange::TreeSparse);
+        assert!(Exchange::parse("tree").is_err());
+        assert!(Exchange::parse("ring").is_err());
+        for e in [Exchange::DenseRing, Exchange::TreeSparse] {
+            assert_eq!(Exchange::parse(&e.name()).unwrap(), e);
+        }
+        // Default stays dense-ring (bit-identical to the pre-tree path).
+        assert_eq!(TrainConfig::default().exchange, Exchange::DenseRing);
+        // tree-sparse needs the gTop-k merge…
+        let raw = RawConfig::parse("[train]\nexchange = \"tree-sparse\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.exchange, Exchange::TreeSparse);
+        assert!(cfg.validate().is_err(), "tree-sparse without global_topk must fail");
+        let mut cfg = cfg;
+        cfg.global_topk = true;
+        cfg.validate().unwrap();
+        // …and a sparse operator.
+        cfg.op = OpKind::Dense;
+        assert!(cfg.validate().is_err(), "tree-sparse with a dense op must fail");
     }
 
     #[test]

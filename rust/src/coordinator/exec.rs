@@ -72,8 +72,9 @@ pub(crate) struct WorkerMsg {
     pub rank: usize,
     pub loss: f64,
     pub snapshot: Option<GradSnapshot>,
-    /// |u| histogram for the adaptive schedule (worker 0 only, and only
-    /// when the plan engine asked for feedback).
+    /// |u| histogram for the adaptive schedule (every worker produces
+    /// one when the plan engine asked for feedback; the trainer folds
+    /// them in rank order — `schedule::fold_feedback_histograms`).
     pub feedback: Option<Histogram>,
     pub payload: Payload,
 }
@@ -100,7 +101,9 @@ pub(crate) struct StepCtx {
     pub keep_raw: bool,
     /// This step's resolved k (the plan's k_t).
     pub k: usize,
-    /// Collect the adaptive-schedule |u| histogram on worker 0.
+    /// Collect the adaptive-schedule |u| histogram on every worker (the
+    /// trainer folds them in rank order; sampling rank 0 alone let a
+    /// skewed shard dictate the cluster-wide k).
     pub feedback: bool,
 }
 
@@ -179,7 +182,7 @@ pub(crate) fn worker_step<M: Model + ?Sized>(
     } else {
         None
     };
-    let feedback = if ctx.feedback && w.rank == 0 {
+    let feedback = if ctx.feedback {
         Some(feedback_histogram(u))
     } else {
         None

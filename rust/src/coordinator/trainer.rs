@@ -17,10 +17,26 @@
 //! The static `(operator, k)` pair is resolved per step by the
 //! [`crate::schedule`] engine: `const` schedules reproduce the fixed-k
 //! trainer bit-for-bit, `warmup` decays the density over early epochs,
-//! and `adaptive` picks k from the previous step's |u| histogram on
-//! worker 0 (collected as part of the worker fold, applied in rank order,
-//! so every runtime resolves identical k sequences). The resolved density
+//! and `adaptive` picks k from the previous step's |u| histograms —
+//! one per worker, folded in rank order
+//! ([`crate::schedule::fold_feedback_histograms`]) so no single rank's
+//! shard can skew the cluster-wide k, and applied after the step's fold
+//! so every runtime resolves identical k sequences. The resolved density
 //! lands in every [`StepRecord`] (CSV/JSON trace).
+//!
+//! ## Sparse exchange wiring (`exchange = dense-ring | tree-sparse`)
+//!
+//! gTop-k aggregation (`global_topk = true`) dispatches on
+//! `TrainConfig::exchange`: `dense-ring` merges through the engine's
+//! existing schedule ([`Collectives::gtopk_allreduce_avg`]),
+//! `tree-sparse` routes the same merge through the recursive-halving
+//! tree ([`Collectives::gtopk_tree_allreduce_avg`] — 2k values per
+//! round, 2⌈log₂P⌉ rounds). The two wirings compute bit-identical
+//! results — same merge pairing, same truncation — and differ only in
+//! the wire schedule the netsim layer costs
+//! ([`crate::netsim::gtopk_tree_time`]), so flipping `exchange` can
+//! never change a training trajectory
+//! (`tree_exchange_matches_dense_ring_bitwise`).
 //!
 //! ## Worker runtime
 //!
@@ -76,7 +92,8 @@
 //! walked bucket by bucket ([`BucketSchedule`]) — each bucket carries its
 //! own error-feedback residual slice and a share of this step's `k_t`,
 //! re-apportioned every step: proportional to bucket size by default, or
-//! to worker 0's per-bucket ‖u‖² under `bucket_apportion = mass`
+//! to the cluster-wide per-bucket energy — `Σ_w ‖u_w‖²` summed over all
+//! workers in rank order — under `bucket_apportion = mass`
 //! ([`BucketSchedule::apportion_k_by_mass`]; EF residual semantics are
 //! unchanged either way). Under `threads:N` the bucket loop runs through
 //! [`run_pipelined_return`]: a producer thread compresses bucket `i + 1`
@@ -111,7 +128,7 @@ use crate::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
 use crate::data::{Batch, DataSource};
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::models::Model;
-use crate::schedule::{feedback_histogram, KSchedule, Scheduler};
+use crate::schedule::{feedback_histogram, fold_feedback_histograms, KSchedule, Scheduler};
 use crate::stats::histogram::Histogram;
 use crate::stats::rng::Pcg64;
 
@@ -318,7 +335,9 @@ impl<'a> Trainer<'a> {
         // Reusable per-step buffers.
         let mut sparse_msgs = Vec::with_capacity(p);
         let mut dense_msgs: Vec<Vec<f32>> = Vec::new();
+        let mut feedback_hists: Vec<Histogram> = Vec::with_capacity(p);
         let mut selected_mask = vec![false; if self.cfg.global_topk { d } else { 0 }];
+        let tree = self.cfg.exchange.is_tree();
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
@@ -354,16 +373,16 @@ impl<'a> Trainer<'a> {
             // incremental accumulation).
             sparse_msgs.clear();
             dense_msgs.clear();
+            feedback_hists.clear();
             let mut loss_acc = 0.0f64;
             let mut sent: u64 = 0;
-            let mut feedback_hist: Option<Histogram> = None;
             for m in msgs.drain(..) {
                 loss_acc += m.loss;
                 if let Some(snap) = m.snapshot {
                     snapshots.push(snap);
                 }
-                if m.feedback.is_some() {
-                    feedback_hist = m.feedback;
+                if let Some(h) = m.feedback {
+                    feedback_hists.push(h);
                 }
                 match m.payload {
                     Payload::Dense(g) => {
@@ -396,8 +415,13 @@ impl<'a> Trainer<'a> {
                 // gTop-k: globally re-truncate to this step's k_t; restore
                 // each worker's globally-dropped contributions into its
                 // residual so no gradient mass is lost (exactness tested
-                // in `gtopk_mass_conservation`).
-                let (dense, selected) = engine.gtopk_allreduce_avg(&sparse_msgs, plan.k);
+                // in `gtopk_mass_conservation`). The exchange knob picks
+                // the wire schedule; the merge itself is bit-identical.
+                let (dense, selected) = if tree {
+                    engine.gtopk_tree_allreduce_avg(&sparse_msgs, plan.k)
+                } else {
+                    engine.gtopk_allreduce_avg(&sparse_msgs, plan.k)
+                };
                 selected_mask.iter_mut().for_each(|b| *b = false);
                 for &i in &selected {
                     selected_mask[i as usize] = true;
@@ -430,8 +454,11 @@ impl<'a> Trainer<'a> {
 
             opt.step(params.make_mut(), &agg, step, self.cfg.steps);
 
-            if let Some(h) = feedback_hist {
-                scheduler.observe(step, &h);
+            if !feedback_hists.is_empty() {
+                // Rank-order fold of every worker's |u| histogram — the
+                // messages arrive rank-sorted, so the fold (and thus the
+                // adaptive k sequence) is identical on every runtime.
+                scheduler.observe(step, &fold_feedback_histograms(&feedback_hists));
             }
 
             metrics.record_step(StepRecord {
@@ -458,8 +485,9 @@ impl<'a> Trainer<'a> {
     /// The bucketed exchange path (`buckets = layers|bytes:N`): the flat
     /// gradient is partitioned by a [`BucketSchedule`]; each bucket
     /// carries its own error-feedback residual slice and a share of this
-    /// step's k_t, recomputed per step — by bucket size, or by worker 0's
-    /// per-bucket ‖u‖² under `bucket_apportion = mass`. Under `threads:N`
+    /// step's k_t, recomputed per step — by bucket size, or by the
+    /// all-worker per-bucket ‖u‖² sums under `bucket_apportion = mass`.
+    /// Under `threads:N`
     /// the buckets are *pipelined* (producer thread via
     /// [`run_pipelined_return`]); under `pool:N` the pipeline runs on
     /// pool thread 0 with zero per-step spawns, and consumed payloads
@@ -512,12 +540,15 @@ impl<'a> Trainer<'a> {
         let mut metrics = RunMetrics::new(&self.run_name(&run_suffix));
         let mut snapshots = Vec::new();
         let mut agg = vec![0.0f32; d];
-        // Reusable u_0 = g + ε scratch for the snapshot/feedback/mass block.
-        let mut u0: Vec<f32> = Vec::new();
-        // Per-step bucket masses (worker 0's ‖u_b‖², mass apportionment)
-        // and their cross-step EMA under `mass:ema=BETA` (empty ⇒ not yet
-        // seeded; β = 0 bypasses the EMA entirely so the bare `mass` mode
-        // stays bit-identical to the pre-EMA trainer).
+        // Reusable u_w = g + ε scratch for the snapshot/feedback/mass
+        // block (one worker's u at a time), and the per-worker feedback
+        // histograms awaiting the rank-order fold.
+        let mut u_scratch: Vec<f32> = Vec::new();
+        let mut feedback_hists: Vec<Histogram> = Vec::with_capacity(p);
+        // Per-step bucket masses (Σ over workers of ‖u_b‖², mass
+        // apportionment) and their cross-step EMA under `mass:ema=BETA`
+        // (empty ⇒ not yet seeded; β = 0 bypasses the EMA entirely so the
+        // bare `mass` mode stays bit-identical to the pre-EMA trainer).
         let mut bucket_mass: Vec<f64> = Vec::new();
         let mut smoothed_mass: Vec<f64> = Vec::new();
         // Cross-step payload buffer bank (see `exec::PayloadBank`) and the
@@ -560,11 +591,15 @@ impl<'a> Trainer<'a> {
             );
             let loss_acc: f64 = losses.iter().map(|&(_, l)| l).sum();
 
-            // Phase 2 — snapshot u_t = g + ε on worker 0 (ε is untouched
-            // until the bucket loop below, so this equals the monolithic
-            // snapshot), the adaptive-schedule feedback histogram, and/or
-            // the per-bucket ‖u‖² masses for `bucket_apportion = mass`.
-            // Copies are made only when a consumer actually fires.
+            // Phase 2 — coordinator-side statistics over u_t = g + ε (ε is
+            // untouched until the bucket loop below, so this equals the
+            // monolithic u): the paper snapshot on worker 0, the
+            // adaptive-schedule feedback histograms from *every* worker
+            // (folded in rank order), and the cluster-wide per-bucket
+            // ‖u‖² masses for `bucket_apportion = mass` — summed over all
+            // workers in rank order, so no single rank's shard steers the
+            // split. Copies are made only when a consumer actually fires,
+            // through one reused scratch buffer.
             let snap_now = self.cfg.hist_every > 0 && step % self.cfg.hist_every == 0;
             if is_dense {
                 if snap_now {
@@ -580,40 +615,50 @@ impl<'a> Trainer<'a> {
                     });
                 }
             } else if snap_now || wants_feedback || mass_mode {
-                let w0 = &workers[0];
-                u0.clear();
-                u0.extend(w0.grad.iter().zip(w0.residual.residual()).map(|(g, e)| g + e));
-                if wants_feedback {
-                    scheduler.observe(step, &feedback_histogram(&u0));
-                }
-                if snap_now {
-                    snapshots.push(GradSnapshot {
-                        step,
-                        histogram: Histogram::auto(&u0, self.hist_bins),
-                        raw: if self.keep_raw_snapshots {
-                            Some(u0.clone())
-                        } else {
-                            None
-                        },
-                    });
-                }
                 if mass_mode {
                     bucket_mass.clear();
-                    for sp in schedule.specs() {
-                        bucket_mass.push(
-                            u0[sp.lo..sp.hi]
+                    bucket_mass.resize(schedule.len(), 0.0);
+                }
+                feedback_hists.clear();
+                for w in workers.iter() {
+                    u_scratch.clear();
+                    u_scratch
+                        .extend(w.grad.iter().zip(w.residual.residual()).map(|(g, e)| g + e));
+                    if wants_feedback {
+                        feedback_hists.push(feedback_histogram(&u_scratch));
+                    }
+                    if mass_mode {
+                        for (m, sp) in bucket_mass.iter_mut().zip(schedule.specs()) {
+                            *m += u_scratch[sp.lo..sp.hi]
                                 .iter()
                                 .map(|&v| (v as f64) * (v as f64))
-                                .sum(),
-                        );
+                                .sum::<f64>();
+                        }
                     }
+                    if w.rank == 0 && snap_now {
+                        snapshots.push(GradSnapshot {
+                            step,
+                            histogram: Histogram::auto(&u_scratch, self.hist_bins),
+                            raw: if self.keep_raw_snapshots {
+                                Some(u_scratch.clone())
+                            } else {
+                                None
+                            },
+                        });
+                    }
+                    if !(wants_feedback || mass_mode) {
+                        break; // snapshot-only step: only rank 0's u is needed
+                    }
+                }
+                if wants_feedback {
+                    scheduler.observe(step, &fold_feedback_histograms(&feedback_hists));
                 }
             }
 
             // Per-step bucket budgets: Σ ks_t == min(k_t, d). Mass mode
-            // steers the split by worker 0's per-bucket energy (identical
-            // on every runtime — the stats come from the coordinator-side
-            // u_0 above), optionally EMA-smoothed across steps
+            // steers the split by the cluster's per-bucket energy
+            // (identical on every runtime — the stats come from the
+            // coordinator-side sweep above), optionally EMA-smoothed across steps
             // (`mass:ema=BETA` — `buckets::ema_masses`); degenerate stats
             // fall back to the size split inside `apportion_k_by_mass`.
             let ks_t: Vec<usize> = if mass_mode {
@@ -655,6 +700,7 @@ impl<'a> Trainer<'a> {
                 let ks_ref: &[usize] = &ks_t;
                 let engine_ref: &dyn Collectives = engine.as_ref();
                 let global_topk = self.cfg.global_topk;
+                let tree = self.cfg.exchange.is_tree();
                 let agg_ref = &mut agg;
                 let sent_ref = &mut sent;
                 let restores_ref = &mut restores;
@@ -675,9 +721,14 @@ impl<'a> Trainer<'a> {
                                 // Per-bucket gTop-k: re-truncate to the
                                 // bucket's share of this step's k_t;
                                 // globally-dropped contributions are
-                                // queued for residual restore.
-                                let (dense_b, selected) =
-                                    engine_ref.gtopk_allreduce_avg(&msgs, ks_ref[b]);
+                                // queued for residual restore. The
+                                // exchange knob picks the wire schedule
+                                // (merge numerics are identical).
+                                let (dense_b, selected) = if tree {
+                                    engine_ref.gtopk_tree_allreduce_avg(&msgs, ks_ref[b])
+                                } else {
+                                    engine_ref.gtopk_allreduce_avg(&msgs, ks_ref[b])
+                                };
                                 let mut mask = vec![false; sp.len()];
                                 for &i in &selected {
                                     mask[i as usize] = true;
@@ -896,6 +947,7 @@ mod tests {
             buckets: crate::config::Buckets::None,
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
+            exchange: crate::config::Exchange::DenseRing,
             steps_per_epoch: 100,
         }
     }
@@ -943,6 +995,7 @@ mod tests {
             buckets: crate::config::Buckets::None,
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
+            exchange: crate::config::Exchange::DenseRing,
             steps_per_epoch: 100,
         };
         let dense = train(mk(OpKind::Dense), &mut model, &data).unwrap();
@@ -1155,6 +1208,7 @@ mod schedule_trainer_tests {
             buckets: crate::config::Buckets::None,
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: schedule,
+            exchange: crate::config::Exchange::DenseRing,
             steps_per_epoch: 5,
         }
     }
@@ -1210,9 +1264,9 @@ mod schedule_trainer_tests {
 
     #[test]
     fn adaptive_serial_threaded_bit_identical() {
-        // Feedback is collected on worker 0 and applied in rank order, so
-        // the adaptive k sequence (and thus the whole trajectory) must be
-        // identical across runtimes.
+        // Feedback is collected from every worker and folded in rank
+        // order, so the adaptive k sequence (and thus the whole
+        // trajectory) must be identical across runtimes.
         let (data, mut model) = setup();
         let serial = train(cfg(KSchedule::Adaptive { delta: 0.8 }), &mut model, &data).unwrap();
         let mut tcfg = cfg(KSchedule::Adaptive { delta: 0.8 });
@@ -1279,6 +1333,7 @@ mod momentum_correction_tests {
             buckets: crate::config::Buckets::None,
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
+            exchange: crate::config::Exchange::DenseRing,
             steps_per_epoch: 100,
         };
         let plain = train(base.clone(), &mut model, &data).unwrap();
@@ -1340,6 +1395,7 @@ mod gtopk_trainer_tests {
             buckets: crate::config::Buckets::None,
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
+            exchange: crate::config::Exchange::DenseRing,
             steps_per_epoch: 100,
         }
     }
@@ -1358,6 +1414,40 @@ mod gtopk_trainer_tests {
             a_g >= a_u - 0.1,
             "gTop-k accuracy {a_g} far below all-gather {a_u}"
         );
+    }
+
+    #[test]
+    fn tree_exchange_matches_dense_ring_bitwise() {
+        // The exchange knob is pure wire schedule: tree-sparse gTop-k must
+        // reproduce the dense-ring trajectory bit-for-bit on every
+        // runtime and on both the monolithic and bucketed paths.
+        let data = GaussianMixture::new(32, 10, 2.0, 1.0, 93);
+        for buckets in [crate::config::Buckets::None, crate::config::Buckets::Bytes(2048)] {
+            let mut ring_cfg = cfg(true);
+            ring_cfg.steps = 30;
+            ring_cfg.buckets = buckets;
+            let mut model = NativeMlp::new(&[32, 64, 64, 10]);
+            let ring = train(ring_cfg.clone(), &mut model, &data).unwrap();
+            for parallelism in
+                [Parallelism::Serial, Parallelism::Threads(3), Parallelism::Pool(2)]
+            {
+                let mut tcfg = ring_cfg.clone();
+                tcfg.exchange = crate::config::Exchange::TreeSparse;
+                tcfg.parallelism = parallelism;
+                let tree = train(tcfg, &mut model, &data).unwrap();
+                assert_eq!(
+                    ring.final_params,
+                    tree.final_params,
+                    "tree-sparse diverged from dense-ring under {}/{}",
+                    parallelism.name(),
+                    buckets.name()
+                );
+                for (a, b) in ring.metrics.steps.iter().zip(&tree.metrics.steps) {
+                    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+                    assert_eq!(a.sent_elements, b.sent_elements, "step {}", a.step);
+                }
+            }
+        }
     }
 
     #[test]

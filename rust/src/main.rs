@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
                  \x20         [--parallelism serial|threads:N|pool:N] [--buckets none|layers|bytes:N]\n\
                  \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
                  \x20         [--bucket-apportion size|mass|mass:ema=BETA]\n\
+                 \x20         [--global-topk true --exchange dense-ring|tree-sparse]\n\
                  \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
                  \x20         [--plan plan.json] [--backend native|pjrt --model <name>]\n\
                  tune      [--model resnet50] [--nodes 4 --gpus 4] [--k-ratio 0.001]\n\
@@ -89,6 +90,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "bucket_apportion",
         "k_schedule",
         "steps_per_epoch",
+        "global_topk",
+        "exchange",
     ] {
         if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
             raw.set(&format!("train.{key}={v}"))?;
@@ -99,7 +102,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     let cfg = TrainConfig::from_raw(&raw)?;
     println!(
-        "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={} k_schedule={}",
+        "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={} \
+         k_schedule={} exchange={}",
         cfg.op.name(),
         cfg.workers,
         cfg.steps,
@@ -107,7 +111,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.lr,
         cfg.parallelism.name(),
         cfg.buckets.name(),
-        cfg.k_schedule.name()
+        cfg.k_schedule.name(),
+        cfg.exchange.name()
     );
 
     let backend = args.get_or("backend", "native");

@@ -8,6 +8,14 @@
 //!   forwarding the largest outstanding payload —
 //!   `T = (P−1)·(α + max_w(m_w)/B_eff)`; used by sparse aggregation where
 //!   every worker broadcasts its (index, value) pairs.
+//! * **gTop-k tree** (`exchange = tree-sparse`): recursive halving over
+//!   k-truncated sparse payloads — ⌈log₂P⌉ reduction rounds, each moving
+//!   one fixed-size payload between partner ranks, then ⌈log₂P⌉ more to
+//!   broadcast the winner back down —
+//!   `T = 2·⌈log₂P⌉·(α + m/B_eff)` where m is the 8k-byte payload
+//!   (gTopKAllReduce, Shi et al. 2019). O(log P) rounds vs the ring's
+//!   O(P): the ring wins at small P (P−1 < 2⌈log₂P⌉ for P ≤ 4-ish), the
+//!   tree wins at scale, and the absolute gap grows as the link slows.
 //!
 //! Validation anchor (test `resnet50_comm_matches_paper`): the paper
 //! reports ~0.2 s to all-reduce ResNet-50's d = 25,557,032 f32 gradients
@@ -44,6 +52,25 @@ pub fn allgather_time(topo: &Topology, per_worker: &[u64]) -> f64 {
 /// Convenience: all-gather where every worker sends the same `bytes`.
 pub fn allgather_time_uniform(topo: &Topology, bytes_per_worker: u64) -> f64 {
     allgather_time(topo, &vec![bytes_per_worker; topo.world_size()])
+}
+
+/// Time for the gTop-k tree exchange (`exchange = tree-sparse`) where
+/// every round moves `bytes_per_round` (the 8k-byte k-truncated payload)
+/// over the bottleneck link: ⌈log₂P⌉ recursive-halving reduction rounds
+/// plus ⌈log₂P⌉ broadcast rounds to fan the global winner back out.
+///
+/// Unlike the ring schedules the payload does **not** shrink with P —
+/// every merge re-truncates to k — so the round count is the whole story:
+/// `2⌈log₂P⌉` versus the all-gather's `P−1`. The crossover is pinned by
+/// `tree_crossover_with_p` below.
+pub fn gtopk_tree_time(topo: &Topology, bytes_per_round: u64) -> f64 {
+    let p = topo.world_size();
+    if p <= 1 {
+        return 0.0;
+    }
+    let link = topo.ring_bottleneck();
+    let rounds = 2 * (usize::BITS - (p - 1).leading_zeros()) as u64;
+    rounds as f64 * (link.latency_s + bytes_per_round as f64 / link.effective_bandwidth())
 }
 
 #[cfg(test)]
@@ -109,5 +136,66 @@ mod tests {
     fn allgather_wrong_arity_panics() {
         let topo = Topology::paper_16gpu();
         allgather_time(&topo, &[1, 2, 3]);
+    }
+
+    #[test]
+    fn tree_single_worker_free() {
+        assert_eq!(gtopk_tree_time(&Topology::single_gpu(), 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn tree_monotone_in_bytes() {
+        let topo = Topology::paper_16gpu();
+        assert!(gtopk_tree_time(&topo, 2 << 20) > gtopk_tree_time(&topo, 1 << 20));
+    }
+
+    #[test]
+    fn tree_round_count_is_2ceillog2() {
+        // P = 2 → 2 rounds, P = 3..4 → 4, P = 5..8 → 6, P = 9..16 → 8.
+        let link = LinkSpec::ethernet_10g();
+        let per_round = |p: usize| {
+            let topo = Topology::new(1, p, LinkSpec::pcie3_x16(), link);
+            let unit = link.latency_s + 8.0 * 1024.0 / link.effective_bandwidth();
+            gtopk_tree_time(&topo, 8 * 1024) / unit
+        };
+        assert!((per_round(2) - 2.0).abs() < 1e-9);
+        assert!((per_round(4) - 4.0).abs() < 1e-9);
+        assert!((per_round(5) - 6.0).abs() < 1e-9);
+        assert!((per_round(16) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_crossover_with_p() {
+        // The honest crossover: at P = 4 the all-gather ring (3 rounds)
+        // beats the tree (4 rounds); at P = 16 (8 vs 15 rounds) the tree
+        // wins — exactly the regime the gTop-k paper targets.
+        let payload = 25_557u64 * 8; // k = 0.001·d for ResNet-50
+        let small = Topology::new(1, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        assert!(
+            allgather_time_uniform(&small, payload) < gtopk_tree_time(&small, payload),
+            "ring should win at P=4"
+        );
+        let big = Topology::paper_16gpu();
+        assert!(
+            gtopk_tree_time(&big, payload) < allgather_time_uniform(&big, payload),
+            "tree should win at P=16"
+        );
+    }
+
+    #[test]
+    fn tree_gap_grows_on_slow_links() {
+        // The absolute advantage at P = 16 scales with payload/B: the
+        // slower the link, the more the 7 saved rounds are worth.
+        let payload = 25_557u64 * 8;
+        let slow = Topology::paper_16gpu(); // 10 GbE inter-node
+        let fast = Topology::new(4, 4, LinkSpec::pcie3_x16(), LinkSpec::infiniband_100g());
+        let gain = |t: &Topology| allgather_time_uniform(t, payload) - gtopk_tree_time(t, payload);
+        assert!(gain(&slow) > 0.0 && gain(&fast) > 0.0);
+        assert!(
+            gain(&slow) > 5.0 * gain(&fast),
+            "slow-link gain {} should dwarf fast-link gain {}",
+            gain(&slow),
+            gain(&fast)
+        );
     }
 }

@@ -5,8 +5,10 @@
 //! * [`link`] / [`topology`] — α–β link models and the hierarchical
 //!   (intra-node PCIe / inter-node Ethernet) cluster shape.
 //! * [`cost`] — analytic collective cost models (ring all-reduce, ring
-//!   all-gather) over a topology, validated against the paper's measured
-//!   communication times.
+//!   all-gather, and the gTop-k recursive-halving tree
+//!   [`gtopk_tree_time`] behind `exchange = tree-sparse`) over a
+//!   topology, validated against the paper's measured communication
+//!   times.
 //! * [`ops_cost`] — per-operator GPU selection-time models calibrated to
 //!   the paper's V100 measurements, and the per-model compute-time table.
 //! * [`sim`] — a discrete-event engine that replays a synchronous training
@@ -37,7 +39,7 @@ pub mod ops_cost;
 pub mod sim;
 pub mod topology;
 
-pub use cost::{allgather_time, allreduce_time};
+pub use cost::{allgather_time, allreduce_time, gtopk_tree_time};
 pub use link::LinkSpec;
 pub use ops_cost::{ComputeProfile, OpCostModel};
 pub use sim::{

@@ -1,6 +1,8 @@
 //! Discrete-event simulation of a synchronous data-parallel training
 //! iteration: every worker computes (fwd+bwd), sparsifies, then the
-//! cluster synchronizes (dense ring all-reduce or sparse ring all-gather).
+//! cluster synchronizes (dense ring all-reduce, sparse ring all-gather,
+//! or — under `exchange = tree-sparse` — the gTop-k recursive-halving
+//! tree).
 //!
 //! The engine is a classic event-calendar DES: worker events (compute
 //! done, select done) are posted on a virtual clock; the collective
@@ -12,11 +14,11 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use super::cost::{allgather_time, allreduce_time};
+use super::cost::{allgather_time, allreduce_time, gtopk_tree_time};
 use super::ops_cost::{ComputeProfile, OpCostModel};
 use super::topology::Topology;
 use crate::compress::OpKind;
-use crate::config::Parallelism;
+use crate::config::{Exchange, Parallelism};
 use crate::stats::rng::Pcg64;
 
 /// Calibrated *end-to-end* per-step host-runtime overhead of a scoped
@@ -100,6 +102,12 @@ pub struct SimConfig {
     /// reproduces the PR-2/PR-3 timelines bit-for-bit, so the golden
     /// snapshots are untouched.
     pub host_overhead_s: f64,
+    /// Sparse-exchange wiring: `DenseRing` (the default — sparse payloads
+    /// cost the ring all-gather, the historical timeline bit-for-bit) or
+    /// `TreeSparse` (the gTop-k recursive-halving tree,
+    /// [`gtopk_tree_time`] — 2⌈log₂P⌉ rounds of one k-truncated payload).
+    /// Ignored for `op = Dense`, which always rides the dense ring.
+    pub exchange: Exchange,
 }
 
 impl SimConfig {
@@ -113,6 +121,7 @@ impl SimConfig {
             seed: 1,
             buckets: 1,
             host_overhead_s: 0.0,
+            exchange: Exchange::DenseRing,
         }
     }
 }
@@ -235,7 +244,11 @@ impl Simulator {
         } else {
             let k_eff = op_cost.effective_k(k);
             // Every worker sends (index u32 + value f32) per kept element.
-            allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
+            if self.cfg.exchange.is_tree() {
+                gtopk_tree_time(&self.cfg.topo, k_eff * 8)
+            } else {
+                allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
+            }
         };
 
         let compute = compute_times.iter().cloned().fold(0.0, f64::max);
@@ -308,6 +321,8 @@ impl Simulator {
         for (i, (&s, &kb)) in sizes.iter().zip(&ks).enumerate() {
             let tc = if is_dense {
                 allreduce_time(&self.cfg.topo, s as u64 * 4)
+            } else if self.cfg.exchange.is_tree() {
+                gtopk_tree_time(&self.cfg.topo, op_cost.effective_k(kb as u64) * 8)
             } else {
                 let k_eff = op_cost.effective_k(kb as u64);
                 allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
@@ -547,6 +562,36 @@ mod tests {
             runtime_overhead_s(Parallelism::Threads(64), 4),
             runtime_overhead_s(Parallelism::Threads(4), 4)
         );
+    }
+
+    #[test]
+    fn tree_exchange_cuts_comm_at_paper_scale() {
+        // 16 GPUs / 10 GbE, k = 0.001·d: the tree's 8 rounds beat the
+        // all-gather's 15 — on the monolithic and the bucketed timeline.
+        let mut cfg = SimConfig::table2(resnet(), OpKind::TopK);
+        cfg.exchange = Exchange::TreeSparse;
+        let tree = Simulator::new(cfg.clone()).iteration();
+        let ring = Simulator::new(SimConfig::table2(resnet(), OpKind::TopK)).iteration();
+        assert!(tree.comm < ring.comm, "tree {} vs ring {}", tree.comm, ring.comm);
+        assert_eq!(tree.compute.to_bits(), ring.compute.to_bits());
+        assert_eq!(tree.select.to_bits(), ring.select.to_bits());
+        cfg.buckets = 8;
+        let tree_b = Simulator::new(cfg).iteration();
+        let mut rcfg = SimConfig::table2(resnet(), OpKind::TopK);
+        rcfg.buckets = 8;
+        let ring_b = Simulator::new(rcfg).iteration();
+        assert!(tree_b.comm < ring_b.comm);
+    }
+
+    #[test]
+    fn dense_ignores_exchange_mode() {
+        // Dense gradients have no k-truncated payload: the ride stays on
+        // the dense ring whatever the exchange knob says.
+        let mut cfg = SimConfig::table2(resnet(), OpKind::Dense);
+        cfg.exchange = Exchange::TreeSparse;
+        let a = Simulator::new(cfg).iteration();
+        let b = Simulator::new(SimConfig::table2(resnet(), OpKind::Dense)).iteration();
+        assert_eq!(a.total.to_bits(), b.total.to_bits());
     }
 
     #[test]

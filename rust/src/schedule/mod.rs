@@ -16,8 +16,9 @@
 //!   settles.
 //! * [`AdaptiveMass`] — pick the smallest k whose top-|u| coordinates
 //!   capture a target fraction δ of ‖u‖² (`adaptive:DELTA`), estimated
-//!   from a [`Histogram`] of |u| on worker 0 (`stats::histogram`); the
-//!   estimate from step t steers k at step t + 1 (open loop at step 0).
+//!   from the rank-order fold of *every* worker's |u| [`Histogram`]
+//!   ([`fold_feedback_histograms`]); the estimate from step t steers k at
+//!   step t + 1 (open loop at step 0).
 //!
 //! ## The `k_schedule` grammar (TOML `[train]` key and `--set` override)
 //!
@@ -43,9 +44,12 @@
 //!   runs are bit-for-bit reproductions of the old path.
 //! * Policies are `Send`: the trainer owns the scheduler on the
 //!   coordinator thread; workers only see the resolved `k_t`.
-//! * Feedback ([`Scheduler::observe`]) is collected from worker 0 only
-//!   and applied after the step's fold, in rank order, so serial and
-//!   threaded runs resolve identical k sequences.
+//! * Feedback ([`Scheduler::observe`]) is collected from **every**
+//!   worker, folded in rank order ([`fold_feedback_histograms`]), and
+//!   applied after the step's fold, so serial, threaded, and pooled runs
+//!   resolve identical k sequences. (Earlier revisions sampled worker 0
+//!   only — a skewed rank-0 shard then dictated the whole cluster's k;
+//!   `folded_feedback_is_not_dominated_by_worker0` pins the fix.)
 
 use crate::stats::histogram::Histogram;
 
@@ -169,8 +173,10 @@ pub trait KPolicy: Send {
     /// result to `[1, d]`; implementations should stay in range anyway.
     fn k_for_step(&mut self, step: usize) -> usize;
 
-    /// Feed back the |u| histogram of worker 0 after `step` (adaptive
-    /// policies steer k at step + 1 with it). Default: ignored.
+    /// Feed back the cluster-wide |u| histogram after `step` — the
+    /// rank-order fold of every worker's [`feedback_histogram`]
+    /// ([`fold_feedback_histograms`]); adaptive policies steer k at
+    /// step + 1 with it. Default: ignored.
     fn observe(&mut self, _step: usize, _u_abs_hist: &Histogram) {}
 
     /// Whether this policy consumes [`KPolicy::observe`] feedback (lets
@@ -258,7 +264,8 @@ impl KPolicy for WarmupDecay {
 }
 
 /// Smallest k whose top-|u| coordinates capture `delta` of ‖u‖²,
-/// estimated from the previous step's |u| histogram (worker 0). The
+/// estimated from the previous step's |u| histogram (folded across all
+/// workers — [`fold_feedback_histograms`]). The
 /// energy in bin i is approximated as `count_i · center_i²`; walking bins
 /// from the largest magnitude down until the accumulated energy reaches
 /// `delta · Σ energy` yields the count — an O(bins) estimate whose
@@ -366,7 +373,8 @@ impl Scheduler {
         }
     }
 
-    /// Feed worker 0's |u| histogram back to the policy.
+    /// Feed the step's |u| histogram — folded across all workers
+    /// ([`fold_feedback_histograms`]) — back to the policy.
     pub fn observe(&mut self, step: usize, u_abs_hist: &Histogram) {
         self.policy.observe(step, u_abs_hist);
     }
@@ -392,6 +400,32 @@ pub fn feedback_histogram(u: &[f32]) -> Histogram {
         h.push((v as f64).abs());
     }
     h
+}
+
+/// Fold the per-worker |u| feedback histograms (rank order) into one
+/// cluster-wide histogram over the common span `max_w hi_w`: each source
+/// bin's count lands in the destination bin containing its center — an
+/// O(W · bins) re-bin whose granularity loss is at most one bin width.
+/// With a single input this is the identity (bin centers re-bin onto
+/// themselves), so one-worker runs keep their exact pre-fold feedback;
+/// the walk order is deterministic, so every runtime folds identically.
+pub fn fold_feedback_histograms(hists: &[Histogram]) -> Histogram {
+    assert!(!hists.is_empty(), "feedback fold needs at least one worker histogram");
+    let span = hists.iter().fold(1e-12f64, |m, h| m.max(h.hi));
+    let mut out = Histogram::new(0.0, span, FEEDBACK_BINS);
+    for h in hists {
+        let centers = h.centers();
+        for (&c, &x) in h.counts.iter().zip(&centers) {
+            if c == 0 {
+                continue;
+            }
+            let b = ((x / span * FEEDBACK_BINS as f64).floor().max(0.0) as usize)
+                .min(FEEDBACK_BINS - 1);
+            out.counts[b] += c;
+            out.total += c;
+        }
+    }
+    out
 }
 
 /// The open-loop per-step *density* trace of a schedule, independent of
@@ -548,6 +582,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fold_is_identity_for_one_worker_and_sums_counts() {
+        let mut rng = Pcg64::seed(11);
+        let u: Vec<f32> = (0..4000).map(|_| rng.next_gaussian() as f32).collect();
+        let h = feedback_histogram(&u);
+        let folded = fold_feedback_histograms(std::slice::from_ref(&h));
+        assert_eq!(folded.counts, h.counts, "one-worker fold must be the identity");
+        assert_eq!(folded.total, h.total);
+        assert_eq!(folded.hi.to_bits(), h.hi.to_bits());
+        // Multi-worker: common span is the max, totals add.
+        let v: Vec<f32> = (0..4000).map(|_| (2.0 * rng.next_gaussian()) as f32).collect();
+        let h2 = feedback_histogram(&v);
+        let folded2 = fold_feedback_histograms(&[h.clone(), h2.clone()]);
+        assert_eq!(folded2.total, h.total + h2.total);
+        assert_eq!(folded2.hi.to_bits(), h.hi.max(h2.hi).to_bits());
+    }
+
+    #[test]
+    fn folded_feedback_is_not_dominated_by_worker0() {
+        // The worker-0 bias regression: rank 0 holds a pathologically
+        // spiky residual shard (10 huge coordinates), ranks 1..3 hold
+        // ordinary spread-out gaussians. Observing worker 0 alone
+        // collapses k to ~10 for the *whole cluster*; the rank-order fold
+        // sees the other three shards' energy and keeps k three orders of
+        // magnitude larger.
+        let d = 20_000;
+        let mut spiky = vec![1e-4f32; d];
+        for i in 0..10 {
+            spiky[i * 7] = 100.0;
+        }
+        let mut rng = Pcg64::seed(13);
+        let others: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+
+        let mut biased = AdaptiveMass::new(d, 0.9, 0.001);
+        biased.observe(0, &feedback_histogram(&spiky)); // the old behaviour
+        let k_biased = biased.k_for_step(1);
+        assert!(k_biased <= 200, "worker-0-only k {k_biased} should be tiny");
+
+        let mut hists = vec![feedback_histogram(&spiky)];
+        hists.extend(others.iter().map(|u| feedback_histogram(u)));
+        let mut folded = AdaptiveMass::new(d, 0.9, 0.001);
+        folded.observe(0, &fold_feedback_histograms(&hists));
+        let k_folded = folded.k_for_step(1);
+        assert!(
+            k_folded > 50 * k_biased.max(1),
+            "folded k {k_folded} must not be dominated by worker 0's spike (biased k {k_biased})"
+        );
     }
 
     #[test]

@@ -10,11 +10,12 @@
 //! ordering-style tests stay green. This pins the exact default plan:
 //! any change fails CI until the golden file is consciously regenerated.
 //!
-//! Like `tests/schedule_golden.rs`, the pinned search space contains no
-//! `powf`-based schedule curves (warmup traces are platform-sensitive in
-//! the last ulp and have their own tolerance-based tests); the default
-//! space is `const`-density only, so the snapshot is pure deterministic
-//! f64 arithmetic.
+//! Like `tests/schedule_golden.rs`, the comparison is tolerance-based
+//! (`1e-12 + 1e-9·|golden|` per number, key sets exact both ways): the
+//! default space now sweeps a `powf`-bearing warmup schedule as a
+//! first-class axis, and warmup curves are platform-sensitive in the
+//! last ulp. The tolerance absorbs a libm ulp while any real model or
+//! ranking drift still fails.
 //!
 //! Regenerate after an *intentional* model/space change with:
 //! `SPARKV_UPDATE_GOLDEN=1 cargo test -q --test autotune_golden`

@@ -224,6 +224,7 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
+        exchange: sparkv::config::Exchange::DenseRing,
     }
 }
 

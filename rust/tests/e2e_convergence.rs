@@ -28,6 +28,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
+        exchange: sparkv::config::Exchange::DenseRing,
     }
 }
 

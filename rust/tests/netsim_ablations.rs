@@ -80,6 +80,7 @@ fn straggler_jitter_slows_barrier_monotonically() {
             seed: 9,
             buckets: 1,
             host_overhead_s: 0.0,
+            exchange: sparkv::config::Exchange::DenseRing,
         };
         means.push(Simulator::new(cfg).mean_iteration(100).total);
     }

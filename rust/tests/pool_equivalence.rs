@@ -45,6 +45,7 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         bucket_apportion: BucketApportion::Size,
         k_schedule: KSchedule::Const(None),
         steps_per_epoch: 5,
+        exchange: sparkv::config::Exchange::DenseRing,
     }
 }
 

@@ -180,6 +180,7 @@ fn cfg(op: OpKind, schedule: KSchedule, parallelism: Parallelism) -> TrainConfig
         bucket_apportion: sparkv::config::BucketApportion::Size,
         k_schedule: schedule,
         steps_per_epoch: 4,
+        exchange: sparkv::config::Exchange::DenseRing,
     }
 }
 

@@ -10,10 +10,16 @@
 //! pins the exact values: any change fails CI until the golden file is
 //! consciously regenerated.
 //!
-//! The trace is a literal (not a `KPolicy` output) on purpose: policy
-//! math involving `powf` is platform-sensitive in the last ulp and has
-//! its own tolerance-based tests; the golden pins the deterministic
-//! cost-model arithmetic under a time-varying density.
+//! The trace comes from the *real* schedule engine
+//! ([`sparkv::schedule::density_trace`]) — the same
+//! `warmup:0.016..0.001,epochs=2` axis `autotune::default_space()`
+//! sweeps. Warmup math involves `powf`, which is platform-sensitive in
+//! the last ulp, so the comparison below is tolerance-based
+//! (`1e-12 + 1e-9·|golden|`) rather than bit-exact: tight enough that
+//! any real calibration drift still fails, loose enough that a libm ulp
+//! cannot. (An earlier revision pinned a hand-rounded literal trace
+//! instead, which kept the golden bit-exact but meant the schedule the
+//! autotuner actually searches was never golden-covered.)
 //!
 //! Regenerate after an *intentional* calibration change with:
 //! `SPARKV_UPDATE_GOLDEN=1 cargo test -q --test schedule_golden`
@@ -22,12 +28,21 @@ use sparkv::cluster::scaling_table_scheduled;
 use sparkv::compress::OpKind;
 use sparkv::config::Parallelism;
 use sparkv::netsim::{ComputeProfile, Topology};
+use sparkv::schedule::{density_trace, KSchedule};
 use sparkv::util::json::Json;
 
-/// A 12-step warmup-shaped decay, 1.6% → the paper's 0.1% density.
-const TRACE: &[f64] = &[
-    0.016, 0.012, 0.008, 0.006, 0.004, 0.003, 0.002, 0.0015, 0.001, 0.001, 0.001, 0.001,
-];
+/// The 12-step trace of `warmup:0.016..0.001,epochs=2` at 4 steps per
+/// epoch: an exponential decay from 1.6% to the paper's 0.1% density
+/// over steps 0..8, then constant — produced by the schedule engine
+/// itself, not a literal.
+fn trace() -> Vec<f64> {
+    density_trace(
+        &KSchedule::Warmup { from: 0.016, to: 0.001, epochs: 2 },
+        0.001,
+        4,
+        12,
+    )
+}
 
 fn golden_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -45,7 +60,7 @@ fn current_table_json() -> Json {
         &models,
         &[OpKind::Dense, OpKind::TopK, OpKind::GaussianK],
         &Topology::paper_16gpu(),
-        TRACE,
+        &trace(),
         Parallelism::Serial,
     );
     // Round-trip through the serializer so the comparison sees exactly
