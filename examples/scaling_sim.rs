@@ -6,6 +6,7 @@
 //!   cargo run --release --example scaling_sim -- \
 //!       [--nodes 4 --gpus 4] [--k-ratio 0.001] \
 //!       [--network 10g|25g|100g] [--stragglers 0.0] \
+//!       [--topology flat|oversub:R|fat-tree:T] [--sweep-hierarchical] \
 //!       [--k-schedule warmup:0.016..0.001,epochs=2] [--sched-steps 48] \
 //!       [--steps-per-epoch 12] [--parallelism serial|threads:N|pool:N] \
 //!       [--exchange dense-ring|tree-sparse] [--sweep-workers] \
@@ -25,15 +26,23 @@
 //! wire schedule (ring all-gather vs recursive-halving tree) and prints
 //! the ring-vs-tree crossover against cluster size — the netsim half of
 //! `just gtopk-smoke`.
+//! `--topology` degrades the inter-node fabric (core oversubscription or
+//! fat-tree hop latency) for every sweep; `--sweep-hierarchical` prices
+//! ResNet-50 at 16 → 1024 workers under the flat ring vs the two-level
+//! intra-node-reduce → inter-node-ring schedule and writes
+//! `results/table2_hierarchical.json` — the netsim half of
+//! `just ring-smoke`.
 
-use sparkv::cluster::{scaling_table, scaling_table_exchange, scaling_table_scheduled};
+use sparkv::cluster::{
+    scaling_table, scaling_table_exchange, scaling_table_hierarchical, scaling_table_scheduled,
+};
 use sparkv::compress::OpKind;
 use sparkv::config::{Exchange, Parallelism, TrainConfig};
 use sparkv::coordinator::train;
 use sparkv::data::GaussianMixture;
 use sparkv::models::NativeMlp;
 use sparkv::netsim::{
-    runtime_overhead_s, ComputeProfile, LinkSpec, SimConfig, Simulator, Topology,
+    runtime_overhead_s, ComputeProfile, Fabric, LinkSpec, SimConfig, Simulator, Topology,
 };
 use sparkv::schedule::{density_trace, KSchedule};
 use sparkv::util::cli::Args;
@@ -54,7 +63,11 @@ fn main() -> anyhow::Result<()> {
         "100g" => LinkSpec::infiniband_100g(),
         other => anyhow::bail!("unknown network '{other}'"),
     };
-    let topo = Topology::new(nodes, gpus, LinkSpec::pcie3_x16(), inter);
+    let fabric = match args.get("topology") {
+        Some(s) => Fabric::parse(s)?,
+        None => Fabric::Flat,
+    };
+    let topo = Topology::new(nodes, gpus, LinkSpec::pcie3_x16(), inter).with_fabric(fabric);
     let ops = [
         OpKind::Dense,
         OpKind::TopK,
@@ -65,11 +78,12 @@ fn main() -> anyhow::Result<()> {
 
     let table = scaling_table(&ComputeProfile::paper_models(), &ops, &topo, k_ratio);
     println!(
-        "Table 2 — {} GPUs ({} nodes × {}), {} inter-node, k = {k_ratio}·d\n",
+        "Table 2 — {} GPUs ({} nodes × {}), {} inter-node ({} fabric), k = {k_ratio}·d\n",
         topo.world_size(),
         nodes,
         gpus,
         args.get_or("network", "10g"),
+        fabric.name(),
     );
     println!("{}", table.render());
 
@@ -123,7 +137,7 @@ fn main() -> anyhow::Result<()> {
     if args.flag("sweep-workers") {
         println!("\nGaussianK-SGD scaling efficiency vs cluster size (VGG-16):");
         for n in [1usize, 2, 4, 8, 16] {
-            let t = Topology::new(n, gpus, LinkSpec::pcie3_x16(), inter);
+            let t = Topology::new(n, gpus, LinkSpec::pcie3_x16(), inter).with_fabric(fabric);
             let table = scaling_table(
                 &[ComputeProfile::by_name("vgg16").unwrap()],
                 &[OpKind::Dense, OpKind::GaussianK],
@@ -175,7 +189,7 @@ fn main() -> anyhow::Result<()> {
         );
         let resnet = [ComputeProfile::by_name("resnet50").unwrap()];
         for n in [1usize, 2, 4, 8, 16] {
-            let t = Topology::new(n, gpus, LinkSpec::pcie3_x16(), inter);
+            let t = Topology::new(n, gpus, LinkSpec::pcie3_x16(), inter).with_fabric(fabric);
             let comm = |ex| {
                 scaling_table_exchange(
                     &resnet,
@@ -201,6 +215,41 @@ fn main() -> anyhow::Result<()> {
         std::fs::create_dir_all("results")?;
         std::fs::write("results/table2_exchange.json", priced.to_json().to_string())?;
         println!("wrote results/table2_exchange.json");
+    }
+
+    // Thousand-worker pricing (`--sweep-hierarchical`): the flat
+    // P-worker ring's (P−1)·α latency chain vs the two-level
+    // intra-node-reduce → inter-node-ring schedule, on the selected
+    // inter-node link and `--topology` fabric. The last sweep point is
+    // far beyond what the flat cost model was built for — which is the
+    // point: the hierarchical schedule is the one that stays physical.
+    if args.flag("sweep-hierarchical") {
+        println!(
+            "\nflat vs hierarchical iteration time (resnet50, {} inter-node, {} fabric):",
+            args.get_or("network", "10g"),
+            fabric.name(),
+        );
+        let resnet = [ComputeProfile::by_name("resnet50").unwrap()];
+        let hier_ops = [OpKind::Dense, OpKind::TopK, OpKind::GaussianK];
+        let mut last = None;
+        for n in [4usize, 16, 64, 256] {
+            let t = Topology::new(n, gpus, LinkSpec::pcie3_x16(), inter).with_fabric(fabric);
+            let flat = scaling_table(&resnet, &hier_ops, &t, k_ratio);
+            let hier = scaling_table_hierarchical(&resnet, &hier_ops, &t, k_ratio);
+            print!("  {:>4} workers:", t.world_size());
+            for op in hier_ops {
+                let f = flat.cell("resnet50", op).unwrap().iter_time_s;
+                let h = hier.cell("resnet50", op).unwrap().iter_time_s;
+                print!("  {} flat {f:>8.3}s hier {h:>8.3}s", op.name());
+            }
+            println!();
+            last = Some(hier);
+        }
+        if let Some(hier) = last {
+            std::fs::create_dir_all("results")?;
+            std::fs::write("results/table2_hierarchical.json", hier.to_json().to_string())?;
+            println!("wrote results/table2_hierarchical.json (1024-worker table)");
+        }
     }
 
     if let Some(spec_text) = args.get("k-schedule") {

@@ -43,6 +43,21 @@ gtopk-smoke:
     cd rust && cargo run --release --example scaling_sim -- \
         --exchange tree-sparse --k-ratio 0.001
 
+# The ring-smoke leg of bench-smoke: the pooled persistent-ring runtime
+# end to end — a short *real* `pool:4` training run whose collectives
+# execute on the pool's long-lived ring threads (dense ring, then the
+# bucketed tree-sparse pipeline; both bit-identical to serial by
+# construction), then the hierarchical topology sweep pricing flat vs
+# two-level schedules on an oversubscribed fabric.
+ring-smoke:
+    cd rust && cargo run --release -- train --op topk --workers 4 --steps 6 \
+        --parallelism pool:4
+    cd rust && cargo run --release -- train --op topk --global-topk true \
+        --exchange tree-sparse --workers 4 --steps 6 \
+        --parallelism pool:4 --buckets bytes:1024
+    cd rust && cargo run --release --example scaling_sim -- \
+        --topology oversub:4 --sweep-hierarchical
+
 # The tune-smoke CI job, locally: the closed-loop autotuner end to end on
 # a tiny grid (2 candidates, 3 measured calibration probe steps, 3
 # virtual steps/epoch), then a real training replay of the plan it wrote

@@ -4,8 +4,8 @@
 //! paper's published numbers.
 
 use sparkv::cluster::{
-    scaling_table_bucketed, scaling_table_exchange, scaling_table_par, scaling_table_runtime,
-    scaling_table_scheduled,
+    scaling_table_bucketed, scaling_table_exchange, scaling_table_hierarchical,
+    scaling_table_par, scaling_table_runtime, scaling_table_scheduled,
 };
 use sparkv::compress::OpKind;
 use sparkv::config::{Exchange, Parallelism};
@@ -280,6 +280,56 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Hierarchical topology sweep (the RING trajectory): the flat
+    // P-worker ring priced against the two-level intra-node-reduce →
+    // inter-node-ring schedule, from the paper's testbed out to 1024
+    // workers, on pristine and degraded fabrics. Three stories: (a) the
+    // hierarchical schedule beats the flat ring everywhere multi-node,
+    // (b) a 4:1-oversubscribed core inflates every multi-node cell, and
+    // (c) at 1024 workers the linear-wire sparse all-gather loses to
+    // hierarchical dense — the scalability caveat that motivates gTop-k's
+    // log-round tree.
+    use sparkv::netsim::Fabric;
+    println!("\nflat vs hierarchical vs oversubscribed (resnet50, iteration time, s):");
+    println!(
+        "{:<13}{:>11} {:>11} {:>14}",
+        "workers", "flat ring", "hierarchical", "hier@oversub:4"
+    );
+    let resnet50 = [ComputeProfile::by_name("resnet50").unwrap()];
+    let mut hier_big = None;
+    for nodes in [4usize, 16, 64, 256] {
+        let t = Topology::new(nodes, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        let flat = scaling_table_par(
+            &resnet50,
+            &[OpKind::GaussianK],
+            &t,
+            0.001,
+            Parallelism::Serial,
+        );
+        let hier = scaling_table_hierarchical(&resnet50, &ops, &t, 0.001);
+        let over = scaling_table_hierarchical(
+            &resnet50,
+            &[OpKind::GaussianK],
+            &t.clone().with_fabric(Fabric::Oversubscribed(4.0)),
+            0.001,
+        );
+        println!(
+            "{:<13}{:>11.3} {:>11.3} {:>14.3}",
+            t.world_size(),
+            flat.cell("resnet50", OpKind::GaussianK).unwrap().iter_time_s,
+            hier.cell("resnet50", OpKind::GaussianK).unwrap().iter_time_s,
+            over.cell("resnet50", OpKind::GaussianK).unwrap().iter_time_s,
+        );
+        hier_big = Some(hier);
+    }
+    let hier_big = hier_big.expect("sweep ran");
+    println!(
+        "1024-worker hierarchical: dense {:.3}s vs gaussiank {:.3}s — linear-wire \
+         all-gather has stopped paying; the log-round tree is the scalable exchange",
+        hier_big.cell("resnet50", OpKind::Dense).unwrap().iter_time_s,
+        hier_big.cell("resnet50", OpKind::GaussianK).unwrap().iter_time_s,
+    );
+
     // Scheduled sweep (the SCHED trajectory): the same cluster replayed
     // under a warmup density schedule — 1.6% density for the first two
     // virtual epochs decaying to the paper's 0.1%. The interesting
@@ -352,9 +402,14 @@ fn main() -> anyhow::Result<()> {
         "results/table2_scaling_exchange.json",
         tree.to_json().to_string(),
     )?;
+    std::fs::write(
+        "results/table2_scaling_hierarchical.json",
+        hier_big.to_json().to_string(),
+    )?;
     println!(
         "wrote results/table2_scaling.json + results/table2_scaling_pipelined.json + \
-         results/table2_scaling_scheduled.json + results/table2_scaling_exchange.json"
+         results/table2_scaling_scheduled.json + results/table2_scaling_exchange.json + \
+         results/table2_scaling_hierarchical.json"
     );
     Ok(())
 }

@@ -31,19 +31,22 @@ pub struct CandidateCost {
 /// the worker runtime. Two modelling choices tie the prediction to the
 /// real trainer:
 ///
-/// * the **serial** runtime runs the bucket loop without the pipeline,
-///   and the **pool** runtime's collectives are the serial schedule
-///   executed *on the coordinator thread*
-///   ([`crate::collectives::PooledCollectives`] delegates to the serial
-///   oracle with zero thread activity per call) — so both are charged
-///   the *serialized* schedule, the simulator's `total + overlap_saved`,
-///   plus their respective launch overheads. Only `threads:N` gets the
-///   pipeline-overlap credit, because only its per-rank scoped engine
-///   actually executes the exchange off the coordinator thread. (The
-///   oracle used to hand `pool:N` the overlap credit too, which made
-///   pooled bucketed plans win every leaderboard by modelling a pipeline
-///   the pooled collective path cannot realize — pinned by
-///   `pool_is_charged_the_serialized_bucket_schedule` below.)
+/// * the pipeline-overlap credit is **derived from the collective
+///   engine itself**: a candidate whose engine executes the exchange off
+///   the coordinator thread
+///   ([`crate::collectives::Collectives::off_coordinator`]) is priced at
+///   the pipelined `total`; one whose engine runs on the coordinator is
+///   charged the *serialized* schedule, the simulator's
+///   `total + overlap_saved`. Today that means `serial` is serialized
+///   while both `threads:N` (scoped per-rank threads) and `pool:N` (the
+///   persistent ring rig behind
+///   [`crate::collectives::PooledRingCollectives`]) earn the credit.
+///   Deriving the flag from the engine rather than matching on
+///   [`Parallelism`] keeps the oracle honest across engine changes: PR 6
+///   hardcoded `pool:N` as serialized because its collectives then ran
+///   on the coordinator, and that charge silently became wrong the
+///   moment PR 7 made the pooled ring real. (Pinned by
+///   `pool_earns_the_pipeline_credit_of_its_ring_engine` below.)
 /// * the host overhead is the launch cost of the runtime
 ///   (spawn-per-step for `threads:N`, channel dispatch for `pool:N`,
 ///   zero for `serial`), with the same thread-budget capping the trainer
@@ -115,16 +118,12 @@ impl<'a> CostOracle<'a> {
             topo.inter.bandwidth_bps *= c.bandwidth_scale;
         }
         let host_overhead_s = self.host_overhead_s(cand.parallelism);
-        // The serial runtime walks buckets without the pipeline, and the
-        // pooled runtime's collectives run serially on the coordinator
-        // thread (`PooledCollectives`): charge both the serialized
-        // schedule (total + overlap_saved reconstructs it exactly — see
-        // `IterationBreakdown::overlap_saved`). Only the scoped
-        // thread-per-rank runtime earns the pipeline-overlap credit.
-        let serialized = matches!(
-            cand.parallelism,
-            Parallelism::Serial | Parallelism::Pool(_)
-        );
+        // Overlap capability comes from the engine, not the parallelism
+        // tag: an engine that keeps the exchange on the coordinator
+        // thread serializes the bucket loop, so it is charged
+        // `total + overlap_saved` (which reconstructs the serialized
+        // schedule exactly — see `IterationBreakdown::overlap_saved`).
+        let serialized = !cand.parallelism.engine().off_coordinator();
 
         let mut sim = Simulator::new(SimConfig {
             topo,
@@ -216,13 +215,15 @@ mod tests {
     }
 
     #[test]
-    fn pool_is_charged_the_serialized_bucket_schedule() {
-        // The satellite charging audit: `PooledCollectives` executes the
-        // serial collective schedule on the coordinator thread, so the
-        // oracle must not credit `pool:N` with pipeline overlap it cannot
-        // realize. Serial and pool both pay the serialized schedule
-        // (differing only by the pool's µs-scale dispatch bill); only the
-        // scoped thread-per-rank runtime earns the overlap credit.
+    fn pool_earns_the_pipeline_credit_of_its_ring_engine() {
+        // The PR-7 flip of the PR-6 charging audit: `pool:N` collectives
+        // now execute on the pool's persistent ring threads
+        // (`PooledRingCollectives::off_coordinator() == true`), so the
+        // oracle credits the pooled bucketed timeline with the same
+        // pipeline overlap as `threads:N` — the two differ only by their
+        // launch-overhead constants. Serial remains the one serialized
+        // runtime, because its engine is the only one still running the
+        // exchange on the coordinator thread.
         let scen = TuneScenario::default_16gpu();
         let oracle = CostOracle::new(&scen, None);
         let serial = oracle.predict(&cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Serial));
@@ -230,29 +231,31 @@ mod tests {
             oracle.predict(&cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Pool(4)));
         let threaded =
             oracle.predict(&cand(OpKind::GaussianK, Buckets::Layers, Parallelism::Threads(4)));
-        // Pool = serialized schedule + dispatch overhead, exactly.
-        let expected_pool = serial.epoch_s + pooled.host_overhead_s * pooled.steps as f64;
+        // Pool and threads share the pipelined timeline: strip each
+        // runtime's per-step launch bill and the remainders agree.
+        let pool_core = pooled.epoch_s - pooled.host_overhead_s * pooled.steps as f64;
+        let thread_core = threaded.epoch_s - threaded.host_overhead_s * threaded.steps as f64;
         assert!(
-            (pooled.epoch_s - expected_pool).abs() < 1e-12,
-            "pool {} != serialized {} + dispatch",
+            (pool_core - thread_core).abs() < 1e-9,
+            "pool core {pool_core} != threads core {thread_core}"
+        );
+        // The pipeline credit dwarfs the dispatch bill on this
+        // communication-heavy bucketed timeline: pooled beats serial.
+        assert!(
+            pooled.epoch_s < serial.epoch_s,
+            "pool {0} !< serial {1}: the ring engine's overlap credit vanished",
             pooled.epoch_s,
-            expected_pool
+            serial.epoch_s
         );
-        // The overlap credit goes to threads alone, and it dwarfs the
-        // spawn bill on this communication-heavy bucketed timeline.
-        assert!(
-            threaded.epoch_s < pooled.epoch_s,
-            "threads {0} !< pool {1}: the pipeline credit vanished",
-            threaded.epoch_s,
-            pooled.epoch_s
-        );
+        // And the µs-scale dispatch constant keeps pool under threads.
+        assert!(pooled.epoch_s < threaded.epoch_s);
         // Serial pays zero launch overhead; pool pays its dispatch model;
         // runtime ordering of launch overhead matches the netsim model.
         assert_eq!(serial.host_overhead_s, 0.0);
         assert!(pooled.host_overhead_s > 0.0);
         assert!(threaded.host_overhead_s > pooled.host_overhead_s);
-        // Monolithic timelines have no overlap to credit: all three
-        // runtimes differ only by their launch overhead.
+        // Monolithic timelines have no overlap to credit: pool is exactly
+        // serial plus its dispatch bill, pipelining or not.
         let mono_serial = oracle.predict(&cand(OpKind::GaussianK, Buckets::None, Parallelism::Serial));
         let mono_pool = oracle.predict(&cand(OpKind::GaussianK, Buckets::None, Parallelism::Pool(4)));
         let want = mono_serial.epoch_s + mono_pool.host_overhead_s * mono_pool.steps as f64;

@@ -178,6 +178,12 @@ impl BucketSchedule {
         &self.specs
     }
 
+    /// Per-bucket element counts in schedule order (the apportionment
+    /// weights of the `size` mode and the [`ema_masses`] fallback target).
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
     /// Sum of the per-bucket budgets (== `min(k, d)` by construction).
     pub fn total_k(&self) -> usize {
         self.specs.iter().map(|s| s.k).sum()
@@ -333,23 +339,53 @@ pub fn apportion_k_weighted(sizes: &[usize], weights: &[f64], k: usize) -> Vec<u
 /// `bucket_apportion = mass:ema=BETA` trainer mode steers by:
 /// `m̄_b ← β·m̄_b + (1 − β)·m_b`. An empty (or wrong-length) `smoothed`
 /// state seeds from the raw masses — step 0 of an EMA run therefore
-/// apportions exactly like the unsmoothed mode. Raw vectors containing a
-/// non-finite entry are ignored (the last good state is kept), so one
-/// degenerate step can never poison the smoothing state; the downstream
-/// [`BucketSchedule::apportion_k_by_mass`] degenerate screen still
-/// applies to whatever is passed on.
-pub fn ema_masses(smoothed: &mut Vec<f64>, raw: &[f64], beta: f64) {
+/// apportions exactly like the unsmoothed mode.
+///
+/// A raw vector containing a non-finite entry (a diverging step producing
+/// NaN/∞ norms) must not poison the smoothing state — but it must not
+/// *freeze* it either: the old early-return meant a single bad step pinned
+/// the smoothed shares forever, so every later step kept apportioning by a
+/// stale snapshot no matter how the gradient distribution moved. Instead,
+/// a degenerate step decays the state one EMA tick toward the neutral
+/// **size-proportional** target `total · d_b / Σ d_b` (scale preserved so
+/// recovery re-weights, not re-seeds; if the current total is itself
+/// non-finite or non-positive, the target falls back to the raw sizes).
+/// Repeated bad steps therefore converge to exactly the `size` apportion
+/// mode — the fallback the trainer would use with no mass signal at all —
+/// and one good step immediately starts pulling the state back.
+pub fn ema_masses(smoothed: &mut Vec<f64>, raw: &[f64], sizes: &[usize], beta: f64) {
     debug_assert!((0.0..1.0).contains(&beta), "ema beta must be in [0, 1)");
-    if raw.iter().any(|m| !m.is_finite()) {
-        return;
-    }
+    debug_assert_eq!(raw.len(), sizes.len(), "one size per bucket");
+    let finite = raw.iter().all(|m| m.is_finite());
     if smoothed.len() != raw.len() {
         smoothed.clear();
-        smoothed.extend_from_slice(raw);
+        if finite {
+            smoothed.extend_from_slice(raw);
+        } else {
+            // Nothing usable to seed from: start at the neutral target.
+            smoothed.extend(sizes.iter().map(|&s| s as f64));
+        }
         return;
     }
-    for (s, &m) in smoothed.iter_mut().zip(raw) {
-        *s = beta * *s + (1.0 - beta) * m;
+    if finite {
+        for (s, &m) in smoothed.iter_mut().zip(raw) {
+            *s = beta * *s + (1.0 - beta) * m;
+        }
+        return;
+    }
+    // Degenerate step: decay toward the size-proportional fallback.
+    let total: f64 = smoothed.iter().sum();
+    let dim: f64 = sizes.iter().map(|&s| s as f64).sum();
+    let (scale, denom) = if total.is_finite() && total > 0.0 && dim > 0.0 {
+        (total, dim)
+    } else {
+        (1.0, 1.0)
+    };
+    for (s, &sz) in smoothed.iter_mut().zip(sizes) {
+        let target = scale * (sz as f64) / denom;
+        // A non-finite state entry (hand-seeded by a caller) can't decay
+        // arithmetically — snap it to the target outright.
+        *s = if s.is_finite() { beta * *s + (1.0 - beta) * target } else { target };
     }
 }
 
@@ -664,11 +700,11 @@ mod tests {
         // Seeding: an empty state copies the raw masses (step 0 of an EMA
         // run apportions exactly like the unsmoothed mode).
         let mut s = Vec::new();
-        ema_masses(&mut s, &[1.0, 9.0], 0.9);
+        ema_masses(&mut s, &[1.0, 9.0], &[64, 64], 0.9);
         assert_eq!(s, vec![1.0, 9.0]);
         // β = 0 tracks the raw masses exactly.
         let mut t = vec![5.0, 5.0];
-        ema_masses(&mut t, &[1.0, 9.0], 0.0);
+        ema_masses(&mut t, &[1.0, 9.0], &[64, 64], 0.0);
         assert_eq!(t, vec![1.0, 9.0]);
         // Thrash reduction: alternating raw masses swing the per-bucket k
         // split bucket-to-bucket every step; the β = 0.9 EMA holds it
@@ -682,7 +718,7 @@ mod tests {
             let mut prev: Option<Vec<usize>> = None;
             let mut moved = 0;
             for raw in &raw_steps {
-                ema_masses(&mut smoothed, raw, betas);
+                ema_masses(&mut smoothed, raw, &sizes, betas);
                 let ks = sched.apportion_k_by_mass(16, &smoothed);
                 assert_eq!(ks.iter().sum::<usize>(), 16);
                 for (kb, &db) in ks.iter().zip(&sizes) {
@@ -701,13 +737,54 @@ mod tests {
             smoothed_movement * 4 < raw_movement,
             "ema did not damp thrash: {smoothed_movement} vs raw {raw_movement}"
         );
-        // A non-finite raw step leaves the state untouched.
+        // A non-finite raw step decays one EMA tick toward the
+        // size-proportional split at the same total (total 6 over equal
+        // sizes → target [3, 3]), instead of freezing the stale shares.
         let mut u = vec![2.0, 4.0];
-        ema_masses(&mut u, &[f64::NAN, 1.0], 0.5);
-        assert_eq!(u, vec![2.0, 4.0]);
+        ema_masses(&mut u, &[f64::NAN, 1.0], &[64, 64], 0.5);
+        assert_eq!(u, vec![0.5 * 2.0 + 0.5 * 3.0, 0.5 * 4.0 + 0.5 * 3.0]);
         // A schedule-length change re-seeds rather than zipping short.
-        ema_masses(&mut u, &[1.0, 2.0, 3.0], 0.5);
+        ema_masses(&mut u, &[1.0, 2.0, 3.0], &[32, 32, 32], 0.5);
         assert_eq!(u, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ema_masses_recovers_from_degenerate_steps() {
+        // Regression for the PR-7 freeze bug: the old implementation
+        // early-returned on any non-finite raw mass, so the smoothed
+        // shares were pinned to the last good snapshot *forever* — a
+        // single diverging step near t = 0 steered the apportionment for
+        // the rest of the run. The fix decays toward the
+        // size-proportional fallback, so a run of bad steps converges to
+        // the `size` split and good steps re-steer immediately.
+        let sizes = [96usize, 32];
+        let mut smoothed = vec![120.0, 8.0]; // heavily skewed good state
+        let total0: f64 = smoothed.iter().sum();
+        for _ in 0..64 {
+            ema_masses(&mut smoothed, &[f64::INFINITY, f64::NAN], &sizes, 0.5);
+        }
+        // Converged (up to rounding) to total · d_b / Σ d_b — scale kept.
+        let total: f64 = smoothed.iter().sum();
+        assert!((total - total0).abs() < 1e-9 * total0, "scale drifted: {total}");
+        assert!((smoothed[0] - total0 * 0.75).abs() < 1e-6);
+        assert!((smoothed[1] - total0 * 0.25).abs() < 1e-6);
+        // The downstream apportionment now matches the size split exactly.
+        let sched = BucketSchedule::fixed_bytes(128, 384, 16);
+        assert_eq!(sched.apportion_k_by_mass(16, &smoothed), sched.apportion_k(16));
+        // A good step immediately pulls the state toward the fresh signal
+        // (state ≈ [96, 32]; one β = 0.5 tick of [0, 200] flips the order).
+        ema_masses(&mut smoothed, &[0.0, 200.0], &sizes, 0.5);
+        assert!(smoothed[1] > smoothed[0], "good step must re-steer: {smoothed:?}");
+        // Non-finite state totals (never produced by this function, but
+        // reachable if a caller seeds by hand) fall back to the raw sizes.
+        let mut poisoned = vec![f64::NAN, 1.0];
+        ema_masses(&mut poisoned, &[f64::NAN, 1.0], &sizes, 0.5);
+        assert!(poisoned.iter().all(|m| m.is_finite()), "{poisoned:?}");
+        // An unseeded state hit by a degenerate first step seeds from the
+        // sizes directly rather than staying empty.
+        let mut empty = Vec::new();
+        ema_masses(&mut empty, &[f64::NAN, 1.0], &sizes, 0.5);
+        assert_eq!(empty, vec![96.0, 32.0]);
     }
 
     #[test]

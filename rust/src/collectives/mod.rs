@@ -20,11 +20,12 @@
 //! * [`ThreadedCollectives`] — one OS thread per ring participant,
 //!   exchanging chunks over `mpsc` channels in the very same ring
 //!   schedule (threads are scoped per call).
-//! * [`PooledCollectives`] — the engine of the persistent worker-pool
-//!   runtime (`parallelism = pool:N`): the serial schedules executed on
-//!   the coordinator thread, because the pool's contract is *zero*
-//!   per-step thread spawns and the scoped per-call ring would
-//!   reintroduce them (see `pooled.rs` docs).
+//! * [`PooledRingCollectives`] — the engine of the persistent worker-pool
+//!   runtime (`parallelism = pool:N`): the same ring/tree schedules as
+//!   the threaded engine, executed on the pool's **persistent**
+//!   ring-participant threads over per-link channels wired once at
+//!   spawn — real off-coordinator exchange with *zero* per-call thread
+//!   spawns (see `pooled.rs` and `coordinator/pool.rs` docs).
 //!
 //! ### The determinism guarantee
 //!
@@ -90,10 +91,12 @@ mod serial;
 mod threaded;
 mod tree;
 
-pub use pooled::PooledCollectives;
+pub use pooled::PooledRingCollectives;
 pub use serial::SerialCollectives;
 pub use threaded::ThreadedCollectives;
-pub use tree::{gtopk_tree_rounds, gtopk_tree_wire_bytes};
+pub use tree::{gtopk_tree_round_bytes, gtopk_tree_rounds, gtopk_tree_wire_bytes};
+
+pub(crate) use tree::finish_gtopk;
 
 use crate::tensor::SparseVec;
 
@@ -108,6 +111,19 @@ use crate::tensor::SparseVec;
 pub trait Collectives: Send + Sync {
     /// Engine name for logs/reports.
     fn name(&self) -> &'static str;
+
+    /// Whether this engine's collectives run **off the coordinator
+    /// thread** (on their own OS threads), so a bucketed pipeline can
+    /// genuinely overlap bucket i+1's selection with bucket i's
+    /// exchange. The autotune `CostOracle` derives its pipeline-overlap
+    /// credit from this capability instead of pattern-matching on
+    /// `Parallelism` — an engine that changes its execution strategy
+    /// (as the pooled engine did when it gained the persistent ring)
+    /// reprices automatically. Defaults to `false` (the serial oracle
+    /// runs every schedule on the calling thread).
+    fn off_coordinator(&self) -> bool {
+        false
+    }
 
     /// Dense ring all-reduce (average) over per-worker vectors.
     ///
@@ -138,9 +154,10 @@ pub trait Collectives: Send + Sync {
     /// **bit-identical** to [`Collectives::gtopk_allreduce_avg`] — the
     /// halving schedule builds the same merge tree (see `tree.rs`) — so
     /// the exchange mode only changes the simulated wire cost. Engines
-    /// differ in *how* they run the rounds: serial/pooled walk the level
-    /// list on the calling thread, threaded runs real rank threads with
-    /// per-round channels.
+    /// differ in *how* they run the rounds: serial walks the level list
+    /// on the calling thread, threaded runs scoped rank threads with
+    /// per-round channels, and pooled runs the rounds on its persistent
+    /// ring threads over pre-wired tree edges.
     fn gtopk_tree_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>);
 }
 

@@ -1,62 +1,127 @@
-//! The pooled-runtime collectives engine: the serial ring/tree schedules
-//! executed on the coordinator thread, with **zero thread activity** per
-//! call.
+//! The pooled-runtime collectives engine: every collective executes on
+//! the worker pool's **persistent ring-participant threads**, with zero
+//! thread spawns per call.
 //!
-//! ## Why the pool's engine is spawn-free rather than thread-per-rank
+//! ## How the pooled ring works
 //!
-//! `parallelism = pool:N` exists to eliminate per-step thread churn: the
-//! worker pool ([`crate::coordinator::pool`]) is spawned once per run and
-//! fed per-step jobs over channels. Routing the aggregation through
-//! [`super::ThreadedCollectives`] would silently reintroduce exactly the
-//! cost the pool removes — that engine spawns one scoped OS thread per
-//! ring participant *per collective call*, i.e. per training step (and
-//! per bucket on the bucketed path). The pooled runtime instead runs the
-//! collective on the coordinator thread while the pool threads are
-//! parked at the step barrier: the simulated exchange is memory-bound
-//! rather than compute-bound, so at trainer scale the serial schedule
-//! costs less than the spawn/join traffic it replaces.
+//! `parallelism = pool:N` exists to eliminate per-step thread churn, and
+//! since PR 7 that no longer means running the exchange serially on the
+//! coordinator: [`crate::coordinator::WorkerPool::spawn_with_ring`]
+//! spawns one long-lived ring thread per collective rank, wired at spawn
+//! time with persistent per-link channels (ring links for the dense
+//! reduce-scatter / sparse all-gather, dedicated tree edges for the
+//! gTop-k recursive halving). A collective call fans a
+//! `PoolJob::Collective` out to those threads and assembles their tagged
+//! replies — the [`super::ThreadedCollectives`] schedules run for real,
+//! but the `thread::scope` spawn/join cost that engine pays *per call*
+//! is paid exactly once per run. Both gTop-k entry points route through
+//! the halving tree (bit-identical to the level-list merge, see
+//! `tree.rs`), so tree-sparse rounds run off-coordinator too.
 //!
 //! ## Bit-identity
 //!
-//! [`PooledCollectives`] delegates every collective to
+//! The rig executes the same fixed per-element fold paths over FIFO
+//! channels as [`super::ThreadedCollectives`], which is bit-identical to
 //! [`SerialCollectives`] — the numerics **oracle** the whole equivalence
-//! suite is anchored to — so `pool:N` trajectories are bit-identical to
-//! `serial` (and therefore to `threads:N`) by construction, not by
-//! argument. The end-to-end lock lives in `tests/pool_equivalence.rs`.
+//! suite is anchored to (see the `threaded.rs` module docs for the
+//! argument). Degenerate shapes (no rig attached, P = 1, empty
+//! gradients, arity mismatch, teardown racing a call) fall back to the
+//! serial schedules inline — the same numbers either way, so `pool:N`
+//! trajectories are bit-identical to `serial` (and therefore to
+//! `threads:N`) by construction. The end-to-end lock lives in
+//! `tests/pool_equivalence.rs`.
+
+use std::sync::Arc;
 
 use super::{Collectives, SerialCollectives};
+use crate::coordinator::pool::RingClient;
 use crate::tensor::SparseVec;
 
 /// Zero-spawn collectives engine for the persistent worker-pool runtime.
 ///
-/// Same ring reduce-scatter/all-gather and gTop-k tree merges as the
-/// serial oracle, executed on the calling (coordinator) thread. See the
-/// module docs for why the pool deliberately does *not* use the
-/// thread-per-rank engine.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct PooledCollectives;
+/// With a rig attached ([`crate::coordinator::WorkerPool::collectives`]),
+/// collectives execute on the pool's persistent ring threads; the
+/// default (rig-less) engine runs the serial oracle schedules on the
+/// calling thread and exists for capability queries and standalone use.
+/// Either way the results are bit-identical to [`SerialCollectives`].
+#[derive(Clone, Default)]
+pub struct PooledRingCollectives {
+    rig: Option<Arc<RingClient>>,
+}
 
-impl Collectives for PooledCollectives {
+impl std::fmt::Debug for PooledRingCollectives {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PooledRingCollectives")
+            .field("rig", &self.rig.is_some())
+            .finish()
+    }
+}
+
+impl PooledRingCollectives {
+    /// Engine backed by a worker pool's persistent ring rig.
+    pub(crate) fn with_rig(rig: Arc<RingClient>) -> Self {
+        PooledRingCollectives { rig: Some(rig) }
+    }
+
+    /// The rig, when it can serve this collective: arity must match the
+    /// ring's rank count and there must be at least two participants
+    /// (P = 1 has nothing to exchange).
+    fn rig_for(&self, arity: usize) -> Option<&RingClient> {
+        self.rig
+            .as_deref()
+            .filter(|rig| rig.ranks() == arity && arity > 1)
+    }
+}
+
+impl Collectives for PooledRingCollectives {
     fn name(&self) -> &'static str {
         "pooled"
     }
 
+    fn off_coordinator(&self) -> bool {
+        // The pool runtime attaches the ring rig, so its bucketed
+        // pipeline genuinely overlaps selection with communication —
+        // the capability the autotune oracle prices.
+        true
+    }
+
     fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Vec<f32> {
+        if let Some(rig) = self.rig_for(inputs.len()) {
+            if !inputs[0].is_empty() {
+                if let Some(out) = rig.ring_allreduce_avg(inputs) {
+                    return out;
+                }
+            }
+        }
         SerialCollectives.ring_allreduce_avg(inputs)
     }
 
     fn sparse_allgather_avg(&self, inputs: &[SparseVec]) -> Vec<f32> {
+        if let Some(rig) = self.rig_for(inputs.len()) {
+            if inputs[0].d > 0 {
+                if let Some(out) = rig.sparse_allgather_avg(inputs) {
+                    return out;
+                }
+            }
+        }
         SerialCollectives.sparse_allgather_avg(inputs)
     }
 
     fn gtopk_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
+        if let Some(rig) = self.rig_for(inputs.len()) {
+            if let Some(out) = rig.gtopk_halving_avg(inputs, k) {
+                return out;
+            }
+        }
         SerialCollectives.gtopk_allreduce_avg(inputs, k)
     }
 
     fn gtopk_tree_allreduce_avg(&self, inputs: &[SparseVec], k: usize) -> (Vec<f32>, Vec<u32>) {
-        // Zero-spawn contract: the tree rounds run as the serial level
-        // list on the coordinator thread (spawning one thread per rank
-        // per call would reintroduce exactly the churn the pool removes).
+        if let Some(rig) = self.rig_for(inputs.len()) {
+            if let Some(out) = rig.gtopk_halving_avg(inputs, k) {
+                return out;
+            }
+        }
         SerialCollectives.gtopk_tree_allreduce_avg(inputs, k)
     }
 }
@@ -64,28 +129,49 @@ impl Collectives for PooledCollectives {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::WorkerPool;
 
     #[test]
-    fn pooled_engine_is_the_serial_oracle() {
+    fn rigless_engine_is_the_serial_oracle() {
+        let engine = PooledRingCollectives::default();
         let inputs = vec![
             vec![1.0f32, 2.0, 3.0, 4.0, 5.0],
             vec![10.0, 20.0, 30.0, 40.0, 50.0],
             vec![-1.0, -2.0, -3.0, -4.0, -5.0],
         ];
         assert_eq!(
-            PooledCollectives.ring_allreduce_avg(&inputs),
+            engine.ring_allreduce_avg(&inputs),
             SerialCollectives.ring_allreduce_avg(&inputs)
         );
         let a = SparseVec::from_pairs(6, vec![(0, 3.0), (2, 1.0)]);
         let b = SparseVec::from_pairs(6, vec![(2, 1.5), (5, -4.0)]);
         assert_eq!(
-            PooledCollectives.sparse_allgather_avg(&[a.clone(), b.clone()]),
+            engine.sparse_allgather_avg(&[a.clone(), b.clone()]),
             SerialCollectives.sparse_allgather_avg(&[a.clone(), b.clone()])
         );
         assert_eq!(
-            PooledCollectives.gtopk_allreduce_avg(&[a.clone(), b.clone()], 2),
+            engine.gtopk_allreduce_avg(&[a.clone(), b.clone()], 2),
             SerialCollectives.gtopk_allreduce_avg(&[a, b], 2)
         );
-        assert_eq!(PooledCollectives.name(), "pooled");
+        assert_eq!(engine.name(), "pooled");
+        assert!(engine.off_coordinator());
+    }
+
+    #[test]
+    fn rig_arity_mismatch_falls_back_to_serial() {
+        // A 4-rank rig asked to reduce 3 inputs (or 1) must not wedge the
+        // ring — it runs the serial schedule inline instead.
+        let pool = WorkerPool::spawn_with_ring(Vec::new(), 4);
+        let engine = pool.collectives();
+        let three = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![-5.0, 6.0]];
+        assert_eq!(
+            engine.ring_allreduce_avg(&three),
+            SerialCollectives.ring_allreduce_avg(&three)
+        );
+        let one = vec![vec![7.0f32, -8.0]];
+        assert_eq!(engine.ring_allreduce_avg(&one), vec![7.0, -8.0]);
+        // Empty gradient: serial early-return path.
+        let empty: Vec<Vec<f32>> = vec![Vec::new(); 4];
+        assert_eq!(engine.ring_allreduce_avg(&empty), Vec::<f32>::new());
     }
 }

@@ -39,6 +39,12 @@ impl Collectives for ThreadedCollectives {
         "threaded"
     }
 
+    fn off_coordinator(&self) -> bool {
+        // One scoped OS thread per ring participant: the exchange runs
+        // off the coordinator, so the bucketed pipeline overlaps.
+        true
+    }
+
     fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Vec<f32> {
         let p = inputs.len();
         assert!(p > 0, "no workers");

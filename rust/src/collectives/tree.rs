@@ -48,16 +48,53 @@ pub fn gtopk_tree_rounds(p: usize) -> usize {
     }
 }
 
-/// Wire bytes the tree-sparse *reduction* puts on the busiest link: one
-/// ≤ k payload (2k numbers = 8k bytes: u32 index + f32 value) per round,
-/// ⌈log₂P⌉ rounds. This counts the up-tree half only — the merged result
-/// still has to fan back out, which the cost model
-/// ([`crate::netsim::gtopk_tree_time`]) charges as a second ⌈log₂P⌉
-/// broadcast rounds of the same payload; double this figure for the
-/// round-trip accounting. Compare `sparse_allgather_bytes` for the
-/// dense-ring schedule's Σ-of-unions accounting.
+/// **Worst-case bound** on the wire bytes the tree-sparse *reduction*
+/// puts on the busiest link: one ≤ k payload (2k numbers = 8k bytes:
+/// u32 index + f32 value) per round, ⌈log₂P⌉ rounds. This counts the
+/// up-tree half only — the merged result still has to fan back out,
+/// which the cost model ([`crate::netsim::gtopk_tree_time`]) charges as
+/// a second ⌈log₂P⌉ broadcast rounds of the same payload; double this
+/// figure for the round-trip accounting. Compare
+/// `sparse_allgather_bytes` for the dense-ring schedule's Σ-of-unions
+/// accounting.
+///
+/// The bound is tight only when every merged payload carries exactly k
+/// pairs; payloads with `nnz < k` (small inputs, heavy index overlap,
+/// cancellation at a truncation boundary) move less. For pricing real
+/// payloads use [`gtopk_tree_round_bytes`], which replays the halving
+/// merge and reports the *actual* busiest-link bytes per round —
+/// [`crate::netsim::gtopk_tree_time_rounds`] prices that profile.
 pub fn gtopk_tree_wire_bytes(p: usize, k: usize) -> u64 {
     gtopk_tree_rounds(p) as u64 * (k as u64) * 8
+}
+
+/// Actual busiest-link wire bytes per halving round for these payloads:
+/// replays the recursive-halving merge (same pairing and
+/// [`merge_truncate`] kernel as the real exchange, so merged sizes are
+/// exact) and records, for each of the ⌈log₂P⌉ rounds, the largest
+/// payload any sender ships in that round. Entry-wise ≤ `8k`, summing
+/// to at most [`gtopk_tree_wire_bytes`]`(p, k)` — strictly less
+/// whenever any merged payload carries `nnz < k`.
+pub fn gtopk_tree_round_bytes(inputs: &[SparseVec], k: usize) -> Vec<u64> {
+    let p = inputs.len();
+    let rounds = gtopk_tree_rounds(p);
+    let mut holders: Vec<Option<SparseVec>> = inputs.iter().cloned().map(Some).collect();
+    let mut per_round = Vec::with_capacity(rounds);
+    for r in 0..rounds {
+        let stride = 1usize << r;
+        let mut busiest = 0u64;
+        // Senders this round: ranks w with w mod 2^(r+1) == 2^r.
+        let mut w = stride;
+        while w < p {
+            let theirs = holders[w].take().expect("sender already left the tree");
+            busiest = busiest.max(theirs.wire_bytes());
+            let mine = holders[w - stride].take().expect("receiver left the tree early");
+            holders[w - stride] = Some(merge_truncate(&mine, &theirs, k));
+            w += 2 * stride;
+        }
+        per_round.push(busiest);
+    }
+    per_round
 }
 
 /// Serial recursive-halving merge (the oracle): the level-list pairwise
@@ -178,7 +215,7 @@ pub(crate) fn finish_gtopk(
 mod tests {
     use super::*;
     use crate::collectives::{
-        Collectives, PooledCollectives, SerialCollectives, ThreadedCollectives,
+        Collectives, PooledRingCollectives, SerialCollectives, ThreadedCollectives,
     };
     use crate::compress::{Compressor, TopK, Workspace};
     use crate::stats::rng::Pcg64;
@@ -197,6 +234,66 @@ mod tests {
         // 2k values per round = 8k bytes per round.
         assert_eq!(gtopk_tree_wire_bytes(16, 100), 4 * 800);
         assert_eq!(gtopk_tree_wire_bytes(1, 100), 0);
+    }
+
+    /// Satellite regression: the per-round byte profile reports what the
+    /// merge actually ships, not the worst-case k-pair bound.
+    #[test]
+    fn round_bytes_reports_actual_merge_sizes() {
+        // Four workers with 2-nnz payloads on identical index sets and a
+        // generous k: every merged payload keeps nnz = 2, so each round
+        // moves 16 bytes while the bound charges 8k = 80.
+        let workers: Vec<SparseVec> = (0..4)
+            .map(|w| SparseVec::from_pairs(16, vec![(3, 1.0 + w as f32), (9, -2.0)]))
+            .collect();
+        let per_round = gtopk_tree_round_bytes(&workers, 10);
+        assert_eq!(per_round, vec![16, 16]);
+        assert!(per_round.iter().sum::<u64>() < gtopk_tree_wire_bytes(4, 10));
+        // Disjoint index sets: unions grow up-tree until k truncates.
+        let disjoint: Vec<SparseVec> = (0..4)
+            .map(|w| {
+                SparseVec::from_pairs(32, (0..3).map(|i| ((w * 3 + i) as u32, 1.0)).collect())
+            })
+            .collect();
+        let growing = gtopk_tree_round_bytes(&disjoint, 100);
+        // Round 0 ships the 3-nnz leaves, round 1 a 6-nnz union.
+        assert_eq!(growing, vec![24, 48]);
+        // With a truncating k (= the leaf nnz, as the trainer guarantees)
+        // every round is capped at 8k bytes.
+        let capped = gtopk_tree_round_bytes(&disjoint, 3);
+        assert!(capped.iter().all(|&b| b <= 8 * 3), "{capped:?}");
+        // Arity/rounds bookkeeping.
+        assert_eq!(gtopk_tree_round_bytes(&workers[..1], 5), Vec::<u64>::new());
+        assert_eq!(gtopk_tree_round_bytes(&workers[..3], 5).len(), gtopk_tree_rounds(3));
+    }
+
+    /// On k-truncated payloads (the trainer's contract) every round's
+    /// actual bytes sit in (0, 8k], and the profile never exceeds the
+    /// worst-case bound in total.
+    #[test]
+    fn round_bytes_bound_by_worst_case_on_random_payloads() {
+        let d = 128;
+        let mut rng = Pcg64::seed(23);
+        for p in [2usize, 3, 5, 8, 9] {
+            for k in [2usize, 7, 20] {
+                let workers: Vec<SparseVec> = (0..p)
+                    .map(|_| {
+                        let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                        TopK::new().compress_step(&u, k, &mut Workspace::new())
+                    })
+                    .collect();
+                let per_round = gtopk_tree_round_bytes(&workers, k);
+                assert_eq!(per_round.len(), gtopk_tree_rounds(p), "p={p}");
+                for (r, &b) in per_round.iter().enumerate() {
+                    assert!(b <= 8 * k as u64, "p={p} k={k} round {r}: {b} > 8k");
+                    assert!(b > 0, "p={p} k={k} round {r}: empty payload");
+                }
+                assert!(
+                    per_round.iter().sum::<u64>() <= gtopk_tree_wire_bytes(p, k),
+                    "p={p} k={k}"
+                );
+            }
+        }
     }
 
     /// The tentpole proptest: for every P ∈ {1..9} — deep, unbalanced
@@ -283,10 +380,11 @@ mod tests {
                 })
                 .collect();
             let ring = SerialCollectives.gtopk_allreduce_avg(&workers, k);
+            let pooled = PooledRingCollectives::default();
             for engine in [
                 &SerialCollectives as &dyn Collectives,
                 &ThreadedCollectives,
-                &PooledCollectives,
+                &pooled,
             ] {
                 let tree = engine.gtopk_tree_allreduce_avg(&workers, k);
                 if tree != ring {

@@ -28,10 +28,25 @@
 //! | `k_schedule`          | `"const"`  | per-step density plan: `const` (follow `k_ratio` — bit-identical to the pre-schedule path), `const:K`, `warmup:K0..K,epochs=E` (exponential density decay), or `adaptive:DELTA` (smallest k capturing DELTA of ‖u‖²) — see [`crate::schedule`] |
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 //! | `exchange`            | `"dense-ring"` | sparse-exchange wiring for gTop-k runs: `dense-ring` (merge through the dense ring / allgather schedule) or `tree-sparse` (recursive-halving tree over sparse payloads, 2k values per round in ⌈log₂P⌉ rounds — gTopKAllReduce, Shi et al. 2019); requires `global_topk = true` and a sparse `op`; bit-identical numerics either way |
+//!
+//! ## Topology grammar (netsim / cluster pricing)
+//!
+//! The cost-model side (`scaling_sim --topology`, the table2 bench, and
+//! [`crate::cluster`]'s sweeps) describes the cluster fabric with its own
+//! grammar, parsed by [`crate::netsim::Fabric::parse`]:
+//!
+//! | value        | meaning                                                           |
+//! |--------------|-------------------------------------------------------------------|
+//! | `flat`       | every inter-node flow gets the full nominal link (the default)     |
+//! | `oversub:R`  | core oversubscription R ≥ 1: inter-node bandwidth divided by R     |
+//! | `fat-tree:T` | T-tier fat tree: full bisection bandwidth, per-hop latency × (2T−1) |
+//!
+//! The fabric changes only simulated wire time — training numerics never
+//! see it.
 
 use std::collections::BTreeMap;
 
-use crate::collectives::{Collectives, PooledCollectives, SerialCollectives, ThreadedCollectives};
+use crate::collectives::{Collectives, PooledRingCollectives, SerialCollectives, ThreadedCollectives};
 use crate::compress::OpKind;
 use crate::schedule::KSchedule;
 
@@ -133,13 +148,18 @@ impl Parallelism {
 
     /// Build the matching collectives engine. The thread count does not
     /// parameterize the engine — the scoped ring collectives always use
-    /// one thread per participant and the pooled engine none at all; `n`
-    /// only budgets the trainer's gradient phase.
+    /// one thread per participant and the pooled ring sizes itself by the
+    /// collective rank count; `n` only budgets the trainer's gradient
+    /// phase. Note the pooled engine built *here* is rig-less (it runs
+    /// the serial schedules inline) — the trainer attaches the live ring
+    /// rig via `WorkerPool::collectives()`; this constructor serves
+    /// capability queries (`name()`, `off_coordinator()`) and standalone
+    /// use.
     pub fn engine(&self) -> Box<dyn Collectives> {
         match self {
             Parallelism::Serial => Box::new(SerialCollectives),
             Parallelism::Threads(_) => Box::new(ThreadedCollectives),
-            Parallelism::Pool(_) => Box::new(PooledCollectives),
+            Parallelism::Pool(_) => Box::new(PooledRingCollectives::default()),
         }
     }
 
@@ -170,6 +190,15 @@ pub enum Buckets {
 }
 
 impl Buckets {
+    /// The one checked constructor for `Bytes(n)`: a bucket must hold at
+    /// least one f32. Both [`Buckets::parse`] and `TrainConfig::validate`
+    /// route through here, so the bound cannot drift between the two
+    /// paths (it used to be duplicated in each).
+    pub fn bytes(n: usize) -> anyhow::Result<Buckets> {
+        anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
+        Ok(Buckets::Bytes(n))
+    }
+
     /// Parse a config/CLI value: `none`, `layers`, `bytes:N` (also
     /// `bytes=N`, `bytes(N)` — the same separator forms `parallelism`
     /// accepts).
@@ -192,8 +221,7 @@ impl Buckets {
             let n: usize = digits
                 .parse()
                 .map_err(|_| anyhow::anyhow!("bad buckets '{s}': expected none|layers|bytes:N"))?;
-            anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
-            return Ok(Buckets::Bytes(n));
+            return Buckets::bytes(n);
         }
         anyhow::bail!("bad buckets '{s}': expected none|layers|bytes:N")
     }
@@ -546,7 +574,8 @@ impl TrainConfig {
             anyhow::ensure!(n >= 1, "parallelism threads:N / pool:N needs N >= 1");
         }
         if let Buckets::Bytes(n) = self.buckets {
-            anyhow::ensure!(n >= 4, "buckets bytes:N needs N >= 4 (one f32)");
+            // One checked constructor — the same bound `parse` enforces.
+            Buckets::bytes(n)?;
         }
         if let BucketApportion::Mass { ema_beta } = self.bucket_apportion {
             anyhow::ensure!(

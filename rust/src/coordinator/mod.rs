@@ -30,11 +30,14 @@
 //! |--------------|----------------------------------------|--------------------|-----------------|
 //! | `serial`     | rank-order loop, calling thread        | `serial` (oracle)  | 0               |
 //! | `threads:N`  | N *scoped* threads, re-spawned per step| `threaded` (thread per rank, per call) | N + ring |
-//! | `pool:N`     | N *persistent* threads, channel-fed    | `pooled` (serial schedule, coordinator thread) | **0** |
+//! | `pool:N`     | N *persistent* threads, channel-fed    | `pooled` (persistent ring threads, off-coordinator) | **0** |
 //!
 //! `serial` is the reference; `threads:N` buys compute overlap at a
 //! per-step spawn/join cost (~tens of µs × N, re-paid every step);
-//! `pool:N` keeps the overlap and retires the spawn cost — the
+//! `pool:N` keeps the overlap and retires the spawn cost entirely: the
+//! pool carries one long-lived *ring seat* per collective rank alongside
+//! the compute workers, so dense-ring and tree-sparse rounds also run on
+//! persistent channel-fed threads instead of the coordinator — the
 //! [`pool`] module documents the channel protocol and why the barrier
 //! makes pooled runs bit-identical. Per-worker state ([`WorkerState`])
 //! is owned by exactly one runtime unit per step in every mode, so the

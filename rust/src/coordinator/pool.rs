@@ -45,8 +45,9 @@
 //! **Bit-identity** follows the same argument as the scoped runtime, now
 //! with one fewer moving part: worker functions are pure in per-worker
 //! state, grouping is by contiguous ranks, results re-sort by rank, and
-//! aggregation runs the serial oracle schedule
-//! ([`crate::collectives::PooledCollectives`]). The end-to-end lock is
+//! aggregation runs on the persistent ring rig
+//! ([`crate::collectives::PooledRingCollectives`]), whose schedules are
+//! bit-identical to the serial oracle. The end-to-end lock is
 //! `tests/pool_equivalence.rs` (every operator × both exchange paths ×
 //! every schedule family).
 //!
@@ -70,17 +71,41 @@
 //! spawn cost is exactly what the pool exists to remove; the overlap
 //! with the ring is preserved.)
 //!
+//! ## The persistent ring rig
+//!
+//! `spawn_with_ring` additionally spawns one long-lived **ring
+//! participant** thread per collective rank, wired at spawn time with
+//! persistent per-link `mpsc` channels (ring link w → (w+1) mod P for the
+//! dense reduce-scatter and sparse all-gather, plus one channel per
+//! recursive-halving tree edge for gTop-k). A collective call becomes a
+//! [`PoolJob::Collective`] fan-out: the coordinator ships each rank its
+//! input, the ranks run exactly the
+//! [`crate::collectives::ThreadedCollectives`] schedules over the
+//! persistent links, and the coordinator assembles the tagged
+//! [`RankResult`]s. Steady-state thread spawns per collective: **zero** —
+//! the rig is the threaded ring without the per-call `thread::scope`.
+//! Bit-identity to the serial oracle holds by the same argument as the
+//! threaded engine (fixed per-element fold paths over FIFO links), and
+//! because all ranks consume the same job sequence, each job consumes
+//! exactly the link messages it produced — successive collectives can
+//! never cross-talk. The ring threads are *separate* from the N compute
+//! threads, so a bucketed step can run [`PoolJob::Pipeline`] on thread 0
+//! while the coordinator drives per-bucket collectives through the rig.
+//!
 //! ## Teardown
 //!
-//! Dropping the [`WorkerPool`] closes every job channel; threads observe
-//! the disconnect at their next `recv` and exit, and `Drop` joins them —
-//! mid-epoch teardown (early return, panic unwind, test harness drop) is
-//! deterministic and leak-free. A thread blocked mid-pipeline exits
-//! through the same path: its payload sends start failing the moment the
-//! coordinator's receiving end is gone.
+//! Dropping the [`WorkerPool`] closes every job channel (compute and
+//! ring); threads observe the disconnect at their next `recv` and exit,
+//! and `Drop` joins them — mid-epoch teardown (early return, panic
+//! unwind, test harness drop) is deterministic and leak-free. A thread
+//! blocked mid-pipeline exits through the same path: its payload sends
+//! start failing the moment the coordinator's receiving end is gone. A
+//! ring thread blocked mid-collective unblocks the same way: once its
+//! upstream peer exits, the link disconnect propagates around the ring
+//! and every participant abandons the job and exits.
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::exec::{
@@ -89,7 +114,9 @@ use super::exec::{
 };
 use super::worker::WorkerState;
 use crate::buckets::BucketSpec;
+use crate::collectives::{chunk_bounds, finish_gtopk, merge_truncate, PooledRingCollectives};
 use crate::models::Model;
+use crate::tensor::SparseVec;
 
 /// Which half of the step a [`PoolJob::Compute`] runs.
 #[derive(Clone, Copy)]
@@ -122,8 +149,41 @@ pub(crate) enum PoolJob {
         payload_tx: mpsc::SyncSender<(usize, BucketMsg)>,
         return_rx: mpsc::Receiver<BucketMsg>,
     },
+    /// One rank's share of a pooled collective, served by the persistent
+    /// ring threads (never by the compute threads — see the module docs).
+    /// `seq` tags the reply so an abandoned dispatch can never be
+    /// mistaken for a later collective's result.
+    Collective { seq: u64, job: RankJob },
     /// Liveness probe (tests, dispatch micro-benches).
     Ping,
+}
+
+/// The per-rank body of a pooled collective (the data half of
+/// [`PoolJob::Collective`]).
+pub(crate) enum RankJob {
+    /// Dense ring all-reduce: reduce-scatter + gather over the ring links.
+    Ring { input: Vec<f32> },
+    /// Sparse all-gather: circulate payloads P−1 hops, fold own window.
+    Gather { input: SparseVec },
+    /// gTop-k recursive halving over the persistent tree edges.
+    Halving { input: SparseVec, k: usize },
+}
+
+/// A ring thread's reply to a [`RankJob`].
+pub(crate) enum RankResult {
+    /// The fully-reduced ring chunk this rank ended up owning.
+    Chunk { owner: usize, data: Vec<f32> },
+    /// The dense window `bounds[rank]` of the all-gather union sum.
+    Window { rank: usize, data: Vec<f32> },
+    /// Halving outcome: `Some` on the tree root (rank 0), `None` on every
+    /// rank that shipped its payload up-tree.
+    Merged { payload: Option<SparseVec> },
+}
+
+/// A payload moving over one persistent ring link.
+enum LinkMsg {
+    Dense(Vec<f32>),
+    Sparse(SparseVec),
 }
 
 /// A pool thread's reply.
@@ -151,13 +211,28 @@ pub struct WorkerPool {
     job_txs: Vec<mpsc::Sender<PoolJob>>,
     res_rx: mpsc::Receiver<PoolResult>,
     handles: Vec<JoinHandle<()>>,
+    ring: Option<Arc<RingClient>>,
+    ring_handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn one persistent thread per forked model replica. This is the
+    /// Spawn one persistent thread per forked model replica, with no ring
+    /// rig (collectives fall back to the serial schedules). This is the
     /// run's only thread creation — every subsequent step is channel
     /// traffic.
     pub fn spawn(fork_models: Vec<Box<dyn Model + Send>>) -> WorkerPool {
+        Self::spawn_with_ring(fork_models, 0)
+    }
+
+    /// Spawn the compute threads plus `ring_ranks` persistent
+    /// ring-participant threads wired with per-link channels, so
+    /// [`Self::collectives`] runs a genuinely threaded ring with zero
+    /// per-call spawns. `ring_ranks <= 1` disables the rig (a one-rank
+    /// ring has nothing to exchange; the engine handles P = 1 inline).
+    pub fn spawn_with_ring(
+        fork_models: Vec<Box<dyn Model + Send>>,
+        ring_ranks: usize,
+    ) -> WorkerPool {
         let (res_tx, res_rx) = mpsc::channel::<PoolResult>();
         let mut job_txs = Vec::with_capacity(fork_models.len());
         let mut handles = Vec::with_capacity(fork_models.len());
@@ -171,16 +246,42 @@ impl WorkerPool {
             job_txs.push(job_tx);
             handles.push(handle);
         }
+        let (ring, ring_handles) = if ring_ranks > 1 {
+            let (client, ring_handles) = spawn_ring(ring_ranks);
+            (Some(Arc::new(client)), ring_handles)
+        } else {
+            (None, Vec::new())
+        };
         WorkerPool {
             job_txs,
             res_rx,
             handles,
+            ring,
+            ring_handles,
         }
     }
 
-    /// Number of pool threads.
+    /// Number of pool compute threads (the ring participants are extra
+    /// and sized by the collective rank count, not this budget).
     pub fn threads(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Ranks of the persistent ring rig (0 when the pool was spawned
+    /// without one).
+    pub fn ring_ranks(&self) -> usize {
+        self.ring.as_ref().map_or(0, |r| r.ranks())
+    }
+
+    /// The pool-backed collectives engine: every collective executes on
+    /// the persistent ring threads (zero per-call spawns), bit-identical
+    /// to the serial oracle. Without a rig (or for P = 1 / mismatched
+    /// rank counts) the engine runs the serial schedules inline.
+    pub fn collectives(&self) -> PooledRingCollectives {
+        match &self.ring {
+            Some(client) => PooledRingCollectives::with_rig(Arc::clone(client)),
+            None => PooledRingCollectives::default(),
+        }
     }
 
     /// Round-trip a no-op job through every thread; returns the number of
@@ -233,8 +334,14 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         // Closing the job channels is the shutdown signal; join makes
         // teardown deterministic (no detached threads outliving the run).
+        // The ring client's senders are cleared explicitly because the
+        // engine may still hold an `Arc` to the client — a live Arc must
+        // not keep the ring threads waiting for jobs forever.
         self.job_txs.clear();
-        for h in self.handles.drain(..) {
+        if let Some(ring) = &self.ring {
+            ring.shutdown();
+        }
+        for h in self.handles.drain(..).chain(self.ring_handles.drain(..)) {
             let _ = h.join();
         }
     }
@@ -289,6 +396,9 @@ fn pool_thread_main(
                 payload_tx,
                 return_rx,
             } => run_pipeline(states, &specs, &ks, is_dense, bank, payload_tx, return_rx),
+            PoolJob::Collective { .. } => {
+                unreachable!("collective jobs are served by the ring threads, not compute threads")
+            }
             PoolJob::Ping => PoolResult::Pong,
         };
         if res_tx.send(result).is_err() {
@@ -335,6 +445,331 @@ fn run_pipeline(
     PoolResult::Pipeline { states, bank }
 }
 
+/// The channels one ring participant holds for its whole lifetime: the
+/// ring link to its successor, the link from its predecessor, and the
+/// recursive-halving tree edges (one channel per edge, wired at spawn).
+struct RingSeat {
+    rank: usize,
+    ranks: usize,
+    link_tx: mpsc::Sender<LinkMsg>,
+    link_rx: mpsc::Receiver<LinkMsg>,
+    /// `Some` on every rank > 0: the one up-tree edge this rank sends its
+    /// halving payload over (to rank − 2^tz(rank)).
+    tree_parent_tx: Option<mpsc::Sender<SparseVec>>,
+    /// Down-tree edges in fold (round) order: rank + 2^r for each round r
+    /// this rank receives in.
+    tree_child_rxs: Vec<mpsc::Receiver<SparseVec>>,
+}
+
+/// Handle to the persistent ring rig: the coordinator-side dispatcher the
+/// [`PooledRingCollectives`] engine drives. One collective at a time (the
+/// inner mutex serialises callers — the trainer's coordinator is the only
+/// client, so the lock is uncontended).
+pub struct RingClient {
+    ranks: usize,
+    inner: Mutex<RingInner>,
+}
+
+struct RingInner {
+    seq: u64,
+    job_txs: Vec<mpsc::Sender<PoolJob>>,
+    res_rx: mpsc::Receiver<(u64, RankResult)>,
+}
+
+impl RingClient {
+    /// Number of ring participants (the collective arity this rig serves).
+    pub(crate) fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Close the rig's job channels so the ring threads exit at their
+    /// next recv — called from `WorkerPool::drop`, which also joins them.
+    fn shutdown(&self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            inner.job_txs.clear();
+        }
+    }
+
+    /// Fan a per-rank job set out and collect all `ranks` tagged replies.
+    /// `None` means the rig is shut down (teardown raced the call) — the
+    /// engine then falls back to the serial schedule, which is
+    /// bit-identical anyway.
+    fn dispatch(&self, jobs: Vec<RankJob>) -> Option<Vec<RankResult>> {
+        debug_assert_eq!(jobs.len(), self.ranks);
+        let mut inner = self.inner.lock().ok()?;
+        if inner.job_txs.len() != self.ranks {
+            return None;
+        }
+        inner.seq += 1;
+        let seq = inner.seq;
+        for (tx, job) in inner.job_txs.iter().zip(jobs) {
+            tx.send(PoolJob::Collective { seq, job }).ok()?;
+        }
+        let mut out = Vec::with_capacity(self.ranks);
+        while out.len() < self.ranks {
+            let (tag, res) = inner.res_rx.recv().ok()?;
+            // Replies from an abandoned earlier dispatch are stale; drop
+            // them instead of corrupting this collective's collection.
+            if tag == seq {
+                out.push(res);
+            }
+        }
+        Some(out)
+    }
+
+    /// Dense ring all-reduce (average) on the rig. Caller guarantees
+    /// `inputs.len() == ranks`, `ranks > 1`, `d > 0`.
+    pub(crate) fn ring_allreduce_avg(&self, inputs: &[Vec<f32>]) -> Option<Vec<f32>> {
+        let p = self.ranks;
+        let d = inputs[0].len();
+        let jobs = inputs
+            .iter()
+            .map(|v| RankJob::Ring { input: v.clone() })
+            .collect();
+        let results = self.dispatch(jobs)?;
+        let bounds = chunk_bounds(d, p);
+        let mut out = vec![0.0f32; d];
+        for res in results {
+            let RankResult::Chunk { owner, data } = res else {
+                return None;
+            };
+            let (lo, hi) = bounds[owner];
+            out[lo..hi].copy_from_slice(&data);
+        }
+        let inv = 1.0 / p as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        Some(out)
+    }
+
+    /// Sparse all-gather (average) on the rig. Same preconditions as
+    /// [`Self::ring_allreduce_avg`].
+    pub(crate) fn sparse_allgather_avg(&self, inputs: &[SparseVec]) -> Option<Vec<f32>> {
+        let p = self.ranks;
+        let d = inputs[0].d;
+        let jobs = inputs
+            .iter()
+            .map(|s| RankJob::Gather { input: s.clone() })
+            .collect();
+        let results = self.dispatch(jobs)?;
+        let bounds = chunk_bounds(d, p);
+        let mut out = vec![0.0f32; d];
+        for res in results {
+            let RankResult::Window { rank, data } = res else {
+                return None;
+            };
+            let (lo, hi) = bounds[rank];
+            out[lo..hi].copy_from_slice(&data);
+        }
+        let inv = 1.0 / p as f32;
+        out.iter_mut().for_each(|v| *v *= inv);
+        Some(out)
+    }
+
+    /// gTop-k recursive halving on the rig (both exchange modes — the
+    /// halving tree is bit-identical to the level-list merge, see
+    /// `collectives::tree`). Caller guarantees arity and `ranks > 1`.
+    pub(crate) fn gtopk_halving_avg(
+        &self,
+        inputs: &[SparseVec],
+        k: usize,
+    ) -> Option<(Vec<f32>, Vec<u32>)> {
+        let p = self.ranks;
+        let d = inputs[0].d;
+        let jobs = inputs
+            .iter()
+            .map(|s| RankJob::Halving {
+                input: s.clone(),
+                k,
+            })
+            .collect();
+        let results = self.dispatch(jobs)?;
+        let mut merged: Option<SparseVec> = None;
+        for res in results {
+            let RankResult::Merged { payload } = res else {
+                return None;
+            };
+            if let Some(m) = payload {
+                debug_assert!(merged.is_none(), "two tree roots in one halving");
+                merged = Some(m);
+            }
+        }
+        Some(finish_gtopk(merged?, d, p, k))
+    }
+}
+
+/// Build the persistent link mesh and spawn one ring thread per rank.
+fn spawn_ring(p: usize) -> (RingClient, Vec<JoinHandle<()>>) {
+    debug_assert!(p > 1);
+    let (res_tx, res_rx) = mpsc::channel::<(u64, RankResult)>();
+    // Ring links: link l carries payloads from rank l to rank (l+1) % p,
+    // so rank w receives on link (w + p − 1) % p — the same wiring as
+    // `collectives::threaded`, made once instead of per call.
+    let mut link_txs: Vec<Option<mpsc::Sender<LinkMsg>>> = Vec::with_capacity(p);
+    let mut link_rxs: Vec<Option<mpsc::Receiver<LinkMsg>>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = mpsc::channel();
+        link_txs.push(Some(tx));
+        link_rxs.push(Some(rx));
+    }
+    // Tree edges: rank w > 0 sends its halving payload exactly once per
+    // collective, at round tz(w), to parent w − 2^tz(w); each edge gets a
+    // dedicated channel so rounds can never be confused.
+    let mut parent_txs: Vec<Option<mpsc::Sender<SparseVec>>> = (0..p).map(|_| None).collect();
+    let mut child_rxs: Vec<Vec<(usize, mpsc::Receiver<SparseVec>)>> =
+        (0..p).map(|_| Vec::new()).collect();
+    for w in 1..p {
+        let round = w.trailing_zeros() as usize;
+        let parent = w - (1 << round);
+        let (tx, rx) = mpsc::channel();
+        parent_txs[w] = Some(tx);
+        child_rxs[parent].push((round, rx));
+    }
+    // Receivers fold their children in round order.
+    for edges in &mut child_rxs {
+        edges.sort_by_key(|(round, _)| *round);
+    }
+
+    let mut job_txs = Vec::with_capacity(p);
+    let mut handles = Vec::with_capacity(p);
+    for w in 0..p {
+        let seat = RingSeat {
+            rank: w,
+            ranks: p,
+            link_tx: link_txs[w].take().expect("link tx taken twice"),
+            link_rx: link_rxs[(w + p - 1) % p].take().expect("link rx taken twice"),
+            tree_parent_tx: parent_txs[w].take(),
+            tree_child_rxs: std::mem::take(&mut child_rxs[w])
+                .into_iter()
+                .map(|(_, rx)| rx)
+                .collect(),
+        };
+        let (job_tx, job_rx) = mpsc::channel::<PoolJob>();
+        let res_tx = res_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("sparkv-ring-{w}"))
+            .spawn(move || ring_thread_main(seat, job_rx, res_tx))
+            .expect("failed to spawn ring participant thread");
+        job_txs.push(job_tx);
+        handles.push(handle);
+    }
+    let client = RingClient {
+        ranks: p,
+        inner: Mutex::new(RingInner {
+            seq: 0,
+            job_txs,
+            res_rx,
+        }),
+    };
+    (client, handles)
+}
+
+/// A ring participant's main loop: serve collectives until the job
+/// channel closes. A link failure mid-collective means teardown is in
+/// progress (peers only exit on shutdown) — abandon the job and exit so
+/// the disconnect cascades around the ring.
+fn ring_thread_main(
+    seat: RingSeat,
+    job_rx: mpsc::Receiver<PoolJob>,
+    res_tx: mpsc::Sender<(u64, RankResult)>,
+) {
+    while let Ok(job) = job_rx.recv() {
+        let PoolJob::Collective { seq, job } = job else {
+            unreachable!("non-collective job routed to a ring thread")
+        };
+        let Some(result) = serve_rank(&seat, job) else {
+            break;
+        };
+        if res_tx.send((seq, result)).is_err() {
+            break;
+        }
+    }
+}
+
+/// One rank's execution of a collective over its persistent links —
+/// exactly the `collectives::threaded` schedules, so the results are
+/// bit-identical to the serial oracle (fixed per-element fold paths over
+/// FIFO channels; see that module's docs for the argument).
+fn serve_rank(seat: &RingSeat, job: RankJob) -> Option<RankResult> {
+    let (w, p) = (seat.rank, seat.ranks);
+    match job {
+        RankJob::Ring { input } => {
+            let d = input.len();
+            let bounds = chunk_bounds(d, p);
+            let mut buf = input;
+            // Reduce-scatter: send chunk (w − s), fold chunk (w − 1 − s);
+            // FIFO link order alone enforces the serial schedule.
+            for step in 0..p - 1 {
+                let (lo, hi) = bounds[(w + p - step) % p];
+                seat.link_tx.send(LinkMsg::Dense(buf[lo..hi].to_vec())).ok()?;
+                let LinkMsg::Dense(inc) = seat.link_rx.recv().ok()? else {
+                    return None;
+                };
+                let (lo, hi) = bounds[(w + p - 1 - step) % p];
+                for (dst, v) in buf[lo..hi].iter_mut().zip(inc) {
+                    *dst += v;
+                }
+            }
+            // Rank w ends the reduce-scatter owning chunk (w + 1) % p.
+            let owner = (w + 1) % p;
+            let (lo, hi) = bounds[owner];
+            Some(RankResult::Chunk {
+                owner,
+                data: buf[lo..hi].to_vec(),
+            })
+        }
+        RankJob::Gather { input } => {
+            let d = input.d;
+            let bounds = chunk_bounds(d, p);
+            // Circulate payloads p − 1 hops (owned copies — the real
+            // system moves 2k numbers per hop), then fold all P
+            // contributions restricted to this rank's window in rank
+            // order, reproducing the serial engine's addition order.
+            let mut by_rank: Vec<Option<SparseVec>> = (0..p).map(|_| None).collect();
+            let mut cur = input;
+            for step in 0..p - 1 {
+                seat.link_tx.send(LinkMsg::Sparse(cur.clone())).ok()?;
+                // The payload sent at step s originated at rank (w − s).
+                by_rank[(w + p - step) % p] = Some(cur);
+                let LinkMsg::Sparse(inc) = seat.link_rx.recv().ok()? else {
+                    return None;
+                };
+                cur = inc;
+            }
+            // The final hop delivered rank (w + 1) % p's payload.
+            by_rank[(w + 1) % p] = Some(cur);
+            let (lo, hi) = bounds[w];
+            let mut acc = vec![0.0f32; hi - lo];
+            for sv in by_rank.iter().flatten() {
+                let a = sv.indices.partition_point(|&i| (i as usize) < lo);
+                let b = sv.indices.partition_point(|&i| (i as usize) < hi);
+                for t in a..b {
+                    acc[sv.indices[t] as usize - lo] += sv.values[t];
+                }
+            }
+            Some(RankResult::Window { rank: w, data: acc })
+        }
+        RankJob::Halving { input, k } => {
+            // Fold children in round order (lower rank is always the left
+            // merge argument), then ship up-tree — the recursive-halving
+            // schedule of `collectives::tree`, over persistent edges.
+            let mut mine = input;
+            for rx in &seat.tree_child_rxs {
+                let theirs = rx.recv().ok()?;
+                mine = merge_truncate(&mine, &theirs, k);
+            }
+            match &seat.tree_parent_tx {
+                Some(tx) => {
+                    tx.send(mine).ok()?;
+                    Some(RankResult::Merged { payload: None })
+                }
+                None => Some(RankResult::Merged {
+                    payload: Some(mine),
+                }),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,5 +807,76 @@ mod tests {
     fn drop_immediately_after_spawn() {
         let pool = tiny_pool(2);
         drop(pool);
+    }
+
+    #[test]
+    fn ring_rig_matches_serial_oracle() {
+        use crate::collectives::{Collectives, SerialCollectives};
+        let pool = WorkerPool::spawn_with_ring(Vec::new(), 3);
+        assert_eq!(pool.ring_ranks(), 3);
+        let engine = pool.collectives();
+        let inputs = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![-1.0, -2.0, -3.0, -4.0, -5.0],
+        ];
+        assert_eq!(
+            engine.ring_allreduce_avg(&inputs),
+            SerialCollectives.ring_allreduce_avg(&inputs)
+        );
+        let sparse = vec![
+            SparseVec::from_pairs(6, vec![(0, 3.0), (2, 1.0)]),
+            SparseVec::from_pairs(6, vec![(2, 1.5), (5, -4.0)]),
+            SparseVec::from_pairs(6, vec![(1, 0.5), (5, 1.0)]),
+        ];
+        assert_eq!(
+            engine.sparse_allgather_avg(&sparse),
+            SerialCollectives.sparse_allgather_avg(&sparse)
+        );
+        assert_eq!(
+            engine.gtopk_allreduce_avg(&sparse, 2),
+            SerialCollectives.gtopk_allreduce_avg(&sparse, 2)
+        );
+        assert_eq!(
+            engine.gtopk_tree_allreduce_avg(&sparse, 2),
+            SerialCollectives.gtopk_tree_allreduce_avg(&sparse, 2)
+        );
+    }
+
+    #[test]
+    fn ring_rig_survives_engine_outliving_the_pool() {
+        use crate::collectives::{Collectives, SerialCollectives};
+        let pool = WorkerPool::spawn_with_ring(Vec::new(), 4);
+        let engine = pool.collectives();
+        let inputs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0], vec![-1.0, -2.0]];
+        let want = SerialCollectives.ring_allreduce_avg(&inputs);
+        assert_eq!(engine.ring_allreduce_avg(&inputs), want);
+        // Drop the pool while the engine still holds the rig Arc: the
+        // explicit shutdown must close the rig (no join hang), and later
+        // calls fall back to the serial schedule — same numbers.
+        drop(pool);
+        assert_eq!(engine.ring_allreduce_avg(&inputs), want);
+    }
+
+    #[test]
+    fn ring_rig_teardown_with_collective_in_flight() {
+        // Drive collectives from a second thread while the main thread
+        // drops the pool: whichever order the race resolves, nothing may
+        // hang, and every completed call must equal the serial oracle.
+        use crate::collectives::{Collectives, SerialCollectives};
+        let pool = WorkerPool::spawn_with_ring(Vec::new(), 4);
+        let engine = pool.collectives();
+        let inputs: Vec<Vec<f32>> =
+            (0..4).map(|w| (0..97).map(|i| (w * 97 + i) as f32).collect()).collect();
+        let want = SerialCollectives.ring_allreduce_avg(&inputs);
+        let driver = std::thread::spawn(move || {
+            for _ in 0..64 {
+                assert_eq!(engine.ring_allreduce_avg(&inputs), want);
+            }
+        });
+        // Let a few collectives land, then tear down mid-stream.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        drop(pool);
+        driver.join().expect("driver thread panicked");
     }
 }

@@ -216,7 +216,10 @@ impl<'a> Trainer<'a> {
             }
             Parallelism::Pool(_) => {
                 let n = self.cfg.parallelism.threads().min(p).max(1);
-                Executor::Pool(WorkerPool::spawn(self.fork_models(n)?))
+                // Compute threads are capped by the pool size; the ring
+                // rig always carries one seat per collective rank so the
+                // exchange runs off-coordinator at full arity.
+                Executor::Pool(WorkerPool::spawn_with_ring(self.fork_models(n)?, p))
             }
         })
     }
@@ -321,7 +324,13 @@ impl<'a> Trainer<'a> {
         let mut executor = self.build_executor(p)?;
         let mut params = executor.wrap_params(self.model.init(self.cfg.seed));
 
-        let engine: Box<dyn Collectives> = self.cfg.parallelism.engine();
+        let engine: Box<dyn Collectives> = match &executor {
+            // A pooled run exchanges on the pool's persistent ring rig
+            // (zero per-call spawns); everything else uses the config's
+            // stateless engine.
+            Executor::Pool(pool) => Box::new(pool.collectives()),
+            _ => self.cfg.parallelism.engine(),
+        };
         let mut scheduler = self.build_scheduler(d);
         let is_dense = self.cfg.op == OpKind::Dense;
         let wants_feedback = !is_dense && scheduler.wants_feedback();
@@ -522,7 +531,12 @@ impl<'a> Trainer<'a> {
         let mut executor = self.build_executor(p)?;
         let mut params = executor.wrap_params(self.model.init(self.cfg.seed));
 
-        let engine: Box<dyn Collectives> = self.cfg.parallelism.engine();
+        let engine: Box<dyn Collectives> = match &executor {
+            // Same rig-backed engine as the monolithic path: bucketed
+            // collectives land on the pool's persistent ring threads.
+            Executor::Pool(pool) => Box::new(pool.collectives()),
+            _ => self.cfg.parallelism.engine(),
+        };
         let threaded = self.cfg.parallelism.is_threaded();
         let nthreads = self.cfg.parallelism.threads().min(p).max(1);
         let workers_per_thread = p.div_ceil(nthreads);
@@ -663,7 +677,12 @@ impl<'a> Trainer<'a> {
             // fall back to the size split inside `apportion_k_by_mass`.
             let ks_t: Vec<usize> = if mass_mode {
                 let masses: &[f64] = if ema_beta > 0.0 {
-                    crate::buckets::ema_masses(&mut smoothed_mass, &bucket_mass, ema_beta);
+                    crate::buckets::ema_masses(
+                        &mut smoothed_mass,
+                        &bucket_mass,
+                        schedule.sizes(),
+                        ema_beta,
+                    );
                     &smoothed_mass
                 } else {
                     &bucket_mass

@@ -73,6 +73,117 @@ pub fn gtopk_tree_time(topo: &Topology, bytes_per_round: u64) -> f64 {
     rounds as f64 * (link.latency_s + bytes_per_round as f64 / link.effective_bandwidth())
 }
 
+/// gTop-k tree exchange priced per round from **measured** payloads —
+/// `round_bytes[r]` is the busiest merged payload of reduction round `r`
+/// ([`crate::collectives::gtopk_tree_round_bytes`]), and each reduction
+/// round is paired with a same-size broadcast round on the way back down:
+/// `T = Σ_r 2·(α + b_r / B_eff)`.
+///
+/// With every `round_bytes[r]` pinned at the worst-case `8k` this sums to
+/// exactly what [`gtopk_tree_time`] charges (same per-round term, same
+/// `2·⌈log₂P⌉` round count when `round_bytes.len()` comes from
+/// `gtopk_tree_rounds(P)`); with real early-round payloads carrying
+/// `nnz < k` pairs it is strictly cheaper — the reconciliation the PR-7
+/// wire-accounting fix is about.
+pub fn gtopk_tree_time_rounds(topo: &Topology, round_bytes: &[u64]) -> f64 {
+    let p = topo.world_size();
+    if p <= 1 || round_bytes.is_empty() {
+        return 0.0;
+    }
+    let link = topo.ring_bottleneck();
+    round_bytes
+        .iter()
+        .map(|&b| 2.0 * (link.latency_s + b as f64 / link.effective_bandwidth()))
+        .sum()
+}
+
+/// Ceiling log₂ round count for `n` participants (0 for n ≤ 1).
+fn ceil_log2(n: usize) -> u64 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u64
+    }
+}
+
+/// Hierarchical dense all-reduce of `bytes`: an intra-node ring over the
+/// G GPUs of each node (PCIe, all nodes in parallel), then an inter-node
+/// ring over the N node leaders (fabric-degraded NIC), then the
+/// intra-node broadcast folded into the ring constant —
+/// `T = 2(G−1)·(α_i + (m/G)/B_i) + 2(N−1)·(α_x + (m/N)/B_x)`.
+///
+/// This is the NCCL-style two-level schedule: the inter-node stage moves
+/// m/N-byte chunks over N−1 hops instead of m/P over P−1, so at large P
+/// the slow NIC sees log-free but G-times-fewer latency terms than the
+/// flat ring. Degenerate shapes collapse exactly: N = 1 → the intra term
+/// alone (== [`allreduce_time`] on a single-node topo), G = 1 → the
+/// inter term alone.
+pub fn hierarchical_allreduce_time(topo: &Topology, bytes: u64) -> f64 {
+    if topo.world_size() <= 1 {
+        return 0.0;
+    }
+    let g = topo.gpus_per_node;
+    let n = topo.nodes;
+    let mut t = 0.0;
+    if g > 1 {
+        let intra = topo.intra;
+        let chunk = bytes as f64 / g as f64;
+        t += (2 * (g - 1)) as f64 * (intra.latency_s + chunk / intra.effective_bandwidth());
+    }
+    if n > 1 {
+        let inter = topo.inter_effective();
+        let chunk = bytes as f64 / n as f64;
+        t += (2 * (n - 1)) as f64 * (inter.latency_s + chunk / inter.effective_bandwidth());
+    }
+    t
+}
+
+/// Hierarchical sparse all-gather where every worker contributes `bytes`:
+/// gather the G node-local payloads over PCIe (`(G−1)·(α_i + m/B_i)`),
+/// then circulate the concatenated G·m-byte node payloads over the
+/// N-leader ring (`(N−1)·(α_x + G·m/B_x)`). The wire total matches the
+/// flat all-gather — every worker still receives all P payloads — but
+/// P−G of the P−1 slow-link hops move to PCIe.
+pub fn hierarchical_allgather_time(topo: &Topology, bytes_per_worker: u64) -> f64 {
+    if topo.world_size() <= 1 {
+        return 0.0;
+    }
+    let g = topo.gpus_per_node;
+    let n = topo.nodes;
+    let mut t = 0.0;
+    if g > 1 {
+        let intra = topo.intra;
+        t += (g - 1) as f64
+            * (intra.latency_s + bytes_per_worker as f64 / intra.effective_bandwidth());
+    }
+    if n > 1 {
+        let inter = topo.inter_effective();
+        let node_payload = (g as u64 * bytes_per_worker) as f64;
+        t += (n - 1) as f64 * (inter.latency_s + node_payload / inter.effective_bandwidth());
+    }
+    t
+}
+
+/// Hierarchical gTop-k tree: recursive halving among each node's G GPUs
+/// over PCIe (⌈log₂G⌉ reduction + ⌈log₂G⌉ broadcast rounds, nodes in
+/// parallel), then among the N node leaders over the fabric
+/// (`2⌈log₂N⌉` rounds). The payload stays the fixed 8k-byte truncated
+/// merge every round, so only the round placement changes — the slow
+/// link carries ⌈log₂N⌉ instead of ⌈log₂P⌉ reduction rounds.
+pub fn hierarchical_gtopk_tree_time(topo: &Topology, bytes_per_round: u64) -> f64 {
+    if topo.world_size() <= 1 {
+        return 0.0;
+    }
+    let intra = topo.intra;
+    let inter = topo.inter_effective();
+    let intra_rounds = 2 * ceil_log2(topo.gpus_per_node);
+    let inter_rounds = 2 * ceil_log2(topo.nodes);
+    intra_rounds as f64
+        * (intra.latency_s + bytes_per_round as f64 / intra.effective_bandwidth())
+        + inter_rounds as f64
+            * (inter.latency_s + bytes_per_round as f64 / inter.effective_bandwidth())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +291,97 @@ mod tests {
             gtopk_tree_time(&big, payload) < allgather_time_uniform(&big, payload),
             "tree should win at P=16"
         );
+    }
+
+    #[test]
+    fn tree_rounds_reconcile_with_the_bound() {
+        // Uniform worst-case per-round payloads reproduce the closed-form
+        // bound exactly; any round carrying fewer bytes is strictly
+        // cheaper. (Relative tolerance, not bit-exact: the closed form
+        // multiplies where the per-round pricing sums.)
+        use crate::collectives::gtopk_tree_rounds;
+        let topo = Topology::paper_16gpu();
+        let k_bytes = 25_557u64 * 8;
+        let rounds = gtopk_tree_rounds(topo.world_size());
+        assert_eq!(rounds, 4);
+        let uniform = vec![k_bytes; rounds];
+        let summed = gtopk_tree_time_rounds(&topo, &uniform);
+        let closed = gtopk_tree_time(&topo, k_bytes);
+        assert!((summed - closed).abs() <= 1e-12 * closed, "{summed} vs {closed}");
+        // Early rounds below the k cap (the real merge shape) cost less.
+        let actual = vec![k_bytes / 3, k_bytes / 2, k_bytes, k_bytes];
+        assert!(gtopk_tree_time_rounds(&topo, &actual) < closed);
+        // Degenerate shapes are free.
+        assert_eq!(gtopk_tree_time_rounds(&Topology::single_gpu(), &uniform), 0.0);
+        assert_eq!(gtopk_tree_time_rounds(&topo, &[]), 0.0);
+    }
+
+    #[test]
+    fn hierarchical_collapses_to_flat_on_one_node() {
+        // N = 1: the hierarchical schedule *is* the intra-node ring.
+        let single_node = Topology::new(1, 8, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        let bytes = 25_557_032u64 * 4;
+        assert_eq!(
+            hierarchical_allreduce_time(&single_node, bytes),
+            allreduce_time(&single_node, bytes)
+        );
+        assert_eq!(
+            hierarchical_allgather_time(&single_node, 25_557 * 8),
+            allgather_time_uniform(&single_node, 25_557 * 8)
+        );
+        assert_eq!(
+            hierarchical_gtopk_tree_time(&single_node, 25_557 * 8),
+            gtopk_tree_time(&single_node, 25_557 * 8)
+        );
+        // P = 1 is free everywhere.
+        let solo = Topology::single_gpu();
+        assert_eq!(hierarchical_allreduce_time(&solo, bytes), 0.0);
+        assert_eq!(hierarchical_allgather_time(&solo, bytes), 0.0);
+        assert_eq!(hierarchical_gtopk_tree_time(&solo, bytes), 0.0);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_on_multi_node() {
+        // 4 × 4 over 10 GbE: moving 12 of the 15 ring hops onto PCIe and
+        // shrinking the slow-link chunk from m/16 to m/4... the flat ring
+        // moves m/P per hop over 2(P−1) hops = 2m(P−1)/P total on the NIC;
+        // hierarchical moves 2m(N−1)/N. Bandwidth-dominated payloads win
+        // on latency count; latency-dominated ones win on hop count.
+        let topo = Topology::paper_16gpu();
+        let bytes = 25_557_032u64 * 4;
+        assert!(hierarchical_allreduce_time(&topo, bytes) < allreduce_time(&topo, bytes));
+        assert!(
+            hierarchical_gtopk_tree_time(&topo, 25_557 * 8)
+                < gtopk_tree_time(&topo, 25_557 * 8)
+        );
+        // The thousand-worker regime the PR-7 sweeps price: 256 × 4.
+        let big = Topology::new(256, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        assert!(hierarchical_allreduce_time(&big, bytes) < allreduce_time(&big, bytes));
+        assert!(
+            hierarchical_allgather_time(&big, 25_557 * 8)
+                < allgather_time_uniform(&big, 25_557 * 8)
+        );
+    }
+
+    #[test]
+    fn degraded_fabrics_raise_inter_node_cost() {
+        use crate::netsim::topology::Fabric;
+        let flat = Topology::paper_16gpu();
+        let bytes = 25_557_032u64 * 4;
+        let over = Topology::paper_16gpu().with_fabric(Fabric::Oversubscribed(4.0));
+        assert!(allreduce_time(&over, bytes) > allreduce_time(&flat, bytes));
+        assert!(
+            hierarchical_allreduce_time(&over, bytes) > hierarchical_allreduce_time(&flat, bytes)
+        );
+        let ft = Topology::paper_16gpu().with_fabric(Fabric::FatTree { tiers: 3 });
+        // Fat tree keeps bandwidth: the bandwidth-dominated dense payload
+        // barely moves, the latency-dominated sparse tree pays 5× α.
+        assert!(gtopk_tree_time(&ft, 2_000) > gtopk_tree_time(&flat, 2_000));
+        // Single-node topologies never touch the fabric.
+        let single = Topology::new(1, 8, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g())
+            .with_fabric(Fabric::Oversubscribed(8.0));
+        let nominal = Topology::new(1, 8, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        assert_eq!(allreduce_time(&single, bytes), allreduce_time(&nominal, bytes));
     }
 
     #[test]

@@ -3,12 +3,19 @@
 //!
 //! Three pieces:
 //! * [`link`] / [`topology`] — α–β link models and the hierarchical
-//!   (intra-node PCIe / inter-node Ethernet) cluster shape.
+//!   (intra-node PCIe / inter-node Ethernet) cluster shape, with a
+//!   [`Fabric`] model (`flat` / `oversub:R` / `fat-tree:T`) for how the
+//!   core network degrades the NIC once traffic leaves the node.
 //! * [`cost`] — analytic collective cost models (ring all-reduce, ring
 //!   all-gather, and the gTop-k recursive-halving tree
 //!   [`gtopk_tree_time`] behind `exchange = tree-sparse`) over a
 //!   topology, validated against the paper's measured communication
-//!   times.
+//!   times; hierarchical two-level (intra-node-reduce → inter-node-ring)
+//!   schedules ([`hierarchical_allreduce_time`] and friends) price the
+//!   thousand-worker clusters the flat ring can't reach, and
+//!   [`gtopk_tree_time_rounds`] prices the tree from measured per-round
+//!   payloads ([`crate::collectives::gtopk_tree_round_bytes`]) instead of
+//!   the worst-case `8k` bound.
 //! * [`ops_cost`] — per-operator GPU selection-time models calibrated to
 //!   the paper's V100 measurements, and the per-model compute-time table.
 //! * [`sim`] — a discrete-event engine that replays a synchronous training
@@ -39,11 +46,14 @@ pub mod ops_cost;
 pub mod sim;
 pub mod topology;
 
-pub use cost::{allgather_time, allreduce_time, gtopk_tree_time};
+pub use cost::{
+    allgather_time, allreduce_time, gtopk_tree_time, gtopk_tree_time_rounds,
+    hierarchical_allgather_time, hierarchical_allreduce_time, hierarchical_gtopk_tree_time,
+};
 pub use link::LinkSpec;
 pub use ops_cost::{ComputeProfile, OpCostModel};
 pub use sim::{
     runtime_overhead_s, runtime_overhead_with, IterationBreakdown, SimConfig, Simulator,
     POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S,
 };
-pub use topology::Topology;
+pub use topology::{Fabric, Topology};

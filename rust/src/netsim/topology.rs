@@ -1,8 +1,85 @@
 //! Cluster topology: N nodes × G GPUs with an intra-node link (PCIe) and
 //! an inter-node link (Ethernet). Worker w lives on node w / G. This is
 //! the paper's testbed shape (4 nodes × 4 V100s, 10 GbE).
+//!
+//! The inter-node fabric is modelled separately from the NIC
+//! ([`Fabric`]): the paper's 16-GPU testbed is one switch (`flat`), but
+//! pricing thousand-worker clusters needs the two ways real datacenter
+//! networks degrade the nominal link — **core oversubscription**
+//! (`oversub:R` divides the per-flow inter-node bandwidth by R when all
+//! nodes burst, the classic 3:1 / 4:1 ToR uplink ratio) and **multi-tier
+//! fat trees** (`fat-tree:T` keeps full bisection bandwidth but pays the
+//! `2T − 1` switch hops of a T-tier Clos network in latency). Both only
+//! reshape the *inter-node* link; intra-node PCIe is unaffected, and
+//! `flat` is bit-identical to the pre-fabric model.
 
 use super::link::LinkSpec;
+
+/// Inter-node fabric model: how the core network degrades the nominal
+/// NIC-to-NIC link once traffic leaves the node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fabric {
+    /// Non-blocking single-switch fabric: every flow gets the nominal
+    /// link. The default, and bit-identical to the pre-fabric model.
+    Flat,
+    /// Core oversubscription ratio R ≥ 1 (e.g. 4.0 for a 4:1 ToR uplink):
+    /// the all-node collective burst shares the core, so per-flow
+    /// inter-node bandwidth is divided by R. Latency is unchanged.
+    Oversubscribed(f64),
+    /// T-tier fat tree (T ≥ 1): full bisection bandwidth (rearrangeably
+    /// non-blocking Clos), but a node-to-node path crosses `2T − 1`
+    /// switches, multiplying the per-hop latency. `fat-tree:1` == `flat`.
+    FatTree { tiers: usize },
+}
+
+impl Fabric {
+    /// Parse the config-grammar form: `flat` | `oversub:R` | `fat-tree:T`.
+    pub fn parse(s: &str) -> anyhow::Result<Fabric> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("flat") {
+            return Ok(Fabric::Flat);
+        }
+        if let Some(r) = s.strip_prefix("oversub:") {
+            let r: f64 = r.parse().map_err(|_| {
+                anyhow::anyhow!("bad oversubscription ratio in `{s}` (want oversub:R, R ≥ 1)")
+            })?;
+            anyhow::ensure!(r.is_finite() && r >= 1.0, "oversub ratio must be ≥ 1, got {r}");
+            return Ok(Fabric::Oversubscribed(r));
+        }
+        if let Some(t) = s.strip_prefix("fat-tree:") {
+            let tiers: usize = t.parse().map_err(|_| {
+                anyhow::anyhow!("bad tier count in `{s}` (want fat-tree:T, T ≥ 1)")
+            })?;
+            anyhow::ensure!(tiers >= 1, "fat-tree needs at least one tier");
+            return Ok(Fabric::FatTree { tiers });
+        }
+        anyhow::bail!("unknown topology fabric `{s}` (expected flat | oversub:R | fat-tree:T)")
+    }
+
+    /// Canonical grammar name (round-trips through [`Fabric::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Fabric::Flat => "flat".to_string(),
+            Fabric::Oversubscribed(r) => format!("oversub:{r}"),
+            Fabric::FatTree { tiers } => format!("fat-tree:{tiers}"),
+        }
+    }
+
+    /// Apply the fabric degradation to a nominal inter-node link.
+    fn apply(&self, link: LinkSpec) -> LinkSpec {
+        match *self {
+            Fabric::Flat => link,
+            Fabric::Oversubscribed(r) => LinkSpec {
+                bandwidth_bps: link.bandwidth_bps / r.max(1.0),
+                ..link
+            },
+            Fabric::FatTree { tiers } => LinkSpec {
+                latency_s: link.latency_s * (2 * tiers - 1) as f64,
+                ..link
+            },
+        }
+    }
+}
 
 /// Hierarchical cluster topology.
 #[derive(Debug, Clone)]
@@ -11,6 +88,9 @@ pub struct Topology {
     pub gpus_per_node: usize,
     pub intra: LinkSpec,
     pub inter: LinkSpec,
+    /// Inter-node fabric model ([`Fabric::Flat`] unless overridden with
+    /// [`Topology::with_fabric`]).
+    pub fabric: Fabric,
 }
 
 impl Topology {
@@ -21,7 +101,14 @@ impl Topology {
             gpus_per_node,
             intra,
             inter,
+            fabric: Fabric::Flat,
         }
+    }
+
+    /// Same cluster over a different core fabric (builder style).
+    pub fn with_fabric(mut self, fabric: Fabric) -> Topology {
+        self.fabric = fabric;
+        self
     }
 
     /// The paper's testbed: 4 nodes × 4 GPUs over 10 GbE.
@@ -44,13 +131,21 @@ impl Topology {
         w / self.gpus_per_node
     }
 
+    /// The inter-node link *as the fabric delivers it*: the nominal NIC
+    /// spec degraded by oversubscription or fat-tree hop latency. `Flat`
+    /// returns the nominal link unchanged.
+    pub fn inter_effective(&self) -> LinkSpec {
+        self.fabric.apply(self.inter)
+    }
+
     /// The slowest link a flat ring over all P workers must traverse.
     /// With multiple nodes, consecutive ring neighbours cross the
     /// inter-node link once per node boundary, so the per-step bottleneck
-    /// is the inter-node link; single-node rings bottleneck on PCIe.
+    /// is the (fabric-degraded) inter-node link; single-node rings
+    /// bottleneck on PCIe.
     pub fn ring_bottleneck(&self) -> LinkSpec {
         if self.nodes > 1 {
-            self.inter
+            self.inter_effective()
         } else {
             self.intra
         }
@@ -82,6 +177,49 @@ mod tests {
         let multi = Topology::paper_16gpu();
         assert_eq!(multi.ring_bottleneck(), LinkSpec::ethernet_10g());
         let single = Topology::new(1, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+        assert_eq!(single.ring_bottleneck(), LinkSpec::pcie3_x16());
+    }
+
+    #[test]
+    fn fabric_parse_round_trips() {
+        for (s, want) in [
+            ("flat", Fabric::Flat),
+            ("oversub:4", Fabric::Oversubscribed(4.0)),
+            ("oversub:1.5", Fabric::Oversubscribed(1.5)),
+            ("fat-tree:3", Fabric::FatTree { tiers: 3 }),
+        ] {
+            let f = Fabric::parse(s).unwrap();
+            assert_eq!(f, want, "{s}");
+            assert_eq!(Fabric::parse(&f.name()).unwrap(), f, "round-trip {s}");
+        }
+        assert!(Fabric::parse("oversub:0.5").is_err(), "ratio < 1");
+        assert!(Fabric::parse("fat-tree:0").is_err(), "no tiers");
+        assert!(Fabric::parse("torus").is_err(), "unknown fabric");
+    }
+
+    #[test]
+    fn fabric_degrades_only_the_inter_link() {
+        let nominal = Topology::paper_16gpu();
+        let flat = nominal.inter_effective();
+        assert_eq!(flat, LinkSpec::ethernet_10g(), "flat is the nominal NIC");
+
+        let over = Topology::paper_16gpu().with_fabric(Fabric::Oversubscribed(4.0));
+        let eff = over.inter_effective();
+        assert_eq!(eff.latency_s, flat.latency_s, "oversub leaves latency alone");
+        assert!((eff.bandwidth_bps - flat.bandwidth_bps / 4.0).abs() < 1e-6);
+        assert_eq!(over.intra, LinkSpec::pcie3_x16(), "intra-node untouched");
+
+        let tree = Topology::paper_16gpu().with_fabric(Fabric::FatTree { tiers: 3 });
+        let eff = tree.inter_effective();
+        assert_eq!(eff.bandwidth_bps, flat.bandwidth_bps, "fat tree keeps bisection bw");
+        assert!((eff.latency_s - flat.latency_s * 5.0).abs() < 1e-18, "2·3 − 1 hops");
+
+        // One-tier fat tree is exactly flat.
+        let one = Topology::paper_16gpu().with_fabric(Fabric::FatTree { tiers: 1 });
+        assert_eq!(one.inter_effective(), flat);
+        // Single-node clusters never see the fabric.
+        let single = Topology::new(1, 4, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g())
+            .with_fabric(Fabric::Oversubscribed(8.0));
         assert_eq!(single.ring_bottleneck(), LinkSpec::pcie3_x16());
     }
 }

@@ -2,27 +2,37 @@
 //! invariant that `parallelism = pool:N` produces **bit-identical**
 //! training trajectories to `serial` (and therefore to `threads:N`, via
 //! `tests/parallel_equivalence.rs`) — pooling changes wall-clock time and
-//! steady-state spawn/allocation counts, never numerics.
+//! steady-state spawn/allocation counts, never numerics. Since PR 7 the
+//! pool's collectives run on its **persistent ring threads**
+//! (`WorkerPool::spawn_with_ring` + `PooledRingCollectives`), so the
+//! suite also pins the pooled ring against the serial oracle directly.
 //!
-//! Four layers of defence:
-//! 1. end-to-end bit-identity for every operator on both exchange paths
+//! Five layers of defence:
+//! 1. end-to-end bit-identity for every operator on both exchange wire
+//!    schedules (dense-ring and tree-sparse) × both bucket paths
 //!    (monolithic and bucketed), across every schedule family
 //!    (const/warmup/adaptive), with gTop-k and mass apportionment
 //!    included;
-//! 2. the pool teardown contract: dropping the pool joins its threads
-//!    deterministically, including mid-epoch and with replies in flight;
-//! 3. a property test that payload-buffer recycling can never alias two
+//! 2. engine-level bit-identity: the pooled ring rig against the serial
+//!    oracle for every collective at every arity P ∈ 1..=9;
+//! 3. the pool teardown contract: dropping the pool joins its threads —
+//!    compute *and* ring — deterministically, including mid-epoch with a
+//!    bucketed collective pipeline live and with replies in flight;
+//! 4. a property test that payload-buffer recycling can never alias two
 //!    live payloads (the mechanism behind "zero steady-state payload
 //!    allocations" must be capacity-only);
-//! 4. launch-overhead accounting: the `spawn_or_dispatch_us` trace field
+//! 5. launch-overhead accounting: the `spawn_or_dispatch_us` trace field
 //!    is 0 for serial and finite for the dispatching runtimes.
 
+use sparkv::collectives::{Collectives, SerialCollectives};
 use sparkv::compress::{Compressor, OpKind, Workspace};
-use sparkv::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
+use sparkv::config::{BucketApportion, Buckets, Exchange, Parallelism, TrainConfig};
 use sparkv::coordinator::{train, TrainOutput, WorkerPool};
 use sparkv::data::GaussianMixture;
 use sparkv::models::{Model, NativeMlp};
 use sparkv::schedule::KSchedule;
+use sparkv::stats::Pcg64;
+use sparkv::tensor::SparseVec;
 use sparkv::util::testkit::{self, Gen};
 
 fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
@@ -146,6 +156,33 @@ fn pool_matches_serial_gtopk_both_paths() {
     }
 }
 
+/// The tree-sparse wire schedule under the pooled ring: every sparse
+/// operator (tree-sparse requires `global_topk` and a non-dense op), on
+/// both bucket paths, runs its recursive-halving rounds on the pool's
+/// persistent tree edges — and lands bit-identical to the serial level-
+/// list merge.
+#[test]
+fn pool_matches_serial_tree_sparse_every_sparse_op() {
+    let (data, mut model) = setup();
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        for &op in OpKind::all() {
+            if op == OpKind::Dense {
+                continue; // no k-truncated payload to tree-merge
+            }
+            let mk = |parallelism| {
+                let mut c = cfg(op, buckets, parallelism);
+                c.global_topk = true;
+                c.exchange = Exchange::TreeSparse;
+                c
+            };
+            let what = format!("tree-sparse/{}/{}", buckets.name(), op.name());
+            let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+            let pooled = train(mk(Parallelism::Pool(3)), &mut model, &data).unwrap();
+            assert_runs_bit_identical(&serial, &pooled, &what);
+        }
+    }
+}
+
 /// `bucket_apportion = mass`: the mass split is computed on the
 /// coordinator from worker 0's u, so it must resolve identically on
 /// every runtime; TopK sends exactly Σ k_b = k_t per worker, so the wire
@@ -220,7 +257,63 @@ fn mass_ema_smoothing_stays_runtime_equivalent_and_budget_exact() {
 }
 
 // ---------------------------------------------------------------------
-// Layer 2: teardown.
+// Layer 2: the pooled ring engine against the serial oracle, at every
+// arity the trainer can request.
+// ---------------------------------------------------------------------
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every collective of the pooled ring rig — dense ring all-reduce,
+/// sparse all-gather, and both gTop-k entry points (the rig serves both
+/// through the halving tree) — is bit-identical to [`SerialCollectives`]
+/// for P ∈ 1..=9 over random inputs at several dimensions, including
+/// d < P (empty ring chunks) and non-power-of-two tree shapes. P = 1
+/// exercises the rig-less inline path.
+#[test]
+fn pooled_ring_engine_matches_serial_for_all_arities() {
+    let mut rng = Pcg64::seed(42);
+    for p in 1..=9usize {
+        let pool = WorkerPool::spawn_with_ring(Vec::new(), p);
+        let engine = pool.collectives();
+        for &d in &[1usize, 5, 64, 257] {
+            let dense: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+                .collect();
+            assert_eq!(
+                bits(&engine.ring_allreduce_avg(&dense)),
+                bits(&SerialCollectives.ring_allreduce_avg(&dense)),
+                "ring p={p} d={d}"
+            );
+
+            let k = (d / 3).max(1);
+            let mut ws = Workspace::new();
+            let mut op = OpKind::TopK.build(rng.next_u64());
+            let sparse: Vec<SparseVec> =
+                dense.iter().map(|u| op.compress_step(u, k, &mut ws)).collect();
+            assert_eq!(
+                bits(&engine.sparse_allgather_avg(&sparse)),
+                bits(&SerialCollectives.sparse_allgather_avg(&sparse)),
+                "gather p={p} d={d}"
+            );
+
+            let (pd, pi) = engine.gtopk_allreduce_avg(&sparse, k);
+            let (sd, si) = SerialCollectives.gtopk_allreduce_avg(&sparse, k);
+            assert_eq!(pi, si, "gtopk selection p={p} d={d}");
+            assert_eq!(bits(&pd), bits(&sd), "gtopk p={p} d={d}");
+
+            let (pd, pi) = engine.gtopk_tree_allreduce_avg(&sparse, k);
+            let (sd, si) = SerialCollectives.gtopk_tree_allreduce_avg(&sparse, k);
+            assert_eq!(pi, si, "gtopk-tree selection p={p} d={d}");
+            assert_eq!(bits(&pd), bits(&sd), "gtopk-tree p={p} d={d}");
+        }
+        assert_eq!(pool.ring_ranks(), if p > 1 { p } else { 0 });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Layer 3: teardown.
 // ---------------------------------------------------------------------
 
 /// A pooled run that ends mid-epoch (steps % steps_per_epoch != 0) drops
@@ -234,6 +327,28 @@ fn pool_teardown_mid_epoch_and_respawn() {
     let a = train(c.clone(), &mut model, &data).unwrap();
     let b = train(c, &mut model, &data).unwrap();
     assert_eq!(a.final_params, b.final_params);
+}
+
+/// Mid-epoch teardown with the full collective machinery live: a
+/// bucketed tree-sparse `pool:3` run ends at step 7 (steps_per_epoch =
+/// 5), dropping the pool — compute threads, pipeline producer, and ring
+/// rig — while the per-bucket collective schedule is still primed.
+/// Teardown must join everything (a wedge fails via the harness
+/// timeout), a rerun must reproduce the exact bits, and both must match
+/// the serial oracle.
+#[test]
+fn pool_teardown_mid_epoch_with_bucketed_ring_live() {
+    let (data, mut model) = setup();
+    let mut c = cfg(OpKind::TopK, Buckets::Bytes(1024), Parallelism::Pool(3));
+    c.global_topk = true;
+    c.exchange = Exchange::TreeSparse;
+    c.steps = 7;
+    let a = train(c.clone(), &mut model, &data).unwrap();
+    let b = train(c.clone(), &mut model, &data).unwrap();
+    assert_runs_bit_identical(&a, &b, "teardown/bucketed-ring rerun");
+    c.parallelism = Parallelism::Serial;
+    let serial = train(c, &mut model, &data).unwrap();
+    assert_runs_bit_identical(&serial, &a, "teardown/bucketed-ring vs serial");
 }
 
 /// Direct pool teardown through the public API: healthy ping, then drop
@@ -252,7 +367,7 @@ fn pool_drop_joins_with_replies_in_flight() {
 }
 
 // ---------------------------------------------------------------------
-// Layer 3: recycling can never alias live buffers.
+// Layer 4: recycling can never alias live buffers.
 // ---------------------------------------------------------------------
 
 /// Random interleavings of compress / hold-live / recycle against shared
@@ -318,7 +433,7 @@ fn prop_payload_recycling_never_aliases_live_buffers() {
 }
 
 // ---------------------------------------------------------------------
-// Layer 4: launch-overhead accounting.
+// Layer 5: launch-overhead accounting.
 // ---------------------------------------------------------------------
 
 /// `spawn_or_dispatch_us`: exactly 0 for serial, finite and non-negative
