@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
                 k_schedule: sparkv::schedule::KSchedule::Const(None),
                 steps_per_epoch: 100,
                 exchange: sparkv::config::Exchange::DenseRing,
+                select: sparkv::config::Select::Exact,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

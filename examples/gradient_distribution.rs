@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

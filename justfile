@@ -58,6 +58,19 @@ ring-smoke:
     cd rust && cargo run --release --example scaling_sim -- \
         --topology oversub:4 --sweep-hierarchical
 
+# The select-smoke leg of bench-smoke: the warm-threshold selection
+# engine end to end — the warm-vs-exact selection bench in fast mode
+# (writes BENCH_select.json at the repo root with speedups + per-schedule
+# warm-hit rates), then a short *real* `--select warm:0.25` training run
+# on both bucket paths (bit-identical to exact for Top_k by
+# construction; tests/select_equivalence.rs locks it).
+select-smoke:
+    cd rust && SPARKV_BENCH_FAST=1 cargo bench --bench select_speed
+    cd rust && cargo run --release -- train --op topk --select warm:0.25 \
+        --workers 4 --steps 6
+    cd rust && cargo run --release -- train --op gaussiank --select warm:0.25 \
+        --workers 4 --steps 6 --buckets bytes:1024
+
 # The tune-smoke CI job, locally: the closed-loop autotuner end to end on
 # a tiny grid (2 candidates, 3 measured calibration probe steps, 3
 # virtual steps/epoch), then a real training replay of the plan it wrote

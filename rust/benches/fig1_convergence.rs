@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
             k_schedule: sparkv::schedule::KSchedule::Const(None),
             steps_per_epoch: 100,
             exchange: sparkv::config::Exchange::DenseRing,
+            select: sparkv::config::Select::Exact,
         };
         let out = train(cfg, &mut model, &data)?;
         let series = out.metrics.smoothed_loss((steps / 10).max(1));

@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

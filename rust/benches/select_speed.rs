@@ -1,0 +1,137 @@
+//! Selection-speed bench for the warm-threshold engine: `select =
+//! warm:TAU` vs `select = exact` on training-sized gradients.
+//!
+//! Two sections:
+//!
+//! 1. Steady-state wall-time — exact `compress_step` vs the warm
+//!    selector's fused single-pass scan on warm hits, for Top_k and
+//!    Gaussian_k at d ≥ 1M (the PR's ≥ 2× acceptance bar).
+//! 2. Warm-hit rates under each k schedule (`const` / `warmup` /
+//!    `adaptive`) on an AR(1) gradient stream — the cross-step threshold
+//!    stability the paper's stationary-distribution observation predicts.
+//!
+//! Writes `BENCH_select.json` at the repository root: the bench samples
+//! plus the per-schedule hit rates, the first entry of the perf
+//! trajectory tracked in ROADMAP.md.
+
+use sparkv::compress::{Compressor, OpKind, TopK, WarmSelector, Workspace};
+use sparkv::schedule::{KSchedule, Scheduler};
+use sparkv::stats::rng::Pcg64;
+use sparkv::util::benchkit::Bench;
+use sparkv::util::json::Json;
+
+const TAU: f64 = 0.25;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("SPARKV_BENCH_FAST").is_ok();
+    let d = if fast { 1_000_000 } else { 4_000_000 };
+    let k = d / 1000;
+    let mut bench = Bench::from_env(0.6);
+    println!("Warm-threshold selection — exact vs warm:{TAU}, d = {d}, k = {k}\n");
+
+    // Section 1: steady-state selection time on warm hits. The input is
+    // held fixed across timed iterations, so after priming every warm
+    // call lands inside the `[k, (1+τ)k]` band — this times the fused
+    // scan + O(hits) truncation against the operator's full selection.
+    let mut rng = Pcg64::seed(7);
+    let u: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+    let mut speedups = Vec::new();
+    for op in [OpKind::TopK, OpKind::GaussianK] {
+        let mut exact = op.build(3);
+        let mut ws = Workspace::new();
+        let t_exact = bench.run(&format!("{}/exact/d={d}", op.name()), || {
+            let s = exact.compress_step(&u, k, &mut ws);
+            ws.recycle(std::hint::black_box(s));
+        });
+
+        let mut warm_op = op.build(3);
+        let mut sel = WarmSelector::new(TAU);
+        // Prime: cold seed + one refinement so the timed loop is all hits.
+        for _ in 0..2 {
+            let s = sel.compress_step(&mut *warm_op, 0, &u, k, &mut ws);
+            ws.recycle(s);
+        }
+        let (h0, m0) = (sel.hits, sel.misses);
+        let t_warm = bench.run(&format!("{}/warm/d={d}", op.name()), || {
+            let s = sel.compress_step(&mut *warm_op, 0, &u, k, &mut ws);
+            ws.recycle(std::hint::black_box(s));
+        });
+        let timed = (sel.hits + sel.misses) - (h0 + m0);
+        let hit_frac = (sel.hits - h0) as f64 / timed.max(1) as f64;
+        let speedup = t_exact / t_warm;
+        speedups.push((op, speedup));
+        println!(
+            "{:>10}  exact {:>10}  warm {:>10}  ({speedup:.2}× — {})  timed-loop hit rate {:.3}",
+            op.name(),
+            sparkv::util::human_secs(t_exact),
+            sparkv::util::human_secs(t_warm),
+            if speedup >= 2.0 { "OK (≥ 2×)" } else { "VIOLATED (< 2×)" },
+            hit_frac,
+        );
+    }
+
+    // Section 2: hit rates under each k schedule on a drifting stream.
+    // AR(1) with unit stationary variance: u_t = ρ·u_{t−1} + √(1−ρ²)·n_t
+    // — step-to-step correlation without a magnitude transient, the
+    // distribution stationarity the warm engine banks on.
+    let d_s = if fast { 262_144 } else { 1_048_576 };
+    let steps = 80;
+    let rho = 0.9f32;
+    let fresh = (1.0 - rho * rho).sqrt();
+    let schedules = [
+        ("const", KSchedule::Const(None)),
+        ("warmup", KSchedule::Warmup { from: 0.004, to: 0.001, epochs: 4 }),
+        ("adaptive", KSchedule::Adaptive { delta: 0.05 }),
+    ];
+    println!("\nwarm-hit rate by k schedule (d = {d_s}, {steps} steps, AR(1) ρ = {rho}):");
+    let mut hit_rates = Vec::new();
+    for (label, spec) in &schedules {
+        let mut scheduler = Scheduler::for_run(spec, 0.001, 10, d_s);
+        let mut op = TopK::new();
+        let mut sel = WarmSelector::new(TAU);
+        sel.set_want_hist(scheduler.wants_feedback());
+        let mut ws = Workspace::new();
+        let mut rng = Pcg64::seed(29);
+        let mut g: Vec<f32> = (0..d_s).map(|_| rng.next_gaussian() as f32).collect();
+        for step in 0..steps {
+            let plan = scheduler.plan(step);
+            let s = sel.compress_step(&mut op, 0, &g, plan.k, &mut ws);
+            ws.recycle(s);
+            if scheduler.wants_feedback() {
+                if let Some(h) = sel.take_stats().and_then(|st| st.histogram) {
+                    scheduler.observe(step, &h);
+                }
+            }
+            for v in g.iter_mut() {
+                *v = rho * *v + fresh * rng.next_gaussian() as f32;
+            }
+        }
+        println!(
+            "  {label:>8}  hits {:>3}  misses {:>2}  rate {:.3}",
+            sel.hits,
+            sel.misses,
+            sel.hit_rate()
+        );
+        hit_rates.push((*label, sel.hit_rate()));
+    }
+
+    // JSON artifact at the repo root (benches run with CWD = rust/).
+    let mut out = Json::obj();
+    let mut rates = Json::obj();
+    for (label, rate) in &hit_rates {
+        rates.set(label, Json::from(*rate));
+    }
+    let mut sp = Json::obj();
+    for (op, s) in &speedups {
+        sp.set(&op.name(), Json::from(*s));
+    }
+    out.set("d", Json::from(d))
+        .set("k", Json::from(k))
+        .set("tau", Json::from(TAU))
+        .set("warm_speedup", sp)
+        .set("hit_rate_by_schedule", rates)
+        .set("samples", bench.to_json());
+    std::fs::write("../BENCH_select.json", out.to_string())?;
+    println!("\nwrote ../BENCH_select.json");
+    Ok(())
+}

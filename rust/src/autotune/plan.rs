@@ -381,7 +381,7 @@ mod tests {
     use super::*;
     use crate::autotune::strategy::ExhaustiveGrid;
     use crate::compress::OpKind;
-    use crate::config::{Buckets, Exchange, Parallelism};
+    use crate::config::{Buckets, Exchange, Parallelism, Select};
 
     fn quick_scenario() -> TuneScenario {
         let mut s = TuneScenario::default_16gpu();
@@ -478,6 +478,7 @@ mod tests {
             apportions: vec![crate::config::BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing],
+            selects: vec![Select::Exact],
         };
         let plan = tune(&scen, &space, &mut ExhaustiveGrid, 5, None);
         assert_eq!(plan.chosen, Candidate::baseline());
@@ -500,6 +501,7 @@ mod tests {
             apportions: vec![crate::config::BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing],
+            selects: vec![Select::Exact],
         };
         let mut halving = crate::autotune::strategy::SuccessiveHalving {
             promote: 1,
@@ -534,6 +536,7 @@ mod tests {
             apportions: vec![crate::config::BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing, Exchange::TreeSparse],
+            selects: vec![Select::Exact],
         };
 
         let wide = quick_scenario(); // 4 nodes × 4 GPUs over 10 GbE

@@ -2,7 +2,7 @@
 //! deterministic cross-product enumeration the search strategies walk.
 
 use crate::compress::OpKind;
-use crate::config::{BucketApportion, Buckets, Exchange, Parallelism, TrainConfig};
+use crate::config::{BucketApportion, Buckets, Exchange, Parallelism, Select, TrainConfig};
 use crate::netsim::{ComputeProfile, LinkSpec, Topology};
 use crate::schedule::KSchedule;
 use crate::util::json::Json;
@@ -118,7 +118,7 @@ impl TuneScenario {
 
 /// One point of the search space — a complete compression-plan
 /// configuration. Applying a candidate to a [`TrainConfig`] touches only
-/// the six searched knobs; everything else (steps, lr, seed, …) stays
+/// the seven searched knobs; everything else (steps, lr, seed, …) stays
 /// with the caller — except `global_topk`, which a `tree-sparse`
 /// candidate forces on (the tree schedule only exists for the gTop-k
 /// merge).
@@ -133,6 +133,10 @@ pub struct Candidate {
     /// candidate is a *gTop-k* plan: [`Candidate::apply`] also sets
     /// `global_topk = true`.
     pub exchange: Exchange,
+    /// Selection engine (`exact` | `warm:TAU`) — meaningful only for the
+    /// thresholded operators ([`OpKind::warm_eligible`]); normalization
+    /// collapses it to `exact` everywhere else.
+    pub select: Select,
 }
 
 impl Candidate {
@@ -148,13 +152,15 @@ impl Candidate {
             bucket_apportion: d.bucket_apportion,
             parallelism: d.parallelism,
             exchange: d.exchange,
+            select: d.select,
         }
     }
 
     /// Compact identity string, `op|k_schedule|buckets|apportion|runtime`
     /// (each field round-trips through its own parser), with
-    /// `|tree-sparse` appended only when the exchange deviates from the
-    /// dense-ring default — so every pre-exchange plan name is unchanged.
+    /// `|tree-sparse` and/or `|warm:TAU` appended only when the exchange
+    /// or selection engine deviates from its default — so every
+    /// pre-existing plan name is unchanged.
     pub fn name(&self) -> String {
         let mut name = format!(
             "{}|{}|{}|{}|{}",
@@ -167,6 +173,10 @@ impl Candidate {
         if self.exchange.is_tree() {
             name.push('|');
             name.push_str(&self.exchange.name());
+        }
+        if self.select.is_warm() {
+            name.push('|');
+            name.push_str(&self.select.name());
         }
         name
     }
@@ -189,6 +199,12 @@ impl Candidate {
             // ring form.
             c.exchange = Exchange::DenseRing;
         }
+        // Warm selection only exists for thresholded operators; every
+        // other op runs exact selection under either setting, so the
+        // warm twin collapses.
+        if !c.op.warm_eligible() {
+            c.select = Select::Exact;
+        }
         c
     }
 
@@ -203,6 +219,7 @@ impl Candidate {
         cfg.bucket_apportion = self.bucket_apportion;
         cfg.parallelism = self.parallelism;
         cfg.exchange = self.exchange;
+        cfg.select = self.select;
         if self.exchange.is_tree() {
             cfg.global_topk = true;
         }
@@ -215,7 +232,8 @@ impl Candidate {
             .set("buckets", Json::from(self.buckets.name()))
             .set("bucket_apportion", Json::from(self.bucket_apportion.name()))
             .set("parallelism", Json::from(self.parallelism.name()))
-            .set("exchange", Json::from(self.exchange.name().as_str()));
+            .set("exchange", Json::from(self.exchange.name().as_str()))
+            .set("select", Json::from(self.select.name().as_str()));
         o
     }
 
@@ -237,6 +255,12 @@ impl Candidate {
                 Some(s) => Exchange::parse(s)?,
                 None => Exchange::DenseRing,
             },
+            // Plans written before the selection axis carry no key: they
+            // all ran the exact (cold) engine.
+            select: match j.get("select").and_then(Json::as_str) {
+                Some(s) => Select::parse(s)?,
+                None => Select::Exact,
+            },
         })
     }
 }
@@ -244,10 +268,10 @@ impl Candidate {
 /// A cross-product of axis value lists. [`SearchSpace::enumerate`]
 /// produces the candidate list every strategy walks, in a fixed nested
 /// order (op → k-schedule → buckets → apportionment → parallelism →
-/// exchange) with config-equivalent duplicates collapsed — the
+/// exchange → select) with config-equivalent duplicates collapsed — the
 /// enumeration order is part of the determinism contract (ranking ties
-/// break by it; the exchange loop is innermost so single-exchange spaces
-/// enumerate exactly as they did before the axis existed).
+/// break by it; the newest axis loops innermost so single-value spaces
+/// enumerate exactly as they did before each axis existed).
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
     pub ops: Vec<OpKind>,
@@ -256,6 +280,7 @@ pub struct SearchSpace {
     pub apportions: Vec<BucketApportion>,
     pub parallelisms: Vec<Parallelism>,
     pub exchanges: Vec<Exchange>,
+    pub selects: Vec<Select>,
 }
 
 impl SearchSpace {
@@ -281,6 +306,13 @@ impl SearchSpace {
     ///   custom space when the run is gTop-k to begin with (the
     ///   plan-switch test in `oracle.rs` and the table2 bench's crossover
     ///   sweep do exactly that).
+    /// * `select` — warm selection is its own training trajectory (the
+    ///   selected set can differ from the cold operator's), so sweeping
+    ///   it by default would mix trajectories in one leaderboard exactly
+    ///   like the exchange axis would; it also keeps the golden plan and
+    ///   the candidate-count assertions byte-stable. Sweep it through a
+    ///   custom space (`selects: vec![Select::Exact, Select::warm(0.25)?]`)
+    ///   when selection CPU is the bottleneck being tuned.
     pub fn default_space() -> SearchSpace {
         SearchSpace {
             ops: vec![OpKind::Dense, OpKind::TopK, OpKind::Dgc, OpKind::GaussianK],
@@ -297,6 +329,7 @@ impl SearchSpace {
                 Parallelism::Pool(4),
             ],
             exchanges: vec![Exchange::DenseRing],
+            selects: vec![Select::Exact],
         }
     }
 
@@ -311,6 +344,7 @@ impl SearchSpace {
             apportions: vec![BucketApportion::Size],
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing],
+            selects: vec![Select::Exact],
         }
     }
 
@@ -325,17 +359,20 @@ impl SearchSpace {
                     for &bucket_apportion in &self.apportions {
                         for &parallelism in &self.parallelisms {
                             for &exchange in &self.exchanges {
-                                let c = Candidate {
-                                    op,
-                                    k_schedule,
-                                    buckets,
-                                    bucket_apportion,
-                                    parallelism,
-                                    exchange,
-                                }
-                                .normalized();
-                                if seen.insert(c.name()) {
-                                    out.push(c);
+                                for &select in &self.selects {
+                                    let c = Candidate {
+                                        op,
+                                        k_schedule,
+                                        buckets,
+                                        bucket_apportion,
+                                        parallelism,
+                                        exchange,
+                                        select,
+                                    }
+                                    .normalized();
+                                    if seen.insert(c.name()) {
+                                        out.push(c);
+                                    }
                                 }
                             }
                         }
@@ -358,6 +395,7 @@ impl SearchSpace {
             || self.apportions.is_empty()
             || self.parallelisms.is_empty()
             || self.exchanges.is_empty()
+            || self.selects.is_empty()
     }
 }
 
@@ -408,6 +446,7 @@ mod tests {
             bucket_apportion: BucketApportion::Mass { ema_beta: 0.5 },
             parallelism: Parallelism::Pool(4),
             exchange: Exchange::DenseRing,
+            select: Select::Warm { tau: 0.25 },
         };
         let j = c.to_json();
         assert_eq!(Candidate::from_json(&j).unwrap(), c);
@@ -470,9 +509,11 @@ mod tests {
             bucket_apportion: BucketApportion::mass(),
             parallelism: Parallelism::Serial,
             exchange: Exchange::DenseRing,
+            select: Select::Exact,
         };
         assert_eq!(c.normalized().bucket_apportion, BucketApportion::Size);
-        // Dense ⇒ schedule, apportionment, and exchange are irrelevant.
+        // Dense ⇒ schedule, apportionment, exchange, and selection are
+        // irrelevant.
         let d = Candidate {
             op: OpKind::Dense,
             k_schedule: KSchedule::Const(Some(0.01)),
@@ -480,12 +521,56 @@ mod tests {
             bucket_apportion: BucketApportion::mass(),
             parallelism: Parallelism::Pool(2),
             exchange: Exchange::TreeSparse,
+            select: Select::Warm { tau: 0.25 },
         };
         let n = d.normalized();
         assert_eq!(n.k_schedule, KSchedule::Const(None));
         assert_eq!(n.bucket_apportion, BucketApportion::Size);
         assert_eq!(n.exchange, Exchange::DenseRing);
+        assert_eq!(n.select, Select::Exact);
         assert_eq!(n.buckets, Buckets::Layers); // bucketing still matters for dense
+        // Warm sticks on the thresholded ops, collapses on the rest.
+        let mut w = Candidate::baseline();
+        w.op = OpKind::GaussianK;
+        w.select = Select::Warm { tau: 0.25 };
+        assert_eq!(w.normalized().select, Select::Warm { tau: 0.25 });
+        w.op = OpKind::RandK;
+        assert_eq!(w.normalized().select, Select::Exact);
+    }
+
+    #[test]
+    fn warm_candidates_name_apply_and_round_trip() {
+        let mut c = Candidate::baseline();
+        c.op = OpKind::TopK;
+        // Exact names are byte-identical to the pre-select format.
+        assert!(!c.name().contains("exact"));
+        c.select = Select::Warm { tau: 0.25 };
+        assert!(c.name().ends_with("|warm:0.25"), "{}", c.name());
+        assert_eq!(Candidate::from_json(&c.to_json()).unwrap(), c);
+        // A plan JSON written before the axis existed (no `select` key)
+        // parses as exact.
+        let mut legacy = Json::obj();
+        legacy
+            .set("op", Json::from("topk"))
+            .set("k_schedule", Json::from("const"))
+            .set("buckets", Json::from("none"))
+            .set("bucket_apportion", Json::from("size"))
+            .set("parallelism", Json::from("serial"));
+        assert_eq!(Candidate::from_json(&legacy).unwrap().select, Select::Exact);
+        // apply() threads the engine through to the config.
+        let mut cfg = TrainConfig::default();
+        c.apply(&mut cfg);
+        assert_eq!(cfg.select, Select::Warm { tau: 0.25 });
+        cfg.validate().unwrap();
+        // Sweeping the axis doubles only the thresholded operators
+        // (TopK + GaussianK: 2 ops × 27), appended innermost so the
+        // exact-prefix order is untouched.
+        let mut with_warm = SearchSpace::default_space();
+        with_warm.selects = vec![Select::Exact, Select::Warm { tau: 0.25 }];
+        assert_eq!(with_warm.len(), 9 + 3 * 27 + 2 * 27);
+        assert!(!with_warm.is_empty());
+        with_warm.selects = Vec::new();
+        assert!(with_warm.is_empty());
     }
 
     #[test]

@@ -138,7 +138,7 @@ impl SearchStrategy for GreedyDescent {
         let mut best = score(&current, &mut cache, &mut log, &mut evaluated);
         for _ in 0..self.max_sweeps.max(1) {
             let mut improved = false;
-            for axis in 0..6 {
+            for axis in 0..7 {
                 // Axis values in space order; the move keeps every other
                 // axis fixed and renormalizes.
                 let moves: Vec<Candidate> = match axis {
@@ -179,11 +179,19 @@ impl SearchStrategy for GreedyDescent {
                             ..current.clone()
                         })
                         .collect(),
-                    _ => space
+                    5 => space
                         .exchanges
                         .iter()
                         .map(|&exchange| Candidate {
                             exchange,
+                            ..current.clone()
+                        })
+                        .collect(),
+                    _ => space
+                        .selects
+                        .iter()
+                        .map(|&select| Candidate {
+                            select,
                             ..current.clone()
                         })
                         .collect(),

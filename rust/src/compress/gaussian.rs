@@ -101,6 +101,14 @@ impl GaussianK {
         let d = u.len();
         let k = k.min(d).max(1);
         let (mu, sigma) = mean_std(u);
+        if sigma == 0.0 || !sigma.is_finite() || !mu.is_finite() {
+            // Degenerate point mass (all-zero or constant gradient): no
+            // Gaussian fit exists and no threshold can separate equal
+            // magnitudes. Report the point's magnitude as a finite
+            // threshold with a zero count so `compress_step` routes to
+            // the exact fallback, which sends exactly min(k, d) elements.
+            return (mu.abs(), 0);
+        }
         let p = if self.cfg.two_sided_init {
             1.0 - (k as f64) / (2.0 * d as f64)
         } else {
@@ -166,6 +174,14 @@ impl GaussianK {
                 break;
             }
         }
+        if count >= d && k < d {
+            // The refinement collapsed below every magnitude (σ ≈ 0
+            // within float noise — e.g. a constant vector whose fitted σ
+            // is rounding residue): the threshold separates nothing, so
+            // the selection pass would keep all d elements for a k-sized
+            // budget. Degenerate — route to the exact fallback.
+            return (mu.abs(), 0);
+        }
         // With stride > 1 the returned count is the (scaled) estimate —
         // callers only use it as a capacity hint and an emptiness check;
         // the actual selection pass is exact regardless. (An exact
@@ -187,13 +203,25 @@ impl Compressor for GaussianK {
         }
         let (thres, count) = self.refined_threshold(u, k, ws);
         if count == 0 {
-            if self.cfg.exact_fallback && u.iter().any(|&v| v != 0.0) {
+            // Exact fallback covers both the spiky case and the σ = 0
+            // point masses (all-zero / constant gradients), where TopK's
+            // tie-breaking yields exactly min(k, d) elements — the
+            // degenerate-distribution contract.
+            if self.cfg.exact_fallback {
                 self.fallbacks += 1;
                 return super::TopK::new().compress_step(u, k, ws);
             }
             return SparseVec::new(d);
         }
         select_above_hint(u, thres, count, ws)
+    }
+
+    fn cold_threshold(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> Option<f32> {
+        // The warm engine's seed: the fitted + refined threshold. A
+        // degenerate fit reports its point magnitude (count 0), which is
+        // still a valid scan threshold — the warm band check then routes
+        // to its own exact rescan.
+        Some(self.refined_threshold(u, k, ws).0.max(0.0))
     }
 
     fn name(&self) -> &'static str {
@@ -309,9 +337,55 @@ mod tests {
         let mut ws = Workspace::new();
         let s = op.compress_step(&u, 10, &mut ws);
         assert!(s.nnz() >= 1, "must select the spike (possibly via fallback)");
+        assert!(s.indices.contains(&5), "the spike coordinate must be kept");
+        // All-zero gradient: σ = 0, no fit — the exact fallback still
+        // emits exactly min(k, d) (zero-valued) elements, matching TopK's
+        // tie-break contract.
         let zero = vec![0.0f32; 100];
         let mut op2 = GaussianK::new();
-        assert_eq!(op2.compress_step(&zero, 5, &mut ws).nnz(), 0);
+        let s = op2.compress_step(&zero, 5, &mut ws);
+        assert_eq!(s.nnz(), 5);
+        assert!(s.values.iter().all(|&v| v == 0.0));
+        assert_eq!(op2.fallbacks, 1);
+    }
+
+    #[test]
+    fn degenerate_sigma_zero_sends_exactly_min_k_d() {
+        let mut ws = Workspace::new();
+        // All-zero: finite threshold, exactly min(k, d) elements.
+        let zero = vec![0.0f32; 100];
+        let mut op = GaussianK::new();
+        let (t, c) = op.refined_threshold(&zero, 5, &mut ws);
+        assert!(t.is_finite());
+        assert_eq!(c, 0);
+        assert_eq!(op.compress_step(&zero, 5, &mut ws).nnz(), 5);
+        // Constant positive gradient (σ = 0 exactly at power-of-two d).
+        let c_pos = vec![3.5f32; 64];
+        let mut op = GaussianK::new();
+        let (t, c) = op.refined_threshold(&c_pos, 7, &mut ws);
+        assert!(t.is_finite());
+        assert_eq!(c, 0);
+        let s = op.compress_step(&c_pos, 7, &mut ws);
+        assert_eq!(s.nnz(), 7, "constant vector must send exactly k");
+        assert!(s.values.iter().all(|&v| v == 3.5));
+        assert_eq!(s.indices, (0..7).collect::<Vec<u32>>());
+        // Constant negative gradient: the old ppf clamp (thres = 0)
+        // selected all d elements here.
+        let c_neg = vec![-2.0f32; 64];
+        let mut op = GaussianK::new();
+        let s = op.compress_step(&c_neg, 7, &mut ws);
+        assert_eq!(s.nnz(), 7);
+        assert!(s.values.iter().all(|&v| v == -2.0));
+        // Constant at a non-power-of-two d (fitted σ may be rounding
+        // residue instead of exact zero — the post-refinement count ≥ d
+        // guard must still route to the fallback).
+        let c_odd = vec![0.7f32; 101];
+        let mut op = GaussianK::new();
+        let s = op.compress_step(&c_odd, 9, &mut ws);
+        assert_eq!(s.nnz(), 9);
+        // k ≥ d on a degenerate vector keeps everything.
+        let s = GaussianK::new().compress_step(&c_neg, 100, &mut ws);
+        assert_eq!(s.nnz(), 64);
     }
 
     #[test]

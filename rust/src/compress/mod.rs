@@ -37,18 +37,45 @@
 //!   back through [`Workspace::recycle`] once the payload has been
 //!   consumed (the trainer recycles after the collective); skipping
 //!   `recycle` is safe — it only costs a fresh allocation next step.
+//!
+//! ## Warm vs cold selection (`select = exact | warm:TAU`)
+//!
+//! The thresholded operators ([`TopK`], [`GaussianK`]) additionally
+//! expose their per-step threshold derivation via
+//! [`Compressor::cold_threshold`], which the warm engine
+//! ([`warm::WarmSelector`]) uses as the *seed* of a cross-step
+//! [`warm::ThresholdCache`]. State machine per selection domain
+//! (monolithic gradient or bucket):
+//!
+//! ```text
+//!   cold ──seed: cold_threshold──► warm(pivot)
+//!   warm: one fused scan against the cached pivot
+//!         hits ∈ [k, (1+τ)k]  → HIT: O(hits) truncation to exactly k
+//!         hits > (1+τ)k       → drift: truncation still (no rescan),
+//!                               pivot refreshed from the hits
+//!         hits < k            → MISS: full quickselect rescan,
+//!                               pivot refreshed at rank ⌈k(1+τ/2)⌉
+//! ```
+//!
+//! The fused scan folds the adaptive-δ |u| histogram and the Σu² mass
+//! apportionment statistics into the same pass (see [`warm`] for the
+//! full contract). `select = exact` (the default) never touches any of
+//! this: every operator runs its original cold path, bit-identically to
+//! the pre-warm code.
 
 mod dgc;
 mod gaussian;
 mod randk;
 mod topk;
 mod trimmed;
+pub mod warm;
 
 pub use dgc::DgcK;
 pub use gaussian::{GaussianK, GaussianKConfig};
 pub use randk::RandK;
 pub use topk::TopK;
 pub use trimmed::TrimmedK;
+pub use warm::{ThresholdCache, WarmSelector, WarmStats};
 
 use crate::tensor::SparseVec;
 
@@ -121,6 +148,16 @@ pub trait Compressor: Send {
     /// Sparsify `u` (the error-compensated gradient accumulation) to
     /// ~`k` non-zeros using `ws` for all scratch and output buffers.
     fn compress_step(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> SparseVec;
+
+    /// The operator's cold-start threshold derivation, used by the warm
+    /// engine ([`warm::WarmSelector`]) to seed its cross-step cache:
+    /// TopK's exact quickselect pivot, GaussianK's fitted + refined
+    /// threshold. `None` (the default) marks an operator with no
+    /// threshold concept — warm selection then delegates to
+    /// `compress_step` unchanged.
+    fn cold_threshold(&mut self, _u: &[f32], _k: usize, _ws: &mut Workspace) -> Option<f32> {
+        None
+    }
 
     /// Operator name for reports (matches the paper's terminology).
     fn name(&self) -> &'static str;
@@ -205,6 +242,14 @@ impl OpKind {
             OpKind::Trimmed,
             OpKind::GaussianK,
         ]
+    }
+
+    /// Operators the warm-threshold engine (`select = warm:TAU`) applies
+    /// to: the thresholded selections with a [`Compressor::cold_threshold`]
+    /// to cache. Every other operator keeps its exact selection even
+    /// under a warm config.
+    pub fn warm_eligible(&self) -> bool {
+        matches!(self, OpKind::TopK | OpKind::GaussianK)
     }
 }
 

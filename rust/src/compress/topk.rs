@@ -83,6 +83,10 @@ impl Compressor for TopK {
         SparseVec { d, indices, values }
     }
 
+    fn cold_threshold(&mut self, u: &[f32], k: usize, ws: &mut Workspace) -> Option<f32> {
+        Some(self.exact_threshold(u, k, ws))
+    }
+
     fn name(&self) -> &'static str {
         "topk"
     }

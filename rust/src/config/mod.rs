@@ -28,6 +28,7 @@
 //! | `k_schedule`          | `"const"`  | per-step density plan: `const` (follow `k_ratio` — bit-identical to the pre-schedule path), `const:K`, `warmup:K0..K,epochs=E` (exponential density decay), or `adaptive:DELTA` (smallest k capturing DELTA of ‖u‖²) — see [`crate::schedule`] |
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 //! | `exchange`            | `"dense-ring"` | sparse-exchange wiring for gTop-k runs: `dense-ring` (merge through the dense ring / allgather schedule) or `tree-sparse` (recursive-halving tree over sparse payloads, 2k values per round in ⌈log₂P⌉ rounds — gTopKAllReduce, Shi et al. 2019); requires `global_topk = true` and a sparse `op`; bit-identical numerics either way |
+//! | `select`              | `"exact"`  | threshold-selection engine: `exact` (cold per-step derivation — bit-identical to the pre-warm path) or `warm:TAU` with TAU ∈ (0, 1) (cross-step threshold reuse: step t seeds its selection with step t−1's refined threshold and does one fused scan, falling back to the cold path only when the hit count drifts outside `[k, (1+TAU)·k]` — see [`crate::compress::warm`]); applies to `topk`/`gaussiank`, other operators keep their exact selection |
 //!
 //! ## Topology grammar (netsim / cluster pricing)
 //!
@@ -360,6 +361,85 @@ impl Exchange {
     }
 }
 
+/// How the sparse operators derive their per-step selection threshold.
+///
+/// `Exact` is the original behaviour: every step pays the full cold
+/// derivation (Top-k quickselect, or the GaussianK fit + refinement
+/// passes) over all `d` elements — bit-identical to the pre-warm path.
+/// `Warm { tau }` enables the cross-step threshold cache of
+/// [`crate::compress::warm`]: step `t` partitions against step `t−1`'s
+/// refined threshold in **one fused linear scan** (selection + |u|
+/// histogram + ‖u‖² mass in the same pass) and only falls back to the
+/// cold path when the hit count drifts outside `[k, (1+tau)·k]`;
+/// over-selection is repaired by an O(hits) truncation, never a rescan.
+/// The warm engine applies to `topk` and `gaussiank` (the thresholded
+/// operators); every other operator keeps its exact selection under
+/// either setting. Warm selection is deterministic and bit-identical
+/// across the serial/threads/pool runtimes (the cache lives in
+/// per-worker state, so placement cannot change results), but its
+/// payloads are *not* bit-identical to `exact` — it is its own
+/// trajectory, exactly like choosing a different operator.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub enum Select {
+    /// Cold per-step threshold derivation (the default; bit-identical to
+    /// the pre-warm path).
+    #[default]
+    Exact,
+    /// Cross-step threshold reuse with drift tolerance `tau` ∈ (0, 1):
+    /// a cached threshold is accepted while its hit count stays within
+    /// `[k, (1+tau)·k]`.
+    Warm { tau: f64 },
+}
+
+impl Select {
+    /// The one checked constructor for `Warm { tau }`: the drift band
+    /// must be a real tolerance. Both [`Select::parse`] and
+    /// `TrainConfig::validate` route through here so the bound cannot
+    /// drift between the two paths.
+    pub fn warm(tau: f64) -> anyhow::Result<Select> {
+        anyhow::ensure!(
+            tau.is_finite() && tau > 0.0 && tau < 1.0,
+            "select warm:TAU needs TAU in (0, 1)"
+        );
+        Ok(Select::Warm { tau })
+    }
+
+    /// Parse a config/CLI value: `exact` or `warm:TAU` (also `warm=TAU`,
+    /// `warm(TAU)` — the same separator forms `parallelism` accepts).
+    pub fn parse(s: &str) -> anyhow::Result<Select> {
+        let t = s.trim().to_ascii_lowercase();
+        let grammar = "exact|warm:TAU";
+        if t == "exact" {
+            return Ok(Select::Exact);
+        }
+        if let Some(rest) = t.strip_prefix("warm") {
+            let digits = rest
+                .strip_prefix(':')
+                .or_else(|| rest.strip_prefix('='))
+                .or_else(|| rest.strip_prefix('(').and_then(|d| d.strip_suffix(')')))
+                .ok_or_else(|| anyhow::anyhow!("bad select '{s}': expected {grammar}"))?;
+            let tau: f64 = digits
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad select '{s}': expected {grammar}"))?;
+            return Select::warm(tau);
+        }
+        anyhow::bail!("bad select '{s}': expected {grammar}")
+    }
+
+    /// Display form (round-trips through [`Select::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Select::Exact => "exact".to_string(),
+            Select::Warm { tau } => format!("warm:{tau}"),
+        }
+    }
+
+    /// True when the warm-threshold engine should run.
+    pub fn is_warm(&self) -> bool {
+        matches!(self, Select::Warm { .. })
+    }
+}
+
 /// Raw parsed config: section → key → string value.
 #[derive(Debug, Clone, Default)]
 pub struct RawConfig {
@@ -479,6 +559,10 @@ pub struct TrainConfig {
     /// ring (default) or the 2k-per-round recursive-halving tree.
     /// Requires `global_topk` and a sparse op when `tree-sparse`.
     pub exchange: Exchange,
+    /// Threshold-selection engine: exact cold derivation every step
+    /// (default; bit-identical to the pre-warm path) or the
+    /// cross-step warm-threshold cache (`warm:TAU`).
+    pub select: Select,
 }
 
 impl Default for TrainConfig {
@@ -503,6 +587,7 @@ impl Default for TrainConfig {
             k_schedule: KSchedule::Const(None),
             steps_per_epoch: 100,
             exchange: Exchange::DenseRing,
+            select: Select::Exact,
         }
     }
 }
@@ -554,6 +639,10 @@ impl TrainConfig {
                 Some(s) => Exchange::parse(s)?,
                 None => d.exchange,
             },
+            select: match raw.get("train", "select") {
+                Some(s) => Select::parse(s)?,
+                None => d.select,
+            },
         })
     }
 
@@ -596,6 +685,10 @@ impl TrainConfig {
                 "exchange = tree-sparse requires a sparse op (dense gradients \
                  have no k-truncated payload to tree-merge)"
             );
+        }
+        if let Select::Warm { tau } = self.select {
+            // One checked constructor — the same bound `parse` enforces.
+            Select::warm(tau)?;
         }
         Ok(())
     }
@@ -839,6 +932,34 @@ lr = 0.05
         // …and a sparse operator.
         cfg.op = OpKind::Dense;
         assert!(cfg.validate().is_err(), "tree-sparse with a dense op must fail");
+    }
+
+    #[test]
+    fn select_parsing_and_validation() {
+        assert_eq!(Select::parse("exact").unwrap(), Select::Exact);
+        assert_eq!(Select::parse("warm:0.25").unwrap(), Select::Warm { tau: 0.25 });
+        assert_eq!(Select::parse("warm=0.5").unwrap(), Select::Warm { tau: 0.5 });
+        assert_eq!(Select::parse("WARM(0.1)").unwrap(), Select::Warm { tau: 0.1 });
+        for bad in ["warm", "warm:0", "warm:1", "warm:1.5", "warm:-0.2", "warm:nan", "hot:0.2"] {
+            assert!(Select::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        // name() round-trips.
+        for s in [Select::Exact, Select::Warm { tau: 0.25 }] {
+            assert_eq!(Select::parse(&s.name()).unwrap(), s);
+        }
+        assert!(!Select::Exact.is_warm());
+        assert!(Select::Warm { tau: 0.25 }.is_warm());
+        // Default stays exact (bit-identical to the pre-warm path).
+        assert_eq!(TrainConfig::default().select, Select::Exact);
+        let raw = RawConfig::parse("[train]\nselect = \"warm:0.25\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.select, Select::Warm { tau: 0.25 });
+        cfg.validate().unwrap();
+        let mut out_of_range = TrainConfig::default();
+        out_of_range.select = Select::Warm { tau: 1.5 };
+        assert!(out_of_range.validate().is_err());
+        let bad = RawConfig::parse("[train]\nselect = \"hot\"").unwrap();
+        assert!(TrainConfig::from_raw(&bad).is_err());
     }
 
     #[test]

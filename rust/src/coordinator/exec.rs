@@ -182,12 +182,35 @@ pub(crate) fn worker_step<M: Model + ?Sized>(
     } else {
         None
     };
-    let feedback = if ctx.feedback {
+    // Exact path: the adaptive-schedule histogram is its own O(d) sweep
+    // over u. Warm path: the fused compression scan bins it for free —
+    // see the fallback below.
+    let feedback = if ctx.feedback && w.warm.is_none() {
         Some(feedback_histogram(u))
     } else {
         None
     };
-    let s = w.compressor.compress_step(u, ctx.k, &mut w.workspace);
+    let t0 = Instant::now();
+    let s = match w.warm.as_mut() {
+        Some(sel) => {
+            sel.set_want_hist(ctx.feedback);
+            sel.compress_step(&mut *w.compressor, 0, u, ctx.k, &mut w.workspace)
+        }
+        None => w.compressor.compress_step(u, ctx.k, &mut w.workspace),
+    };
+    w.select_us += t0.elapsed().as_secs_f64() * 1e6;
+    let feedback = if ctx.feedback && feedback.is_none() {
+        // Warm fused histogram (bins |u| of *this* step over the previous
+        // step's span — folding re-bins onto the common span). The first
+        // warm step has no span yet; one exact sweep covers it.
+        w.warm
+            .as_mut()
+            .and_then(|sel| sel.take_stats())
+            .and_then(|st| st.histogram)
+            .or_else(|| Some(feedback_histogram(u)))
+    } else {
+        feedback
+    };
     w.residual.update(&s);
     WorkerMsg {
         rank: w.rank,

@@ -321,6 +321,9 @@ impl<'a> Trainer<'a> {
         let mut workers: Vec<WorkerState> = (0..p)
             .map(|r| WorkerState::new(r, d, self.cfg.op, self.cfg.seed))
             .collect();
+        for w in workers.iter_mut() {
+            w.init_select(self.cfg.select, self.cfg.op);
+        }
         let mut executor = self.build_executor(p)?;
         let mut params = executor.wrap_params(self.model.init(self.cfg.seed));
 
@@ -478,6 +481,7 @@ impl<'a> Trainer<'a> {
                 density: if is_dense { 1.0 } else { plan.density },
                 wall_s: t0.elapsed().as_secs_f64(),
                 spawn_or_dispatch_us: dispatch_us,
+                select_us: drain_select_us(&mut workers),
             });
 
             self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
@@ -543,6 +547,15 @@ impl<'a> Trainer<'a> {
 
         let mut scheduler = self.build_scheduler(d);
         let wants_feedback = !is_dense && scheduler.wants_feedback();
+        for w in workers.iter_mut() {
+            // After init_buckets, so the warm engine gets one threshold
+            // cache per bucket; the fused scans also bank the feedback
+            // histogram when the schedule consumes one.
+            w.init_select(self.cfg.select, self.cfg.op);
+            if let Some(sel) = w.warm.as_mut() {
+                sel.set_want_hist(wants_feedback);
+            }
+        }
 
         let mut opt = self.build_optimizer(d);
         let mut eval_rng = Pcg64::seed(self.cfg.seed ^ 0xE7A1);
@@ -629,39 +642,70 @@ impl<'a> Trainer<'a> {
                     });
                 }
             } else if snap_now || wants_feedback || mass_mode {
+                // Warm-select runs already paid for these statistics: the
+                // fused compression scans of step t−1 banked every
+                // worker's |u| histogram and per-bucket ‖u‖² masses
+                // ([`crate::compress::WarmStats`]). Reuse them — one step
+                // staler, but deterministic and identical on every
+                // runtime — instead of sweeping u again. Snapshot steps
+                // (and the first step, before any scan completed) still
+                // sweep: the paper snapshot needs u itself, not its
+                // summaries.
+                let warm_ready = !snap_now
+                    && workers
+                        .iter()
+                        .all(|w| w.warm.as_ref().is_some_and(|s| s.stats_ready(wants_feedback)));
                 if mass_mode {
                     bucket_mass.clear();
                     bucket_mass.resize(schedule.len(), 0.0);
                 }
                 feedback_hists.clear();
-                for w in workers.iter() {
-                    u_scratch.clear();
-                    u_scratch
-                        .extend(w.grad.iter().zip(w.residual.residual()).map(|(g, e)| g + e));
-                    if wants_feedback {
-                        feedback_hists.push(feedback_histogram(&u_scratch));
-                    }
-                    if mass_mode {
-                        for (m, sp) in bucket_mass.iter_mut().zip(schedule.specs()) {
-                            *m += u_scratch[sp.lo..sp.hi]
-                                .iter()
-                                .map(|&v| (v as f64) * (v as f64))
-                                .sum::<f64>();
+                if warm_ready {
+                    for w in workers.iter_mut() {
+                        let st = w
+                            .warm
+                            .as_mut()
+                            .and_then(|s| s.take_stats())
+                            .expect("stats_ready checked above");
+                        if wants_feedback {
+                            feedback_hists.push(st.histogram.expect("stats_ready checked above"));
+                        }
+                        if mass_mode {
+                            for (m, v) in bucket_mass.iter_mut().zip(&st.masses) {
+                                *m += *v;
+                            }
                         }
                     }
-                    if w.rank == 0 && snap_now {
-                        snapshots.push(GradSnapshot {
-                            step,
-                            histogram: Histogram::auto(&u_scratch, self.hist_bins),
-                            raw: if self.keep_raw_snapshots {
-                                Some(u_scratch.clone())
-                            } else {
-                                None
-                            },
-                        });
-                    }
-                    if !(wants_feedback || mass_mode) {
-                        break; // snapshot-only step: only rank 0's u is needed
+                } else {
+                    for w in workers.iter() {
+                        u_scratch.clear();
+                        u_scratch
+                            .extend(w.grad.iter().zip(w.residual.residual()).map(|(g, e)| g + e));
+                        if wants_feedback {
+                            feedback_hists.push(feedback_histogram(&u_scratch));
+                        }
+                        if mass_mode {
+                            for (m, sp) in bucket_mass.iter_mut().zip(schedule.specs()) {
+                                *m += u_scratch[sp.lo..sp.hi]
+                                    .iter()
+                                    .map(|&v| (v as f64) * (v as f64))
+                                    .sum::<f64>();
+                            }
+                        }
+                        if w.rank == 0 && snap_now {
+                            snapshots.push(GradSnapshot {
+                                step,
+                                histogram: Histogram::auto(&u_scratch, self.hist_bins),
+                                raw: if self.keep_raw_snapshots {
+                                    Some(u_scratch.clone())
+                                } else {
+                                    None
+                                },
+                            });
+                        }
+                        if !(wants_feedback || mass_mode) {
+                            break; // snapshot-only step: only rank 0's u is needed
+                        }
                     }
                 }
                 if wants_feedback {
@@ -918,6 +962,7 @@ impl<'a> Trainer<'a> {
                 density: if is_dense { 1.0 } else { plan.density },
                 wall_s: t0.elapsed().as_secs_f64(),
                 spawn_or_dispatch_us: launch_us,
+                select_us: drain_select_us(&mut workers),
             });
 
             self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
@@ -930,6 +975,17 @@ impl<'a> Trainer<'a> {
             k,
         })
     }
+}
+
+/// Drain and sum every worker's selection-time accumulator: the per-step
+/// `select_us` metric (total compression/selection CPU-µs across all
+/// workers — a sum, so it is well-defined and comparable across the
+/// serial, scoped, and pooled runtimes).
+fn drain_select_us(workers: &mut [WorkerState]) -> f64 {
+    workers
+        .iter_mut()
+        .map(|w| std::mem::take(&mut w.select_us))
+        .sum()
 }
 
 /// Convenience wrapper: train a model on a data source with a config.
@@ -967,6 +1023,7 @@ mod tests {
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
+            select: crate::config::Select::Exact,
             steps_per_epoch: 100,
         }
     }
@@ -1015,6 +1072,7 @@ mod tests {
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
+            select: crate::config::Select::Exact,
             steps_per_epoch: 100,
         };
         let dense = train(mk(OpKind::Dense), &mut model, &data).unwrap();
@@ -1228,6 +1286,7 @@ mod schedule_trainer_tests {
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: schedule,
             exchange: crate::config::Exchange::DenseRing,
+            select: crate::config::Select::Exact,
             steps_per_epoch: 5,
         }
     }
@@ -1353,6 +1412,7 @@ mod momentum_correction_tests {
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
+            select: crate::config::Select::Exact,
             steps_per_epoch: 100,
         };
         let plain = train(base.clone(), &mut model, &data).unwrap();
@@ -1415,6 +1475,7 @@ mod gtopk_trainer_tests {
             bucket_apportion: crate::config::BucketApportion::Size,
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
+            select: crate::config::Select::Exact,
             steps_per_epoch: 100,
         }
     }

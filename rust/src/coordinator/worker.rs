@@ -14,8 +14,11 @@
 //! per-step k arrives from the trainer's resolved plan (monolithic path)
 //! or the per-step bucket apportionment (bucketed path).
 
+use std::time::Instant;
+
 use crate::buckets::BucketSchedule;
-use crate::compress::{Compressor, OpKind, Workspace};
+use crate::compress::{Compressor, OpKind, WarmSelector, Workspace};
+use crate::config::Select;
 use crate::data::Batch;
 use crate::error_feedback::ResidualStore;
 use crate::stats::rng::Pcg64;
@@ -50,6 +53,15 @@ pub struct WorkerState {
     /// Local momentum velocity (only allocated when DGC-style momentum
     /// correction is enabled).
     pub velocity: Vec<f32>,
+    /// Warm-threshold selection engine (`select = warm:TAU` with a
+    /// threshold-bearing operator; `None` runs the cold path unchanged).
+    /// Owned per worker, so the cross-step caches travel through the
+    /// pool's ownership ping-pong and placement cannot change results.
+    pub warm: Option<WarmSelector>,
+    /// Selection/compression CPU-µs accumulated since the trainer last
+    /// drained it (all buckets, all paths) — feeds `select_us` in the
+    /// step records.
+    pub select_us: f64,
     /// This worker's compressor seed stream root (bucket compressors derive
     /// per-bucket sub-seeds from it).
     comp_seed: u64,
@@ -74,8 +86,30 @@ impl WorkerState {
             grad: vec![0.0; d],
             batch: Batch::default(),
             velocity: Vec::new(),
+            warm: None,
+            select_us: 0.0,
             comp_seed,
         }
+    }
+
+    /// Arm (or disarm) warm-threshold selection for this worker. Warm
+    /// engages only for threshold-bearing operators
+    /// ([`OpKind::warm_eligible`]); everything else keeps `warm = None`
+    /// and the cold path byte-for-byte. Call after [`Self::init_buckets`]
+    /// on the bucketed path so the slot count matches the schedule
+    /// (calling in the other order also works — `init_buckets` re-sizes
+    /// the slots).
+    pub fn init_select(&mut self, select: Select, op: OpKind) {
+        self.warm = match select {
+            Select::Warm { tau } if op.warm_eligible() => {
+                let mut sel = WarmSelector::new(tau);
+                if !self.bucket_compressors.is_empty() {
+                    sel.init_slots(self.bucket_compressors.len());
+                }
+                Some(sel)
+            }
+            _ => None,
+        };
     }
 
     /// Build one compressor per schedule bucket (stochastic operators get
@@ -93,6 +127,9 @@ impl WorkerState {
                 op.build(comp_seed ^ salt)
             })
             .collect();
+        if let Some(sel) = self.warm.as_mut() {
+            sel.init_slots(schedule.specs().len());
+        }
     }
 
     /// Error-feedback-compress bucket `b` (the `[lo, hi)` slice of the
@@ -105,14 +142,28 @@ impl WorkerState {
     /// the same bucket index.
     pub fn compress_bucket(&mut self, b: usize, lo: usize, hi: usize, k: usize) -> SparseVec {
         let u = self.residual.accumulate_range(&self.grad, lo, hi);
-        let sent = if k == 0 {
-            // k_b == 0: send nothing; ε_b absorbs the whole slice (and the
-            // bucket's compressor — including any RNG stream — is left
-            // untouched).
-            SparseVec::new(hi - lo)
-        } else {
-            self.bucket_compressors[b].compress_step(u, k, &mut self.workspace)
+        let t0 = Instant::now();
+        let sent = match self.warm.as_mut() {
+            // Warm path: even a k_b == 0 bucket routes through the
+            // selector so the fused per-step stats (mass, span,
+            // histogram) cover every slot; the selector never touches
+            // the bucket's compressor (or its RNG stream) for k == 0.
+            Some(sel) => sel.compress_step(
+                &mut *self.bucket_compressors[b],
+                b,
+                u,
+                k,
+                &mut self.workspace,
+            ),
+            None if k == 0 => {
+                // k_b == 0: send nothing; ε_b absorbs the whole slice
+                // (and the bucket's compressor — including any RNG
+                // stream — is left untouched).
+                SparseVec::new(hi - lo)
+            }
+            None => self.bucket_compressors[b].compress_step(u, k, &mut self.workspace),
         };
+        self.select_us += t0.elapsed().as_secs_f64() * 1e6;
         self.residual.update_range(&sent, lo);
         sent
     }

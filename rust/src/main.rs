@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
                  \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
                  \x20         [--bucket-apportion size|mass|mass:ema=BETA]\n\
                  \x20         [--global-topk true --exchange dense-ring|tree-sparse]\n\
+                 \x20         [--select exact|warm:TAU]\n\
                  \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
                  \x20         [--plan plan.json] [--backend native|pjrt --model <name>]\n\
                  tune      [--model resnet50] [--nodes 4 --gpus 4] [--k-ratio 0.001]\n\
@@ -92,6 +93,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "steps_per_epoch",
         "global_topk",
         "exchange",
+        "select",
     ] {
         if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
             raw.set(&format!("train.{key}={v}"))?;
@@ -103,7 +105,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = TrainConfig::from_raw(&raw)?;
     println!(
         "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={} \
-         k_schedule={} exchange={}",
+         k_schedule={} exchange={} select={}",
         cfg.op.name(),
         cfg.workers,
         cfg.steps,
@@ -112,7 +114,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.parallelism.name(),
         cfg.buckets.name(),
         cfg.k_schedule.name(),
-        cfg.exchange.name()
+        cfg.exchange.name(),
+        cfg.select.name()
     );
 
     let backend = args.get_or("backend", "native");

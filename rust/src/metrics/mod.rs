@@ -33,6 +33,12 @@ pub struct StepRecord {
     /// cost). The pooled-vs-scoped win made visible in every trace
     /// (CSV/JSON).
     pub spawn_or_dispatch_us: f64,
+    /// CPU microseconds spent in gradient *selection* (compression) this
+    /// step, summed over all workers — the `select = exact | warm:TAU`
+    /// axis made visible in every trace. A sum (not a mean or max), so
+    /// the number is well-defined and comparable across the serial,
+    /// scoped, and pooled runtimes regardless of worker placement.
+    pub select_us: f64,
 }
 
 /// Periodic evaluation record.
@@ -166,6 +172,15 @@ impl RunMetrics {
                         .collect(),
                 ),
             )
+            .set(
+                "select_us",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| Json::from(s.select_us))
+                        .collect(),
+                ),
+            )
             .set("mean_step_s", Json::from(self.step_time.mean()));
         o
     }
@@ -179,6 +194,15 @@ impl RunMetrics {
         self.steps.iter().map(|s| s.spawn_or_dispatch_us).sum::<f64>() / self.steps.len() as f64
     }
 
+    /// Mean per-step selection time (µs, all-worker sum per step) — the
+    /// headline number of the warm-vs-exact selection comparison.
+    pub fn mean_select_us(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.select_us).sum::<f64>() / self.steps.len() as f64
+    }
+
     /// Write step records as CSV.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
@@ -187,19 +211,20 @@ impl RunMetrics {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us"
+            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us,select_us"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{}",
                 s.step,
                 s.loss,
                 s.sent_elements,
                 s.target_elements,
                 s.density,
                 s.wall_s,
-                s.spawn_or_dispatch_us
+                s.spawn_or_dispatch_us,
+                s.select_us
             )?;
         }
         Ok(())
@@ -219,6 +244,7 @@ mod tests {
             density: 0.001,
             wall_s: 0.01,
             spawn_or_dispatch_us: 12.5,
+            select_us: 40.0,
         }
     }
 
@@ -262,9 +288,10 @@ mod tests {
         let path = dir.join("run.csv");
         m.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        let header = "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us";
+        let header =
+            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us,select_us";
         assert!(text.starts_with(header));
-        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5"));
+        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5,40"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -279,6 +306,7 @@ mod tests {
             j.get("spawn_or_dispatch_us").unwrap().as_arr().unwrap().len(),
             1
         );
+        assert_eq!(j.get("select_us").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("name").unwrap().as_str(), Some("run"));
     }
 
@@ -293,6 +321,19 @@ mod tests {
         m.record_step(a);
         m.record_step(b);
         assert_eq!(m.mean_spawn_or_dispatch_us(), 20.0);
+    }
+
+    #[test]
+    fn select_time_mean() {
+        let mut m = RunMetrics::new("t");
+        assert_eq!(m.mean_select_us(), 0.0);
+        let mut a = rec(0, 1.0, 5);
+        a.select_us = 100.0;
+        let mut b = rec(1, 1.0, 5);
+        b.select_us = 50.0;
+        m.record_step(a);
+        m.record_step(b);
+        assert_eq!(m.mean_select_us(), 75.0);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use sparkv::autotune::{
     SuccessiveHalving, TuneScenario, TunedPlan,
 };
 use sparkv::compress::OpKind;
-use sparkv::config::{BucketApportion, Buckets, Parallelism, RawConfig, TrainConfig};
+use sparkv::config::{BucketApportion, Buckets, Exchange, Parallelism, RawConfig, Select, TrainConfig};
 use sparkv::coordinator::train;
 use sparkv::data::GaussianMixture;
 use sparkv::models::NativeMlp;
@@ -189,6 +189,11 @@ fn prop_tuned_plans_are_seed_deterministic_and_budget_exact() {
                 .into_iter()
                 .map(|i| [Parallelism::Serial, Parallelism::Threads(4), Parallelism::Pool(4)][i])
                 .collect(),
+            exchanges: pick(g, &[0, 1])
+                .into_iter()
+                .map(|i| [Exchange::DenseRing, Exchange::TreeSparse][i])
+                .collect(),
+            selects: vec![Select::Exact, Select::Warm { tau: g.f64_in(0.05, 0.5) }],
         };
         let seed = g.rng.next_u64() & 0xFFFF_FFFF;
         let strategy_pick = g.usize_in(0, 2);

@@ -29,6 +29,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     }
 }
 

@@ -186,6 +186,7 @@ fn distributed_training_through_pjrt_learns() {
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
@@ -274,6 +275,7 @@ fn lm_small_trains_through_pjrt() {
         k_schedule: sparkv::schedule::KSchedule::Const(None),
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;

@@ -56,6 +56,7 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         k_schedule: KSchedule::Const(None),
         steps_per_epoch: 5,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     }
 }
 

@@ -181,6 +181,7 @@ fn cfg(op: OpKind, schedule: KSchedule, parallelism: Parallelism) -> TrainConfig
         k_schedule: schedule,
         steps_per_epoch: 4,
         exchange: sparkv::config::Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
     }
 }
 

@@ -1,0 +1,300 @@
+//! The warm-threshold selection equivalence suite: locks the PR-8
+//! tentpole invariant that `select = warm:TAU` changes *where selection
+//! time goes*, never *what is selected or learned* in any way that is
+//! runtime- or placement-dependent:
+//!
+//! 1. warm runs are **bit-identical** across serial / threads:N / pool:N
+//!    on both bucket paths and every schedule family (the threshold
+//!    cache lives in per-worker state, so placement cannot leak in);
+//! 2. for the exact operator (Top_k) under a `const` schedule, warm is
+//!    bit-identical to `select = exact` end to end — the warm band plus
+//!    O(hits) truncation reproduces exact top-k selection, payload for
+//!    payload (schedule-feedback timing differs under adaptive/mass, so
+//!    those compare by invariants, not bits);
+//! 3. the warm payload contract: exactly `min(k, d)` elements per worker
+//!    per step, so `sent_elements == target_elements` always;
+//! 4. error-feedback conservation: payload values are unmodified
+//!    coordinates of the EF-corrected gradient and the residual absorbs
+//!    exactly the unsent remainder (property test);
+//! 5. `select = warm` on a non-thresholded operator degrades to exact
+//!    delegation — bit-identical to `select = exact` for every such op;
+//! 6. `select_us` accounting: finite and ≥ 0 on every runtime, > 0 in
+//!    the mean for sparse selection.
+
+use sparkv::compress::{OpKind, TopK, WarmSelector, Workspace};
+use sparkv::config::{BucketApportion, Buckets, Parallelism, Select, TrainConfig};
+use sparkv::coordinator::{train, TrainOutput};
+use sparkv::data::GaussianMixture;
+use sparkv::models::NativeMlp;
+use sparkv::schedule::KSchedule;
+use sparkv::util::testkit::{self, Gen};
+
+fn cfg(op: OpKind, buckets: Buckets, select: Select) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        op,
+        k_ratio: 0.01,
+        batch_size: 16,
+        steps: 12,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: 7,
+        eval_every: 6,
+        hist_every: 0,
+        momentum_correction: false,
+        global_topk: false,
+        parallelism: Parallelism::Serial,
+        buckets,
+        bucket_apportion: BucketApportion::Size,
+        k_schedule: KSchedule::Const(None),
+        steps_per_epoch: 5,
+        exchange: sparkv::config::Exchange::DenseRing,
+        select,
+    }
+}
+
+fn setup() -> (GaussianMixture, NativeMlp) {
+    (
+        GaussianMixture::new(16, 4, 2.5, 1.0, 11),
+        NativeMlp::new(&[16, 32, 4]),
+    )
+}
+
+fn assert_runs_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.final_params, b.final_params, "{what}: final params diverged");
+    assert_eq!(a.metrics.steps.len(), b.metrics.steps.len(), "{what}");
+    for (sa, sb) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "{what}: step {}", sa.step);
+        assert_eq!(sa.sent_elements, sb.sent_elements, "{what}: step {}", sa.step);
+        assert_eq!(sa.density.to_bits(), sb.density.to_bits(), "{what}: step {}", sa.step);
+    }
+    for (ea, eb) in a.metrics.evals.iter().zip(&b.metrics.evals) {
+        assert_eq!(ea.accuracy.to_bits(), eb.accuracy.to_bits(), "{what}: eval {}", ea.step);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. Runtime invariance of warm selection.
+// ---------------------------------------------------------------------
+
+/// Both warm-eligible operators × both bucket paths × every schedule
+/// family: serial ≡ threads:3 ≡ pool:3 bit-for-bit under `warm:0.25`.
+/// The adaptive leg also locks the fused-histogram feedback path (warm
+/// substitutes its one-step-stale fused stats for the trainer's sweep —
+/// that substitution must resolve identically on every runtime).
+#[test]
+fn warm_is_bit_identical_across_runtimes() {
+    let (data, mut model) = setup();
+    let schedules = [
+        KSchedule::Const(None),
+        KSchedule::Warmup { from: 0.1, to: 0.01, epochs: 2 },
+        KSchedule::Adaptive { delta: 0.8 },
+    ];
+    for op in [OpKind::TopK, OpKind::GaussianK] {
+        for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+            for schedule in schedules {
+                let mk = |parallelism| {
+                    let mut c = cfg(op, buckets, Select::Warm { tau: 0.25 });
+                    c.parallelism = parallelism;
+                    c.k_schedule = schedule;
+                    c
+                };
+                let what =
+                    format!("warm/{}/{}/{}", op.name(), buckets.name(), schedule.name());
+                let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+                let threaded = train(mk(Parallelism::Threads(3)), &mut model, &data).unwrap();
+                let pooled = train(mk(Parallelism::Pool(3)), &mut model, &data).unwrap();
+                assert_runs_bit_identical(&serial, &threaded, &format!("{what}/threads"));
+                assert_runs_bit_identical(&serial, &pooled, &format!("{what}/pool"));
+            }
+        }
+    }
+}
+
+/// Warm under mass apportionment (the stale-by-one fused masses steer
+/// the split) stays runtime-invariant and budget-exact.
+#[test]
+fn warm_mass_apportionment_runtime_invariant_and_budget_exact() {
+    let (data, mut model) = setup();
+    let mk = |parallelism| {
+        let mut c = cfg(OpKind::TopK, Buckets::Bytes(1024), Select::Warm { tau: 0.25 });
+        c.bucket_apportion = BucketApportion::mass();
+        c.parallelism = parallelism;
+        c.steps = 20;
+        c
+    };
+    let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+    let threaded = train(mk(Parallelism::Threads(2)), &mut model, &data).unwrap();
+    let pooled = train(mk(Parallelism::Pool(3)), &mut model, &data).unwrap();
+    assert_runs_bit_identical(&serial, &threaded, "warm-mass/threads");
+    assert_runs_bit_identical(&serial, &pooled, "warm-mass/pool");
+    for s in &serial.metrics.steps {
+        assert_eq!(s.sent_elements, s.target_elements, "step {}", s.step);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Warm ≡ exact for the exact operator.
+// ---------------------------------------------------------------------
+
+/// Under a `const` schedule (no feedback-timing difference to absorb),
+/// `warm:τ` Top_k training is bit-identical to `exact` Top_k training on
+/// both bucket paths, for several τ: the warm band over-collects, the
+/// O(hits) truncation reproduces exact top-k with the same tie-break.
+#[test]
+fn warm_topk_matches_exact_topk_end_to_end() {
+    let (data, mut model) = setup();
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        let exact = train(cfg(OpKind::TopK, buckets, Select::Exact), &mut model, &data).unwrap();
+        for tau in [0.1, 0.25, 0.5] {
+            let warm =
+                train(cfg(OpKind::TopK, buckets, Select::Warm { tau }), &mut model, &data)
+                    .unwrap();
+            assert_runs_bit_identical(
+                &exact,
+                &warm,
+                &format!("topk-warm:{tau}/{}", buckets.name()),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Payload-count contract.
+// ---------------------------------------------------------------------
+
+/// Warm selection sends exactly the target volume every step — for
+/// Gaussian_k too, whose exact path may over/under-select: the warm
+/// engine's truncation/rescan pins the count at `min(k, d)`.
+#[test]
+fn warm_sends_exactly_the_target_volume() {
+    let (data, mut model) = setup();
+    for op in [OpKind::TopK, OpKind::GaussianK] {
+        for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+            let run =
+                train(cfg(op, buckets, Select::Warm { tau: 0.25 }), &mut model, &data).unwrap();
+            for s in &run.metrics.steps {
+                assert_eq!(
+                    s.sent_elements, s.target_elements,
+                    "{}/{} step {}",
+                    op.name(),
+                    buckets.name(),
+                    s.step
+                );
+            }
+            // And it actually trains (EF keeps the unsent mass).
+            assert!(run.metrics.final_loss().unwrap().is_finite());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Error-feedback conservation (property).
+// ---------------------------------------------------------------------
+
+/// Random EF streams through a warm selector: every payload value is an
+/// unmodified coordinate of the EF-corrected gradient, the count is
+/// exactly `min(k, d)`, and the post-step residual equals the unsent
+/// remainder coordinate-for-coordinate — no gradient mass is created or
+/// destroyed by warm selection.
+#[test]
+fn prop_warm_ef_conserves_gradient_mass() {
+    testkit::forall("warm-ef-mass", |g: &mut Gen| {
+        let d = g.usize_in(64, 2048);
+        let tau = g.f64_in(0.05, 0.9);
+        let mut sel = WarmSelector::new(tau);
+        let mut op = TopK::new();
+        let mut ws = Workspace::new();
+        let mut residual = vec![0.0f32; d];
+        for _ in 0..g.usize_in(3, 8) {
+            let grad = g.mixed_vec(d);
+            let k = g.usize_in(1, d);
+            // EF: compress residual + grad, keep the remainder.
+            let acc: Vec<f32> = residual.iter().zip(&grad).map(|(r, x)| r + x).collect();
+            let s = sel.compress_step(&mut op, 0, &acc, k, &mut ws);
+            if s.nnz() != k.min(d) {
+                return Err(format!("sent {} of min({k},{d})", s.nnz()));
+            }
+            let mut sent = vec![false; d];
+            for (&i, &v) in s.indices.iter().zip(&s.values) {
+                if acc[i as usize].to_bits() != v.to_bits() {
+                    return Err(format!("payload mutated coordinate {i}"));
+                }
+                sent[i as usize] = true;
+            }
+            for i in 0..d {
+                residual[i] = if sent[i] { 0.0 } else { acc[i] };
+            }
+            // Conservation: payload mass + residual mass == acc mass.
+            let m_acc: f64 = acc.iter().map(|v| *v as f64).sum();
+            let m_sent: f64 = s.values.iter().map(|v| *v as f64).sum();
+            let m_res: f64 = residual.iter().map(|v| *v as f64).sum();
+            if (m_sent + m_res - m_acc).abs() > 1e-3 * (1.0 + m_acc.abs()) {
+                return Err(format!("mass leak: {m_sent} + {m_res} != {m_acc}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// 5. Non-thresholded operators degrade to exact delegation.
+// ---------------------------------------------------------------------
+
+/// `select = warm` on an operator with no threshold concept (everything
+/// except Top_k / Gaussian_k) must train bit-identically to
+/// `select = exact` — the config is accepted, the selector is never
+/// installed, and no behavior changes.
+#[test]
+fn warm_on_non_thresholded_ops_is_exact() {
+    let (data, mut model) = setup();
+    for &op in OpKind::all() {
+        if op.warm_eligible() {
+            continue;
+        }
+        let exact =
+            train(cfg(op, Buckets::None, Select::Exact), &mut model, &data).unwrap();
+        let warm = train(cfg(op, Buckets::None, Select::Warm { tau: 0.25 }), &mut model, &data)
+            .unwrap();
+        assert_runs_bit_identical(&exact, &warm, &format!("degrade/{}", op.name()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// 6. select_us accounting.
+// ---------------------------------------------------------------------
+
+/// The `select_us` trace field: finite and ≥ 0 on every runtime and both
+/// bucket paths, with a strictly positive mean for sparse selection
+/// (both select modes time the same hot section).
+#[test]
+fn select_us_accounting_per_runtime() {
+    let (data, mut model) = setup();
+    for select in [Select::Exact, Select::Warm { tau: 0.25 }] {
+        for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+            for parallelism in
+                [Parallelism::Serial, Parallelism::Threads(2), Parallelism::Pool(2)]
+            {
+                let mut c = cfg(OpKind::TopK, buckets, select);
+                c.parallelism = parallelism;
+                let run = train(c, &mut model, &data).unwrap();
+                assert!(
+                    run.metrics
+                        .steps
+                        .iter()
+                        .all(|s| s.select_us.is_finite() && s.select_us >= 0.0),
+                    "{}/{}: bad select_us trace",
+                    select.name(),
+                    parallelism.name()
+                );
+                assert!(
+                    run.metrics.mean_select_us() > 0.0,
+                    "{}/{}: selection took no measurable time",
+                    select.name(),
+                    parallelism.name()
+                );
+            }
+        }
+    }
+}
