@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                 steps_per_epoch: 100,
                 exchange: sparkv::config::Exchange::DenseRing,
                 select: sparkv::config::Select::Exact,
+                wire: sparkv::tensor::wire::WireCodec::Raw,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

@@ -82,6 +82,7 @@ fn main() -> anyhow::Result<()> {
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

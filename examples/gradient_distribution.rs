@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

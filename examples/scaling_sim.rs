@@ -122,6 +122,8 @@ fn main() -> anyhow::Result<()> {
             buckets: 1,
             host_overhead_s: runtime_overhead_s(parallelism, topo.world_size()),
             exchange: Exchange::DenseRing,
+            wire: sparkv::tensor::wire::WireCodec::Raw,
+            wire_cpu_per_elem_s: sparkv::netsim::WIRE_PACK_PER_ELEM_S,
         };
         let b = Simulator::new(cfg).mean_iteration(20);
         println!(

@@ -71,6 +71,22 @@ select-smoke:
     cd rust && cargo run --release -- train --op gaussiank --select warm:0.25 \
         --workers 4 --steps 6 --buckets bytes:1024
 
+# The wire-smoke leg of bench-smoke: the bitpacked wire codec end to end
+# — the codec bench in fast mode (writes BENCH_wire.json at the repo root
+# with bytes/element, reduction vs raw, and round-trip GB/s for both
+# payload families), then a short *real* `--wire packed` training run on
+# both bucket paths (bit-identical to raw by construction;
+# tests/wire_equivalence.rs locks it) and a `--wire packed+f16` run with
+# the quantization residual folded into error feedback.
+wire-smoke:
+    cd rust && SPARKV_BENCH_FAST=1 cargo bench --bench wire_speed
+    cd rust && cargo run --release -- train --op topk --wire packed \
+        --workers 4 --steps 6
+    cd rust && cargo run --release -- train --op topk --wire packed \
+        --workers 4 --steps 6 --buckets bytes:1024
+    cd rust && cargo run --release -- train --op topk --wire packed+f16 \
+        --workers 4 --steps 6
+
 # The tune-smoke CI job, locally: the closed-loop autotuner end to end on
 # a tiny grid (2 candidates, 3 measured calibration probe steps, 3
 # virtual steps/epoch), then a real training replay of the plan it wrote

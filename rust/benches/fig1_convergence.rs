@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             steps_per_epoch: 100,
             exchange: sparkv::config::Exchange::DenseRing,
             select: sparkv::config::Select::Exact,
+            wire: sparkv::tensor::wire::WireCodec::Raw,
         };
         let out = train(cfg, &mut model, &data)?;
         let series = out.metrics.smoothed_loss((steps / 10).max(1));

@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

@@ -20,7 +20,15 @@
 //! * `bandwidth_scale` — a timed in-process ring all-reduce gives this
 //!   host's achievable bytes/second for collective traffic; the scale is
 //!   that throughput over the scenario link's modelled effective
-//!   bandwidth.
+//!   bandwidth. The probe's link-byte count comes from the same
+//!   [`ring_allreduce_link_bytes`] formula the cost model prices, so the
+//!   two stay reconciled — including when the payload has been shrunk by
+//!   the wire codec.
+//! * `wire_pack_per_elem_s` — a timed encode+decode round trip of a
+//!   packed sparse payload gives this host's codec CPU cost per element
+//!   (the measured twin of [`crate::netsim::WIRE_PACK_PER_ELEM_S`]); the
+//!   oracle charges `2·k·const` into the comm span of `wire = packed`
+//!   candidates.
 //!
 //! Calibration is measurement: it is **not deterministic** across runs or
 //! machines, which is exactly its purpose. The tuner therefore keeps it
@@ -31,7 +39,12 @@ use crate::collectives::{Collectives, SerialCollectives};
 use crate::config::{Parallelism, TrainConfig};
 use crate::data::GaussianMixture;
 use crate::models::{Model, NativeMlp};
-use crate::netsim::{POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S};
+use crate::netsim::{
+    ring_allreduce_link_bytes, POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S,
+    WIRE_PACK_PER_ELEM_S,
+};
+use crate::tensor::wire::{WireCodec, WireScratch};
+use crate::tensor::SparseVec;
 use crate::util::json::Json;
 
 use super::space::TuneScenario;
@@ -48,6 +61,10 @@ pub struct Calibration {
     /// Host-vs-modelled link bandwidth factor applied to the scenario's
     /// links.
     pub bandwidth_scale: f64,
+    /// Measured wire-codec CPU cost per sparse element (seconds); the
+    /// oracle charges `2·k` of these (encode + decode) for packed
+    /// candidates.
+    pub wire_pack_per_elem_s: f64,
     /// Probe length the constants were fitted from.
     pub probe_steps: usize,
 }
@@ -61,6 +78,7 @@ impl Calibration {
             pool_dispatch_per_thread_s: POOL_DISPATCH_PER_THREAD_S,
             compute_scale: 1.0,
             bandwidth_scale: 1.0,
+            wire_pack_per_elem_s: WIRE_PACK_PER_ELEM_S,
             probe_steps: 0,
         }
     }
@@ -74,6 +92,7 @@ impl Calibration {
             )
             .set("compute_scale", Json::from(self.compute_scale))
             .set("bandwidth_scale", Json::from(self.bandwidth_scale))
+            .set("wire_pack_per_elem_s", Json::from(self.wire_pack_per_elem_s))
             .set("probe_steps", Json::from(self.probe_steps));
         o
     }
@@ -89,6 +108,12 @@ impl Calibration {
             pool_dispatch_per_thread_s: num("pool_dispatch_per_thread_s")?,
             compute_scale: num("compute_scale")?,
             bandwidth_scale: num("bandwidth_scale")?,
+            // Plans calibrated before the wire axis carry no key: they
+            // fall back to the stock codec constant.
+            wire_pack_per_elem_s: j
+                .get("wire_pack_per_elem_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(WIRE_PACK_PER_ELEM_S),
             probe_steps: num("probe_steps")? as usize,
         })
     }
@@ -101,6 +126,7 @@ impl Calibration {
             ("pool_dispatch_per_thread_s", self.pool_dispatch_per_thread_s),
             ("compute_scale", self.compute_scale),
             ("bandwidth_scale", self.bandwidth_scale),
+            ("wire_pack_per_elem_s", self.wire_pack_per_elem_s),
         ] {
             anyhow::ensure!(
                 v.is_finite() && v > 0.0,
@@ -213,7 +239,7 @@ impl Calibrator {
             std::hint::black_box(engine.ring_allreduce_avg(std::hint::black_box(&inputs)));
         }
         let elapsed = t0.elapsed().as_secs_f64() / reps as f64;
-        let bytes_moved = 2.0 * (p as f64 - 1.0) * (elems as f64 * 4.0 / p as f64);
+        let bytes_moved = ring_allreduce_link_bytes(p, elems as u64 * 4);
         let modelled_bps = scenario.topo.ring_bottleneck().effective_bandwidth();
         let bandwidth_scale = if elapsed > 0.0 && modelled_bps > 0.0 {
             (bytes_moved / elapsed) / modelled_bps
@@ -221,11 +247,37 @@ impl Calibrator {
             1.0
         };
 
+        // Wire-codec probe: time a packed encode+decode round trip of a
+        // realistic top-k payload (clustered-ish stride-3 indices over a
+        // 1M-element domain) and spread the wall over the 2·k element
+        // touches the oracle charges. Zero-resolution clocks fall back to
+        // the stock constant.
+        let k_probe = 1usize << 14;
+        let pairs: Vec<(u32, f32)> = (0..k_probe)
+            .map(|i| ((i * 3) as u32, (i as f32).sin()))
+            .collect();
+        let mut probe_vec = SparseVec::from_pairs(1 << 20, pairs);
+        let mut scratch = WireScratch::default();
+        let t0 = std::time::Instant::now();
+        let wire_reps = 8usize;
+        for _ in 0..wire_reps {
+            std::hint::black_box(
+                WireCodec::Packed.roundtrip(std::hint::black_box(&mut probe_vec), &mut scratch),
+            );
+        }
+        let wire_elapsed = t0.elapsed().as_secs_f64() / wire_reps as f64;
+        let wire_pack_per_elem_s = if wire_elapsed > 0.0 {
+            wire_elapsed / (2.0 * k_probe as f64)
+        } else {
+            WIRE_PACK_PER_ELEM_S
+        };
+
         let cal = Calibration {
             spawn_per_thread_s,
             pool_dispatch_per_thread_s,
             compute_scale,
             bandwidth_scale,
+            wire_pack_per_elem_s,
             probe_steps: self.probe_steps.max(1),
         };
         cal.validate()?;
@@ -263,6 +315,7 @@ mod tests {
             pool_dispatch_per_thread_s: 1.1e-6,
             compute_scale: 3.5,
             bandwidth_scale: 12.0,
+            wire_pack_per_elem_s: 2.0e-9,
             probe_steps: 8,
         };
         let j = Json::parse(&cal.to_json().to_string()).unwrap();
@@ -272,6 +325,22 @@ mod tests {
         assert!(bad.validate().is_err());
         bad.compute_scale = f64::NAN;
         assert!(bad.validate().is_err());
+        bad.compute_scale = 3.5;
+        bad.wire_pack_per_elem_s = 0.0;
+        assert!(bad.validate().is_err());
+        // A calibration written before the wire axis (no codec key)
+        // parses with the stock constant.
+        let mut legacy = Json::obj();
+        legacy
+            .set("spawn_per_thread_s", Json::from(2.5e-5))
+            .set("pool_dispatch_per_thread_s", Json::from(1.1e-6))
+            .set("compute_scale", Json::from(3.5))
+            .set("bandwidth_scale", Json::from(12.0))
+            .set("probe_steps", Json::from(8usize));
+        assert_eq!(
+            Calibration::from_json(&legacy).unwrap().wire_pack_per_elem_s,
+            WIRE_PACK_PER_ELEM_S
+        );
     }
 
     #[test]
@@ -291,5 +360,6 @@ mod tests {
         assert!(cal.spawn_per_thread_s > 0.0);
         assert!(cal.pool_dispatch_per_thread_s > 0.0);
         assert!(cal.compute_scale > 0.0 && cal.bandwidth_scale > 0.0);
+        assert!(cal.wire_pack_per_elem_s > 0.0 && cal.wire_pack_per_elem_s.is_finite());
     }
 }

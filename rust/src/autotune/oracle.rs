@@ -6,7 +6,10 @@
 use super::calibrate::Calibration;
 use super::space::{Candidate, TuneScenario};
 use crate::config::Parallelism;
-use crate::netsim::{runtime_overhead_s, runtime_overhead_with, OpCostModel, SimConfig, Simulator};
+use crate::netsim::{
+    runtime_overhead_s, runtime_overhead_with, OpCostModel, SimConfig, Simulator,
+    WIRE_PACK_PER_ELEM_S,
+};
 use crate::schedule::density_trace;
 
 /// Modeled fraction of steps a `warm:TAU` candidate serves from its
@@ -151,6 +154,13 @@ impl<'a> CostOracle<'a> {
             buckets: scen.sim_buckets(cand.buckets),
             host_overhead_s,
             exchange: cand.exchange,
+            // The wire axis prices through the simulator: encoded link
+            // bytes via `WireCodec::model_bytes`, plus encode/decode CPU
+            // at the (calibrator-replaceable) per-element constant.
+            wire: cand.wire,
+            wire_cpu_per_elem_s: self
+                .calibration
+                .map_or(WIRE_PACK_PER_ELEM_S, |c| c.wire_pack_per_elem_s),
         });
         // Warm-selection credit: a `warm:TAU` candidate on a thresholded
         // operator replaces the cold per-step derivation with the fused
@@ -205,6 +215,7 @@ mod tests {
             parallelism,
             exchange: crate::config::Exchange::DenseRing,
             select: crate::config::Select::Exact,
+            wire: crate::tensor::wire::WireCodec::Raw,
         }
         .normalized()
     }
@@ -240,6 +251,8 @@ mod tests {
             buckets: 1,
             host_overhead_s: 0.0,
             exchange: crate::config::Exchange::DenseRing,
+            wire: crate::tensor::wire::WireCodec::Raw,
+            wire_cpu_per_elem_s: WIRE_PACK_PER_ELEM_S,
         });
         let mut want = 0.0f64;
         for _ in 0..scen.steps_per_epoch {
@@ -357,6 +370,7 @@ mod tests {
             pool_dispatch_per_thread_s: 1e-4,
             compute_scale: 2.0,
             bandwidth_scale: 1.0,
+            wire_pack_per_elem_s: 1.0e-9,
             probe_steps: 3,
         };
         let stock = CostOracle::new(&scen, None);
@@ -379,6 +393,46 @@ mod tests {
         let fast_oracle = CostOracle::new(&scen, Some(&fast));
         let dense = cand(OpKind::Dense, Buckets::None, Parallelism::Serial);
         assert!(fast_oracle.predict(&dense).comm_s < stock.predict(&dense).comm_s);
+    }
+
+    #[test]
+    fn packed_wire_prices_into_the_prediction() {
+        use crate::tensor::wire::WireCodec;
+        // Same candidate, packed wire: cheaper comm (fewer link bytes net
+        // of the codec CPU toll at the paper's 10 GbE scale), identical
+        // select/launch charges; f16 values cut comm further still.
+        let scen = TuneScenario::default_16gpu();
+        let oracle = CostOracle::new(&scen, None);
+        let raw = cand(OpKind::TopK, Buckets::None, Parallelism::Serial);
+        let mut packed = raw.clone();
+        packed.wire = WireCodec::Packed;
+        let mut f16 = raw.clone();
+        f16.wire = WireCodec::PackedF16;
+        let r = oracle.predict(&raw);
+        let p = oracle.predict(&packed);
+        let h = oracle.predict(&f16);
+        assert!(p.comm_s < r.comm_s, "packed {} !< raw {}", p.comm_s, r.comm_s);
+        assert!(h.comm_s < p.comm_s, "f16 {} !< packed {}", h.comm_s, p.comm_s);
+        assert!(p.epoch_s < r.epoch_s);
+        assert_eq!(p.select_s.to_bits(), r.select_s.to_bits());
+        assert_eq!(p.host_overhead_s.to_bits(), r.host_overhead_s.to_bits());
+        // A calibrated codec constant changes the CPU toll: an absurdly
+        // expensive encoder erodes the packed advantage.
+        let slow_codec = Calibration {
+            spawn_per_thread_s: 1e-5,
+            pool_dispatch_per_thread_s: 1e-6,
+            compute_scale: 1.0,
+            bandwidth_scale: 1.0,
+            wire_pack_per_elem_s: 1.0e-6,
+            probe_steps: 3,
+        };
+        let slow = CostOracle::new(&scen, Some(&slow_codec));
+        let p_slow = slow.predict(&packed);
+        let r_slow = slow.predict(&raw);
+        assert!(
+            p_slow.comm_s - r_slow.comm_s > (p.comm_s - r.comm_s),
+            "raising the codec constant must raise packed's relative comm bill"
+        );
     }
 
     #[test]

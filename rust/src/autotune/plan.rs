@@ -325,7 +325,7 @@ impl TunedPlan {
     }
 
     /// Map the plan onto `[train]` config keys (the replay path of
-    /// `sparkv train --plan`): the six searched knobs plus the
+    /// `sparkv train --plan`): every searched knob plus the
     /// scenario's base density *and* epoch length — a warmup-style
     /// schedule converts `epochs=E` through `steps_per_epoch`, so the
     /// replayed density trace matches the one the plan was scored on.
@@ -344,6 +344,8 @@ impl TunedPlan {
         ))?;
         raw.set(&format!("train.parallelism={}", self.chosen.parallelism.name()))?;
         raw.set(&format!("train.exchange={}", self.chosen.exchange.name()))?;
+        raw.set(&format!("train.select={}", self.chosen.select.name()))?;
+        raw.set(&format!("train.wire={}", self.chosen.wire.name()))?;
         if self.chosen.exchange.is_tree() {
             raw.set("train.global_topk=true")?;
         }
@@ -438,6 +440,8 @@ mod tests {
         assert_eq!(from_raw.bucket_apportion, typed.bucket_apportion);
         assert_eq!(from_raw.parallelism, typed.parallelism);
         assert_eq!(from_raw.exchange, typed.exchange);
+        assert_eq!(from_raw.select, typed.select);
+        assert_eq!(from_raw.wire, typed.wire);
         assert_eq!(from_raw.global_topk, typed.global_topk);
         assert_eq!(from_raw.k_ratio, typed.k_ratio);
         assert_eq!(typed.k_ratio, scen.k_ratio);
@@ -479,6 +483,7 @@ mod tests {
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing],
             selects: vec![Select::Exact],
+            wires: vec![crate::tensor::wire::WireCodec::Raw],
         };
         let plan = tune(&scen, &space, &mut ExhaustiveGrid, 5, None);
         assert_eq!(plan.chosen, Candidate::baseline());
@@ -502,6 +507,7 @@ mod tests {
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing],
             selects: vec![Select::Exact],
+            wires: vec![crate::tensor::wire::WireCodec::Raw],
         };
         let mut halving = crate::autotune::strategy::SuccessiveHalving {
             promote: 1,
@@ -537,6 +543,7 @@ mod tests {
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing, Exchange::TreeSparse],
             selects: vec![Select::Exact],
+            wires: vec![crate::tensor::wire::WireCodec::Raw],
         };
 
         let wide = quick_scenario(); // 4 nodes × 4 GPUs over 10 GbE

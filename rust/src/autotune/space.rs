@@ -5,6 +5,7 @@ use crate::compress::OpKind;
 use crate::config::{BucketApportion, Buckets, Exchange, Parallelism, Select, TrainConfig};
 use crate::netsim::{ComputeProfile, LinkSpec, Topology};
 use crate::schedule::KSchedule;
+use crate::tensor::wire::WireCodec;
 use crate::util::json::Json;
 
 /// The netsim context candidates are scored against: which model's
@@ -118,7 +119,7 @@ impl TuneScenario {
 
 /// One point of the search space — a complete compression-plan
 /// configuration. Applying a candidate to a [`TrainConfig`] touches only
-/// the seven searched knobs; everything else (steps, lr, seed, …) stays
+/// the eight searched knobs; everything else (steps, lr, seed, …) stays
 /// with the caller — except `global_topk`, which a `tree-sparse`
 /// candidate forces on (the tree schedule only exists for the gTop-k
 /// merge).
@@ -137,6 +138,10 @@ pub struct Candidate {
     /// thresholded operators ([`OpKind::warm_eligible`]); normalization
     /// collapses it to `exact` everywhere else.
     pub select: Select,
+    /// Wire codec for sparse payloads (`raw` | `packed` | `packed+f16`) —
+    /// meaningful only on sparse ops (dense gradients never cross the
+    /// sparse codec); normalization collapses it to `raw` for dense.
+    pub wire: WireCodec,
 }
 
 impl Candidate {
@@ -153,14 +158,16 @@ impl Candidate {
             parallelism: d.parallelism,
             exchange: d.exchange,
             select: d.select,
+            wire: d.wire,
         }
     }
 
     /// Compact identity string, `op|k_schedule|buckets|apportion|runtime`
     /// (each field round-trips through its own parser), with
-    /// `|tree-sparse` and/or `|warm:TAU` appended only when the exchange
-    /// or selection engine deviates from its default — so every
-    /// pre-existing plan name is unchanged.
+    /// `|tree-sparse`, `|warm:TAU`, and/or `|packed` / `|packed+f16`
+    /// appended only when the exchange, selection engine, or wire codec
+    /// deviates from its default — so every pre-existing plan name is
+    /// unchanged.
     pub fn name(&self) -> String {
         let mut name = format!(
             "{}|{}|{}|{}|{}",
@@ -177,6 +184,10 @@ impl Candidate {
         if self.select.is_warm() {
             name.push('|');
             name.push_str(&self.select.name());
+        }
+        if self.wire.is_packed() {
+            name.push('|');
+            name.push_str(self.wire.name());
         }
         name
     }
@@ -205,6 +216,11 @@ impl Candidate {
         if !c.op.warm_eligible() {
             c.select = Select::Exact;
         }
+        // Dense gradients never cross the sparse wire codec, so the
+        // packed twins collapse onto the raw form.
+        if c.op == OpKind::Dense {
+            c.wire = WireCodec::Raw;
+        }
         c
     }
 
@@ -220,6 +236,7 @@ impl Candidate {
         cfg.parallelism = self.parallelism;
         cfg.exchange = self.exchange;
         cfg.select = self.select;
+        cfg.wire = self.wire;
         if self.exchange.is_tree() {
             cfg.global_topk = true;
         }
@@ -233,7 +250,8 @@ impl Candidate {
             .set("bucket_apportion", Json::from(self.bucket_apportion.name()))
             .set("parallelism", Json::from(self.parallelism.name()))
             .set("exchange", Json::from(self.exchange.name().as_str()))
-            .set("select", Json::from(self.select.name().as_str()));
+            .set("select", Json::from(self.select.name().as_str()))
+            .set("wire", Json::from(self.wire.name()));
         o
     }
 
@@ -261,6 +279,12 @@ impl Candidate {
                 Some(s) => Select::parse(s)?,
                 None => Select::Exact,
             },
+            // Plans written before the wire axis carry no key: they all
+            // shipped the raw 8-byte-per-pair payload.
+            wire: match j.get("wire").and_then(Json::as_str) {
+                Some(s) => WireCodec::parse(s)?,
+                None => WireCodec::Raw,
+            },
         })
     }
 }
@@ -268,10 +292,10 @@ impl Candidate {
 /// A cross-product of axis value lists. [`SearchSpace::enumerate`]
 /// produces the candidate list every strategy walks, in a fixed nested
 /// order (op → k-schedule → buckets → apportionment → parallelism →
-/// exchange → select) with config-equivalent duplicates collapsed — the
-/// enumeration order is part of the determinism contract (ranking ties
-/// break by it; the newest axis loops innermost so single-value spaces
-/// enumerate exactly as they did before each axis existed).
+/// exchange → select → wire) with config-equivalent duplicates collapsed
+/// — the enumeration order is part of the determinism contract (ranking
+/// ties break by it; the newest axis loops innermost so single-value
+/// spaces enumerate exactly as they did before each axis existed).
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
     pub ops: Vec<OpKind>,
@@ -281,6 +305,7 @@ pub struct SearchSpace {
     pub parallelisms: Vec<Parallelism>,
     pub exchanges: Vec<Exchange>,
     pub selects: Vec<Select>,
+    pub wires: Vec<WireCodec>,
 }
 
 impl SearchSpace {
@@ -313,6 +338,14 @@ impl SearchSpace {
     ///   the candidate-count assertions byte-stable. Sweep it through a
     ///   custom space (`selects: vec![Select::Exact, Select::warm(0.25)?]`)
     ///   when selection CPU is the bottleneck being tuned.
+    /// * `wire` — `packed` is lossless (identical training trajectory to
+    ///   `raw`, strictly fewer bytes minus a CPU toll the oracle prices),
+    ///   but sweeping it by default would grow the leaderboard and move
+    ///   the golden plan name / candidate-count assertions; `packed+f16`
+    ///   additionally changes numerics (f16 value quantization with EF
+    ///   residual folding). Sweep it through a custom space
+    ///   (`wires: vec![WireCodec::Raw, WireCodec::Packed]`) when link
+    ///   bytes are the bottleneck being tuned.
     pub fn default_space() -> SearchSpace {
         SearchSpace {
             ops: vec![OpKind::Dense, OpKind::TopK, OpKind::Dgc, OpKind::GaussianK],
@@ -330,6 +363,7 @@ impl SearchSpace {
             ],
             exchanges: vec![Exchange::DenseRing],
             selects: vec![Select::Exact],
+            wires: vec![WireCodec::Raw],
         }
     }
 
@@ -345,6 +379,7 @@ impl SearchSpace {
             parallelisms: vec![Parallelism::Serial],
             exchanges: vec![Exchange::DenseRing],
             selects: vec![Select::Exact],
+            wires: vec![WireCodec::Raw],
         }
     }
 
@@ -360,18 +395,21 @@ impl SearchSpace {
                         for &parallelism in &self.parallelisms {
                             for &exchange in &self.exchanges {
                                 for &select in &self.selects {
-                                    let c = Candidate {
-                                        op,
-                                        k_schedule,
-                                        buckets,
-                                        bucket_apportion,
-                                        parallelism,
-                                        exchange,
-                                        select,
-                                    }
-                                    .normalized();
-                                    if seen.insert(c.name()) {
-                                        out.push(c);
+                                    for &wire in &self.wires {
+                                        let c = Candidate {
+                                            op,
+                                            k_schedule,
+                                            buckets,
+                                            bucket_apportion,
+                                            parallelism,
+                                            exchange,
+                                            select,
+                                            wire,
+                                        }
+                                        .normalized();
+                                        if seen.insert(c.name()) {
+                                            out.push(c);
+                                        }
                                     }
                                 }
                             }
@@ -396,6 +434,7 @@ impl SearchSpace {
             || self.parallelisms.is_empty()
             || self.exchanges.is_empty()
             || self.selects.is_empty()
+            || self.wires.is_empty()
     }
 }
 
@@ -447,6 +486,7 @@ mod tests {
             parallelism: Parallelism::Pool(4),
             exchange: Exchange::DenseRing,
             select: Select::Warm { tau: 0.25 },
+            wire: WireCodec::Packed,
         };
         let j = c.to_json();
         assert_eq!(Candidate::from_json(&j).unwrap(), c);
@@ -510,6 +550,7 @@ mod tests {
             parallelism: Parallelism::Serial,
             exchange: Exchange::DenseRing,
             select: Select::Exact,
+            wire: WireCodec::Raw,
         };
         assert_eq!(c.normalized().bucket_apportion, BucketApportion::Size);
         // Dense ⇒ schedule, apportionment, exchange, and selection are
@@ -522,12 +563,14 @@ mod tests {
             parallelism: Parallelism::Pool(2),
             exchange: Exchange::TreeSparse,
             select: Select::Warm { tau: 0.25 },
+            wire: WireCodec::PackedF16,
         };
         let n = d.normalized();
         assert_eq!(n.k_schedule, KSchedule::Const(None));
         assert_eq!(n.bucket_apportion, BucketApportion::Size);
         assert_eq!(n.exchange, Exchange::DenseRing);
         assert_eq!(n.select, Select::Exact);
+        assert_eq!(n.wire, WireCodec::Raw);
         assert_eq!(n.buckets, Buckets::Layers); // bucketing still matters for dense
         // Warm sticks on the thresholded ops, collapses on the rest.
         let mut w = Candidate::baseline();
@@ -571,6 +614,48 @@ mod tests {
         assert!(!with_warm.is_empty());
         with_warm.selects = Vec::new();
         assert!(with_warm.is_empty());
+    }
+
+    #[test]
+    fn wire_candidates_name_apply_and_round_trip() {
+        let mut c = Candidate::baseline();
+        c.op = OpKind::TopK;
+        // Raw names are byte-identical to the pre-wire format.
+        assert!(!c.name().contains("raw"));
+        c.wire = WireCodec::Packed;
+        assert!(c.name().ends_with("|packed"), "{}", c.name());
+        assert_eq!(Candidate::from_json(&c.to_json()).unwrap(), c);
+        c.wire = WireCodec::PackedF16;
+        assert!(c.name().ends_with("|packed+f16"), "{}", c.name());
+        assert_eq!(Candidate::from_json(&c.to_json()).unwrap(), c);
+        // A plan JSON written before the axis existed (no `wire` key)
+        // parses as raw.
+        let mut legacy = Json::obj();
+        legacy
+            .set("op", Json::from("topk"))
+            .set("k_schedule", Json::from("const"))
+            .set("buckets", Json::from("none"))
+            .set("bucket_apportion", Json::from("size"))
+            .set("parallelism", Json::from("serial"));
+        assert_eq!(Candidate::from_json(&legacy).unwrap().wire, WireCodec::Raw);
+        // apply() threads the codec through to the config.
+        let mut cfg = TrainConfig::default();
+        c.apply(&mut cfg);
+        assert_eq!(cfg.wire, WireCodec::PackedF16);
+        cfg.validate().unwrap();
+        // Sweeping the axis doubles only the sparse candidates (dense
+        // twins collapse), appended innermost so the raw prefix order is
+        // untouched.
+        let mut with_wire = SearchSpace::default_space();
+        with_wire.wires = vec![WireCodec::Raw, WireCodec::Packed];
+        assert_eq!(with_wire.len(), 9 + 3 * 27 * 2);
+        let cands = with_wire.enumerate();
+        assert!(cands
+            .iter()
+            .filter(|c| c.wire.is_packed())
+            .all(|c| c.op != OpKind::Dense));
+        with_wire.wires = Vec::new();
+        assert!(with_wire.is_empty());
     }
 
     #[test]

@@ -138,7 +138,7 @@ impl SearchStrategy for GreedyDescent {
         let mut best = score(&current, &mut cache, &mut log, &mut evaluated);
         for _ in 0..self.max_sweeps.max(1) {
             let mut improved = false;
-            for axis in 0..7 {
+            for axis in 0..8 {
                 // Axis values in space order; the move keeps every other
                 // axis fixed and renormalizes.
                 let moves: Vec<Candidate> = match axis {
@@ -187,11 +187,19 @@ impl SearchStrategy for GreedyDescent {
                             ..current.clone()
                         })
                         .collect(),
-                    _ => space
+                    6 => space
                         .selects
                         .iter()
                         .map(|&select| Candidate {
                             select,
+                            ..current.clone()
+                        })
+                        .collect(),
+                    _ => space
+                        .wires
+                        .iter()
+                        .map(|&wire| Candidate {
+                            wire,
                             ..current.clone()
                         })
                         .collect(),

@@ -10,8 +10,9 @@ use crate::compress::OpKind;
 use crate::config::{Exchange, Parallelism};
 use crate::netsim::{
     hierarchical_allgather_time, hierarchical_allreduce_time, ComputeProfile, OpCostModel,
-    SimConfig, Simulator, Topology,
+    SimConfig, Simulator, Topology, WIRE_PACK_PER_ELEM_S,
 };
+use crate::tensor::wire::WireCodec;
 use crate::util::json::Json;
 
 /// One cell of Table 2.
@@ -145,6 +146,8 @@ pub fn scaling_table_exchange(
             buckets,
             host_overhead_s,
             exchange,
+            wire: WireCodec::Raw,
+            wire_cpu_per_elem_s: WIRE_PACK_PER_ELEM_S,
         };
         let b = Simulator::new(cfg).iteration();
         ScalingCell {
@@ -293,6 +296,8 @@ pub fn scaling_table_scheduled(
             buckets: 1,
             host_overhead_s: 0.0,
             exchange: Exchange::DenseRing,
+            wire: WireCodec::Raw,
+            wire_cpu_per_elem_s: WIRE_PACK_PER_ELEM_S,
         };
         let mut sim = Simulator::new(cfg);
         let mut iter_times_s = Vec::with_capacity(densities.len());

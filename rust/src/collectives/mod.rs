@@ -71,20 +71,35 @@
 //!
 //! | mode          | schedule                          | rounds     | busiest-link bytes          |
 //! |---------------|-----------------------------------|------------|-----------------------------|
-//! | `dense-ring`  | ring all-gather of the union      | P − 1      | `sparse_allgather_bytes` (Σ per-worker nnz · 8) |
-//! | `tree-sparse` | recursive halving over payloads   | ⌈log₂P⌉    | [`gtopk_tree_wire_bytes`] (k · 8 per round)     |
+//! | `dense-ring`  | ring all-gather of the union      | P − 1      | [`sparse_allgather_bytes`] (Σ per-worker payload bytes) |
+//! | `tree-sparse` | recursive halving over payloads   | ⌈log₂P⌉    | [`gtopk_tree_round_bytes`] (Σ actual per-round payloads; analytic cap [`gtopk_tree_wire_bytes`] = k · 8 per round under `wire = raw`) |
 //!
-//! Per round the tree moves exactly one k-truncated payload between
-//! partner ranks — 2k numbers (u32 index + f32 value), i.e. 8k bytes —
-//! so its reduction half totals `⌈log₂P⌉ · 8k`
-//! ([`gtopk_tree_wire_bytes`]); the cost model charges the round trip
-//! (reduction up plus broadcast back down, `2⌈log₂P⌉` rounds) against
-//! the dense ring's `(P − 1) · (α + union/B)` sweep. On slow links or
-//! large P the tree wins (the crossover is demonstrated in the table2
-//! bench and priced by [`crate::netsim::gtopk_tree_time`] so autotune
-//! can pick the mode per scenario).
+//! Per round the tree moves the *actual* merged payloads between partner
+//! ranks — since PR 7 the accounting sums what each round really ships
+//! ([`gtopk_tree_round_bytes`]; early rounds can carry fewer than k
+//! entries, merges truncate back to k). The analytic upper bound
+//! `⌈log₂P⌉ · 8k` ([`gtopk_tree_wire_bytes`]) survives as the closed-form
+//! cap the netsim scaling tables use. The cost model charges the round
+//! trip (reduction up plus broadcast back down, `2⌈log₂P⌉` rounds)
+//! against the dense ring's `(P − 1) · (α + union/B)` sweep. On slow
+//! links or large P the tree wins (the crossover is demonstrated in the
+//! table2 bench and priced by [`crate::netsim::gtopk_tree_time`] so
+//! autotune can pick the mode per scenario).
 //! See `tree.rs`'s module docs for the halving schedule and the proof of
 //! bit-identity with the level-list merge.
+//!
+//! ### Wire codec (`wire = raw | packed | packed+f16`)
+//!
+//! Both byte columns above default to the raw 8-byte `(u32, f32)` pair
+//! encoding. Under a packed [`crate::tensor::wire::WireCodec`] the same
+//! schedules move delta-encoded, per-block bitpacked payloads (values
+//! optionally f16), and the `_with` accounting twins
+//! ([`sparse_allgather_bytes_with`], [`gtopk_tree_round_bytes_with`])
+//! report the encoded sizes. The codec never changes the schedules or
+//! the merge numerics — `packed` is lossless (decode∘encode is the
+//! identity), and `packed+f16`'s quantization happens at the leaf send
+//! with the residual folded into error feedback before the collective
+//! runs.
 
 mod pooled;
 mod serial;
@@ -94,10 +109,13 @@ mod tree;
 pub use pooled::PooledRingCollectives;
 pub use serial::SerialCollectives;
 pub use threaded::ThreadedCollectives;
-pub use tree::{gtopk_tree_round_bytes, gtopk_tree_rounds, gtopk_tree_wire_bytes};
+pub use tree::{
+    gtopk_tree_round_bytes, gtopk_tree_round_bytes_with, gtopk_tree_rounds, gtopk_tree_wire_bytes,
+};
 
 pub(crate) use tree::finish_gtopk;
 
+use crate::tensor::wire::WireCodec;
 use crate::tensor::SparseVec;
 
 /// The collective-communication engine of the synchronous trainer: dense
@@ -192,6 +210,14 @@ pub fn gtopk_tree_allreduce_avg(inputs: &[SparseVec], k: usize) -> (Vec<f32>, Ve
 /// by the netsim α-β model).
 pub fn sparse_allgather_bytes(inputs: &[SparseVec]) -> u64 {
     inputs.iter().map(|s| s.wire_bytes()).sum()
+}
+
+/// Codec-aware twin of [`sparse_allgather_bytes`]: the same per-link
+/// traffic sum under an arbitrary wire codec. `WireCodec::Raw` reproduces
+/// the raw sum exactly; packed codecs report the encoded payload sizes
+/// (never larger — the codec escapes to raw rather than expand).
+pub fn sparse_allgather_bytes_with(inputs: &[SparseVec], codec: WireCodec) -> u64 {
+    inputs.iter().map(|s| codec.encoded_bytes(s)).sum()
 }
 
 /// Ring chunk boundaries shared by both engines: `d.div_ceil(p)`-sized
@@ -357,7 +383,13 @@ mod tests {
     fn wire_bytes() {
         let a = SparseVec::from_pairs(10, vec![(1, 1.0)]);
         let b = SparseVec::from_pairs(10, vec![(2, 1.0), (3, 1.0)]);
-        assert_eq!(sparse_allgather_bytes(&[a, b]), 24);
+        assert_eq!(sparse_allgather_bytes(&[a.clone(), b.clone()]), 24);
+        // The raw codec's twin agrees exactly; packed codecs never exceed
+        // the raw sum (the codec escapes to raw rather than expand).
+        let inputs = [a, b];
+        assert_eq!(sparse_allgather_bytes_with(&inputs, WireCodec::Raw), 24);
+        assert!(sparse_allgather_bytes_with(&inputs, WireCodec::Packed) <= 24);
+        assert!(sparse_allgather_bytes_with(&inputs, WireCodec::PackedF16) <= 24);
     }
 }
 

@@ -37,6 +37,7 @@ use std::sync::mpsc;
 use std::thread;
 
 use super::merge_truncate;
+use crate::tensor::wire::WireCodec;
 use crate::tensor::SparseVec;
 
 /// Rounds of the recursive-halving tree: ⌈log₂P⌉ (0 when P ≤ 1).
@@ -76,6 +77,20 @@ pub fn gtopk_tree_wire_bytes(p: usize, k: usize) -> u64 {
 /// to at most [`gtopk_tree_wire_bytes`]`(p, k)` — strictly less
 /// whenever any merged payload carries `nnz < k`.
 pub fn gtopk_tree_round_bytes(inputs: &[SparseVec], k: usize) -> Vec<u64> {
+    gtopk_tree_round_bytes_with(inputs, k, WireCodec::Raw)
+}
+
+/// Codec-aware twin of [`gtopk_tree_round_bytes`]: the same halving
+/// replay, with each shipped payload priced by
+/// [`WireCodec::encoded_bytes`] instead of the raw 8-byte pairs.
+/// `WireCodec::Raw` reproduces [`gtopk_tree_round_bytes`] exactly; packed
+/// codecs are entry-wise ≤ the raw profile (the codec escapes to raw
+/// rather than expand).
+pub fn gtopk_tree_round_bytes_with(
+    inputs: &[SparseVec],
+    k: usize,
+    codec: WireCodec,
+) -> Vec<u64> {
     let p = inputs.len();
     let rounds = gtopk_tree_rounds(p);
     let mut holders: Vec<Option<SparseVec>> = inputs.iter().cloned().map(Some).collect();
@@ -87,7 +102,7 @@ pub fn gtopk_tree_round_bytes(inputs: &[SparseVec], k: usize) -> Vec<u64> {
         let mut w = stride;
         while w < p {
             let theirs = holders[w].take().expect("sender already left the tree");
-            busiest = busiest.max(theirs.wire_bytes());
+            busiest = busiest.max(codec.encoded_bytes(&theirs));
             let mine = holders[w - stride].take().expect("receiver left the tree early");
             holders[w - stride] = Some(merge_truncate(&mine, &theirs, k));
             w += 2 * stride;
@@ -258,6 +273,19 @@ mod tests {
         let growing = gtopk_tree_round_bytes(&disjoint, 100);
         // Round 0 ships the 3-nnz leaves, round 1 a 6-nnz union.
         assert_eq!(growing, vec![24, 48]);
+        // The raw codec's twin agrees exactly; packed codecs never exceed
+        // the raw profile at any round.
+        assert_eq!(
+            gtopk_tree_round_bytes_with(&disjoint, 100, WireCodec::Raw),
+            growing
+        );
+        for codec in [WireCodec::Packed, WireCodec::PackedF16] {
+            let enc = gtopk_tree_round_bytes_with(&disjoint, 100, codec);
+            assert_eq!(enc.len(), growing.len());
+            for (e, r) in enc.iter().zip(&growing) {
+                assert!(e <= r, "{codec:?}: {e} > {r}");
+            }
+        }
         // With a truncating k (= the leaf nnz, as the trainer guarantees)
         // every round is capped at 8k bytes.
         let capped = gtopk_tree_round_bytes(&disjoint, 3);

@@ -29,6 +29,7 @@
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 //! | `exchange`            | `"dense-ring"` | sparse-exchange wiring for gTop-k runs: `dense-ring` (merge through the dense ring / allgather schedule) or `tree-sparse` (recursive-halving tree over sparse payloads, 2k values per round in ⌈log₂P⌉ rounds — gTopKAllReduce, Shi et al. 2019); requires `global_topk = true` and a sparse `op`; bit-identical numerics either way |
 //! | `select`              | `"exact"`  | threshold-selection engine: `exact` (cold per-step derivation — bit-identical to the pre-warm path) or `warm:TAU` with TAU ∈ (0, 1) (cross-step threshold reuse: step t seeds its selection with step t−1's refined threshold and does one fused scan, falling back to the cold path only when the hit count drifts outside `[k, (1+TAU)·k]` — see [`crate::compress::warm`]); applies to `topk`/`gaussiank`, other operators keep their exact selection |
+//! | `wire`                | `"raw"`    | sparse-payload wire codec ([`crate::tensor::wire`]): `raw` (legacy 8-byte `(u32, f32)` pairs — no codec pass), `packed` (lossless delta + per-block bitpacked indices; decode∘encode is the identity, so training stays bit-identical to `raw`), or `packed+f16` (packed indices + f16 values, the quantization residual folded into error feedback at the send site — its own trajectory, like choosing another operator) |
 //!
 //! ## Topology grammar (netsim / cluster pricing)
 //!
@@ -50,6 +51,7 @@ use std::collections::BTreeMap;
 use crate::collectives::{Collectives, PooledRingCollectives, SerialCollectives, ThreadedCollectives};
 use crate::compress::OpKind;
 use crate::schedule::KSchedule;
+use crate::tensor::wire::WireCodec;
 
 /// How the trainer runs its P simulated workers.
 ///
@@ -563,6 +565,11 @@ pub struct TrainConfig {
     /// (default; bit-identical to the pre-warm path) or the
     /// cross-step warm-threshold cache (`warm:TAU`).
     pub select: Select,
+    /// Sparse-payload wire codec ([`crate::tensor::wire`]): `raw` (the
+    /// legacy 8-byte pairs, no codec pass at all), `packed` (lossless —
+    /// bit-identical training to `raw`), or `packed+f16` (f16 values with
+    /// the quantization residual folded into error feedback).
+    pub wire: WireCodec,
 }
 
 impl Default for TrainConfig {
@@ -588,6 +595,7 @@ impl Default for TrainConfig {
             steps_per_epoch: 100,
             exchange: Exchange::DenseRing,
             select: Select::Exact,
+            wire: WireCodec::Raw,
         }
     }
 }
@@ -642,6 +650,10 @@ impl TrainConfig {
             select: match raw.get("train", "select") {
                 Some(s) => Select::parse(s)?,
                 None => d.select,
+            },
+            wire: match raw.get("train", "wire") {
+                Some(s) => WireCodec::parse(s)?,
+                None => d.wire,
             },
         })
     }
@@ -959,6 +971,26 @@ lr = 0.05
         out_of_range.select = Select::Warm { tau: 1.5 };
         assert!(out_of_range.validate().is_err());
         let bad = RawConfig::parse("[train]\nselect = \"hot\"").unwrap();
+        assert!(TrainConfig::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn wire_parsing_and_validation() {
+        assert_eq!(WireCodec::parse("raw").unwrap(), WireCodec::Raw);
+        assert_eq!(WireCodec::parse("packed").unwrap(), WireCodec::Packed);
+        assert_eq!(WireCodec::parse("packed+f16").unwrap(), WireCodec::PackedF16);
+        assert!(WireCodec::parse("zip").is_err());
+        for w in [WireCodec::Raw, WireCodec::Packed, WireCodec::PackedF16] {
+            assert_eq!(WireCodec::parse(w.name()).unwrap(), w);
+        }
+        // Default stays raw (bit-identical to the pre-codec path; every
+        // golden was recorded under it).
+        assert_eq!(TrainConfig::default().wire, WireCodec::Raw);
+        let raw = RawConfig::parse("[train]\nwire = \"packed\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.wire, WireCodec::Packed);
+        cfg.validate().unwrap();
+        let bad = RawConfig::parse("[train]\nwire = \"zip\"").unwrap();
         assert!(TrainConfig::from_raw(&bad).is_err());
     }
 

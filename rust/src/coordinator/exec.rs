@@ -59,6 +59,7 @@ use crate::data::{Batch, DataSource};
 use crate::models::Model;
 use crate::schedule::feedback_histogram;
 use crate::stats::histogram::Histogram;
+use crate::tensor::wire::{WireCodec, WireScratch};
 use crate::tensor::SparseVec;
 
 /// What one worker hands the aggregation phase for one step.
@@ -255,6 +256,10 @@ pub(crate) struct PayloadBank {
     pub dense: Vec<Vec<f32>>,
     /// Empty `Vec<Vec<f32>>` outer containers.
     pub dense_outer: Vec<Vec<Vec<f32>>>,
+    /// Wire-codec scratch (encode buffer + decode target), recycled
+    /// across steps so `wire = packed` adds zero steady-state
+    /// allocations to the bucketed path.
+    pub wire: WireScratch,
 }
 
 /// Recycle a consumed [`BucketMsg`]: sparse payload buffers return to the
@@ -304,6 +309,7 @@ pub(crate) fn produce_bucket_msg(
     sp: BucketSpec,
     k: usize,
     is_dense: bool,
+    codec: WireCodec,
 ) -> BucketMsg {
     if is_dense {
         let mut vecs = bank.dense_outer.pop().unwrap_or_default();
@@ -316,10 +322,23 @@ pub(crate) fn produce_bucket_msg(
         }
         BucketMsg::Dense(vecs)
     } else {
-        sparse_msg_from(
-            bank,
-            workers.iter_mut().map(|w| w.compress_bucket(sp.index, sp.lo, sp.hi, k)),
-        )
+        // Encode-on-send, decode-on-receive at the payload boundary:
+        // quantize (packed+f16 only — the residual fold keeps the
+        // dropped mass in error feedback, indexed from the bucket's
+        // `sp.lo` base) and round-trip through the codec so downstream
+        // aggregation sees exactly what the wire carried. For the
+        // lossless `packed` codec the round-trip is the identity.
+        let mut vecs = bank.sparse_outer.pop().unwrap_or_default();
+        vecs.clear();
+        for w in workers.iter_mut() {
+            let mut s = w.compress_bucket(sp.index, sp.lo, sp.hi, k);
+            codec.quantize_values_f16(&mut s, |i, delta| {
+                w.residual.restore(sp.lo + i as usize, delta)
+            });
+            codec.roundtrip(&mut s, &mut bank.wire);
+            vecs.push(s);
+        }
+        BucketMsg::Sparse(vecs)
     }
 }
 

@@ -116,6 +116,7 @@ use super::worker::WorkerState;
 use crate::buckets::BucketSpec;
 use crate::collectives::{chunk_bounds, finish_gtopk, merge_truncate, PooledRingCollectives};
 use crate::models::Model;
+use crate::tensor::wire::WireCodec;
 use crate::tensor::SparseVec;
 
 /// Which half of the step a [`PoolJob::Compute`] runs.
@@ -144,6 +145,9 @@ pub(crate) enum PoolJob {
         specs: Arc<Vec<BucketSpec>>,
         ks: Vec<usize>,
         is_dense: bool,
+        /// The run's sparse-payload wire codec (applied at production,
+        /// so the coordinator's aggregation sees decoded payloads).
+        wire: WireCodec,
         /// Cross-step buffer bank (travels with the job and back).
         bank: PayloadBank,
         payload_tx: mpsc::SyncSender<(usize, BucketMsg)>,
@@ -392,10 +396,11 @@ fn pool_thread_main(
                 specs,
                 ks,
                 is_dense,
+                wire,
                 bank,
                 payload_tx,
                 return_rx,
-            } => run_pipeline(states, &specs, &ks, is_dense, bank, payload_tx, return_rx),
+            } => run_pipeline(states, &specs, &ks, is_dense, wire, bank, payload_tx, return_rx),
             PoolJob::Collective { .. } => {
                 unreachable!("collective jobs are served by the ring threads, not compute threads")
             }
@@ -413,11 +418,13 @@ fn pool_thread_main(
 /// then hand the workers home. See the module docs for the termination
 /// protocol (the coordinator closes the return channel after its last
 /// bucket, which releases the final drain loop here).
+#[allow(clippy::too_many_arguments)]
 fn run_pipeline(
     mut states: Vec<WorkerState>,
     specs: &[BucketSpec],
     ks: &[usize],
     is_dense: bool,
+    wire: WireCodec,
     mut bank: PayloadBank,
     payload_tx: mpsc::SyncSender<(usize, BucketMsg)>,
     return_rx: mpsc::Receiver<BucketMsg>,
@@ -427,7 +434,7 @@ fn run_pipeline(
         while let Ok(spent) = return_rx.try_recv() {
             recycle_bucket_msg(spent, &mut states, &mut bank);
         }
-        let msg = produce_bucket_msg(&mut states, &mut bank, *sp, ks[b], is_dense);
+        let msg = produce_bucket_msg(&mut states, &mut bank, *sp, ks[b], is_dense, wire);
         if payload_tx.send((b, msg)).is_err() {
             // Consumer gone (teardown/panic on the coordinator): abandon
             // the step; the drain below unblocks immediately for the same

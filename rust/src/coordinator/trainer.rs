@@ -131,6 +131,7 @@ use crate::models::Model;
 use crate::schedule::{feedback_histogram, fold_feedback_histograms, KSchedule, Scheduler};
 use crate::stats::histogram::Histogram;
 use crate::stats::rng::Pcg64;
+use crate::tensor::wire::WireScratch;
 
 /// Captured histogram of u_t = g + ε at a given step (worker 0).
 #[derive(Debug, Clone)]
@@ -350,6 +351,8 @@ impl<'a> Trainer<'a> {
         let mut feedback_hists: Vec<Histogram> = Vec::with_capacity(p);
         let mut selected_mask = vec![false; if self.cfg.global_topk { d } else { 0 }];
         let tree = self.cfg.exchange.is_tree();
+        let codec = self.cfg.wire;
+        let mut wire_scratch = WireScratch::default();
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
@@ -388,6 +391,8 @@ impl<'a> Trainer<'a> {
             feedback_hists.clear();
             let mut loss_acc = 0.0f64;
             let mut sent: u64 = 0;
+            let mut wire_raw: u64 = 0;
+            let mut wire_enc: u64 = 0;
             for m in msgs.drain(..) {
                 loss_acc += m.loss;
                 if let Some(snap) = m.snapshot {
@@ -396,12 +401,29 @@ impl<'a> Trainer<'a> {
                 if let Some(h) = m.feedback {
                     feedback_hists.push(h);
                 }
+                let rank = m.rank;
                 match m.payload {
                     Payload::Dense(g) => {
                         sent += d as u64;
+                        // Dense payloads bypass the codec: 4 B/element
+                        // on both accounting columns.
+                        wire_raw += 4 * d as u64;
+                        wire_enc += 4 * d as u64;
                         dense_msgs.push(g);
                     }
-                    Payload::Sparse(s) => {
+                    Payload::Sparse(mut s) => {
+                        // Encode-on-send, decode-on-receive at the
+                        // payload boundary. packed+f16 folds each
+                        // element's quantization residual back into the
+                        // owning worker's error feedback before the
+                        // bytes ever hit the wire; the lossless packed
+                        // round-trip is the identity.
+                        codec.quantize_values_f16(&mut s, |i, delta| {
+                            workers[rank].residual.restore(i as usize, delta)
+                        });
+                        let (raw, enc) = codec.roundtrip(&mut s, &mut wire_scratch);
+                        wire_raw += raw;
+                        wire_enc += enc;
                         sent += s.nnz() as u64;
                         sparse_msgs.push(s);
                     }
@@ -482,6 +504,8 @@ impl<'a> Trainer<'a> {
                 wall_s: t0.elapsed().as_secs_f64(),
                 spawn_or_dispatch_us: dispatch_us,
                 select_us: drain_select_us(&mut workers),
+                wire_bytes_raw: wire_raw,
+                wire_bytes_encoded: wire_enc,
             });
 
             self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
@@ -582,6 +606,7 @@ impl<'a> Trainer<'a> {
         // shared bucket specs the pool's pipeline jobs reference.
         let mut bank = PayloadBank::default();
         let specs_shared: Arc<Vec<BucketSpec>> = Arc::new(schedule.specs().to_vec());
+        let codec = self.cfg.wire;
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
@@ -745,6 +770,8 @@ impl<'a> Trainer<'a> {
             // either way.
             agg.iter_mut().for_each(|v| *v = 0.0);
             let mut sent: u64 = 0;
+            let mut wire_raw: u64 = 0;
+            let mut wire_enc: u64 = 0;
             // gTop-k residual restores are deferred until after the bucket
             // loop: the producer owns the workers during the pipeline.
             // Each (worker, coordinate) appears at most once (buckets are
@@ -766,6 +793,8 @@ impl<'a> Trainer<'a> {
                 let tree = self.cfg.exchange.is_tree();
                 let agg_ref = &mut agg;
                 let sent_ref = &mut sent;
+                let wire_raw_ref = &mut wire_raw;
+                let wire_enc_ref = &mut wire_enc;
                 let restores_ref = &mut restores;
                 // Consume bucket b's message and return it spent (the
                 // driver routes it back to the producer for recycling).
@@ -774,12 +803,23 @@ impl<'a> Trainer<'a> {
                     match msg {
                         BucketMsg::Dense(slices) => {
                             *sent_ref += (slices.len() * sp.len()) as u64;
+                            // Dense buckets bypass the codec: 4 B/element
+                            // on both accounting columns.
+                            *wire_raw_ref += (slices.len() * sp.len() * 4) as u64;
+                            *wire_enc_ref += (slices.len() * sp.len() * 4) as u64;
                             let red = engine_ref.ring_allreduce_avg(&slices);
                             agg_ref[sp.lo..sp.hi].copy_from_slice(&red);
                             BucketMsg::Dense(slices)
                         }
                         BucketMsg::Sparse(msgs) => {
                             *sent_ref += msgs.iter().map(|m| m.nnz() as u64).sum::<u64>();
+                            // The producer already round-tripped each
+                            // payload through the codec; these sums are
+                            // pure accounting of what the wire carried.
+                            *wire_raw_ref +=
+                                msgs.iter().map(|m| m.wire_bytes()).sum::<u64>();
+                            *wire_enc_ref +=
+                                msgs.iter().map(|m| codec.encoded_bytes(m)).sum::<u64>();
                             if global_topk {
                                 // Per-bucket gTop-k: re-truncate to the
                                 // bucket's share of this step's k_t;
@@ -833,6 +873,7 @@ impl<'a> Trainer<'a> {
                             specs: Arc::clone(&specs_shared),
                             ks: ks_t.clone(),
                             is_dense,
+                            wire: codec,
                             bank: std::mem::take(&mut bank),
                             payload_tx,
                             return_rx,
@@ -874,7 +915,7 @@ impl<'a> Trainer<'a> {
                             // cost more than the compression they
                             // parallelize); rank order restored before
                             // aggregation.
-                            let payloads: Vec<crate::tensor::SparseVec> =
+                            let mut payloads: Vec<crate::tensor::SparseVec> =
                                 std::thread::scope(|s| {
                                     let t_spawn = Instant::now();
                                     let handles: Vec<_> = workers_ref
@@ -884,13 +925,22 @@ impl<'a> Trainer<'a> {
                                                 group
                                                     .iter_mut()
                                                     .map(|w| {
-                                                        (
-                                                            w.rank,
-                                                            w.compress_bucket(
-                                                                sp.index, sp.lo, sp.hi,
-                                                                ks_ref[b],
-                                                            ),
-                                                        )
+                                                        let mut sv = w.compress_bucket(
+                                                            sp.index, sp.lo, sp.hi, ks_ref[b],
+                                                        );
+                                                        // f16 fold on the compressing
+                                                        // thread — the residual is the
+                                                        // worker's own.
+                                                        codec.quantize_values_f16(
+                                                            &mut sv,
+                                                            |i, delta| {
+                                                                w.residual.restore(
+                                                                    sp.lo + i as usize,
+                                                                    delta,
+                                                                )
+                                                            },
+                                                        );
+                                                        (w.rank, sv)
                                                     })
                                                     .collect::<Vec<_>>()
                                             })
@@ -911,9 +961,18 @@ impl<'a> Trainer<'a> {
                                     all.sort_by_key(|m| m.0);
                                     all.into_iter().map(|m| m.1).collect()
                                 });
+                            // Wire round-trip on the producer thread (rank
+                            // order, same as the unfanned path).
+                            if codec.is_packed() {
+                                for sv in payloads.iter_mut() {
+                                    codec.roundtrip(sv, &mut bank_ref.wire);
+                                }
+                            }
                             sparse_msg_from(bank_ref, payloads)
                         } else {
-                            produce_bucket_msg(workers_ref, bank_ref, sp, ks_ref[b], is_dense)
+                            produce_bucket_msg(
+                                workers_ref, bank_ref, sp, ks_ref[b], is_dense, codec,
+                            )
                         }
                     };
                     if threaded && nb > 1 {
@@ -963,6 +1022,8 @@ impl<'a> Trainer<'a> {
                 wall_s: t0.elapsed().as_secs_f64(),
                 spawn_or_dispatch_us: launch_us,
                 select_us: drain_select_us(&mut workers),
+                wire_bytes_raw: wire_raw,
+                wire_bytes_encoded: wire_enc,
             });
 
             self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
@@ -1024,6 +1085,7 @@ mod tests {
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
             select: crate::config::Select::Exact,
+            wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
         }
     }
@@ -1073,6 +1135,7 @@ mod tests {
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
             select: crate::config::Select::Exact,
+            wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
         };
         let dense = train(mk(OpKind::Dense), &mut model, &data).unwrap();
@@ -1287,6 +1350,7 @@ mod schedule_trainer_tests {
             k_schedule: schedule,
             exchange: crate::config::Exchange::DenseRing,
             select: crate::config::Select::Exact,
+            wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 5,
         }
     }
@@ -1413,6 +1477,7 @@ mod momentum_correction_tests {
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
             select: crate::config::Select::Exact,
+            wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
         };
         let plain = train(base.clone(), &mut model, &data).unwrap();
@@ -1476,6 +1541,7 @@ mod gtopk_trainer_tests {
             k_schedule: KSchedule::Const(None),
             exchange: crate::config::Exchange::DenseRing,
             select: crate::config::Select::Exact,
+            wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
         }
     }

@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
                  \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
                  \x20         [--bucket-apportion size|mass|mass:ema=BETA]\n\
                  \x20         [--global-topk true --exchange dense-ring|tree-sparse]\n\
-                 \x20         [--select exact|warm:TAU]\n\
+                 \x20         [--select exact|warm:TAU] [--wire raw|packed|packed+f16]\n\
                  \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
                  \x20         [--plan plan.json] [--backend native|pjrt --model <name>]\n\
                  tune      [--model resnet50] [--nodes 4 --gpus 4] [--k-ratio 0.001]\n\
@@ -94,6 +94,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "global_topk",
         "exchange",
         "select",
+        "wire",
     ] {
         if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
             raw.set(&format!("train.{key}={v}"))?;
@@ -105,7 +106,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = TrainConfig::from_raw(&raw)?;
     println!(
         "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={} \
-         k_schedule={} exchange={} select={}",
+         k_schedule={} exchange={} select={} wire={}",
         cfg.op.name(),
         cfg.workers,
         cfg.steps,
@@ -115,7 +116,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.buckets.name(),
         cfg.k_schedule.name(),
         cfg.exchange.name(),
-        cfg.select.name()
+        cfg.select.name(),
+        cfg.wire.name()
     );
 
     let backend = args.get_or("backend", "native");

@@ -39,6 +39,15 @@ pub struct StepRecord {
     /// the number is well-defined and comparable across the serial,
     /// scoped, and pooled runtimes regardless of worker placement.
     pub select_us: f64,
+    /// Wire bytes this step's payloads would cost under the legacy raw
+    /// encoding (8 B/element sparse, 4 B/element dense), summed over all
+    /// workers — the denominator of the `wire` codec's measured win.
+    pub wire_bytes_raw: u64,
+    /// Wire bytes actually shipped under the run's `wire` codec
+    /// ([`crate::tensor::wire::WireCodec::encoded_bytes`]), summed over
+    /// all workers. Equals `wire_bytes_raw` exactly when `wire = raw`
+    /// (0-delta contract), and is never larger on any payload.
+    pub wire_bytes_encoded: u64,
 }
 
 /// Periodic evaluation record.
@@ -181,6 +190,29 @@ impl RunMetrics {
                         .collect(),
                 ),
             )
+            .set(
+                "wire_bytes_raw",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| Json::from(s.wire_bytes_raw as f64))
+                        .collect(),
+                ),
+            )
+            .set(
+                "wire_bytes_encoded",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| Json::from(s.wire_bytes_encoded as f64))
+                        .collect(),
+                ),
+            )
+            .set("mean_wire_bytes_raw", Json::from(self.mean_wire_bytes_raw()))
+            .set(
+                "mean_wire_bytes_encoded",
+                Json::from(self.mean_wire_bytes_encoded()),
+            )
             .set("mean_step_s", Json::from(self.step_time.mean()));
         o
     }
@@ -203,6 +235,26 @@ impl RunMetrics {
         self.steps.iter().map(|s| s.select_us).sum::<f64>() / self.steps.len() as f64
     }
 
+    /// Mean per-step raw wire bytes (all-worker sum per step).
+    pub fn mean_wire_bytes_raw(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.wire_bytes_raw as f64).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// Mean per-step encoded wire bytes (all-worker sum per step) — the
+    /// headline number of the `wire` codec comparison: divide
+    /// [`Self::mean_wire_bytes_raw`] by this for the end-to-end byte
+    /// reduction factor.
+    pub fn mean_wire_bytes_encoded(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.wire_bytes_encoded as f64).sum::<f64>()
+            / self.steps.len() as f64
+    }
+
     /// Write step records as CSV.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
@@ -211,12 +263,13 @@ impl RunMetrics {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us,select_us"
+            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us,\
+             select_us,wire_bytes_raw,wire_bytes_encoded"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.loss,
                 s.sent_elements,
@@ -224,7 +277,9 @@ impl RunMetrics {
                 s.density,
                 s.wall_s,
                 s.spawn_or_dispatch_us,
-                s.select_us
+                s.select_us,
+                s.wire_bytes_raw,
+                s.wire_bytes_encoded
             )?;
         }
         Ok(())
@@ -245,6 +300,8 @@ mod tests {
             wall_s: 0.01,
             spawn_or_dispatch_us: 12.5,
             select_us: 40.0,
+            wire_bytes_raw: sent * 8,
+            wire_bytes_encoded: sent * 8,
         }
     }
 
@@ -288,10 +345,10 @@ mod tests {
         let path = dir.join("run.csv");
         m.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        let header =
-            "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us,select_us";
+        let header = "step,loss,sent_elements,target_elements,density,wall_s,\
+                      spawn_or_dispatch_us,select_us,wire_bytes_raw,wire_bytes_encoded";
         assert!(text.starts_with(header));
-        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5,40"));
+        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5,40,24,24"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -307,7 +364,29 @@ mod tests {
             1
         );
         assert_eq!(j.get("select_us").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("wire_bytes_raw").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("wire_bytes_encoded").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("name").unwrap().as_str(), Some("run"));
+    }
+
+    #[test]
+    fn wire_byte_means() {
+        let mut m = RunMetrics::new("t");
+        assert_eq!(m.mean_wire_bytes_raw(), 0.0);
+        assert_eq!(m.mean_wire_bytes_encoded(), 0.0);
+        let mut a = rec(0, 1.0, 5);
+        a.wire_bytes_raw = 80;
+        a.wire_bytes_encoded = 40;
+        let mut b = rec(1, 1.0, 5);
+        b.wire_bytes_raw = 120;
+        b.wire_bytes_encoded = 60;
+        m.record_step(a);
+        m.record_step(b);
+        assert_eq!(m.mean_wire_bytes_raw(), 100.0);
+        assert_eq!(m.mean_wire_bytes_encoded(), 50.0);
+        let j = m.to_json();
+        assert_eq!(j.get("mean_wire_bytes_raw").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("mean_wire_bytes_encoded").unwrap().as_f64(), Some(50.0));
     }
 
     #[test]

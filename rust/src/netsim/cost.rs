@@ -23,6 +23,18 @@
 
 use super::topology::Topology;
 
+/// Total bytes a ring all-reduce of an `bytes`-byte payload moves over
+/// any single link: 2(P−1) steps of m/P bytes each. Shared by
+/// [`allreduce_time`] and the autotune calibrator's bandwidth probe so
+/// both price the same schedule — and both stay codec-aware when the
+/// payload `bytes` has already been shrunk by the wire codec.
+pub fn ring_allreduce_link_bytes(p: usize, bytes: u64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    2.0 * (p as f64 - 1.0) * (bytes as f64 / p as f64)
+}
+
 /// Time for a dense ring all-reduce of `bytes` over the whole cluster.
 pub fn allreduce_time(topo: &Topology, bytes: u64) -> f64 {
     let p = topo.world_size();
@@ -31,8 +43,8 @@ pub fn allreduce_time(topo: &Topology, bytes: u64) -> f64 {
     }
     let link = topo.ring_bottleneck();
     let steps = 2 * (p - 1);
-    let chunk = bytes as f64 / p as f64;
-    steps as f64 * (link.latency_s + chunk / link.effective_bandwidth())
+    steps as f64 * link.latency_s
+        + ring_allreduce_link_bytes(p, bytes) / link.effective_bandwidth()
 }
 
 /// Time for a ring all-gather where worker w contributes `per_worker[w]`
@@ -215,6 +227,23 @@ mod tests {
             sparse < dense / 10.0,
             "sparse {sparse} not ≪ dense {dense}"
         );
+    }
+
+    #[test]
+    fn ring_link_bytes_matches_schedule() {
+        // 2(P−1)·(m/P): the exact per-link traffic of the ring schedule,
+        // zero for a lone worker.
+        assert_eq!(ring_allreduce_link_bytes(1, 1 << 30), 0.0);
+        let m = 1_000_000u64;
+        let expect = 2.0 * 15.0 * (m as f64 / 16.0);
+        assert!((ring_allreduce_link_bytes(16, m) - expect).abs() < 1e-9);
+        // allreduce_time prices exactly this traffic plus latency terms.
+        let topo = Topology::paper_16gpu();
+        let link = topo.ring_bottleneck();
+        let t = allreduce_time(&topo, m);
+        let expect_t = 30.0 * link.latency_s
+            + ring_allreduce_link_bytes(16, m) / link.effective_bandwidth();
+        assert!((t - expect_t).abs() <= 1e-12 * expect_t.max(1.0));
     }
 
     #[test]

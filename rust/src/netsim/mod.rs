@@ -32,7 +32,12 @@
 //!   (`SimConfig::host_overhead_s`, modelled by [`runtime_overhead_s`])
 //!   exposes the trainer's spawn-per-step vs pooled-dispatch choice to
 //!   the cost model; its measured twin is the trainer's
-//!   `spawn_or_dispatch_us` trace field.
+//!   `spawn_or_dispatch_us` trace field. Sparse payload bytes are priced
+//!   through the wire codec (`SimConfig::wire`,
+//!   [`crate::tensor::wire::WireCodec::model_bytes`]) with encode/decode
+//!   CPU charged at `SimConfig::wire_cpu_per_elem_s` (default
+//!   [`WIRE_PACK_PER_ELEM_S`], calibrator-replaceable) into the comm
+//!   span.
 //!
 //! Table 2 is a systems-balance result — it depends on the *ratios*
 //! compute : selection : communication. Those three inputs are calibrated
@@ -49,11 +54,12 @@ pub mod topology;
 pub use cost::{
     allgather_time, allreduce_time, gtopk_tree_time, gtopk_tree_time_rounds,
     hierarchical_allgather_time, hierarchical_allreduce_time, hierarchical_gtopk_tree_time,
+    ring_allreduce_link_bytes,
 };
 pub use link::LinkSpec;
 pub use ops_cost::{ComputeProfile, OpCostModel};
 pub use sim::{
     runtime_overhead_s, runtime_overhead_with, IterationBreakdown, SimConfig, Simulator,
-    POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S,
+    POOL_DISPATCH_PER_THREAD_S, SPAWN_PER_THREAD_S, WIRE_PACK_PER_ELEM_S,
 };
 pub use topology::{Fabric, Topology};

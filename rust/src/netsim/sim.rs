@@ -20,6 +20,7 @@ use super::topology::Topology;
 use crate::compress::OpKind;
 use crate::config::{Exchange, Parallelism};
 use crate::stats::rng::Pcg64;
+use crate::tensor::wire::WireCodec;
 
 /// Calibrated *end-to-end* per-step host-runtime overhead of a scoped
 /// worker thread (spawn + join bookkeeping), per thread: ~25 µs on
@@ -37,6 +38,16 @@ pub const SPAWN_PER_THREAD_S: f64 = 25e-6;
 /// the measured twin; `WorkerPool::ping` in the fig4 bench measures the
 /// full round-trip.
 pub const POOL_DISPATCH_PER_THREAD_S: f64 = 1.5e-6;
+
+/// Calibrated per-element CPU cost of one wire-codec pass (delta +
+/// bitpack encode, or the matching decode) on a sparse payload: ~1.5 ns
+/// per (index, value) element on commodity x86 — the codec is a linear
+/// scan with shifts and masks. A packed exchange pays this twice per
+/// element (encode at the sender, decode at the receiver); the netsim
+/// charges it into the communication span (see [`Simulator`]) and the
+/// autotune calibrator can replace it with a measured value
+/// (`Calibration::wire_pack_per_elem_s`).
+pub const WIRE_PACK_PER_ELEM_S: f64 = 1.5e-9;
 
 /// The per-iteration host-side runtime overhead the trainer's
 /// `parallelism` setting implies: 0 for `serial`, spawn-per-step for
@@ -108,6 +119,17 @@ pub struct SimConfig {
     /// [`gtopk_tree_time`] — 2⌈log₂P⌉ rounds of one k-truncated payload).
     /// Ignored for `op = Dense`, which always rides the dense ring.
     pub exchange: Exchange,
+    /// Sparse-payload wire codec: `Raw` (the default — 8 bytes per kept
+    /// element, the historical timeline bit-for-bit) or a packed codec,
+    /// which shrinks the link bytes to [`WireCodec::model_bytes`] and
+    /// charges the encode/decode CPU (`2 · k_eff · wire_cpu_per_elem_s`)
+    /// into the communication span. Ignored for `op = Dense` (dense
+    /// payloads bypass the codec).
+    pub wire: WireCodec,
+    /// Per-element codec CPU cost (seconds) — [`WIRE_PACK_PER_ELEM_S`]
+    /// stock, replaceable by a calibrated measurement. Only consulted
+    /// when `wire` is packed.
+    pub wire_cpu_per_elem_s: f64,
 }
 
 impl SimConfig {
@@ -122,6 +144,8 @@ impl SimConfig {
             buckets: 1,
             host_overhead_s: 0.0,
             exchange: Exchange::DenseRing,
+            wire: WireCodec::Raw,
+            wire_cpu_per_elem_s: WIRE_PACK_PER_ELEM_S,
         }
     }
 }
@@ -243,12 +267,24 @@ impl Simulator {
             allreduce_time(&self.cfg.topo, d * 4)
         } else {
             let k_eff = op_cost.effective_k(k);
-            // Every worker sends (index u32 + value f32) per kept element.
-            if self.cfg.exchange.is_tree() {
-                gtopk_tree_time(&self.cfg.topo, k_eff * 8)
+            // Per-worker payload bytes under the configured wire codec:
+            // raw charges 8 bytes (u32 index + f32 value) per kept
+            // element, packed codecs the analytic encoded size. A packed
+            // exchange also pays the encode+decode CPU scan, charged
+            // into the comm span (selection and host overhead stay
+            // codec-invariant).
+            let payload = self.cfg.wire.model_bytes(d, k_eff);
+            let codec_cpu = if self.cfg.wire.is_packed() {
+                2.0 * k_eff as f64 * self.cfg.wire_cpu_per_elem_s
             } else {
-                allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
-            }
+                0.0
+            };
+            codec_cpu
+                + if self.cfg.exchange.is_tree() {
+                    gtopk_tree_time(&self.cfg.topo, payload)
+                } else {
+                    allgather_time(&self.cfg.topo, &vec![payload; p])
+                }
         };
 
         let compute = compute_times.iter().cloned().fold(0.0, f64::max);
@@ -321,11 +357,22 @@ impl Simulator {
         for (i, (&s, &kb)) in sizes.iter().zip(&ks).enumerate() {
             let tc = if is_dense {
                 allreduce_time(&self.cfg.topo, s as u64 * 4)
-            } else if self.cfg.exchange.is_tree() {
-                gtopk_tree_time(&self.cfg.topo, op_cost.effective_k(kb as u64) * 8)
             } else {
+                // Same codec-aware payload pricing as the monolithic
+                // timeline, per bucket (the bucket's own d and k).
                 let k_eff = op_cost.effective_k(kb as u64);
-                allgather_time(&self.cfg.topo, &vec![k_eff * 8; p])
+                let payload = self.cfg.wire.model_bytes(s as u64, k_eff);
+                let codec_cpu = if self.cfg.wire.is_packed() {
+                    2.0 * k_eff as f64 * self.cfg.wire_cpu_per_elem_s
+                } else {
+                    0.0
+                };
+                codec_cpu
+                    + if self.cfg.exchange.is_tree() {
+                        gtopk_tree_time(&self.cfg.topo, payload)
+                    } else {
+                        allgather_time(&self.cfg.topo, &vec![payload; p])
+                    }
             };
             let start = sel_end[i].max(ring_free);
             ring_free = start + tc;
@@ -592,6 +639,29 @@ mod tests {
         let a = Simulator::new(cfg).iteration();
         let b = Simulator::new(SimConfig::table2(resnet(), OpKind::Dense)).iteration();
         assert_eq!(a.total.to_bits(), b.total.to_bits());
+    }
+
+    #[test]
+    fn packed_wire_cuts_comm_only() {
+        // The codec prices into the communication span alone: compute and
+        // selection are codec-invariant, and the f16 variant undercuts the
+        // lossless one (2-byte values). Both timelines.
+        let base = Simulator::new(SimConfig::table2(resnet(), OpKind::TopK)).iteration();
+        let mut cfg = SimConfig::table2(resnet(), OpKind::TopK);
+        cfg.wire = WireCodec::Packed;
+        let packed = Simulator::new(cfg.clone()).iteration();
+        assert!(packed.comm < base.comm, "packed {} vs raw {}", packed.comm, base.comm);
+        assert_eq!(packed.select.to_bits(), base.select.to_bits());
+        assert_eq!(packed.compute.to_bits(), base.compute.to_bits());
+        cfg.wire = WireCodec::PackedF16;
+        let f16 = Simulator::new(cfg.clone()).iteration();
+        assert!(f16.comm < packed.comm);
+        cfg.buckets = 8;
+        let f16_b = Simulator::new(cfg).iteration();
+        let mut rcfg = SimConfig::table2(resnet(), OpKind::TopK);
+        rcfg.buckets = 8;
+        let raw_b = Simulator::new(rcfg).iteration();
+        assert!(f16_b.comm < raw_b.comm);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Flat tensor substrate: dense f32 vectors with a layer-layout manifest
 //! (mirroring the AOT artifacts' flattened parameter/gradient vectors) and
 //! the sparse (index, value) representation exchanged by the sparsified
-//! collectives.
+//! collectives. The [`wire`] submodule holds the sparse-payload wire
+//! codec (`wire = raw|packed|packed+f16`) that shrinks the 8-byte
+//! `(u32, f32)` pairs on the link.
+
+pub mod wire;
 
 use crate::util::json::Json;
 
@@ -29,7 +33,10 @@ impl SparseVec {
         self.indices.len()
     }
 
-    /// Bytes on the wire: 4 (index) + 4 (value) per nnz.
+    /// Bytes on the wire under the legacy `raw` encoding: 4 (index) +
+    /// 4 (value) per nnz. Codec-aware sizes live in
+    /// [`wire::WireCodec::encoded_bytes`]; this stays the raw baseline
+    /// both accounting paths are compared against.
     pub fn wire_bytes(&self) -> u64 {
         (self.nnz() as u64) * 8
     }

@@ -1,0 +1,648 @@
+//! Wire codec for sparse gradient payloads (`wire = raw|packed|packed+f16`).
+//!
+//! The naive sparse wire format ships every selected element as an 8-byte
+//! `(u32 index, f32 value)` pair ([`SparseVec::wire_bytes`]). But top-k
+//! indices are *sorted and unique*, so consecutive indices compress as
+//! deltas, and at density k/d the expected gap is d/k — a handful of bits,
+//! not 32. The codec exploits exactly that:
+//!
+//! * **`packed`** (lossless) — indices become gaps
+//!   (`gap₀ = i₀`, `gapⱼ = iⱼ − iⱼ₋₁ − 1`), bitpacked in blocks of
+//!   [`BLOCK`] gaps with a 1-byte per-block max-width header, so the width
+//!   adapts to the local gap distribution in O(d/k) bits per element.
+//!   Values stay exact f32. Decode ∘ encode is the identity, so `packed`
+//!   training is bit-identical to `raw` end to end
+//!   (`tests/wire_equivalence.rs`).
+//! * **`packed+f16`** — the same index coding plus values quantized to
+//!   IEEE half precision. Quantization happens once, at the leaf send,
+//!   with the per-coordinate quantization error folded back into the
+//!   error-feedback residual ([`WireCodec::quantize_values_f16`]) — EF
+//!   absorbs it like any other unsent mass, so gradient mass is conserved
+//!   (proptested) at ~6 bytes/element worst case, ~2× under clustered
+//!   indices.
+//!
+//! **Escape hatch / byte guarantee:** adversarially uniform indices can
+//! make delta coding *worse* than raw (a lone element with a huge gap
+//! costs a header byte plus up to 32 gap bits). The encoder therefore
+//! compares the packed index section against the raw 4·nnz and falls back
+//! to raw u32 indices for the whole payload when packing does not win, so
+//! [`WireCodec::encoded_bytes`] ≤ [`SparseVec::wire_bytes`] for *every*
+//! payload. The 9-byte frame (d, nnz, flags) that makes the buffer
+//! self-describing is excluded from the byte accounting, mirroring the raw
+//! accounting which counts exactly `8·nnz` with no framing either.
+//!
+//! Scratch buffers ([`WireScratch`]) are caller-owned and recycled across
+//! steps, so the steady-state codec path allocates nothing.
+
+use crate::tensor::SparseVec;
+
+/// Gaps per bitpacked block. 32 keeps one wide outlier gap from poisoning
+/// more than 31 neighbours while the 1-byte header amortizes to ¼ bit per
+/// element.
+pub const BLOCK: usize = 32;
+
+/// Frame bytes prepended by [`WireCodec::encode`] (u32 d + u32 nnz +
+/// 1 flags byte) — self-description, excluded from the byte accounting
+/// (see the module docs).
+pub const FRAME_BYTES: usize = 9;
+
+const FLAG_ESCAPE: u8 = 1;
+const FLAG_F16: u8 = 2;
+
+/// The sparse-payload wire encoding (`wire` config axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCodec {
+    /// The legacy 8-byte `(u32, f32)` pairs — no codec pass at all.
+    Raw,
+    /// Lossless delta + per-block bitpacked indices, exact f32 values.
+    Packed,
+    /// Packed indices + f16 values (quantization residual folded into
+    /// error feedback at the send site).
+    PackedF16,
+}
+
+impl WireCodec {
+    /// Parse the config grammar: `raw | packed | packed+f16`.
+    pub fn parse(s: &str) -> anyhow::Result<WireCodec> {
+        match s.trim() {
+            "raw" => Ok(WireCodec::Raw),
+            "packed" => Ok(WireCodec::Packed),
+            "packed+f16" => Ok(WireCodec::PackedF16),
+            other => anyhow::bail!(
+                "unknown wire codec '{other}': expected raw|packed|packed+f16"
+            ),
+        }
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::Raw => "raw",
+            WireCodec::Packed => "packed",
+            WireCodec::PackedF16 => "packed+f16",
+        }
+    }
+
+    /// Whether any codec pass runs at all (`packed` or `packed+f16`).
+    pub fn is_packed(self) -> bool {
+        !matches!(self, WireCodec::Raw)
+    }
+
+    /// Whether values are quantized to half precision on the wire.
+    pub fn is_f16(self) -> bool {
+        matches!(self, WireCodec::PackedF16)
+    }
+
+    /// Bytes per value on the wire.
+    fn value_bytes(self) -> u64 {
+        if self.is_f16() {
+            2
+        } else {
+            4
+        }
+    }
+
+    /// Exact *accounted* wire size of `v` under this codec, in bytes:
+    /// `min(packed index section, 4·nnz) + value section` — the same
+    /// escape decision [`Self::encode`] makes, so this always equals the
+    /// encoded buffer minus its [`FRAME_BYTES`] frame, and is never larger
+    /// than [`SparseVec::wire_bytes`]. O(nnz).
+    pub fn encoded_bytes(self, v: &SparseVec) -> u64 {
+        let nnz = v.nnz() as u64;
+        match self {
+            WireCodec::Raw => v.wire_bytes(),
+            _ => {
+                let packed = packed_index_bytes(&v.indices);
+                packed.min(4 * nnz) + self.value_bytes() * nnz
+            }
+        }
+    }
+
+    /// Deterministic *analytic* wire size for the cost models: expected
+    /// bytes of a k-element payload drawn from a d-dimensional vector with
+    /// roughly uniform index spacing. The per-block width is sized for the
+    /// expected block-max gap (`(d/k)·ln BLOCK`, the max of BLOCK
+    /// exponential gaps of mean d/k), plus the amortized header byte;
+    /// capped at the escape-path cost so the model, like the encoder,
+    /// never charges more than raw. `Raw` charges the legacy `8k` exactly.
+    pub fn model_bytes(self, d: u64, k: u64) -> u64 {
+        if k == 0 {
+            return 0;
+        }
+        match self {
+            WireCodec::Raw => 8 * k,
+            _ => {
+                let ratio = (d.max(k) as f64) / k as f64;
+                let block_max_gap = ratio * (BLOCK as f64).ln();
+                let width_bits = (block_max_gap + 1.0).log2().ceil().clamp(1.0, 32.0);
+                let idx_bytes = k as f64 * (width_bits / 8.0) + (k as f64 / BLOCK as f64);
+                let idx_bytes = (idx_bytes.ceil() as u64).min(4 * k);
+                idx_bytes + self.value_bytes() * k
+            }
+        }
+    }
+
+    /// Encode `v` into `out` (cleared first; capacity is reused across
+    /// calls). `Raw` writes the frame plus raw pairs — callers on the raw
+    /// path normally skip the codec entirely.
+    pub fn encode(self, v: &SparseVec, out: &mut Vec<u8>) {
+        out.clear();
+        let nnz = v.nnz();
+        let mut flags = 0u8;
+        let escape = match self {
+            WireCodec::Raw => true,
+            _ => packed_index_bytes(&v.indices) >= 4 * nnz as u64,
+        };
+        if escape {
+            flags |= FLAG_ESCAPE;
+        }
+        if self.is_f16() {
+            flags |= FLAG_F16;
+        }
+        out.extend_from_slice(&(v.d as u32).to_le_bytes());
+        out.extend_from_slice(&(nnz as u32).to_le_bytes());
+        out.push(flags);
+        if escape {
+            for &i in &v.indices {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+        } else {
+            pack_indices(&v.indices, out);
+        }
+        if self.is_f16() {
+            for &x in &v.values {
+                out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+        } else {
+            for &x in &v.values {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode an [`Self::encode`] buffer into `out` (buffers reused).
+    /// Self-describing: the flags byte, not `self`, drives the decode, so
+    /// any codec value can decode any buffer.
+    pub fn decode(self, bytes: &[u8], out: &mut SparseVec) {
+        assert!(bytes.len() >= FRAME_BYTES, "wire buffer shorter than its frame");
+        let d = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let nnz = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let flags = bytes[8];
+        let mut at = FRAME_BYTES;
+        out.d = d;
+        out.indices.clear();
+        out.values.clear();
+        if flags & FLAG_ESCAPE != 0 {
+            for _ in 0..nnz {
+                out.indices
+                    .push(u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+                at += 4;
+            }
+        } else {
+            at = unpack_indices(bytes, at, nnz, &mut out.indices);
+        }
+        if flags & FLAG_F16 != 0 {
+            for _ in 0..nnz {
+                let b = u16::from_le_bytes(bytes[at..at + 2].try_into().unwrap());
+                out.values.push(f16_bits_to_f32(b));
+                at += 2;
+            }
+        } else {
+            for _ in 0..nnz {
+                out.values
+                    .push(f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+                at += 4;
+            }
+        }
+        debug_assert_eq!(at, bytes.len(), "wire buffer has trailing bytes");
+    }
+
+    /// The trainer's send-side boundary: encode `v`, decode it back (what
+    /// the receivers see), and return `(raw_bytes, encoded_bytes)` for the
+    /// step accounting. `Raw` is a no-op pass-through. For `packed+f16`
+    /// call [`Self::quantize_values_f16`] *first* so the quantization
+    /// residual is folded into error feedback — after that fold the
+    /// values are exactly f16-representable and this round-trip is the
+    /// identity too.
+    pub fn roundtrip(self, v: &mut SparseVec, scratch: &mut WireScratch) -> (u64, u64) {
+        let raw = v.wire_bytes();
+        if !self.is_packed() {
+            return (raw, raw);
+        }
+        let encoded = self.encoded_bytes(v);
+        self.encode(v, &mut scratch.buf);
+        self.decode(&scratch.buf, &mut scratch.decoded);
+        debug_assert_eq!(
+            scratch.buf.len() as u64 - FRAME_BYTES as u64,
+            encoded,
+            "encoded_bytes disagrees with the encoder"
+        );
+        // Swap the decoded payload in; `v`'s buffers become next call's
+        // decode scratch — zero steady-state allocation.
+        std::mem::swap(v, &mut scratch.decoded);
+        (raw, encoded)
+    }
+
+    /// Quantize `v`'s values to their f16 round-trip in place, reporting
+    /// each coordinate's quantization error `old − quantized` through
+    /// `fold(index, delta)` so the caller can restore it into the
+    /// error-feedback residual (monolithic: the payload index; bucketed:
+    /// `lo + index`). No-op unless `self` is `packed+f16`.
+    pub fn quantize_values_f16(self, v: &mut SparseVec, mut fold: impl FnMut(u32, f32)) {
+        if !self.is_f16() {
+            return;
+        }
+        for (&i, x) in v.indices.iter().zip(v.values.iter_mut()) {
+            let q = f16_bits_to_f32(f32_to_f16_bits(*x));
+            let delta = *x - q;
+            if delta != 0.0 {
+                fold(i, delta);
+            }
+            *x = q;
+        }
+    }
+}
+
+/// Reusable encode/decode scratch — travels with the payload bank on the
+/// bucketed path and with the trainer on the monolithic path.
+#[derive(Debug, Default)]
+pub struct WireScratch {
+    buf: Vec<u8>,
+    decoded: SparseVec,
+}
+
+/// Gap sequence of sorted-unique indices: `gap₀ = i₀`,
+/// `gapⱼ = iⱼ − iⱼ₋₁ − 1` (the `− 1` exploits uniqueness: adjacent
+/// indices cost zero bits once the block width hits 0).
+#[inline]
+fn gap(indices: &[u32], j: usize) -> u32 {
+    if j == 0 {
+        indices[0]
+    } else {
+        indices[j] - indices[j - 1] - 1
+    }
+}
+
+/// Exact byte size of the packed index section: per block of up to
+/// [`BLOCK`] gaps, 1 width byte + ⌈len·w/8⌉ packed bytes.
+fn packed_index_bytes(indices: &[u32]) -> u64 {
+    let mut total = 0u64;
+    let mut start = 0usize;
+    while start < indices.len() {
+        let len = BLOCK.min(indices.len() - start);
+        let mut max_gap = 0u32;
+        for j in start..start + len {
+            max_gap = max_gap.max(gap(indices, j));
+        }
+        let w = bits_for(max_gap) as u64;
+        total += 1 + (len as u64 * w).div_ceil(8);
+        start += len;
+    }
+    total
+}
+
+/// Bits needed to store `x` (0 for x == 0).
+#[inline]
+fn bits_for(x: u32) -> u32 {
+    32 - x.leading_zeros()
+}
+
+/// Bitpack the gap sequence into `out`, [`BLOCK`] gaps per block with a
+/// per-block max-width header byte; bits fill little-endian.
+fn pack_indices(indices: &[u32], out: &mut Vec<u8>) {
+    let mut start = 0usize;
+    while start < indices.len() {
+        let len = BLOCK.min(indices.len() - start);
+        let mut max_gap = 0u32;
+        for j in start..start + len {
+            max_gap = max_gap.max(gap(indices, j));
+        }
+        let w = bits_for(max_gap);
+        out.push(w as u8);
+        if w > 0 {
+            let mut acc = 0u64;
+            let mut nbits = 0u32;
+            for j in start..start + len {
+                acc |= (gap(indices, j) as u64) << nbits;
+                nbits += w;
+                while nbits >= 8 {
+                    out.push((acc & 0xFF) as u8);
+                    acc >>= 8;
+                    nbits -= 8;
+                }
+            }
+            if nbits > 0 {
+                out.push((acc & 0xFF) as u8);
+            }
+        }
+        start += len;
+    }
+}
+
+/// Inverse of [`pack_indices`]: reads `nnz` gaps starting at `bytes[at]`,
+/// reconstructs absolute indices into `out`, returns the next offset.
+fn unpack_indices(bytes: &[u8], mut at: usize, nnz: usize, out: &mut Vec<u32>) -> usize {
+    let mut prev: Option<u32> = None;
+    let mut done = 0usize;
+    while done < nnz {
+        let len = BLOCK.min(nnz - done);
+        let w = bytes[at] as u32;
+        at += 1;
+        debug_assert!(w <= 32, "corrupt wire block width {w}");
+        let mut acc = 0u64;
+        let mut nbits = 0u32;
+        let mask = if w == 32 { u32::MAX as u64 } else { (1u64 << w) - 1 };
+        for _ in 0..len {
+            while nbits < w {
+                acc |= (bytes[at] as u64) << nbits;
+                at += 1;
+                nbits += 8;
+            }
+            let g = (acc & mask) as u32;
+            acc >>= w;
+            nbits -= w;
+            let idx = match prev {
+                None => g,
+                Some(p) => p + g + 1,
+            };
+            out.push(idx);
+            prev = Some(idx);
+        }
+        // Any remaining bits in `acc` are this block's padding — each
+        // block's stream starts byte-aligned (the packer flushes).
+        done += len;
+    }
+    at
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even; overflow
+/// saturates to ±65504 (gradients are finite and tiny — an infinity on
+/// the wire would poison the merged update, where a clamp just leaves the
+/// clipped mass in the EF residual).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // NaN propagates; infinity saturates (see above).
+        return if frac != 0 { sign | 0x7E00 } else { sign | 0x7BFF };
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7BFF; // overflow → ±f16::MAX
+    }
+    if e16 <= 0 {
+        // Subnormal (or underflow to zero): shift the 24-bit significand
+        // (implicit leading 1) right past the exponent deficit.
+        if e16 < -10 {
+            return sign;
+        }
+        let sig = frac | 0x0080_0000;
+        let shift = (14 - e16) as u32; // 24-bit sig → 10-bit sub + round bits
+        let half = sig >> shift;
+        let rem = sig & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = match rem.cmp(&halfway) {
+            std::cmp::Ordering::Greater => half + 1,
+            std::cmp::Ordering::Equal => half + (half & 1),
+            std::cmp::Ordering::Less => half,
+        };
+        return sign | rounded as u16;
+    }
+    // Normal: round the 13 dropped fraction bits to nearest-even.
+    let mut e16 = e16 as u32;
+    let mut f16_frac = frac >> 13;
+    let rem = frac & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && f16_frac & 1 == 1) {
+        f16_frac += 1;
+        if f16_frac == 0x400 {
+            f16_frac = 0;
+            e16 += 1;
+            if e16 >= 0x1F {
+                return sign | 0x7BFF; // rounded into overflow → saturate
+            }
+        }
+    }
+    sign | ((e16 as u16) << 10) | f16_frac as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact — every f16 is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    if exp == 0 {
+        if frac == 0 {
+            return f32::from_bits(sign);
+        }
+        // Subnormal: value = frac · 2⁻²⁴; normalize into f32's range.
+        // With the MSB of `frac` at bit b (= 10 − shift), the unbiased
+        // exponent is b − 24, i.e. e32 = 127 + b − 24 = 113 − shift.
+        let shift = frac.leading_zeros() - 21;
+        let e32 = 127 - 14 - shift;
+        let f32_frac = (frac << (shift + 13)) & 0x007F_FFFF;
+        return f32::from_bits(sign | (e32 << 23) | f32_frac);
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (frac << 13));
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (frac << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_eq(codec: WireCodec, v: &SparseVec) -> (u64, u64) {
+        let mut w = v.clone();
+        let mut scratch = WireScratch::default();
+        let (raw, enc) = codec.roundtrip(&mut w, &mut scratch);
+        assert_eq!(&w, v, "decode∘encode not identity under {}", codec.name());
+        (raw, enc)
+    }
+
+    #[test]
+    fn parse_name_round_trip() {
+        for codec in [WireCodec::Raw, WireCodec::Packed, WireCodec::PackedF16] {
+            assert_eq!(WireCodec::parse(codec.name()).unwrap(), codec);
+        }
+        assert!(WireCodec::parse("f16").is_err());
+        assert!(WireCodec::parse("zip").is_err());
+        assert!(!WireCodec::Raw.is_packed());
+        assert!(WireCodec::Packed.is_packed() && !WireCodec::Packed.is_f16());
+        assert!(WireCodec::PackedF16.is_f16());
+    }
+
+    #[test]
+    fn packed_identity_on_edge_shapes() {
+        // Empty payload, empty dimension, singleton, dense (k = d),
+        // adjacent run, and a gap at the top of u32 range.
+        let cases = vec![
+            SparseVec::new(0),
+            SparseVec::new(100),
+            SparseVec::from_pairs(10, vec![(7, -0.5)]),
+            SparseVec::from_pairs(4, vec![(0, 1.0), (1, 2.0), (2, 3.0), (3, 4.0)]),
+            SparseVec::from_pairs(1 << 30, vec![(0, 1.0), (1 << 29, -2.0), ((1 << 30) - 1, 3.0)]),
+            SparseVec {
+                d: u32::MAX as usize,
+                indices: vec![0, 1, u32::MAX - 1],
+                values: vec![1.0, -1.0, 0.25],
+            },
+        ];
+        for v in &cases {
+            let (raw, enc) = roundtrip_eq(WireCodec::Packed, v);
+            assert_eq!(raw, v.wire_bytes());
+            assert!(enc <= raw, "encoded {enc} > raw {raw} (nnz {})", v.nnz());
+        }
+    }
+
+    #[test]
+    fn clustered_indices_pack_well() {
+        // 1024 elements in tight clusters of 8: gaps are mostly 0, so the
+        // packed section should be far below 4 bytes/index.
+        let mut pairs = Vec::new();
+        for c in 0..128u32 {
+            for j in 0..8u32 {
+                pairs.push((c * 4096 + j, 0.5));
+            }
+        }
+        let v = SparseVec::from_pairs(1 << 20, pairs);
+        let (raw, enc) = roundtrip_eq(WireCodec::Packed, &v);
+        assert!(
+            (enc as f64) < 0.6 * raw as f64,
+            "clustered payload packed to {enc} of raw {raw}"
+        );
+        // f16 halves the value section on top.
+        let (_, enc16) = roundtrip_eq(WireCodec::PackedF16, &v);
+        assert_eq!(enc16, enc - 2 * v.nnz() as u64);
+    }
+
+    #[test]
+    fn adversarial_payloads_escape_to_raw_budget() {
+        // A lone element with a maximal gap: packed would cost
+        // 1 header + 4 gap bytes + 4 value > 8 raw — the escape caps it.
+        let v = SparseVec::from_pairs(u32::MAX as usize, vec![(u32::MAX - 1, 1.0)]);
+        let (raw, enc) = roundtrip_eq(WireCodec::Packed, &v);
+        assert_eq!(raw, 8);
+        assert_eq!(enc, 8, "escape must cap the lone-element payload at raw");
+        // Wide uniform gaps across many blocks likewise never exceed raw.
+        let stride = (u32::MAX / 4096) as u32;
+        let pairs: Vec<(u32, f32)> = (0..4096u32).map(|i| (i * stride, 1.0)).collect();
+        let v = SparseVec::from_pairs(u32::MAX as usize, pairs);
+        let (raw, enc) = roundtrip_eq(WireCodec::Packed, &v);
+        assert!(enc <= raw);
+    }
+
+    #[test]
+    fn raw_is_a_pass_through() {
+        let v = SparseVec::from_pairs(100, vec![(3, 1.0), (50, -2.0)]);
+        let mut w = v.clone();
+        let mut scratch = WireScratch::default();
+        let (raw, enc) = WireCodec::Raw.roundtrip(&mut w, &mut scratch);
+        assert_eq!(w, v);
+        assert_eq!((raw, enc), (16, 16));
+        assert_eq!(WireCodec::Raw.encoded_bytes(&v), v.wire_bytes());
+        assert_eq!(WireCodec::Raw.model_bytes(1000, 10), 80);
+    }
+
+    #[test]
+    fn f16_helpers_round_trip_representables() {
+        for x in [0.0f32, -0.0, 1.0, -1.5, 0.099975586, 65504.0, -65504.0, 6.1e-5] {
+            let q = f16_bits_to_f32(f32_to_f16_bits(x));
+            let q2 = f16_bits_to_f32(f32_to_f16_bits(q));
+            assert_eq!(q.to_bits(), q2.to_bits(), "f16 round-trip not idempotent for {x}");
+        }
+        // Saturation instead of infinity.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), 65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e9)), -65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), 65504.0);
+        // Relative error of quantization ≤ 2⁻¹¹ for normals.
+        let mut worst = 0.0f64;
+        for i in 0..4096 {
+            let x = (i as f32 - 2048.0) * 3.3e-4 + 1.7e-6;
+            if x == 0.0 {
+                continue;
+            }
+            let q = f16_bits_to_f32(f32_to_f16_bits(x));
+            worst = worst.max(((x - q) as f64 / x as f64).abs());
+        }
+        assert!(worst <= 1.0 / 2048.0 + 1e-9, "worst relative error {worst}");
+        // Subnormals survive the round-trip too.
+        let tiny = f16_bits_to_f32(0x0001);
+        assert!(tiny > 0.0);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+    }
+
+    #[test]
+    fn f16_quantize_folds_the_residual() {
+        let mut v = SparseVec::from_pairs(8, vec![(1, 0.1), (5, -0.30003), (7, 2.0)]);
+        let orig = v.clone();
+        let mut folded = vec![0.0f32; 8];
+        WireCodec::PackedF16.quantize_values_f16(&mut v, |i, delta| folded[i as usize] += delta);
+        for (j, &i) in orig.indices.iter().enumerate() {
+            // quantized + folded == original, exactly: delta is computed
+            // in f32 from these very operands.
+            assert_eq!(v.values[j] + folded[i as usize], orig.values[j]);
+        }
+        // 2.0 is exactly representable: no fold for it.
+        assert_eq!(folded[7], 0.0);
+        // After the fold, the payload round-trips bit-exactly.
+        roundtrip_eq(WireCodec::PackedF16, &v);
+        // Raw/packed never touch values.
+        let mut w = orig.clone();
+        WireCodec::Packed.quantize_values_f16(&mut w, |_, _| panic!("no fold on packed"));
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn model_bytes_tracks_density_and_caps_at_raw() {
+        let d = 25_557_032u64;
+        // Denser payloads → smaller gaps → fewer bytes per element.
+        let b_sparse = WireCodec::Packed.model_bytes(d, d / 1000) as f64 / (d / 1000) as f64;
+        let b_dense = WireCodec::Packed.model_bytes(d, d / 10) as f64 / (d / 10) as f64;
+        assert!(b_dense < b_sparse);
+        // At the paper density the model sits clearly under raw.
+        assert!(b_sparse < 7.0, "modelled {b_sparse} B/elem not < 7");
+        // f16 is 2 value bytes cheaper per element.
+        let k = d / 1000;
+        assert_eq!(
+            WireCodec::Packed.model_bytes(d, k) - WireCodec::PackedF16.model_bytes(d, k),
+            2 * k
+        );
+        // Degenerate/adversarial ratios cap at the escape cost, raw at 8k.
+        assert!(WireCodec::Packed.model_bytes(u32::MAX as u64, 1) <= 8);
+        assert_eq!(WireCodec::Packed.model_bytes(0, 0), 0);
+        assert_eq!(WireCodec::Raw.model_bytes(d, k), 8 * k);
+        // Deterministic: pure integer/f64 arithmetic.
+        assert_eq!(
+            WireCodec::Packed.model_bytes(d, k),
+            WireCodec::Packed.model_bytes(d, k)
+        );
+    }
+
+    #[test]
+    fn encoded_bytes_matches_encoder_exactly() {
+        // The accounting function and the encoder share the escape
+        // decision: buffer length − frame == encoded_bytes, always.
+        let mut pairs = Vec::new();
+        let mut x = 3u32;
+        for _ in 0..977 {
+            x = x.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            pairs.push((x % 1_000_000, (x as f32) * 1e-9));
+        }
+        pairs.sort_unstable_by_key(|p| p.0);
+        pairs.dedup_by_key(|p| p.0);
+        let v = SparseVec {
+            d: 1_000_000,
+            indices: pairs.iter().map(|p| p.0).collect(),
+            values: pairs.iter().map(|p| p.1).collect(),
+        };
+        for codec in [WireCodec::Packed, WireCodec::PackedF16] {
+            let mut buf = Vec::new();
+            codec.encode(&v, &mut buf);
+            assert_eq!(buf.len() as u64 - FRAME_BYTES as u64, codec.encoded_bytes(&v));
+            assert!(codec.encoded_bytes(&v) <= v.wire_bytes());
+        }
+    }
+}

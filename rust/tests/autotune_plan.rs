@@ -22,6 +22,7 @@ use sparkv::data::GaussianMixture;
 use sparkv::models::NativeMlp;
 use sparkv::netsim::{ComputeProfile, LinkSpec, Topology};
 use sparkv::schedule::KSchedule;
+use sparkv::tensor::wire::WireCodec;
 use sparkv::util::testkit::{self, Gen};
 
 fn quick_scenario() -> TuneScenario {
@@ -194,6 +195,10 @@ fn prop_tuned_plans_are_seed_deterministic_and_budget_exact() {
                 .map(|i| [Exchange::DenseRing, Exchange::TreeSparse][i])
                 .collect(),
             selects: vec![Select::Exact, Select::Warm { tau: g.f64_in(0.05, 0.5) }],
+            wires: pick(g, &[0, 1, 2])
+                .into_iter()
+                .map(|i| [WireCodec::Raw, WireCodec::Packed, WireCodec::PackedF16][i])
+                .collect(),
         };
         let seed = g.rng.next_u64() & 0xFFFF_FFFF;
         let strategy_pick = g.usize_in(0, 2);

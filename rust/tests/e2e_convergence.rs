@@ -30,6 +30,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     }
 }
 

@@ -81,6 +81,8 @@ fn straggler_jitter_slows_barrier_monotonically() {
             buckets: 1,
             host_overhead_s: 0.0,
             exchange: sparkv::config::Exchange::DenseRing,
+            wire: sparkv::tensor::wire::WireCodec::Raw,
+            wire_cpu_per_elem_s: sparkv::netsim::WIRE_PACK_PER_ELEM_S,
         };
         means.push(Simulator::new(cfg).mean_iteration(100).total);
     }

@@ -187,6 +187,7 @@ fn distributed_training_through_pjrt_learns() {
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;
@@ -276,6 +277,7 @@ fn lm_small_trains_through_pjrt() {
         steps_per_epoch: 100,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     };
     let out = train(cfg, &mut model, &data).unwrap();
     let first = out.metrics.steps[0].loss;

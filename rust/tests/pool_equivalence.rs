@@ -57,6 +57,7 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         steps_per_epoch: 5,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     }
 }
 

@@ -182,6 +182,7 @@ fn cfg(op: OpKind, schedule: KSchedule, parallelism: Parallelism) -> TrainConfig
         steps_per_epoch: 4,
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     }
 }
 

@@ -51,6 +51,7 @@ fn cfg(op: OpKind, buckets: Buckets, select: Select) -> TrainConfig {
         steps_per_epoch: 5,
         exchange: sparkv::config::Exchange::DenseRing,
         select,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
     }
 }
 

@@ -1,0 +1,349 @@
+//! The wire-codec equivalence suite: locks the PR-9 tentpole invariant
+//! that `wire = packed` changes *how many bytes cross the link*, never
+//! *what is exchanged or learned*:
+//!
+//! 1. decode ∘ encode is the identity on every payload geometry —
+//!    empty, dense (k = d), clustered runs, uniform subsets, and
+//!    adversarial gaps reaching to `u32::MAX` — and the encoded size
+//!    never exceeds the raw `8·nnz` accounting (whole-payload escape);
+//! 2. `wire = packed` training is **bit-identical** to `wire = raw`
+//!    end to end across serial / threads:N / pool:N, both bucket paths,
+//!    and both exchange schedules (dense-ring and tree-sparse gTop-k);
+//! 3. `wire = packed+f16` folds the f16 quantization residual into
+//!    error feedback — quantized payload + folded delta reconstructs the
+//!    original coordinate exactly (property test), and after the fold
+//!    the codec round trip is the identity;
+//! 4. the step accounting contract: `wire_bytes_encoded ==
+//!    wire_bytes_raw` under raw, `≤` under packed, and strictly `<`
+//!    under packed+f16 whenever anything was sent.
+
+use sparkv::compress::OpKind;
+use sparkv::config::{BucketApportion, Buckets, Exchange, Parallelism, Select, TrainConfig};
+use sparkv::coordinator::{train, TrainOutput};
+use sparkv::data::GaussianMixture;
+use sparkv::models::NativeMlp;
+use sparkv::schedule::KSchedule;
+use sparkv::tensor::wire::{f16_bits_to_f32, f32_to_f16_bits, WireCodec, WireScratch};
+use sparkv::tensor::SparseVec;
+use sparkv::util::testkit::{self, Gen};
+
+fn cfg(buckets: Buckets, exchange: Exchange, wire: WireCodec) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        op: OpKind::TopK,
+        k_ratio: 0.01,
+        batch_size: 16,
+        steps: 12,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: 7,
+        eval_every: 6,
+        hist_every: 0,
+        momentum_correction: false,
+        global_topk: exchange.is_tree(),
+        parallelism: Parallelism::Serial,
+        buckets,
+        bucket_apportion: BucketApportion::Size,
+        k_schedule: KSchedule::Const(None),
+        steps_per_epoch: 5,
+        exchange,
+        select: Select::Exact,
+        wire,
+    }
+}
+
+fn setup() -> (GaussianMixture, NativeMlp) {
+    (
+        GaussianMixture::new(16, 4, 2.5, 1.0, 11),
+        NativeMlp::new(&[16, 32, 4]),
+    )
+}
+
+fn assert_runs_bit_identical(a: &TrainOutput, b: &TrainOutput, what: &str) {
+    assert_eq!(a.final_params, b.final_params, "{what}: final params diverged");
+    assert_eq!(a.metrics.steps.len(), b.metrics.steps.len(), "{what}");
+    for (sa, sb) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "{what}: step {}", sa.step);
+        assert_eq!(sa.sent_elements, sb.sent_elements, "{what}: step {}", sa.step);
+        assert_eq!(sa.density.to_bits(), sb.density.to_bits(), "{what}: step {}", sa.step);
+        // The raw byte accounting is codec-independent by construction.
+        assert_eq!(sa.wire_bytes_raw, sb.wire_bytes_raw, "{what}: step {}", sa.step);
+    }
+    for (ea, eb) in a.metrics.evals.iter().zip(&b.metrics.evals) {
+        assert_eq!(ea.accuracy.to_bits(), eb.accuracy.to_bits(), "{what}: eval {}", ea.step);
+    }
+}
+
+/// Round-trip `v` through `codec` and check the decode is bit-identical,
+/// with the encoded accounting obeying its contracts.
+fn assert_codec_identity(codec: WireCodec, v: &SparseVec, what: &str) {
+    let mut scratch = WireScratch::default();
+    let mut w = v.clone();
+    let (raw, enc) = codec.roundtrip(&mut w, &mut scratch);
+    assert_eq!(raw, v.wire_bytes(), "{what}: raw accounting");
+    assert_eq!(enc, codec.encoded_bytes(v), "{what}: encoded accounting");
+    assert!(enc <= raw, "{what}: encoded {enc} > raw {raw}");
+    assert_eq!(w.d, v.d, "{what}: d");
+    assert_eq!(w.indices, v.indices, "{what}: indices");
+    assert_eq!(w.values.len(), v.values.len(), "{what}: nnz");
+    for (j, (a, b)) in v.values.iter().zip(&w.values).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: value {j}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. decode ∘ encode identity.
+// ---------------------------------------------------------------------
+
+/// Deterministic edge geometries: empty vector (d = 0), empty payload
+/// (k = 0, d > 0), fully dense (k = d, gap width 0 after the uniqueness
+/// `−1`), a single element at the top of the index space, and payloads
+/// whose gaps span the entire `u32` range (32-bit block width plus the
+/// first-block absolute offset).
+#[test]
+fn wire_edge_geometries_round_trip() {
+    let top = u32::MAX;
+    let cases: Vec<(&str, SparseVec)> = vec![
+        ("d=0", SparseVec::new(0)),
+        ("k=0", SparseVec::new(1 << 20)),
+        (
+            "k=d",
+            SparseVec::from_pairs(64, (0..64u32).map(|i| (i, i as f32 - 31.5)).collect()),
+        ),
+        (
+            "single-at-top",
+            SparseVec::from_pairs(top as usize, vec![(top - 1, -3.5)]),
+        ),
+        (
+            "u32-span-gaps",
+            SparseVec::from_pairs(
+                top as usize,
+                vec![(0, 1.0), (1, -2.0), (top / 2, 0.25), (top - 1, 4096.0)],
+            ),
+        ),
+        (
+            "first-gap-huge",
+            SparseVec::from_pairs(top as usize, vec![(top - 2, 0.5), (top - 1, -0.5)]),
+        ),
+    ];
+    for (what, v) in &cases {
+        assert_codec_identity(WireCodec::Packed, v, &format!("packed/{what}"));
+        // For packed+f16 the identity holds once values are quantized —
+        // the trainer always quantizes (folding the residual into EF)
+        // before the round trip.
+        let mut q = v.clone();
+        WireCodec::PackedF16.quantize_values_f16(&mut q, |_, _| {});
+        assert_codec_identity(WireCodec::PackedF16, &q, &format!("packed+f16/{what}"));
+    }
+}
+
+/// Random payload geometries — uniform subsets, clustered runs, and
+/// exponential-gap mixtures over dimension scales from 2⁶ to ~2³²:
+/// decode ∘ encode is the identity and encoded ≤ raw for every payload
+/// the generator can produce.
+#[test]
+fn prop_wire_round_trip_identity_and_never_larger() {
+    testkit::forall("wire-roundtrip", |g: &mut Gen| {
+        let d = 1usize << g.usize_in(6, 32);
+        let d = d.min(u32::MAX as usize);
+        let target = g.usize_in(1, 512).min(d);
+        // Three index geometries: uniform stride, clustered runs, and
+        // heavy-tailed gaps (stress the per-block width switching).
+        let mut indices: Vec<u32> = Vec::with_capacity(target);
+        let mut at = 0u64;
+        let family = g.usize_in(0, 2);
+        while indices.len() < target && at < d as u64 {
+            indices.push(at as u32);
+            let gap = match family {
+                0 => g.usize_in(1, (2 * d / target).max(2)) as u64,
+                1 => {
+                    if g.bool() {
+                        1 // run continues
+                    } else {
+                        g.usize_in(1, (16 * d / target).max(2)) as u64
+                    }
+                }
+                _ => 1u64 << g.usize_in(0, 31),
+            };
+            at += gap;
+        }
+        let values: Vec<f32> = (0..indices.len()).map(|_| g.f32_in(-1e6, 1e6)).collect();
+        let v = SparseVec::from_pairs(d, indices.into_iter().zip(values).collect());
+
+        let mut scratch = WireScratch::default();
+        for codec in [WireCodec::Packed, WireCodec::PackedF16] {
+            let mut w = v.clone();
+            codec.quantize_values_f16(&mut w, |_, _| {});
+            let before = w.clone();
+            let (raw, enc) = codec.roundtrip(&mut w, &mut scratch);
+            if enc > raw {
+                return Err(format!("{}: encoded {enc} > raw {raw}", codec.name()));
+            }
+            if w.d != before.d || w.indices != before.indices {
+                return Err(format!("{}: index round trip diverged", codec.name()));
+            }
+            for (a, b) in before.values.iter().zip(&w.values) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{}: value round trip diverged", codec.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. packed training ≡ raw training.
+// ---------------------------------------------------------------------
+
+/// The lossless codec is invisible to training: `wire = packed` is
+/// bit-identical to `wire = raw` across every runtime × bucket path ×
+/// exchange schedule, while the encoded byte accounting stays within
+/// the raw budget.
+#[test]
+fn packed_training_is_bit_identical_to_raw() {
+    let (data, mut model) = setup();
+    for exchange in [Exchange::DenseRing, Exchange::TreeSparse] {
+        for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+            let raw = train(cfg(buckets, exchange, WireCodec::Raw), &mut model, &data).unwrap();
+            for s in &raw.metrics.steps {
+                assert_eq!(
+                    s.wire_bytes_encoded, s.wire_bytes_raw,
+                    "raw accounting must be pass-through at step {}",
+                    s.step
+                );
+            }
+            for parallelism in
+                [Parallelism::Serial, Parallelism::Threads(3), Parallelism::Pool(3)]
+            {
+                let mut c = cfg(buckets, exchange, WireCodec::Packed);
+                c.parallelism = parallelism;
+                let what = format!(
+                    "packed/{}/{}/{}",
+                    exchange.name(),
+                    buckets.name(),
+                    parallelism.name()
+                );
+                let packed = train(c, &mut model, &data).unwrap();
+                assert_runs_bit_identical(&raw, &packed, &what);
+                for s in &packed.metrics.steps {
+                    assert!(
+                        s.wire_bytes_encoded <= s.wire_bytes_raw,
+                        "{what}: encoded > raw at step {}",
+                        s.step
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. packed+f16 error-feedback conservation.
+// ---------------------------------------------------------------------
+
+/// The f16 fold contract: for every coordinate, `quantized + delta`
+/// reconstructs the original value **exactly** (f16 round-trip error is
+/// exactly representable in f32 for normal inputs), the fold only
+/// reports non-zero deltas, and after the fold the payload survives the
+/// wire round trip bit-identically — so EF sees precisely the mass the
+/// wire dropped.
+#[test]
+fn prop_f16_fold_conserves_every_coordinate() {
+    testkit::forall("wire-f16-fold", |g: &mut Gen| {
+        let d = g.usize_in(64, 4096);
+        let k = g.usize_in(1, d.min(256));
+        let stride = d / k;
+        let pairs: Vec<(u32, f32)> = (0..k)
+            .map(|j| ((j * stride) as u32, g.f32_in(-100.0, 100.0)))
+            .collect();
+        let mut v = SparseVec::from_pairs(d, pairs);
+        let orig = v.clone();
+        let mut deltas = vec![0.0f32; d];
+        WireCodec::PackedF16.quantize_values_f16(&mut v, |i, delta| {
+            if delta == 0.0 {
+                panic!("fold reported a zero delta");
+            }
+            deltas[i as usize] += delta;
+        });
+        for ((&i, &q), &x) in v.indices.iter().zip(&v.values).zip(&orig.values) {
+            if q.to_bits() != f16_bits_to_f32(f32_to_f16_bits(x)).to_bits() {
+                return Err(format!("coordinate {i} not f16-quantized"));
+            }
+            if (q + deltas[i as usize]).to_bits() != x.to_bits() {
+                return Err(format!(
+                    "coordinate {i}: {q} + {} != {x}",
+                    deltas[i as usize]
+                ));
+            }
+        }
+        // Post-fold, the wire round trip is the identity.
+        let mut scratch = WireScratch::default();
+        let before = v.clone();
+        let (raw, enc) = WireCodec::PackedF16.roundtrip(&mut v, &mut scratch);
+        if enc > raw {
+            return Err(format!("encoded {enc} > raw {raw}"));
+        }
+        for (a, b) in before.values.iter().zip(&v.values) {
+            if a.to_bits() != b.to_bits() {
+                return Err("post-fold round trip not the identity".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end `wire = packed+f16`: training stays healthy (finite loss,
+/// exact payload budget) and the byte accounting is strictly below raw
+/// whenever anything was sent — the f16 value section alone guarantees
+/// ≤ 6 of every raw 8 bytes.
+#[test]
+fn packed_f16_training_is_healthy_and_cuts_bytes() {
+    let (data, mut model) = setup();
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        for parallelism in [Parallelism::Serial, Parallelism::Pool(3)] {
+            let mut c = cfg(buckets, Exchange::DenseRing, WireCodec::PackedF16);
+            c.parallelism = parallelism;
+            let what = format!("packed+f16/{}/{}", buckets.name(), parallelism.name());
+            let run = train(c, &mut model, &data).unwrap();
+            assert!(
+                run.metrics.final_loss().unwrap().is_finite(),
+                "{what}: loss diverged"
+            );
+            for s in &run.metrics.steps {
+                assert_eq!(s.sent_elements, s.target_elements, "{what}: step {}", s.step);
+                if s.sent_elements > 0 {
+                    assert!(
+                        s.wire_bytes_encoded < s.wire_bytes_raw,
+                        "{what}: f16 step {} not below raw ({} vs {})",
+                        s.step,
+                        s.wire_bytes_encoded,
+                        s.wire_bytes_raw
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// f16 runs are placement-invariant too: quantization happens in the
+/// per-worker send path before any merge, so serial / threads / pool
+/// must agree bit-for-bit even though the values are lossy vs raw.
+#[test]
+fn packed_f16_is_bit_identical_across_runtimes() {
+    let (data, mut model) = setup();
+    for buckets in [Buckets::None, Buckets::Bytes(1024)] {
+        let mk = |parallelism| {
+            let mut c = cfg(buckets, Exchange::DenseRing, WireCodec::PackedF16);
+            c.parallelism = parallelism;
+            c
+        };
+        let what = format!("f16-runtimes/{}", buckets.name());
+        let serial = train(mk(Parallelism::Serial), &mut model, &data).unwrap();
+        let threaded = train(mk(Parallelism::Threads(3)), &mut model, &data).unwrap();
+        let pooled = train(mk(Parallelism::Pool(3)), &mut model, &data).unwrap();
+        assert_runs_bit_identical(&serial, &threaded, &format!("{what}/threads"));
+        assert_runs_bit_identical(&serial, &pooled, &format!("{what}/pool"));
+    }
+}
