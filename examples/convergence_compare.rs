@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
                 exchange: sparkv::config::Exchange::DenseRing,
                 select: sparkv::config::Select::Exact,
                 wire: sparkv::tensor::wire::WireCodec::Raw,
+                trace: sparkv::config::Trace::Off,
             };
             let out = run_one(&cfg, &model_name, &backend)?;
             let acc = out

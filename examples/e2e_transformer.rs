@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     };
     println!(
         "training: op={} P={} steps={} k={:.4}·d lr={}\n",

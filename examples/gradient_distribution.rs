@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     };
 
     let data = SyntheticDigits::new(16, 10, 0.6, cfg.seed);

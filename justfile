@@ -87,6 +87,27 @@ wire-smoke:
     cd rust && cargo run --release -- train --op topk --wire packed+f16 \
         --workers 4 --steps 6
 
+# The trace-smoke leg of bench-smoke: the span tracer end to end — the
+# overhead bench in fast mode (writes BENCH_trace.json at the repo root;
+# ≤1% span-tracing overhead on the serial acceptance rows), traced
+# threads:4 and pool:4 training runs writing Perfetto JSON at the repo
+# root (the bucketed pool trace is the one that shows collective/
+# selection overlap in ui.perfetto.dev), `sparkv report` folding each
+# trace into the measured-vs-predicted drift table, and the
+# malformed-trace guard (report must exit non-zero on garbage).
+trace-smoke:
+    cd rust && SPARKV_BENCH_FAST=1 cargo bench --bench trace_overhead
+    cd rust && cargo run --release -- train --op topk --workers 4 --steps 8 \
+        --parallelism threads:4 --trace spans:../TRACE_threads.json
+    cd rust && cargo run --release -- train --op topk --workers 4 --steps 8 \
+        --parallelism pool:4 --buckets bytes:1024 \
+        --trace spans:../TRACE_pool.json
+    cd rust && cargo run --release -- report ../TRACE_threads.json
+    cd rust && cargo run --release -- report ../TRACE_pool.json
+    cd rust && printf '{"broken": true}' > ../TRACE_broken.json && \
+        if cargo run --release -- report ../TRACE_broken.json; then \
+            echo "report accepted a malformed trace"; exit 1; fi
+
 # The tune-smoke CI job, locally: the closed-loop autotuner end to end on
 # a tiny grid (2 candidates, 3 measured calibration probe steps, 3
 # virtual steps/epoch), then a real training replay of the plan it wrote

@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             exchange: sparkv::config::Exchange::DenseRing,
             select: sparkv::config::Select::Exact,
             wire: sparkv::tensor::wire::WireCodec::Raw,
+            trace: sparkv::config::Trace::Off,
         };
         let out = train(cfg, &mut model, &data)?;
         let sent = out.metrics.cumulative_sent();

@@ -77,6 +77,7 @@ fn main() -> anyhow::Result<()> {
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     };
     let mut trainer = Trainer::new(cfg, &mut model, &data);
     trainer.keep_raw_snapshots = true;

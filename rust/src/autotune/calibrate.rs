@@ -283,6 +283,66 @@ impl Calibrator {
         cal.validate()?;
         Ok(cal)
     }
+
+    /// Fit a [`Calibration`] from a recorded span trace instead of live
+    /// probe runs (`sparkv tune --calibrate-from trace.json`). Only the
+    /// phases a trace actually measures are fitted — the compute and
+    /// bandwidth scales; the launch and wire-codec constants stay at
+    /// their stock netsim values, because spans record *phase* walls,
+    /// not launch halves or codec CPU. `probe_steps` records how many
+    /// traced steps the fit averaged over.
+    pub fn fit_from_trace(
+        trace: &crate::trace::TraceData,
+        scenario: &TuneScenario,
+    ) -> anyhow::Result<Calibration> {
+        let measured = crate::trace::report::fold(trace)?;
+        let mean = measured.mean();
+        let steps = measured.steps.len();
+        let meta = &trace.meta;
+        let d = meta.d.max(1);
+
+        // Compute scale: the fold's compute phase is the critical-path
+        // per-worker forward/backward wall (max over worker tracks) —
+        // the measured twin of the t1 the oracle charges once per
+        // iteration, so no worker factor here (unlike the serial probe
+        // in [`Calibrator::run`], which steps workers sequentially).
+        let modelled_compute_s =
+            scenario.model.t1_compute * (d as f64 / scenario.model.params.max(1) as f64);
+        let compute_scale = if mean.compute > 0.0 && modelled_compute_s > 0.0 {
+            mean.compute / modelled_compute_s
+        } else {
+            1.0
+        };
+
+        // Bandwidth scale: achieved bytes/s of the traced collective
+        // phase over the scenario link model, with the payload priced
+        // the way the oracle prices it — the dense gradient for
+        // `op = dense`, the top-k (index, value) pairs otherwise.
+        let payload_bytes = if meta.op == "dense" {
+            d as u64 * 4
+        } else {
+            (((meta.k_ratio * d as f64).ceil() as u64).max(1)) * 8
+        };
+        let p = meta.workers.max(2);
+        let bytes_moved = ring_allreduce_link_bytes(p, payload_bytes);
+        let modelled_bps = scenario.topo.ring_bottleneck().effective_bandwidth();
+        let bandwidth_scale = if mean.comm > 0.0 && modelled_bps > 0.0 {
+            (bytes_moved / mean.comm) / modelled_bps
+        } else {
+            1.0
+        };
+
+        let cal = Calibration {
+            spawn_per_thread_s: SPAWN_PER_THREAD_S,
+            pool_dispatch_per_thread_s: POOL_DISPATCH_PER_THREAD_S,
+            compute_scale,
+            bandwidth_scale,
+            wire_pack_per_elem_s: WIRE_PACK_PER_ELEM_S,
+            probe_steps: steps,
+        };
+        cal.validate()?;
+        Ok(cal)
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +401,72 @@ mod tests {
             Calibration::from_json(&legacy).unwrap().wire_pack_per_elem_s,
             WIRE_PACK_PER_ELEM_S
         );
+    }
+
+    #[test]
+    fn fit_from_trace_scales_compute_and_bandwidth_only() {
+        use crate::trace::{worker_track, Phase, Span, TraceData, TraceMeta, COORDINATOR_TRACK};
+        let meta = TraceMeta {
+            workers: 2,
+            d: 1000,
+            steps: 2,
+            k_ratio: 0.01,
+            op: "topk".to_string(),
+            parallelism: "serial".to_string(),
+            buckets: 1,
+            exchange: "allgather".to_string(),
+            wire: "raw".to_string(),
+            select: "sort".to_string(),
+        };
+        let mut spans = Vec::new();
+        for step in 0u32..2 {
+            let base = step as f64 * 1000.0;
+            spans.push(Span {
+                track: COORDINATOR_TRACK,
+                phase: Phase::Step,
+                step,
+                bucket: -1,
+                t0_us: base,
+                t1_us: base + 500.0,
+            });
+            spans.push(Span {
+                track: COORDINATOR_TRACK,
+                phase: Phase::Collective,
+                step,
+                bucket: -1,
+                t0_us: base + 300.0,
+                t1_us: base + 400.0,
+            });
+            for rank in 0..2usize {
+                spans.push(Span {
+                    track: worker_track(rank),
+                    phase: Phase::Compute,
+                    step,
+                    bucket: -1,
+                    t0_us: base,
+                    t1_us: base + 200.0,
+                });
+            }
+        }
+        let trace = TraceData { meta, spans, dropped: 0 };
+        let scen = TuneScenario::default_16gpu();
+        let cal = Calibrator::fit_from_trace(&trace, &scen).unwrap();
+        cal.validate().unwrap();
+        assert_eq!(cal.probe_steps, 2, "probe_steps records the traced step count");
+        // Unfittable constants stay stock so the oracle's launch/codec
+        // terms are unchanged by a trace-sourced calibration.
+        assert_eq!(cal.spawn_per_thread_s, SPAWN_PER_THREAD_S);
+        assert_eq!(cal.pool_dispatch_per_thread_s, POOL_DISPATCH_PER_THREAD_S);
+        assert_eq!(cal.wire_pack_per_elem_s, WIRE_PACK_PER_ELEM_S);
+        assert!(cal.compute_scale > 0.0 && cal.compute_scale.is_finite());
+        assert!(cal.bandwidth_scale > 0.0 && cal.bandwidth_scale.is_finite());
+        // A trace with no step spans is malformed, not a unit fit.
+        let empty = TraceData {
+            meta: trace.meta.clone(),
+            spans: Vec::new(),
+            dropped: 0,
+        };
+        assert!(Calibrator::fit_from_trace(&empty, &scen).is_err());
     }
 
     #[test]

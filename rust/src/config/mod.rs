@@ -29,6 +29,7 @@
 //! | `steps_per_epoch`     | `100`      | epoch length in steps for the warmup grammar's `epochs=E` (synthetic streams have no natural epoch boundary) |
 //! | `exchange`            | `"dense-ring"` | sparse-exchange wiring for gTop-k runs: `dense-ring` (merge through the dense ring / allgather schedule) or `tree-sparse` (recursive-halving tree over sparse payloads, 2k values per round in ⌈log₂P⌉ rounds — gTopKAllReduce, Shi et al. 2019); requires `global_topk = true` and a sparse `op`; bit-identical numerics either way |
 //! | `select`              | `"exact"`  | threshold-selection engine: `exact` (cold per-step derivation — bit-identical to the pre-warm path) or `warm:TAU` with TAU ∈ (0, 1) (cross-step threshold reuse: step t seeds its selection with step t−1's refined threshold and does one fused scan, falling back to the cold path only when the hit count drifts outside `[k, (1+TAU)·k]` — see [`crate::compress::warm`]); applies to `topk`/`gaussiank`, other operators keep their exact selection |
+//! | `trace`               | `"off"`    | step tracing ([`crate::trace`]): `off` (default — zero-overhead, bit-identical to untraced builds), `steps` (per-step `comm_us` aggregates only), or `spans:PATH` (full span recording, written to PATH as Chrome trace-event / Perfetto JSON at run end; one track per worker plus ring-seat tracks under `pool:N`); feed the file to `sparkv report` for the measured-vs-predicted drift table |
 //! | `wire`                | `"raw"`    | sparse-payload wire codec ([`crate::tensor::wire`]): `raw` (legacy 8-byte `(u32, f32)` pairs — no codec pass), `packed` (lossless delta + per-block bitpacked indices; decode∘encode is the identity, so training stays bit-identical to `raw`), or `packed+f16` (packed indices + f16 values, the quantization residual folded into error feedback at the send site — its own trajectory, like choosing another operator) |
 //!
 //! ## Topology grammar (netsim / cluster pricing)
@@ -442,6 +443,72 @@ impl Select {
     }
 }
 
+/// Step-tracing mode (the `trace` config/CLI axis — see [`crate::trace`]).
+///
+/// `Off` (the default) records nothing and costs nothing: every hook is
+/// an untaken branch, and training is bit-identical to builds that
+/// predate the trace subsystem. `Steps` measures per-step aggregates
+/// only (`StepRecord::comm_us`). `Spans(path)` records the full span
+/// timeline and writes it to `path` as Perfetto-loadable JSON when the
+/// run finishes; an *empty* path keeps the trace in memory only
+/// (`TrainOutput::trace`) — the test harness's mode, not expressible
+/// from config/CLI, where a path is required.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub enum Trace {
+    /// No tracing (default; the bit-identity goldens pin this path).
+    #[default]
+    Off,
+    /// Per-step aggregate timing only — no span buffers.
+    Steps,
+    /// Full span recording; non-empty paths get the Perfetto JSON file.
+    Spans(String),
+}
+
+impl Trace {
+    /// Parse a config/CLI value: `off`, `steps`, or `spans:PATH` (also
+    /// `spans=PATH`). The path keeps its case; bare `spans` is rejected
+    /// (an unwritable trace would silently vanish).
+    pub fn parse(s: &str) -> anyhow::Result<Trace> {
+        let t = s.trim();
+        let grammar = "off|steps|spans:PATH";
+        match t.to_ascii_lowercase().as_str() {
+            "off" => return Ok(Trace::Off),
+            "steps" => return Ok(Trace::Steps),
+            _ => {}
+        }
+        if t.len() >= 5 && t[..5].eq_ignore_ascii_case("spans") {
+            let rest = &t[5..];
+            let path = rest
+                .strip_prefix(':')
+                .or_else(|| rest.strip_prefix('='))
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .ok_or_else(|| anyhow::anyhow!("bad trace '{s}': expected {grammar}"))?;
+            return Ok(Trace::Spans(path.to_string()));
+        }
+        anyhow::bail!("bad trace '{s}': expected {grammar}")
+    }
+
+    /// Display form (round-trips through [`Trace::parse`] for non-empty
+    /// paths).
+    pub fn name(&self) -> String {
+        match self {
+            Trace::Off => "off".to_string(),
+            Trace::Steps => "steps".to_string(),
+            Trace::Spans(path) => format!("spans:{path}"),
+        }
+    }
+
+    /// The recorder mode this axis implies.
+    pub fn mode(&self) -> crate::trace::TraceMode {
+        match self {
+            Trace::Off => crate::trace::TraceMode::Off,
+            Trace::Steps => crate::trace::TraceMode::Steps,
+            Trace::Spans(_) => crate::trace::TraceMode::Spans,
+        }
+    }
+}
+
 /// Raw parsed config: section → key → string value.
 #[derive(Debug, Clone, Default)]
 pub struct RawConfig {
@@ -570,6 +637,10 @@ pub struct TrainConfig {
     /// bit-identical training to `raw`), or `packed+f16` (f16 values with
     /// the quantization residual folded into error feedback).
     pub wire: WireCodec,
+    /// Step tracing ([`crate::trace`]): off (default — bit-identical to
+    /// untraced builds), per-step aggregates, or full span recording
+    /// with Perfetto export.
+    pub trace: Trace,
 }
 
 impl Default for TrainConfig {
@@ -596,6 +667,7 @@ impl Default for TrainConfig {
             exchange: Exchange::DenseRing,
             select: Select::Exact,
             wire: WireCodec::Raw,
+            trace: Trace::Off,
         }
     }
 }
@@ -654,6 +726,10 @@ impl TrainConfig {
             wire: match raw.get("train", "wire") {
                 Some(s) => WireCodec::parse(s)?,
                 None => d.wire,
+            },
+            trace: match raw.get("train", "trace") {
+                Some(s) => Trace::parse(s)?,
+                None => d.trace,
             },
         })
     }
@@ -991,6 +1067,40 @@ lr = 0.05
         assert_eq!(cfg.wire, WireCodec::Packed);
         cfg.validate().unwrap();
         let bad = RawConfig::parse("[train]\nwire = \"zip\"").unwrap();
+        assert!(TrainConfig::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn trace_parsing_and_defaults() {
+        assert_eq!(Trace::parse("off").unwrap(), Trace::Off);
+        assert_eq!(Trace::parse("OFF").unwrap(), Trace::Off);
+        assert_eq!(Trace::parse("steps").unwrap(), Trace::Steps);
+        assert_eq!(
+            Trace::parse("spans:/tmp/t.json").unwrap(),
+            Trace::Spans("/tmp/t.json".into())
+        );
+        // The path keeps its case; the keyword does not care about case.
+        assert_eq!(
+            Trace::parse("SPANS=Trace.JSON").unwrap(),
+            Trace::Spans("Trace.JSON".into())
+        );
+        // Bare `spans` (no path) and unknown modes are rejected.
+        for bad in ["spans", "spans:", "span:/x", "full", ""] {
+            assert!(Trace::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        // name() round-trips.
+        for t in [Trace::Off, Trace::Steps, Trace::Spans("x.json".into())] {
+            assert_eq!(Trace::parse(&t.name()).unwrap(), t);
+        }
+        // Default stays off (the bit-identity goldens pin this path).
+        assert_eq!(TrainConfig::default().trace, Trace::Off);
+        assert_eq!(TrainConfig::default().trace.mode(), crate::trace::TraceMode::Off);
+        let raw = RawConfig::parse("[train]\ntrace = \"spans:out.json\"").unwrap();
+        let cfg = TrainConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.trace, Trace::Spans("out.json".into()));
+        assert_eq!(cfg.trace.mode(), crate::trace::TraceMode::Spans);
+        cfg.validate().unwrap();
+        let bad = RawConfig::parse("[train]\ntrace = \"spans\"").unwrap();
         assert!(TrainConfig::from_raw(&bad).is_err());
     }
 

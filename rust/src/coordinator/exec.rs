@@ -119,8 +119,18 @@ pub(crate) struct StepCtx {
 /// P workers draw concurrently under `threads:N`).
 fn sample_batches(workers: &mut [WorkerState], data: &dyn DataSource, batch_size: usize) {
     for w in workers.iter_mut() {
-        data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+        sample_one(w, data, batch_size);
     }
+}
+
+/// Sample one worker's batch into its recycled buffer, stamping the
+/// `sample` span when tracing is armed. The one sampling call site every
+/// runtime routes through, so the span taxonomy cannot drift between
+/// runtimes.
+fn sample_one(w: &mut WorkerState, data: &dyn DataSource, batch_size: usize) {
+    let t0 = w.spans.now_us();
+    data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+    w.spans.stamp(crate::trace::Phase::Sample, -1, t0);
 }
 
 /// Run `f` on one worker against its own (already sampled) batch buffer:
@@ -152,12 +162,14 @@ pub(crate) fn worker_step<M: Model + ?Sized>(
     params: &[f32],
     batch: &Batch,
 ) -> WorkerMsg {
+    let compute_t0 = w.spans.now_us();
     let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
 
     // Momentum correction: v ← m·v + g locally, compress v.
     if ctx.momentum_correction && !ctx.is_dense {
         momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
     }
+    w.spans.stamp(crate::trace::Phase::Compute, -1, compute_t0);
 
     if ctx.is_dense {
         return WorkerMsg {
@@ -171,6 +183,7 @@ pub(crate) fn worker_step<M: Model + ?Sized>(
         };
     }
 
+    let select_t0 = w.spans.now_us();
     let u = w.residual.accumulate(&w.grad);
     // Snapshot u_t on worker 0 (paper plots worker 1; "different workers
     // have very close distributions").
@@ -212,7 +225,10 @@ pub(crate) fn worker_step<M: Model + ?Sized>(
     } else {
         feedback
     };
+    w.spans.stamp(crate::trace::Phase::Select, -1, select_t0);
+    let ef_t0 = w.spans.now_us();
     w.residual.update(&s);
+    w.spans.stamp(crate::trace::Phase::EfApply, -1, ef_t0);
     WorkerMsg {
         rank: w.rank,
         loss,
@@ -233,10 +249,12 @@ pub(crate) fn grad_step<M: Model + ?Sized>(
     params: &[f32],
     batch: &Batch,
 ) -> (usize, f64) {
+    let compute_t0 = w.spans.now_us();
     let loss = model.train_step(params, &batch.x, &batch.y, batch.n, &mut w.grad);
     if ctx.momentum_correction && !ctx.is_dense {
         momentum_correct(&mut w.velocity, &mut w.grad, ctx.momentum);
     }
+    w.spans.stamp(crate::trace::Phase::Compute, -1, compute_t0);
     (w.rank, loss)
 }
 
@@ -453,7 +471,7 @@ impl Executor {
                 let msgs = workers
                     .iter_mut()
                     .map(|w| {
-                        data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+                        sample_one(w, data, batch_size);
                         step_with_own_batch(ctx, w, &mut *model, p, worker_step)
                     })
                     .collect();
@@ -511,7 +529,7 @@ impl Executor {
                 let losses = workers
                     .iter_mut()
                     .map(|w| {
-                        data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+                        sample_one(w, data, batch_size);
                         step_with_own_batch(ctx, w, &mut *model, p, grad_step)
                     })
                     .collect();
@@ -585,7 +603,7 @@ fn run_scoped<R: Send>(
                     group
                         .iter_mut()
                         .map(|w| {
-                            data.sample_into(batch_size, &mut w.data_rng, &mut w.batch);
+                            sample_one(w, data, batch_size);
                             step_with_own_batch(ctx, w, fm.as_mut(), params_ref, f)
                         })
                         .collect::<Vec<R>>()

@@ -118,6 +118,7 @@ use crate::collectives::{chunk_bounds, finish_gtopk, merge_truncate, PooledRingC
 use crate::models::Model;
 use crate::tensor::wire::WireCodec;
 use crate::tensor::SparseVec;
+use crate::trace::{ring_track, Phase, SharedSink};
 
 /// Which half of the step a [`PoolJob::Compute`] runs.
 #[derive(Clone, Copy)]
@@ -217,6 +218,11 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
     ring: Option<Arc<RingClient>>,
     ring_handles: Vec<JoinHandle<()>>,
+    /// Span sink the persistent ring threads stamp their collective spans
+    /// into ([`crate::trace`]). Installed at spawn (the threads outlive
+    /// any one run) and disabled by default: one relaxed atomic load per
+    /// rank job until a traced run arms it.
+    ring_sink: Arc<SharedSink>,
 }
 
 impl WorkerPool {
@@ -250,8 +256,9 @@ impl WorkerPool {
             job_txs.push(job_tx);
             handles.push(handle);
         }
+        let ring_sink = Arc::new(SharedSink::new());
         let (ring, ring_handles) = if ring_ranks > 1 {
-            let (client, ring_handles) = spawn_ring(ring_ranks);
+            let (client, ring_handles) = spawn_ring(ring_ranks, Arc::clone(&ring_sink));
             (Some(Arc::new(client)), ring_handles)
         } else {
             (None, Vec::new())
@@ -262,7 +269,14 @@ impl WorkerPool {
             handles,
             ring,
             ring_handles,
+            ring_sink,
         }
+    }
+
+    /// The ring threads' span sink (armed by the trainer on traced runs,
+    /// drained into the run's recorder each step).
+    pub fn ring_sink(&self) -> &Arc<SharedSink> {
+        &self.ring_sink
     }
 
     /// Number of pool compute threads (the ring participants are extra
@@ -605,7 +619,7 @@ impl RingClient {
 }
 
 /// Build the persistent link mesh and spawn one ring thread per rank.
-fn spawn_ring(p: usize) -> (RingClient, Vec<JoinHandle<()>>) {
+fn spawn_ring(p: usize, sink: Arc<SharedSink>) -> (RingClient, Vec<JoinHandle<()>>) {
     debug_assert!(p > 1);
     let (res_tx, res_rx) = mpsc::channel::<(u64, RankResult)>();
     // Ring links: link l carries payloads from rank l to rank (l+1) % p,
@@ -652,9 +666,10 @@ fn spawn_ring(p: usize) -> (RingClient, Vec<JoinHandle<()>>) {
         };
         let (job_tx, job_rx) = mpsc::channel::<PoolJob>();
         let res_tx = res_tx.clone();
+        let sink = Arc::clone(&sink);
         let handle = std::thread::Builder::new()
             .name(format!("sparkv-ring-{w}"))
-            .spawn(move || ring_thread_main(seat, job_rx, res_tx))
+            .spawn(move || ring_thread_main(seat, job_rx, res_tx, sink))
             .expect("failed to spawn ring participant thread");
         job_txs.push(job_tx);
         handles.push(handle);
@@ -678,14 +693,22 @@ fn ring_thread_main(
     seat: RingSeat,
     job_rx: mpsc::Receiver<PoolJob>,
     res_tx: mpsc::Sender<(u64, RankResult)>,
+    sink: Arc<SharedSink>,
 ) {
     while let Ok(job) = job_rx.recv() {
         let PoolJob::Collective { seq, job } = job else {
             unreachable!("non-collective job routed to a ring thread")
         };
+        // Traced runs time each rank job on its own seat track (one
+        // relaxed load on the untraced path; the stamp itself only runs
+        // with tracing armed).
+        let span_t0 = if sink.is_enabled() { Some(sink.now_us()) } else { None };
         let Some(result) = serve_rank(&seat, job) else {
             break;
         };
+        if let Some(t0) = span_t0 {
+            sink.stamp(ring_track(seat.rank), Phase::Collective, t0);
+        }
         if res_tx.send((seq, result)).is_err() {
             break;
         }

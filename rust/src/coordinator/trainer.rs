@@ -124,7 +124,7 @@ use super::worker::WorkerState;
 use crate::buckets::{run_pipelined_return, BucketSchedule, BucketSpec};
 use crate::collectives::Collectives;
 use crate::compress::OpKind;
-use crate::config::{BucketApportion, Buckets, Parallelism, TrainConfig};
+use crate::config::{BucketApportion, Buckets, Parallelism, Trace, TrainConfig};
 use crate::data::{Batch, DataSource};
 use crate::metrics::{EvalRecord, RunMetrics, StepRecord};
 use crate::models::Model;
@@ -132,6 +132,7 @@ use crate::schedule::{feedback_histogram, fold_feedback_histograms, KSchedule, S
 use crate::stats::histogram::Histogram;
 use crate::stats::rng::Pcg64;
 use crate::tensor::wire::WireScratch;
+use crate::trace::{self, Phase, Recorder, TraceData, TraceMeta};
 
 /// Captured histogram of u_t = g + ε at a given step (worker 0).
 #[derive(Debug, Clone)]
@@ -151,6 +152,9 @@ pub struct TrainOutput {
     /// Nominal k from `k_ratio` (the per-step k_t of a scheduled run may
     /// differ — see the `density` trace in `metrics`).
     pub k: usize,
+    /// The recorded span trace (`Some` iff `trace = spans`; also written
+    /// to the configured Perfetto path when one was given).
+    pub trace: Option<TraceData>,
 }
 
 /// Minimum bucket size (elements) worth fanning compression out over the
@@ -271,6 +275,68 @@ impl<'a> Trainer<'a> {
         name
     }
 
+    /// Arm the span recorder for this run: when `trace = spans:PATH`,
+    /// every worker's [`crate::trace::SpanBuf`] is enabled on its own
+    /// track (the buffer travels with the `WorkerState` through the pool
+    /// ping-pong, so spans land on the *logical* worker's track on every
+    /// runtime) and a pooled run's ring sink starts accepting seat spans.
+    /// Under `off`/`steps` the buffers stay disabled and every stamp in
+    /// the hot loop is an untaken branch.
+    fn arm_recorder(&self, workers: &mut [WorkerState], executor: &mut Executor) -> Recorder {
+        let recorder = Recorder::new(self.cfg.trace.mode());
+        if recorder.spans_on() {
+            for w in workers.iter_mut() {
+                w.spans.enable(recorder.epoch(), trace::worker_track(w.rank));
+            }
+            if let Some(pool) = executor.pool() {
+                pool.ring_sink().set_enabled(true);
+            }
+        }
+        recorder
+    }
+
+    /// Trace metadata embedded in the Perfetto file — everything
+    /// `sparkv report` needs to rebuild the matching netsim prediction.
+    fn trace_meta(&self, d: usize, buckets: usize) -> TraceMeta {
+        TraceMeta {
+            workers: self.cfg.workers,
+            d,
+            steps: self.cfg.steps,
+            k_ratio: self.cfg.k_ratio,
+            op: self.cfg.op.name().to_string(),
+            parallelism: self.cfg.parallelism.name(),
+            buckets,
+            exchange: self.cfg.exchange.name(),
+            wire: self.cfg.wire.name().to_string(),
+            select: self.cfg.select.name(),
+        }
+    }
+
+    /// Close out the recorder: drain any worker spans still buffered,
+    /// package the trace, and write the Perfetto file when the config
+    /// names a path (an empty path keeps the trace in-memory only —
+    /// the test harness's no-file mode).
+    fn finish_trace(
+        &self,
+        mut recorder: Recorder,
+        workers: &mut [WorkerState],
+        meta: TraceMeta,
+    ) -> anyhow::Result<Option<TraceData>> {
+        if !recorder.spans_on() {
+            return Ok(None);
+        }
+        for w in workers.iter_mut() {
+            recorder.absorb(&mut w.spans);
+        }
+        let data = recorder.finish(meta);
+        if let Trace::Spans(path) = &self.cfg.trace {
+            if !path.is_empty() {
+                trace::write(path, &data)?;
+            }
+        }
+        Ok(Some(data))
+    }
+
     /// Periodic eval (+ final step), shared by both exchange paths. Eval
     /// set size: a multiple of the train batch so static-batch backends
     /// (PJRT) can chunk it exactly. The eval set samples into a recycled
@@ -353,9 +419,19 @@ impl<'a> Trainer<'a> {
         let tree = self.cfg.exchange.is_tree();
         let codec = self.cfg.wire;
         let mut wire_scratch = WireScratch::default();
+        let mut recorder = self.arm_recorder(&mut workers, &mut executor);
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
+            let step_t0 = recorder.now_us();
+            if recorder.spans_on() {
+                for w in workers.iter_mut() {
+                    w.spans.set_step(step as u32);
+                }
+                if let Some(pool) = executor.pool() {
+                    pool.ring_sink().set_step(step as u32);
+                }
+            }
             let plan = scheduler.plan(step);
             let ctx = StepCtx {
                 step,
@@ -375,6 +451,7 @@ impl<'a> Trainer<'a> {
             // own RNG). Every runtime returns messages in rank order, so
             // everything downstream (loss sum, aggregation, residual
             // restore) sees the exact serial order.
+            let barrier_t0 = recorder.now_us();
             let (mut msgs, dispatch_us) = executor.run_full(
                 ctx,
                 &mut workers,
@@ -383,6 +460,7 @@ impl<'a> Trainer<'a> {
                 self.data,
                 self.cfg.batch_size,
             );
+            recorder.stamp(Phase::Barrier, step as u32, -1, barrier_t0);
 
             // Fold messages in rank order (identical to the serial loop's
             // incremental accumulation).
@@ -443,6 +521,13 @@ impl<'a> Trainer<'a> {
                 });
             }
 
+            // Every engine call is clocked at the call site: the wall
+            // sums into this step's `comm_us` (under `steps` or `spans`)
+            // and lands as a coordinator `collective` span (under
+            // `spans`). With tracing off `now_us()` is 0.0 with no clock
+            // read, so the metric is exactly 0 and the path is unchanged.
+            let mut comm_us = 0.0f64;
+            let comm_t0 = recorder.now_us();
             let agg = if is_dense {
                 engine.ring_allreduce_avg(&dense_msgs)
             } else if self.cfg.global_topk {
@@ -456,6 +541,12 @@ impl<'a> Trainer<'a> {
                 } else {
                     engine.gtopk_allreduce_avg(&sparse_msgs, plan.k)
                 };
+                let comm_t1 = recorder.now_us();
+                comm_us += comm_t1 - comm_t0;
+                recorder.stamp_at(Phase::Collective, step as u32, -1, comm_t0, comm_t1);
+                // The globally-dropped restore is error-feedback work,
+                // not wire time — it gets its own coordinator span.
+                let ef_t0 = recorder.now_us();
                 selected_mask.iter_mut().for_each(|b| *b = false);
                 for &i in &selected {
                     selected_mask[i as usize] = true;
@@ -467,10 +558,16 @@ impl<'a> Trainer<'a> {
                         }
                     }
                 }
+                recorder.stamp(Phase::EfApply, step as u32, -1, ef_t0);
                 dense
             } else {
                 engine.sparse_allgather_avg(&sparse_msgs)
             };
+            if !self.cfg.global_topk || is_dense {
+                let comm_t1 = recorder.now_us();
+                comm_us += comm_t1 - comm_t0;
+                recorder.stamp_at(Phase::Collective, step as u32, -1, comm_t0, comm_t1);
+            }
 
             // Hand the payload buffers back to their owners (rank order is
             // preserved end to end): dense gradients return to `w.grad`,
@@ -495,15 +592,36 @@ impl<'a> Trainer<'a> {
                 scheduler.observe(step, &fold_feedback_histograms(&feedback_hists));
             }
 
+            // Stamp the step wall *before* the metrics record-keeping
+            // below — trace drains, select_us sweeps, and the CSV record
+            // write are bookkeeping, not step time. Under span tracing
+            // the step umbrella span and `wall_s` share the exact same
+            // two clock reads, so `wall_s * 1e6 == step span duration`.
+            let step_t1 = recorder.now_us();
+            let wall_s = if recorder.is_on() {
+                (step_t1 - step_t0) * 1e-6
+            } else {
+                t0.elapsed().as_secs_f64()
+            };
+            recorder.stamp_at(Phase::Step, step as u32, -1, step_t0, step_t1);
+            if recorder.spans_on() {
+                for w in workers.iter_mut() {
+                    recorder.absorb(&mut w.spans);
+                }
+                if let Some(pool) = executor.pool() {
+                    recorder.absorb_sink(pool.ring_sink());
+                }
+            }
             metrics.record_step(StepRecord {
                 step,
                 loss: loss_acc / p as f64,
                 sent_elements: sent,
                 target_elements: if is_dense { (d * p) as u64 } else { (plan.k * p) as u64 },
                 density: if is_dense { 1.0 } else { plan.density },
-                wall_s: t0.elapsed().as_secs_f64(),
+                wall_s,
                 spawn_or_dispatch_us: dispatch_us,
                 select_us: drain_select_us(&mut workers),
+                comm_us,
                 wire_bytes_raw: wire_raw,
                 wire_bytes_encoded: wire_enc,
             });
@@ -511,11 +629,13 @@ impl<'a> Trainer<'a> {
             self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
         }
 
+        let trace = self.finish_trace(recorder, &mut workers, self.trace_meta(d, 1))?;
         Ok(TrainOutput {
             metrics,
             snapshots,
             final_params: params.into_vec(),
             k,
+            trace,
         })
     }
 
@@ -607,9 +727,19 @@ impl<'a> Trainer<'a> {
         let mut bank = PayloadBank::default();
         let specs_shared: Arc<Vec<BucketSpec>> = Arc::new(schedule.specs().to_vec());
         let codec = self.cfg.wire;
+        let mut recorder = self.arm_recorder(&mut workers, &mut executor);
 
         for step in 0..self.cfg.steps {
             let t0 = Instant::now();
+            let step_t0 = recorder.now_us();
+            if recorder.spans_on() {
+                for w in workers.iter_mut() {
+                    w.spans.set_step(step as u32);
+                }
+                if let Some(pool) = executor.pool() {
+                    pool.ring_sink().set_step(step as u32);
+                }
+            }
             let plan = scheduler.plan(step);
             let ctx = StepCtx {
                 step,
@@ -633,6 +763,7 @@ impl<'a> Trainer<'a> {
             // through the execution layer. Losses come back in rank order
             // so the f64 accumulation order matches the serial loop
             // exactly.
+            let barrier_t0 = recorder.now_us();
             let (losses, dispatch_us) = executor.run_grad(
                 ctx,
                 &mut workers,
@@ -641,6 +772,7 @@ impl<'a> Trainer<'a> {
                 self.data,
                 self.cfg.batch_size,
             );
+            recorder.stamp(Phase::Barrier, step as u32, -1, barrier_t0);
             let loss_acc: f64 = losses.iter().map(|&(_, l)| l).sum();
 
             // Phase 2 — coordinator-side statistics over u_t = g + ε (ε is
@@ -785,6 +917,11 @@ impl<'a> Trainer<'a> {
             // the producer thread, hence the atomic).
             let mut pipeline_dispatch_us = 0.0f64;
             let fanout_spawn_ns = AtomicU64::new(0);
+            // Per-step collective wall (`comm_us`): every engine call in
+            // the consume closure below runs on *this* thread in all
+            // three drivers (serial loop, pipelined return channel, pool
+            // pipeline), so the call-site clock is placement-uniform.
+            let mut comm_us = 0.0f64;
             let leftovers: Vec<BucketMsg> = {
                 let specs = schedule.specs();
                 let ks_ref: &[usize] = &ks_t;
@@ -796,6 +933,8 @@ impl<'a> Trainer<'a> {
                 let wire_raw_ref = &mut wire_raw;
                 let wire_enc_ref = &mut wire_enc;
                 let restores_ref = &mut restores;
+                let comm_ref = &mut comm_us;
+                let recorder_ref = &mut recorder;
                 // Consume bucket b's message and return it spent (the
                 // driver routes it back to the producer for recycling).
                 let mut consume = move |b: usize, msg: BucketMsg| -> BucketMsg {
@@ -807,7 +946,17 @@ impl<'a> Trainer<'a> {
                             // on both accounting columns.
                             *wire_raw_ref += (slices.len() * sp.len() * 4) as u64;
                             *wire_enc_ref += (slices.len() * sp.len() * 4) as u64;
+                            let c0 = recorder_ref.now_us();
                             let red = engine_ref.ring_allreduce_avg(&slices);
+                            let c1 = recorder_ref.now_us();
+                            *comm_ref += c1 - c0;
+                            recorder_ref.stamp_at(
+                                Phase::Collective,
+                                step as u32,
+                                b as i32,
+                                c0,
+                                c1,
+                            );
                             agg_ref[sp.lo..sp.hi].copy_from_slice(&red);
                             BucketMsg::Dense(slices)
                         }
@@ -827,11 +976,21 @@ impl<'a> Trainer<'a> {
                                 // queued for residual restore. The
                                 // exchange knob picks the wire schedule
                                 // (merge numerics are identical).
+                                let c0 = recorder_ref.now_us();
                                 let (dense_b, selected) = if tree {
                                     engine_ref.gtopk_tree_allreduce_avg(&msgs, ks_ref[b])
                                 } else {
                                     engine_ref.gtopk_allreduce_avg(&msgs, ks_ref[b])
                                 };
+                                let c1 = recorder_ref.now_us();
+                                *comm_ref += c1 - c0;
+                                recorder_ref.stamp_at(
+                                    Phase::Collective,
+                                    step as u32,
+                                    b as i32,
+                                    c0,
+                                    c1,
+                                );
                                 let mut mask = vec![false; sp.len()];
                                 for &i in &selected {
                                     mask[i as usize] = true;
@@ -849,7 +1008,17 @@ impl<'a> Trainer<'a> {
                                 }
                                 agg_ref[sp.lo..sp.hi].copy_from_slice(&dense_b);
                             } else {
+                                let c0 = recorder_ref.now_us();
                                 let dense_b = engine_ref.sparse_allgather_avg(&msgs);
+                                let c1 = recorder_ref.now_us();
+                                *comm_ref += c1 - c0;
+                                recorder_ref.stamp_at(
+                                    Phase::Collective,
+                                    step as u32,
+                                    b as i32,
+                                    c0,
+                                    c1,
+                                );
                                 agg_ref[sp.lo..sp.hi].copy_from_slice(&dense_b);
                             }
                             BucketMsg::Sparse(msgs)
@@ -1001,8 +1170,16 @@ impl<'a> Trainer<'a> {
             for m in leftovers {
                 recycle_bucket_msg(m, &mut workers, &mut bank);
             }
+            // The deferred gTop-k restores are error-feedback work on the
+            // coordinator (the producer owned the workers during the
+            // pipeline) — spanned as `ef_apply` when any ran.
+            let had_restores = !restores.is_empty();
+            let ef_t0 = recorder.now_us();
             for (wi, gi, v) in restores.drain(..) {
                 workers[wi].residual.restore(gi as usize, v);
+            }
+            if had_restores {
+                recorder.stamp(Phase::EfApply, step as u32, -1, ef_t0);
             }
 
             opt.step(params.make_mut(), &agg, step, self.cfg.steps);
@@ -1013,15 +1190,34 @@ impl<'a> Trainer<'a> {
             let launch_us = dispatch_us
                 + pipeline_dispatch_us
                 + fanout_spawn_ns.load(Ordering::Relaxed) as f64 / 1e3;
+            // Same wall-stamp discipline as the monolithic path: the step
+            // ends *before* the trace drains and the record write, and
+            // under span tracing `wall_s` is exactly the step span.
+            let step_t1 = recorder.now_us();
+            let wall_s = if recorder.is_on() {
+                (step_t1 - step_t0) * 1e-6
+            } else {
+                t0.elapsed().as_secs_f64()
+            };
+            recorder.stamp_at(Phase::Step, step as u32, -1, step_t0, step_t1);
+            if recorder.spans_on() {
+                for w in workers.iter_mut() {
+                    recorder.absorb(&mut w.spans);
+                }
+                if let Some(pool) = executor.pool() {
+                    recorder.absorb_sink(pool.ring_sink());
+                }
+            }
             metrics.record_step(StepRecord {
                 step,
                 loss: loss_acc / p as f64,
                 sent_elements: sent,
                 target_elements: if is_dense { (d * p) as u64 } else { (plan.k * p) as u64 },
                 density: if is_dense { 1.0 } else { plan.density },
-                wall_s: t0.elapsed().as_secs_f64(),
+                wall_s,
                 spawn_or_dispatch_us: launch_us,
                 select_us: drain_select_us(&mut workers),
+                comm_us,
                 wire_bytes_raw: wire_raw,
                 wire_bytes_encoded: wire_enc,
             });
@@ -1029,11 +1225,13 @@ impl<'a> Trainer<'a> {
             self.maybe_eval(step, params.as_slice(), &mut eval_rng, &mut eval_batch, &mut metrics);
         }
 
+        let trace = self.finish_trace(recorder, &mut workers, self.trace_meta(d, schedule.len()))?;
         Ok(TrainOutput {
             metrics,
             snapshots,
             final_params: params.into_vec(),
             k,
+            trace,
         })
     }
 }
@@ -1087,6 +1285,7 @@ mod tests {
             select: crate::config::Select::Exact,
             wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
+            trace: Trace::Off,
         }
     }
 
@@ -1137,6 +1336,7 @@ mod tests {
             select: crate::config::Select::Exact,
             wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
+            trace: Trace::Off,
         };
         let dense = train(mk(OpKind::Dense), &mut model, &data).unwrap();
         let topk = train(mk(OpKind::TopK), &mut model, &data).unwrap();
@@ -1352,6 +1552,7 @@ mod schedule_trainer_tests {
             select: crate::config::Select::Exact,
             wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 5,
+            trace: Trace::Off,
         }
     }
 
@@ -1479,6 +1680,7 @@ mod momentum_correction_tests {
             select: crate::config::Select::Exact,
             wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
+            trace: Trace::Off,
         };
         let plain = train(base.clone(), &mut model, &data).unwrap();
         let mut corrected_cfg = base;
@@ -1543,6 +1745,7 @@ mod gtopk_trainer_tests {
             select: crate::config::Select::Exact,
             wire: crate::tensor::wire::WireCodec::Raw,
             steps_per_epoch: 100,
+            trace: Trace::Off,
         }
     }
 

@@ -62,6 +62,12 @@ pub struct WorkerState {
     /// drained it (all buckets, all paths) — feeds `select_us` in the
     /// step records.
     pub select_us: f64,
+    /// Span buffer for step tracing ([`crate::trace`]): disabled (inert)
+    /// by default, armed by the trainer when `trace = spans`. Owned, so
+    /// it ships through the pool's job/result ping-pong with the rest of
+    /// the state and spans land on this worker's track regardless of
+    /// which OS thread executed the phase.
+    pub spans: crate::trace::SpanBuf,
     /// This worker's compressor seed stream root (bucket compressors derive
     /// per-bucket sub-seeds from it).
     comp_seed: u64,
@@ -88,6 +94,7 @@ impl WorkerState {
             velocity: Vec::new(),
             warm: None,
             select_us: 0.0,
+            spans: crate::trace::SpanBuf::disabled(),
             comp_seed,
         }
     }
@@ -141,6 +148,7 @@ impl WorkerState {
     /// concurrent threads and buckets interleave freely between steps of
     /// the same bucket index.
     pub fn compress_bucket(&mut self, b: usize, lo: usize, hi: usize, k: usize) -> SparseVec {
+        let span_t0 = self.spans.now_us();
         let u = self.residual.accumulate_range(&self.grad, lo, hi);
         let t0 = Instant::now();
         let sent = match self.warm.as_mut() {
@@ -164,7 +172,10 @@ impl WorkerState {
             None => self.bucket_compressors[b].compress_step(u, k, &mut self.workspace),
         };
         self.select_us += t0.elapsed().as_secs_f64() * 1e6;
+        self.spans.stamp(crate::trace::Phase::Select, b as i32, span_t0);
+        let ef_t0 = self.spans.now_us();
         self.residual.update_range(&sent, lo);
+        self.spans.stamp(crate::trace::Phase::EfApply, b as i32, ef_t0);
         sent
     }
 }

@@ -58,6 +58,7 @@ pub mod runtime;
 pub mod schedule;
 pub mod stats;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type.

@@ -7,6 +7,10 @@
 //! * `tune`      — closed-loop search over compression plans (operator ×
 //!   k-schedule × buckets × apportionment × runtime) with the netsim cost
 //!   model in the loop; writes a deterministic `TunedPlan` JSON.
+//! * `report`    — fold a recorded span trace (`train --trace spans:PATH`)
+//!   into a measured per-phase breakdown and diff it against the netsim
+//!   prediction (drift table; non-zero exit on malformed traces, and on
+//!   flagged drift under `--strict`).
 //! * `simulate`  — Table 2 cluster simulation (iteration time + scaling
 //!   efficiency for every model × operator).
 //! * `bench-op`  — operator selection-speed sweep (Fig. 4 shape on CPU).
@@ -37,25 +41,28 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("tune") => cmd_tune(&args),
+        Some("report") => cmd_report(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("bench-op") => cmd_bench_op(&args),
         Some("analyze") => cmd_analyze(&args),
         _ => {
             println!(
                 "sparkv — Top-K sparsification for distributed deep learning\n\n\
-                 USAGE: sparkv <train|tune|simulate|bench-op|analyze> [OPTIONS]\n\n\
+                 USAGE: sparkv <train|tune|report|simulate|bench-op|analyze> [OPTIONS]\n\n\
                  train     --op <dense|topk|randk|dgc|trimmed|gaussiank> --workers N --steps N\n\
                  \x20         [--parallelism serial|threads:N|pool:N] [--buckets none|layers|bytes:N]\n\
                  \x20         [--k-schedule const[:K]|warmup:K0..K,epochs=E|adaptive:DELTA]\n\
                  \x20         [--bucket-apportion size|mass|mass:ema=BETA]\n\
                  \x20         [--global-topk true --exchange dense-ring|tree-sparse]\n\
                  \x20         [--select exact|warm:TAU] [--wire raw|packed|packed+f16]\n\
+                 \x20         [--trace off|steps|spans:PATH]\n\
                  \x20         [--steps-per-epoch N] [--config file.toml] [--set train.key=value]\n\
                  \x20         [--plan plan.json] [--backend native|pjrt --model <name>]\n\
                  tune      [--model resnet50] [--nodes 4 --gpus 4] [--k-ratio 0.001]\n\
                  \x20         [--steps-per-epoch 24] [--strategy grid|greedy|halving] [--seed 7]\n\
                  \x20         [--sample N] [--measure] [--measure-steps 8] [--calibrate N]\n\
-                 \x20         [--smoke] [--out results/tuned_plan.json]\n\
+                 \x20         [--calibrate-from trace.json] [--smoke] [--out results/tuned_plan.json]\n\
+                 report    <trace.json> [--strict]\n\
                  simulate  [--k-ratio 0.001] [--nodes 4 --gpus 4]\n\
                  bench-op  [--dims 1000000,4000000,16000000] [--k-ratio 0.001]\n\
                  analyze   [--d 100000] [--ks 100,1000,10000]"
@@ -95,6 +102,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "exchange",
         "select",
         "wire",
+        "trace",
     ] {
         if let Some(v) = args.get(&key.replace('_', "-")).or_else(|| args.get(key)) {
             raw.set(&format!("train.{key}={v}"))?;
@@ -106,7 +114,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = TrainConfig::from_raw(&raw)?;
     println!(
         "train: op={} workers={} steps={} k_ratio={} lr={} parallelism={} buckets={} \
-         k_schedule={} exchange={} select={} wire={}",
+         k_schedule={} exchange={} select={} wire={} trace={}",
         cfg.op.name(),
         cfg.workers,
         cfg.steps,
@@ -117,7 +125,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.k_schedule.name(),
         cfg.exchange.name(),
         cfg.select.name(),
-        cfg.wire.name()
+        cfg.wire.name(),
+        cfg.trace.name()
     );
 
     let backend = args.get_or("backend", "native");
@@ -200,9 +209,26 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     }
 
     // Opt-in measured calibration (--smoke implies a 3-step probe so CI
-    // exercises the measured leg on every push).
+    // exercises the measured leg on every push). `--calibrate-from`
+    // fits from a recorded span trace instead of live probes.
+    if args.get("calibrate-from").is_some() && args.get("calibrate").is_some() {
+        anyhow::bail!("--calibrate and --calibrate-from are mutually exclusive");
+    }
     let calibrate_steps: usize = args.get_parsed_or("calibrate", if smoke { 3 } else { 0 });
-    let calibration = if calibrate_steps > 0 {
+    let calibration = if let Some(path) = args.get("calibrate-from") {
+        let trace = sparkv::trace::load(path)?;
+        let cal = Calibrator::fit_from_trace(&trace, &scenario)?;
+        println!(
+            "calibration (from {path}, {} traced steps): spawn {:.2} µs/thread, \
+             pool dispatch {:.3} µs/thread, compute ×{:.3}, bandwidth ×{:.3}",
+            cal.probe_steps,
+            cal.spawn_per_thread_s * 1e6,
+            cal.pool_dispatch_per_thread_s * 1e6,
+            cal.compute_scale,
+            cal.bandwidth_scale
+        );
+        Some(cal)
+    } else if calibrate_steps > 0 {
         let cal = Calibrator {
             probe_steps: calibrate_steps,
             ..Calibrator::default()
@@ -287,6 +313,40 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     let out_path = args.get_or("out", "results/tuned_plan.json");
     plan.save(&out_path)?;
     println!("wrote {out_path} (replay with: sparkv train --plan {out_path})");
+    Ok(())
+}
+
+/// `sparkv report <trace.json>` — fold a recorded span trace into the
+/// measured per-phase breakdown and diff it against the netsim
+/// prediction rebuilt from the trace's own metadata. Malformed traces
+/// are hard errors (non-zero exit); `--strict` additionally fails the
+/// run when any drift row is flagged.
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("trace")
+        .or_else(|| args.positional.first().map(|s| s.as_str()))
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("usage: sparkv report <trace.json> [--strict]"))?;
+    let trace = sparkv::trace::load(&path)?;
+    println!(
+        "report — {path}: op={} workers={} d={} steps={} k_ratio={} parallelism={} \
+         buckets={} exchange={} wire={} select={}",
+        trace.meta.op,
+        trace.meta.workers,
+        trace.meta.d,
+        trace.meta.steps,
+        trace.meta.k_ratio,
+        trace.meta.parallelism,
+        trace.meta.buckets,
+        trace.meta.exchange,
+        trace.meta.wire,
+        trace.meta.select
+    );
+    let report = sparkv::trace::report::drift_report(&trace)?;
+    print!("{}", report.render());
+    if args.flag("strict") && !report.ok() {
+        anyhow::bail!("--strict: drift above threshold (see flagged rows)");
+    }
     Ok(())
 }
 

@@ -39,6 +39,14 @@ pub struct StepRecord {
     /// the number is well-defined and comparable across the serial,
     /// scoped, and pooled runtimes regardless of worker placement.
     pub select_us: f64,
+    /// Wall-clock microseconds the coordinator spent inside collective
+    /// engine calls this step (summed over every call — one per step on
+    /// the monolithic path, one per bucket on the bucketed path).
+    /// Measured only when `trace = steps | spans`; exactly 0.0 with
+    /// tracing off (the default) — the hot loop takes no extra clock
+    /// reads. Comparable across runtimes: every exchange path runs its
+    /// collectives on the coordinator thread.
+    pub comm_us: f64,
     /// Wire bytes this step's payloads would cost under the legacy raw
     /// encoding (8 B/element sparse, 4 B/element dense), summed over all
     /// workers — the denominator of the `wire` codec's measured win.
@@ -191,6 +199,11 @@ impl RunMetrics {
                 ),
             )
             .set(
+                "comm_us",
+                Json::Arr(self.steps.iter().map(|s| Json::from(s.comm_us)).collect()),
+            )
+            .set("mean_comm_us", Json::from(self.mean_comm_us()))
+            .set(
                 "wire_bytes_raw",
                 Json::Arr(
                     self.steps
@@ -235,6 +248,16 @@ impl RunMetrics {
         self.steps.iter().map(|s| s.select_us).sum::<f64>() / self.steps.len() as f64
     }
 
+    /// Mean per-step collective wall time (µs, coordinator call-site
+    /// sum per step) — the headline number of the measured comm cost.
+    /// 0.0 for runs recorded with `trace = off`.
+    pub fn mean_comm_us(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.comm_us).sum::<f64>() / self.steps.len() as f64
+    }
+
     /// Mean per-step raw wire bytes (all-worker sum per step).
     pub fn mean_wire_bytes_raw(&self) -> f64 {
         if self.steps.is_empty() {
@@ -264,12 +287,12 @@ impl RunMetrics {
         writeln!(
             f,
             "step,loss,sent_elements,target_elements,density,wall_s,spawn_or_dispatch_us,\
-             select_us,wire_bytes_raw,wire_bytes_encoded"
+             select_us,comm_us,wire_bytes_raw,wire_bytes_encoded"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.loss,
                 s.sent_elements,
@@ -278,6 +301,7 @@ impl RunMetrics {
                 s.wall_s,
                 s.spawn_or_dispatch_us,
                 s.select_us,
+                s.comm_us,
                 s.wire_bytes_raw,
                 s.wire_bytes_encoded
             )?;
@@ -300,6 +324,7 @@ mod tests {
             wall_s: 0.01,
             spawn_or_dispatch_us: 12.5,
             select_us: 40.0,
+            comm_us: 7.5,
             wire_bytes_raw: sent * 8,
             wire_bytes_encoded: sent * 8,
         }
@@ -346,9 +371,9 @@ mod tests {
         m.write_csv(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let header = "step,loss,sent_elements,target_elements,density,wall_s,\
-                      spawn_or_dispatch_us,select_us,wire_bytes_raw,wire_bytes_encoded";
+                      spawn_or_dispatch_us,select_us,comm_us,wire_bytes_raw,wire_bytes_encoded";
         assert!(text.starts_with(header));
-        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5,40,24,24"));
+        assert!(text.contains("0,0.5,3,10,0.001,0.01,12.5,40,7.5,24,24"));
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -364,6 +389,7 @@ mod tests {
             1
         );
         assert_eq!(j.get("select_us").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("comm_us").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("wire_bytes_raw").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("wire_bytes_encoded").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("name").unwrap().as_str(), Some("run"));
@@ -400,6 +426,21 @@ mod tests {
         m.record_step(a);
         m.record_step(b);
         assert_eq!(m.mean_spawn_or_dispatch_us(), 20.0);
+    }
+
+    #[test]
+    fn comm_time_mean() {
+        let mut m = RunMetrics::new("t");
+        assert_eq!(m.mean_comm_us(), 0.0);
+        let mut a = rec(0, 1.0, 5);
+        a.comm_us = 30.0;
+        let mut b = rec(1, 1.0, 5);
+        b.comm_us = 10.0;
+        m.record_step(a);
+        m.record_step(b);
+        assert_eq!(m.mean_comm_us(), 20.0);
+        let j = m.to_json();
+        assert_eq!(j.get("mean_comm_us").unwrap().as_f64(), Some(20.0));
     }
 
     #[test]

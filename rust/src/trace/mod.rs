@@ -1,0 +1,662 @@
+//! Span-based step tracing: a low-overhead recorder for per-step,
+//! per-worker, per-bucket phase spans, with Chrome trace-event (Perfetto)
+//! export and a measured-vs-predicted drift report (`sparkv report`).
+//!
+//! The netsim predicts where an iteration's wall time goes
+//! ([`crate::netsim::IterationBreakdown`]); until this module the trainer
+//! measured only coarse per-step aggregates (`StepRecord::wall_s`,
+//! `select_us`). The trace subsystem records the *actual* timeline —
+//! sample, compute, select/encode, collective rounds, error-feedback
+//! apply, barrier wait — from all three runtimes, so the pipelined
+//! bucket overlap is visible on a Perfetto track view and the prediction
+//! drift needed by ROADMAP item 5's re-tuning loop becomes measurable.
+//!
+//! ## Span taxonomy
+//!
+//! | phase        | track        | meaning                                               |
+//! |--------------|--------------|-------------------------------------------------------|
+//! | `step`       | coordinator  | one whole optimizer step (the umbrella span; its duration is `StepRecord::wall_s`) |
+//! | `barrier`    | coordinator  | coordinator wait for the worker phase to complete (`Executor::run_full` / `run_grad`) |
+//! | `collective` | coordinator  | one collective engine call (one per bucket; wall at the call site — Σ = `StepRecord::comm_us`) |
+//! | `collective` | ring seat    | one rank job on a persistent pool ring thread (`pool:N` only) |
+//! | `ef_apply`   | coordinator  | gTop-k globally-dropped restore sweep                  |
+//! | `sample`     | worker       | minibatch sampling                                     |
+//! | `compute`    | worker       | forward + backward (+ momentum correction)             |
+//! | `select`     | worker       | error-feedback accumulate + top-k selection + wire encode |
+//! | `ef_apply`   | worker       | residual update `ε ← u − s`                            |
+//!
+//! Tracks are Chrome trace `tid`s: 0 = coordinator, `1 ..= P` = logical
+//! workers (rank + 1), `1000 + r` = pool ring seats. A span is attributed
+//! to the **logical worker** it serves regardless of which OS thread ran
+//! it — under `threads:N` the bucket producer thread compresses every
+//! worker's bucket, and each selection still lands on its worker's
+//! track — so span *structure* (phase names and counts per step) is
+//! invariant across `serial`/`threads:N`/`pool:N` for a given exchange
+//! path. Ring-seat tracks exist only under `pool:N` with ≥ 2 ring ranks
+//! (the only runtime with persistent collective threads).
+//!
+//! ## Overhead discipline
+//!
+//! Recording is branch-guarded on a plain `bool`: with `trace = off`
+//! (the default) every hook is a single predictable branch — no
+//! `Instant::now()` calls, no allocation, no atomics on the worker
+//! paths — and training is bit-identical to the untraced build (the
+//! goldens pin this). With `trace = spans:PATH` each worker stamps into
+//! a **preallocated** [`SpanBuf`] ring ([`SpanBuf::CAPACITY`] spans);
+//! the buffer travels inside [`crate::coordinator::WorkerState`] through
+//! the pool's job/result ping-pong and is drained by the coordinator
+//! once per step, so the steady state allocates nothing (overflow
+//! increments a `dropped` counter instead of growing).
+//! `benches/trace_overhead.rs` pins the end-to-end cost at ≤ 1%.
+//!
+//! ## Viewing and reporting
+//!
+//! `sparkv train … --trace spans:trace.json` writes Chrome trace-event
+//! JSON: open <https://ui.perfetto.dev> and drag the file in (tracks
+//! are the coordinator, one per logical worker, and the pool ring
+//! seats; a bucketed `pool:N` run shows bucket *i+1*'s selection
+//! overlapping bucket *i*'s collective). `sparkv report trace.json`
+//! folds the same file into a measured
+//! [`crate::netsim::IterationBreakdown`] and prints the per-phase
+//! measured-vs-predicted drift table ([`report::drift_report`]);
+//! `--strict` additionally exits non-zero when any phase drifts past
+//! its threshold, and malformed traces are hard errors either way.
+//! `sparkv tune --calibrate-from trace.json` re-fits the
+//! compute/bandwidth calibration scales from the same fold
+//! (`Calibrator::fit_from_trace`) instead of running live probes.
+
+mod perfetto;
+pub mod report;
+
+pub use perfetto::{load, write};
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Chrome-trace `tid` of the coordinator track.
+pub const COORDINATOR_TRACK: u32 = 0;
+
+/// First ring-seat track id (`1000 + rank`); worker tracks are `rank + 1`.
+pub const RING_TRACK_BASE: u32 = 1000;
+
+/// The track a logical worker's spans land on (rank + 1; 0 is the
+/// coordinator).
+pub fn worker_track(rank: usize) -> u32 {
+    rank as u32 + 1
+}
+
+/// The track a pool ring seat's spans land on.
+pub fn ring_track(rank: usize) -> u32 {
+    RING_TRACK_BASE + rank as u32
+}
+
+/// Span phase — the trace's closed name vocabulary (see the module-level
+/// taxonomy table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Step,
+    Sample,
+    Compute,
+    Select,
+    Collective,
+    EfApply,
+    Barrier,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Step => "step",
+            Phase::Sample => "sample",
+            Phase::Compute => "compute",
+            Phase::Select => "select",
+            Phase::Collective => "collective",
+            Phase::EfApply => "ef_apply",
+            Phase::Barrier => "barrier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        Some(match s {
+            "step" => Phase::Step,
+            "sample" => Phase::Sample,
+            "compute" => Phase::Compute,
+            "select" => Phase::Select,
+            "collective" => Phase::Collective,
+            "ef_apply" => Phase::EfApply,
+            "barrier" => Phase::Barrier,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded span: a `[t0, t1)` interval (µs since the recorder
+/// epoch) on one track, tagged with its step and (for bucketed phases)
+/// bucket index (`bucket < 0` ⇒ not bucket-scoped).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub track: u32,
+    pub phase: Phase,
+    pub step: u32,
+    pub bucket: i32,
+    pub t0_us: f64,
+    pub t1_us: f64,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> f64 {
+        self.t1_us - self.t0_us
+    }
+}
+
+/// Per-worker span buffer: preallocated at enable time, stamped on the
+/// worker's hot path, drained by the coordinator once per step. Lives on
+/// [`crate::coordinator::WorkerState`], so under `pool:N` it ships to the
+/// pool thread inside the job and comes back with the `PoolResult` — the
+/// worker stamps its own spans wherever its state happens to execute.
+///
+/// Disabled (the default) every method is a branch on a plain bool: no
+/// clock reads, no allocation, no shared state.
+#[derive(Debug)]
+pub struct SpanBuf {
+    enabled: bool,
+    track: u32,
+    step: u32,
+    epoch: Option<Instant>,
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl SpanBuf {
+    /// Preallocated span capacity per worker per drain interval (one
+    /// step): generous for any realistic bucket count; overflow is
+    /// counted, never grown.
+    pub const CAPACITY: usize = 4096;
+
+    pub fn disabled() -> SpanBuf {
+        SpanBuf {
+            enabled: false,
+            track: 0,
+            step: 0,
+            epoch: None,
+            spans: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Arm the buffer: one allocation here, none afterwards.
+    pub fn enable(&mut self, epoch: Instant, track: u32) {
+        self.enabled = true;
+        self.track = track;
+        self.epoch = Some(epoch);
+        self.spans.reserve_exact(Self::CAPACITY.saturating_sub(self.spans.capacity()));
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Tag subsequent stamps with `step` (set by the trainer before the
+    /// worker phase launches).
+    #[inline]
+    pub fn set_step(&mut self, step: u32) {
+        self.step = step;
+    }
+
+    /// Current time in µs since the epoch — 0.0 (no clock read) when
+    /// disabled.
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        match self.epoch {
+            Some(e) if self.enabled => e.elapsed().as_secs_f64() * 1e6,
+            _ => 0.0,
+        }
+    }
+
+    /// Record `[t0_us, now)` as a span of `phase` (no-op when disabled).
+    #[inline]
+    pub fn stamp(&mut self, phase: Phase, bucket: i32, t0_us: f64) {
+        if !self.enabled {
+            return;
+        }
+        let t1_us = self.now_us();
+        if self.spans.len() < Self::CAPACITY {
+            self.spans.push(Span {
+                track: self.track,
+                phase,
+                step: self.step,
+                bucket,
+                t0_us,
+                t1_us,
+            });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Move everything recorded so far into `out` (the coordinator's
+    /// per-step drain); returns the overflow count accumulated since the
+    /// last drain.
+    pub fn drain_into(&mut self, out: &mut Vec<Span>) -> u64 {
+        out.append(&mut self.spans);
+        std::mem::take(&mut self.dropped)
+    }
+}
+
+/// Shared span sink for the pool's persistent ring-seat threads: the
+/// seats outlive any one training run, so they stamp through an `Arc`'d
+/// sink installed at pool spawn. Disabled it costs one relaxed atomic
+/// load per rank job; enabled, two clock reads and one short mutex lock
+/// per job (tracing-on only — never on the default path).
+///
+/// Timestamps are µs since the *sink's* epoch (fixed at pool spawn); the
+/// recorder re-bases them onto its own epoch at drain time via
+/// [`offset_us`].
+#[derive(Debug)]
+pub struct SharedSink {
+    enabled: AtomicBool,
+    step: AtomicU32,
+    epoch: Instant,
+    inner: Mutex<SinkInner>,
+}
+
+#[derive(Debug)]
+struct SinkInner {
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl SharedSink {
+    /// Per-run span cap (all seats together); overflow is counted.
+    pub const CAPACITY: usize = 1 << 16;
+
+    pub fn new() -> SharedSink {
+        SharedSink {
+            enabled: AtomicBool::new(false),
+            step: AtomicU32::new(0),
+            epoch: Instant::now(),
+            inner: Mutex::new(SinkInner {
+                spans: Vec::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        if on {
+            self.inner.lock().unwrap().spans.reserve(Self::CAPACITY);
+        }
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    /// Tag subsequent stamps with `step`. The trainer sets this at step
+    /// start; every collective call of the step completes (from the
+    /// coordinator's view) before the next step starts, so seat-side
+    /// stamps can never race onto the wrong step.
+    pub fn set_step(&self, step: u32) {
+        self.step.store(step, Ordering::Release);
+    }
+
+    /// Current time in µs since the sink epoch.
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record `[t0_us, now)` on `track` (callers pre-check
+    /// [`SharedSink::is_enabled`]).
+    pub fn stamp(&self, track: u32, phase: Phase, t0_us: f64) {
+        let t1_us = self.now_us();
+        let step = self.step.load(Ordering::Acquire);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.spans.len() < Self::CAPACITY {
+            inner.spans.push(Span {
+                track,
+                phase,
+                step,
+                bucket: -1,
+                t0_us,
+                t1_us,
+            });
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// Drain all seat spans, shifting their timestamps by `shift_us`
+    /// (the sink-epoch → recorder-epoch offset). Returns the dropped
+    /// count.
+    pub fn drain_into(&self, shift_us: f64, out: &mut Vec<Span>) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        for mut s in inner.spans.drain(..) {
+            s.t0_us += shift_us;
+            s.t1_us += shift_us;
+            out.push(s);
+        }
+        std::mem::take(&mut inner.dropped)
+    }
+}
+
+impl Default for SharedSink {
+    fn default() -> SharedSink {
+        SharedSink::new()
+    }
+}
+
+/// Signed microseconds from `from` to `to` (positive when `to` is
+/// later). `Instant` subtraction panics on negative spans; this helper
+/// handles either ordering.
+pub fn offset_us(from: Instant, to: Instant) -> f64 {
+    match to.checked_duration_since(from) {
+        Some(d) => d.as_secs_f64() * 1e6,
+        None => -from.duration_since(to).as_secs_f64() * 1e6,
+    }
+}
+
+/// What the trainer records, derived from [`crate::config::Trace`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// No tracing at all (the default): every hook is an untaken branch.
+    Off,
+    /// Per-step aggregates only (`StepRecord::comm_us` timing) — no span
+    /// buffers.
+    Steps,
+    /// Full span recording (implies the per-step aggregates).
+    Spans,
+}
+
+/// The coordinator-side recorder: owns the trace epoch, the coordinator
+/// track, and the accumulated span list the per-worker buffers drain
+/// into. Created once per training run.
+#[derive(Debug)]
+pub struct Recorder {
+    mode: TraceMode,
+    epoch: Instant,
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl Recorder {
+    pub fn new(mode: TraceMode) -> Recorder {
+        Recorder {
+            mode,
+            epoch: Instant::now(),
+            spans: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    /// True when any per-step timing is wanted (`steps` or `spans`) —
+    /// gates the `comm_us` clock reads.
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.mode != TraceMode::Off
+    }
+
+    /// True when full span recording is wanted.
+    #[inline]
+    pub fn spans_on(&self) -> bool {
+        self.mode == TraceMode::Spans
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Current time in µs since the recorder epoch — 0.0 (no clock
+    /// read) when tracing is off.
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        if self.is_on() {
+            self.epoch.elapsed().as_secs_f64() * 1e6
+        } else {
+            0.0
+        }
+    }
+
+    /// Record a coordinator-track span `[t0_us, now)` (no-op unless span
+    /// recording is on).
+    #[inline]
+    pub fn stamp(&mut self, phase: Phase, step: u32, bucket: i32, t0_us: f64) {
+        if !self.spans_on() {
+            return;
+        }
+        let t1_us = self.now_us();
+        self.stamp_at(phase, step, bucket, t0_us, t1_us);
+    }
+
+    /// Record a coordinator-track span with both endpoints explicit (the
+    /// step umbrella span reuses the `wall_s` stamp).
+    pub fn stamp_at(&mut self, phase: Phase, step: u32, bucket: i32, t0_us: f64, t1_us: f64) {
+        if !self.spans_on() {
+            return;
+        }
+        self.spans.push(Span {
+            track: COORDINATOR_TRACK,
+            phase,
+            step,
+            bucket,
+            t0_us,
+            t1_us,
+        });
+    }
+
+    /// Drain a worker's span buffer into the trace.
+    pub fn absorb(&mut self, buf: &mut SpanBuf) {
+        self.dropped += buf.drain_into(&mut self.spans);
+    }
+
+    /// Drain the pool ring sink into the trace (re-based onto this
+    /// recorder's epoch).
+    pub fn absorb_sink(&mut self, sink: &SharedSink) {
+        let shift = offset_us(self.epoch, sink.epoch());
+        self.dropped += sink.drain_into(shift, &mut self.spans);
+    }
+
+    /// Finish the run: package everything recorded with the run
+    /// metadata.
+    pub fn finish(self, meta: TraceMeta) -> TraceData {
+        let mut spans = self.spans;
+        // Deterministic order for consumers: by (track, t0, step).
+        spans.sort_by(|a, b| {
+            a.track
+                .cmp(&b.track)
+                .then(a.t0_us.total_cmp(&b.t0_us))
+                .then(a.step.cmp(&b.step))
+        });
+        TraceData {
+            meta,
+            spans,
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// Run metadata embedded in the trace file (the `sparkv` top-level
+/// object) — everything `sparkv report` needs to rebuild the matching
+/// netsim prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    pub workers: usize,
+    /// Flat gradient dimension of the traced model.
+    pub d: usize,
+    pub steps: usize,
+    pub k_ratio: f64,
+    pub op: String,
+    pub parallelism: String,
+    /// Bucket count of the traced schedule (1 = monolithic).
+    pub buckets: usize,
+    pub exchange: String,
+    pub wire: String,
+    pub select: String,
+}
+
+/// A completed trace: metadata + the full span list (sorted by track,
+/// then start time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceData {
+    pub meta: TraceMeta,
+    pub spans: Vec<Span>,
+    /// Spans lost to buffer overflow (0 in any healthy run).
+    pub dropped: u64,
+}
+
+impl TraceData {
+    /// Spans on one track, in start-time order.
+    pub fn track(&self, track: u32) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.track == track)
+    }
+
+    /// All distinct track ids, ascending.
+    pub fn tracks(&self) -> Vec<u32> {
+        let mut t: Vec<u32> = self.spans.iter().map(|s| s.track).collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spanbuf_is_inert() {
+        let mut b = SpanBuf::disabled();
+        assert!(!b.is_enabled());
+        assert_eq!(b.now_us(), 0.0);
+        b.set_step(7);
+        b.stamp(Phase::Compute, -1, 0.0);
+        let mut out = Vec::new();
+        assert_eq!(b.drain_into(&mut out), 0);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn spanbuf_records_and_caps() {
+        let mut b = SpanBuf::disabled();
+        b.enable(Instant::now(), worker_track(3));
+        b.set_step(2);
+        let t0 = b.now_us();
+        b.stamp(Phase::Select, 1, t0);
+        let mut out = Vec::new();
+        assert_eq!(b.drain_into(&mut out), 0);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].track, 4);
+        assert_eq!(out[0].step, 2);
+        assert_eq!(out[0].bucket, 1);
+        assert_eq!(out[0].phase, Phase::Select);
+        assert!(out[0].t1_us >= out[0].t0_us);
+        // Overflow counts instead of growing.
+        for _ in 0..SpanBuf::CAPACITY + 5 {
+            b.stamp(Phase::Compute, -1, 0.0);
+        }
+        let mut out2 = Vec::new();
+        assert_eq!(b.drain_into(&mut out2), 5);
+        assert_eq!(out2.len(), SpanBuf::CAPACITY);
+    }
+
+    #[test]
+    fn recorder_off_records_nothing() {
+        let mut r = Recorder::new(TraceMode::Off);
+        assert!(!r.is_on() && !r.spans_on());
+        assert_eq!(r.now_us(), 0.0);
+        r.stamp(Phase::Step, 0, -1, 0.0);
+        let t = r.finish(test_meta());
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn steps_mode_times_but_keeps_no_spans() {
+        let mut r = Recorder::new(TraceMode::Steps);
+        assert!(r.is_on() && !r.spans_on());
+        assert!(r.now_us() >= 0.0);
+        r.stamp(Phase::Collective, 0, 0, 0.0);
+        assert!(r.finish(test_meta()).spans.is_empty());
+    }
+
+    #[test]
+    fn recorder_sorts_by_track_then_time() {
+        let mut r = Recorder::new(TraceMode::Spans);
+        r.stamp_at(Phase::Collective, 0, 0, 5.0, 6.0);
+        r.stamp_at(Phase::Barrier, 0, -1, 1.0, 2.0);
+        let mut b = SpanBuf::disabled();
+        b.enable(r.epoch(), worker_track(0));
+        b.stamp(Phase::Compute, -1, 0.0);
+        r.absorb(&mut b);
+        let t = r.finish(test_meta());
+        assert_eq!(t.tracks(), vec![0, 1]);
+        let coord: Vec<_> = t.track(0).collect();
+        assert_eq!(coord[0].phase, Phase::Barrier);
+        assert_eq!(coord[1].phase, Phase::Collective);
+    }
+
+    #[test]
+    fn shared_sink_rebases_onto_recorder_epoch() {
+        let sink = SharedSink::new();
+        sink.set_enabled(true);
+        sink.set_step(4);
+        let t0 = sink.now_us();
+        sink.stamp(ring_track(2), Phase::Collective, t0);
+        let mut r = Recorder::new(TraceMode::Spans);
+        r.absorb_sink(&sink);
+        let t = r.finish(test_meta());
+        assert_eq!(t.spans.len(), 1);
+        let s = t.spans[0];
+        assert_eq!(s.track, RING_TRACK_BASE + 2);
+        assert_eq!(s.step, 4);
+        // The sink epoch predates the recorder's, so the re-based start
+        // is negative-or-small but finite, and duration is preserved.
+        assert!(s.t0_us.is_finite() && s.t1_us >= s.t0_us);
+    }
+
+    #[test]
+    fn offset_is_antisymmetric() {
+        let a = Instant::now();
+        let b = Instant::now();
+        assert!((offset_us(a, b) + offset_us(b, a)).abs() < 1.0);
+        assert!(offset_us(a, b) >= 0.0);
+    }
+
+    #[test]
+    fn phase_names_round_trip() {
+        for p in [
+            Phase::Step,
+            Phase::Sample,
+            Phase::Compute,
+            Phase::Select,
+            Phase::Collective,
+            Phase::EfApply,
+            Phase::Barrier,
+        ] {
+            assert_eq!(Phase::parse(p.name()), Some(p));
+        }
+        assert_eq!(Phase::parse("bogus"), None);
+    }
+
+    pub(super) fn test_meta() -> TraceMeta {
+        TraceMeta {
+            workers: 4,
+            d: 128,
+            steps: 3,
+            k_ratio: 0.1,
+            op: "topk".into(),
+            parallelism: "serial".into(),
+            buckets: 1,
+            exchange: "dense-ring".into(),
+            wire: "raw".into(),
+            select: "exact".into(),
+        }
+    }
+}

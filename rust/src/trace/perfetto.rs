@@ -1,0 +1,271 @@
+//! Chrome trace-event (Perfetto) JSON encoding of a [`TraceData`].
+//!
+//! The file is the standard `traceEvents` object form, loadable in
+//! `ui.perfetto.dev` or `chrome://tracing`: every span is a complete
+//! event (`"ph": "X"`) with µs timestamps, `pid` 0, and `tid` = track
+//! (0 coordinator, `1..=P` workers, `1000+r` ring seats); thread-name
+//! metadata events label the tracks. A top-level `sparkv` object carries
+//! the run metadata (`TraceMeta`) that `sparkv report` folds against the
+//! netsim prediction — Perfetto ignores unknown top-level keys, so the
+//! same file serves both consumers.
+
+use anyhow::{anyhow, bail, Context};
+
+use super::{Phase, Span, TraceData, TraceMeta, COORDINATOR_TRACK, RING_TRACK_BASE};
+use crate::util::json::Json;
+
+/// Human label for a track id (thread-name metadata).
+fn track_name(track: u32) -> String {
+    if track == COORDINATOR_TRACK {
+        "coordinator".to_string()
+    } else if track >= RING_TRACK_BASE {
+        format!("ring seat {}", track - RING_TRACK_BASE)
+    } else {
+        format!("worker {}", track - 1)
+    }
+}
+
+/// Encode a trace as a Chrome trace-event JSON document.
+pub fn to_json(trace: &TraceData) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(trace.spans.len() + 8);
+    for track in trace.tracks() {
+        let mut m = Json::obj();
+        m.set("ph", "M".into());
+        m.set("name", "thread_name".into());
+        m.set("pid", 0usize.into());
+        m.set("tid", (track as usize).into());
+        let mut args = Json::obj();
+        args.set("name", track_name(track).into());
+        m.set("args", args);
+        events.push(m);
+    }
+    for s in &trace.spans {
+        let mut e = Json::obj();
+        e.set("ph", "X".into());
+        e.set("name", s.phase.name().into());
+        e.set("pid", 0usize.into());
+        e.set("tid", (s.track as usize).into());
+        e.set("ts", s.t0_us.into());
+        e.set("dur", s.dur_us().into());
+        let mut args = Json::obj();
+        args.set("step", (s.step as usize).into());
+        if s.bucket >= 0 {
+            args.set("bucket", (s.bucket as usize).into());
+        }
+        e.set("args", args);
+        events.push(e);
+    }
+    let mut meta = Json::obj();
+    meta.set("workers", trace.meta.workers.into());
+    meta.set("d", trace.meta.d.into());
+    meta.set("steps", trace.meta.steps.into());
+    meta.set("k_ratio", trace.meta.k_ratio.into());
+    meta.set("op", trace.meta.op.as_str().into());
+    meta.set("parallelism", trace.meta.parallelism.as_str().into());
+    meta.set("buckets", trace.meta.buckets.into());
+    meta.set("exchange", trace.meta.exchange.as_str().into());
+    meta.set("wire", trace.meta.wire.as_str().into());
+    meta.set("select", trace.meta.select.as_str().into());
+    meta.set("dropped", (trace.dropped as usize).into());
+
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(events));
+    root.set("displayTimeUnit", "ms".into());
+    root.set("sparkv", meta);
+    root
+}
+
+/// Decode (and validate) a Chrome trace-event document produced by
+/// [`to_json`]. Every malformation — missing `traceEvents`, a span with
+/// an unknown phase name, non-finite or negative timestamps, a missing
+/// or incomplete `sparkv` metadata object — is a hard error, which is
+/// what lets `sparkv report` exit non-zero on corrupt traces.
+pub fn from_json(root: &Json) -> anyhow::Result<TraceData> {
+    let obj = root.as_obj().ok_or_else(|| anyhow!("trace root is not an object"))?;
+    let events = obj
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow!("trace has no traceEvents array"))?;
+    let meta_obj = obj
+        .get("sparkv")
+        .and_then(|m| m.as_obj())
+        .ok_or_else(|| anyhow!("trace has no sparkv metadata object"))?;
+
+    let req_num = |key: &str| -> anyhow::Result<f64> {
+        meta_obj
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("sparkv metadata missing numeric '{key}'"))
+    };
+    let req_str = |key: &str| -> anyhow::Result<String> {
+        meta_obj
+            .get(key)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("sparkv metadata missing string '{key}'"))
+    };
+    let meta = TraceMeta {
+        workers: req_num("workers")? as usize,
+        d: req_num("d")? as usize,
+        steps: req_num("steps")? as usize,
+        k_ratio: req_num("k_ratio")?,
+        op: req_str("op")?,
+        parallelism: req_str("parallelism")?,
+        buckets: req_num("buckets")? as usize,
+        exchange: req_str("exchange")?,
+        wire: req_str("wire")?,
+        select: req_str("select")?,
+    };
+    let dropped = meta_obj.get("dropped").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+
+    let mut spans = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        let e = ev.as_obj().ok_or_else(|| anyhow!("traceEvents[{i}] is not an object"))?;
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        match ph {
+            "M" => continue,
+            "X" => {}
+            other => bail!("traceEvents[{i}]: unsupported event phase {other:?}"),
+        }
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("traceEvents[{i}] has no name"))?;
+        let phase = Phase::parse(name)
+            .ok_or_else(|| anyhow!("traceEvents[{i}]: unknown span name {name:?}"))?;
+        let ts = e
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| anyhow!("traceEvents[{i}] has no ts"))?;
+        let dur = e
+            .get("dur")
+            .and_then(|d| d.as_f64())
+            .ok_or_else(|| anyhow!("traceEvents[{i}] has no dur"))?;
+        if !ts.is_finite() || !dur.is_finite() || dur < 0.0 {
+            bail!("traceEvents[{i}]: bad timestamps ts={ts} dur={dur}");
+        }
+        let tid = e
+            .get("tid")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| anyhow!("traceEvents[{i}] has no tid"))?;
+        if tid < 0.0 || tid.fract() != 0.0 {
+            bail!("traceEvents[{i}]: bad tid {tid}");
+        }
+        let args = e.get("args").and_then(|a| a.as_obj());
+        let step = args
+            .and_then(|a| a.get("step"))
+            .and_then(|s| s.as_f64())
+            .ok_or_else(|| anyhow!("traceEvents[{i}] has no args.step"))? as u32;
+        let bucket = args
+            .and_then(|a| a.get("bucket"))
+            .and_then(|b| b.as_f64())
+            .map_or(-1, |b| b as i32);
+        spans.push(Span {
+            track: tid as u32,
+            phase,
+            step,
+            bucket,
+            t0_us: ts,
+            t1_us: ts + dur,
+        });
+    }
+    Ok(TraceData {
+        meta,
+        spans,
+        dropped,
+    })
+}
+
+/// Write a trace to `path` as Perfetto-loadable JSON.
+pub fn write(path: &str, trace: &TraceData) -> anyhow::Result<()> {
+    std::fs::write(path, to_json(trace).to_string())
+        .with_context(|| format!("writing trace {path}"))
+}
+
+/// Load (and validate) a trace file written by [`write`].
+pub fn load(path: &str) -> anyhow::Result<TraceData> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let json = Json::parse(&text).with_context(|| format!("parsing trace {path}"))?;
+    from_json(&json).with_context(|| format!("validating trace {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::test_meta;
+    use super::super::{ring_track, worker_track};
+    use super::*;
+
+    fn sample_trace() -> TraceData {
+        let spans = vec![
+            Span {
+                track: COORDINATOR_TRACK,
+                phase: Phase::Step,
+                step: 0,
+                bucket: -1,
+                t0_us: 0.0,
+                t1_us: 100.0,
+            },
+            Span {
+                track: worker_track(1),
+                phase: Phase::Select,
+                step: 0,
+                bucket: 2,
+                t0_us: 10.0,
+                t1_us: 30.0,
+            },
+            Span {
+                track: ring_track(0),
+                phase: Phase::Collective,
+                step: 0,
+                bucket: -1,
+                t0_us: 40.0,
+                t1_us: 55.0,
+            },
+        ];
+        TraceData {
+            meta: test_meta(),
+            spans,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let t = sample_trace();
+        let j = to_json(&t);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn writer_emits_track_names_and_metadata() {
+        let j = to_json(&sample_trace());
+        let text = j.to_string();
+        assert!(text.contains("\"coordinator\""));
+        assert!(text.contains("\"worker 1\""));
+        assert!(text.contains("\"ring seat 0\""));
+        assert!(text.contains("\"sparkv\""));
+        assert!(text.contains("\"traceEvents\""));
+        // Bucket-scoped spans carry the bucket arg; others omit it.
+        assert!(text.contains("\"bucket\""));
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        // No traceEvents at all.
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        // Events but no sparkv metadata.
+        assert!(from_json(&Json::parse(r#"{"traceEvents":[]}"#).unwrap()).is_err());
+        // Unknown span name.
+        let mut j = to_json(&sample_trace());
+        let txt = j.to_string().replace("\"select\"", "\"mystery\"");
+        j = Json::parse(&txt).unwrap();
+        assert!(from_json(&j).err().unwrap().to_string().contains("unknown span name"));
+        // Negative duration.
+        let txt = to_json(&sample_trace()).to_string().replace("\"dur\":20", "\"dur\":-20");
+        assert!(from_json(&Json::parse(&txt).unwrap()).is_err());
+        // Metadata missing a required key.
+        let txt = to_json(&sample_trace()).to_string().replace("\"workers\"", "\"werkers\"");
+        assert!(from_json(&Json::parse(&txt).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,533 @@
+//! Fold a recorded trace into a measured [`IterationBreakdown`] and diff
+//! it against the netsim prediction for the same configuration — the
+//! measurement half of ROADMAP item 5's drift detector, surfaced as
+//! `sparkv report`.
+//!
+//! ## Methodology
+//!
+//! The measured fold mirrors the netsim's phase semantics:
+//!
+//! * `compute` — per step, the **max** over worker tracks of that
+//!   worker's summed `sample` + `compute` span time (synchronous SGD's
+//!   barrier waits for the slowest worker; the netsim folds sampling
+//!   into its compute term because it does not model a data pipeline).
+//! * `select`  — per step, the max over worker tracks of summed
+//!   `select` + `ef_apply` time (selection, encode, and the residual
+//!   update are all operator-side CPU the netsim prices as selection).
+//! * `comm`    — per step, the summed duration of the coordinator-track
+//!   `collective` spans (the call-site wall of every engine call — the
+//!   same number `StepRecord::comm_us` records).
+//! * `total`   — the coordinator `step` umbrella span's duration.
+//!
+//! The prediction is the [`Simulator`] run on a [`SimConfig`] rebuilt
+//! from the trace's embedded metadata. An in-process trace measures
+//! *this host*, not the modelled cluster, so absolute magnitudes are
+//! incomparable; the report therefore fits one multiplicative scale per
+//! phase on the **first half** of the traced steps and evaluates drift
+//! on the full-trace means. Drift then measures *nonstationarity* —
+//! whether the run's phase balance wandered away from what a model
+//! calibrated on its opening steps would predict — which is exactly the
+//! signal an online re-tuning loop needs. The scaled predicted total is
+//! recomposed as the scaled serialized sum shrunk by the simulator's
+//! own overlap factor `total / (compute + select + comm)` (the bucketed
+//! pipeline hides communication inside selection; the factor is 1 on
+//! monolithic timelines).
+//!
+//! Per-phase drift above [`PHASE_DRIFT_THRESHOLD`] (50%) flags the row;
+//! total drift above [`TOTAL_DRIFT_THRESHOLD`] (100%) flags the
+//! structural row. Flags are advisory — `sparkv report` exits non-zero
+//! only for *malformed* traces (or under `--strict`).
+
+use anyhow::{anyhow, ensure};
+
+use super::{Phase, TraceData, TraceMeta, RING_TRACK_BASE};
+use crate::compress::OpKind;
+use crate::config::{Exchange, Parallelism};
+use crate::netsim::{
+    runtime_overhead_s, ComputeProfile, IterationBreakdown, LinkSpec, SimConfig, Simulator,
+    Topology,
+};
+use crate::tensor::wire::WireCodec;
+
+/// Per-phase drift above this fraction flags the phase row (documented
+/// acceptance bound for the default scenario).
+pub const PHASE_DRIFT_THRESHOLD: f64 = 0.5;
+
+/// Total-time drift above this fraction flags the structural row — a
+/// looser bound, since `total` also absorbs overlap-model error.
+pub const TOTAL_DRIFT_THRESHOLD: f64 = 1.0;
+
+/// Host compute speed assumed when rebuilding the predicted model from a
+/// trace: the Table 2 V100 per-parameter fwd+bwd rate. Absolute values
+/// are irrelevant to the drift report (the per-phase fit absorbs them);
+/// this just keeps the base prediction deterministic.
+fn per_param_compute_s() -> f64 {
+    let r = ComputeProfile::by_name("resnet50").expect("catalog model");
+    r.t1_compute / r.params.max(1) as f64
+}
+
+/// One step's measured phase times (seconds), folded from its spans.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepPhases {
+    pub step: u32,
+    pub compute_s: f64,
+    pub select_s: f64,
+    pub comm_s: f64,
+    pub total_s: f64,
+}
+
+/// The measured fold of a whole trace: one [`StepPhases`] per traced
+/// step, in step order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measured {
+    pub steps: Vec<StepPhases>,
+}
+
+impl Measured {
+    /// Mean phase times over a step range (used for the first-half fit
+    /// and the full-trace evaluation).
+    fn mean_over(&self, range: std::ops::Range<usize>) -> IterationBreakdown {
+        let slice = &self.steps[range];
+        let n = slice.len().max(1) as f64;
+        let (mut c, mut s, mut m, mut t) = (0.0, 0.0, 0.0, 0.0);
+        for p in slice {
+            c += p.compute_s;
+            s += p.select_s;
+            m += p.comm_s;
+            t += p.total_s;
+        }
+        let (c, s, m, t) = (c / n, s / n, m / n, t / n);
+        IterationBreakdown {
+            compute: c,
+            select: s,
+            comm: m,
+            max_skew: 0.0,
+            total: t,
+            overlap_saved: (c + s + m - t).max(0.0),
+        }
+    }
+
+    /// Full-trace mean breakdown.
+    pub fn mean(&self) -> IterationBreakdown {
+        self.mean_over(0..self.steps.len())
+    }
+}
+
+/// Fold a trace's spans into per-step measured phase times. Errors on
+/// structurally broken traces: no coordinator `step` spans, or a step
+/// span with a non-positive duration.
+pub fn fold(trace: &TraceData) -> anyhow::Result<Measured> {
+    let mut steps: Vec<StepPhases> = Vec::new();
+    // step → index into `steps`, resolved via the coordinator umbrellas.
+    for s in trace.spans.iter().filter(|s| s.phase == Phase::Step) {
+        ensure!(
+            s.dur_us() > 0.0,
+            "trace step {} has a non-positive step span ({} µs)",
+            s.step,
+            s.dur_us()
+        );
+        steps.push(StepPhases {
+            step: s.step,
+            compute_s: 0.0,
+            select_s: 0.0,
+            comm_s: 0.0,
+            total_s: s.dur_us() * 1e-6,
+        });
+    }
+    ensure!(
+        !steps.is_empty(),
+        "trace has no coordinator step spans — was it recorded with trace = spans?"
+    );
+    steps.sort_by_key(|p| p.step);
+    steps.dedup_by_key(|p| p.step);
+    let idx_of = |step: u32| steps.binary_search_by_key(&step, |p| p.step).ok();
+
+    // Per (worker track, step) sums; the barrier max is taken per step.
+    use std::collections::BTreeMap;
+    let mut worker_compute: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+    let mut worker_select: BTreeMap<(u32, u32), f64> = BTreeMap::new();
+    for s in &trace.spans {
+        let dur_s = s.dur_us() * 1e-6;
+        if s.track == super::COORDINATOR_TRACK {
+            if s.phase == Phase::Collective {
+                if let Some(i) = idx_of(s.step) {
+                    steps[i].comm_s += dur_s;
+                }
+            }
+        } else if s.track < RING_TRACK_BASE {
+            let key = (s.track, s.step);
+            match s.phase {
+                Phase::Sample | Phase::Compute => {
+                    *worker_compute.entry(key).or_insert(0.0) += dur_s;
+                }
+                Phase::Select | Phase::EfApply => {
+                    *worker_select.entry(key).or_insert(0.0) += dur_s;
+                }
+                _ => {}
+            }
+        }
+        // Ring-seat spans time the same collectives the coordinator
+        // already timed at the call site; they stay visualization-only.
+    }
+    for ((_, step), v) in worker_compute {
+        if let Some(i) = idx_of(step) {
+            steps[i].compute_s = steps[i].compute_s.max(v);
+        }
+    }
+    for ((_, step), v) in worker_select {
+        if let Some(i) = idx_of(step) {
+            steps[i].select_s = steps[i].select_s.max(v);
+        }
+    }
+    Ok(Measured { steps })
+}
+
+/// Rebuild the netsim configuration a trace's metadata describes: a
+/// single-node cluster of `workers` PCIe-attached ranks (the in-process
+/// analog), the traced model's parameter count at the catalog
+/// per-parameter compute rate, and the traced op / density / bucket /
+/// exchange / wire axes. Unknown metadata strings are hard errors (a
+/// malformed trace must not silently fold into a wrong prediction).
+pub fn sim_config(meta: &TraceMeta) -> anyhow::Result<SimConfig> {
+    ensure!(meta.workers >= 1, "trace metadata: workers must be >= 1");
+    ensure!(meta.d >= 1, "trace metadata: d must be >= 1");
+    let op = OpKind::parse(&meta.op)?;
+    let parallelism = Parallelism::parse(&meta.parallelism)?;
+    let exchange = Exchange::parse(&meta.exchange)?;
+    let wire = WireCodec::parse(&meta.wire)?;
+    ensure!(
+        meta.k_ratio > 0.0 && meta.k_ratio <= 1.0,
+        "trace metadata: k_ratio {} outside (0, 1]",
+        meta.k_ratio
+    );
+    let topo = Topology::new(1, meta.workers, LinkSpec::pcie3_x16(), LinkSpec::ethernet_10g());
+    let model = ComputeProfile::new("traced", meta.d as u64, 0.0);
+    let mut cfg = SimConfig::table2(model, op);
+    cfg.topo = topo;
+    cfg.model.t1_compute = per_param_compute_s() * meta.d as f64;
+    cfg.k_ratio = meta.k_ratio;
+    cfg.buckets = meta.buckets.max(1);
+    cfg.host_overhead_s = runtime_overhead_s(parallelism, meta.workers);
+    cfg.exchange = if op == OpKind::Dense { Exchange::DenseRing } else { exchange };
+    cfg.wire = wire;
+    Ok(cfg)
+}
+
+/// One row of the measured-vs-predicted table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftRow {
+    pub phase: &'static str,
+    /// Full-trace measured mean (seconds).
+    pub measured_s: f64,
+    /// First-half-scaled prediction (seconds).
+    pub predicted_s: f64,
+    /// The per-phase scale fitted on the first half.
+    pub scale: f64,
+    /// `|measured − predicted| / predicted` (∞ when the model predicts
+    /// 0 but the trace measured time — a structural mismatch).
+    pub drift: f64,
+    pub threshold: f64,
+    pub flagged: bool,
+}
+
+/// The complete drift report `sparkv report` renders.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftReport {
+    pub rows: Vec<DriftRow>,
+    /// Steps the scales were fitted on (the first half).
+    pub fit_steps: usize,
+    /// Steps the drift was evaluated on (all of them).
+    pub eval_steps: usize,
+    /// Spans lost to recorder overflow (non-zero taints the fold).
+    pub dropped: u64,
+}
+
+impl DriftReport {
+    /// True when no phase exceeded its drift threshold.
+    pub fn ok(&self) -> bool {
+        self.rows.iter().all(|r| !r.flagged)
+    }
+
+    /// Render the aligned text table (phase, measured, predicted, fitted
+    /// scale, drift, flag).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<10} {:>13} {:>13} {:>10} {:>9}  flag\n",
+            "phase", "measured(ms)", "predicted(ms)", "scale", "drift"
+        ));
+        for r in &self.rows {
+            let drift = if r.drift.is_finite() {
+                format!("{:+.1}%", r.drift * 100.0)
+            } else {
+                "inf".to_string()
+            };
+            out.push_str(&format!(
+                "{:<10} {:>13.3} {:>13.3} {:>10.3} {:>9}  {}\n",
+                r.phase,
+                r.measured_s * 1e3,
+                r.predicted_s * 1e3,
+                r.scale,
+                drift,
+                if r.flagged {
+                    format!("DRIFT>{:.0}%", r.threshold * 100.0)
+                } else {
+                    "ok".to_string()
+                }
+            ));
+        }
+        out.push_str(&format!(
+            "fit: first {} steps · eval: all {} steps · dropped spans: {}\n",
+            self.fit_steps, self.eval_steps, self.dropped
+        ));
+        out
+    }
+}
+
+fn fit_scale(measured: f64, predicted: f64) -> f64 {
+    if predicted > 0.0 && measured > 0.0 {
+        measured / predicted
+    } else {
+        1.0
+    }
+}
+
+fn drift_of(measured: f64, predicted: f64) -> f64 {
+    if predicted > 0.0 {
+        (measured - predicted).abs() / predicted
+    } else if measured > 0.0 {
+        f64::INFINITY
+    } else {
+        0.0
+    }
+}
+
+/// Build the measured-vs-predicted drift report for a trace. Errors only
+/// on malformed input (unfoldable spans, unparsable metadata); drift
+/// beyond the thresholds flags rows but still reports.
+pub fn drift_report(trace: &TraceData) -> anyhow::Result<DriftReport> {
+    let measured = fold(trace)?;
+    let cfg = sim_config(&trace.meta)?;
+    let predicted = Simulator::new(cfg).iteration();
+
+    let n = measured.steps.len();
+    let fit_n = n.div_ceil(2);
+    let fit = measured.mean_over(0..fit_n);
+    let eval = measured.mean();
+
+    let s_compute = fit_scale(fit.compute, predicted.compute);
+    let s_select = fit_scale(fit.select, predicted.select);
+    let s_comm = fit_scale(fit.comm, predicted.comm);
+    // The simulator's own overlap factor, applied to the scaled
+    // serialized sum (1.0 on monolithic timelines, < 1 when the bucketed
+    // pipeline hides communication).
+    let serialized = predicted.compute + predicted.select + predicted.comm;
+    let overlap_factor = if serialized > 0.0 {
+        (predicted.total / serialized).min(1.0)
+    } else {
+        1.0
+    };
+    let p_compute = s_compute * predicted.compute;
+    let p_select = s_select * predicted.select;
+    let p_comm = s_comm * predicted.comm;
+    let p_total = (p_compute + p_select + p_comm) * overlap_factor;
+
+    let row = |phase: &'static str, m: f64, p: f64, scale: f64, threshold: f64| {
+        let drift = drift_of(m, p);
+        DriftRow {
+            phase,
+            measured_s: m,
+            predicted_s: p,
+            scale,
+            drift,
+            threshold,
+            flagged: !(drift <= threshold),
+        }
+    };
+    let rows = vec![
+        row("compute", eval.compute, p_compute, s_compute, PHASE_DRIFT_THRESHOLD),
+        row("select", eval.select, p_select, s_select, PHASE_DRIFT_THRESHOLD),
+        row("comm", eval.comm, p_comm, s_comm, PHASE_DRIFT_THRESHOLD),
+        row(
+            "total",
+            eval.total,
+            p_total,
+            overlap_factor,
+            TOTAL_DRIFT_THRESHOLD,
+        ),
+    ];
+    Ok(DriftReport {
+        rows,
+        fit_steps: fit_n,
+        eval_steps: n,
+        dropped: trace.dropped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::test_meta;
+    use super::super::{ring_track, worker_track, Span, COORDINATOR_TRACK};
+    use super::*;
+
+    /// A synthetic 4-step trace with a stationary phase balance:
+    /// per step, 2 workers compute 100 µs + sample 10 µs, select
+    /// 20 µs + ef_apply 5 µs, and the coordinator times two 15 µs
+    /// collectives inside a 160 µs step.
+    fn stationary_trace() -> TraceData {
+        let mut spans = Vec::new();
+        for step in 0..4u32 {
+            let base = step as f64 * 1000.0;
+            spans.push(Span {
+                track: COORDINATOR_TRACK,
+                phase: Phase::Step,
+                step,
+                bucket: -1,
+                t0_us: base,
+                t1_us: base + 160.0,
+            });
+            for b in 0..2 {
+                spans.push(Span {
+                    track: COORDINATOR_TRACK,
+                    phase: Phase::Collective,
+                    step,
+                    bucket: b,
+                    t0_us: base + 120.0 + 16.0 * b as f64,
+                    t1_us: base + 135.0 + 16.0 * b as f64,
+                });
+            }
+            for w in 0..2 {
+                let t = worker_track(w);
+                spans.push(Span {
+                    track: t,
+                    phase: Phase::Sample,
+                    step,
+                    bucket: -1,
+                    t0_us: base,
+                    t1_us: base + 10.0,
+                });
+                spans.push(Span {
+                    track: t,
+                    phase: Phase::Compute,
+                    step,
+                    bucket: -1,
+                    t0_us: base + 10.0,
+                    t1_us: base + 110.0,
+                });
+                spans.push(Span {
+                    track: t,
+                    phase: Phase::Select,
+                    step,
+                    bucket: 0,
+                    t0_us: base + 110.0,
+                    t1_us: base + 130.0,
+                });
+                spans.push(Span {
+                    track: t,
+                    phase: Phase::EfApply,
+                    step,
+                    bucket: -1,
+                    t0_us: base + 130.0,
+                    t1_us: base + 135.0,
+                });
+            }
+            // A ring-seat span: visualization-only, must not perturb the
+            // fold.
+            spans.push(Span {
+                track: ring_track(0),
+                phase: Phase::Collective,
+                step,
+                bucket: -1,
+                t0_us: base + 120.0,
+                t1_us: base + 150.0,
+            });
+        }
+        let mut meta = test_meta();
+        meta.workers = 2;
+        meta.buckets = 2;
+        TraceData {
+            meta,
+            spans,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn fold_takes_barrier_max_and_coordinator_comm() {
+        let m = fold(&stationary_trace()).unwrap();
+        assert_eq!(m.steps.len(), 4);
+        for p in &m.steps {
+            assert!((p.compute_s - 110.0e-6).abs() < 1e-12, "{p:?}");
+            assert!((p.select_s - 25.0e-6).abs() < 1e-12, "{p:?}");
+            assert!((p.comm_s - 30.0e-6).abs() < 1e-12, "{p:?}");
+            assert!((p.total_s - 160.0e-6).abs() < 1e-12, "{p:?}");
+        }
+        let mean = m.mean();
+        assert!((mean.total - 160.0e-6).abs() < 1e-12);
+        assert!(mean.overlap_saved > 0.0, "phases exceed the wall: overlap");
+    }
+
+    #[test]
+    fn fold_rejects_spanless_traces() {
+        let t = TraceData {
+            meta: test_meta(),
+            spans: Vec::new(),
+            dropped: 0,
+        };
+        assert!(fold(&t).is_err());
+    }
+
+    #[test]
+    fn stationary_trace_has_zero_phase_drift() {
+        // Identical steps: the first-half fit predicts the full-trace
+        // means exactly, so every phase row reads ~0 drift.
+        let r = drift_report(&stationary_trace()).unwrap();
+        assert!(r.ok(), "{}", r.render());
+        for row in &r.rows {
+            assert!(row.drift < 1e-9, "{row:?}");
+        }
+        assert_eq!(r.fit_steps, 2);
+        assert_eq!(r.eval_steps, 4);
+    }
+
+    #[test]
+    fn nonstationary_trace_flags_the_wandering_phase() {
+        // Double the collective time in the second half: comm drifts by
+        // ~50% against the first-half fit while compute stays put.
+        let mut t = stationary_trace();
+        for s in &mut t.spans {
+            if s.track == COORDINATOR_TRACK && s.phase == Phase::Collective && s.step >= 2 {
+                s.t1_us += 2.0 * s.dur_us();
+            }
+        }
+        let r = drift_report(&t).unwrap();
+        let comm = r.rows.iter().find(|r| r.phase == "comm").unwrap();
+        let compute = r.rows.iter().find(|r| r.phase == "compute").unwrap();
+        assert!(comm.drift > PHASE_DRIFT_THRESHOLD, "{}", r.render());
+        assert!(comm.flagged);
+        assert!(compute.drift < 1e-9 && !compute.flagged);
+    }
+
+    #[test]
+    fn sim_config_rejects_malformed_metadata() {
+        let mut meta = test_meta();
+        meta.op = "mystery".into();
+        assert!(sim_config(&meta).is_err());
+        let mut meta = test_meta();
+        meta.workers = 0;
+        assert!(sim_config(&meta).is_err());
+        let mut meta = test_meta();
+        meta.k_ratio = 0.0;
+        assert!(sim_config(&meta).is_err());
+        assert!(sim_config(&test_meta()).is_ok());
+    }
+
+    #[test]
+    fn report_renders_a_table() {
+        let r = drift_report(&stationary_trace()).unwrap();
+        let text = r.render();
+        for needle in ["phase", "compute", "select", "comm", "total", "drift"] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

@@ -227,6 +227,7 @@ fn cfg(op: OpKind, buckets: Buckets, parallelism: Parallelism) -> TrainConfig {
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     }
 }
 

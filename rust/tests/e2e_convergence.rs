@@ -31,6 +31,7 @@ fn cfg(op: OpKind, steps: usize, k_ratio: f64) -> TrainConfig {
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     }
 }
 

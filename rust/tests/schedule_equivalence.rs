@@ -183,6 +183,7 @@ fn cfg(op: OpKind, schedule: KSchedule, parallelism: Parallelism) -> TrainConfig
         exchange: sparkv::config::Exchange::DenseRing,
         select: sparkv::config::Select::Exact,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     }
 }
 

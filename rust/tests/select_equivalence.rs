@@ -52,6 +52,7 @@ fn cfg(op: OpKind, buckets: Buckets, select: Select) -> TrainConfig {
         exchange: sparkv::config::Exchange::DenseRing,
         select,
         wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace: sparkv::config::Trace::Off,
     }
 }
 

@@ -1,0 +1,341 @@
+//! Observability suite for the span tracer (PR 10): the tracer must be
+//! *structurally honest* and *behaviorally invisible*.
+//!
+//! 1. Span integrity — every recorded stream is balanced (t1 ≥ t0,
+//!    positive step umbrellas), within-track non-overlapping (each track
+//!    is one sequential actor), and nested inside its step umbrella, on
+//!    every runtime × both bucket paths.
+//! 2. Structure invariance — serial, `threads:N` and `pool:N` emit the
+//!    *same per-step phase multiset* on the coordinator and worker
+//!    tracks (the pool moves spans with `WorkerState` through the
+//!    ping-pong, so they land on the logical worker's track wherever the
+//!    state executed); ring-seat tracks exist only under the pool.
+//! 3. Invisibility — `trace = off | steps | spans` produce bit-identical
+//!    trajectories; tracing may cost time, never numerics.
+//! 4. `wall_s` under tracing is the step span's own duration (the same
+//!    two clock reads), so per-step metrics record-keeping is excluded
+//!    from the step wall by construction.
+//! 5. `comm_us` accounting: positive and finite on every runtime × both
+//!    exchange paths when tracing, exactly 0.0 when off.
+//! 6. The Perfetto file round-trips through `trace::write`/`trace::load`
+//!    and folds into a drift report.
+
+use sparkv::compress::OpKind;
+use sparkv::config::{BucketApportion, Buckets, Exchange, Parallelism, Trace, TrainConfig};
+use sparkv::coordinator::{train, TrainOutput};
+use sparkv::data::GaussianMixture;
+use sparkv::models::NativeMlp;
+use sparkv::schedule::KSchedule;
+use sparkv::trace::{self, Phase, Span, TraceData, COORDINATOR_TRACK, RING_TRACK_BASE};
+
+const STEPS: usize = 12;
+
+fn cfg(buckets: Buckets, parallelism: Parallelism, trace: Trace) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        op: OpKind::TopK,
+        k_ratio: 0.01,
+        batch_size: 16,
+        steps: STEPS,
+        lr: 0.1,
+        momentum: 0.9,
+        lr_final_frac: 0.1,
+        seed: 7,
+        eval_every: 6,
+        hist_every: 0,
+        momentum_correction: false,
+        global_topk: false,
+        parallelism,
+        buckets,
+        bucket_apportion: BucketApportion::Size,
+        k_schedule: KSchedule::Const(None),
+        steps_per_epoch: 5,
+        exchange: Exchange::DenseRing,
+        select: sparkv::config::Select::Exact,
+        wire: sparkv::tensor::wire::WireCodec::Raw,
+        trace,
+    }
+}
+
+fn setup() -> (GaussianMixture, NativeMlp) {
+    (
+        GaussianMixture::new(16, 4, 2.5, 1.0, 11),
+        NativeMlp::new(&[16, 32, 4]),
+    )
+}
+
+/// In-memory span recording: `spans` with an empty path records the
+/// trace without writing a file.
+fn traced(buckets: Buckets, parallelism: Parallelism) -> TrainOutput {
+    let (data, mut model) = setup();
+    train(cfg(buckets, parallelism, Trace::Spans(String::new())), &mut model, &data).unwrap()
+}
+
+const RUNTIMES: [Parallelism; 3] =
+    [Parallelism::Serial, Parallelism::Threads(4), Parallelism::Pool(4)];
+const PATHS: [Buckets; 2] = [Buckets::None, Buckets::Bytes(1024)];
+
+/// Step umbrellas on the coordinator track, indexed by step.
+fn step_windows(t: &TraceData) -> Vec<(f64, f64)> {
+    let mut umbrellas: Vec<&Span> = t
+        .track(COORDINATOR_TRACK)
+        .filter(|s| s.phase == Phase::Step)
+        .collect();
+    umbrellas.sort_by_key(|s| s.step);
+    assert_eq!(umbrellas.len(), STEPS, "one step umbrella per step");
+    for (i, s) in umbrellas.iter().enumerate() {
+        assert_eq!(s.step as usize, i, "step umbrellas cover 0..steps");
+    }
+    umbrellas.iter().map(|s| (s.t0_us, s.t1_us)).collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. Span integrity.
+// ---------------------------------------------------------------------
+
+#[test]
+fn spans_balanced_non_overlapping_and_nested() {
+    for buckets in PATHS {
+        for parallelism in RUNTIMES {
+            let what = format!("{}/{}", buckets.name(), parallelism.name());
+            let out = traced(buckets, parallelism);
+            let t = out.trace.as_ref().unwrap_or_else(|| panic!("{what}: no trace"));
+            assert_eq!(t.dropped, 0, "{what}: dropped spans");
+            assert!(!t.spans.is_empty(), "{what}: empty trace");
+            for s in &t.spans {
+                assert!(s.dur_us() >= 0.0, "{what}: negative span {s:?}");
+                assert!(
+                    s.t0_us.is_finite() && s.t1_us.is_finite(),
+                    "{what}: non-finite span {s:?}"
+                );
+                if s.phase == Phase::Step {
+                    assert!(s.dur_us() > 0.0, "{what}: zero-width step umbrella {s:?}");
+                }
+            }
+            let windows = step_windows(t);
+
+            for track in t.tracks() {
+                // The step umbrella legitimately contains the other
+                // coordinator spans; everything else on a track is a
+                // sequential actor and must not self-overlap.
+                let mut spans: Vec<&Span> =
+                    t.track(track).filter(|s| s.phase != Phase::Step).collect();
+                spans.sort_by(|a, b| a.t0_us.total_cmp(&b.t0_us));
+                for pair in spans.windows(2) {
+                    assert!(
+                        pair[1].t0_us >= pair[0].t1_us,
+                        "{what}: track {track} overlap: {:?} then {:?}",
+                        pair[0],
+                        pair[1]
+                    );
+                }
+                // Nesting: every span lies inside its step's umbrella.
+                // Ring-seat timestamps are re-based from the pool sink's
+                // epoch, so allow a µs of float slack there.
+                let eps = if track >= RING_TRACK_BASE { 1.0 } else { 0.0 };
+                for s in spans {
+                    let (w0, w1) = windows[s.step as usize];
+                    assert!(
+                        s.t0_us >= w0 - eps && s.t1_us <= w1 + eps,
+                        "{what}: track {track} span escapes its step umbrella \
+                         [{w0}, {w1}]: {s:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Structure invariance across runtimes.
+// ---------------------------------------------------------------------
+
+/// Per-step phase-name multiset on the coordinator and worker tracks
+/// (ring tracks excluded — they are a pool-only artifact).
+fn signature(t: &TraceData) -> Vec<Vec<(u32, Vec<&'static str>)>> {
+    (0..STEPS as u32)
+        .map(|step| {
+            let mut per_track: Vec<(u32, Vec<&'static str>)> = t
+                .tracks()
+                .into_iter()
+                .filter(|&tr| tr < RING_TRACK_BASE)
+                .map(|tr| {
+                    let mut names: Vec<&'static str> = t
+                        .track(tr)
+                        .filter(|s| s.step == step)
+                        .map(|s| s.phase.name())
+                        .collect();
+                    names.sort_unstable();
+                    (tr, names)
+                })
+                .collect();
+            per_track.sort_by_key(|(tr, _)| *tr);
+            per_track
+        })
+        .collect()
+}
+
+#[test]
+fn span_structure_invariant_across_runtimes() {
+    for buckets in PATHS {
+        let serial = traced(buckets, Parallelism::Serial);
+        let threads = traced(buckets, Parallelism::Threads(4));
+        let pool = traced(buckets, Parallelism::Pool(4));
+        let s = serial.trace.as_ref().unwrap();
+        let th = threads.trace.as_ref().unwrap();
+        let p = pool.trace.as_ref().unwrap();
+        let sig = signature(s);
+        assert_eq!(sig, signature(th), "{}: threads ≠ serial structure", buckets.name());
+        assert_eq!(sig, signature(p), "{}: pool ≠ serial structure", buckets.name());
+        // Ring-seat tracks: pool-only.
+        assert!(
+            s.tracks().iter().all(|&t| t < RING_TRACK_BASE),
+            "{}: serial grew ring tracks",
+            buckets.name()
+        );
+        assert!(
+            th.tracks().iter().all(|&t| t < RING_TRACK_BASE),
+            "{}: threads grew ring tracks",
+            buckets.name()
+        );
+        assert!(
+            p.tracks().iter().any(|&t| t >= RING_TRACK_BASE),
+            "{}: pool recorded no ring-seat spans",
+            buckets.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Tracing is behaviorally invisible.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tracing_never_changes_numerics() {
+    let (data, mut model) = setup();
+    for buckets in PATHS {
+        for parallelism in RUNTIMES {
+            let what = format!("{}/{}", buckets.name(), parallelism.name());
+            let off = train(cfg(buckets, parallelism, Trace::Off), &mut model, &data).unwrap();
+            let steps = train(cfg(buckets, parallelism, Trace::Steps), &mut model, &data).unwrap();
+            let spans =
+                train(cfg(buckets, parallelism, Trace::Spans(String::new())), &mut model, &data)
+                    .unwrap();
+            assert!(off.trace.is_none(), "{what}: off-mode run returned a trace");
+            assert!(steps.trace.is_none(), "{what}: steps-mode run returned spans");
+            assert!(spans.trace.is_some(), "{what}: spans-mode run lost its trace");
+            for on in [&steps, &spans] {
+                assert_eq!(off.final_params, on.final_params, "{what}: params diverged");
+                for (a, b) in off.metrics.steps.iter().zip(&on.metrics.steps) {
+                    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{what}: step {}", a.step);
+                    assert_eq!(a.sent_elements, b.sent_elements, "{what}: step {}", a.step);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. wall_s is the step span's own duration.
+// ---------------------------------------------------------------------
+
+#[test]
+fn wall_s_is_step_span_duration() {
+    for buckets in PATHS {
+        for parallelism in RUNTIMES {
+            let what = format!("{}/{}", buckets.name(), parallelism.name());
+            let out = traced(buckets, parallelism);
+            let t = out.trace.as_ref().unwrap();
+            let windows = step_windows(t);
+            assert_eq!(out.metrics.steps.len(), STEPS, "{what}");
+            for (i, s) in out.metrics.steps.iter().enumerate() {
+                let dur_us = windows[i].1 - windows[i].0;
+                let wall_us = s.wall_s * 1e6;
+                assert!(s.wall_s > 0.0, "{what}: step {i} zero wall");
+                // Same two clock reads on both sides; only the
+                // µs↔s unit round-trip separates them.
+                assert!(
+                    (wall_us - dur_us).abs() <= 1e-9 * dur_us.max(1.0),
+                    "{what}: step {i}: wall_s {wall_us} µs vs step span {dur_us} µs"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 5. comm_us accounting.
+// ---------------------------------------------------------------------
+
+#[test]
+fn comm_us_positive_when_traced_zero_when_off() {
+    let (data, mut model) = setup();
+    for buckets in PATHS {
+        for parallelism in RUNTIMES {
+            let exchanges = [(Exchange::DenseRing, false), (Exchange::TreeSparse, true)];
+            for (exchange, global_topk) in exchanges {
+                let what = format!(
+                    "{}/{}/{}",
+                    buckets.name(),
+                    parallelism.name(),
+                    exchange.name()
+                );
+                let mut c = cfg(buckets, parallelism, Trace::Steps);
+                c.exchange = exchange;
+                c.global_topk = global_topk;
+                let on = train(c.clone(), &mut model, &data).unwrap();
+                assert!(
+                    on.metrics
+                        .steps
+                        .iter()
+                        .all(|s| s.comm_us > 0.0 && s.comm_us.is_finite()),
+                    "{what}: traced comm_us not positive/finite"
+                );
+                assert!(on.metrics.mean_comm_us() > 0.0, "{what}: zero mean_comm_us");
+                c.trace = Trace::Off;
+                let off = train(c, &mut model, &data).unwrap();
+                assert!(
+                    off.metrics.steps.iter().all(|s| s.comm_us == 0.0),
+                    "{what}: comm_us leaked a clock read with tracing off"
+                );
+                assert_eq!(off.metrics.mean_comm_us(), 0.0, "{what}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 6. Perfetto round-trip + drift report.
+// ---------------------------------------------------------------------
+
+#[test]
+fn perfetto_file_round_trips_and_folds_into_report() {
+    let path = std::env::temp_dir().join(format!("sparkv_trace_rt_{}.json", std::process::id()));
+    let path_str = path.to_str().unwrap().to_string();
+    let (data, mut model) = setup();
+    let out = train(
+        cfg(Buckets::Bytes(1024), Parallelism::Pool(4), Trace::Spans(path_str.clone())),
+        &mut model,
+        &data,
+    )
+    .unwrap();
+    let recorded = out.trace.as_ref().unwrap();
+    let loaded = trace::load(&path_str).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.meta, recorded.meta, "metadata round-trip");
+    assert_eq!(loaded.spans.len(), recorded.spans.len(), "span-count round-trip");
+    assert_eq!(loaded.tracks(), recorded.tracks(), "track-set round-trip");
+    assert_eq!(loaded.dropped, 0);
+    let report = trace::report::drift_report(&loaded).unwrap();
+    assert!(!report.rows.is_empty(), "drift report has no rows");
+    assert!(report.eval_steps == STEPS, "report folded {} steps", report.eval_steps);
+    let rendered = report.render();
+    assert!(rendered.contains("compute"), "render misses the compute row:\n{rendered}");
+    // A structurally broken trace must be a hard error, not a report.
+    let broken = TraceData {
+        meta: loaded.meta.clone(),
+        spans: Vec::new(),
+        dropped: 0,
+    };
+    assert!(trace::report::drift_report(&broken).is_err());
+}

@@ -50,6 +50,7 @@ fn cfg(buckets: Buckets, exchange: Exchange, wire: WireCodec) -> TrainConfig {
         exchange,
         select: Select::Exact,
         wire,
+        trace: sparkv::config::Trace::Off,
     }
 }
 
